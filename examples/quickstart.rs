@@ -1,0 +1,64 @@
+//! Quickstart: compress a synthetic cosmology-like field with a base
+//! compressor + FFCz dual-domain correction, then verify both bounds.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ffcz::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small Nyx-like baryon density field (log-normal GRF with a
+    //    power-law spectrum). Real data would arrive via ffcz::data::io.
+    let field = ffcz::data::synth::grf::GrfBuilder::new(&[32, 32, 32])
+        .spectral_index(1.8)
+        .lognormal(2.4)
+        .seed(42)
+        .build();
+    println!(
+        "field: shape {:?}, {} ({} precision)",
+        field.shape(),
+        ffcz::util::human_bytes(field.original_bytes()),
+        field.precision().name(),
+    );
+
+    // 2. Dual-domain bounds: 0.1% spatial (relative to the value span) and
+    //    0.5% frequency (relative to the largest Fourier magnitude) — a
+    //    tail-clipping operating point where edits stay sparse (paper
+    //    Fig. 5); tighter Δ trades edit storage for spectral accuracy.
+    let cfg = FfczConfig::relative(1e-3, 5e-3);
+
+    // 3. Compress with the SZ3-style base compressor + FFCz edits.
+    let base = SzLike::default();
+    let archive = ffcz::correction::compress(&field, &base, &cfg)?;
+    println!(
+        "archive: {} total ({} base + {} edits), ratio {:.1}",
+        ffcz::util::human_bytes(archive.total_bytes()),
+        ffcz::util::human_bytes(archive.base_bytes()),
+        ffcz::util::human_bytes(archive.edit_bytes()),
+        field.original_bytes() as f64 / archive.total_bytes() as f64,
+    );
+    println!(
+        "POCS: {} iterations, {} spatial + {} frequency active edits",
+        archive.stats.iterations, archive.stats.active_spat, archive.stats.active_freq,
+    );
+
+    // 4. Decompress and verify: both domains are now bounded.
+    let recon = ffcz::correction::decompress(&archive)?;
+    let report = ffcz::correction::verify(&field, &recon, &cfg);
+    let quality = QualityReport::compute(&field, &recon);
+    println!(
+        "verify: spatial {} (ratio {:.3}), frequency {} (ratio {:.3})",
+        if report.spatial_ok { "OK" } else { "FAIL" },
+        report.max_spatial_ratio,
+        if report.frequency_ok { "OK" } else { "FAIL" },
+        report.max_frequency_ratio,
+    );
+    println!(
+        "quality: PSNR {:.1} dB, SSNR {:.1} dB, max RFE {:.2e}",
+        quality.psnr_db, quality.ssnr_db, quality.max_rfe
+    );
+    assert!(report.spatial_ok && report.frequency_ok);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Emits one HLO-text module per (shape, max_iters) variant of the FFCz
+correction loop, plus a manifest that the Rust artifact registry reads.
+
+HLO *text* (not ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+``make artifacts``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ffcz_correct
+
+# (name, shape, max_iters): the variants the coordinator loads. Shapes are
+# chosen to cover 1D/2D/3D; the Rust side pads instances to the nearest
+# variant or falls back to the native engine for odd shapes.
+VARIANTS = [
+    ("ffcz_correct_1d_4096", (4096,), 64),
+    ("ffcz_correct_1d_16384", (16384,), 64),
+    ("ffcz_correct_2d_64x64", (64, 64), 64),
+    ("ffcz_correct_2d_128x128", (128, 128), 64),
+    ("ffcz_correct_3d_16", (16, 16, 16), 64),
+    ("ffcz_correct_3d_32", (32, 32, 32), 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(shape, max_iters):
+    """Lower one ffcz_correct variant to HLO text.
+
+    Signature: (eps f32[shape], e_bound f32[], d_bound f32[]) →
+    (corrected, spat_edits, freq_re, freq_im, iterations, converged).
+
+    The AOT path uses the pure-jnp projections (`use_pallas=False`): the
+    interpret-mode Pallas wrappers lower through `jax.experimental.callback`
+    machinery that cannot be serialized into a standalone HLO module. The
+    Pallas kernels are exercised and validated by pytest (L1 correctness);
+    the lowered loop is numerically identical (see test_model.py which
+    asserts pallas == jnp paths).
+    """
+    eps = jax.ShapeDtypeStruct(shape, jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(e, eb, db):
+        return ffcz_correct(e, eb, db, max_iters=max_iters, use_pallas=False)
+
+    return jax.jit(fn).lower(eps, scalar, scalar)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated variant names to build"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text", "variants": []}
+    for name, shape, max_iters in VARIANTS:
+        if only and name not in only:
+            continue
+        lowered = lower_variant(shape, max_iters)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append(
+            {
+                "name": name,
+                "shape": list(shape),
+                "max_iters": max_iters,
+                "file": f"{name}.hlo.txt",
+                "inputs": ["eps f32[shape]", "e_bound f32[]", "d_bound f32[]"],
+                "outputs": [
+                    "corrected f32[shape]",
+                    "spat_edits f32[shape]",
+                    "freq_re f32[shape]",
+                    "freq_im f32[shape]",
+                    "iterations i32[]",
+                    "converged pred[]",
+                ],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Line-based twin of the JSON manifest for the Rust artifact registry
+    # (no JSON parser in the offline crate set):
+    #   name|dim0,dim1,…|max_iters|file
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        for v in manifest["variants"]:
+            shape_s = ",".join(str(d) for d in v["shape"])
+            f.write(f"{v['name']}|{shape_s}|{v['max_iters']}|{v['file']}\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} (+.txt)")
+
+
+if __name__ == "__main__":
+    main()

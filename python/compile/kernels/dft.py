@@ -1,0 +1,140 @@
+"""Four-step matmul DFT — the TPU adaptation of cuFFT (DESIGN.md
+§Hardware-Adaptation).
+
+The paper's dominant GPU kernel is the cuFFT batched C2C transform. On a
+TPU the efficient formulation of a Fourier transform is *matrix form* on
+the MXU systolic array: factor N = N1·N2 and compute
+
+    A[k1, n2] = Σ_{n1} x[n1, n2] · ω_{N1}^{n1·k1}        (MXU matmul)
+    B[k1, n2] = A[k1, n2] · ω_N^{n2·k1}                  (VPU twiddle)
+    C[k1, k2] = Σ_{n2} B[k1, n2] · ω_{N2}^{n2·k2}        (MXU matmul)
+    X[N1·k2 + k1] = C[k1, k2]
+
+Complex arithmetic is carried as separate Re/Im planes (4 real matmuls per
+complex matmul), implemented as a Pallas kernel tiled for VMEM. The DFT
+matrices are O(N1²)+O(N2²) and live comfortably in VMEM for N1,N2 ≤ 256,
+the regime used by the AOT artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import numpy as np
+
+# MXU-shaped tile. 128 matches the systolic array edge.
+TM = 128
+
+
+def _cmatmul_kernel(ar_ref, ai_ref, br_ref, bi_ref, or_ref, oi_ref):
+    ar, ai = ar_ref[...], ai_ref[...]
+    br, bi = br_ref[...], bi_ref[...]
+    # Four real matmuls; on TPU these hit the MXU, f32 accumulation.
+    or_ref[...] = ar @ br - ai @ bi
+    oi_ref[...] = ar @ bi + ai @ br
+
+
+def _pad2(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@jax.jit
+def complex_matmul(ar, ai, br, bi):
+    """(ar + i·ai) @ (br + i·bi) via a VMEM-tiled Pallas kernel.
+
+    Tiles: output (TM, TM) blocks; the full K dimension is streamed per
+    block (K ≤ 256 in the DFT use case, so one (TM, K) + (K, TM) pair of
+    operands per plane fits VMEM with room to spare).
+    """
+    m, k = ar.shape
+    k2, n = br.shape
+    assert k == k2, "inner dims must agree"
+    a_r, a_i = _pad2(ar, TM, 1), _pad2(ai, TM, 1)
+    b_r, b_i = _pad2(br, 1, TM), _pad2(bi, 1, TM)
+    gm = a_r.shape[0] // TM
+    gn = b_r.shape[1] // TM
+    out_r, out_i = pl.pallas_call(
+        _cmatmul_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((TM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((TM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TM), lambda i, j: (0, j)),
+            pl.BlockSpec((k, TM), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TM, TM), lambda i, j: (i, j)),
+            pl.BlockSpec((TM, TM), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((a_r.shape[0], b_r.shape[1]), ar.dtype),
+            jax.ShapeDtypeStruct((a_r.shape[0], b_r.shape[1]), ar.dtype),
+        ],
+        interpret=True,
+    )(a_r, a_i, b_r, b_i)
+    return out_r[:m, :n], out_i[:m, :n]
+
+
+def _dft_matrix(n, sign):
+    """Dense n×n DFT matrix as (re, im) numpy planes (built at trace time)."""
+    idx = np.arange(n)
+    ang = sign * 2.0 * np.pi * np.outer(idx, idx) / n
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def factor_n(n):
+    """Pick N1·N2 = n with N1, N2 as square as possible."""
+    best = (1, n)
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            best = (d, n // d)
+        d += 1
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("inverse",))
+def _four_step(xr, xi, w1r, w1i, twr, twi, w2r, w2i, inverse):
+    n1 = w1r.shape[0]
+    n2 = w2r.shape[0]
+    # Step 1: column DFT — W1[k1, n1] @ X[n1, n2].
+    x_r = xr.reshape(n1, n2)
+    x_i = xi.reshape(n1, n2)
+    a_r, a_i = complex_matmul(w1r, w1i, x_r, x_i)
+    # Step 2: twiddle (elementwise complex multiply).
+    b_r = a_r * twr - a_i * twi
+    b_i = a_r * twi + a_i * twr
+    # Step 3: row DFT — B[k1, n2] @ W2[n2, k2].
+    c_r, c_i = complex_matmul(b_r, b_i, w2r, w2i)
+    # Step 4: transpose-gather to the flat output layout X[n1·k2 + k1].
+    out_r = c_r.T.reshape(-1)
+    out_i = c_i.T.reshape(-1)
+    if inverse:
+        scale = 1.0 / (n1 * n2)
+        out_r = out_r * scale
+        out_i = out_i * scale
+    return out_r, out_i
+
+
+def dft_four_step(xr, xi, inverse=False):
+    """Forward/inverse DFT of a flat complex vector held as (re, im) planes.
+
+    Matrices and twiddles are built at trace time (they are compile-time
+    constants of the AOT artifact, the analogue of cuFFT's plan).
+    """
+    n = xr.shape[0]
+    n1, n2 = factor_n(n)
+    sign = 1.0 if inverse else -1.0
+    w1r, w1i = _dft_matrix(n1, sign)
+    w2r, w2i = _dft_matrix(n2, sign)
+    k1 = np.arange(n1)
+    nn2 = np.arange(n2)
+    ang = sign * 2.0 * np.pi * np.outer(k1, nn2) / n
+    twr = np.cos(ang).astype(np.float32)
+    twi = np.sin(ang).astype(np.float32)
+    return _four_step(xr, xi, w1r, w1i, twr, twi, w2r, w2i, inverse)

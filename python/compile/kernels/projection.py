@@ -1,0 +1,182 @@
+"""Layer-1 Pallas kernels for the FFCz projection loop.
+
+These are the paper's CUDA kernels (ProjectOntoFCube, ProjectOntoSCube,
+CheckConvergence, QuantizeEdits) rethought for the TPU programming model:
+
+* elementwise clips stream HBM→VMEM tiles through the VPU — the BlockSpec
+  plays the role the CUDA threadblock decomposition plays on the GPU;
+* the convergence check is a two-level reduction: a Pallas kernel produces
+  per-tile partial maxima, a tiny jnp reduction finishes;
+* all kernels run with ``interpret=True`` so they lower to plain HLO that
+  the CPU PJRT client can execute (real-TPU lowering would emit a Mosaic
+  custom-call; see DESIGN.md §Hardware-Adaptation).
+
+All kernels treat inputs as flat vectors padded to a multiple of the tile;
+wrappers handle padding/unpadding so callers see exact shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size: 8·128 f32 lanes = one (8, 128) VPU tile worth of work per
+# program instance. Flat vectors are processed in (TILE,) blocks.
+TILE = 1024
+
+
+def _pad_to_tile(x):
+    n = x.shape[0]
+    pad = (-n) % TILE
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x, n
+
+
+# ---------------------------------------------------------------- s-cube
+
+
+def _scube_kernel(eps_ref, bound_ref, out_ref):
+    b = bound_ref[...]
+    out_ref[...] = jnp.clip(eps_ref[...], -b, b)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def project_onto_scube(eps, bound):
+    """Clip ``eps`` (any shape, f32) to ±bound. ``bound`` scalar or
+    broadcastable array (pointwise E_n)."""
+    shape = eps.shape
+    flat = eps.reshape(-1)
+    b_arr = jnp.asarray(bound, flat.dtype)
+    b_arr = b_arr.reshape(-1) if b_arr.ndim > 0 else b_arr
+    bounds = jnp.broadcast_to(b_arr, flat.shape)
+    x, n = _pad_to_tile(flat)
+    # Pad bounds with 1s so padded lanes stay zero after the clip of zeros.
+    b, _ = _pad_to_tile(bounds)
+    b = jnp.where(jnp.arange(x.shape[0]) < n, b, 1.0)
+    grid = x.shape[0] // TILE
+    out = pl.pallas_call(
+        _scube_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, b)
+    return out[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------- f-cube
+
+
+def _fcube_kernel(re_ref, im_ref, bound_ref, out_re_ref, out_im_ref):
+    b = bound_ref[...]
+    out_re_ref[...] = jnp.clip(re_ref[...], -b, b)
+    out_im_ref[...] = jnp.clip(im_ref[...], -b, b)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def project_onto_fcube(re, im, bound):
+    """Clip Re/Im planes of a frequency error vector to the f-cube."""
+    shape = re.shape
+    fre, fim = re.reshape(-1), im.reshape(-1)
+    b_arr = jnp.asarray(bound, fre.dtype)
+    b_arr = b_arr.reshape(-1) if b_arr.ndim > 0 else b_arr
+    bounds = jnp.broadcast_to(b_arr, fre.shape)
+    xr, n = _pad_to_tile(fre)
+    xi, _ = _pad_to_tile(fim)
+    b, _ = _pad_to_tile(bounds)
+    b = jnp.where(jnp.arange(xr.shape[0]) < n, b, 1.0)
+    grid = xr.shape[0] // TILE
+    out_re, out_im = pl.pallas_call(
+        _fcube_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+            jax.ShapeDtypeStruct(xi.shape, xi.dtype),
+        ],
+        interpret=True,
+    )(xr, xi, b)
+    return out_re[:n].reshape(shape), out_im[:n].reshape(shape)
+
+
+# ------------------------------------------------------ convergence check
+
+
+def _conv_kernel(re_ref, im_ref, bound_ref, out_ref):
+    linf = jnp.maximum(jnp.abs(re_ref[...]), jnp.abs(im_ref[...]))
+    out_ref[0] = jnp.max(linf / bound_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def check_convergence(re, im, bound):
+    """Max violation ratio max_k(‖δ_k‖∞ / Δ_k) — ≤ 1 means inside f-cube.
+
+    Two-level reduction: per-tile maxima in the Pallas kernel, final max in
+    jnp (mirrors the paper's blockwise CUDA reduction).
+    """
+    fre, fim = re.reshape(-1), im.reshape(-1)
+    b_arr = jnp.asarray(bound, fre.dtype)
+    b_arr = b_arr.reshape(-1) if b_arr.ndim > 0 else b_arr
+    bounds = jnp.broadcast_to(b_arr, fre.shape)
+    xr, n = _pad_to_tile(fre)
+    xi, _ = _pad_to_tile(fim)
+    b, _ = _pad_to_tile(bounds)
+    # Padded lanes: value 0, bound 1 ⇒ ratio 0, never the max.
+    b = jnp.where(jnp.arange(xr.shape[0]) < n, b, 1.0)
+    grid = xr.shape[0] // TILE
+    partial = pl.pallas_call(
+        _conv_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), xr.dtype),
+        interpret=True,
+    )(xr, xi, b)
+    return jnp.max(partial)
+
+
+# ------------------------------------------------------------- quantize
+
+
+def _quant_kernel(edits_ref, step_ref, out_ref):
+    q = jnp.round(edits_ref[...] / step_ref[0])
+    out_ref[...] = jnp.clip(q, -32767.0, 32767.0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantize_edits(edits, step):
+    """Uniform quantization of an edit vector to 16-bit grid indices."""
+    flat = edits.reshape(-1)
+    x, n = _pad_to_tile(flat)
+    grid = x.shape[0] // TILE
+    step_arr = jnp.full((grid,), step, x.dtype)
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=True,
+    )(x, step_arr)
+    return out[:n].reshape(edits.shape)

@@ -1,0 +1,50 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here; pytest sweeps shapes,
+dtypes, and bounds (via hypothesis) asserting allclose between the Pallas
+interpret-mode kernel and these references. This is the core correctness
+signal for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def project_onto_scube_ref(eps, bound):
+    """Clip a real vector to the s-cube [-bound, bound] (paper Eq. 4c)."""
+    return jnp.clip(eps, -bound, bound)
+
+
+def project_onto_fcube_ref(re, im, bound):
+    """Clip Re/Im of a frequency error vector to the f-cube (Eq. 4a/4b).
+
+    ``bound`` may be a scalar or an array broadcastable to ``re``/``im``
+    (pointwise Δ_k, used in power-spectrum mode).
+    """
+    return jnp.clip(re, -bound, bound), jnp.clip(im, -bound, bound)
+
+
+def check_convergence_ref(re, im, bound):
+    """Max violation ratio max_k(‖δ_k‖∞ / Δ_k); ≤ 1 means converged."""
+    linf = jnp.maximum(jnp.abs(re), jnp.abs(im))
+    return jnp.max(linf / bound)
+
+
+def quantize_edits_ref(edits, step):
+    """Uniform quantization to signed grid indices (paper §IV-B, m=16)."""
+    q = jnp.round(edits / step)
+    return jnp.clip(q, -32767, 32767).astype(jnp.int32)
+
+
+def dequantize_edits_ref(q, step):
+    """Inverse of :func:`quantize_edits_ref`."""
+    return q.astype(jnp.float32) * step
+
+
+def complex_matmul_ref(ar, ai, br, bi):
+    """(ar + i·ai) @ (br + i·bi) as two real planes."""
+    return ar @ br - ai @ bi, ar @ bi + ai @ br
+
+
+def dft_ref(x):
+    """Forward unnormalized DFT of a real or complex 1-D signal."""
+    return jnp.fft.fft(x)

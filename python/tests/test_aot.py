@@ -1,0 +1,71 @@
+"""AOT contract tests: variants lower to HLO text that contains the pieces
+the Rust runtime depends on, and the manifests agree with each other."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestLowering:
+    def test_variant_lowers_to_hlo_text(self):
+        lowered = aot.lower_variant((256,), 8)
+        text = aot.to_hlo_text(lowered)
+        # HLO text essentials the Rust loader parses.
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # The loop and the transforms must be present.
+        assert "while" in text
+        assert "fft" in text.lower()
+
+    def test_variant_signature_shapes(self):
+        lowered = aot.lower_variant((64,), 4)
+        text = aot.to_hlo_text(lowered)
+        # 3 parameters: eps f32[64], two f32[] scalars.
+        assert "f32[64]" in text
+        assert text.count("parameter(") >= 3
+
+    def test_2d_variant(self):
+        lowered = aot.lower_variant((16, 16), 4)
+        text = aot.to_hlo_text(lowered)
+        assert "f32[16,16]" in text
+
+
+class TestManifest:
+    @pytest.fixture()
+    def built(self, tmp_path):
+        import sys
+
+        argv = sys.argv
+        sys.argv = [
+            "aot",
+            "--out-dir",
+            str(tmp_path),
+            "--only",
+            "ffcz_correct_1d_4096",
+        ]
+        try:
+            aot.main()
+        finally:
+            sys.argv = argv
+        return tmp_path
+
+    def test_manifests_agree(self, built):
+        with open(built / "manifest.json") as f:
+            j = json.load(f)
+        txt = (built / "manifest.txt").read_text().strip().splitlines()
+        assert len(j["variants"]) == len(txt) == 1
+        v = j["variants"][0]
+        name, shape_s, iters, fname = txt[0].split("|")
+        assert name == v["name"]
+        assert [int(x) for x in shape_s.split(",")] == v["shape"]
+        assert int(iters) == v["max_iters"]
+        assert fname == v["file"]
+        assert os.path.exists(built / fname)
+
+    def test_hlo_file_nonempty(self, built):
+        p = built / "ffcz_correct_1d_4096.hlo.txt"
+        assert p.stat().st_size > 1000
+        assert p.read_text().startswith("HloModule")

@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, bounds, and value scales; every kernel must match
+its ref.py oracle to float32 tolerance. This is the CORE correctness signal
+for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import projection, ref
+from compile.kernels import dft as dftk
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+shapes = st.sampled_from([(16,), (100,), (1024,), (1025,), (4096,), (32, 32), (7, 13), (8, 8, 8)])
+
+
+class TestProjectOntoSCube:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shapes, bound=st.floats(1e-4, 10.0), seed=st.integers(0, 2**16))
+    def test_matches_ref_scalar_bound(self, shape, bound, seed):
+        eps = rand(shape, seed)
+        got = projection.project_onto_scube(eps, bound)
+        want = ref.project_onto_scube_ref(eps, bound)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_pointwise_bounds(self):
+        eps = rand((512,), 1, scale=2.0)
+        bounds = jnp.abs(rand((512,), 2)) + 0.01
+        got = projection.project_onto_scube(eps, bounds)
+        want = ref.project_onto_scube_ref(eps, bounds)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_idempotent(self):
+        eps = rand((256,), 3)
+        once = projection.project_onto_scube(eps, 0.5)
+        twice = projection.project_onto_scube(once, 0.5)
+        np.testing.assert_array_equal(once, twice)
+
+    def test_result_within_bound(self):
+        eps = rand((333,), 4, scale=5.0)
+        out = projection.project_onto_scube(eps, 0.25)
+        assert float(jnp.max(jnp.abs(out))) <= 0.25 + 1e-7
+
+
+class TestProjectOntoFCube:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shapes, bound=st.floats(1e-4, 10.0), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, bound, seed):
+        re = rand(shape, seed)
+        im = rand(shape, seed + 1)
+        got_re, got_im = projection.project_onto_fcube(re, im, bound)
+        want_re, want_im = ref.project_onto_fcube_ref(re, im, bound)
+        np.testing.assert_allclose(got_re, want_re, rtol=1e-6)
+        np.testing.assert_allclose(got_im, want_im, rtol=1e-6)
+
+    def test_planes_clipped_independently(self):
+        re = jnp.asarray([2.0, 0.1], jnp.float32)
+        im = jnp.asarray([0.1, -2.0], jnp.float32)
+        got_re, got_im = projection.project_onto_fcube(re, im, 1.0)
+        np.testing.assert_allclose(got_re, [1.0, 0.1], rtol=1e-6)
+        np.testing.assert_allclose(got_im, [0.1, -1.0], rtol=1e-6)
+
+
+class TestCheckConvergence:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shapes, bound=st.floats(1e-3, 10.0), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, bound, seed):
+        re = rand(shape, seed)
+        im = rand(shape, seed + 7)
+        got = projection.check_convergence(re, im, bound)
+        want = ref.check_convergence_ref(re, im, bound)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_inside_cube_is_below_one(self):
+        re = jnp.full((2048,), 0.4, jnp.float32)
+        im = jnp.full((2048,), -0.4, jnp.float32)
+        assert float(projection.check_convergence(re, im, 0.5)) <= 1.0
+
+    def test_single_violation_detected(self):
+        re = jnp.zeros((4096,), jnp.float32).at[1234].set(3.0)
+        im = jnp.zeros((4096,), jnp.float32)
+        assert float(projection.check_convergence(re, im, 1.0)) == pytest.approx(3.0)
+
+
+class TestQuantizeEdits:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        shape=shapes,
+        step=st.floats(1e-6, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, shape, step, seed):
+        edits = rand(shape, seed, scale=0.1)
+        got = projection.quantize_edits(edits, step)
+        want = ref.quantize_edits_ref(edits, step)
+        np.testing.assert_array_equal(got, want)
+
+    def test_roundtrip_error_below_half_step(self):
+        edits = rand((1024,), 9, scale=0.01)
+        step = 1e-3
+        q = projection.quantize_edits(edits, step)
+        back = ref.dequantize_edits_ref(q, step)
+        assert float(jnp.max(jnp.abs(back - edits))) <= step / 2 + 1e-7
+
+
+class TestMatmulDft:
+    @pytest.mark.parametrize("n", [16, 64, 100, 256, 1024])
+    def test_forward_matches_fft(self, n):
+        x = rand((n,), n)
+        xr, xi = dftk.dft_four_step(x, jnp.zeros_like(x))
+        want = jnp.fft.fft(x)
+        np.testing.assert_allclose(xr, jnp.real(want), rtol=1e-3, atol=1e-3 * n**0.5)
+        np.testing.assert_allclose(xi, jnp.imag(want), rtol=1e-3, atol=1e-3 * n**0.5)
+
+    @pytest.mark.parametrize("n", [64, 256])
+    def test_roundtrip(self, n):
+        x = rand((n,), n + 1)
+        fr, fi = dftk.dft_four_step(x, jnp.zeros_like(x))
+        br, bi = dftk.dft_four_step(fr, fi, inverse=True)
+        np.testing.assert_allclose(br, x, atol=1e-4)
+        np.testing.assert_allclose(bi, jnp.zeros_like(x), atol=1e-4)
+
+    def test_complex_matmul_matches_ref(self):
+        a_r, a_i = rand((96, 64), 1), rand((96, 64), 2)
+        b_r, b_i = rand((64, 80), 3), rand((64, 80), 4)
+        got_r, got_i = dftk.complex_matmul(a_r, a_i, b_r, b_i)
+        want_r, want_i = ref.complex_matmul_ref(a_r, a_i, b_r, b_i)
+        np.testing.assert_allclose(got_r, want_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_i, want_i, rtol=1e-4, atol=1e-4)
+
+    def test_factorization_is_balanced(self):
+        assert dftk.factor_n(4096) == (64, 64)
+        assert dftk.factor_n(100) == (10, 10)
+        n1, n2 = dftk.factor_n(24)
+        assert n1 * n2 == 24 and n1 <= n2

@@ -1,0 +1,103 @@
+"""L2 correctness: the jitted FFCz loop vs the eager reference, dual-bound
+properties, and pallas/jnp path equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ffcz_correct, ffcz_correct_reference
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_eps(shape, e, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-e, e, size=shape), jnp.float32)
+
+
+def dual_bound_violation(eps, e_bound, d_bound):
+    """Return (spatial ratio, frequency ratio); ≤1 means in-bound."""
+    s = float(jnp.max(jnp.abs(eps))) / e_bound
+    delta = jnp.fft.fftn(eps)
+    f = float(jnp.max(jnp.maximum(jnp.abs(delta.real), jnp.abs(delta.imag)))) / d_bound
+    return s, f
+
+
+class TestFfczCorrect:
+    @pytest.mark.parametrize("shape", [(256,), (1024,), (32, 32), (8, 8, 8)])
+    def test_dual_bounds_hold(self, shape):
+        e, d = 0.05, 0.3
+        eps0 = rand_eps(shape, e, 1)
+        eps, _spat, _fr, _fi, iters, done = ffcz_correct(eps0, e, d, max_iters=400)
+        assert bool(done), f"not converged in {int(iters)} iterations"
+        s, f = dual_bound_violation(eps, e, d)
+        # f32 FFT roundoff tolerance.
+        assert s <= 1.0 + 3e-4 and f <= 1.0 + 3e-4, (s, f)
+
+    def test_feasible_input_is_untouched(self):
+        eps0 = rand_eps((512,), 0.01, 2)
+        eps, spat, fr, fi, iters, done = ffcz_correct(eps0, 0.01, 1e6)
+        assert bool(done) and int(iters) == 1
+        np.testing.assert_array_equal(eps, eps0)
+        assert float(jnp.sum(jnp.abs(spat))) == 0.0
+        assert float(jnp.sum(jnp.abs(fr))) + float(jnp.sum(jnp.abs(fi))) == 0.0
+
+    def test_matches_eager_reference(self):
+        e, d = 0.05, 0.25
+        eps0 = rand_eps((256,), e, 3)
+        eps_j, spat_j, fr_j, fi_j, it_j, done_j = ffcz_correct(
+            eps0, e, d, max_iters=300
+        )
+        eps_r, spat_r, fr_r, fi_r, it_r, done_r = ffcz_correct_reference(
+            np.asarray(eps0), e, d, max_iters=300
+        )
+        assert bool(done_j) == bool(done_r)
+        # f32 vs f64 drift across tens of FFT iterations: modest tolerance.
+        np.testing.assert_allclose(eps_j, eps_r, atol=2e-4)
+        np.testing.assert_allclose(spat_j, spat_r, atol=2e-4)
+        np.testing.assert_allclose(fr_j, fr_r, atol=2e-3)
+        np.testing.assert_allclose(fi_j, fi_r, atol=2e-3)
+
+    def test_pallas_and_jnp_paths_agree(self):
+        e, d = 0.05, 0.3
+        eps0 = rand_eps((1024,), e, 4)
+        out_p = ffcz_correct(eps0, e, d, max_iters=200, use_pallas=True)
+        out_j = ffcz_correct(eps0, e, d, max_iters=200, use_pallas=False)
+        for a, b in zip(out_p[:4], out_j[:4]):
+            np.testing.assert_allclose(a, b, atol=1e-5)
+        assert int(out_p[4]) == int(out_j[4])
+
+    def test_edits_reconstruct_correction(self):
+        e, d = 0.05, 0.2
+        eps0 = rand_eps((512,), e, 5)
+        eps, spat, fr, fi, _it, done = ffcz_correct(eps0, e, d, max_iters=400)
+        assert bool(done)
+        freq_part = jnp.real(jnp.fft.ifftn(fr + 1j * fi))
+        rebuilt = eps0 + spat + freq_part
+        np.testing.assert_allclose(rebuilt, eps, atol=1e-5)
+
+    def test_tiny_delta_regime(self):
+        # Paper Table III: tiny Δ ⇒ one pass of pure frequency clipping.
+        eps0 = rand_eps((2048,), 0.1, 6)
+        eps, spat, fr, fi, iters, done = ffcz_correct(
+            eps0, 0.1, 1e-6, max_iters=50
+        )
+        assert bool(done)
+        assert int(iters) <= 3
+        assert float(jnp.sum(jnp.abs(spat))) < 1e-3
+        active_freq = int(jnp.sum((jnp.abs(fr) > 0) | (jnp.abs(fi) > 0)))
+        assert active_freq > 1024
+
+    def test_pointwise_bounds(self):
+        shape = (256,)
+        e_b = jnp.full(shape, 0.05, jnp.float32)
+        d_b = jnp.asarray(
+            np.where(np.arange(256) % 2 == 0, 0.5, 0.1), jnp.float32
+        )
+        eps0 = rand_eps(shape, 0.05, 7)
+        eps, *_rest, done = ffcz_correct(eps0, e_b, d_b, max_iters=500)
+        assert bool(done)
+        delta = jnp.fft.fftn(eps)
+        linf = jnp.maximum(jnp.abs(delta.real), jnp.abs(delta.imag))
+        assert float(jnp.max(linf / d_b)) <= 1.0 + 3e-4

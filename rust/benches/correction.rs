@@ -1,0 +1,151 @@
+//! End-to-end FFCz correction benchmarks (Table III / Fig. 9 analogue):
+//! the full alternating-projection + edit-coding path across Δ regimes and
+//! field sizes, native engine vs PJRT artifact when available.
+//!
+//! `cargo bench --bench correction`
+
+use ffcz::compressors::{szlike::SzLike, Compressor, ErrorBound};
+use ffcz::correction::{alternating_projection, Bounds, PocsParams};
+use ffcz::data::synth;
+use ffcz::fourier::Complex;
+use ffcz::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("== correction benchmarks ==");
+    for &scale in &[16usize, 32] {
+        bench_scale(scale);
+    }
+    bench_pjrt();
+    bench_predictor_ablation();
+}
+
+fn bench_scale(scale: usize) {
+    let field = synth::grf::GrfBuilder::new(&[scale, scale, scale])
+        .spectral_index(1.8)
+        .lognormal(2.4)
+        .seed(101)
+        .build();
+    let base = SzLike::default();
+    let payload = base.compress(&field, ErrorBound::Relative(1e-3)).unwrap();
+    let recon = base.decompress(&payload).unwrap();
+    let eps0: Vec<f64> = recon
+        .data()
+        .iter()
+        .zip(field.data())
+        .map(|(r, x)| r - x)
+        .collect();
+    let e_abs = ErrorBound::Relative(1e-3).absolute_for(&field);
+    let spec_max = {
+        let buf: Vec<Complex> = field
+            .data()
+            .iter()
+            .map(|&v| Complex::new(v, 0.0))
+            .collect();
+        ffcz::fourier::fftn(&buf, field.shape())
+            .iter()
+            .map(|c| c.abs())
+            .fold(0.0f64, f64::max)
+    };
+    let n = field.len();
+    // Δ regimes from Table III: mild tail-clipping to everything-clipped.
+    for (regime, frac) in [("mild", 0.3), ("mid", 0.03), ("tiny", 1e-6)] {
+        let eps_bench = eps0.clone();
+        let (_, rfe) = ffcz::metrics::spectral_metrics(&field, &recon);
+        let d_abs = frac * rfe * spec_max;
+        let params = PocsParams {
+            spatial: Bounds::Global(e_abs),
+            frequency: Bounds::Global(d_abs),
+            max_iters: 500,
+        };
+        let shape = field.shape().to_vec();
+        let r = Bench::new(format!("pocs_{scale}cubed_{regime}"))
+            .bytes(n * 8)
+            .samples(5)
+            .run(|| black_box(alternating_projection(&eps_bench, &shape, &params)));
+        let result = alternating_projection(&eps0, &shape, &params);
+        println!(
+            "{}   [{} iters, {}+{} active edits]",
+            r.report(),
+            result.iterations,
+            result.active_spat,
+            result.active_freq
+        );
+    }
+    // Full compress (base + correction + coding) for context.
+    let cfg = ffcz::correction::FfczConfig::relative(1e-3, 1e-4);
+    let r = Bench::new(format!("full_compress_{scale}cubed"))
+        .bytes(field.original_bytes())
+        .samples(3)
+        .run(|| black_box(ffcz::correction::compress(&field, &base, &cfg).unwrap()));
+    println!("{}", r.report());
+}
+
+fn bench_pjrt() {
+    let dir = std::path::Path::new("artifacts");
+    let Ok(mut engine) = ffcz::runtime::PjrtEngine::new(dir) else {
+        println!("(artifacts/ not built — PJRT bench skipped)");
+        return;
+    };
+    let shape = [4096usize];
+    if !engine.supports_shape(&shape) {
+        println!("(no 1d_4096 variant — PJRT bench skipped)");
+        return;
+    }
+    let mut rng = ffcz::util::XorShift::new(5);
+    let eps0: Vec<f64> = (0..4096).map(|_| rng.uniform(-0.05, 0.05)).collect();
+    // Warm compile outside the timer.
+    let _ = engine.correct(&eps0, &shape, 0.05, 1.0).unwrap();
+    let r = Bench::new("pjrt_correct_1d_4096")
+        .bytes(4096 * 8)
+        .samples(10)
+        .run(|| black_box(engine.correct(&eps0, &shape, 0.05, 1.0).unwrap()));
+    println!("{}", r.report());
+    // Native engine on the identical workload.
+    let params = PocsParams {
+        spatial: Bounds::Global(0.05),
+        frequency: Bounds::Global(1.0),
+        max_iters: 64,
+    };
+    let r = Bench::new("native_correct_1d_4096")
+        .bytes(4096 * 8)
+        .samples(10)
+        .run(|| black_box(alternating_projection(&eps0, &[4096], &params)));
+    println!("{}", r.report());
+}
+
+// NOTE: ablation — predictor choice for the sz-like base (DESIGN.md calls
+// this out): how does the base predictor affect the downstream FFCz edit
+// cost at the same bounds? Run with `cargo bench --bench correction`.
+fn bench_predictor_ablation() {
+    use ffcz::compressors::szlike::{Predictor, SzLike};
+    let field = synth::grf::GrfBuilder::new(&[32, 32, 32])
+        .spectral_index(1.8)
+        .lognormal(2.4)
+        .seed(101)
+        .build();
+    for (name, pred) in [
+        ("lorenzo", Predictor::Lorenzo),
+        ("interp", Predictor::Interpolation),
+    ] {
+        let base = SzLike::with_predictor(pred);
+        let payload = base.compress(&field, ErrorBound::Relative(1e-3)).unwrap();
+        let recon = base.decompress(&payload).unwrap();
+        let cfg = ffcz::correction::FfczConfig::relative(1e-3, 5e-3);
+        let archive = ffcz::correction::correct_reconstruction(
+            &field,
+            &recon,
+            base.name(),
+            payload.clone(),
+            &cfg,
+        )
+        .unwrap();
+        println!(
+            "ablation predictor={name}: base {} B, edits {} B, {}+{} active, {} iters",
+            payload.len(),
+            archive.edit_bytes(),
+            archive.stats.active_spat,
+            archive.stats.active_freq,
+            archive.stats.iterations
+        );
+    }
+}

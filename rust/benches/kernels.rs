@@ -1,0 +1,167 @@
+//! Stage-level microbenchmarks (Table IV / Fig. 9 analogue): FFT sizes,
+//! projection kernels, convergence check, edit quantization, and the
+//! entropy back end.
+//!
+//! Custom harness (criterion is unavailable offline):
+//! `cargo bench --bench kernels`
+
+use ffcz::correction::QuantizedEdits;
+use ffcz::encoding::{huffman_decode, huffman_encode, lossless_compress};
+use ffcz::fourier::{fftn_inplace, Complex, Fft, FftDirection};
+use ffcz::util::bench::{black_box, Bench};
+use ffcz::util::XorShift;
+
+fn main() {
+    println!("== kernel benchmarks ==");
+    fft_benches();
+    projection_benches();
+    codec_benches();
+}
+
+fn fft_benches() {
+    let mut rng = XorShift::new(1);
+    for &n in &[4096usize, 65536, 262144] {
+        let data: Vec<Complex> = (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect();
+        let plan = Fft::new(n);
+        let mut buf = data.clone();
+        let r = Bench::new(format!("fft_1d_{n}"))
+            .bytes(n * 16)
+            .samples(10)
+            .run(|| {
+                buf.copy_from_slice(&data);
+                plan.process(&mut buf, FftDirection::Forward);
+                black_box(buf[0])
+            });
+        println!("{}", r.report());
+    }
+    // 3D transform (the experiment workload shape).
+    let shape = [64usize, 64, 64];
+    let n: usize = shape.iter().product();
+    let data: Vec<Complex> = (0..n).map(|_| Complex::new(rng.normal(), 0.0)).collect();
+    let mut buf = data.clone();
+    let r = Bench::new("fftn_3d_64".to_string())
+        .bytes(n * 16)
+        .samples(10)
+        .run(|| {
+            buf.copy_from_slice(&data);
+            fftn_inplace(&mut buf, &shape);
+            black_box(buf[0])
+        });
+    println!("{}", r.report());
+    // Non-power-of-two (Bluestein) path.
+    let n = 100_000;
+    let data: Vec<Complex> = (0..n)
+        .map(|_| Complex::new(rng.normal(), rng.normal()))
+        .collect();
+    let plan = Fft::new(n);
+    let mut buf = data.clone();
+    let r = Bench::new("fft_1d_100000_bluestein".to_string())
+        .bytes(n * 16)
+        .samples(5)
+        .run(|| {
+            buf.copy_from_slice(&data);
+            plan.process(&mut buf, FftDirection::Forward);
+            black_box(buf[0])
+        });
+    println!("{}", r.report());
+}
+
+fn projection_benches() {
+    let mut rng = XorShift::new(2);
+    let n = 262144;
+    let delta: Vec<Complex> = (0..n)
+        .map(|_| Complex::new(rng.normal(), rng.normal()))
+        .collect();
+    let bound = 0.5;
+
+    let mut out = delta.clone();
+    let r = Bench::new("project_onto_fcube_256k")
+        .bytes(n * 32)
+        .elems(n)
+        .run(|| {
+            for (o, v) in out.iter_mut().zip(&delta) {
+                *o = Complex::new(v.re.clamp(-bound, bound), v.im.clamp(-bound, bound));
+            }
+            black_box(out[0])
+        });
+    println!("{}", r.report());
+
+    let r = Bench::new("check_convergence_256k")
+        .bytes(n * 16)
+        .elems(n)
+        .run(|| {
+            let mut max = 0.0f64;
+            for v in &delta {
+                max = max.max(v.linf());
+            }
+            black_box(max)
+        });
+    println!("{}", r.report());
+
+    let eps: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut out_s = eps.clone();
+    let r = Bench::new("project_onto_scube_256k")
+        .bytes(n * 16)
+        .elems(n)
+        .run(|| {
+            for (o, v) in out_s.iter_mut().zip(&eps) {
+                *o = v.clamp(-bound, bound);
+            }
+            black_box(out_s[0])
+        });
+    println!("{}", r.report());
+}
+
+fn codec_benches() {
+    let mut rng = XorShift::new(3);
+    let n = 262144;
+    // Sparse edit vector (2% density — the realistic regime).
+    let edits: Vec<f64> = (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.02 {
+                rng.normal() * 0.01
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let r = Bench::new("quantize_edits_256k")
+        .bytes(n * 8)
+        .elems(n)
+        .run(|| black_box(QuantizedEdits::quantize(&edits)));
+    println!("{}", r.report());
+
+    let q = QuantizedEdits::quantize(&edits);
+    let r = Bench::new("edit_stream_serialize")
+        .bytes(n / 8)
+        .run(|| black_box(q.to_bytes()));
+    println!("{}", r.report());
+
+    // Entropy back end on quantization-code-like data (narrow distribution
+    // around the zero code, as real residuals are).
+    let syms: Vec<u16> = (0..n)
+        .map(|_| {
+            let mut s = 32768i32;
+            for _ in 0..4 {
+                s += (rng.next_u64() % 7) as i32 - 3;
+            }
+            s as u16
+        })
+        .collect();
+    let r = Bench::new("huffman_encode_256k")
+        .bytes(n * 2)
+        .run(|| black_box(huffman_encode(&syms)));
+    println!("{}", r.report());
+    let enc = huffman_encode(&syms);
+    let r = Bench::new("huffman_decode_256k")
+        .bytes(n * 2)
+        .run(|| black_box(huffman_decode(&enc, syms.len()).unwrap()));
+    println!("{}", r.report());
+    let raw: Vec<u8> = syms.iter().flat_map(|s| s.to_le_bytes()).collect();
+    let r = Bench::new("zstd_compress_512KiB")
+        .bytes(raw.len())
+        .run(|| black_box(lossless_compress(&raw)));
+    println!("{}", r.report());
+}

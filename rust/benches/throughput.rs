@@ -1,0 +1,78 @@
+//! End-to-end throughput benchmarks (Fig. 7 / Table II analogue): base
+//! compressor vs FFCz editing per dataset, and the pipelined-vs-sequential
+//! makespan comparison.
+//!
+//! `cargo bench --bench throughput`
+
+use ffcz::compressors::{paper_compressors, ErrorBound};
+use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
+use ffcz::correction::{correct_reconstruction, FfczConfig};
+use ffcz::data::synth;
+use ffcz::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("== throughput benchmarks (scale 24) ==");
+    per_dataset();
+    pipeline_comparison();
+}
+
+fn per_dataset() {
+    let suite = synth::benchmark_suite(24);
+    for (name, field) in &suite {
+        for base in paper_compressors() {
+            let payload = base.compress(field, ErrorBound::Relative(1e-3)).unwrap();
+            let recon = base.decompress(&payload).unwrap();
+            let (_, rfe) = ffcz::metrics::spectral_metrics(field, &recon);
+            let cfg = FfczConfig::relative(1e-3, (rfe / 10.0).max(1e-12));
+
+            let r = Bench::new(format!("compress_{}_{}", base.name(), name))
+                .bytes(field.original_bytes())
+                .samples(3)
+                .run(|| black_box(base.compress(field, ErrorBound::Relative(1e-3)).unwrap()));
+            println!("{}", r.report());
+
+            let r = Bench::new(format!("edit_{}_{}", base.name(), name))
+                .bytes(field.original_bytes())
+                .samples(3)
+                .run(|| {
+                    black_box(
+                        correct_reconstruction(
+                            field,
+                            &recon,
+                            base.name(),
+                            payload.clone(),
+                            &cfg,
+                        )
+                        .unwrap(),
+                    )
+                });
+            println!("{}", r.report());
+        }
+    }
+}
+
+fn pipeline_comparison() {
+    let instances: Vec<_> = (0..4)
+        .map(|i| {
+            (
+                format!("snap{i}"),
+                synth::grf::GrfBuilder::new(&[24, 24, 24])
+                    .lognormal(2.0)
+                    .seed(400 + i as u64)
+                    .build(),
+            )
+        })
+        .collect();
+    let base = ffcz::compressors::szlike::SzLike::default();
+    let bytes: usize = instances.iter().map(|(_, f)| f.original_bytes()).sum();
+    for mode in [ExecMode::Pipelined, ExecMode::Sequential] {
+        let mut cfg = PipelineConfig::new(FfczConfig::relative(1e-3, 1e-4));
+        cfg.mode = mode;
+        let insts = instances.clone();
+        let r = Bench::new(format!("pipeline_{mode:?}_4x24cubed"))
+            .bytes(bytes)
+            .samples(3)
+            .run(|| black_box(run_pipeline(insts.clone(), &base, &cfg).unwrap()));
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,43 @@
+//! Lossless "compressor" that stores the field verbatim (zstd-packed).
+//! Useful for tests and as a worst-case bitrate baseline.
+
+use anyhow::Result;
+
+use super::{Compressor, ErrorBound};
+use crate::data::{io, Field};
+use crate::encoding::{lossless_compress, lossless_decompress};
+
+/// Identity codec: zero error, poor ratio.
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn compress(&self, field: &Field, _bound: ErrorBound) -> Result<Vec<u8>> {
+        let mut raw = Vec::new();
+        io::write_ffld(field, &mut raw)?;
+        Ok(lossless_compress(&raw))
+    }
+
+    fn decompress(&self, payload: &[u8]) -> Result<Field> {
+        let raw = lossless_decompress(payload)?;
+        io::read_ffld(&raw[..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Precision;
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let f = Field::new(&[2, 5], (0..10).map(|i| i as f64 * 0.3).collect(), Precision::Single);
+        let c = Identity;
+        let payload = c.compress(&f, ErrorBound::Absolute(1.0)).unwrap();
+        let g = c.decompress(&payload).unwrap();
+        assert_eq!(f, g);
+    }
+}

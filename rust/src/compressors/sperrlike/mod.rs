@@ -1,0 +1,277 @@
+//! SPERR-style wavelet error-bounded compressor.
+//!
+//! Pipeline, mirroring SPERR's structure (Li, Lindstrom & Clyne, IPDPS'23):
+//! 1. **Multi-level CDF 9/7 wavelet transform** over the whole field
+//!    (separable lifting per axis, symmetric extension, ceil/floor split
+//!    for odd lengths);
+//! 2. **Coefficient coding** — SPERR proper uses SPECK set partitioning;
+//!    this implementation uses uniform deadzone quantization of the
+//!    coefficients with canonical Huffman + ZSTD, which preserves the
+//!    properties the paper leans on (global transform ⇒ strong spectral
+//!    retention; whole-dataset multi-level scan ⇒ slowest of the three);
+//! 3. **Outlier correction** — like SPERR, the encoder reconstructs and
+//!    stores exact corrections for samples that still violate the pointwise
+//!    bound, making the error bound unconditional.
+
+mod wavelet;
+
+use anyhow::{bail, Result};
+
+use super::{Compressor, ErrorBound};
+use crate::data::{Field, Precision};
+use crate::encoding::{
+    huffman_decode, huffman_encode, lossless_compress, lossless_decompress, varint,
+};
+
+pub use wavelet::{cdf97_forward_nd, cdf97_inverse_nd, max_levels};
+
+const CODE_OFFSET: i64 = 32768;
+const MAX_CODE: i64 = 32767;
+
+/// SPERR-style compressor.
+pub struct SperrLike {
+    /// Number of wavelet decomposition levels (capped by the field size).
+    pub levels: usize,
+}
+
+impl Default for SperrLike {
+    fn default() -> Self {
+        Self { levels: 4 }
+    }
+}
+
+impl Compressor for SperrLike {
+    fn name(&self) -> &'static str {
+        "sperr-like"
+    }
+
+    fn compress(&self, field: &Field, bound: ErrorBound) -> Result<Vec<u8>> {
+        let eb = bound.absolute_for(field);
+        if eb <= 0.0 {
+            bail!("error bound must be positive");
+        }
+        let shape = field.shape().to_vec();
+        let levels = self.levels.min(max_levels(&shape));
+        let mut coeffs = field.data().to_vec();
+        cdf97_forward_nd(&mut coeffs, &shape, levels);
+
+        // Deadzone quantization. The CDF 9/7 synthesis has bounded L∞ gain;
+        // quantum eb/2 keeps most samples in bound (measured: a handful of
+        // outliers per 32³ block at eb/2) and the outlier pass catches the
+        // rest — trading ~2 bits/coefficient of rate for sparse exact
+        // corrections, the same trade SPERR itself makes.
+        let quantum = eb / 2.0;
+        let mut codes: Vec<u16> = Vec::with_capacity(coeffs.len());
+        let mut escapes: Vec<i64> = Vec::new();
+        let mut recon_coeffs = vec![0.0f64; coeffs.len()];
+        for (i, &c) in coeffs.iter().enumerate() {
+            let q = (c / quantum).round() as i64;
+            if q.abs() <= MAX_CODE {
+                codes.push((q + CODE_OFFSET) as u16);
+            } else {
+                codes.push(0);
+                escapes.push(q);
+            }
+            recon_coeffs[i] = q as f64 * quantum;
+        }
+
+        // Local reconstruction for the outlier pass.
+        cdf97_inverse_nd(&mut recon_coeffs, &shape, levels);
+        let mut outlier_pos: Vec<u64> = Vec::new();
+        let mut outlier_val: Vec<f64> = Vec::new();
+        for (i, (&orig, &rec)) in field.data().iter().zip(&recon_coeffs).enumerate() {
+            if (rec - orig).abs() > eb {
+                outlier_pos.push(i as u64);
+                outlier_val.push(orig);
+            }
+        }
+
+        // ---- payload
+        let mut out = Vec::new();
+        out.extend_from_slice(b"SPL1");
+        out.push(match field.precision() {
+            Precision::Single => 0,
+            Precision::Double => 1,
+        });
+        out.push(levels as u8);
+        varint::write(&mut out, field.ndim() as u64);
+        for &d in &shape {
+            varint::write(&mut out, d as u64);
+        }
+        out.extend_from_slice(&eb.to_le_bytes());
+
+        let enc_codes = lossless_compress(&huffman_encode(&codes));
+        varint::write(&mut out, enc_codes.len() as u64);
+        out.extend_from_slice(&enc_codes);
+
+        let mut esc_bytes = Vec::new();
+        varint::write(&mut esc_bytes, escapes.len() as u64);
+        for &e in &escapes {
+            varint::write(&mut esc_bytes, varint::zigzag(e));
+        }
+        let enc_esc = lossless_compress(&esc_bytes);
+        varint::write(&mut out, enc_esc.len() as u64);
+        out.extend_from_slice(&enc_esc);
+
+        let mut ob = Vec::new();
+        varint::write(&mut ob, outlier_pos.len() as u64);
+        let mut prev = 0u64;
+        for &p in &outlier_pos {
+            varint::write(&mut ob, p - prev); // delta-coded positions
+            prev = p;
+        }
+        for &v in &outlier_val {
+            ob.extend_from_slice(&v.to_le_bytes());
+        }
+        let enc_ob = lossless_compress(&ob);
+        varint::write(&mut out, enc_ob.len() as u64);
+        out.extend_from_slice(&enc_ob);
+        Ok(out)
+    }
+
+    fn decompress(&self, payload: &[u8]) -> Result<Field> {
+        if payload.len() < 6 || &payload[..4] != b"SPL1" {
+            bail!("not a sperr-like payload");
+        }
+        let precision = match payload[4] {
+            0 => Precision::Single,
+            1 => Precision::Double,
+            x => bail!("bad precision {x}"),
+        };
+        let levels = payload[5] as usize;
+        let mut pos = 6usize;
+        let ndim = varint::read(payload, &mut pos)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(varint::read(payload, &mut pos)? as usize);
+        }
+        if pos + 8 > payload.len() {
+            bail!("truncated header");
+        }
+        let eb = f64::from_le_bytes(payload[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        let quantum = eb / 2.0;
+        let n: usize = shape.iter().product();
+
+        let read_section = |payload: &[u8], pos: &mut usize| -> Result<Vec<u8>> {
+            let len = varint::read(payload, pos)? as usize;
+            if *pos + len > payload.len() {
+                bail!("truncated section");
+            }
+            let raw = lossless_decompress(&payload[*pos..*pos + len])?;
+            *pos += len;
+            Ok(raw)
+        };
+
+        let code_raw = read_section(payload, &mut pos)?;
+        let codes = huffman_decode(&code_raw, n)?;
+
+        let esc_bytes = read_section(payload, &mut pos)?;
+        let mut epos = 0usize;
+        let n_esc = varint::read(&esc_bytes, &mut epos)? as usize;
+        let mut escapes = Vec::with_capacity(n_esc);
+        for _ in 0..n_esc {
+            escapes.push(varint::unzigzag(varint::read(&esc_bytes, &mut epos)?));
+        }
+
+        let ob = read_section(payload, &mut pos)?;
+        let mut opos = 0usize;
+        let n_out = varint::read(&ob, &mut opos)? as usize;
+        let mut outlier_pos_v = Vec::with_capacity(n_out);
+        let mut acc = 0u64;
+        for _ in 0..n_out {
+            acc += varint::read(&ob, &mut opos)?;
+            outlier_pos_v.push(acc as usize);
+        }
+        let mut outlier_val_v = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            if opos + 8 > ob.len() {
+                bail!("truncated outliers");
+            }
+            outlier_val_v.push(f64::from_le_bytes(ob[opos..opos + 8].try_into().unwrap()));
+            opos += 8;
+        }
+
+        // ---- reconstruct
+        let mut coeffs = vec![0.0f64; n];
+        let mut ei = 0usize;
+        for (i, &code) in codes.iter().enumerate() {
+            let q = if code == 0 {
+                let q = *escapes
+                    .get(ei)
+                    .ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?;
+                ei += 1;
+                q
+            } else {
+                code as i64 - CODE_OFFSET
+            };
+            coeffs[i] = q as f64 * quantum;
+        }
+        cdf97_inverse_nd(&mut coeffs, &shape, levels);
+        for (p, v) in outlier_pos_v.into_iter().zip(outlier_val_v) {
+            if p >= n {
+                bail!("outlier position out of range");
+            }
+            coeffs[p] = v;
+        }
+        Ok(Field::new(&shape, coeffs, precision))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn bound_holds_on_suite() {
+        let c = SperrLike::default();
+        for (name, field) in synth::benchmark_suite(16) {
+            for eb_rel in [1e-2, 1e-3] {
+                let bound = ErrorBound::Relative(eb_rel);
+                let eb = bound.absolute_for(&field);
+                let payload = c.compress(&field, bound).unwrap();
+                let recon = c.decompress(&payload).unwrap();
+                let max_err = field
+                    .data()
+                    .iter()
+                    .zip(recon.data())
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(
+                    max_err <= eb * (1.0 + 1e-12),
+                    "{name}: max_err {max_err} > eb {eb}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_field_compresses_comparably_to_szlike() {
+        // On a very smooth field the global wavelet should compress in the
+        // same ballpark as the local predictor (SPERR proper wins via SPECK
+        // significance coding, which this implementation replaces with
+        // dense Huffman — see module docs).
+        let field = synth::turbulence::TurbulenceBuilder::new(&[32, 32, 32])
+            .dissipation_frac(0.1)
+            .seed(6)
+            .build();
+        let sp = SperrLike::default()
+            .compress(&field, ErrorBound::Relative(1e-3))
+            .unwrap();
+        let sz = crate::compressors::szlike::SzLike::default()
+            .compress(&field, ErrorBound::Relative(1e-3))
+            .unwrap();
+        let sp_ratio = field.original_bytes() as f64 / sp.len() as f64;
+        let sz_ratio = field.original_bytes() as f64 / sz.len() as f64;
+        assert!(
+            sp_ratio > 0.4 * sz_ratio,
+            "sperr-like {sp_ratio:.1} vs sz-like {sz_ratio:.1}"
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(SperrLike::default().decompress(b"xx").is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! CDF 9/7 wavelet transform via lifting (the JPEG2000 irreversible
+//! filter, also SPERR's transform), with symmetric boundary extension,
+//! arbitrary lengths (ceil/floor low/high split), and multi-level
+//! separable N-D application on the shrinking low-pass subbox.
+
+/// Lifting constants (Daubechies–Sweldens factorization of CDF 9/7).
+const ALPHA: f64 = -1.586_134_342_059_924;
+const BETA: f64 = -0.052_980_118_572_961;
+const GAMMA: f64 = 0.882_911_075_530_934;
+const DELTA: f64 = 0.443_506_852_043_971;
+/// Scaling constant K; low band is scaled by 1/K, high band by K.
+const K: f64 = 1.230_174_104_914_001;
+
+/// Max number of decomposition levels such that every dimension stays ≥ 8
+/// at the coarsest level (capped at 6, plenty for compression).
+pub fn max_levels(shape: &[usize]) -> usize {
+    let mut levels = 0usize;
+    let mut dims: Vec<usize> = shape.to_vec();
+    while levels < 6 && dims.iter().all(|&d| d >= 8) {
+        for d in dims.iter_mut() {
+            *d = d.div_ceil(2);
+        }
+        levels += 1;
+    }
+    levels
+}
+
+/// One forward lifting pass over a contiguous line, then deinterleave into
+/// `[low | high]`. `n ≥ 2`.
+fn forward_line(x: &mut [f64], scratch: &mut [f64]) {
+    let n = x.len();
+    debug_assert!(n >= 2);
+    // Symmetric extension helper (whole-sample symmetry).
+    let at = |x: &[f64], i: isize| -> f64 {
+        let n = x.len() as isize;
+        let j = if i < 0 {
+            -i
+        } else if i >= n {
+            2 * (n - 1) - i
+        } else {
+            i
+        };
+        x[j as usize]
+    };
+    // Predict 1 (odd), update 1 (even), predict 2, update 2.
+    for i in (1..n).step_by(2) {
+        x[i] += ALPHA * (at(x, i as isize - 1) + at(x, i as isize + 1));
+    }
+    for i in (0..n).step_by(2) {
+        x[i] += BETA * (at(x, i as isize - 1) + at(x, i as isize + 1));
+    }
+    for i in (1..n).step_by(2) {
+        x[i] += GAMMA * (at(x, i as isize - 1) + at(x, i as isize + 1));
+    }
+    for i in (0..n).step_by(2) {
+        x[i] += DELTA * (at(x, i as isize - 1) + at(x, i as isize + 1));
+    }
+    // Scale and deinterleave.
+    let n_low = n.div_ceil(2);
+    for i in 0..n {
+        if i % 2 == 0 {
+            scratch[i / 2] = x[i] / K;
+        } else {
+            scratch[n_low + i / 2] = x[i] * K;
+        }
+    }
+    x.copy_from_slice(&scratch[..n]);
+}
+
+/// Inverse of [`forward_line`].
+fn inverse_line(x: &mut [f64], scratch: &mut [f64]) {
+    let n = x.len();
+    debug_assert!(n >= 2);
+    let n_low = n.div_ceil(2);
+    // Re-interleave and unscale.
+    for i in 0..n {
+        if i % 2 == 0 {
+            scratch[i] = x[i / 2] * K;
+        } else {
+            scratch[i] = x[n_low + i / 2] / K;
+        }
+    }
+    x.copy_from_slice(&scratch[..n]);
+    let at = |x: &[f64], i: isize| -> f64 {
+        let n = x.len() as isize;
+        let j = if i < 0 {
+            -i
+        } else if i >= n {
+            2 * (n - 1) - i
+        } else {
+            i
+        };
+        x[j as usize]
+    };
+    // Undo lifting in reverse order with negated coefficients.
+    for i in (0..n).step_by(2) {
+        x[i] -= DELTA * (at(x, i as isize - 1) + at(x, i as isize + 1));
+    }
+    for i in (1..n).step_by(2) {
+        x[i] -= GAMMA * (at(x, i as isize - 1) + at(x, i as isize + 1));
+    }
+    for i in (0..n).step_by(2) {
+        x[i] -= BETA * (at(x, i as isize - 1) + at(x, i as isize + 1));
+    }
+    for i in (1..n).step_by(2) {
+        x[i] -= ALPHA * (at(x, i as isize - 1) + at(x, i as isize + 1));
+    }
+}
+
+/// Apply `op` along `axis` of the `sub` subbox of a row-major array with
+/// full shape `shape`.
+fn apply_axis(
+    data: &mut [f64],
+    shape: &[usize],
+    sub: &[usize],
+    axis: usize,
+    forward: bool,
+) {
+    let len = sub[axis];
+    if len < 2 {
+        return;
+    }
+    let ndim = shape.len();
+    let mut strides = vec![1usize; ndim];
+    for d in (0..ndim.saturating_sub(1)).rev() {
+        strides[d] = strides[d + 1] * shape[d + 1];
+    }
+    let mut line = vec![0.0f64; len];
+    let mut scratch = vec![0.0f64; len];
+    // Iterate the subbox lines: odometer over all dims except `axis`.
+    let mut idx = vec![0usize; ndim];
+    loop {
+        // Gather, transform, scatter one line.
+        let base: usize = idx
+            .iter()
+            .zip(&strides)
+            .enumerate()
+            .map(|(d, (&i, &s))| if d == axis { 0 } else { i * s })
+            .sum();
+        let st = strides[axis];
+        for (j, l) in line.iter_mut().enumerate() {
+            *l = data[base + j * st];
+        }
+        if forward {
+            forward_line(&mut line, &mut scratch);
+        } else {
+            inverse_line(&mut line, &mut scratch);
+        }
+        for (j, l) in line.iter().enumerate() {
+            data[base + j * st] = *l;
+        }
+        // Odometer, skipping `axis`.
+        let mut d = ndim;
+        loop {
+            if d == 0 {
+                return;
+            }
+            d -= 1;
+            if d == axis {
+                continue;
+            }
+            idx[d] += 1;
+            if idx[d] < sub[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// Multi-level forward CDF 9/7 over an N-D row-major array.
+pub fn cdf97_forward_nd(data: &mut [f64], shape: &[usize], levels: usize) {
+    let mut sub: Vec<usize> = shape.to_vec();
+    for _ in 0..levels {
+        for axis in 0..shape.len() {
+            apply_axis(data, shape, &sub, axis, true);
+        }
+        for d in sub.iter_mut() {
+            *d = d.div_ceil(2);
+        }
+    }
+}
+
+/// Multi-level inverse CDF 9/7.
+pub fn cdf97_inverse_nd(data: &mut [f64], shape: &[usize], levels: usize) {
+    // Recompute the subbox sizes of every level, then undo coarsest-first.
+    let mut subs: Vec<Vec<usize>> = Vec::with_capacity(levels);
+    let mut sub: Vec<usize> = shape.to_vec();
+    for _ in 0..levels {
+        subs.push(sub.clone());
+        for d in sub.iter_mut() {
+            *d = d.div_ceil(2);
+        }
+    }
+    for sub in subs.into_iter().rev() {
+        for axis in (0..shape.len()).rev() {
+            apply_axis(data, shape, &sub, axis, false);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn random(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn line_roundtrip_even_and_odd_lengths() {
+        for n in [2usize, 3, 8, 9, 17, 64, 100] {
+            let orig = random(n, n as u64);
+            let mut x = orig.clone();
+            let mut s = vec![0.0; n];
+            forward_line(&mut x, &mut s);
+            inverse_line(&mut x, &mut s);
+            for (a, b) in x.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-12, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_signal_has_zero_details() {
+        let n = 32;
+        let mut x = vec![7.5f64; n];
+        let mut s = vec![0.0; n];
+        forward_line(&mut x, &mut s);
+        // High band = second half; must vanish for constants.
+        for &d in &x[n / 2..] {
+            assert!(d.abs() < 1e-10, "detail {d}");
+        }
+        // Low band carries the (scaled) signal.
+        for &l in &x[..n / 2] {
+            assert!((l - 7.5).abs() < 1e-9, "low {l}");
+        }
+    }
+
+    #[test]
+    fn linear_ramp_details_vanish() {
+        // CDF 9/7 has 4 vanishing moments: linear signals produce zero
+        // detail away from boundaries.
+        let n = 64;
+        let mut x: Vec<f64> = (0..n).map(|i| 3.0 * i as f64).collect();
+        let mut s = vec![0.0; n];
+        forward_line(&mut x, &mut s);
+        for &d in &x[n / 2 + 2..n - 2] {
+            assert!(d.abs() < 1e-9, "interior detail {d}");
+        }
+    }
+
+    #[test]
+    fn nd_roundtrip_multilevel() {
+        for (shape, levels) in [
+            (vec![16usize], 2usize),
+            (vec![16, 16], 2),
+            (vec![9, 13], 1),
+            (vec![8, 8, 8], 1),
+            (vec![17, 9, 12], 1),
+        ] {
+            let n: usize = shape.iter().product();
+            let orig = random(n, 42);
+            let mut x = orig.clone();
+            cdf97_forward_nd(&mut x, &shape, levels);
+            cdf97_inverse_nd(&mut x, &shape, levels);
+            for (a, b) in x.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-10, "shape {shape:?} levels {levels}");
+            }
+        }
+    }
+
+    #[test]
+    fn energy_compaction_on_smooth_signal() {
+        // The DC-gain-1 scaling convention is not energy preserving, so
+        // compaction is measured within the transform domain: the 16
+        // coarsest low-band coefficients must carry nearly everything.
+        let n = 128;
+        let mut x: Vec<f64> = (0..n)
+            .map(|i| (2.0 * std::f64::consts::PI * i as f64 / n as f64).sin())
+            .collect();
+        cdf97_forward_nd(&mut x, &[n], 3);
+        let total: f64 = x.iter().map(|v| v * v).sum();
+        let mut mags: Vec<f64> = x.iter().map(|v| v * v).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top: f64 = mags[..16].iter().sum();
+        assert!(top / total > 0.95, "compaction {}", top / total);
+    }
+
+    #[test]
+    fn max_levels_reasonable() {
+        assert_eq!(max_levels(&[256, 256, 256]), 6);
+        assert_eq!(max_levels(&[16]), 2);
+        assert_eq!(max_levels(&[4]), 0);
+        assert_eq!(max_levels(&[64, 8]), 1);
+    }
+}

@@ -1,0 +1,200 @@
+//! Level-wise linear interpolation predictor (SZ3's default scheme for
+//! smooth fields).
+//!
+//! The data is refined from a coarse anchor lattice to the full grid. At
+//! each level with stride `s` (halving per level), a pass per dimension
+//! predicts points whose coordinate along that dimension is an odd multiple
+//! of `h = s/2` by averaging the two lattice neighbours at `±h` (falling
+//! back to the single left neighbour at the boundary). Every grid point is
+//! visited exactly once: a point belongs to the pass of the *last* dimension
+//! attaining its minimal power-of-two level.
+
+use super::Prediction;
+
+pub struct InterpPredictor;
+
+impl Prediction for InterpPredictor {
+    fn forward(&self, shape: &[usize], recon: &mut [f64], f: &mut dyn FnMut(usize, f64) -> f64) {
+        let ndim = shape.len();
+        let mut strides = vec![1usize; ndim];
+        for d in (0..ndim.saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * shape[d + 1];
+        }
+        // Largest stride: the biggest power of two strictly less than the
+        // largest dimension (so the anchor lattice has ≥ 2 points per dim
+        // where possible).
+        let maxdim = shape.iter().copied().max().unwrap_or(1);
+        let mut s_max = 1usize;
+        while s_max * 2 < maxdim {
+            s_max *= 2;
+        }
+
+        // --- Anchor pass: all points with every coordinate ≡ 0 (mod s_max),
+        // delta-predicted from the previous anchor in scan order.
+        let mut prev = 0.0f64;
+        for_each_lattice(shape, &|d| coords_multiples(shape[d], s_max), &mut |idx| {
+            let lin = lin_of(idx, &strides);
+            let r = f(lin, prev);
+            recon[lin] = r;
+            prev = r;
+        });
+
+        // --- Refinement passes.
+        let mut s = s_max;
+        while s >= 2 {
+            let h = s / 2;
+            for d in 0..ndim {
+                // Coordinate sets per dimension for this (s, d) pass.
+                let coord_fn = |dd: usize| -> Vec<usize> {
+                    if dd == d {
+                        coords_odd_multiples(shape[dd], h, s)
+                    } else if dd < d {
+                        coords_multiples(shape[dd], h)
+                    } else {
+                        coords_multiples(shape[dd], s)
+                    }
+                };
+                for_each_lattice(shape, &coord_fn, &mut |idx| {
+                    let lin = lin_of(idx, &strides);
+                    let c = idx[d];
+                    let left = recon[lin - h * strides[d]];
+                    let p = if c + h < shape[d] {
+                        0.5 * (left + recon[lin + h * strides[d]])
+                    } else {
+                        left
+                    };
+                    let r = f(lin, p);
+                    recon[lin] = r;
+                });
+            }
+            s = h;
+        }
+    }
+}
+
+#[inline]
+fn lin_of(idx: &[usize], strides: &[usize]) -> usize {
+    idx.iter().zip(strides).map(|(&i, &s)| i * s).sum()
+}
+
+/// `0, step, 2·step, …  < n`.
+fn coords_multiples(n: usize, step: usize) -> Vec<usize> {
+    (0..n).step_by(step).collect()
+}
+
+/// `h, h+s, h+2s, … < n` (odd multiples of h when s = 2h).
+fn coords_odd_multiples(n: usize, h: usize, s: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut c = h;
+    while c < n {
+        v.push(c);
+        c += s;
+    }
+    v
+}
+
+/// Odometer over the cartesian product of per-dimension coordinate lists.
+fn for_each_lattice(
+    shape: &[usize],
+    coords: &dyn Fn(usize) -> Vec<usize>,
+    f: &mut dyn FnMut(&[usize]),
+) {
+    let ndim = shape.len();
+    let lists: Vec<Vec<usize>> = (0..ndim).map(coords).collect();
+    if lists.iter().any(|l| l.is_empty()) {
+        return;
+    }
+    let mut pos = vec![0usize; ndim];
+    let mut idx: Vec<usize> = lists.iter().map(|l| l[0]).collect();
+    loop {
+        f(&idx);
+        let mut d = ndim;
+        loop {
+            if d == 0 {
+                return;
+            }
+            d -= 1;
+            pos[d] += 1;
+            if pos[d] < lists[d].len() {
+                idx[d] = lists[d][pos[d]];
+                break;
+            }
+            pos[d] = 0;
+            idx[d] = lists[d][0];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run the predictor feeding back exact values; returns (order, preds).
+    fn run(shape: &[usize], data: &[f64]) -> (Vec<usize>, Vec<f64>) {
+        let mut recon = vec![0.0; data.len()];
+        let mut order = Vec::new();
+        let mut preds = vec![f64::NAN; data.len()];
+        InterpPredictor.forward(shape, &mut recon, &mut |i, p| {
+            order.push(i);
+            preds[i] = p;
+            data[i]
+        });
+        (order, preds)
+    }
+
+    #[test]
+    fn visits_every_point_exactly_once() {
+        for shape in [vec![17usize], vec![8, 8], vec![5, 7], vec![4, 6, 9]] {
+            let n: usize = shape.iter().product();
+            let data = vec![1.0; n];
+            let (order, _) = run(&shape, &data);
+            let mut seen = vec![false; n];
+            for &i in &order {
+                assert!(!seen[i], "double visit at {i} in shape {shape:?}");
+                seen[i] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "missed points in shape {shape:?}");
+        }
+    }
+
+    #[test]
+    fn linear_signal_interpolates_exactly() {
+        // On a linear ramp all interpolation predictions (away from the
+        // right boundary fallback) are exact.
+        let n = 33usize;
+        let data: Vec<f64> = (0..n).map(|i| 2.0 * i as f64).collect();
+        let (_, preds) = run(&[n], &data);
+        // Interior odd points at the finest level: prediction must be exact.
+        for i in (1..n - 1).step_by(2) {
+            assert!((preds[i] - data[i]).abs() < 1e-12, "at {i}");
+        }
+    }
+
+    #[test]
+    fn bilinear_2d_interpolates_exactly_along_axes() {
+        let (h, w) = (9usize, 9);
+        let data: Vec<f64> = (0..h * w)
+            .map(|lin| {
+                let (i, j) = (lin / w, lin % w);
+                1.5 * i as f64 + 0.5 * j as f64
+            })
+            .collect();
+        let (_, preds) = run(&[h, w], &data);
+        // All but anchors and boundary-fallback points should be exact.
+        let mut exact = 0;
+        let mut total = 0;
+        for i in 0..h {
+            for j in 0..w {
+                let lin = i * w + j;
+                if preds[lin].is_nan() {
+                    continue;
+                }
+                total += 1;
+                if (preds[lin] - data[lin]).abs() < 1e-12 {
+                    exact += 1;
+                }
+            }
+        }
+        assert!(exact as f64 / total as f64 > 0.85, "{exact}/{total}");
+    }
+}

@@ -1,0 +1,164 @@
+//! ZFP's reversible integer decorrelating transform on 4-sample lanes.
+//!
+//! Forward (Lindstrom 2014, the non-orthogonal lifted transform):
+//! ```text
+//! x += w; x >>= 1; w -= x;
+//! z += y; z >>= 1; y -= z;
+//! x += z; x >>= 1; z -= x;
+//! w += y; w >>= 1; y -= w;
+//! w += y >> 1; y -= w >> 1;
+//! ```
+//! applied along every dimension of a 4^d block. Like ZFP itself, the
+//! right-shifts drop one low-order bit on odd sums, so forward+inverse is
+//! reversible only up to a few ULPs of the integer grid — the block
+//! floating-point scaling leaves ≥ 30 headroom bits so this sits far below
+//! any requested error bound (and the outlier pass enforces the bound
+//! unconditionally regardless).
+
+/// Block edge length (ZFP uses 4).
+pub const BLOCK_EDGE: usize = 4;
+
+/// Forward lift of one 4-vector.
+#[inline]
+pub fn lift4(v: &mut [i64; 4]) {
+    let [mut x, mut y, mut z, mut w] = *v;
+    x += w;
+    x >>= 1;
+    w -= x;
+    z += y;
+    z >>= 1;
+    y -= z;
+    x += z;
+    x >>= 1;
+    z -= x;
+    w += y;
+    w >>= 1;
+    y -= w;
+    w += y >> 1;
+    y -= w >> 1;
+    *v = [x, y, z, w];
+}
+
+/// Inverse lift of one 4-vector.
+#[inline]
+pub fn unlift4(v: &mut [i64; 4]) {
+    let [mut x, mut y, mut z, mut w] = *v;
+    y += w >> 1;
+    w -= y >> 1;
+    y += w;
+    w <<= 1;
+    w -= y;
+    z += x;
+    x <<= 1;
+    x -= z;
+    y += z;
+    z <<= 1;
+    z -= y;
+    w += x;
+    x <<= 1;
+    x -= w;
+    *v = [x, y, z, w];
+}
+
+/// Forward transform of a 4^d block (row-major), lifting along every axis.
+pub fn lift_block(block: &mut [i64], ndim: usize) {
+    for_each_lane(block, ndim, lift4);
+}
+
+/// Inverse transform of a 4^d block.
+pub fn inverse_lift_block(block: &mut [i64], ndim: usize) {
+    for_each_lane(block, ndim, unlift4);
+}
+
+fn for_each_lane(block: &mut [i64], ndim: usize, f: impl Fn(&mut [i64; 4])) {
+    let n = BLOCK_EDGE.pow(ndim as u32);
+    debug_assert_eq!(block.len(), n);
+    for axis in 0..ndim {
+        // stride along `axis` in a row-major 4^d block
+        let stride = BLOCK_EDGE.pow((ndim - 1 - axis) as u32);
+        let lanes = n / BLOCK_EDGE;
+        for lane in 0..lanes {
+            // Decompose lane index into (outer, inner) around the axis.
+            let inner = lane % stride;
+            let outer = lane / stride;
+            let base = outer * stride * BLOCK_EDGE + inner;
+            let mut v = [
+                block[base],
+                block[base + stride],
+                block[base + 2 * stride],
+                block[base + 3 * stride],
+            ];
+            f(&mut v);
+            block[base] = v[0];
+            block[base + stride] = v[1];
+            block[base + 2 * stride] = v[2];
+            block[base + 3 * stride] = v[3];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn lift4_roundtrip_within_ulps() {
+        let mut rng = XorShift::new(1);
+        for _ in 0..1000 {
+            let orig = [
+                (rng.next_u64() as i32 / 4) as i64,
+                (rng.next_u64() as i32 / 4) as i64,
+                (rng.next_u64() as i32 / 4) as i64,
+                (rng.next_u64() as i32 / 4) as i64,
+            ];
+            let mut v = orig;
+            lift4(&mut v);
+            unlift4(&mut v);
+            for (a, b) in v.iter().zip(&orig) {
+                assert!((a - b).abs() <= 4, "{v:?} vs {orig:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_roundtrip_within_ulps_all_dims() {
+        let mut rng = XorShift::new(2);
+        for ndim in 1..=3usize {
+            let n = BLOCK_EDGE.pow(ndim as u32);
+            let orig: Vec<i64> = (0..n).map(|_| (rng.next_u64() as i32 / 8) as i64).collect();
+            let mut b = orig.clone();
+            lift_block(&mut b, ndim);
+            assert_ne!(b, orig, "transform should change data");
+            inverse_lift_block(&mut b, ndim);
+            // Each inverse axis doubles earlier axes' 1-ulp losses
+            // (`x <<= 1` steps), so 3D can accumulate ~2⁶ of error — still
+            // 2⁻²⁴ relative to the 30-bit block-float scale.
+            for (a, x) in b.iter().zip(&orig) {
+                assert!((a - x).abs() <= 128, "ndim={ndim}: {a} vs {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_block_energy_compacts_to_dc() {
+        // A constant block transforms to a single nonzero (DC) coefficient.
+        let mut b = vec![1000i64; 64];
+        lift_block(&mut b, 3);
+        let nonzero = b.iter().filter(|&&c| c != 0).count();
+        assert_eq!(nonzero, 1, "constant block should compact to DC");
+    }
+
+    #[test]
+    fn smooth_ramp_compacts_energy() {
+        // Linear ramp: most energy lands in few coefficients.
+        let b0: Vec<i64> = (0..16).map(|i| (i as i64) * 1000).collect();
+        let mut b = b0.clone();
+        lift_block(&mut b, 2);
+        let mut mags: Vec<i64> = b.iter().map(|c| c.abs()).collect();
+        mags.sort_unstable_by(|a, b| b.cmp(a));
+        let top4: i64 = mags[..4].iter().sum();
+        let total: i64 = mags.iter().sum();
+        assert!(top4 as f64 / total as f64 > 0.9);
+    }
+}

@@ -1,0 +1,18 @@
+//! Streaming compression–editing coordinator (Layer 3).
+//!
+//! FFCz is a data-pipeline system: simulation instances (snapshots, time
+//! steps, parameter sweeps) stream through base compression and FFCz
+//! editing. The paper's Fig. 7(d) observation — *editing instance `i`
+//! overlaps with compressing instance `i+1`, so the pipeline's makespan
+//! equals the compression-only makespan* — is exactly what
+//! [`pipeline::run_pipeline`] implements: a two-stage pipeline over OS
+//! threads with a bounded hand-off queue (backpressure).
+//!
+//! [`sharding`] splits oversized fields into independently-corrected
+//! shards so memory stays bounded and shards parallelize.
+
+pub mod pipeline;
+pub mod sharding;
+
+pub use pipeline::{run_pipeline, ExecMode, InstanceTiming, PipelineConfig, PipelineReport};
+pub use sharding::{shard_field, unshard_field};

@@ -1,0 +1,101 @@
+//! Sharding of oversized fields into independently-corrected instances.
+//!
+//! Shards split along axis 0 (the slowest-varying axis of the row-major
+//! layout, so shards are contiguous memory). Each shard is corrected
+//! independently — dual-domain bounds then hold *per shard*, the natural
+//! granularity for streaming workloads where instances arrive one at a
+//! time (paper Fig. 7(d)).
+
+use anyhow::{bail, Result};
+
+use crate::data::Field;
+
+/// Split a field into up to `n_shards` contiguous chunks along axis 0.
+/// Every shard keeps the remaining axes intact; axis-0 extents differ by
+/// at most one. Returns fewer shards if axis 0 is too small.
+pub fn shard_field(field: &Field, n_shards: usize) -> Vec<Field> {
+    let d0 = field.shape()[0];
+    let k = n_shards.clamp(1, d0);
+    let inner: usize = field.shape()[1..].iter().product();
+    let base = d0 / k;
+    let extra = d0 % k;
+    let mut out = Vec::with_capacity(k);
+    let mut row = 0usize;
+    for i in 0..k {
+        let rows = base + usize::from(i < extra);
+        let start = row * inner;
+        let end = (row + rows) * inner;
+        let mut shape = field.shape().to_vec();
+        shape[0] = rows;
+        out.push(Field::new(
+            &shape,
+            field.data()[start..end].to_vec(),
+            field.precision(),
+        ));
+        row += rows;
+    }
+    out
+}
+
+/// Reassemble shards produced by [`shard_field`] (same order).
+pub fn unshard_field(shards: &[Field]) -> Result<Field> {
+    if shards.is_empty() {
+        bail!("no shards");
+    }
+    let tail = &shards[0].shape()[1..];
+    let precision = shards[0].precision();
+    let mut d0 = 0usize;
+    let mut data = Vec::new();
+    for s in shards {
+        if &s.shape()[1..] != tail {
+            bail!("inconsistent shard shapes");
+        }
+        d0 += s.shape()[0];
+        data.extend_from_slice(s.data());
+    }
+    let mut shape = vec![d0];
+    shape.extend_from_slice(tail);
+    Ok(Field::new(&shape, data, precision))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Precision;
+
+    fn field_3d() -> Field {
+        let data: Vec<f64> = (0..5 * 4 * 3).map(|i| i as f64).collect();
+        Field::new(&[5, 4, 3], data, Precision::Single)
+    }
+
+    #[test]
+    fn roundtrip_even_and_uneven() {
+        let f = field_3d();
+        for k in [1usize, 2, 3, 5, 10] {
+            let shards = shard_field(&f, k);
+            assert!(shards.len() <= 5);
+            let g = unshard_field(&shards).unwrap();
+            assert_eq!(f, g);
+        }
+    }
+
+    #[test]
+    fn shard_extents_balanced() {
+        let f = field_3d();
+        let shards = shard_field(&f, 2);
+        assert_eq!(shards[0].shape()[0], 3);
+        assert_eq!(shards[1].shape()[0], 2);
+    }
+
+    #[test]
+    fn mismatched_shards_rejected() {
+        let a = Field::zeros(&[2, 3], Precision::Double);
+        let b = Field::zeros(&[2, 4], Precision::Double);
+        assert!(unshard_field(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn empty_shard_list_rejected() {
+        assert!(unshard_field(&[]).is_err());
+    }
+}

@@ -1,0 +1,572 @@
+//! Compaction, quantization, and lossless coding of FFCz edits
+//! (paper §IV-B "Compaction, quantization, and lossless compression").
+//!
+//! Each edit stream (spatial: real, frequency: complex) is stored as
+//! * a bit-packed *flag* vector marking nonzero components,
+//! * a *compact* vector of the nonzero values, quantized to `m`-bit
+//!   integers on a uniform grid scaled to the stream's max magnitude,
+//! * everything entropy-coded with canonical Huffman followed by ZSTD.
+//!
+//! Dequantization is exactly reproducible (grid index × step), so encoder
+//! and decoder agree bit-for-bit on the applied edits — the encoder
+//! verifies the dual bounds against the *dequantized* edits before
+//! committing (see `correction::compress`).
+
+use anyhow::{bail, Result};
+
+use crate::encoding::{
+    huffman_decode, huffman_encode, lossless_compress, lossless_decompress, pack_flags,
+    unpack_flags, varint,
+};
+use crate::fourier::Complex;
+
+/// Quantization code length in bits (paper fixes m = 16).
+pub const QUANT_BITS: u32 = 16;
+const QMAX: i64 = (1 << (QUANT_BITS - 1)) - 1; // 32767
+
+/// A quantized sparse real-valued edit stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedEdits {
+    /// Total length of the (dense) edit vector.
+    pub n: usize,
+    /// Quantization step (0 ⇒ stream is all-zero).
+    pub step: f64,
+    /// Indices of nonzero entries (ascending).
+    pub idx: Vec<u32>,
+    /// Quantized values at those indices (grid index, never 0).
+    pub q: Vec<i32>,
+}
+
+impl QuantizedEdits {
+    /// Quantize a dense edit vector. Values round to the nearest grid
+    /// point; values that round to grid index 0 are dropped (their effect
+    /// is below half a quantization step).
+    pub fn quantize(edits: &[f64]) -> Self {
+        let n = edits.len();
+        let max_abs = edits.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+        if max_abs == 0.0 {
+            return Self {
+                n,
+                step: 0.0,
+                idx: Vec::new(),
+                q: Vec::new(),
+            };
+        }
+        let step = max_abs / QMAX as f64;
+        let mut idx = Vec::new();
+        let mut q = Vec::new();
+        for (i, &v) in edits.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let g = (v / step).round() as i64;
+            if g == 0 {
+                continue;
+            }
+            idx.push(i as u32);
+            q.push(g.clamp(-QMAX, QMAX) as i32);
+        }
+        Self { n, step, idx, q }
+    }
+
+    /// Reconstruct the dense edit vector.
+    pub fn dequantize(&self) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.n];
+        for (&i, &g) in self.idx.iter().zip(&self.q) {
+            out[i as usize] = g as f64 * self.step;
+        }
+        out
+    }
+
+    /// Number of active (nonzero) edits.
+    pub fn active(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Serialize: flags (packed+zstd) + quantized values (huffman+zstd).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        varint::write(&mut out, self.n as u64);
+        out.extend_from_slice(&self.step.to_le_bytes());
+        varint::write(&mut out, self.idx.len() as u64);
+        if self.idx.is_empty() {
+            return out;
+        }
+        // Flags.
+        let mut flags = vec![false; self.n];
+        for &i in &self.idx {
+            flags[i as usize] = true;
+        }
+        let enc_flags = lossless_compress(&pack_flags(&flags));
+        varint::write(&mut out, enc_flags.len() as u64);
+        out.extend_from_slice(&enc_flags);
+        // Values: map i32 grid index to u16 symbols via zigzag (fits by
+        // construction: |g| ≤ 32767 ⇒ zigzag < 65536).
+        let syms: Vec<u16> = self.q.iter().map(|&g| varint::zigzag(g as i64) as u16).collect();
+        let enc_vals = lossless_compress(&huffman_encode(&syms));
+        varint::write(&mut out, enc_vals.len() as u64);
+        out.extend_from_slice(&enc_vals);
+        out
+    }
+
+    /// Inverse of [`QuantizedEdits::to_bytes`].
+    pub fn from_bytes(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let n = varint::read(buf, pos)? as usize;
+        if *pos + 8 > buf.len() {
+            bail!("truncated edit stream header");
+        }
+        let step = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+        *pos += 8;
+        let count = varint::read(buf, pos)? as usize;
+        if count == 0 {
+            return Ok(Self {
+                n,
+                step,
+                idx: Vec::new(),
+                q: Vec::new(),
+            });
+        }
+        let flen = varint::read(buf, pos)? as usize;
+        if *pos + flen > buf.len() {
+            bail!("truncated flag section");
+        }
+        let packed = lossless_decompress(&buf[*pos..*pos + flen])?;
+        *pos += flen;
+        let flags = unpack_flags(&packed, n);
+        let idx: Vec<u32> = flags
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f)
+            .map(|(i, _)| i as u32)
+            .collect();
+        if idx.len() != count {
+            bail!("flag count {} != stored count {}", idx.len(), count);
+        }
+        let vlen = varint::read(buf, pos)? as usize;
+        if *pos + vlen > buf.len() {
+            bail!("truncated value section");
+        }
+        let syms = huffman_decode(&lossless_decompress(&buf[*pos..*pos + vlen])?, count)?;
+        *pos += vlen;
+        let q: Vec<i32> = syms
+            .into_iter()
+            .map(|s| varint::unzigzag(s as u64) as i32)
+            .collect();
+        Ok(Self { n, step, idx, q })
+    }
+}
+
+/// Quantized complex (frequency-domain) edit stream: shared flags, two
+/// value planes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedComplexEdits {
+    pub re: QuantizedEdits,
+    pub im: QuantizedEdits,
+}
+
+impl QuantizedComplexEdits {
+    pub fn quantize(edits: &[Complex]) -> Self {
+        let re: Vec<f64> = edits.iter().map(|c| c.re).collect();
+        let im: Vec<f64> = edits.iter().map(|c| c.im).collect();
+        Self {
+            re: QuantizedEdits::quantize(&re),
+            im: QuantizedEdits::quantize(&im),
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<Complex> {
+        let re = self.re.dequantize();
+        let im = self.im.dequantize();
+        re.into_iter()
+            .zip(im)
+            .map(|(r, i)| Complex::new(r, i))
+            .collect()
+    }
+
+    /// Components with a nonzero edit in either plane.
+    pub fn active(&self) -> usize {
+        // idx lists are sorted: merge-count the union.
+        let (a, b) = (&self.re.idx, &self.im.idx);
+        let (mut i, mut j, mut count) = (0usize, 0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            count += 1;
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        count + (a.len() - i) + (b.len() - j)
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = self.re.to_bytes();
+        out.extend_from_slice(&self.im.to_bytes());
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let re = QuantizedEdits::from_bytes(buf, pos)?;
+        let im = QuantizedEdits::from_bytes(buf, pos)?;
+        Ok(Self { re, im })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn sparse_edits(n: usize, density: f64, amp: f64, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift::new(seed);
+        (0..n)
+            .map(|_| {
+                if rng.next_f64() < density {
+                    rng.uniform(-amp, amp)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantize_error_within_half_step() {
+        let edits = sparse_edits(1000, 0.05, 0.3, 1);
+        let q = QuantizedEdits::quantize(&edits);
+        let deq = q.dequantize();
+        for (a, b) in edits.iter().zip(&deq) {
+            assert!((a - b).abs() <= q.step / 2.0 + 1e-15);
+        }
+    }
+
+    #[test]
+    fn all_zero_stream_is_trivial() {
+        let q = QuantizedEdits::quantize(&[0.0; 100]);
+        assert_eq!(q.active(), 0);
+        assert_eq!(q.step, 0.0);
+        assert_eq!(q.dequantize(), vec![0.0; 100]);
+        let bytes = q.to_bytes();
+        let mut pos = 0;
+        let q2 = QuantizedEdits::from_bytes(&bytes, &mut pos).unwrap();
+        assert_eq!(q, q2);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let edits = sparse_edits(4096, 0.02, 1.5, 2);
+        let q = QuantizedEdits::quantize(&edits);
+        let bytes = q.to_bytes();
+        let mut pos = 0;
+        let q2 = QuantizedEdits::from_bytes(&bytes, &mut pos).unwrap();
+        assert_eq!(pos, bytes.len());
+        assert_eq!(q, q2);
+        assert_eq!(q.dequantize(), q2.dequantize());
+    }
+
+    #[test]
+    fn complex_roundtrip_and_active_union() {
+        let n = 512;
+        let mut rng = XorShift::new(3);
+        let edits: Vec<Complex> = (0..n)
+            .map(|i| {
+                let re = if i % 7 == 0 { rng.normal() } else { 0.0 };
+                let im = if i % 5 == 0 { rng.normal() } else { 0.0 };
+                Complex::new(re, im)
+            })
+            .collect();
+        let q = QuantizedComplexEdits::quantize(&edits);
+        let expect_active = edits.iter().filter(|c| c.re != 0.0 || c.im != 0.0).count();
+        assert_eq!(q.active(), expect_active);
+        let bytes = q.to_bytes();
+        let mut pos = 0;
+        let q2 = QuantizedComplexEdits::from_bytes(&bytes, &mut pos).unwrap();
+        assert_eq!(q, q2);
+    }
+
+    #[test]
+    fn sparse_streams_are_compact() {
+        // 10 active edits in a 100k vector must cost ≪ dense storage.
+        let mut edits = vec![0.0f64; 100_000];
+        let mut rng = XorShift::new(4);
+        for _ in 0..10 {
+            edits[rng.below(100_000)] = rng.normal();
+        }
+        let bytes = QuantizedEdits::quantize(&edits).to_bytes();
+        assert!(bytes.len() < 2500, "sparse stream {} B", bytes.len());
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let edits = sparse_edits(256, 0.1, 1.0, 5);
+        let bytes = QuantizedEdits::quantize(&edits).to_bytes();
+        let mut pos = 0;
+        assert!(QuantizedEdits::from_bytes(&bytes[..bytes.len() / 2], &mut pos).is_err());
+    }
+}
+
+/// Frequency-edit stream for **pointwise** bounds (power-spectrum mode).
+///
+/// A single global quantization step is untenable when `Δ_k` spans many
+/// decades: components with tiny bounds need steps far below the global
+/// `max|edit|/2¹⁵` grid. This stream stores, per active component, a
+/// power-of-two step exponent tied to its own bound
+/// (`s_k = base_step·2^{e_k} ≤ Δ_k·gap`), plus unbounded zigzag-varint
+/// grid indices for Re/Im. Everything is self-contained — the decoder
+/// needs no knowledge of the bounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointwiseQuantizedEdits {
+    pub n: usize,
+    /// Smallest representable step (exponent 0).
+    pub base_step: f64,
+    /// Active component indices (ascending).
+    pub idx: Vec<u32>,
+    /// Per-component power-of-two step exponents.
+    pub step_exp: Vec<u8>,
+    /// Grid indices for Re/Im at the active components.
+    pub q_re: Vec<i64>,
+    pub q_im: Vec<i64>,
+}
+
+impl PointwiseQuantizedEdits {
+    /// Quantize a dense complex edit vector against pointwise bounds:
+    /// each active component gets the largest power-of-two step
+    /// `≤ bound_at(k)·gap`, so dequantization error ≤ `Δ_k·gap/2`.
+    pub fn quantize(
+        edits: &[Complex],
+        bound_at: impl Fn(usize) -> f64,
+        gap: f64,
+    ) -> Self {
+        let n = edits.len();
+        // base_step: half the smallest active bound·gap (exponent ≥ 0).
+        let mut min_target = f64::INFINITY;
+        for (k, e) in edits.iter().enumerate() {
+            if e.re != 0.0 || e.im != 0.0 {
+                min_target = min_target.min(bound_at(k) * gap);
+            }
+        }
+        if !min_target.is_finite() {
+            return Self {
+                n,
+                base_step: 0.0,
+                idx: Vec::new(),
+                step_exp: Vec::new(),
+                q_re: Vec::new(),
+                q_im: Vec::new(),
+            };
+        }
+        let base_step = (min_target / 2.0).max(f64::MIN_POSITIVE);
+        let mut idx = Vec::new();
+        let mut step_exp = Vec::new();
+        let mut q_re = Vec::new();
+        let mut q_im = Vec::new();
+        for (k, e) in edits.iter().enumerate() {
+            if e.re == 0.0 && e.im == 0.0 {
+                continue;
+            }
+            let target = bound_at(k) * gap;
+            let exp = ((target / base_step).log2().floor().max(0.0) as u32).min(255);
+            let s = base_step * (2.0f64).powi(exp as i32);
+            let gr = (e.re / s).round() as i64;
+            let gi = (e.im / s).round() as i64;
+            if gr == 0 && gi == 0 {
+                continue;
+            }
+            idx.push(k as u32);
+            step_exp.push(exp as u8);
+            q_re.push(gr);
+            q_im.push(gi);
+        }
+        Self {
+            n,
+            base_step,
+            idx,
+            step_exp,
+            q_re,
+            q_im,
+        }
+    }
+
+    /// Reconstruct the dense edit vector (fully self-contained).
+    pub fn dequantize(&self) -> Vec<Complex> {
+        let mut out = vec![Complex::ZERO; self.n];
+        for (((&k, &e), &gr), &gi) in self
+            .idx
+            .iter()
+            .zip(&self.step_exp)
+            .zip(&self.q_re)
+            .zip(&self.q_im)
+        {
+            let s = self.base_step * (2.0f64).powi(e as i32);
+            out[k as usize] = Complex::new(gr as f64 * s, gi as f64 * s);
+        }
+        out
+    }
+
+    pub fn active(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        varint::write(&mut out, self.n as u64);
+        out.extend_from_slice(&self.base_step.to_le_bytes());
+        varint::write(&mut out, self.idx.len() as u64);
+        if self.idx.is_empty() {
+            return out;
+        }
+        let mut flags = vec![false; self.n];
+        for &i in &self.idx {
+            flags[i as usize] = true;
+        }
+        let enc_flags = lossless_compress(&pack_flags(&flags));
+        varint::write(&mut out, enc_flags.len() as u64);
+        out.extend_from_slice(&enc_flags);
+        let enc_exp = lossless_compress(&self.step_exp);
+        varint::write(&mut out, enc_exp.len() as u64);
+        out.extend_from_slice(&enc_exp);
+        let mut vals = Vec::new();
+        for &g in self.q_re.iter().chain(&self.q_im) {
+            varint::write(&mut vals, varint::zigzag(g));
+        }
+        let enc_vals = lossless_compress(&vals);
+        varint::write(&mut out, enc_vals.len() as u64);
+        out.extend_from_slice(&enc_vals);
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let n = varint::read(buf, pos)? as usize;
+        if *pos + 8 > buf.len() {
+            bail!("truncated pointwise edit header");
+        }
+        let base_step = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+        *pos += 8;
+        let count = varint::read(buf, pos)? as usize;
+        if count == 0 {
+            return Ok(Self {
+                n,
+                base_step,
+                idx: Vec::new(),
+                step_exp: Vec::new(),
+                q_re: Vec::new(),
+                q_im: Vec::new(),
+            });
+        }
+        let flen = varint::read(buf, pos)? as usize;
+        if *pos + flen > buf.len() {
+            bail!("truncated pointwise flags");
+        }
+        let flags = unpack_flags(&lossless_decompress(&buf[*pos..*pos + flen])?, n);
+        *pos += flen;
+        let idx: Vec<u32> = flags
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f)
+            .map(|(i, _)| i as u32)
+            .collect();
+        if idx.len() != count {
+            bail!("pointwise flag count mismatch");
+        }
+        let elen = varint::read(buf, pos)? as usize;
+        if *pos + elen > buf.len() {
+            bail!("truncated step exponents");
+        }
+        let step_exp = lossless_decompress(&buf[*pos..*pos + elen])?;
+        *pos += elen;
+        if step_exp.len() != count {
+            bail!("step exponent count mismatch");
+        }
+        let vlen = varint::read(buf, pos)? as usize;
+        if *pos + vlen > buf.len() {
+            bail!("truncated pointwise values");
+        }
+        let vals = lossless_decompress(&buf[*pos..*pos + vlen])?;
+        *pos += vlen;
+        let mut vpos = 0usize;
+        let mut q_re = Vec::with_capacity(count);
+        for _ in 0..count {
+            q_re.push(varint::unzigzag(varint::read(&vals, &mut vpos)?));
+        }
+        let mut q_im = Vec::with_capacity(count);
+        for _ in 0..count {
+            q_im.push(varint::unzigzag(varint::read(&vals, &mut vpos)?));
+        }
+        Ok(Self {
+            n,
+            base_step,
+            idx,
+            step_exp,
+            q_re,
+            q_im,
+        })
+    }
+}
+
+#[cfg(test)]
+mod pointwise_tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn setup(n: usize, seed: u64) -> (Vec<Complex>, Vec<f64>) {
+        let mut rng = XorShift::new(seed);
+        let bounds: Vec<f64> = (0..n).map(|_| 10f64.powf(rng.uniform(-6.0, 0.0))).collect();
+        let edits: Vec<Complex> = bounds
+            .iter()
+            .map(|&b| {
+                if rng.next_f64() < 0.5 {
+                    // edits can be far larger than the local bound
+                    Complex::new(rng.normal() * b * 100.0, rng.normal() * b * 100.0)
+                } else {
+                    Complex::ZERO
+                }
+            })
+            .collect();
+        (edits, bounds)
+    }
+
+    #[test]
+    fn error_within_local_bound_gap() {
+        let (edits, bounds) = setup(2048, 1);
+        let gap = 2.0f64.powi(-7);
+        let q = PointwiseQuantizedEdits::quantize(&edits, |k| bounds[k], gap);
+        let deq = q.dequantize();
+        for (k, (a, b)) in edits.iter().zip(&deq).enumerate() {
+            let tol = bounds[k] * gap / 2.0 + 1e-300;
+            assert!((a.re - b.re).abs() <= tol, "k={k}");
+            assert!((a.im - b.im).abs() <= tol, "k={k}");
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let (edits, bounds) = setup(4096, 2);
+        let q = PointwiseQuantizedEdits::quantize(&edits, |k| bounds[k], 1e-2);
+        let bytes = q.to_bytes();
+        let mut pos = 0;
+        let q2 = PointwiseQuantizedEdits::from_bytes(&bytes, &mut pos).unwrap();
+        assert_eq!(pos, bytes.len());
+        assert_eq!(q, q2);
+    }
+
+    #[test]
+    fn dense_edits_cost_few_bytes_per_component() {
+        let (edits, bounds) = setup(8192, 3);
+        let q = PointwiseQuantizedEdits::quantize(&edits, |k| bounds[k], 1e-2);
+        let bytes = q.to_bytes();
+        let per = bytes.len() as f64 / q.active() as f64;
+        assert!(per < 8.0, "bytes/active {per:.1}");
+    }
+
+    #[test]
+    fn empty_stream_roundtrip() {
+        let q = PointwiseQuantizedEdits::quantize(&[], |_| 1.0, 1e-2);
+        let bytes = q.to_bytes();
+        let mut pos = 0;
+        let q2 = PointwiseQuantizedEdits::from_bytes(&bytes, &mut pos).unwrap();
+        assert_eq!(q, q2);
+    }
+}

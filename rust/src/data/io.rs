@@ -1,0 +1,184 @@
+//! Raw binary field I/O in the SDRBench convention (flat little-endian
+//! f32/f64 arrays, shape supplied out of band), plus a small self-describing
+//! `.ffld` container used by the CLI so shapes travel with the data.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Field, Precision};
+
+const FFLD_MAGIC: &[u8; 4] = b"FFLD";
+
+/// Read a flat little-endian array (SDRBench style). `shape` and
+/// `precision` must be known by the caller.
+pub fn read_raw(path: &Path, shape: &[usize], precision: Precision) -> Result<Field> {
+    let n: usize = shape.iter().product();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let expect = n * precision.bytes();
+    if bytes.len() != expect {
+        bail!(
+            "{}: expected {} bytes for shape {:?} ({}), found {}",
+            path.display(),
+            expect,
+            shape,
+            precision.name(),
+            bytes.len()
+        );
+    }
+    let data = match precision {
+        Precision::Single => bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+            .collect(),
+        Precision::Double => bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+    };
+    Ok(Field::new(shape, data, precision))
+}
+
+/// Write a flat little-endian array in the field's source precision.
+pub fn write_raw(field: &Field, path: &Path) -> Result<()> {
+    let mut out = Vec::with_capacity(field.original_bytes());
+    match field.precision() {
+        Precision::Single => {
+            for &v in field.data() {
+                out.extend_from_slice(&(v as f32).to_le_bytes());
+            }
+        }
+        Precision::Double => {
+            for &v in field.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Serialize a field with shape metadata (`.ffld` container).
+pub fn write_ffld<W: Write>(field: &Field, mut w: W) -> Result<()> {
+    w.write_all(FFLD_MAGIC)?;
+    w.write_all(&[match field.precision() {
+        Precision::Single => 0u8,
+        Precision::Double => 1u8,
+    }])?;
+    w.write_all(&(field.ndim() as u32).to_le_bytes())?;
+    for &d in field.shape() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    for &v in field.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Deserialize a `.ffld` container.
+pub fn read_ffld<R: Read>(mut r: R) -> Result<Field> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != FFLD_MAGIC {
+        bail!("not an FFLD container");
+    }
+    let mut b1 = [0u8; 1];
+    r.read_exact(&mut b1)?;
+    let precision = match b1[0] {
+        0 => Precision::Single,
+        1 => Precision::Double,
+        x => bail!("bad precision tag {x}"),
+    };
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let ndim = u32::from_le_bytes(b4) as usize;
+    if ndim == 0 || ndim > 8 {
+        bail!("unreasonable ndim {ndim}");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    let mut b8 = [0u8; 8];
+    for _ in 0..ndim {
+        r.read_exact(&mut b8)?;
+        shape.push(u64::from_le_bytes(b8) as usize);
+    }
+    let n: usize = shape.iter().product();
+    let mut data = Vec::with_capacity(n);
+    for _ in 0..n {
+        r.read_exact(&mut b8)?;
+        data.push(f64::from_le_bytes(b8));
+    }
+    Ok(Field::new(&shape, data, precision))
+}
+
+/// Convenience: write `.ffld` to a path.
+pub fn save(field: &Field, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    write_ffld(field, std::io::BufWriter::new(f))
+}
+
+/// Convenience: read `.ffld` from a path.
+pub fn load(path: &Path) -> Result<Field> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    read_ffld(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_field() -> Field {
+        Field::new(
+            &[2, 3],
+            vec![1.0, -2.5, 3.25, 0.0, 1e-8, 4.75],
+            Precision::Single,
+        )
+    }
+
+    #[test]
+    fn ffld_roundtrip() {
+        let f = sample_field();
+        let mut buf = Vec::new();
+        write_ffld(&f, &mut buf).unwrap();
+        let g = read_ffld(&buf[..]).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn ffld_rejects_bad_magic() {
+        let buf = b"NOPE12345678".to_vec();
+        assert!(read_ffld(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn raw_roundtrip_double() {
+        let dir = std::env::temp_dir().join("ffcz_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("raw_f64.bin");
+        let f = Field::new(&[4], vec![1.0, 2.0, -3.0, 4.5], Precision::Double);
+        write_raw(&f, &p).unwrap();
+        let g = read_raw(&p, &[4], Precision::Double).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn raw_roundtrip_single_loses_only_f32_precision() {
+        let dir = std::env::temp_dir().join("ffcz_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("raw_f32.bin");
+        let f = sample_field();
+        write_raw(&f, &p).unwrap();
+        let g = read_raw(&p, &[2, 3], Precision::Single).unwrap();
+        for (a, b) in f.data().iter().zip(g.data()) {
+            assert!((a - b).abs() <= (a.abs() * 1e-7).max(1e-12));
+        }
+    }
+
+    #[test]
+    fn raw_size_mismatch_errors() {
+        let dir = std::env::temp_dir().join("ffcz_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("short.bin");
+        std::fs::write(&p, [0u8; 10]).unwrap();
+        assert!(read_raw(&p, &[4], Precision::Double).is_err());
+    }
+}

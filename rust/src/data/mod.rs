@@ -1,0 +1,213 @@
+//! N-dimensional scalar fields and dataset utilities.
+//!
+//! [`Field`] is the crate-wide data container: a dense row-major n-d array
+//! of `f64` samples plus a [`Precision`] tag recording the precision of the
+//! *source* data (the tag determines how many bytes the uncompressed
+//! original occupies, which is what compression ratios are measured
+//! against — Nyx is single precision, S3D/HEDM/EEG are double, Table I).
+
+pub mod io;
+pub mod synth;
+
+/// Precision of the source dataset (affects original-size accounting only;
+/// all in-memory processing is done in f64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Single,
+    Double,
+}
+
+impl Precision {
+    /// Bytes per sample in the source representation.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::Single => 4,
+            Precision::Double => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Single => "single",
+            Precision::Double => "double",
+        }
+    }
+}
+
+/// A dense, row-major, n-dimensional scalar field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+    precision: Precision,
+}
+
+impl Field {
+    /// Create a field from raw data; panics if `data.len() != prod(shape)`.
+    pub fn new(shape: &[usize], data: Vec<f64>, precision: Precision) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(
+            n,
+            data.len(),
+            "shape {:?} implies {} samples, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        assert!(!shape.is_empty(), "field must have at least one dimension");
+        Self {
+            shape: shape.to_vec(),
+            data,
+            precision,
+        }
+    }
+
+    /// All-zero field.
+    pub fn zeros(shape: &[usize], precision: Precision) -> Self {
+        let n: usize = shape.iter().product();
+        Self::new(shape, vec![0.0; n], precision)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of samples.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Size of the *source* (uncompressed) representation in bytes.
+    pub fn original_bytes(&self) -> usize {
+        self.len() * self.precision.bytes()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Row-major linear index of a multi-index.
+    pub fn linear_index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut lin = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < d, "index {x} out of bounds for dim {i} ({d})");
+            lin = lin * d + x;
+        }
+        lin
+    }
+
+    /// Value range `(min, max)`; `(0, 0)` for empty fields.
+    pub fn value_range(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if lo > hi {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// `max - min`; used to turn relative error bounds into absolute ones.
+    pub fn value_span(&self) -> f64 {
+        let (lo, hi) = self.value_range();
+        hi - lo
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f64>() / self.data.len() as f64
+        }
+    }
+
+    /// A new field with the same shape/precision and the given data.
+    pub fn with_data(&self, data: Vec<f64>) -> Self {
+        Self::new(&self.shape, data, self.precision)
+    }
+
+    /// Extract a 2D slice (plane at `z` of the first axis) from a 3D field.
+    pub fn slice2d(&self, z: usize) -> Field {
+        assert_eq!(self.ndim(), 3, "slice2d requires a 3D field");
+        let (n1, n2) = (self.shape[1], self.shape[2]);
+        let plane = n1 * n2;
+        let start = z * plane;
+        Field::new(
+            &[n1, n2],
+            self.data[start..start + plane].to_vec(),
+            self.precision,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let f = Field::zeros(&[4, 3], Precision::Single);
+        assert_eq!(f.len(), 12);
+        assert_eq!(f.ndim(), 2);
+        assert_eq!(f.original_bytes(), 48);
+        assert_eq!(f.precision().name(), "single");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Field::new(&[2, 2], vec![0.0; 5], Precision::Double);
+    }
+
+    #[test]
+    fn linear_index_row_major() {
+        let f = Field::zeros(&[2, 3, 4], Precision::Double);
+        assert_eq!(f.linear_index(&[0, 0, 0]), 0);
+        assert_eq!(f.linear_index(&[0, 0, 3]), 3);
+        assert_eq!(f.linear_index(&[0, 1, 0]), 4);
+        assert_eq!(f.linear_index(&[1, 0, 0]), 12);
+        assert_eq!(f.linear_index(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn value_range_and_span() {
+        let f = Field::new(&[4], vec![-1.0, 2.0, 0.5, 1.5], Precision::Double);
+        assert_eq!(f.value_range(), (-1.0, 2.0));
+        assert_eq!(f.value_span(), 3.0);
+    }
+
+    #[test]
+    fn slice2d_extracts_plane() {
+        let data: Vec<f64> = (0..24).map(|x| x as f64).collect();
+        let f = Field::new(&[2, 3, 4], data, Precision::Double);
+        let s = f.slice2d(1);
+        assert_eq!(s.shape(), &[3, 4]);
+        assert_eq!(s.data()[0], 12.0);
+        assert_eq!(s.data()[11], 23.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! EEG-like 1D time series — the stand-in for the paper's EEG database.
+//!
+//! Continuous brain-activity recordings are a sum of band-limited rhythms
+//! (delta/theta/alpha/beta), 1/f "pink" background noise, and occasional
+//! high-amplitude artifacts (blinks). The frequency-banded structure is
+//! what the paper's EEG discussion (misinterpreting neural rhythms under
+//! spectral distortion) relies on.
+
+use crate::data::{Field, Precision};
+use crate::util::XorShift;
+
+pub struct EegBuilder {
+    samples: usize,
+    sample_rate: f64,
+    artifact_rate: f64,
+    seed: u64,
+}
+
+/// The classic EEG bands: (low Hz, high Hz, relative amplitude).
+const BANDS: [(f64, f64, f64); 4] = [
+    (0.5, 4.0, 40.0),  // delta
+    (4.0, 8.0, 20.0),  // theta
+    (8.0, 13.0, 30.0), // alpha
+    (13.0, 30.0, 8.0), // beta
+];
+
+impl EegBuilder {
+    pub fn new(samples: usize) -> Self {
+        Self {
+            samples,
+            sample_rate: 250.0,
+            artifact_rate: 0.05,
+            seed: 0,
+        }
+    }
+
+    pub fn sample_rate(mut self, hz: f64) -> Self {
+        self.sample_rate = hz;
+        self
+    }
+
+    /// Expected artifacts per second.
+    pub fn artifact_rate(mut self, r: f64) -> Self {
+        self.artifact_rate = r;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> Field {
+        let n = self.samples;
+        let mut rng = XorShift::new(self.seed ^ 0xEE6);
+        let dt = 1.0 / self.sample_rate;
+        let mut sig = vec![0.0f64; n];
+
+        // Band rhythms: a handful of drifting oscillators per band.
+        for &(lo, hi, amp) in &BANDS {
+            for _ in 0..3 {
+                let f = rng.uniform(lo, hi);
+                let phase = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+                let a = amp * rng.uniform(0.5, 1.0) / 3.0;
+                // Slow amplitude modulation (waxing/waning of rhythms).
+                let fm = rng.uniform(0.05, 0.3);
+                let pm = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+                for (i, s) in sig.iter_mut().enumerate() {
+                    let t = i as f64 * dt;
+                    let env = 0.5 * (1.0 + (2.0 * std::f64::consts::PI * fm * t + pm).sin());
+                    *s += a * env * (2.0 * std::f64::consts::PI * f * t + phase).sin();
+                }
+            }
+        }
+
+        // Pink-ish background noise via a leaky integrator over white noise.
+        let mut state = 0.0;
+        for s in sig.iter_mut() {
+            state = 0.98 * state + rng.normal() * 2.0;
+            *s += state;
+        }
+
+        // Blink artifacts: sparse, high-amplitude, slow bumps.
+        let expected = self.artifact_rate * n as f64 * dt;
+        let n_artifacts = expected.round() as usize;
+        for _ in 0..n_artifacts {
+            let center = rng.below(n);
+            let width = (0.2 * self.sample_rate) as i64; // 200 ms
+            let amp = rng.uniform(80.0, 150.0);
+            for d in -width..=width {
+                let i = center as i64 + d;
+                if i < 0 || i >= n as i64 {
+                    continue;
+                }
+                let x = d as f64 / width as f64;
+                sig[i as usize] += amp * (-4.0 * x * x).exp();
+            }
+        }
+        Field::new(&[n], sig, Precision::Double)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fourier::power_spectrum;
+
+    #[test]
+    fn alpha_band_is_prominent() {
+        // With a 250 Hz rate and n samples, FFT bin k maps to k·250/n Hz.
+        let n = 8192;
+        let f = EegBuilder::new(n).artifact_rate(0.0).seed(1).build();
+        let ps = power_spectrum(&f);
+        let hz = |k: usize| k as f64 * 250.0 / n as f64;
+        let band_power = |lo: f64, hi: f64| -> f64 {
+            (1..ps.len())
+                .filter(|&k| hz(k) >= lo && hz(k) < hi)
+                .map(|k| ps.power[k])
+                .sum()
+        };
+        let alpha = band_power(8.0, 13.0) / (13.0 - 8.0);
+        let gamma = band_power(35.0, 60.0) / (60.0 - 35.0);
+        assert!(alpha / gamma > 5.0, "alpha/gamma = {}", alpha / gamma);
+    }
+
+    #[test]
+    fn artifacts_add_outliers() {
+        let quiet = EegBuilder::new(4096).artifact_rate(0.0).seed(2).build();
+        let blinky = EegBuilder::new(4096).artifact_rate(1.0).seed(2).build();
+        assert!(blinky.value_span() > quiet.value_span());
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = EegBuilder::new(1024).seed(3).build();
+        let b = EegBuilder::new(1024).seed(3).build();
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -1,0 +1,147 @@
+//! Turbulence-like scalar fields — the stand-in for S3D combustion species.
+//!
+//! A Kolmogorov-style spectrum: flat energy-containing range up to `k_L`,
+//! inertial `k^{-5/3}` range, and an exponential dissipation tail
+//! (`P(k) ∝ e^{-k/k_d}` at high k, the "smooth field" signature the paper
+//! cites). The field is strictly positive (species mass fractions) via an
+//! affine map to `[floor, floor + span]`, and double precision like S3D.
+
+use crate::data::{Field, Precision};
+use crate::fourier::{fftn, ifftn, signed_freq, Complex};
+use crate::util::XorShift;
+
+pub struct TurbulenceBuilder {
+    shape: Vec<usize>,
+    k_energy: f64,
+    k_dissipation_frac: f64,
+    floor: f64,
+    span: f64,
+    seed: u64,
+}
+
+impl TurbulenceBuilder {
+    pub fn new(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            k_energy: 4.0,
+            k_dissipation_frac: 0.3,
+            floor: 0.01,
+            span: 0.2,
+            seed: 0,
+        }
+    }
+
+    /// Wavenumber of the energy-containing scales.
+    pub fn energy_scale(mut self, k: f64) -> Self {
+        self.k_energy = k;
+        self
+    }
+
+    /// Dissipation wavenumber as a fraction of Nyquist.
+    pub fn dissipation_frac(mut self, f: f64) -> Self {
+        self.k_dissipation_frac = f;
+        self
+    }
+
+    /// Output value range `[floor, floor + span]` (mass-fraction-like).
+    pub fn range(mut self, floor: f64, span: f64) -> Self {
+        self.floor = floor;
+        self.span = span;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> Field {
+        let n: usize = self.shape.iter().product();
+        let mut rng = XorShift::new(self.seed ^ 0x7EB0);
+        let noise: Vec<Complex> = (0..n).map(|_| Complex::new(rng.normal(), 0.0)).collect();
+        let mut spec = fftn(&noise, &self.shape);
+
+        let k_nyq = self
+            .shape
+            .iter()
+            .map(|&d| (d / 2) as f64)
+            .fold(0.0f64, |a, b| a.max(b));
+        let kd = (self.k_dissipation_frac * k_nyq).max(1e-9);
+        let ndim = self.shape.len();
+        let mut idx = vec![0usize; ndim];
+        for v in spec.iter_mut() {
+            let mut k2 = 0.0;
+            for d in 0..ndim {
+                let f = signed_freq(idx[d], self.shape[d]) as f64;
+                k2 += f * f;
+            }
+            let k = k2.sqrt();
+            let amp = if k == 0.0 {
+                0.0
+            } else {
+                // von Kármán-like blend: flat below k_energy, -5/3 above,
+                // exponential dissipation tail.
+                let inertial = (1.0 + (k / self.k_energy).powi(2)).powf(-5.0 / 12.0);
+                let dissip = (-0.5 * k / kd).exp();
+                inertial * dissip
+            };
+            *v = v.scale(amp);
+            for d in (0..ndim).rev() {
+                idx[d] += 1;
+                if idx[d] < self.shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        let real = ifftn(&spec, &self.shape);
+        let mut g: Vec<f64> = real.iter().map(|c| c.re).collect();
+
+        // Affine map to [floor, floor+span].
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in &g {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let scale = if hi > lo { self.span / (hi - lo) } else { 0.0 };
+        for x in g.iter_mut() {
+            *x = self.floor + (*x - lo) * scale;
+        }
+        Field::new(&self.shape, g, Precision::Double)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fourier::power_spectrum;
+
+    #[test]
+    fn positive_and_bounded() {
+        let f = TurbulenceBuilder::new(&[24, 24, 24])
+            .range(0.05, 0.3)
+            .seed(2)
+            .build();
+        let (lo, hi) = f.value_range();
+        assert!(lo >= 0.05 - 1e-12 && hi <= 0.35 + 1e-12);
+        assert_eq!(f.precision(), Precision::Double);
+    }
+
+    #[test]
+    fn spectrum_decays_at_high_k() {
+        let f = TurbulenceBuilder::new(&[64, 64]).seed(3).build();
+        let ps = power_spectrum(&f);
+        // Per-mode power at k=4 must dominate k=24 by a large factor
+        // (inertial + dissipation decay).
+        let p4 = ps.power[4] / ps.count[4] as f64;
+        let p24 = ps.power[24] / ps.count[24] as f64;
+        assert!(p4 / p24 > 30.0, "p4/p24 = {}", p4 / p24);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = TurbulenceBuilder::new(&[16, 16, 16]).seed(8).build();
+        let b = TurbulenceBuilder::new(&[16, 16, 16]).seed(8).build();
+        assert_eq!(a.data(), b.data());
+    }
+}

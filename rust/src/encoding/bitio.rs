@@ -1,0 +1,159 @@
+//! MSB-first bit-stream reader/writer.
+
+/// Write bits into a growing byte buffer, most-significant bit first.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits currently staged in `acc` (0..8).
+    nbits: u32,
+    acc: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `n` bits of `value` (n ≤ 64), MSB first.
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        let mut rem = n;
+        while rem > 0 {
+            let take = (8 - self.nbits).min(rem);
+            let shift = rem - take;
+            let bits = ((value >> shift) & ((1u64 << take) - 1)) as u8;
+            // nbits + take ≤ 8, so the high bits shifted out are zero.
+            self.acc = (((self.acc as u16) << take) as u8) | bits;
+            self.nbits += take;
+            rem -= take;
+            if self.nbits == 8 {
+                self.buf.push(self.acc);
+                self.acc = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    /// Append a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush and return the byte buffer (final partial byte zero-padded).
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.acc <<= 8 - self.nbits;
+            self.buf.push(self.acc);
+        }
+        self.buf
+    }
+}
+
+/// Read bits from a byte slice, MSB first.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Read `n` bits (n ≤ 64) as the low bits of a u64. Returns `None` if
+    /// the stream is exhausted.
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        if self.pos + n as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut rem = n;
+        while rem > 0 {
+            let byte = self.buf[self.pos / 8];
+            let offset = (self.pos % 8) as u32;
+            let avail = 8 - offset;
+            let take = avail.min(rem);
+            let bits = (byte >> (avail - take)) & ((1u16 << take) - 1) as u8;
+            out = (out << take) | bits as u64;
+            self.pos += take as usize;
+            rem -= take;
+        }
+        Some(out)
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read_bits(1).map(|b| b != 0)
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn roundtrip_fixed_widths() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFFFF, 16);
+        w.write_bits(0, 1);
+        w.write_bits(0x123456789ABCDEF0, 64);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        assert_eq!(r.read_bits(1).unwrap(), 0);
+        assert_eq!(r.read_bits(64).unwrap(), 0x123456789ABCDEF0);
+    }
+
+    #[test]
+    fn roundtrip_random_widths() {
+        let mut rng = XorShift::new(11);
+        let items: Vec<(u64, u32)> = (0..500)
+            .map(|_| {
+                let n = 1 + rng.below(64) as u32;
+                let v = rng.next_u64() & (u64::MAX >> (64 - n));
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1, 1);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(8).unwrap(), 0b1000_0000);
+        assert!(r.read_bits(1).is_none());
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        w.write_bits(0, 13);
+        assert_eq!(w.bit_len(), 13);
+        assert_eq!(w.finish().len(), 2);
+    }
+}

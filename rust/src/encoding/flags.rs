@@ -1,0 +1,51 @@
+//! Bit-packed binary flag vectors.
+//!
+//! The paper stores the positions of non-zero edits as "binary vectors of
+//! length N … packed into 8-bit integers" (§IV-B). This module packs a
+//! `&[bool]` into bytes (MSB-first within each byte) and back.
+
+/// Pack booleans into bytes, 8 per byte, MSB first.
+pub fn pack_flags(flags: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; flags.len().div_ceil(8)];
+    for (i, &f) in flags.iter().enumerate() {
+        if f {
+            out[i / 8] |= 0x80 >> (i % 8);
+        }
+    }
+    out
+}
+
+/// Unpack `n` booleans from a packed buffer.
+pub fn unpack_flags(packed: &[u8], n: usize) -> Vec<bool> {
+    assert!(packed.len() * 8 >= n, "packed buffer too short");
+    (0..n).map(|i| packed[i / 8] & (0x80 >> (i % 8)) != 0).collect()
+}
+
+/// Count set flags without unpacking.
+pub fn count_set(packed: &[u8]) -> usize {
+    packed.iter().map(|b| b.count_ones() as usize).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn roundtrip_various_lengths() {
+        let mut rng = XorShift::new(1);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 1000] {
+            let flags: Vec<bool> = (0..n).map(|_| rng.next_f64() < 0.3).collect();
+            let packed = pack_flags(&flags);
+            assert_eq!(packed.len(), n.div_ceil(8));
+            assert_eq!(unpack_flags(&packed, n), flags);
+        }
+    }
+
+    #[test]
+    fn count_matches() {
+        let flags = vec![true, false, true, true, false, false, false, true, true];
+        let packed = pack_flags(&flags);
+        assert_eq!(count_set(&packed), 5);
+    }
+}

@@ -1,0 +1,321 @@
+//! Canonical Huffman coding over `u16` symbols.
+//!
+//! The paper compresses quantized edits with "Huffman coding followed by
+//! ZSTD" (§IV-B); this module is the Huffman half. Codes are *canonical*:
+//! the header stores only the bit length of each present symbol, and both
+//! sides rebuild identical codebooks from the lengths. Code lengths are
+//! capped at [`MAX_CODE_LEN`] via the standard depth-limiting fixup.
+//!
+//! Header layout:
+//! `[varint n_symbols][varint payload_bit_len]` then for each present
+//! symbol `[varint symbol][6-bit length]`, then the bit payload.
+
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Result};
+
+use super::bitio::{BitReader, BitWriter};
+use super::varint;
+
+/// Maximum Huffman code length (fits the u32 decode accumulator easily).
+pub const MAX_CODE_LEN: u32 = 24;
+
+/// Encode a symbol stream. Returns a self-describing byte buffer.
+pub fn huffman_encode(symbols: &[u16]) -> Vec<u8> {
+    let mut out = Vec::new();
+    if symbols.is_empty() {
+        varint::write(&mut out, 0);
+        return out;
+    }
+    // Frequency table.
+    let mut freq: std::collections::HashMap<u16, u64> = std::collections::HashMap::new();
+    for &s in symbols {
+        *freq.entry(s).or_insert(0) += 1;
+    }
+    let lengths = code_lengths(&freq);
+    let codes = canonical_codes(&lengths);
+
+    // Header.
+    let mut present: Vec<(u16, u32)> = lengths.iter().map(|(&s, &l)| (s, l)).collect();
+    present.sort_unstable();
+    varint::write(&mut out, present.len() as u64);
+
+    // Payload bits. A single-symbol alphabet is fully described by the
+    // header (the decoder replicates the symbol), so the payload is empty.
+    let mut w = BitWriter::new();
+    if present.len() > 1 {
+        for &s in symbols {
+            let (code, len) = codes[&s];
+            w.write_bits(code as u64, len);
+        }
+    }
+    let bit_len = w.bit_len();
+    varint::write(&mut out, bit_len as u64);
+    for &(s, l) in &present {
+        varint::write(&mut out, s as u64);
+        out.push(l as u8);
+    }
+    out.extend_from_slice(&w.finish());
+    out
+}
+
+/// Decode a buffer produced by [`huffman_encode`]. `count` is the number of
+/// symbols expected (stored by the caller's container).
+pub fn huffman_decode(buf: &[u8], count: usize) -> Result<Vec<u16>> {
+    let mut pos = 0usize;
+    let n_symbols = varint::read(buf, &mut pos)? as usize;
+    if n_symbols == 0 {
+        if count != 0 {
+            bail!("empty huffman stream but {count} symbols expected");
+        }
+        return Ok(Vec::new());
+    }
+    let bit_len = varint::read(buf, &mut pos)? as usize;
+    let mut lengths: Vec<(u16, u32)> = Vec::with_capacity(n_symbols);
+    for _ in 0..n_symbols {
+        let s = varint::read(buf, &mut pos)? as u16;
+        if pos >= buf.len() {
+            bail!("truncated huffman header");
+        }
+        let l = buf[pos] as u32;
+        pos += 1;
+        if l == 0 || l > MAX_CODE_LEN {
+            bail!("invalid code length {l}");
+        }
+        lengths.push((s, l));
+    }
+
+    // Single-symbol degenerate stream: all symbols identical.
+    if n_symbols == 1 {
+        return Ok(vec![lengths[0].0; count]);
+    }
+
+    // Build canonical decode tables: first_code/first_index per length.
+    let map: std::collections::HashMap<u16, u32> = lengths.iter().cloned().collect();
+    let codes = canonical_codes(&map);
+    // symbol list ordered by (length, symbol) — canonical order.
+    let mut ordered: Vec<(u32, u16)> = lengths.iter().map(|&(s, l)| (l, s)).collect();
+    ordered.sort_unstable();
+    let max_len = ordered.last().unwrap().0;
+    let mut len_count = vec![0u32; (max_len + 2) as usize];
+    for &(l, _) in &ordered {
+        len_count[l as usize] += 1;
+    }
+    let mut first_code = vec![0u32; (max_len + 2) as usize];
+    let mut first_index = vec![0usize; (max_len + 2) as usize];
+    {
+        let mut idx = 0usize;
+        let mut code = 0u32;
+        for l in 1..=max_len {
+            first_code[l as usize] = code;
+            first_index[l as usize] = idx;
+            idx += len_count[l as usize] as usize;
+            code = (code + len_count[l as usize]) << 1;
+        }
+    }
+    let _ = codes;
+
+    let payload = &buf[pos..];
+    if bit_len > payload.len() * 8 {
+        bail!("truncated huffman payload");
+    }
+    let mut r = BitReader::new(payload);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut code = 0u32;
+        let mut l = 0u32;
+        loop {
+            let bit = match r.read_bit() {
+                Some(b) => b,
+                None => bail!("huffman payload exhausted"),
+            };
+            code = (code << 1) | bit as u32;
+            l += 1;
+            if l > max_len {
+                bail!("code longer than max length");
+            }
+            let cnt = len_count[l as usize] as usize;
+            if cnt > 0 {
+                let fc = first_code[l as usize];
+                if code >= fc && (code - fc) < cnt as u32 {
+                    let sym = ordered[first_index[l as usize] + (code - fc) as usize].1;
+                    out.push(sym);
+                    break;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Package-merge-free length computation: standard heap-based Huffman tree,
+/// then depth-limit fixup to `MAX_CODE_LEN` (Kraft-sum repair).
+fn code_lengths(freq: &std::collections::HashMap<u16, u64>) -> std::collections::HashMap<u16, u32> {
+    #[derive(PartialEq, Eq)]
+    struct Node {
+        weight: u64,
+        id: usize,
+    }
+    impl Ord for Node {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            // min-heap via reversed compare; tie-break on id for determinism
+            o.weight.cmp(&self.weight).then(o.id.cmp(&self.id))
+        }
+    }
+    impl PartialOrd for Node {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+
+    let mut syms: Vec<(u16, u64)> = freq.iter().map(|(&s, &f)| (s, f)).collect();
+    syms.sort_unstable();
+    let n = syms.len();
+    let mut out = std::collections::HashMap::new();
+    if n == 1 {
+        out.insert(syms[0].0, 1);
+        return out;
+    }
+
+    // parent pointers over 2n-1 nodes
+    let mut parent = vec![usize::MAX; 2 * n - 1];
+    let mut heap = BinaryHeap::new();
+    for (i, &(_, f)) in syms.iter().enumerate() {
+        heap.push(Node { weight: f, id: i });
+    }
+    let mut next = n;
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        parent[a.id] = next;
+        parent[b.id] = next;
+        heap.push(Node {
+            weight: a.weight + b.weight,
+            id: next,
+        });
+        next += 1;
+    }
+    // Depth of each leaf.
+    let mut lengths: Vec<u32> = (0..n)
+        .map(|i| {
+            let mut d = 0;
+            let mut j = i;
+            while parent[j] != usize::MAX {
+                j = parent[j];
+                d += 1;
+            }
+            d
+        })
+        .collect();
+
+    // Depth-limit fixup: clamp and repair the Kraft inequality.
+    if lengths.iter().any(|&l| l > MAX_CODE_LEN) {
+        for l in lengths.iter_mut() {
+            *l = (*l).min(MAX_CODE_LEN);
+        }
+        // Kraft sum in units of 2^-MAX_CODE_LEN.
+        let unit = 1u64 << MAX_CODE_LEN;
+        let mut kraft: u64 = lengths.iter().map(|&l| unit >> l).sum();
+        // While over-subscribed, lengthen the shortest-weight longest codes.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(lengths[i]));
+        while kraft > unit {
+            // find a symbol with length < MAX to lengthen (halves its cost)
+            let i = *order
+                .iter()
+                .find(|&&i| lengths[i] < MAX_CODE_LEN)
+                .expect("fixable");
+            kraft -= (unit >> lengths[i]) / 2;
+            lengths[i] += 1;
+            order.sort_by_key(|&i| std::cmp::Reverse(lengths[i]));
+        }
+    }
+    for (i, &(s, _)) in syms.iter().enumerate() {
+        out.insert(s, lengths[i]);
+    }
+    out
+}
+
+/// Canonical code assignment from lengths: symbols sorted by (length,
+/// symbol) get consecutive codes.
+fn canonical_codes(
+    lengths: &std::collections::HashMap<u16, u32>,
+) -> std::collections::HashMap<u16, (u32, u32)> {
+    let mut ordered: Vec<(u32, u16)> = lengths.iter().map(|(&s, &l)| (l, s)).collect();
+    ordered.sort_unstable();
+    let mut codes = std::collections::HashMap::new();
+    let mut code = 0u32;
+    let mut prev_len = 0u32;
+    for &(l, s) in &ordered {
+        code <<= l - prev_len;
+        codes.insert(s, (code, l));
+        code += 1;
+        prev_len = l;
+    }
+    codes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn roundtrip_simple() {
+        let syms = vec![1u16, 2, 2, 3, 3, 3, 3, 7, 7, 1];
+        let enc = huffman_encode(&syms);
+        let dec = huffman_decode(&enc, syms.len()).unwrap();
+        assert_eq!(syms, dec);
+    }
+
+    #[test]
+    fn roundtrip_empty_and_single() {
+        let enc = huffman_encode(&[]);
+        assert_eq!(huffman_decode(&enc, 0).unwrap(), Vec::<u16>::new());
+        let syms = vec![42u16; 1000];
+        let enc = huffman_encode(&syms);
+        assert!(enc.len() < 20, "degenerate stream should be tiny");
+        assert_eq!(huffman_decode(&enc, 1000).unwrap(), syms);
+    }
+
+    #[test]
+    fn roundtrip_random_skewed() {
+        let mut rng = XorShift::new(5);
+        // Geometric-ish distribution over 64 symbols.
+        let syms: Vec<u16> = (0..20_000)
+            .map(|_| {
+                let mut s = 0u16;
+                while rng.next_f64() < 0.5 && s < 63 {
+                    s += 1;
+                }
+                s
+            })
+            .collect();
+        let enc = huffman_encode(&syms);
+        let dec = huffman_decode(&enc, syms.len()).unwrap();
+        assert_eq!(syms, dec);
+        // Skewed data should compress well below 6 bits/symbol.
+        assert!(
+            (enc.len() * 8) as f64 / (syms.len() as f64) < 3.0,
+            "bits/sym {}",
+            (enc.len() * 8) as f64 / syms.len() as f64
+        );
+    }
+
+    #[test]
+    fn roundtrip_uniform_u16() {
+        let mut rng = XorShift::new(6);
+        let syms: Vec<u16> = (0..5000).map(|_| rng.next_u64() as u16).collect();
+        let enc = huffman_encode(&syms);
+        let dec = huffman_decode(&enc, syms.len()).unwrap();
+        assert_eq!(syms, dec);
+    }
+
+    #[test]
+    fn corrupt_stream_errors_not_panics() {
+        let syms = vec![1u16, 2, 3, 4, 5, 6, 7, 8];
+        let mut enc = huffman_encode(&syms);
+        enc.truncate(enc.len() / 2);
+        assert!(huffman_decode(&enc, syms.len()).is_err());
+    }
+}

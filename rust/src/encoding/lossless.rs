@@ -1,0 +1,71 @@
+//! The lossless back end: ZSTD (the same library the paper uses), with a
+//! tiny self-describing frame so empty inputs and future codecs are handled
+//! uniformly.
+
+use anyhow::{bail, Context, Result};
+
+const CODEC_ZSTD: u8 = 1;
+const CODEC_RAW: u8 = 0;
+
+/// Compress a byte buffer with ZSTD level 3 (the zstd CLI default). Falls
+/// back to a raw frame if compression would expand the data.
+pub fn lossless_compress(data: &[u8]) -> Vec<u8> {
+    let compressed = zstd::encode_all(data, 3).expect("in-memory zstd cannot fail");
+    let mut out = Vec::with_capacity(compressed.len() + 1);
+    if compressed.len() < data.len() {
+        out.push(CODEC_ZSTD);
+        out.extend_from_slice(&compressed);
+    } else {
+        out.push(CODEC_RAW);
+        out.extend_from_slice(data);
+    }
+    out
+}
+
+/// Inverse of [`lossless_compress`].
+pub fn lossless_decompress(frame: &[u8]) -> Result<Vec<u8>> {
+    let Some((&codec, body)) = frame.split_first() else {
+        bail!("empty lossless frame");
+    };
+    match codec {
+        CODEC_RAW => Ok(body.to_vec()),
+        CODEC_ZSTD => zstd::decode_all(body).context("zstd decode"),
+        x => bail!("unknown lossless codec {x}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn roundtrip_compressible() {
+        let data = vec![7u8; 100_000];
+        let c = lossless_compress(&data);
+        assert!(c.len() < 1000, "highly repetitive data should shrink");
+        assert_eq!(lossless_decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_incompressible_uses_raw() {
+        let mut rng = XorShift::new(3);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.next_u64() as u8).collect();
+        let c = lossless_compress(&data);
+        assert!(c.len() <= data.len() + 1);
+        assert_eq!(lossless_decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let c = lossless_compress(&[]);
+        assert_eq!(lossless_decompress(&c).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn garbage_errors() {
+        assert!(lossless_decompress(&[]).is_err());
+        assert!(lossless_decompress(&[9, 1, 2, 3]).is_err());
+        assert!(lossless_decompress(&[CODEC_ZSTD, 0xFF, 0xFF]).is_err());
+    }
+}

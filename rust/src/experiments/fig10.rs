@@ -1,0 +1,100 @@
+//! Fig. 10: power-spectrum ratio ribbon — with pointwise per-component
+//! frequency bounds, every reconstructed power-spectrum bin stays within
+//! ±0.1% of the truth, while the base compressor at the same bitrate
+//! exits the ribbon.
+
+use anyhow::Result;
+
+use super::{tables::fmt_num, ExpOptions, Table};
+use crate::compressors::{szlike::SzLike, Compressor, ErrorBound};
+use crate::correction::{self, FfczConfig};
+use crate::data::synth;
+use crate::fourier::power_spectrum;
+
+/// The paper's ribbon: 0.1% relative error per power-spectrum bin.
+pub const RIBBON: f64 = 1e-3;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let s = opts.scale;
+    let field = synth::grf::GrfBuilder::new(&[s, s, s])
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(101)
+        .build();
+    let ps_true = power_spectrum(&field);
+    let base = SzLike::default();
+
+    let cfg = FfczConfig::power_spectrum(1e-3, RIBBON);
+    let archive = correction::compress(&field, &base, &cfg)?;
+    let recon_ffcz = correction::decompress(&archive)?;
+    let ps_ffcz = power_spectrum(&recon_ffcz);
+
+    // Base compressor at (approximately) the same bitrate: tighten ε until
+    // its payload is at least as large as ours, then compare ribbons.
+    let target = archive.total_bytes();
+    let mut eb = 1e-3;
+    let mut payload = base.compress(&field, ErrorBound::Relative(eb))?;
+    for _ in 0..20 {
+        if payload.len() >= target {
+            break;
+        }
+        eb /= 2.0;
+        payload = base.compress(&field, ErrorBound::Relative(eb))?;
+    }
+    let recon_base = base.decompress(&payload)?;
+    let ps_base = power_spectrum(&recon_base);
+
+    let mut table = Table::new(
+        format!("Fig. 10 analogue — P(k) ratio (ribbon ±{RIBBON:.1e})"),
+        &["k", "ratio sz-like", "ratio sz+FFCz", "in ribbon (base)", "in ribbon (FFCz)"],
+    );
+    let rel_base = ps_base.relative_error(&ps_true);
+    let rel_ffcz = ps_ffcz.relative_error(&ps_true);
+    let mut base_out = 0usize;
+    let mut ffcz_out = 0usize;
+    let peak = ps_true.power.iter().fold(0.0f64, |a, &b| a.max(b));
+    for k in 0..ps_true.len() {
+        if ps_true.count[k] == 0 || ps_true.power[k] <= peak * 1e-18 {
+            continue;
+        }
+        let in_base = rel_base[k].abs() <= RIBBON;
+        let in_ffcz = rel_ffcz[k].abs() <= RIBBON;
+        base_out += usize::from(!in_base);
+        ffcz_out += usize::from(!in_ffcz);
+        table.row(vec![
+            k.to_string(),
+            fmt_num(1.0 + rel_base[k]),
+            fmt_num(1.0 + rel_ffcz[k]),
+            in_base.to_string(),
+            in_ffcz.to_string(),
+        ]);
+    }
+    table.print();
+    table.write_csv(&opts.out_dir.join("fig10.csv"))?;
+    println!(
+        "bins outside ribbon — base: {base_out}, FFCz: {ffcz_out} \
+         (bitrates: base {:.4}, FFCz {:.4} bits/value)",
+        crate::metrics::bitrate(&field, payload.len()),
+        crate::metrics::bitrate(&field, target),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ffcz_stays_inside_ribbon() {
+        let field = synth::grf::GrfBuilder::new(&[24, 24])
+            .lognormal(1.2)
+            .seed(8)
+            .build();
+        let cfg = FfczConfig::power_spectrum(1e-2, RIBBON);
+        let archive = correction::compress(&field, &SzLike::default(), &cfg).unwrap();
+        let recon = correction::decompress(&archive).unwrap();
+        let ps_true = power_spectrum(&field);
+        let ps = power_spectrum(&recon);
+        assert!(ps.max_relative_error(&ps_true) <= RIBBON * 1.1);
+    }
+}

@@ -1,0 +1,88 @@
+//! Fig. 5: sparsity of the active edits vs the density of their total
+//! effect per domain.
+//!
+//! Shape to reproduce: active spatial and frequency edits are few and
+//! sparsely distributed, while the *total* edit effect in either single
+//! domain (spatial + IFFT(freq), or freq + FFT(spatial)) touches every
+//! component.
+
+use anyhow::Result;
+
+use super::{tables::fmt_num, ExpOptions, Table};
+use crate::compressors::szlike::SzLike;
+use crate::correction::{self, apply, FfczConfig};
+use crate::data::synth;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let s = opts.scale;
+    let field = synth::grf::GrfBuilder::new(&[s, s, s])
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(101)
+        .build();
+    let n = field.len();
+    let base = SzLike::default();
+
+    let mut table = Table::new(
+        "Fig. 5 analogue — edit sparsity (sz-like base)",
+        &[
+            "δ(rel)",
+            "act. spat",
+            "act. freq",
+            "act. spat %",
+            "act. freq %",
+            "dense total-spat %",
+            "dense total-freq %",
+        ],
+    );
+    for delta_rel in [1e-2, 1e-3] {
+        let cfg = FfczConfig::relative(1e-3, delta_rel);
+        let archive = correction::compress(&field, &base, &cfg)?;
+        let (a_s, a_f) = archive.edits.active_counts();
+        // Total (per-domain) edits — dense by construction.
+        let ts = apply::total_spatial_edits(&archive.edits, field.shape());
+        let tf = apply::total_frequency_edits(&archive.edits, field.shape());
+        let eps_mach = 1e-300;
+        let dense_s = ts.iter().filter(|v| v.abs() > eps_mach).count();
+        let dense_f = tf.iter().filter(|c| c.abs() > eps_mach).count();
+        table.row(vec![
+            format!("{delta_rel:.0e}"),
+            a_s.to_string(),
+            a_f.to_string(),
+            fmt_num(100.0 * a_s as f64 / n as f64),
+            fmt_num(100.0 * a_f as f64 / n as f64),
+            fmt_num(100.0 * dense_s as f64 / n as f64),
+            fmt_num(100.0 * dense_f as f64 / n as f64),
+        ]);
+    }
+    table.print();
+    table.write_csv(&opts.out_dir.join("fig5.csv"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_edits_sparse_but_totals_dense() {
+        let field = synth::grf::GrfBuilder::new(&[16, 16, 16])
+            .lognormal(1.2)
+            .seed(7)
+            .build();
+        let cfg = FfczConfig::relative(1e-3, 3e-4);
+        let archive = correction::compress(&field, &SzLike::default(), &cfg).unwrap();
+        let (a_s, a_f) = archive.edits.active_counts();
+        let n = field.len();
+        assert!(a_f > 0, "some frequency edits must exist");
+        assert!(a_s + a_f < n, "active edits must be sparse: {a_s}+{a_f} of {n}");
+        if a_f > 0 {
+            let ts = apply::total_spatial_edits(&archive.edits, field.shape());
+            let dense = ts.iter().filter(|v| v.abs() > 0.0).count();
+            assert!(
+                dense > n / 2,
+                "total spatial effect must be dense: {dense} of {n}"
+            );
+        }
+    }
+}

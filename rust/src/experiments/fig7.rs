@@ -1,0 +1,107 @@
+//! Fig. 7: (a–c) throughput of base compression vs FFCz editing;
+//! (d) timeline of the pipelined compression–editing workflow.
+//!
+//! Shape to reproduce: editing is faster than base compression (so it is
+//! not the bottleneck) except for the mostly-zero HEDM frame under the
+//! zfp-like fast path; the pipelined makespan ≈ compression-only makespan.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{tables::fmt_num, ExpOptions, Table};
+use crate::compressors::{paper_compressors, ErrorBound};
+use crate::coordinator::{run_pipeline, ExecMode, PipelineConfig};
+use crate::correction::{self, FfczConfig};
+use crate::data::synth;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    throughput_table(opts)?;
+    pipeline_timeline(opts)?;
+    Ok(())
+}
+
+fn throughput_table(opts: &ExpOptions) -> Result<()> {
+    let suite = synth::benchmark_suite(opts.scale);
+    let mut table = Table::new(
+        "Fig. 7(a–c) analogue — throughput (MB/s), ε rel = 0.1%",
+        &["dataset", "base", "compress MB/s", "edit MB/s", "edit/compress ×"],
+    );
+    for (name, field) in &suite {
+        let mb = field.original_bytes() as f64 / 1e6;
+        for base in paper_compressors() {
+            let t0 = Instant::now();
+            let payload = base.compress(field, ErrorBound::Relative(1e-3))?;
+            let t_comp = t0.elapsed().as_secs_f64();
+            let recon = base.decompress(&payload)?;
+            let delta_rel = super::tail_clip_delta_rel(field, &recon);
+            let cfg = FfczConfig::relative(1e-3, delta_rel);
+            let t1 = Instant::now();
+            let _archive = correction::correct_reconstruction(
+                field,
+                &recon,
+                base.name(),
+                payload,
+                &cfg,
+            )?;
+            let t_edit = t1.elapsed().as_secs_f64();
+            table.row(vec![
+                name.clone(),
+                base.name().to_string(),
+                fmt_num(mb / t_comp),
+                fmt_num(mb / t_edit),
+                fmt_num(t_comp / t_edit),
+            ]);
+        }
+    }
+    table.print();
+    table.write_csv(&opts.out_dir.join("fig7_throughput.csv"))?;
+    Ok(())
+}
+
+fn pipeline_timeline(opts: &ExpOptions) -> Result<()> {
+    let s = opts.scale;
+    let instances: Vec<_> = (0..4)
+        .map(|i| {
+            (
+                format!("snap{i}"),
+                synth::grf::GrfBuilder::new(&[s, s, s])
+                    .lognormal(1.2)
+                    .seed(200 + i as u64)
+                    .build(),
+            )
+        })
+        .collect();
+    let base = crate::compressors::szlike::SzLike::default();
+    let ffcz = FfczConfig::relative(1e-3, 1e-4);
+
+    let mut cfg = PipelineConfig::new(ffcz);
+    let piped = run_pipeline(instances.clone(), &base, &cfg)?;
+    cfg.mode = ExecMode::Sequential;
+    let seq = run_pipeline(instances, &base, &cfg)?;
+
+    println!("## Fig. 7(d) analogue — pipelined timeline");
+    print!("{}", piped.timeline_text());
+    println!(
+        "sequential makespan {:.1} ms vs pipelined {:.1} ms (hide ratio {:.2})",
+        seq.makespan.as_secs_f64() * 1e3,
+        piped.makespan.as_secs_f64() * 1e3,
+        seq.makespan.as_secs_f64() / piped.makespan.as_secs_f64(),
+    );
+
+    let mut table = Table::new(
+        "pipeline summary",
+        &["mode", "makespan ms", "compress Σ ms", "edit Σ ms"],
+    );
+    for (mode, r) in [("pipelined", &piped), ("sequential", &seq)] {
+        table.row(vec![
+            mode.to_string(),
+            fmt_num(r.makespan.as_secs_f64() * 1e3),
+            fmt_num(r.compress_total.as_secs_f64() * 1e3),
+            fmt_num(r.edit_total.as_secs_f64() * 1e3),
+        ]);
+    }
+    table.print();
+    table.write_csv(&opts.out_dir.join("fig7_pipeline.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! Fig. 9: per-stage timing of the editing process across iterations.
+//!
+//! The paper instruments its CUDA kernels (forwardFFT, CheckConvergence,
+//! ProjectOntoFCube, inverseFFT, ProjectOntoSCube) per iteration; here the
+//! same stages of the native Rust engine are timed individually, plus the
+//! end-to-end PJRT artifact path when `artifacts/` is built.
+//!
+//! Shape to reproduce: FFT/IFFT dominates kernel time (the paper measures
+//! ≈68.7%); projections and checks are cheap streaming passes.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{tables::fmt_num, ExpOptions, Table};
+use crate::compressors::{szlike::SzLike, Compressor, ErrorBound};
+use crate::correction::{Bounds, PocsParams};
+use crate::data::synth;
+use crate::fourier::{fftn_inplace, ifftn_inplace, Complex};
+
+/// Per-stage cumulative timings of a manually-unrolled POCS run.
+#[derive(Debug, Default, Clone)]
+pub struct StageTimings {
+    pub fft: f64,
+    pub check: f64,
+    pub project_f: f64,
+    pub ifft: f64,
+    pub project_s: f64,
+    pub iterations: usize,
+}
+
+impl StageTimings {
+    pub fn total(&self) -> f64 {
+        self.fft + self.check + self.project_f + self.ifft + self.project_s
+    }
+}
+
+/// Run the alternating projection with per-stage instrumentation.
+/// Semantics match `correction::pocs::alternating_projection`.
+pub fn instrumented_pocs(eps0: &[f64], shape: &[usize], params: &PocsParams) -> StageTimings {
+    let _n = eps0.len();
+    let mut eps: Vec<Complex> = eps0.iter().map(|&e| Complex::new(e, 0.0)).collect();
+    let mut t = StageTimings::default();
+    while t.iterations < params.max_iters {
+        t.iterations += 1;
+        let t0 = Instant::now();
+        fftn_inplace(&mut eps, shape);
+        t.fft += t0.elapsed().as_secs_f64();
+
+        // Check (separate pass, like the paper's CheckConvergence kernel).
+        let t0 = Instant::now();
+        let mut violated = false;
+        for (k, v) in eps.iter().enumerate() {
+            let d = params.frequency.at(k);
+            if v.linf() > d * (1.0 + 1e-10) {
+                violated = true;
+                break;
+            }
+        }
+        t.check += t0.elapsed().as_secs_f64();
+
+        if !violated {
+            let t0 = Instant::now();
+            ifftn_inplace(&mut eps, shape);
+            t.ifft += t0.elapsed().as_secs_f64();
+            break;
+        }
+
+        let t0 = Instant::now();
+        for (k, v) in eps.iter_mut().enumerate() {
+            let d = params.frequency.at(k);
+            *v = Complex::new(v.re.clamp(-d, d), v.im.clamp(-d, d));
+        }
+        t.project_f += t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        ifftn_inplace(&mut eps, shape);
+        t.ifft += t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        for (i, v) in eps.iter_mut().enumerate() {
+            let e = params.spatial.at(i);
+            *v = Complex::new(v.re.clamp(-e, e), 0.0);
+        }
+        t.project_s += t0.elapsed().as_secs_f64();
+    }
+    t
+}
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let s = opts.scale;
+    let field = synth::grf::GrfBuilder::new(&[s, s, s])
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(101)
+        .build();
+    let base = SzLike::default();
+    let payload = base.compress(&field, ErrorBound::Relative(1e-3))?;
+    let recon = base.decompress(&payload)?;
+    let eps0: Vec<f64> = recon
+        .data()
+        .iter()
+        .zip(field.data())
+        .map(|(r, x)| r - x)
+        .collect();
+    let (_, rfe) = crate::metrics::spectral_metrics(&field, &recon);
+    let spec_max = rfe_to_absolute(&field, rfe / 10.0);
+
+    let params = PocsParams {
+        spatial: Bounds::Global(ErrorBound::Relative(1e-3).absolute_for(&field)),
+        frequency: Bounds::Global(spec_max),
+        max_iters: 200,
+    };
+    let t = instrumented_pocs(&eps0, field.shape(), &params);
+    let total = t.total();
+
+    let mut table = Table::new(
+        format!(
+            "Fig. 9 analogue — native-engine stage timing over {} iterations",
+            t.iterations
+        ),
+        &["stage", "total ms", "% of loop"],
+    );
+    for (name, v) in [
+        ("forwardFFT", t.fft),
+        ("CheckConvergence", t.check),
+        ("ProjectOntoFCube", t.project_f),
+        ("inverseFFT", t.ifft),
+        ("ProjectOntoSCube", t.project_s),
+    ] {
+        table.row(vec![
+            name.to_string(),
+            fmt_num(v * 1e3),
+            format!("{:.1}", 100.0 * v / total),
+        ]);
+    }
+    table.print();
+    table.write_csv(&opts.out_dir.join("fig9.csv"))?;
+    println!(
+        "FFT+IFFT share: {:.1}% (paper: ≈68.7% of GPU kernel time)",
+        100.0 * (t.fft + t.ifft) / total
+    );
+
+    // PJRT path, when artifacts exist and a variant matches.
+    if let Ok(mut engine) = crate::runtime::PjrtEngine::new(&opts.artifact_dir) {
+        let shape = field.shape().to_vec();
+        if engine.supports_shape(&shape) {
+            let e_abs = ErrorBound::Relative(1e-3).absolute_for(&field);
+            let t0 = Instant::now();
+            let r = engine.correct(&eps0, &shape, e_abs, spec_max)?;
+            let pjrt_ms = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "PJRT artifact end-to-end: {:.1} ms ({} iterations) vs native loop {:.1} ms",
+                pjrt_ms,
+                r.iterations,
+                total * 1e3
+            );
+        } else {
+            println!("(no PJRT variant for shape {shape:?}; build artifacts with matching VARIANTS for the accelerator comparison)");
+        }
+    } else {
+        println!("(artifacts/ not built — PJRT comparison skipped)");
+    }
+    Ok(())
+}
+
+fn rfe_to_absolute(field: &crate::data::Field, rel: f64) -> f64 {
+    let buf: Vec<Complex> = field
+        .data()
+        .iter()
+        .map(|&v| Complex::new(v, 0.0))
+        .collect();
+    let max_mag = crate::fourier::fftn(&buf, field.shape())
+        .iter()
+        .map(|c| c.abs())
+        .fold(0.0f64, f64::max);
+    rel * max_mag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_dominates_stage_time() {
+        let field = synth::grf::GrfBuilder::new(&[32, 32])
+            .lognormal(1.0)
+            .seed(3)
+            .build();
+        let eps0: Vec<f64> = field.data().iter().map(|v| (v * 17.0).sin() * 1e-3).collect();
+        let params = PocsParams {
+            spatial: Bounds::Global(1e-3),
+            frequency: Bounds::Global(1e-2),
+            max_iters: 50,
+        };
+        let t = instrumented_pocs(&eps0, field.shape(), &params);
+        assert!(t.iterations >= 1);
+        assert!(
+            t.fft + t.ifft > 0.3 * t.total(),
+            "FFT share {:.2}",
+            (t.fft + t.ifft) / t.total()
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation
+//! (§V). Each driver regenerates the corresponding artifact on the
+//! synthetic benchmark suite and emits an aligned text table plus CSV
+//! under `results/`.
+//!
+//! | id     | paper artifact | claim reproduced                             |
+//! |--------|----------------|----------------------------------------------|
+//! | fig1   | Fig. 1         | spectrum tracking at equal bitrate           |
+//! | table2 | Table II       | ratio: native vs trial-and-error vs ours     |
+//! | fig5   | Fig. 5         | sparsity of active edits                     |
+//! | fig6   | Fig. 6         | SSNR vs bitrate                              |
+//! | fig7   | Fig. 7         | throughput + pipelined timeline              |
+//! | fig8   | Fig. 8         | PSNR vs bitrate (spatial fidelity kept)      |
+//! | table3 | Table III      | iterations / active edits vs Δ               |
+//! | fig9   | Fig. 9         | per-stage timing breakdown                   |
+//! | table4 | Table IV       | stage-level time/BW/speedup (native vs PJRT) |
+//! | fig10  | Fig. 10        | power-spectrum ribbon                        |
+
+pub mod fig1;
+pub mod fig10;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+mod tables;
+
+use anyhow::{bail, Result};
+pub use tables::Table;
+
+/// Frequency-bound selection used across the experiment drivers: clip the
+/// top 0.1% of frequency-error components of the base reconstruction
+/// (`Δ = p99.9(‖δ_k‖∞)`), expressed relative to `max_k |X_k|`.
+///
+/// The paper picks per-dataset RFE targets ("selected such that the max
+/// frequency error is reduced 100×"); on 512³ fields with 6-decade dynamic
+/// range that 100× target clips only a sparse tail. Our 32³ substitutes
+/// have shorter tails, so the regime-equivalent selection is the explicit
+/// tail quantile — it reproduces the paper's *sparse-edit* operating point
+/// on every dataset family (see EXPERIMENTS.md §Operating points).
+pub fn tail_clip_delta_rel(
+    field: &crate::data::Field,
+    recon: &crate::data::Field,
+) -> f64 {
+    use crate::fourier::Complex;
+    let eps: Vec<Complex> = recon
+        .data()
+        .iter()
+        .zip(field.data())
+        .map(|(r, x)| Complex::new(r - x, 0.0))
+        .collect();
+    let delta = crate::fourier::fftn(&eps, field.shape());
+    let mut linf: Vec<f64> = delta.iter().map(|c| c.linf()).collect();
+    linf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = linf[((linf.len() as f64 * 0.999) as usize).min(linf.len() - 1)];
+    let spec = crate::fourier::fftn(
+        &field
+            .data()
+            .iter()
+            .map(|&v| Complex::new(v, 0.0))
+            .collect::<Vec<_>>(),
+        field.shape(),
+    );
+    let max_mag = spec.iter().map(|c| c.abs()).fold(0.0f64, f64::max);
+    (q / max_mag.max(f64::MIN_POSITIVE)).max(1e-15)
+}
+
+/// Options shared by all experiment drivers.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Edge-size class of the synthetic suite (3D fields are scale³).
+    pub scale: usize,
+    /// Output directory for CSV artifacts.
+    pub out_dir: std::path::PathBuf,
+    /// Artifact directory for PJRT-path experiments (fig9/table4).
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            scale: 32,
+            out_dir: "results".into(),
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 10] = [
+    "fig1", "table2", "fig5", "fig6", "fig7", "fig8", "table3", "fig9", "table4", "fig10",
+];
+
+/// Run one experiment by id, printing its tables and writing CSVs.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    match id {
+        "fig1" => fig1::run(opts),
+        "table2" => table2::run(opts),
+        "fig5" => fig5::run(opts),
+        "fig6" => fig6::run(opts),
+        "fig7" => fig7::run(opts),
+        "fig8" => fig8::run(opts),
+        "table3" => table3::run(opts),
+        "fig9" => fig9::run(opts),
+        "table4" => table4::run(opts),
+        "fig10" => fig10::run(opts),
+        "all" => {
+            for id in ALL {
+                println!("\n================ {id} ================");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment '{id}' (known: {ALL:?} or 'all')"),
+    }
+}

@@ -1,0 +1,148 @@
+//! Table II: compression ratios of (1) base compressor with spatial bound
+//! only, (2) base compressor satisfying BOTH bounds by trial-and-error
+//! tightening of the spatial bound, and (3) our augmentation.
+//!
+//! Shape to reproduce: trial-and-error collapses the ratio (often by
+//! orders of magnitude); FFCz costs ≲15–20% for the prediction-based base
+//! and ≈0 for transform-based bases.
+
+use anyhow::Result;
+
+use super::{tables::fmt_num, ExpOptions, Table};
+use crate::compressors::{paper_compressors, Compressor, ErrorBound};
+use crate::correction::{self, FfczConfig};
+use crate::data::{synth, Field};
+use crate::metrics;
+
+/// Operating point: relative spatial bound 0.1% (the paper's setting); the
+/// RFE target is the base compressor's max frequency error reduced 10×.
+/// The paper uses 100× on 512³ Nyx fields whose 6-decade dynamic range
+/// gives the error spectrum a ~100× heavy tail; at our 32³ scale the tail
+/// is ~10-80×, so 10× is the regime-equivalent choice (sparse violator
+/// set — see EXPERIMENTS.md).
+pub const SPATIAL_REL: f64 = 1e-3;
+pub const RFE_SHRINK: f64 = 10.0;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let suite = synth::benchmark_suite(opts.scale);
+    let mut table = Table::new(
+        "Table II analogue — compression ratio (ε rel = 0.1%, Δ = p99.9 tail clip)",
+        &[
+            "dataset",
+            "base",
+            "ratio ε-only",
+            "ratio trial&error",
+            "ratio our aug.",
+            "aug. overhead %",
+            "RFE gain ×",
+        ],
+    );
+    for (name, field) in &suite {
+        for base in paper_compressors() {
+            let row = one_cell(name, field, base.as_ref())?;
+            table.row(row);
+        }
+    }
+    table.print();
+    table.write_csv(&opts.out_dir.join("table2.csv"))?;
+    Ok(())
+}
+
+fn one_cell(name: &str, field: &Field, base: &dyn Compressor) -> Result<Vec<String>> {
+    // (1) native: spatial bound only.
+    let payload = base.compress(field, ErrorBound::Relative(SPATIAL_REL))?;
+    let recon = base.decompress(&payload)?;
+    let ratio_native = metrics::compression_ratio(field, payload.len());
+    let (_, rfe_native) = metrics::spectral_metrics(field, &recon);
+
+    // Frequency target: clip the top 0.1% of frequency-error components
+    // (the paper's sparse-edit regime; see super::tail_clip_delta_rel).
+    let delta_rel = super::tail_clip_delta_rel(field, &recon).max(rfe_native / 1e4);
+    let rfe_gain = rfe_native / delta_rel;
+
+    // (2) trial-and-error: tighten the spatial bound until the frequency
+    // target holds with NO edits (what users do today, §I).
+    let ratio_trial = trial_and_error(field, base, delta_rel)?;
+
+    // (3) our augmentation.
+    let cfg = FfczConfig {
+        spatial: correction::BoundSpec::Relative(SPATIAL_REL),
+        frequency: correction::FrequencyBound::Uniform(correction::BoundSpec::Relative(
+            delta_rel,
+        )),
+        max_iters: 200,
+        max_quant_retries: 3,
+    };
+    let archive = correction::compress(field, base, &cfg)?;
+    let ratio_ours = metrics::compression_ratio(field, archive.total_bytes());
+    let overhead = 100.0 * (ratio_native / ratio_ours - 1.0);
+
+    Ok(vec![
+        name.to_string(),
+        base.name().to_string(),
+        fmt_num(ratio_native),
+        fmt_num(ratio_trial),
+        fmt_num(ratio_ours),
+        format!("{overhead:.2}"),
+        format!("{rfe_gain:.1}"),
+    ])
+}
+
+/// Geometric tightening of the spatial bound until max RFE ≤ target.
+/// Returns the achieved compression ratio (the cost of today's practice).
+pub fn trial_and_error(field: &Field, base: &dyn Compressor, delta_rel: f64) -> Result<f64> {
+    let mut eb = SPATIAL_REL;
+    for _ in 0..24 {
+        let payload = base.compress(field, ErrorBound::Relative(eb))?;
+        let recon = base.decompress(&payload)?;
+        let (_, rfe) = metrics::spectral_metrics(field, &recon);
+        if rfe <= delta_rel {
+            return Ok(metrics::compression_ratio(field, payload.len()));
+        }
+        eb /= 2.0;
+    }
+    // Could not reach the target even at eb/2²⁴ — report the last ratio.
+    let payload = base.compress(field, ErrorBound::Relative(eb))?;
+    Ok(metrics::compression_ratio(field, payload.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::szlike::SzLike;
+
+    #[test]
+    fn trial_and_error_costs_ratio() {
+        let field = synth::grf::GrfBuilder::new(&[16, 16, 16])
+            .lognormal(1.0)
+            .seed(3)
+            .build();
+        let base = SzLike::default();
+        let payload = base
+            .compress(&field, ErrorBound::Relative(SPATIAL_REL))
+            .unwrap();
+        let recon = base.decompress(&payload).unwrap();
+        let native = metrics::compression_ratio(&field, payload.len());
+        let (_, rfe) = metrics::spectral_metrics(&field, &recon);
+        let trial = trial_and_error(&field, &base, rfe / 50.0).unwrap();
+        assert!(
+            trial < native,
+            "tightening must cost ratio: {trial} vs {native}"
+        );
+    }
+
+    #[test]
+    fn augmentation_beats_trial_and_error() {
+        let field = synth::grf::GrfBuilder::new(&[16, 16, 16])
+            .lognormal(2.4) // Nyx-like dynamic range ⇒ heavy-tailed error spectrum
+            .seed(4)
+            .build();
+        let row = one_cell("t", &field, &SzLike::default()).unwrap();
+        let trial: f64 = row[3].replace("e", "E").parse::<f64>().unwrap_or(0.0);
+        let ours: f64 = row[4].replace("e", "E").parse::<f64>().unwrap_or(0.0);
+        assert!(
+            ours > trial,
+            "our aug. must beat trial-and-error: {ours} vs {trial}"
+        );
+    }
+}

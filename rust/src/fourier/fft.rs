@@ -1,0 +1,335 @@
+//! 1-D fast Fourier transforms.
+//!
+//! * Power-of-two sizes use an iterative in-place radix-2 Cooley–Tukey with
+//!   a precomputed bit-reversal permutation and per-stage twiddle tables.
+//! * Arbitrary sizes fall back to Bluestein's algorithm (chirp-z), which
+//!   reduces an N-point DFT to a power-of-two cyclic convolution.
+//!
+//! A [`Fft`] instance is a *plan*: it caches the permutation, twiddles, and
+//! (for Bluestein) the pre-transformed chirp, so repeated transforms of the
+//! same size — the common case in the POCS loop — pay no setup cost.
+
+use std::f64::consts::PI;
+
+use super::Complex;
+
+/// Transform direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FftDirection {
+    Forward,
+    Inverse,
+}
+
+/// A planned 1-D FFT of fixed size.
+///
+/// Normalization follows the numpy convention: `Forward` is unnormalized,
+/// `Inverse` scales by `1/N`, so `ifft(fft(x)) == x`.
+pub struct Fft {
+    n: usize,
+    kind: Kind,
+}
+
+enum Kind {
+    /// Radix-2: bit-reversal permutation + full twiddle table (size n/2).
+    Radix2 {
+        rev: Vec<u32>,
+        /// Forward twiddles w^j = e^{-2πi j / n} for j in 0..n/2.
+        twiddles: Vec<Complex>,
+    },
+    /// Bluestein chirp-z: pad to power-of-two m ≥ 2n-1.
+    Bluestein {
+        m: usize,
+        inner: Box<Fft>,
+        /// a_k = e^{-iπ k²/n} (forward chirp), length n.
+        chirp: Vec<Complex>,
+        /// FFT of the zero-padded conjugate chirp kernel, length m.
+        kernel_fft: Vec<Complex>,
+    },
+}
+
+impl Fft {
+    /// Plan a transform of size `n` (n ≥ 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "FFT size must be ≥ 1");
+        if n.is_power_of_two() {
+            let rev = bit_reversal(n);
+            let mut twiddles = Vec::with_capacity(n / 2);
+            for j in 0..n / 2 {
+                twiddles.push(Complex::from_angle(-2.0 * PI * j as f64 / n as f64));
+            }
+            Fft {
+                n,
+                kind: Kind::Radix2 { rev, twiddles },
+            }
+        } else {
+            // Bluestein: x_k · a_k convolved with b; b_j = e^{iπ j²/n}.
+            let m = (2 * n - 1).next_power_of_two();
+            let inner = Box::new(Fft::new(m));
+            let mut chirp = Vec::with_capacity(n);
+            for k in 0..n {
+                // k² mod 2n avoids catastrophic angle growth for large k.
+                let k2 = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
+                chirp.push(Complex::from_angle(-PI * k2 / n as f64));
+            }
+            let mut kernel = vec![Complex::ZERO; m];
+            for j in 0..n {
+                let b = chirp[j].conj();
+                kernel[j] = b;
+                if j != 0 {
+                    kernel[m - j] = b;
+                }
+            }
+            inner.forward_inplace_radix2(&mut kernel);
+            Fft {
+                n,
+                kind: Kind::Bluestein {
+                    m,
+                    inner,
+                    chirp,
+                    kernel_fft: kernel,
+                },
+            }
+        }
+    }
+
+    /// Transform size.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place transform of a buffer of length `n`.
+    pub fn process(&self, data: &mut [Complex], dir: FftDirection) {
+        assert_eq!(data.len(), self.n, "buffer length != plan size");
+        if self.n == 1 {
+            return;
+        }
+        match dir {
+            FftDirection::Forward => self.forward(data),
+            FftDirection::Inverse => {
+                // ifft(x) = conj(fft(conj(x))) / n
+                for v in data.iter_mut() {
+                    *v = v.conj();
+                }
+                self.forward(data);
+                let s = 1.0 / self.n as f64;
+                for v in data.iter_mut() {
+                    *v = v.conj().scale(s);
+                }
+            }
+        }
+    }
+
+    /// Out-of-place convenience wrapper.
+    pub fn transform(&self, input: &[Complex], dir: FftDirection) -> Vec<Complex> {
+        let mut buf = input.to_vec();
+        self.process(&mut buf, dir);
+        buf
+    }
+
+    fn forward(&self, data: &mut [Complex]) {
+        match &self.kind {
+            Kind::Radix2 { .. } => self.forward_inplace_radix2(data),
+            Kind::Bluestein {
+                m,
+                inner,
+                chirp,
+                kernel_fft,
+            } => {
+                let n = self.n;
+                let mut a = vec![Complex::ZERO; *m];
+                for k in 0..n {
+                    a[k] = data[k] * chirp[k];
+                }
+                inner.forward_inplace_radix2(&mut a);
+                for (x, k) in a.iter_mut().zip(kernel_fft.iter()) {
+                    *x = *x * *k;
+                }
+                // Inverse inner transform via conjugation.
+                for v in a.iter_mut() {
+                    *v = v.conj();
+                }
+                inner.forward_inplace_radix2(&mut a);
+                let s = 1.0 / *m as f64;
+                for (k, out) in data.iter_mut().enumerate() {
+                    *out = a[k].conj().scale(s) * chirp[k];
+                }
+            }
+        }
+    }
+
+    /// The radix-2 kernel (only valid when `kind` is `Radix2`).
+    fn forward_inplace_radix2(&self, data: &mut [Complex]) {
+        let (rev, twiddles) = match &self.kind {
+            Kind::Radix2 { rev, twiddles } => (rev, twiddles),
+            _ => unreachable!("radix-2 kernel called on non-pow2 plan"),
+        };
+        let n = data.len();
+        // Bit-reversal permutation.
+        for i in 0..n {
+            let j = rev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+        // Iterative butterflies. Stage with half-size `half` uses twiddle
+        // stride n / (2*half). (A specialized-first-stages variant was
+        // measured 15% *slower* — see EXPERIMENTS.md §Perf — so the
+        // uniform loop stays.)
+        let mut half = 1;
+        while half < n {
+            let stride = n / (2 * half);
+            let mut base = 0;
+            while base < n {
+                let mut tw = 0;
+                for j in base..base + half {
+                    let w = twiddles[tw];
+                    let u = data[j];
+                    let v = data[j + half] * w;
+                    data[j] = u + v;
+                    data[j + half] = u - v;
+                    tw += stride;
+                }
+                base += 2 * half;
+            }
+            half *= 2;
+        }
+    }
+}
+
+/// Bit-reversal table for size n (power of two).
+fn bit_reversal(n: usize) -> Vec<u32> {
+    let bits = n.trailing_zeros();
+    if bits == 0 {
+        return vec![0];
+    }
+    let mut rev = vec![0u32; n];
+    for i in 0..n {
+        rev[i] = (i as u32).reverse_bits() >> (32 - bits);
+    }
+    rev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fourier::dft_naive;
+    use crate::util::XorShift;
+
+    fn random_signal(n: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = XorShift::new(seed);
+        (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect()
+    }
+
+    fn assert_close(a: &[Complex], b: &[Complex], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        let scale = b.iter().map(|c| c.abs()).fold(1.0_f64, f64::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let d = (*x - *y).abs();
+            assert!(d <= tol * scale, "idx {i}: {x:?} vs {y:?} (|d|={d:.3e})");
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft_pow2() {
+        for &n in &[1usize, 2, 4, 8, 64, 256] {
+            let x = random_signal(n, n as u64);
+            let plan = Fft::new(n);
+            let fast = plan.transform(&x, FftDirection::Forward);
+            let slow = dft_naive(&x);
+            assert_close(&fast, &slow, 1e-10);
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft_non_pow2() {
+        for &n in &[3usize, 5, 6, 7, 12, 100, 31, 243] {
+            let x = random_signal(n, n as u64 + 1);
+            let plan = Fft::new(n);
+            let fast = plan.transform(&x, FftDirection::Forward);
+            let slow = dft_naive(&x);
+            assert_close(&fast, &slow, 1e-9);
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for &n in &[8usize, 10, 17, 128, 1000] {
+            let x = random_signal(n, 99 + n as u64);
+            let plan = Fft::new(n);
+            let y = plan.transform(&x, FftDirection::Forward);
+            let z = plan.transform(&y, FftDirection::Inverse);
+            assert_close(&z, &x, 1e-11);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let n = 512;
+        let x = random_signal(n, 5);
+        let plan = Fft::new(n);
+        let y = plan.transform(&x, FftDirection::Forward);
+        let ex: f64 = x.iter().map(|c| c.norm_sqr()).sum();
+        let ey: f64 = y.iter().map(|c| c.norm_sqr()).sum::<f64>() / n as f64;
+        assert!((ex - ey).abs() < 1e-8 * ex);
+    }
+
+    #[test]
+    fn pure_tone_lands_in_single_bin() {
+        let n = 64;
+        let k0 = 5;
+        let x: Vec<Complex> = (0..n)
+            .map(|i| Complex::from_angle(2.0 * PI * k0 as f64 * i as f64 / n as f64))
+            .collect();
+        let y = Fft::new(n).transform(&x, FftDirection::Forward);
+        for (k, c) in y.iter().enumerate() {
+            if k == k0 {
+                assert!((c.re - n as f64).abs() < 1e-9);
+            } else {
+                assert!(c.abs() < 1e-9, "leakage at {k}: {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hermitian_symmetry_for_real_input() {
+        let n = 48;
+        let mut rng = XorShift::new(3);
+        let x: Vec<Complex> = (0..n).map(|_| Complex::new(rng.normal(), 0.0)).collect();
+        let y = Fft::new(n).transform(&x, FftDirection::Forward);
+        for k in 1..n {
+            let d = y[n - k] - y[k].conj();
+            assert!(d.abs() < 1e-9, "X[N-k] != conj(X[k]) at {k}");
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 40;
+        let a = random_signal(n, 1);
+        let b = random_signal(n, 2);
+        let plan = Fft::new(n);
+        let fa = plan.transform(&a, FftDirection::Forward);
+        let fb = plan.transform(&b, FftDirection::Forward);
+        let sum: Vec<Complex> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+        let fsum = plan.transform(&sum, FftDirection::Forward);
+        let expect: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| *x + *y).collect();
+        assert_close(&fsum, &expect, 1e-10);
+    }
+
+    #[test]
+    fn large_bluestein_prime() {
+        // 509 is prime; exercises the chirp path end-to-end.
+        let n = 509;
+        let x = random_signal(n, 11);
+        let plan = Fft::new(n);
+        let y = plan.transform(&x, FftDirection::Forward);
+        let z = plan.transform(&y, FftDirection::Inverse);
+        assert_close(&z, &x, 1e-9);
+    }
+}

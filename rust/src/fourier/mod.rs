@@ -1,0 +1,116 @@
+//! Fourier-analysis substrate: complex arithmetic, 1-D FFTs (radix-2,
+//! Bluestein for arbitrary sizes), N-D transforms, and the radially-binned
+//! power spectrum used throughout the paper's evaluation.
+//!
+//! The paper's GPU implementation delegates to cuFFT; this crate builds the
+//! transform from scratch (no FFT crate exists in the offline dependency
+//! set) and validates it against a naive O(N²) DFT and analytic golden
+//! vectors in this module's tests plus python golden files.
+
+mod complex;
+mod fft;
+mod ndfft;
+mod power_spectrum;
+
+pub use complex::Complex;
+pub use fft::{Fft, FftDirection};
+pub use ndfft::{fftn, ifftn, fftn_inplace, ifftn_inplace};
+pub use power_spectrum::{power_spectrum, PowerSpectrum};
+
+/// Naive O(N²) reference DFT (forward, unnormalized), used as a correctness
+/// oracle for the fast transforms.
+pub fn dft_naive(input: &[Complex]) -> Vec<Complex> {
+    let n = input.len();
+    let mut out = vec![Complex::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex::ZERO;
+        for (i, &x) in input.iter().enumerate() {
+            let ang = -2.0 * std::f64::consts::PI * (k as f64) * (i as f64) / n as f64;
+            acc += x * Complex::from_angle(ang);
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// `fftshift` index mapping: shift the zero-frequency component to the
+/// centre (paper §III, power-spectrum pipeline). Returns the shifted copy.
+pub fn fftshift(input: &[Complex], shape: &[usize]) -> Vec<Complex> {
+    let n: usize = shape.iter().product();
+    assert_eq!(n, input.len());
+    let mut out = vec![Complex::ZERO; n];
+    let ndim = shape.len();
+    let mut idx = vec![0usize; ndim];
+    for (lin, &v) in input.iter().enumerate() {
+        // Destination multi-index = (idx + shape/2) mod shape.
+        let mut dst = 0usize;
+        for d in 0..ndim {
+            let s = (idx[d] + shape[d] / 2) % shape[d];
+            dst = dst * shape[d] + s;
+        }
+        out[dst] = v;
+        // Increment row-major multi-index.
+        for d in (0..ndim).rev() {
+            idx[d] += 1;
+            if idx[d] < shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+        let _ = lin;
+    }
+    out
+}
+
+/// Signed frequency index for bin `k` of an `n`-point transform
+/// (`0, 1, …, n/2, -(n/2-1), …, -1` — the numpy `fftfreq` convention times `n`).
+#[inline]
+pub fn signed_freq(k: usize, n: usize) -> i64 {
+    if k <= n / 2 {
+        k as i64
+    } else {
+        k as i64 - n as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signed_freq_convention() {
+        // n = 8: 0 1 2 3 4 -3 -2 -1
+        let f: Vec<i64> = (0..8).map(|k| signed_freq(k, 8)).collect();
+        assert_eq!(f, vec![0, 1, 2, 3, 4, -3, -2, -1]);
+        // n = 5: 0 1 2 -2 -1
+        let f: Vec<i64> = (0..5).map(|k| signed_freq(k, 5)).collect();
+        assert_eq!(f, vec![0, 1, 2, -2, -1]);
+    }
+
+    #[test]
+    fn fftshift_1d_even() {
+        let v: Vec<Complex> = (0..4).map(|i| Complex::new(i as f64, 0.0)).collect();
+        let s = fftshift(&v, &[4]);
+        let re: Vec<f64> = s.iter().map(|c| c.re).collect();
+        assert_eq!(re, vec![2.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn fftshift_2d_matches_numpy() {
+        // numpy.fft.fftshift(np.arange(6).reshape(2,3)) == [[5,3,4],[2,0,1]]
+        let v: Vec<Complex> = (0..6).map(|i| Complex::new(i as f64, 0.0)).collect();
+        let s = fftshift(&v, &[2, 3]);
+        let re: Vec<f64> = s.iter().map(|c| c.re).collect();
+        assert_eq!(re, vec![5.0, 3.0, 4.0, 2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn naive_dft_of_impulse_is_flat() {
+        let mut x = vec![Complex::ZERO; 8];
+        x[0] = Complex::new(1.0, 0.0);
+        let y = dft_naive(&x);
+        for c in y {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+}

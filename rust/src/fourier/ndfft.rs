@@ -1,0 +1,211 @@
+//! N-dimensional FFTs over row-major buffers.
+//!
+//! The transform is applied separably along each axis. For each axis we
+//! gather the strided 1-D lines into a contiguous scratch buffer, run the
+//! planned 1-D FFT, and scatter back — the standard cache-friendly scheme
+//! for row-major N-D transforms. Plans are cached per distinct axis length.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use super::{Complex, Fft, FftDirection};
+
+/// Process-wide FFT plan cache. The POCS loop runs two N-D transforms per
+/// iteration over the same shape; rebuilding twiddle tables (and Bluestein
+/// chirps for odd sizes) every call dominated small-transform cost before
+/// this cache existed (see EXPERIMENTS.md §Perf).
+static PLAN_CACHE: Lazy<Mutex<HashMap<usize, std::sync::Arc<Fft>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Fetch (or build) the shared plan for size `n`.
+pub fn plan_for(n: usize) -> std::sync::Arc<Fft> {
+    let mut cache = PLAN_CACHE.lock().unwrap();
+    cache
+        .entry(n)
+        .or_insert_with(|| std::sync::Arc::new(Fft::new(n)))
+        .clone()
+}
+
+/// Forward N-D FFT (out-of-place convenience).
+pub fn fftn(input: &[Complex], shape: &[usize]) -> Vec<Complex> {
+    let mut buf = input.to_vec();
+    fftn_inplace(&mut buf, shape);
+    buf
+}
+
+/// Inverse N-D FFT (out-of-place convenience). Normalized by `1/prod(shape)`.
+pub fn ifftn(input: &[Complex], shape: &[usize]) -> Vec<Complex> {
+    let mut buf = input.to_vec();
+    ifftn_inplace(&mut buf, shape);
+    buf
+}
+
+/// Forward N-D FFT, in place.
+pub fn fftn_inplace(data: &mut [Complex], shape: &[usize]) {
+    transform_nd(data, shape, FftDirection::Forward);
+}
+
+/// Inverse N-D FFT, in place.
+pub fn ifftn_inplace(data: &mut [Complex], shape: &[usize]) {
+    transform_nd(data, shape, FftDirection::Inverse);
+}
+
+fn transform_nd(data: &mut [Complex], shape: &[usize], dir: FftDirection) {
+    let n: usize = shape.iter().product();
+    assert_eq!(n, data.len(), "shape {shape:?} != buffer {}", data.len());
+    if n == 0 {
+        return;
+    }
+    for axis in 0..shape.len() {
+        let len = shape[axis];
+        if len == 1 {
+            continue;
+        }
+        let plan = plan_for(len);
+        apply_axis(data, shape, axis, &plan, dir);
+    }
+}
+
+/// Number of strided lines gathered/scattered together. Batching turns the
+/// stride-`s` single-element accesses of a lone line into `B`-element
+/// consecutive runs (adjacent lines differ by 1 in the inner index), so
+/// each cache-line fetch serves `B` lines.
+const LINE_BLOCK: usize = 8;
+
+/// Apply a planned 1-D transform along `axis` of a row-major buffer.
+fn apply_axis(data: &mut [Complex], shape: &[usize], axis: usize, plan: &Fft, dir: FftDirection) {
+    let len = shape[axis];
+    // stride between successive elements along `axis`
+    let stride: usize = shape[axis + 1..].iter().product();
+    // number of 1-D lines
+    let total: usize = data.len() / len;
+    // Lines are enumerated by (outer, inner): outer indexes the dims before
+    // `axis`, inner the dims after. Base offset = outer*len*stride + inner.
+    let inner = stride;
+    let outer = total / inner;
+    if stride == 1 {
+        // Contiguous fast path: transform in place within each slice.
+        for o in 0..outer {
+            let base = o * len;
+            plan.process(&mut data[base..base + len], dir);
+        }
+        return;
+    }
+    let mut block = vec![Complex::ZERO; LINE_BLOCK * len];
+    for o in 0..outer {
+        let mut i = 0;
+        while i < inner {
+            let b = LINE_BLOCK.min(inner - i);
+            let base = o * len * stride + i;
+            // Gather b adjacent lines: for each j the addresses
+            // base + j·stride + 0..b are consecutive.
+            for j in 0..len {
+                let src = base + j * stride;
+                for (k, s) in data[src..src + b].iter().enumerate() {
+                    block[k * len + j] = *s;
+                }
+            }
+            for k in 0..b {
+                plan.process(&mut block[k * len..(k + 1) * len], dir);
+            }
+            for j in 0..len {
+                let dst = base + j * stride;
+                for (k, d) in data[dst..dst + b].iter_mut().enumerate() {
+                    *d = block[k * len + j];
+                }
+            }
+            i += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fourier::dft_naive;
+    use crate::util::XorShift;
+
+    fn random(n: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = XorShift::new(seed);
+        (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect()
+    }
+
+    fn assert_close(a: &[Complex], b: &[Complex], tol: f64) {
+        let scale = b.iter().map(|c| c.abs()).fold(1.0_f64, f64::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((*x - *y).abs() <= tol * scale, "idx {i}: {x:?} vs {y:?}");
+        }
+    }
+
+    /// Naive N-D DFT by separable 1-D naive DFTs.
+    fn dft_nd_naive(input: &[Complex], shape: &[usize]) -> Vec<Complex> {
+        let mut buf = input.to_vec();
+        for axis in 0..shape.len() {
+            let len = shape[axis];
+            let stride: usize = shape[axis + 1..].iter().product();
+            let total = buf.len() / len;
+            let inner = stride;
+            let outer = total / inner;
+            for o in 0..outer {
+                for i in 0..inner {
+                    let base = o * len * stride + i;
+                    let line: Vec<Complex> =
+                        (0..len).map(|j| buf[base + j * stride]).collect();
+                    let out = dft_naive(&line);
+                    for (j, v) in out.into_iter().enumerate() {
+                        buf[base + j * stride] = v;
+                    }
+                }
+            }
+        }
+        buf
+    }
+
+    #[test]
+    fn matches_naive_2d() {
+        let shape = [6usize, 8];
+        let x = random(48, 7);
+        assert_close(&fftn(&x, &shape), &dft_nd_naive(&x, &shape), 1e-10);
+    }
+
+    #[test]
+    fn matches_naive_3d_mixed_sizes() {
+        let shape = [3usize, 4, 5];
+        let x = random(60, 8);
+        assert_close(&fftn(&x, &shape), &dft_nd_naive(&x, &shape), 1e-10);
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let shape = [4usize, 8, 16];
+        let x = random(shape.iter().product(), 9);
+        let y = fftn(&x, &shape);
+        let z = ifftn(&y, &shape);
+        assert_close(&z, &x, 1e-11);
+    }
+
+    #[test]
+    fn dim1_axes_are_noops() {
+        let shape = [1usize, 16, 1];
+        let x = random(16, 10);
+        let a = fftn(&x, &shape);
+        let b = fftn(&x, &[16]);
+        assert_close(&a, &b, 1e-12);
+    }
+
+    #[test]
+    fn separable_impulse_2d() {
+        // FFT of a centered impulse is a pure phase ramp with |X|=1.
+        let shape = [8usize, 8];
+        let mut x = vec![Complex::ZERO; 64];
+        x[0] = Complex::ONE;
+        let y = fftn(&x, &shape);
+        for c in y {
+            assert!((c.abs() - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! `ffcz` — command-line interface to the FFCz dual-domain compression
+//! system.
+//!
+//! Subcommands (clap is unavailable offline; parsing is hand-rolled):
+//!
+//! ```text
+//! ffcz compress   --input f.ffld --output f.fz [--base sz-like]
+//!                 [--eb 1e-3] [--db 1e-3 | --power-spectrum 1e-3]
+//! ffcz decompress --input f.fz --output f.ffld
+//! ffcz verify     --original f.ffld --archive f.fz [--eb ..] [--db ..]
+//! ffcz synth      --dataset nyx-baryon --scale 32 --output f.ffld
+//! ffcz experiment <fig1|table2|...|all> [--scale 32] [--out results]
+//! ffcz pipeline   --instances 4 --scale 32 [--sequential]
+//! ffcz info       --archive f.fz
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use ffcz::compressors::by_name;
+use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
+use ffcz::correction::{self, BoundSpec, FfczArchive, FfczConfig, FrequencyBound};
+use ffcz::data::{io, synth};
+use ffcz::experiments::{self, ExpOptions};
+use ffcz::metrics::QualityReport;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let (positional, flags) = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "compress" => cmd_compress(&flags),
+        "decompress" => cmd_decompress(&flags),
+        "verify" => cmd_verify(&flags),
+        "synth" => cmd_synth(&flags),
+        "experiment" => cmd_experiment(&positional, &flags),
+        "pipeline" => cmd_pipeline(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `ffcz help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ffcz — spectrum-preserving lossy compression (FFCz reproduction)\n\
+         \n\
+         usage: ffcz <command> [flags]\n\
+         \n\
+         commands:\n\
+         \x20 compress    --input F --output F [--base sz-like|zfp-like|sperr-like]\n\
+         \x20             [--eb REL] [--db REL | --power-spectrum REL]\n\
+         \x20 decompress  --input F --output F\n\
+         \x20 verify      --original F --archive F [--eb REL] [--db REL]\n\
+         \x20 synth       --dataset NAME --scale N --output F   (nyx-baryon, nyx-dm,\n\
+         \x20             s3d-co2, hedm, eeg)\n\
+         \x20 experiment  <id|all> [--scale N] [--out DIR] [--artifacts DIR]\n\
+         \x20 pipeline    [--instances N] [--scale N] [--sequential]\n\
+         \x20 info        --archive F"
+    );
+}
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // boolean flags take no value; detect by next token
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    (positional, flags)
+}
+
+fn get<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str> {
+    flags
+        .get(key)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+}
+
+fn parse_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<f64>()
+            .with_context(|| format!("--{key} expects a number, got '{v}'")),
+    }
+}
+
+fn build_config(flags: &HashMap<String, String>) -> Result<FfczConfig> {
+    let eb = parse_f64(flags, "eb", 1e-3)?;
+    let cfg = if let Some(ps) = flags.get("power-spectrum") {
+        let p: f64 = ps.parse().context("--power-spectrum expects a number")?;
+        FfczConfig::power_spectrum(eb, p)
+    } else {
+        let db = parse_f64(flags, "db", 1e-3)?;
+        FfczConfig {
+            spatial: BoundSpec::Relative(eb),
+            frequency: FrequencyBound::Uniform(BoundSpec::Relative(db)),
+            max_iters: 200,
+            max_quant_retries: 3,
+        }
+    };
+    Ok(cfg)
+}
+
+fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
+    let input = PathBuf::from(get(flags, "input")?);
+    let output = PathBuf::from(get(flags, "output")?);
+    let base_name = flags.get("base").map(|s| s.as_str()).unwrap_or("sz-like");
+    let base = by_name(base_name).ok_or_else(|| anyhow::anyhow!("unknown base {base_name}"))?;
+    let cfg = build_config(flags)?;
+
+    let field = io::load(&input)?;
+    let archive = correction::compress(&field, base.as_ref(), &cfg)?;
+    let bytes = archive.to_bytes();
+    std::fs::write(&output, &bytes)?;
+    println!(
+        "compressed {} ({} samples) -> {} ({}, ratio {:.1}, base {}, edits {})",
+        input.display(),
+        field.len(),
+        output.display(),
+        ffcz::util::human_bytes(bytes.len()),
+        field.original_bytes() as f64 / bytes.len() as f64,
+        ffcz::util::human_bytes(archive.base_bytes()),
+        ffcz::util::human_bytes(archive.edit_bytes()),
+    );
+    println!(
+        "POCS: {} iterations, {} spatial + {} frequency active edits{}",
+        archive.stats.iterations,
+        archive.stats.active_spat,
+        archive.stats.active_freq,
+        if archive.stats.used_raw_fallback {
+            " (raw-edit fallback)"
+        } else {
+            ""
+        }
+    );
+    Ok(())
+}
+
+fn cmd_decompress(flags: &HashMap<String, String>) -> Result<()> {
+    let input = PathBuf::from(get(flags, "input")?);
+    let output = PathBuf::from(get(flags, "output")?);
+    let archive = FfczArchive::from_bytes(&std::fs::read(&input)?)?;
+    let field = correction::decompress(&archive)?;
+    io::save(&field, &output)?;
+    println!(
+        "decompressed {} -> {} (shape {:?})",
+        input.display(),
+        output.display(),
+        field.shape()
+    );
+    Ok(())
+}
+
+fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
+    let original = io::load(&PathBuf::from(get(flags, "original")?))?;
+    let archive =
+        FfczArchive::from_bytes(&std::fs::read(PathBuf::from(get(flags, "archive")?))?)?;
+    let recon = correction::decompress(&archive)?;
+    let cfg = build_config(flags)?;
+    let report = correction::verify(&original, &recon, &cfg);
+    let quality = QualityReport::compute(&original, &recon);
+    println!(
+        "spatial:   {} (max ratio {:.4})",
+        if report.spatial_ok { "OK" } else { "VIOLATED" },
+        report.max_spatial_ratio
+    );
+    println!(
+        "frequency: {} (max ratio {:.4})",
+        if report.frequency_ok { "OK" } else { "VIOLATED" },
+        report.max_frequency_ratio
+    );
+    println!(
+        "PSNR {:.2} dB, SSNR {:.2} dB, max |ε| {:.3e}, max RFE {:.3e}",
+        quality.psnr_db, quality.ssnr_db, quality.max_abs_err, quality.max_rfe
+    );
+    if !(report.spatial_ok && report.frequency_ok) {
+        bail!("dual-domain verification failed");
+    }
+    Ok(())
+}
+
+fn cmd_synth(flags: &HashMap<String, String>) -> Result<()> {
+    let dataset = get(flags, "dataset")?;
+    let scale: usize = parse_f64(flags, "scale", 32.0)? as usize;
+    let output = PathBuf::from(get(flags, "output")?);
+    let suite = synth::benchmark_suite(scale);
+    let field = suite
+        .into_iter()
+        .find(|(n, _)| n == dataset)
+        .map(|(_, f)| f)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    io::save(&field, &output)?;
+    println!(
+        "wrote {} (shape {:?}, {})",
+        output.display(),
+        field.shape(),
+        ffcz::util::human_bytes(field.original_bytes())
+    );
+    Ok(())
+}
+
+fn cmd_experiment(positional: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let Some(id) = positional.first() else {
+        bail!("experiment id required: {:?} or 'all'", experiments::ALL);
+    };
+    let mut opts = ExpOptions::default();
+    opts.scale = parse_f64(flags, "scale", opts.scale as f64)? as usize;
+    if let Some(out) = flags.get("out") {
+        opts.out_dir = out.into();
+    }
+    if let Some(dir) = flags.get("artifacts") {
+        opts.artifact_dir = dir.into();
+    }
+    experiments::run(id, &opts)
+}
+
+fn cmd_pipeline(flags: &HashMap<String, String>) -> Result<()> {
+    let n: usize = parse_f64(flags, "instances", 4.0)? as usize;
+    let scale: usize = parse_f64(flags, "scale", 32.0)? as usize;
+    let base_name = flags.get("base").map(|s| s.as_str()).unwrap_or("sz-like");
+    let base = by_name(base_name).ok_or_else(|| anyhow::anyhow!("unknown base {base_name}"))?;
+    let mut cfg = PipelineConfig::new(build_config(flags)?);
+    if flags.contains_key("sequential") {
+        cfg.mode = ExecMode::Sequential;
+    }
+    let instances: Vec<_> = (0..n)
+        .map(|i| {
+            (
+                format!("snap{i}"),
+                synth::grf::GrfBuilder::new(&[scale, scale, scale])
+                    .lognormal(1.2)
+                    .seed(300 + i as u64)
+                    .build(),
+            )
+        })
+        .collect();
+    let report = run_pipeline(instances, base.as_ref(), &cfg)?;
+    print!("{}", report.timeline_text());
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let archive =
+        FfczArchive::from_bytes(&std::fs::read(PathBuf::from(get(flags, "archive")?))?)?;
+    println!("base compressor : {}", archive.base_name);
+    println!(
+        "base payload    : {}",
+        ffcz::util::human_bytes(archive.base_bytes())
+    );
+    println!(
+        "edit payload    : {}",
+        ffcz::util::human_bytes(archive.edit_bytes())
+    );
+    println!("iterations      : {}", archive.stats.iterations);
+    println!("active spatial  : {}", archive.stats.active_spat);
+    println!("active frequency: {}", archive.stats.active_freq);
+    println!("raw fallback    : {}", archive.stats.used_raw_fallback);
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Quality and cost metrics used throughout the paper's evaluation:
+//! PSNR (spatial), SSNR (spectral, §V-A), relative frequency error, max
+//! absolute/pointwise error, bitrate, and compression ratio.
+
+use crate::data::Field;
+use crate::fourier::{fftn, Complex};
+
+/// Collected quality metrics for a (original, reconstruction) pair.
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    /// Peak signal-to-noise ratio in the spatial domain (dB).
+    pub psnr_db: f64,
+    /// Spectral signal-to-noise ratio (dB), paper §V-A.
+    pub ssnr_db: f64,
+    /// Max absolute spatial error.
+    pub max_abs_err: f64,
+    /// Max relative frequency error (RFE): max_l |δ_l| / max_k |X_k|.
+    pub max_rfe: f64,
+    /// Root-mean-square spatial error.
+    pub rmse: f64,
+}
+
+impl QualityReport {
+    /// Compute all metrics. `O(N log N)` (one FFT per field).
+    pub fn compute(original: &Field, reconstruction: &Field) -> Self {
+        assert_eq!(original.shape(), reconstruction.shape());
+        let psnr_db = psnr(original, reconstruction);
+        let (ssnr_db, max_rfe) = spectral_metrics(original, reconstruction);
+        let (max_abs_err, rmse) = spatial_errors(original, reconstruction);
+        Self {
+            psnr_db,
+            ssnr_db,
+            max_abs_err,
+            max_rfe,
+            rmse,
+        }
+    }
+}
+
+/// Max absolute error and RMSE.
+pub fn spatial_errors(a: &Field, b: &Field) -> (f64, f64) {
+    let mut max_err = 0.0f64;
+    let mut se = 0.0f64;
+    for (&x, &y) in a.data().iter().zip(b.data()) {
+        let e = (y - x).abs();
+        max_err = max_err.max(e);
+        se += e * e;
+    }
+    (max_err, (se / a.len() as f64).sqrt())
+}
+
+/// Peak signal-to-noise ratio in dB: `20 log10(range / RMSE)`.
+pub fn psnr(original: &Field, reconstruction: &Field) -> f64 {
+    let (_, rmse) = spatial_errors(original, reconstruction);
+    let range = original.value_span();
+    if rmse == 0.0 {
+        f64::INFINITY
+    } else if range == 0.0 {
+        f64::NEG_INFINITY
+    } else {
+        20.0 * (range / rmse).log10()
+    }
+}
+
+/// Spectral signal-to-noise ratio (dB) and max relative frequency error.
+///
+/// `SSNR = 10 log10( Σ|X_k|² / Σ|X_k − X̂_k|² )`,
+/// `RFE_l = |δ_l| / max_k |X_k|` (paper §V-A).
+pub fn spectral_metrics(original: &Field, reconstruction: &Field) -> (f64, f64) {
+    let to_complex = |f: &Field| -> Vec<Complex> {
+        f.data().iter().map(|&v| Complex::new(v, 0.0)).collect()
+    };
+    let x = fftn(&to_complex(original), original.shape());
+    let x_hat = fftn(&to_complex(reconstruction), reconstruction.shape());
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    let mut max_mag = 0.0f64;
+    let mut max_err = 0.0f64;
+    for (a, b) in x.iter().zip(&x_hat) {
+        sig += a.norm_sqr();
+        noise += (*b - *a).norm_sqr();
+        max_mag = max_mag.max(a.abs());
+        max_err = max_err.max((*b - *a).abs());
+    }
+    let ssnr = if noise == 0.0 {
+        f64::INFINITY
+    } else if sig == 0.0 {
+        f64::NEG_INFINITY
+    } else {
+        10.0 * (sig / noise).log10()
+    };
+    let rfe = if max_mag == 0.0 { 0.0 } else { max_err / max_mag };
+    (ssnr, rfe)
+}
+
+/// Compression ratio: original bytes / compressed bytes.
+pub fn compression_ratio(field: &Field, compressed_bytes: usize) -> f64 {
+    field.original_bytes() as f64 / compressed_bytes.max(1) as f64
+}
+
+/// Bitrate: compressed bits per sample.
+pub fn bitrate(field: &Field, compressed_bytes: usize) -> f64 {
+    (compressed_bytes * 8) as f64 / field.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Precision;
+    use crate::util::XorShift;
+
+    fn noisy_pair(n: usize, amp: f64, seed: u64) -> (Field, Field) {
+        let mut rng = XorShift::new(seed);
+        let orig: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin() * 10.0).collect();
+        let recon: Vec<f64> = orig.iter().map(|&v| v + rng.uniform(-amp, amp)).collect();
+        (
+            Field::new(&[n], orig, Precision::Double),
+            Field::new(&[n], recon, Precision::Double),
+        )
+    }
+
+    #[test]
+    fn identical_fields_infinite_snr() {
+        let (a, _) = noisy_pair(256, 0.0, 1);
+        let r = QualityReport::compute(&a, &a);
+        assert!(r.psnr_db.is_infinite() && r.ssnr_db.is_infinite());
+        assert_eq!(r.max_abs_err, 0.0);
+        assert_eq!(r.max_rfe, 0.0);
+    }
+
+    #[test]
+    fn psnr_decreases_with_noise() {
+        let (a, b1) = noisy_pair(1024, 0.01, 2);
+        let (_, b2) = noisy_pair(1024, 0.1, 2);
+        assert!(psnr(&a, &b1) > psnr(&a, &b2) + 15.0);
+    }
+
+    #[test]
+    fn parseval_ties_psnr_and_mse() {
+        // By Parseval, spatial MSE == spectral MSE / N (forward unnormalized),
+        // so SSNR == 10 log10(Σ|X|² / (N·MSE_spatial)).
+        let (a, b) = noisy_pair(512, 0.05, 3);
+        let (_, rmse) = spatial_errors(&a, &b);
+        let (ssnr, _) = spectral_metrics(&a, &b);
+        let x = fftn(
+            &a.data().iter().map(|&v| Complex::new(v, 0.0)).collect::<Vec<_>>(),
+            a.shape(),
+        );
+        let sig: f64 = x.iter().map(|c| c.norm_sqr()).sum();
+        let expect = 10.0 * (sig / (512.0 * rmse * rmse * 512.0)).log10();
+        assert!((ssnr - expect).abs() < 1e-6, "{ssnr} vs {expect}");
+    }
+
+    #[test]
+    fn ratio_and_bitrate() {
+        let f = Field::zeros(&[1000], Precision::Single);
+        assert_eq!(compression_ratio(&f, 400), 10.0);
+        assert_eq!(bitrate(&f, 400), 3.2);
+    }
+
+    #[test]
+    fn max_abs_err_is_linf() {
+        let a = Field::new(&[3], vec![0.0, 0.0, 0.0], Precision::Double);
+        let b = Field::new(&[3], vec![0.1, -0.5, 0.2], Precision::Double);
+        let r = QualityReport::compute(&a, &b);
+        assert!((r.max_abs_err - 0.5).abs() < 1e-15);
+    }
+}

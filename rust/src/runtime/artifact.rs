@@ -1,0 +1,134 @@
+//! Artifact registry: discovers AOT variants from `artifacts/manifest.txt`
+//! (the line-based twin of manifest.json emitted by `python/compile/aot.py`;
+//! the offline crate set has no JSON parser).
+//!
+//! Format, one variant per line: `name|dim0,dim1,…|max_iters|file`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-lowered correction variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub max_iters: usize,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+}
+
+impl VariantMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The set of variants available in an artifact directory.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactRegistry {
+    variants: Vec<VariantMeta>,
+}
+
+impl ArtifactRegistry {
+    /// Load the registry from `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; file paths resolve relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut variants = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 fields", lineno + 1);
+            }
+            let shape: Vec<usize> = parts[1]
+                .split(',')
+                .map(|s| s.trim().parse::<usize>())
+                .collect::<Result<_, _>>()
+                .with_context(|| format!("manifest line {}: bad shape", lineno + 1))?;
+            let max_iters: usize = parts[2]
+                .trim()
+                .parse()
+                .with_context(|| format!("manifest line {}: bad max_iters", lineno + 1))?;
+            variants.push(VariantMeta {
+                name: parts[0].trim().to_string(),
+                shape,
+                max_iters,
+                path: dir.join(parts[3].trim()),
+            });
+        }
+        Ok(Self { variants })
+    }
+
+    pub fn variants(&self) -> &[VariantMeta] {
+        &self.variants
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+
+    /// Find the variant matching a shape exactly.
+    pub fn find_exact(&self, shape: &[usize]) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.shape == shape)
+    }
+
+    /// Find by name.
+    pub fn find_name(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+ffcz_correct_1d_4096|4096|64|ffcz_correct_1d_4096.hlo.txt
+ffcz_correct_2d_64x64|64,64|64|ffcz_correct_2d_64x64.hlo.txt
+
+ffcz_correct_3d_16|16,16,16|32|ffcz_correct_3d_16.hlo.txt
+";
+
+    #[test]
+    fn parses_manifest() {
+        let r = ArtifactRegistry::parse(SAMPLE, Path::new("/arts")).unwrap();
+        assert_eq!(r.variants().len(), 3);
+        let v = r.find_name("ffcz_correct_2d_64x64").unwrap();
+        assert_eq!(v.shape, vec![64, 64]);
+        assert_eq!(v.max_iters, 64);
+        assert_eq!(v.path, Path::new("/arts/ffcz_correct_2d_64x64.hlo.txt"));
+        assert_eq!(v.element_count(), 4096);
+    }
+
+    #[test]
+    fn find_exact_matches_shape() {
+        let r = ArtifactRegistry::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert!(r.find_exact(&[4096]).is_some());
+        assert!(r.find_exact(&[16, 16, 16]).is_some());
+        assert!(r.find_exact(&[64]).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ArtifactRegistry::parse("bad line", Path::new("/a")).is_err());
+        assert!(ArtifactRegistry::parse("a|x,y|64|f", Path::new("/a")).is_err());
+        assert!(ArtifactRegistry::parse("a|4|many|f", Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(ArtifactRegistry::load(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}

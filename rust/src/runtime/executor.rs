@@ -1,0 +1,149 @@
+//! PJRT execution of the AOT correction artifacts.
+//!
+//! [`PjrtEngine`] owns one CPU PJRT client and a cache of compiled
+//! executables (compilation happens lazily on the first use of each
+//! variant — the analogue of cuFFT plan creation + CUDA module load).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactRegistry, VariantMeta};
+use crate::correction::PocsResult;
+use crate::fourier::Complex;
+
+/// Runs FFCz corrections through compiled HLO artifacts.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create an engine over an artifact directory (must contain
+    /// `manifest.txt`; build with `make artifacts`).
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let registry = ArtifactRegistry::load(artifact_dir)?;
+        if registry.is_empty() {
+            bail!("artifact registry at {} is empty", artifact_dir.display());
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            registry,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Does a compiled variant exist for this exact shape?
+    pub fn supports_shape(&self, shape: &[usize]) -> bool {
+        self.registry.find_exact(shape).is_some()
+    }
+
+    fn ensure_compiled(&mut self, variant: &VariantMeta) -> Result<()> {
+        if self.compiled.contains_key(&variant.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            variant
+                .path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", variant.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", variant.name))?;
+        self.compiled.insert(variant.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Run the correction loop for an error vector whose shape exactly
+    /// matches a compiled variant. Inputs/outputs are f64 on the Rust side
+    /// and f32 inside the artifact (the paper's GPU kernels are f32 too).
+    pub fn correct(
+        &mut self,
+        eps0: &[f64],
+        shape: &[usize],
+        e_bound: f64,
+        d_bound: f64,
+    ) -> Result<PocsResult> {
+        let variant = self
+            .registry
+            .find_exact(shape)
+            .ok_or_else(|| anyhow::anyhow!("no artifact variant for shape {shape:?}"))?
+            .clone();
+        self.ensure_compiled(&variant)?;
+        let exe = self.compiled.get(&variant.name).unwrap();
+
+        let eps_f32: Vec<f32> = eps0.iter().map(|&v| v as f32).collect();
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let eps_lit = xla::Literal::vec1(&eps_f32).reshape(&dims)?;
+        let e_lit = xla::Literal::scalar(e_bound as f32);
+        let d_lit = xla::Literal::scalar(d_bound as f32);
+
+        let result = exe.execute::<xla::Literal>(&[eps_lit, e_lit, d_lit])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 6 {
+            bail!("artifact returned {} outputs, expected 6", outs.len());
+        }
+        let corrected: Vec<f32> = outs[0].to_vec()?;
+        let spat: Vec<f32> = outs[1].to_vec()?;
+        let f_re: Vec<f32> = outs[2].to_vec()?;
+        let f_im: Vec<f32> = outs[3].to_vec()?;
+        let iterations: i32 = outs[4].get_first_element()?;
+        // `converged` lowers as pred; convert to S32 for extraction (the
+        // crate's typed accessors reject PRED directly).
+        let converged = outs[5]
+            .convert(xla::PrimitiveType::S32)
+            .and_then(|l| l.get_first_element::<i32>())
+            .map(|v| v != 0)
+            .unwrap_or(false);
+
+        let spat_edits: Vec<f64> = spat.iter().map(|&v| v as f64).collect();
+        let freq_edits: Vec<Complex> = f_re
+            .iter()
+            .zip(&f_im)
+            .map(|(&r, &i)| Complex::new(r as f64, i as f64))
+            .collect();
+        let active_spat = spat_edits.iter().filter(|&&v| v != 0.0).count();
+        let active_freq = freq_edits
+            .iter()
+            .filter(|c| c.re != 0.0 || c.im != 0.0)
+            .count();
+        Ok(PocsResult {
+            corrected_eps: corrected.iter().map(|&v| v as f64).collect(),
+            spat_edits,
+            freq_edits,
+            iterations: iterations.max(0) as usize,
+            converged,
+            active_spat,
+            active_freq,
+        })
+    }
+}
+
+// Integration tests live in rust/tests/pjrt_engine.rs (they need built
+// artifacts); unit tests here cover only artifact-independent pieces.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_requires_manifest() {
+        assert!(PjrtEngine::new(Path::new("/definitely/missing")).is_err());
+    }
+}

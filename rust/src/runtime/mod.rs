@@ -1,0 +1,21 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas correction
+//! artifacts (`artifacts/*.hlo.txt`) from the Rust hot path.
+//!
+//! Wiring (see /opt/xla-example/load_hlo for the reference pattern):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! The [`executor::PjrtEngine`] is the "accelerator path" of the
+//! coordinator — the analogue of the paper's GPU implementation — while
+//! `correction::pocs` is the native CPU baseline. Both implement the same
+//! loop semantics, letting experiments compare engines (paper Table IV /
+//! Fig. 9).
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactRegistry, VariantMeta};
+pub use executor::PjrtEngine;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,170 @@
+//! Minimal benchmarking harness.
+//!
+//! `criterion` is not available in the offline crate set, so `cargo bench`
+//! targets (declared with `harness = false`) use this module: warmup,
+//! repeated timing, and median/mean/σ reporting, plus derived throughput.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{median, Summary};
+
+/// Result of a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    /// Optional number of bytes processed per iteration (for GB/s).
+    pub bytes_per_iter: Option<usize>,
+    /// Optional number of "elements" processed per iteration.
+    pub elems_per_iter: Option<usize>,
+}
+
+impl BenchResult {
+    /// Throughput in GB/s if `bytes_per_iter` was provided.
+    pub fn gbps(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.median.as_secs_f64() / 1e9)
+    }
+
+    /// Elements per second if `elems_per_iter` was provided.
+    pub fn eps(&self) -> Option<f64> {
+        self.elems_per_iter
+            .map(|e| e as f64 / self.median.as_secs_f64())
+    }
+
+    /// One-line report string.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<40} {:>12} median  {:>12} mean  ±{:>10}",
+            self.name,
+            crate::util::human_duration(self.median),
+            crate::util::human_duration(self.mean),
+            crate::util::human_duration(self.stddev),
+        );
+        if let Some(g) = self.gbps() {
+            s.push_str(&format!("  {g:8.3} GB/s"));
+        }
+        if let Some(e) = self.eps() {
+            s.push_str(&format!("  {:.3e} elem/s", e));
+        }
+        s
+    }
+}
+
+/// Benchmark builder.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    samples: usize,
+    bytes_per_iter: Option<usize>,
+    elems_per_iter: Option<usize>,
+    min_time: Duration,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup: 2,
+            samples: 10,
+            bytes_per_iter: None,
+            elems_per_iter: None,
+            min_time: Duration::from_millis(50),
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(1);
+        self
+    }
+
+    pub fn bytes(mut self, b: usize) -> Self {
+        self.bytes_per_iter = Some(b);
+        self
+    }
+
+    pub fn elems(mut self, e: usize) -> Self {
+        self.elems_per_iter = Some(e);
+        self
+    }
+
+    /// Run `f` repeatedly and collect timing statistics. `f` should perform
+    /// one complete unit of work per call and return something observable so
+    /// the optimizer can't delete it (use [`black_box`]).
+    pub fn run<T>(self, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            // Batch very fast functions until min_time is exceeded so the
+            // timer resolution doesn't dominate.
+            let mut batch = 1usize;
+            loop {
+                let t0 = Instant::now();
+                for _ in 0..batch {
+                    black_box(f());
+                }
+                let dt = t0.elapsed();
+                if dt >= self.min_time || batch >= 1 << 20 {
+                    times.push(dt.as_secs_f64() / batch as f64);
+                    break;
+                }
+                batch *= 4;
+            }
+        }
+        let s = Summary::from_slice(&times);
+        BenchResult {
+            name: self.name,
+            iters: self.samples,
+            median: Duration::from_secs_f64(median(&times)),
+            mean: Duration::from_secs_f64(s.mean()),
+            stddev: Duration::from_secs_f64(s.stddev()),
+            min: Duration::from_secs_f64(s.min()),
+            bytes_per_iter: self.bytes_per_iter,
+            elems_per_iter: self.elems_per_iter,
+        }
+    }
+}
+
+/// Opaque value sink, preventing dead-code elimination of benchmark bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_times_something() {
+        // black_box keeps release mode from constant-folding the body.
+        let r = Bench::new("spin")
+            .warmup(1)
+            .samples(3)
+            .run(|| (0..black_box(1000u64)).sum::<u64>());
+        assert!(r.median.as_nanos() > 0, "median {:?}", r.median);
+        assert_eq!(r.iters, 3);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let r = Bench::new("bytes")
+            .warmup(0)
+            .samples(2)
+            .bytes(1_000_000)
+            .run(|| std::thread::sleep(Duration::from_millis(1)));
+        let g = r.gbps().unwrap();
+        assert!(g > 0.0 && g < 10.0, "gbps {g}");
+    }
+}

@@ -1,0 +1,60 @@
+//! Small shared utilities: seeded PRNG, statistics, timers, formatting.
+
+pub mod bench;
+pub mod rng;
+pub mod stats;
+
+pub use rng::XorShift;
+pub use stats::Summary;
+
+/// Format a byte count as a human-readable string (`1.50 MiB`).
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in adaptive units (`12.3 ms`, `1.20 s`).
+pub fn human_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{:.2} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(12), "12 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_duration_units() {
+        assert_eq!(
+            human_duration(std::time::Duration::from_millis(1500)),
+            "1.50 s"
+        );
+        assert_eq!(
+            human_duration(std::time::Duration::from_micros(1500)),
+            "1.50 ms"
+        );
+    }
+}

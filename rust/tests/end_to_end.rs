@@ -1,0 +1,144 @@
+//! End-to-end integration: every base compressor × every synthetic dataset
+//! × several bound configurations must compress, round-trip through bytes,
+//! decompress, and satisfy the dual-domain guarantee.
+
+use ffcz::compressors::paper_compressors;
+use ffcz::correction::{compress, decompress, verify, FfczArchive, FfczConfig};
+use ffcz::data::synth;
+use ffcz::metrics::QualityReport;
+
+#[test]
+fn full_matrix_dual_bounds() {
+    let suite = synth::benchmark_suite(16);
+    for (name, field) in &suite {
+        for base in paper_compressors() {
+            let cfg = FfczConfig::relative(1e-3, 1e-3);
+            let archive = compress(field, base.as_ref(), &cfg)
+                .unwrap_or_else(|e| panic!("{name}/{}: compress failed: {e:#}", base.name()));
+            // Byte round-trip.
+            let bytes = archive.to_bytes();
+            let back = FfczArchive::from_bytes(&bytes)
+                .unwrap_or_else(|e| panic!("{name}/{}: parse failed: {e:#}", base.name()));
+            let recon = decompress(&back)
+                .unwrap_or_else(|e| panic!("{name}/{}: decompress failed: {e:#}", base.name()));
+            assert_eq!(recon.shape(), field.shape());
+            let rep = verify(field, &recon, &cfg);
+            assert!(
+                rep.spatial_ok && rep.frequency_ok,
+                "{name}/{}: dual bound violated ({rep:?})",
+                base.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn tighter_frequency_bounds_still_hold() {
+    let field = synth::grf::GrfBuilder::new(&[24, 24])
+        .lognormal(2.0)
+        .seed(77)
+        .build();
+    for base in paper_compressors() {
+        for db in [1e-3, 1e-4, 1e-5] {
+            let cfg = FfczConfig::relative(1e-3, db);
+            let archive = compress(&field, base.as_ref(), &cfg).unwrap();
+            let recon = decompress(&archive).unwrap();
+            let rep = verify(&field, &recon, &cfg);
+            assert!(
+                rep.spatial_ok && rep.frequency_ok,
+                "{} @ db={db}: {rep:?}",
+                base.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn quality_never_worse_than_base_alone() {
+    let field = synth::turbulence::TurbulenceBuilder::new(&[20, 20, 20])
+        .seed(5)
+        .build();
+    for base in paper_compressors() {
+        let payload = base
+            .compress(&field, ffcz::compressors::ErrorBound::Relative(1e-3))
+            .unwrap();
+        let recon_base = base.decompress(&payload).unwrap();
+        let q_base = QualityReport::compute(&field, &recon_base);
+
+        let cfg = FfczConfig::relative(1e-3, 1e-4);
+        let archive = compress(&field, base.as_ref(), &cfg).unwrap();
+        let recon = decompress(&archive).unwrap();
+        let q = QualityReport::compute(&field, &recon);
+        assert!(
+            q.max_rfe <= q_base.max_rfe * 1.01,
+            "{}: RFE {} vs base {}",
+            base.name(),
+            q.max_rfe,
+            q_base.max_rfe
+        );
+        assert!(
+            q.psnr_db >= q_base.psnr_db - 0.2,
+            "{}: PSNR {} vs base {}",
+            base.name(),
+            q.psnr_db,
+            q_base.psnr_db
+        );
+    }
+}
+
+#[test]
+fn one_dimensional_and_odd_shapes() {
+    // Non-power-of-two and 1D shapes exercise Bluestein + all paths.
+    for shape in [vec![1000usize], vec![17, 31], vec![7, 9, 11]] {
+        let n: usize = shape.iter().product();
+        let data: Vec<f64> = (0..n)
+            .map(|i| (i as f64 * 0.17).sin() * 3.0 + (i as f64 * 0.031).cos())
+            .collect();
+        let field = ffcz::data::Field::new(&shape, data, ffcz::data::Precision::Double);
+        let base = ffcz::compressors::szlike::SzLike::default();
+        let cfg = FfczConfig::relative(1e-3, 1e-3);
+        let archive = compress(&field, &base, &cfg).unwrap();
+        let recon = decompress(&archive).unwrap();
+        let rep = verify(&field, &recon, &cfg);
+        assert!(rep.spatial_ok && rep.frequency_ok, "shape {shape:?}: {rep:?}");
+    }
+}
+
+#[test]
+fn corrupted_archives_error_cleanly() {
+    let field = synth::eeg::EegBuilder::new(1024).seed(1).build();
+    let base = ffcz::compressors::szlike::SzLike::default();
+    let cfg = FfczConfig::relative(1e-3, 1e-3);
+    let bytes = compress(&field, &base, &cfg).unwrap().to_bytes();
+    // Truncations at various points must error, never panic.
+    for cut in [0, 4, 10, bytes.len() / 2, bytes.len() - 1] {
+        let r = FfczArchive::from_bytes(&bytes[..cut]);
+        assert!(r.is_err(), "truncation at {cut} accepted");
+    }
+    // A bit flip must error or produce a parseable-but-different archive —
+    // never panic.
+    let mut flipped = bytes.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0xFF;
+    let _ = FfczArchive::from_bytes(&flipped); // no panic = pass
+}
+
+#[test]
+fn power_spectrum_mode_across_compressors() {
+    let field = synth::grf::GrfBuilder::new(&[24, 24])
+        .lognormal(1.5)
+        .seed(9)
+        .build();
+    for base in paper_compressors() {
+        let cfg = FfczConfig::power_spectrum(1e-3, 1e-3);
+        let archive = compress(&field, base.as_ref(), &cfg).unwrap();
+        let recon = decompress(&archive).unwrap();
+        let ps0 = ffcz::fourier::power_spectrum(&field);
+        let ps1 = ffcz::fourier::power_spectrum(&recon);
+        assert!(
+            ps1.max_relative_error(&ps0) <= 1.1e-3,
+            "{}: spectrum ribbon violated",
+            base.name()
+        );
+    }
+}

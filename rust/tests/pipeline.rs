@@ -1,0 +1,104 @@
+//! Coordinator integration: pipelined vs sequential equivalence, sharding
+//! round-trips under correction, and backpressure behaviour.
+
+use ffcz::compressors::szlike::SzLike;
+use ffcz::coordinator::{run_pipeline, shard_field, unshard_field, ExecMode, PipelineConfig};
+use ffcz::correction::{decompress, verify, FfczConfig};
+use ffcz::data::synth;
+
+#[test]
+fn sharded_correction_roundtrip() {
+    // A large 3D snapshot sharded into slabs, each independently corrected,
+    // then reassembled: every shard (and thus the whole) within bounds.
+    let field = synth::grf::GrfBuilder::new(&[24, 16, 16])
+        .lognormal(1.5)
+        .seed(3)
+        .build();
+    let shards = shard_field(&field, 3);
+    assert_eq!(shards.len(), 3);
+    let base = SzLike::default();
+    let cfg = FfczConfig::relative(1e-3, 1e-3);
+    let mut recon_shards = Vec::new();
+    for shard in &shards {
+        let archive = ffcz::correction::compress(shard, &base, &cfg).unwrap();
+        let recon = decompress(&archive).unwrap();
+        let rep = verify(shard, &recon, &cfg);
+        assert!(rep.spatial_ok && rep.frequency_ok);
+        recon_shards.push(recon);
+    }
+    let whole = unshard_field(&recon_shards).unwrap();
+    assert_eq!(whole.shape(), field.shape());
+    // Per-shard spatial bounds imply the global spatial bound.
+    let e = ffcz::compressors::ErrorBound::Relative(1e-3).absolute_for(&field);
+    for (a, b) in field.data().iter().zip(whole.data()) {
+        // Shard-relative bounds may differ slightly from the global span;
+        // allow 4× slack (shards see a sub-span of the full range).
+        assert!((a - b).abs() <= 4.0 * e, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn deep_queue_and_single_instance() {
+    let base = SzLike::default();
+    let mut cfg = PipelineConfig::new(FfczConfig::relative(1e-3, 1e-3));
+    cfg.queue_depth = 16;
+    // Single instance: pipeline degenerates gracefully.
+    let one = vec![(
+        "only".to_string(),
+        synth::eeg::EegBuilder::new(2048).seed(1).build(),
+    )];
+    let report = run_pipeline(one, &base, &cfg).unwrap();
+    assert_eq!(report.archives.len(), 1);
+    assert!(report.makespan >= report.timings[0].edit_end - report.timings[0].compress_start);
+}
+
+#[test]
+fn empty_instance_list_is_ok() {
+    let base = SzLike::default();
+    let cfg = PipelineConfig::new(FfczConfig::relative(1e-3, 1e-3));
+    let report = run_pipeline(Vec::new(), &base, &cfg).unwrap();
+    assert!(report.archives.is_empty());
+    assert!(report.timings.is_empty());
+}
+
+#[test]
+fn pipelined_hides_editing_time() {
+    // With editing cheaper than compression (the paper's Obs. 3 setting),
+    // pipelined makespan must be well under the sequential one for a
+    // multi-instance stream.
+    let instances: Vec<_> = (0..6)
+        .map(|i| {
+            (
+                format!("i{i}"),
+                synth::grf::GrfBuilder::new(&[16, 16, 16])
+                    .lognormal(1.5)
+                    .seed(10 + i as u64)
+                    .build(),
+            )
+        })
+        .collect();
+    let base = SzLike::default();
+    let mut cfg = PipelineConfig::new(FfczConfig::relative(1e-3, 1e-3));
+    let piped = run_pipeline(instances.clone(), &base, &cfg).unwrap();
+    cfg.mode = ExecMode::Sequential;
+    let seq = run_pipeline(instances, &base, &cfg).unwrap();
+    // Makespan must not exceed sequential (with generous noise margin).
+    assert!(
+        piped.makespan.as_secs_f64() <= seq.makespan.as_secs_f64() * 1.15,
+        "pipelined {:?} vs sequential {:?}",
+        piped.makespan,
+        seq.makespan
+    );
+}
+
+#[test]
+fn per_instance_results_identical_to_direct_call() {
+    let field = synth::turbulence::TurbulenceBuilder::new(&[16, 16, 16])
+        .seed(2)
+        .build();
+    let base = SzLike::default();
+    let cfg = PipelineConfig::new(FfczConfig::relative(1e-3, 1e-3));
+    let report = run_pipeline(vec![("x".into(), field.clone())], &base, &cfg).unwrap();
+    let direct = ffcz::correction::compress(&field, &base, &cfg.ffcz).unwrap();
+    assert_eq!(report.archives[0].1.to_bytes(), direct.to_bytes());
+}

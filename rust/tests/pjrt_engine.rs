@@ -1,0 +1,114 @@
+//! Integration: the PJRT runtime executes AOT artifacts and matches the
+//! native Rust POCS engine. Skips (passes trivially) when `artifacts/` has
+//! not been built — run `make artifacts` first for full coverage.
+
+use std::path::Path;
+
+use ffcz::correction::{alternating_projection, check_dual_bounds, Bounds, PocsParams};
+use ffcz::runtime::PjrtEngine;
+use ffcz::util::XorShift;
+
+fn artifact_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+fn random_eps(n: usize, e: f64, seed: u64) -> Vec<f64> {
+    let mut rng = XorShift::new(seed);
+    (0..n).map(|_| rng.uniform(-e, e)).collect()
+}
+
+#[test]
+fn pjrt_engine_loads_and_corrects_1d() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut engine = PjrtEngine::new(dir).expect("engine");
+    assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
+    let shape = [4096usize];
+    if !engine.supports_shape(&shape) {
+        eprintln!("skipping: no 1d_4096 variant");
+        return;
+    }
+    let (e, d) = (0.05, 1.0);
+    let eps0 = random_eps(4096, e, 1);
+    let result = engine.correct(&eps0, &shape, e, d).expect("correct");
+    assert!(result.converged, "PJRT loop converged");
+    // Dual bounds hold (f32 artifact ⇒ relaxed tolerance on the check).
+    let (s_ok, f_ok, ms, mf) = check_dual_bounds(
+        &result.corrected_eps,
+        &shape,
+        &Bounds::Global(e * (1.0 + 1e-3)),
+        &Bounds::Global(d * (1.0 + 1e-3)),
+    );
+    assert!(s_ok && f_ok, "max_s {ms} max_f {mf}");
+}
+
+#[test]
+fn pjrt_matches_native_engine() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut engine = PjrtEngine::new(dir).expect("engine");
+    let shape = [4096usize];
+    if !engine.supports_shape(&shape) {
+        return;
+    }
+    let (e, d) = (0.05, 1.2);
+    let eps0 = random_eps(4096, e, 7);
+    let pjrt = engine.correct(&eps0, &shape, e, d).expect("pjrt");
+    let native = alternating_projection(
+        &eps0,
+        &shape,
+        &PocsParams {
+            spatial: Bounds::Global(e),
+            frequency: Bounds::Global(d),
+            max_iters: 64,
+        },
+    );
+    assert_eq!(pjrt.converged, native.converged);
+    // f32 vs f64 engines: compare within f32 tolerance.
+    let mut max_d = 0.0f64;
+    for (a, b) in pjrt.corrected_eps.iter().zip(&native.corrected_eps) {
+        max_d = max_d.max((a - b).abs());
+    }
+    assert!(max_d < 5e-4, "engines diverge by {max_d}");
+    // Iteration counts differ near the convergence boundary (f32 artifact
+    // stops at 1e-4 relative tolerance, native f64 polishes to 1e-10), but
+    // must stay in the same regime.
+    let (pi, ni) = (pjrt.iterations as i64, native.iterations as i64);
+    assert!(
+        pi <= ni * 3 + 3 && ni <= pi * 3 + 3,
+        "iterations {pi} vs {ni} — different regime"
+    );
+}
+
+#[test]
+fn pjrt_3d_variant_works() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut engine = PjrtEngine::new(dir).expect("engine");
+    let shape = [16usize, 16, 16];
+    if !engine.supports_shape(&shape) {
+        return;
+    }
+    let (e, d) = (0.1, 2.0);
+    let eps0 = random_eps(4096, e, 3);
+    let result = engine.correct(&eps0, &shape, e, d).expect("correct 3d");
+    assert!(result.converged);
+    let (s_ok, f_ok, ..) = check_dual_bounds(
+        &result.corrected_eps,
+        &shape,
+        &Bounds::Global(e * (1.0 + 1e-3)),
+        &Bounds::Global(d * (1.0 + 1e-3)),
+    );
+    assert!(s_ok && f_ok);
+}
+
+#[test]
+fn unknown_shape_is_rejected() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut engine = PjrtEngine::new(dir).expect("engine");
+    let eps0 = vec![0.0; 12];
+    assert!(engine.correct(&eps0, &[12], 0.1, 0.1).is_err());
+}

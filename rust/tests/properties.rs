@@ -1,0 +1,184 @@
+//! Property-based tests (proptest is unavailable offline; cases are drawn
+//! from the crate's seeded PRNG — deterministic, reproducible, and broad).
+//!
+//! Invariants under test:
+//! 1. POCS output always lies in the s-cube ∩ f-cube (when converged);
+//! 2. edits exactly reconstruct the correction (ε' = ε₀ + s + IFFT(f));
+//! 3. the edit codec round-trips bit-exactly and its dequantization error
+//!    is ≤ half a step;
+//! 4. Huffman/bit-I/O/varint round-trip arbitrary data;
+//! 5. every base compressor obeys its pointwise bound on adversarial
+//!    random fields;
+//! 6. FFT–IFFT identity on random shapes.
+
+use ffcz::compressors::{paper_compressors, ErrorBound};
+use ffcz::correction::{
+    alternating_projection, check_dual_bounds, Bounds, PocsParams, QuantizedEdits,
+};
+use ffcz::data::{Field, Precision};
+use ffcz::encoding::{huffman_decode, huffman_encode};
+use ffcz::fourier::{fftn, ifftn, Complex};
+use ffcz::util::XorShift;
+
+const CASES: usize = 25;
+
+fn random_shape(rng: &mut XorShift) -> Vec<usize> {
+    match rng.below(3) {
+        0 => vec![8 + rng.below(120)],
+        1 => vec![4 + rng.below(12), 4 + rng.below(12)],
+        _ => vec![3 + rng.below(5), 3 + rng.below(5), 3 + rng.below(5)],
+    }
+}
+
+#[test]
+fn prop_pocs_always_lands_in_intersection() {
+    let mut rng = XorShift::new(0xB0C5);
+    for case in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let n: usize = shape.iter().product();
+        let e = rng.uniform(1e-4, 1.0);
+        // Δ scaled to the expected |δ| magnitude so all regimes appear.
+        let d = rng.uniform(0.05, 3.0) * e * (n as f64).sqrt();
+        let eps0: Vec<f64> = (0..n).map(|_| rng.uniform(-e, e)).collect();
+        let params = PocsParams {
+            spatial: Bounds::Global(e),
+            frequency: Bounds::Global(d),
+            max_iters: 2000,
+        };
+        let r = alternating_projection(&eps0, &shape, &params);
+        assert!(r.converged, "case {case} shape {shape:?} did not converge");
+        let (s_ok, f_ok, ms, mf) =
+            check_dual_bounds(&r.corrected_eps, &shape, &params.spatial, &params.frequency);
+        assert!(
+            s_ok && f_ok,
+            "case {case} shape {shape:?}: max_s {ms} max_f {mf}"
+        );
+    }
+}
+
+#[test]
+fn prop_edits_reconstruct_correction() {
+    let mut rng = XorShift::new(77);
+    for case in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let n: usize = shape.iter().product();
+        let e = 0.1;
+        let d = rng.uniform(0.1, 1.0) * e * (n as f64).sqrt();
+        let eps0: Vec<f64> = (0..n).map(|_| rng.uniform(-e, e)).collect();
+        let params = PocsParams {
+            spatial: Bounds::Global(e),
+            frequency: Bounds::Global(d),
+            max_iters: 2000,
+        };
+        let r = alternating_projection(&eps0, &shape, &params);
+        let mut freq = r.freq_edits.clone();
+        ffcz::fourier::ifftn_inplace(&mut freq, &shape);
+        for i in 0..n {
+            let rebuilt = eps0[i] + r.spat_edits[i] + freq[i].re;
+            assert!(
+                (rebuilt - r.corrected_eps[i]).abs() < 1e-9,
+                "case {case} idx {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_edit_codec_roundtrip() {
+    let mut rng = XorShift::new(1234);
+    for _ in 0..CASES {
+        let n = 100 + rng.below(5000);
+        let density = rng.uniform(0.0, 0.3);
+        let amp = 10f64.powf(rng.uniform(-6.0, 3.0));
+        let edits: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.next_f64() < density {
+                    rng.uniform(-amp, amp)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let q = QuantizedEdits::quantize(&edits);
+        let bytes = q.to_bytes();
+        let mut pos = 0;
+        let q2 = QuantizedEdits::from_bytes(&bytes, &mut pos).unwrap();
+        assert_eq!(pos, bytes.len());
+        assert_eq!(q, q2);
+        let deq = q.dequantize();
+        for (a, b) in edits.iter().zip(&deq) {
+            assert!((a - b).abs() <= q.step / 2.0 + 1e-30);
+        }
+    }
+}
+
+#[test]
+fn prop_huffman_roundtrip_arbitrary_symbols() {
+    let mut rng = XorShift::new(555);
+    for _ in 0..CASES {
+        let n = rng.below(3000);
+        let alphabet = 1 + rng.below(300) as u16;
+        let syms: Vec<u16> = (0..n).map(|_| (rng.next_u64() as u16) % alphabet).collect();
+        let enc = huffman_encode(&syms);
+        let dec = huffman_decode(&enc, syms.len()).unwrap();
+        assert_eq!(syms, dec);
+    }
+}
+
+#[test]
+fn prop_base_compressors_respect_bounds() {
+    let mut rng = XorShift::new(9001);
+    for case in 0..12 {
+        let shape = random_shape(&mut rng);
+        let n: usize = shape.iter().product();
+        // Adversarial: mixture of smooth + spikes + flat zero runs.
+        let data: Vec<f64> = (0..n)
+            .map(|i| {
+                let smooth = (i as f64 * 0.1).sin() * 5.0;
+                let spike = if rng.next_f64() < 0.01 {
+                    rng.uniform(-100.0, 100.0)
+                } else {
+                    0.0
+                };
+                let zero_run = if (i / 37) % 3 == 0 { 0.0 } else { 1.0 };
+                (smooth + spike) * zero_run
+            })
+            .collect();
+        let field = Field::new(&shape, data, Precision::Double);
+        let eb_rel = 10f64.powf(rng.uniform(-4.0, -2.0));
+        let bound = ErrorBound::Relative(eb_rel);
+        let eb = bound.absolute_for(&field);
+        for base in paper_compressors() {
+            let payload = base.compress(&field, bound).unwrap();
+            let recon = base.decompress(&payload).unwrap();
+            let max_err = field
+                .data()
+                .iter()
+                .zip(recon.data())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(
+                max_err <= eb * (1.0 + 1e-12),
+                "case {case} {}: {max_err} > {eb}",
+                base.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fft_roundtrip_random_shapes() {
+    let mut rng = XorShift::new(31337);
+    for _ in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let n: usize = shape.iter().product();
+        let x: Vec<Complex> = (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect();
+        let y = ifftn(&fftn(&x, &shape), &shape);
+        let scale = x.iter().map(|c| c.abs()).fold(1.0f64, f64::max);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((*a - *b).abs() < 1e-10 * scale);
+        }
+    }
+}
