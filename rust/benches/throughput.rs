@@ -8,12 +8,78 @@ use ffcz::compressors::{paper_compressors, ErrorBound};
 use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
 use ffcz::correction::{correct_reconstruction, FfczConfig};
 use ffcz::data::synth;
+use ffcz::store::{encode_store, CodecSpec, StoreWriteOptions};
 use ffcz::util::bench::{black_box, Bench};
 
 fn main() {
     println!("== throughput benchmarks (scale 24) ==");
     per_dataset();
     pipeline_comparison();
+    store_comparison();
+}
+
+/// Whole-field FFCz compression vs chunked-parallel store encoding at
+/// 1/2/4 workers. Emits `BENCH_store.json` (median seconds + GB/s per
+/// configuration) for the perf trajectory.
+fn store_comparison() {
+    println!("== store benchmarks (32-cubed GRF) ==");
+    let field = synth::grf::GrfBuilder::new(&[32, 32, 32])
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(500)
+        .build();
+    let bytes = field.original_bytes();
+    let spec = CodecSpec::Ffcz {
+        base: "sz-like".into(),
+        spatial_rel: 1e-3,
+        frequency_rel: Some(1e-3),
+    };
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+
+    // Baseline: whole-field compress + correct (single chunk, one worker).
+    let whole_opts = StoreWriteOptions::new(&[32, 32, 32]).workers(1);
+    let r = Bench::new("store_whole_field".to_string())
+        .bytes(bytes)
+        .samples(3)
+        .run(|| black_box(encode_store(&field, &spec, &whole_opts).unwrap().0.len()));
+    println!("{}", r.report());
+    rows.push((
+        "whole_field".to_string(),
+        r.median.as_secs_f64(),
+        r.gbps().unwrap_or(0.0),
+    ));
+
+    // Chunked-parallel: 8 chunks of 16³, varying worker count.
+    for workers in [1usize, 2, 4] {
+        let opts = StoreWriteOptions::new(&[16, 16, 16]).workers(workers);
+        let r = Bench::new(format!("store_chunked_16cubed_w{workers}"))
+            .bytes(bytes)
+            .samples(3)
+            .run(|| black_box(encode_store(&field, &spec, &opts).unwrap().0.len()));
+        println!("{}", r.report());
+        rows.push((
+            format!("chunked_w{workers}"),
+            r.median.as_secs_f64(),
+            r.gbps().unwrap_or(0.0),
+        ));
+    }
+
+    // Hand-rolled JSON (no serde in the offline crate universe).
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"store_throughput\",\n");
+    json.push_str("  \"field\": [32, 32, 32],\n  \"configs\": [\n");
+    for (i, (name, secs, gbps)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"median_s\": {secs:.6}, \"gbps\": {gbps:.4}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write("BENCH_store.json", &json) {
+        eprintln!("warning: could not write BENCH_store.json: {e}");
+    } else {
+        println!("wrote BENCH_store.json");
+    }
 }
 
 fn per_dataset() {

@@ -17,7 +17,9 @@ impl Compressor for Identity {
 
     fn compress(&self, field: &Field, _bound: ErrorBound) -> Result<Vec<u8>> {
         let mut raw = Vec::new();
-        io::write_ffld(field, &mut raw)?;
+        // Exact f64 payload: identity must round-trip the in-memory samples
+        // bit-for-bit even when the source precision tag is Single.
+        io::write_ffld_exact(field, &mut raw)?;
         Ok(lossless_compress(&raw))
     }
 

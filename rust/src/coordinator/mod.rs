@@ -15,4 +15,5 @@ pub mod pipeline;
 pub mod sharding;
 
 pub use pipeline::{run_pipeline, ExecMode, InstanceTiming, PipelineConfig, PipelineReport};
+pub use pipeline::{run_pipeline_to_store, StorePipelineReport, StoreSink};
 pub use sharding::{shard_field, unshard_field};

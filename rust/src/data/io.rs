@@ -59,7 +59,41 @@ pub fn write_raw(field: &Field, path: &Path) -> Result<()> {
 }
 
 /// Serialize a field with shape metadata (`.ffld` container).
+///
+/// Payloads are stored in the field's *source precision* (format tags 2/3):
+/// a single-precision field costs 4 bytes per sample instead of the 8 the
+/// legacy layout (tags 0/1, always-f64 payload) spent. [`read_ffld`] still
+/// accepts the legacy layout.
 pub fn write_ffld<W: Write>(field: &Field, mut w: W) -> Result<()> {
+    w.write_all(FFLD_MAGIC)?;
+    w.write_all(&[match field.precision() {
+        Precision::Single => 2u8,
+        Precision::Double => 3u8,
+    }])?;
+    w.write_all(&(field.ndim() as u32).to_le_bytes())?;
+    for &d in field.shape() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    match field.precision() {
+        Precision::Single => {
+            for &v in field.data() {
+                w.write_all(&(v as f32).to_le_bytes())?;
+            }
+        }
+        Precision::Double => {
+            for &v in field.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serialize with a full-width f64 payload regardless of the precision tag
+/// (the legacy 0/1 layout). For in-memory containers where bit-exact
+/// roundtrip of the f64 samples matters more than size — the identity
+/// compressor's payload — not for files, where [`write_ffld`] is smaller.
+pub fn write_ffld_exact<W: Write>(field: &Field, mut w: W) -> Result<()> {
     w.write_all(FFLD_MAGIC)?;
     w.write_all(&[match field.precision() {
         Precision::Single => 0u8,
@@ -75,7 +109,8 @@ pub fn write_ffld<W: Write>(field: &Field, mut w: W) -> Result<()> {
     Ok(())
 }
 
-/// Deserialize a `.ffld` container.
+/// Deserialize a `.ffld` container (current tags 2/3 or the legacy 0/1
+/// layout, which stored every payload as f64 regardless of precision).
 pub fn read_ffld<R: Read>(mut r: R) -> Result<Field> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -84,9 +119,12 @@ pub fn read_ffld<R: Read>(mut r: R) -> Result<Field> {
     }
     let mut b1 = [0u8; 1];
     r.read_exact(&mut b1)?;
-    let precision = match b1[0] {
-        0 => Precision::Single,
-        1 => Precision::Double,
+    // (precision, f32 payload?)
+    let (precision, narrow_payload) = match b1[0] {
+        0 => (Precision::Single, false), // legacy: tagged single, f64 payload
+        1 => (Precision::Double, false),
+        2 => (Precision::Single, true),
+        3 => (Precision::Double, false),
         x => bail!("bad precision tag {x}"),
     };
     let mut b4 = [0u8; 4];
@@ -103,9 +141,17 @@ pub fn read_ffld<R: Read>(mut r: R) -> Result<Field> {
     }
     let n: usize = shape.iter().product();
     let mut data = Vec::with_capacity(n);
-    for _ in 0..n {
-        r.read_exact(&mut b8)?;
-        data.push(f64::from_le_bytes(b8));
+    if narrow_payload {
+        let mut f4 = [0u8; 4];
+        for _ in 0..n {
+            r.read_exact(&mut f4)?;
+            data.push(f32::from_le_bytes(f4) as f64);
+        }
+    } else {
+        for _ in 0..n {
+            r.read_exact(&mut b8)?;
+            data.push(f64::from_le_bytes(b8));
+        }
     }
     Ok(Field::new(&shape, data, precision))
 }
@@ -135,10 +181,42 @@ mod tests {
     }
 
     #[test]
-    fn ffld_roundtrip() {
+    fn ffld_roundtrip_double_exact() {
+        let f = Field::new(
+            &[2, 3],
+            vec![1.0, -2.5, 3.25, 0.0, 1e-8, 4.75],
+            Precision::Double,
+        );
+        let mut buf = Vec::new();
+        write_ffld(&f, &mut buf).unwrap();
+        let g = read_ffld(&buf[..]).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn ffld_single_stores_f32_payload() {
         let f = sample_field();
         let mut buf = Vec::new();
         write_ffld(&f, &mut buf).unwrap();
+        // Header (4 magic + 1 tag + 4 ndim + 2×8 shape) + 6 × 4-byte samples.
+        assert_eq!(buf.len(), 25 + 6 * 4);
+        let g = read_ffld(&buf[..]).unwrap();
+        assert_eq!(g.precision(), Precision::Single);
+        assert_eq!(g.shape(), f.shape());
+        for (a, b) in f.data().iter().zip(g.data()) {
+            assert_eq!(*a as f32, *b as f32, "beyond f32 precision: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ffld_reads_legacy_f64_layout() {
+        // Legacy tag 0/1 layout (f64 payload whatever the tag) still reads
+        // back bit-exactly — including values beyond f32 precision.
+        let f = sample_field();
+        let mut buf = Vec::new();
+        write_ffld_exact(&f, &mut buf).unwrap();
+        assert_eq!(buf[4], 0u8, "single-precision legacy tag");
+        assert_eq!(buf.len(), 25 + 6 * 8);
         let g = read_ffld(&buf[..]).unwrap();
         assert_eq!(f, g);
     }

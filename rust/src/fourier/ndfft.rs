@@ -6,9 +6,7 @@
 //! for row-major N-D transforms. Plans are cached per distinct axis length.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+use std::sync::{Mutex, OnceLock};
 
 use super::{Complex, Fft, FftDirection};
 
@@ -16,12 +14,14 @@ use super::{Complex, Fft, FftDirection};
 /// iteration over the same shape; rebuilding twiddle tables (and Bluestein
 /// chirps for odd sizes) every call dominated small-transform cost before
 /// this cache existed (see EXPERIMENTS.md §Perf).
-static PLAN_CACHE: Lazy<Mutex<HashMap<usize, std::sync::Arc<Fft>>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, std::sync::Arc<Fft>>>> = OnceLock::new();
 
 /// Fetch (or build) the shared plan for size `n`.
 pub fn plan_for(n: usize) -> std::sync::Arc<Fft> {
-    let mut cache = PLAN_CACHE.lock().unwrap();
+    let mut cache = PLAN_CACHE
+        .get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        .unwrap();
     cache
         .entry(n)
         .or_insert_with(|| std::sync::Arc::new(Fft::new(n)))

@@ -16,7 +16,11 @@
 //!   projection between the *s-cube* and *f-cube*, plus edit compaction,
 //!   quantization, and entropy coding;
 //! * [`coordinator`] — a streaming pipeline that overlaps base compression
-//!   of instance *i+1* with FFCz editing of instance *i* (paper Fig. 7d);
+//!   of instance *i+1* with FFCz editing of instance *i* (paper Fig. 7d),
+//!   with an optional chunked-store sink for streamed instances;
+//! * [`store`] — a zarrs-style chunked archive (`.ffcz` container): regular
+//!   chunk grid, per-chunk FFCz codec pipeline, parallel encode/decode, and
+//!   partial `read_region` decode;
 //! * [`runtime`] — a PJRT executor that runs the AOT-compiled JAX/Pallas
 //!   implementation of the projection loop from `artifacts/*.hlo.txt`;
 //! * [`data`] — n-dimensional fields and seeded synthetic generators that
@@ -46,6 +50,31 @@
 //! let report = ffcz::correction::verify(&field, &recon, &cfg);
 //! assert!(report.spatial_ok && report.frequency_ok);
 //! ```
+//!
+//! ## Archive format
+//!
+//! Two on-disk containers exist. A whole-field [`correction::FfczArchive`]
+//! (`.fz`) is a single base payload plus the entropy-coded edit block. The
+//! chunked **`.ffcz` store** ([`store`]) scales that to disk-resident
+//! arrays read in subregions:
+//!
+//! ```text
+//! "FFCZSTR1"            8-byte head magic
+//! chunk payloads        one codec output per chunk, row-major grid order
+//! manifest              versioned binary manifest (see below)
+//! footer                manifest offset u64 LE · manifest len u64 LE ·
+//!                       "FFCZEND1"              (24 bytes total)
+//! ```
+//!
+//! The manifest (version 1, varint-based — see [`store::manifest`] for the
+//! field-by-field layout) records the array shape and source precision,
+//! the regular chunk grid, the codec chain (base compressor + FFCz bounds,
+//! or lossless), and a per-chunk table of byte ranges plus dual-domain
+//! verification stats: bit-packed `spatial_ok` / `frequency_ok` flags and
+//! the max spatial/frequency bound ratios measured at encode time. Readers
+//! parse footer + manifest only and fetch chunks on demand, so
+//! [`store::Store::read_region`] decodes exactly the chunks intersecting
+//! the requested window.
 
 pub mod compressors;
 pub mod coordinator;
@@ -56,6 +85,7 @@ pub mod experiments;
 pub mod fourier;
 pub mod metrics;
 pub mod runtime;
+pub mod store;
 pub mod util;
 
 /// Convenient re-exports of the most commonly used types.
@@ -67,4 +97,5 @@ pub mod prelude {
     pub use crate::data::Field;
     pub use crate::fourier::{Complex, Fft};
     pub use crate::metrics::QualityReport;
+    pub use crate::store::{CodecSpec, Store, StoreWriteOptions};
 }

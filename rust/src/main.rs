@@ -10,7 +10,8 @@
 //! ffcz verify     --original f.ffld --archive f.fz [--eb ..] [--db ..]
 //! ffcz synth      --dataset nyx-baryon --scale 32 --output f.ffld
 //! ffcz experiment <fig1|table2|...|all> [--scale 32] [--out results]
-//! ffcz pipeline   --instances 4 --scale 32 [--sequential]
+//! ffcz pipeline   --instances 4 --scale 32 [--sequential] [--store dir]
+//! ffcz archive    create|extract|inspect|read-region …  (chunked .ffcz store)
 //! ffcz info       --archive f.fz
 //! ```
 
@@ -21,11 +22,12 @@ use std::process::ExitCode;
 use anyhow::{bail, Context, Result};
 
 use ffcz::compressors::by_name;
-use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
+use ffcz::coordinator::{run_pipeline, run_pipeline_to_store, ExecMode, PipelineConfig, StoreSink};
 use ffcz::correction::{self, BoundSpec, FfczArchive, FfczConfig, FrequencyBound};
 use ffcz::data::{io, synth};
 use ffcz::experiments::{self, ExpOptions};
 use ffcz::metrics::QualityReport;
+use ffcz::store::{write_store, CodecSpec, Store, StoreWriteOptions};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -51,6 +53,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "synth" => cmd_synth(&flags),
         "experiment" => cmd_experiment(&positional, &flags),
         "pipeline" => cmd_pipeline(&flags),
+        "archive" => cmd_archive(&positional, &flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -75,8 +78,54 @@ fn print_usage() {
          \x20             s3d-co2, hedm, eeg)\n\
          \x20 experiment  <id|all> [--scale N] [--out DIR] [--artifacts DIR]\n\
          \x20 pipeline    [--instances N] [--scale N] [--sequential]\n\
+         \x20             [--store DIR] [--chunk A,B,C] [--workers N]\n\
+         \x20 archive     create --input F --output F [--chunk A,B,C]\n\
+         \x20             [--base NAME | --lossless] [--base-only] [--eb REL]\n\
+         \x20             [--db REL] [--workers N]\n\
+         \x20 archive     extract --input F --output F [--workers N]\n\
+         \x20 archive     inspect --input F [--chunks]\n\
+         \x20 archive     read-region --input F --origin A,B,C --shape A,B,C\n\
+         \x20             --output F [--workers N]\n\
          \x20 info        --archive F"
     );
+}
+
+/// Parse a comma- (or `x`-) separated axis list (`16,16,16`).
+fn parse_axes(s: &str, what: &str) -> Result<Vec<usize>> {
+    s.split([',', 'x'])
+        .map(|p| {
+            p.trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad {what} component '{p}' in '{s}'"))
+        })
+        .collect()
+}
+
+fn parse_workers(flags: &HashMap<String, String>) -> Result<usize> {
+    Ok(parse_f64(flags, "workers", 2.0)?.max(1.0) as usize)
+}
+
+/// Build the per-chunk codec spec from `--lossless` / `--base` /
+/// `--base-only` / `--eb` / `--db`.
+fn build_codec_spec(flags: &HashMap<String, String>) -> Result<CodecSpec> {
+    if flags.contains_key("lossless") {
+        return Ok(CodecSpec::Lossless);
+    }
+    let base = flags.get("base").map(|s| s.as_str()).unwrap_or("sz-like");
+    if by_name(base).is_none() {
+        bail!("unknown base compressor '{base}'");
+    }
+    let eb = parse_f64(flags, "eb", 1e-3)?;
+    let db = parse_f64(flags, "db", 1e-3)?;
+    Ok(CodecSpec::Ffcz {
+        base: base.to_string(),
+        spatial_rel: eb,
+        frequency_rel: if flags.contains_key("base-only") {
+            None
+        } else {
+            Some(db)
+        },
+    })
 }
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -268,8 +317,167 @@ fn cmd_pipeline(flags: &HashMap<String, String>) -> Result<()> {
             )
         })
         .collect();
+    if let Some(dir) = flags.get("store") {
+        // Streamed instances land directly in chunked .ffcz stores.
+        let mut sink = StoreSink::new(PathBuf::from(dir), build_codec_spec(flags)?);
+        sink.workers = parse_workers(flags)?;
+        if let Some(chunk) = flags.get("chunk") {
+            sink.chunk_shape = Some(parse_axes(chunk, "chunk")?);
+        }
+        let report = run_pipeline_to_store(instances, &sink)?;
+        for (name, path, w) in &report.outputs {
+            println!(
+                "{name}: {} ({} chunks, {}, all chunks {})",
+                path.display(),
+                w.chunk_count,
+                ffcz::util::human_bytes(w.total_bytes),
+                if w.all_chunks_ok { "OK" } else { "VIOLATED" },
+            );
+        }
+        println!(
+            "makespan {} (encode Σ {}, write Σ {})",
+            ffcz::util::human_duration(report.makespan),
+            ffcz::util::human_duration(report.encode_total),
+            ffcz::util::human_duration(report.write_total),
+        );
+        if !report.all_chunks_ok() {
+            bail!("dual-domain verification failed for at least one chunk");
+        }
+        return Ok(());
+    }
     let report = run_pipeline(instances, base.as_ref(), &cfg)?;
     print!("{}", report.timeline_text());
+    Ok(())
+}
+
+fn cmd_archive(positional: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let Some(sub) = positional.first() else {
+        bail!("archive subcommand required: create | extract | inspect | read-region");
+    };
+    match sub.as_str() {
+        "create" => cmd_archive_create(flags),
+        "extract" => cmd_archive_extract(flags),
+        "inspect" => cmd_archive_inspect(flags),
+        "read-region" => cmd_archive_read_region(flags),
+        other => bail!("unknown archive subcommand '{other}'"),
+    }
+}
+
+fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
+    let input = PathBuf::from(get(flags, "input")?);
+    let output = PathBuf::from(get(flags, "output")?);
+    let field = io::load(&input)?;
+    let spec = build_codec_spec(flags)?;
+    let workers = parse_workers(flags)?;
+    let opts = match flags.get("chunk") {
+        Some(c) => StoreWriteOptions {
+            chunk_shape: parse_axes(c, "chunk")?,
+            workers,
+        },
+        None => StoreWriteOptions::default_for(field.shape(), workers)?,
+    };
+    let chunk_shape = opts.chunk_shape.clone();
+    let report = write_store(&field, &spec, &opts, &output)?;
+    println!(
+        "archived {} (shape {:?}) -> {} ({}, ratio {:.1})",
+        input.display(),
+        field.shape(),
+        output.display(),
+        ffcz::util::human_bytes(report.total_bytes),
+        field.original_bytes() as f64 / report.total_bytes as f64,
+    );
+    println!(
+        "{} chunks of {:?} ({} payload + {} manifest), {} workers, {} — chunks {}",
+        report.chunk_count,
+        chunk_shape,
+        ffcz::util::human_bytes(report.payload_bytes),
+        ffcz::util::human_bytes(report.manifest_bytes),
+        workers,
+        ffcz::util::human_duration(report.elapsed),
+        if report.all_chunks_ok { "OK" } else { "VIOLATED" },
+    );
+    if !report.all_chunks_ok {
+        bail!("dual-domain verification failed for at least one chunk");
+    }
+    Ok(())
+}
+
+fn cmd_archive_extract(flags: &HashMap<String, String>) -> Result<()> {
+    let input = PathBuf::from(get(flags, "input")?);
+    let output = PathBuf::from(get(flags, "output")?);
+    let store = Store::open(&input)?;
+    let field = store.decompress_all(parse_workers(flags)?)?;
+    io::save(&field, &output)?;
+    println!(
+        "extracted {} -> {} (shape {:?}, {} chunks decoded)",
+        input.display(),
+        output.display(),
+        field.shape(),
+        store.chunks_decoded(),
+    );
+    Ok(())
+}
+
+fn cmd_archive_inspect(flags: &HashMap<String, String>) -> Result<()> {
+    let input = PathBuf::from(get(flags, "input")?);
+    let store = Store::open(&input)?;
+    let m = store.manifest();
+    println!("array shape  : {:?} ({})", m.shape, m.precision.name());
+    println!(
+        "chunk grid   : {:?} chunks of {:?}",
+        store.grid().grid_shape(),
+        m.chunk_shape
+    );
+    println!("codec        : {}", m.codec.describe());
+    println!(
+        "payload      : {} in {} chunks",
+        ffcz::util::human_bytes(m.payload_bytes() as usize),
+        m.chunks.len()
+    );
+    println!(
+        "dual bounds  : {}",
+        if m.all_chunks_ok() {
+            "OK (every chunk)"
+        } else {
+            "VIOLATED (at least one chunk)"
+        }
+    );
+    if flags.contains_key("chunks") {
+        println!("chunk        offset      bytes  s-ok f-ok  s-ratio  f-ratio  iters");
+        for (i, c) in m.chunks.iter().enumerate() {
+            println!(
+                "{:<10} {:>8} {:>10}  {:>4} {:>4}  {:>7.3} {:>8.3} {:>6}",
+                store.grid().chunk_key(i),
+                c.offset,
+                c.length,
+                if c.stats.spatial_ok { "yes" } else { "NO" },
+                if c.stats.frequency_ok { "yes" } else { "NO" },
+                c.stats.max_spatial_ratio,
+                c.stats.max_frequency_ratio,
+                c.stats.pocs_iterations,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_archive_read_region(flags: &HashMap<String, String>) -> Result<()> {
+    let input = PathBuf::from(get(flags, "input")?);
+    let output = PathBuf::from(get(flags, "output")?);
+    let origin = parse_axes(get(flags, "origin")?, "origin")?;
+    let shape = parse_axes(get(flags, "shape")?, "shape")?;
+    let store = Store::open(&input)?;
+    let region = store.read_region(&origin, &shape, parse_workers(flags)?)?;
+    io::save(&region, &output)?;
+    println!(
+        "read region origin {:?} shape {:?} from {} ({} of {} chunks decoded) -> {}",
+        origin,
+        shape,
+        input.display(),
+        store.chunks_decoded(),
+        store.grid().chunk_count(),
+        output.display(),
+    );
     Ok(())
 }
 

@@ -1,0 +1,68 @@
+//! Stub PJRT engine for builds without the `pjrt` feature.
+//!
+//! The real [`super::executor`] (compiled with `--features pjrt`) drives
+//! AOT-compiled HLO artifacts through the `xla` PJRT bindings, which do not
+//! exist in the offline crate universe. This stub keeps the public API —
+//! and therefore every caller (`experiments::fig9`, benches, examples,
+//! integration tests) — compiling unchanged: [`PjrtEngine::new`] always
+//! returns an error, which callers already treat as "accelerator
+//! unavailable, fall back to the native engine".
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifact::ArtifactRegistry;
+use crate::correction::PocsResult;
+
+/// Placeholder for the PJRT-backed correction engine.
+pub struct PjrtEngine {
+    registry: ArtifactRegistry,
+}
+
+impl PjrtEngine {
+    /// Always errors: PJRT support is not compiled in.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let _ = artifact_dir;
+        bail!(
+            "PJRT support is not compiled in — rebuild with \
+             `--features pjrt` and an available `xla` crate"
+        );
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Does a compiled variant exist for this exact shape?
+    pub fn supports_shape(&self, shape: &[usize]) -> bool {
+        self.registry.find_exact(shape).is_some()
+    }
+
+    /// Unreachable in practice (the constructor always errors), but kept
+    /// signature-compatible with the real engine.
+    pub fn correct(
+        &mut self,
+        _eps0: &[f64],
+        _shape: &[usize],
+        _e_bound: f64,
+        _d_bound: f64,
+    ) -> Result<PocsResult> {
+        bail!("PJRT support is not compiled in");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructor_errors() {
+        assert!(PjrtEngine::new(Path::new("artifacts")).is_err());
+    }
+}

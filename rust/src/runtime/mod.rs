@@ -12,6 +12,14 @@
 //! Fig. 9).
 
 pub mod artifact;
+// The real executor needs the `xla` PJRT bindings, which are absent from
+// the offline crate universe. Default builds get an API-identical stub
+// whose constructor errors; enable the `pjrt` cargo feature (and provide
+// an `xla` crate) for the real engine.
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 
 pub use artifact::{ArtifactRegistry, VariantMeta};

@@ -1,0 +1,419 @@
+//! Per-chunk codec pipeline.
+//!
+//! A [`ChunkCodec`] turns one chunk (a small [`Field`]) into bytes and
+//! back. The pipeline composes the crate's existing stages:
+//!
+//! * **FFCz** ([`CodecSpec::Ffcz`]) — any registered base
+//!   [`Compressor`](crate::compressors::Compressor)
+//!   (`sz-like`, `zfp-like`, `sperr-like`, `identity`), optionally followed
+//!   by the FFCz POCS correction stage, serialized as a per-chunk
+//!   [`FfczArchive`] (which already carries the entropy-coded edit payload
+//!   and the lossless backend);
+//! * **Lossless** ([`CodecSpec::Lossless`]) — bit-exact f64 samples through
+//!   [`crate::encoding::lossless_compress`].
+//!
+//! Relative bounds are resolved *per chunk* (against the chunk's own value
+//! span and spectrum), matching the per-shard bound semantics of
+//! [`crate::coordinator::sharding`]: the dual-domain guarantee holds for
+//! every chunk independently, which is exactly the granularity a partial
+//! reader observes.
+
+use anyhow::{bail, Result};
+
+use crate::compressors::{by_name, ErrorBound};
+use crate::correction::{self, CorrectionStats, EditsBlock, FfczArchive, FfczConfig};
+use crate::data::{Field, Precision};
+use crate::encoding::{lossless_compress, lossless_decompress, varint};
+
+use super::manifest::ChunkStats;
+
+/// One encoded chunk plus the dual-domain verification stats recorded in
+/// the manifest.
+#[derive(Debug, Clone)]
+pub struct EncodedChunk {
+    pub bytes: Vec<u8>,
+    pub stats: ChunkStats,
+}
+
+/// A per-chunk encode/decode pipeline. Implementations must be shareable
+/// across the store's worker threads.
+pub trait ChunkCodec: Send + Sync {
+    /// The serializable description of this codec (stored in the manifest).
+    fn spec(&self) -> CodecSpec;
+
+    /// Encode one chunk, verifying the advertised bounds.
+    fn encode(&self, chunk: &Field) -> Result<EncodedChunk>;
+
+    /// Decode a chunk; `shape`/`precision` come from the manifest and the
+    /// decoded field must match them.
+    fn decode(&self, bytes: &[u8], shape: &[usize], precision: Precision) -> Result<Field>;
+}
+
+/// Serializable codec description (the manifest's `codec` entry).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecSpec {
+    /// Bit-exact: raw little-endian f64 samples through the lossless
+    /// backend.
+    Lossless,
+    /// Error-bounded base compressor, optionally followed by the FFCz
+    /// dual-domain correction stage.
+    Ffcz {
+        /// Base compressor registry name (`sz-like`, …).
+        base: String,
+        /// Relative spatial bound E (per chunk).
+        spatial_rel: f64,
+        /// Relative frequency bound Δ (per chunk); `None` = base compressor
+        /// only, no correction stage and no frequency guarantee.
+        frequency_rel: Option<f64>,
+    },
+}
+
+impl CodecSpec {
+    /// Instantiate the codec. Errors if the base compressor is unknown.
+    pub fn build(&self) -> Result<Box<dyn ChunkCodec>> {
+        match self {
+            CodecSpec::Lossless => Ok(Box::new(LosslessChunkCodec)),
+            CodecSpec::Ffcz {
+                base,
+                spatial_rel,
+                frequency_rel,
+            } => {
+                if by_name(base).is_none() {
+                    bail!("unknown base compressor '{base}' in codec spec");
+                }
+                Ok(Box::new(FfczChunkCodec {
+                    base: base.clone(),
+                    spatial_rel: *spatial_rel,
+                    frequency_rel: *frequency_rel,
+                }))
+            }
+        }
+    }
+
+    /// One-line human description (for `archive inspect`).
+    pub fn describe(&self) -> String {
+        match self {
+            CodecSpec::Lossless => "lossless (bit-exact f64)".to_string(),
+            CodecSpec::Ffcz {
+                base,
+                spatial_rel,
+                frequency_rel: Some(db),
+            } => format!("{base} + FFCz (eb {spatial_rel:.3e}, db {db:.3e}, per chunk)"),
+            CodecSpec::Ffcz {
+                base, spatial_rel, ..
+            } => format!("{base} (eb {spatial_rel:.3e}, per chunk, no frequency bound)"),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            CodecSpec::Lossless => out.push(0u8),
+            CodecSpec::Ffcz {
+                base,
+                spatial_rel,
+                frequency_rel,
+            } => {
+                out.push(1u8);
+                varint::write(&mut out, base.len() as u64);
+                out.extend_from_slice(base.as_bytes());
+                out.extend_from_slice(&spatial_rel.to_le_bytes());
+                match frequency_rel {
+                    None => out.push(0u8),
+                    Some(db) => {
+                        out.push(1u8);
+                        out.extend_from_slice(&db.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let tag = *buf.get(*pos).ok_or_else(|| anyhow::anyhow!("truncated codec spec"))?;
+        *pos += 1;
+        match tag {
+            0 => Ok(CodecSpec::Lossless),
+            1 => {
+                let name_len = varint::read(buf, pos)? as usize;
+                if *pos + name_len > buf.len() {
+                    bail!("truncated codec base name");
+                }
+                let base = String::from_utf8(buf[*pos..*pos + name_len].to_vec())?;
+                *pos += name_len;
+                let spatial_rel = read_f64(buf, pos)?;
+                let has_freq = *buf
+                    .get(*pos)
+                    .ok_or_else(|| anyhow::anyhow!("truncated codec spec"))?;
+                *pos += 1;
+                let frequency_rel = match has_freq {
+                    0 => None,
+                    1 => Some(read_f64(buf, pos)?),
+                    x => bail!("bad frequency flag {x} in codec spec"),
+                };
+                Ok(CodecSpec::Ffcz {
+                    base,
+                    spatial_rel,
+                    frequency_rel,
+                })
+            }
+            x => bail!("unknown codec spec tag {x}"),
+        }
+    }
+}
+
+pub(crate) fn read_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    if *pos + 8 > buf.len() {
+        bail!("truncated f64");
+    }
+    let v = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+fn check_decoded(field: &Field, shape: &[usize], precision: Precision) -> Result<()> {
+    if field.shape() != shape {
+        bail!(
+            "decoded chunk shape {:?} does not match manifest {:?}",
+            field.shape(),
+            shape
+        );
+    }
+    let _ = precision; // precision is re-tagged by the caller
+    Ok(())
+}
+
+/// Base compressor + optional FFCz correction, one archive per chunk.
+struct FfczChunkCodec {
+    base: String,
+    spatial_rel: f64,
+    frequency_rel: Option<f64>,
+}
+
+impl ChunkCodec for FfczChunkCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Ffcz {
+            base: self.base.clone(),
+            spatial_rel: self.spatial_rel,
+            frequency_rel: self.frequency_rel,
+        }
+    }
+
+    fn encode(&self, chunk: &Field) -> Result<EncodedChunk> {
+        let base = by_name(&self.base)
+            .ok_or_else(|| anyhow::anyhow!("unknown base compressor '{}'", self.base))?;
+        let Some(db) = self.frequency_rel else {
+            // Base-only mode: no correction stage at all. The payload is
+            // still framed as an FfczArchive (with an empty edit block) so
+            // decode shares one path; only the spatial bound is verified,
+            // and `frequency_ok = true, ratio 0` records "not requested".
+            let bound = ErrorBound::Relative(self.spatial_rel);
+            let payload = base.compress(chunk, bound)?;
+            let recon = base.decompress(&payload)?;
+            let e = bound.absolute_for(chunk);
+            let max_err = chunk
+                .data()
+                .iter()
+                .zip(recon.data())
+                .map(|(x, r)| (r - x).abs())
+                .fold(0.0f64, f64::max);
+            let archive = FfczArchive {
+                base_name: self.base.clone(),
+                base_payload: payload,
+                edits: EditsBlock::Raw {
+                    n: chunk.len(),
+                    spat: Vec::new(),
+                    freq: Vec::new(),
+                },
+                stats: CorrectionStats {
+                    converged: true,
+                    ..CorrectionStats::default()
+                },
+            };
+            return Ok(EncodedChunk {
+                bytes: archive.to_bytes(),
+                stats: ChunkStats {
+                    spatial_ok: max_err <= e,
+                    frequency_ok: true,
+                    max_spatial_ratio: max_err / e,
+                    max_frequency_ratio: 0.0,
+                    pocs_iterations: 0,
+                },
+            });
+        };
+        let cfg = FfczConfig::relative(self.spatial_rel, db);
+        let archive = correction::compress(chunk, base.as_ref(), &cfg)?;
+        // Dual-domain verification against the original chunk; the outcome
+        // is recorded per chunk in the manifest.
+        let recon = correction::decompress(&archive)?;
+        let report = correction::verify(chunk, &recon, &cfg);
+        let stats = ChunkStats {
+            spatial_ok: report.spatial_ok,
+            frequency_ok: report.frequency_ok,
+            max_spatial_ratio: report.max_spatial_ratio,
+            max_frequency_ratio: report.max_frequency_ratio,
+            pocs_iterations: archive.stats.iterations as u32,
+        };
+        Ok(EncodedChunk {
+            bytes: archive.to_bytes(),
+            stats,
+        })
+    }
+
+    fn decode(&self, bytes: &[u8], shape: &[usize], precision: Precision) -> Result<Field> {
+        let archive = FfczArchive::from_bytes(bytes)?;
+        let field = correction::decompress(&archive)?;
+        check_decoded(&field, shape, precision)?;
+        Ok(Field::new(shape, field.into_data(), precision))
+    }
+}
+
+/// Bit-exact baseline codec.
+struct LosslessChunkCodec;
+
+impl ChunkCodec for LosslessChunkCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Lossless
+    }
+
+    fn encode(&self, chunk: &Field) -> Result<EncodedChunk> {
+        let mut raw = Vec::with_capacity(chunk.len() * 8);
+        for &v in chunk.data() {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(EncodedChunk {
+            bytes: lossless_compress(&raw),
+            stats: ChunkStats::exact(),
+        })
+    }
+
+    fn decode(&self, bytes: &[u8], shape: &[usize], precision: Precision) -> Result<Field> {
+        let raw = lossless_decompress(bytes)?;
+        let n: usize = shape.iter().product();
+        if raw.len() != n * 8 {
+            bail!(
+                "lossless chunk decodes to {} bytes, expected {}",
+                raw.len(),
+                n * 8
+            );
+        }
+        let data: Vec<f64> = raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Field::new(shape, data, precision))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::grf::GrfBuilder;
+
+    fn grf_chunk() -> Field {
+        GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(11).build()
+    }
+
+    #[test]
+    fn spec_roundtrips_bytes() {
+        for spec in [
+            CodecSpec::Lossless,
+            CodecSpec::Ffcz {
+                base: "sz-like".into(),
+                spatial_rel: 1e-3,
+                frequency_rel: Some(1e-3),
+            },
+            CodecSpec::Ffcz {
+                base: "zfp-like".into(),
+                spatial_rel: 1e-2,
+                frequency_rel: None,
+            },
+        ] {
+            let bytes = spec.to_bytes();
+            let mut pos = 0;
+            let back = CodecSpec::from_bytes(&bytes, &mut pos).unwrap();
+            assert_eq!(back, spec);
+            assert_eq!(pos, bytes.len());
+        }
+    }
+
+    #[test]
+    fn spec_rejects_unknown_base_and_bad_bytes() {
+        let spec = CodecSpec::Ffcz {
+            base: "nope".into(),
+            spatial_rel: 1e-3,
+            frequency_rel: None,
+        };
+        assert!(spec.build().is_err());
+        let mut pos = 0;
+        assert!(CodecSpec::from_bytes(&[9], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(CodecSpec::from_bytes(&[], &mut pos).is_err());
+    }
+
+    #[test]
+    fn lossless_codec_is_bit_exact() {
+        let chunk = grf_chunk();
+        let codec = CodecSpec::Lossless.build().unwrap();
+        let enc = codec.encode(&chunk).unwrap();
+        assert!(enc.stats.spatial_ok && enc.stats.frequency_ok);
+        let dec = codec
+            .decode(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        assert_eq!(dec.data(), chunk.data());
+    }
+
+    #[test]
+    fn ffcz_codec_roundtrips_within_bounds() {
+        let chunk = grf_chunk();
+        let spec = CodecSpec::Ffcz {
+            base: "sz-like".into(),
+            spatial_rel: 1e-3,
+            frequency_rel: Some(1e-3),
+        };
+        let codec = spec.build().unwrap();
+        let enc = codec.encode(&chunk).unwrap();
+        assert!(enc.stats.spatial_ok && enc.stats.frequency_ok);
+        assert!(enc.stats.max_spatial_ratio <= 1.0 + 1e-9);
+        let dec = codec
+            .decode(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        assert_eq!(dec.shape(), chunk.shape());
+        let e = chunk.value_span() * 1e-3;
+        for (a, b) in chunk.data().iter().zip(dec.data()) {
+            assert!((a - b).abs() <= e * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn base_only_mode_skips_correction_but_bounds_spatially() {
+        let chunk = grf_chunk();
+        let spec = CodecSpec::Ffcz {
+            base: "sz-like".into(),
+            spatial_rel: 1e-3,
+            frequency_rel: None,
+        };
+        let codec = spec.build().unwrap();
+        let enc = codec.encode(&chunk).unwrap();
+        assert!(enc.stats.spatial_ok);
+        assert!(enc.stats.frequency_ok, "frequency bound not requested");
+        assert_eq!(enc.stats.pocs_iterations, 0, "no POCS in base-only mode");
+        assert_eq!(enc.stats.max_frequency_ratio, 0.0);
+        let dec = codec
+            .decode(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        let e = chunk.value_span() * 1e-3;
+        for (a, b) in chunk.data().iter().zip(dec.data()) {
+            assert!((a - b).abs() <= e * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_wrong_shape() {
+        let chunk = grf_chunk();
+        let codec = CodecSpec::Lossless.build().unwrap();
+        let enc = codec.encode(&chunk).unwrap();
+        assert!(codec.decode(&enc.bytes, &[4, 4], chunk.precision()).is_err());
+    }
+}

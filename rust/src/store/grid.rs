@@ -1,0 +1,376 @@
+//! Regular chunk grid over a row-major n-d array (zarrs-style).
+//!
+//! The grid tiles the array with fixed-size chunks anchored at the origin;
+//! chunks on the trailing edge of each axis are clipped to the array bounds
+//! (*edge chunks*), so every sample belongs to exactly one chunk. Chunks
+//! are identified by a row-major linear index over the grid, or by a
+//! zarr-style key (`c/1/0/3`) for display.
+//!
+//! This generalizes [`crate::coordinator::sharding`] — an axis-0-only grid
+//! whose chunk extent divides the array extent produces exactly
+//! `shard_field`'s contiguous slabs — to arbitrary-axis tiling with
+//! random access.
+
+use anyhow::{bail, Result};
+
+/// A regular chunk grid: array shape + chunk shape, same dimensionality.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkGrid {
+    array_shape: Vec<usize>,
+    chunk_shape: Vec<usize>,
+    /// Chunks per axis: `ceil(array / chunk)`.
+    grid_shape: Vec<usize>,
+}
+
+impl ChunkGrid {
+    pub fn new(array_shape: &[usize], chunk_shape: &[usize]) -> Result<Self> {
+        if array_shape.is_empty() || array_shape.len() != chunk_shape.len() {
+            bail!(
+                "chunk shape {:?} does not match array shape {:?}",
+                chunk_shape,
+                array_shape
+            );
+        }
+        if array_shape.iter().any(|&d| d == 0) || chunk_shape.iter().any(|&d| d == 0) {
+            bail!("zero-extent axis in array {array_shape:?} or chunk {chunk_shape:?}");
+        }
+        let grid_shape = array_shape
+            .iter()
+            .zip(chunk_shape)
+            .map(|(&a, &c)| a.div_ceil(c))
+            .collect();
+        Ok(Self {
+            array_shape: array_shape.to_vec(),
+            chunk_shape: chunk_shape.to_vec(),
+            grid_shape,
+        })
+    }
+
+    /// Grid that splits only along axis 0 into at most `n` slabs — the
+    /// chunked-store analogue of [`crate::coordinator::sharding::shard_field`].
+    pub fn axis0(array_shape: &[usize], n: usize) -> Result<Self> {
+        if array_shape.is_empty() {
+            bail!("empty array shape");
+        }
+        let d0 = array_shape[0];
+        let k = n.clamp(1, d0.max(1));
+        let mut chunk_shape = array_shape.to_vec();
+        chunk_shape[0] = d0.div_ceil(k).max(1);
+        Self::new(array_shape, &chunk_shape)
+    }
+
+    pub fn array_shape(&self) -> &[usize] {
+        &self.array_shape
+    }
+
+    pub fn chunk_shape(&self) -> &[usize] {
+        &self.chunk_shape
+    }
+
+    pub fn grid_shape(&self) -> &[usize] {
+        &self.grid_shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.array_shape.len()
+    }
+
+    /// Total number of chunks.
+    pub fn chunk_count(&self) -> usize {
+        self.grid_shape.iter().product()
+    }
+
+    /// Row-major grid coordinates of a linear chunk index.
+    pub fn chunk_coords(&self, index: usize) -> Vec<usize> {
+        debug_assert!(index < self.chunk_count());
+        let mut rem = index;
+        let mut coords = vec![0usize; self.ndim()];
+        for d in (0..self.ndim()).rev() {
+            coords[d] = rem % self.grid_shape[d];
+            rem /= self.grid_shape[d];
+        }
+        coords
+    }
+
+    /// Linear chunk index of row-major grid coordinates.
+    pub fn chunk_index(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.ndim());
+        let mut lin = 0usize;
+        for (d, &c) in coords.iter().enumerate() {
+            debug_assert!(c < self.grid_shape[d]);
+            lin = lin * self.grid_shape[d] + c;
+        }
+        lin
+    }
+
+    /// Array-space origin of the chunk at `coords`.
+    pub fn chunk_origin(&self, coords: &[usize]) -> Vec<usize> {
+        coords
+            .iter()
+            .zip(&self.chunk_shape)
+            .map(|(&c, &s)| c * s)
+            .collect()
+    }
+
+    /// Extent of the chunk at `coords`, clipped to the array bounds (edge
+    /// chunks are smaller than the nominal chunk shape).
+    pub fn chunk_extent(&self, coords: &[usize]) -> Vec<usize> {
+        coords
+            .iter()
+            .zip(&self.chunk_shape)
+            .zip(&self.array_shape)
+            .map(|((&c, &s), &a)| s.min(a - c * s))
+            .collect()
+    }
+
+    /// Zarr-style chunk key for display (`c/1/0/3`).
+    pub fn chunk_key(&self, index: usize) -> String {
+        let coords = self.chunk_coords(index);
+        let mut key = String::from("c");
+        for c in coords {
+            key.push('/');
+            key.push_str(&c.to_string());
+        }
+        key
+    }
+
+    /// Linear indices of every chunk intersecting the region
+    /// `[origin, origin + shape)`, in ascending order. Errors if the region
+    /// is malformed or extends past the array.
+    pub fn chunks_intersecting(&self, origin: &[usize], shape: &[usize]) -> Result<Vec<usize>> {
+        self.validate_region(origin, shape)?;
+        if shape.iter().any(|&d| d == 0) {
+            return Ok(Vec::new());
+        }
+        // Per-axis inclusive chunk-coordinate range covered by the region.
+        let lo: Vec<usize> = origin
+            .iter()
+            .zip(&self.chunk_shape)
+            .map(|(&o, &c)| o / c)
+            .collect();
+        let hi: Vec<usize> = origin
+            .iter()
+            .zip(shape)
+            .zip(&self.chunk_shape)
+            .map(|((&o, &s), &c)| (o + s - 1) / c)
+            .collect();
+        let mut out = Vec::new();
+        let mut coords = lo.clone();
+        'outer: loop {
+            out.push(self.chunk_index(&coords));
+            for d in (0..self.ndim()).rev() {
+                coords[d] += 1;
+                if coords[d] <= hi[d] {
+                    continue 'outer;
+                }
+                coords[d] = lo[d];
+                if d == 0 {
+                    break 'outer;
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Check that `[origin, origin + shape)` lies inside the array.
+    pub fn validate_region(&self, origin: &[usize], shape: &[usize]) -> Result<()> {
+        if origin.len() != self.ndim() || shape.len() != self.ndim() {
+            bail!(
+                "region origin {:?} / shape {:?} dimensionality does not match array {:?}",
+                origin,
+                shape,
+                self.array_shape
+            );
+        }
+        for d in 0..self.ndim() {
+            // origin/shape come from the CLI; checked add so absurd values
+            // reject cleanly instead of wrapping in release builds.
+            let in_bounds = matches!(
+                origin[d].checked_add(shape[d]),
+                Some(end) if end <= self.array_shape[d]
+            );
+            if !in_bounds {
+                bail!(
+                    "region [{} + {}) exceeds axis {} extent {}",
+                    origin[d],
+                    shape[d],
+                    d,
+                    self.array_shape[d]
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Copy the subarray `[origin, origin + shape)` out of a row-major array.
+pub fn extract_subarray(
+    data: &[f64],
+    array_shape: &[usize],
+    origin: &[usize],
+    shape: &[usize],
+) -> Vec<f64> {
+    let n: usize = shape.iter().product();
+    let mut out = vec![0.0f64; n];
+    for_each_row(array_shape, origin, shape, |a_off, s_off, row| {
+        out[s_off..s_off + row].copy_from_slice(&data[a_off..a_off + row]);
+    });
+    out
+}
+
+/// Copy `src` (row-major, `shape`) into the subarray `[origin, origin +
+/// shape)` of a row-major destination array.
+pub fn insert_subarray(
+    dst: &mut [f64],
+    array_shape: &[usize],
+    origin: &[usize],
+    src: &[f64],
+    shape: &[usize],
+) {
+    debug_assert_eq!(src.len(), shape.iter().product::<usize>());
+    for_each_row(array_shape, origin, shape, |a_off, s_off, row| {
+        dst[a_off..a_off + row].copy_from_slice(&src[s_off..s_off + row]);
+    });
+}
+
+/// Visit every contiguous last-axis row of the subarray `[origin, origin +
+/// shape)`: `f(array_offset, sub_offset, row_len)`. Rows are contiguous in
+/// both the array and the subarray, so callers can `copy_from_slice`.
+fn for_each_row(
+    array_shape: &[usize],
+    origin: &[usize],
+    shape: &[usize],
+    mut f: impl FnMut(usize, usize, usize),
+) {
+    let ndim = array_shape.len();
+    debug_assert_eq!(origin.len(), ndim);
+    debug_assert_eq!(shape.len(), ndim);
+    if shape.iter().any(|&d| d == 0) {
+        return;
+    }
+    // Row-major strides of the enclosing array.
+    let mut astride = vec![1usize; ndim];
+    for d in (0..ndim.saturating_sub(1)).rev() {
+        astride[d] = astride[d + 1] * array_shape[d + 1];
+    }
+    // Row-major strides of the subarray.
+    let mut sstride = vec![1usize; ndim];
+    for d in (0..ndim.saturating_sub(1)).rev() {
+        sstride[d] = sstride[d + 1] * shape[d + 1];
+    }
+    let row = shape[ndim - 1];
+    let mut idx = vec![0usize; ndim]; // last axis stays 0
+    loop {
+        let mut a_off = 0usize;
+        let mut s_off = 0usize;
+        for d in 0..ndim {
+            a_off += (origin[d] + idx[d]) * astride[d];
+            s_off += idx[d] * sstride[d];
+        }
+        f(a_off, s_off, row);
+        // Odometer over every axis except the last.
+        let mut d = ndim as isize - 2;
+        loop {
+            if d < 0 {
+                return;
+            }
+            let du = d as usize;
+            idx[du] += 1;
+            if idx[du] < shape[du] {
+                break;
+            }
+            idx[du] = 0;
+            d -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shapes_and_edge_chunks() {
+        let g = ChunkGrid::new(&[10, 6], &[4, 4]).unwrap();
+        assert_eq!(g.grid_shape(), &[3, 2]);
+        assert_eq!(g.chunk_count(), 6);
+        // Interior chunk.
+        assert_eq!(g.chunk_extent(&[0, 0]), vec![4, 4]);
+        // Edge chunks are clipped.
+        assert_eq!(g.chunk_extent(&[2, 1]), vec![2, 2]);
+        assert_eq!(g.chunk_origin(&[2, 1]), vec![8, 4]);
+    }
+
+    #[test]
+    fn index_coord_roundtrip_and_keys() {
+        let g = ChunkGrid::new(&[8, 8, 8], &[4, 4, 4]).unwrap();
+        for i in 0..g.chunk_count() {
+            let c = g.chunk_coords(i);
+            assert_eq!(g.chunk_index(&c), i);
+        }
+        assert_eq!(g.chunk_key(0), "c/0/0/0");
+        assert_eq!(g.chunk_key(g.chunk_count() - 1), "c/1/1/1");
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(ChunkGrid::new(&[4, 4], &[4]).is_err());
+        assert!(ChunkGrid::new(&[4, 0], &[2, 2]).is_err());
+        assert!(ChunkGrid::new(&[4, 4], &[0, 2]).is_err());
+        assert!(ChunkGrid::new(&[], &[]).is_err());
+    }
+
+    #[test]
+    fn axis0_matches_shard_granularity() {
+        let g = ChunkGrid::axis0(&[10, 3], 4).unwrap();
+        assert_eq!(g.chunk_shape(), &[3, 3]);
+        assert_eq!(g.grid_shape(), &[4, 1]);
+        // More shards than rows clamps to one row per chunk.
+        let g = ChunkGrid::axis0(&[3, 5], 100).unwrap();
+        assert_eq!(g.chunk_shape(), &[1, 5]);
+    }
+
+    #[test]
+    fn intersection_enumerates_covering_chunks() {
+        let g = ChunkGrid::new(&[10, 6], &[4, 4]).unwrap();
+        // Region fully inside chunk (0, 0).
+        assert_eq!(g.chunks_intersecting(&[0, 0], &[3, 3]).unwrap(), vec![0]);
+        // Region straddling all four chunk corners around (4, 4).
+        let ids = g.chunks_intersecting(&[2, 2], &[4, 3]).unwrap();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        // Full array touches every chunk.
+        assert_eq!(
+            g.chunks_intersecting(&[0, 0], &[10, 6]).unwrap().len(),
+            g.chunk_count()
+        );
+        // Empty region touches nothing.
+        assert!(g.chunks_intersecting(&[1, 1], &[0, 2]).unwrap().is_empty());
+        // Out-of-bounds region is rejected.
+        assert!(g.chunks_intersecting(&[8, 4], &[4, 4]).is_err());
+    }
+
+    #[test]
+    fn subarray_roundtrip_3d() {
+        let shape = [4usize, 5, 6];
+        let n: usize = shape.iter().product();
+        let data: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let origin = [1usize, 2, 3];
+        let sub_shape = [2usize, 2, 2];
+        let sub = extract_subarray(&data, &shape, &origin, &sub_shape);
+        assert_eq!(sub.len(), 8);
+        // Spot-check one element: data[(2, 3, 4)] == sub[(1, 1, 1)].
+        assert_eq!(sub[7], data[2 * 30 + 3 * 6 + 4]);
+        let mut dst = vec![0.0f64; n];
+        insert_subarray(&mut dst, &shape, &origin, &sub, &sub_shape);
+        let back = extract_subarray(&dst, &shape, &origin, &sub_shape);
+        assert_eq!(back, sub);
+    }
+
+    #[test]
+    fn subarray_1d_and_full() {
+        let data: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert_eq!(extract_subarray(&data, &[10], &[3], &[4]), data[3..7]);
+        assert_eq!(extract_subarray(&data, &[10], &[0], &[10]), data);
+    }
+}

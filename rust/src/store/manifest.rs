@@ -1,0 +1,308 @@
+//! Versioned binary manifest of a `.ffcz` chunked store.
+//!
+//! The manifest is self-describing: array shape and source precision, the
+//! chunk grid, the codec chain, and a per-chunk table of byte ranges plus
+//! dual-domain verification stats. It is serialized with the crate's
+//! [`varint`] primitives; the per-chunk `spatial_ok` / `frequency_ok` bits
+//! are bit-packed with [`crate::encoding::pack_flags`].
+//!
+//! ## Container layout (`.ffcz`)
+//!
+//! ```text
+//! offset 0          "FFCZSTR1"                 8-byte head magic
+//! offset 8          chunk payload 0 … k-1      concatenated codec output
+//! manifest_offset   manifest bytes             (this module)
+//! end - 24          manifest_offset  u64 LE ┐
+//! end - 16          manifest_len     u64 LE │  24-byte footer
+//! end - 8           "FFCZEND1"               ┘
+//! ```
+//!
+//! Readers locate the manifest through the footer, so chunk payloads can be
+//! streamed to the file as they are encoded and the manifest appended last.
+//!
+//! ## Manifest layout (version 1)
+//!
+//! ```text
+//! version            varint (= 1)
+//! precision          u8 (0 = single, 1 = double)
+//! ndim               varint, then ndim × shape varints
+//!                    then ndim × chunk-shape varints
+//! codec spec         see CodecSpec::to_bytes
+//! chunk count        varint (must equal the grid's chunk count)
+//! spatial_ok bits    ceil(count / 8) bytes, MSB-first
+//! frequency_ok bits  ceil(count / 8) bytes, MSB-first
+//! per chunk          offset varint · length varint ·
+//!                    max_spatial_ratio f64 LE · max_frequency_ratio f64 LE ·
+//!                    pocs_iterations varint
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::data::Precision;
+use crate::encoding::{pack_flags, unpack_flags, varint};
+
+use super::codec::{read_f64, CodecSpec};
+use super::grid::ChunkGrid;
+
+/// Head magic of a `.ffcz` store file.
+pub const STORE_MAGIC: &[u8; 8] = b"FFCZSTR1";
+/// Trailing magic of the 24-byte footer.
+pub const FOOTER_MAGIC: &[u8; 8] = b"FFCZEND1";
+/// Footer size in bytes.
+pub const FOOTER_LEN: usize = 24;
+/// Current manifest version.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Dual-domain verification outcome of one chunk, recorded at encode time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkStats {
+    pub spatial_ok: bool,
+    pub frequency_ok: bool,
+    /// max |ε_n| / E_n over the chunk (≤ 1 is in-bound).
+    pub max_spatial_ratio: f64,
+    /// max ‖δ_k‖∞ / Δ_k over the chunk (≤ 1 is in-bound).
+    pub max_frequency_ratio: f64,
+    /// POCS iterations spent correcting this chunk.
+    pub pocs_iterations: u32,
+}
+
+impl ChunkStats {
+    /// Stats of a bit-exact (lossless) chunk.
+    pub fn exact() -> Self {
+        Self {
+            spatial_ok: true,
+            frequency_ok: true,
+            max_spatial_ratio: 0.0,
+            max_frequency_ratio: 0.0,
+            pocs_iterations: 0,
+        }
+    }
+}
+
+/// Byte range and stats of one chunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkEntry {
+    /// Payload offset from the start of the file.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub length: u64,
+    pub stats: ChunkStats,
+}
+
+/// The store manifest: everything needed to decode any chunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub shape: Vec<usize>,
+    pub precision: Precision,
+    pub chunk_shape: Vec<usize>,
+    pub codec: CodecSpec,
+    /// One entry per chunk, in row-major grid order.
+    pub chunks: Vec<ChunkEntry>,
+}
+
+impl Manifest {
+    /// The chunk grid implied by the shapes.
+    pub fn grid(&self) -> Result<ChunkGrid> {
+        let grid = ChunkGrid::new(&self.shape, &self.chunk_shape)?;
+        if grid.chunk_count() != self.chunks.len() {
+            bail!(
+                "manifest has {} chunk entries, grid implies {}",
+                self.chunks.len(),
+                grid.chunk_count()
+            );
+        }
+        Ok(grid)
+    }
+
+    /// Do all chunks satisfy both recorded bounds?
+    pub fn all_chunks_ok(&self) -> bool {
+        self.chunks
+            .iter()
+            .all(|c| c.stats.spatial_ok && c.stats.frequency_ok)
+    }
+
+    /// Total chunk payload bytes.
+    pub fn payload_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.length).sum()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        varint::write(&mut out, MANIFEST_VERSION);
+        out.push(match self.precision {
+            Precision::Single => 0u8,
+            Precision::Double => 1u8,
+        });
+        varint::write(&mut out, self.shape.len() as u64);
+        for &d in &self.shape {
+            varint::write(&mut out, d as u64);
+        }
+        for &d in &self.chunk_shape {
+            varint::write(&mut out, d as u64);
+        }
+        out.extend_from_slice(&self.codec.to_bytes());
+        varint::write(&mut out, self.chunks.len() as u64);
+        let s_ok: Vec<bool> = self.chunks.iter().map(|c| c.stats.spatial_ok).collect();
+        let f_ok: Vec<bool> = self.chunks.iter().map(|c| c.stats.frequency_ok).collect();
+        out.extend_from_slice(&pack_flags(&s_ok));
+        out.extend_from_slice(&pack_flags(&f_ok));
+        for c in &self.chunks {
+            varint::write(&mut out, c.offset);
+            varint::write(&mut out, c.length);
+            out.extend_from_slice(&c.stats.max_spatial_ratio.to_le_bytes());
+            out.extend_from_slice(&c.stats.max_frequency_ratio.to_le_bytes());
+            varint::write(&mut out, c.stats.pocs_iterations as u64);
+        }
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let version = varint::read(buf, &mut pos)?;
+        if version != MANIFEST_VERSION {
+            bail!("unsupported manifest version {version}");
+        }
+        let precision = match buf.get(pos) {
+            Some(0) => Precision::Single,
+            Some(1) => Precision::Double,
+            Some(x) => bail!("bad precision tag {x}"),
+            None => bail!("truncated manifest"),
+        };
+        pos += 1;
+        let ndim = varint::read(buf, &mut pos)? as usize;
+        if ndim == 0 || ndim > 8 {
+            bail!("unreasonable ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(varint::read(buf, &mut pos)? as usize);
+        }
+        let mut chunk_shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            chunk_shape.push(varint::read(buf, &mut pos)? as usize);
+        }
+        let codec = CodecSpec::from_bytes(buf, &mut pos)?;
+        let count = varint::read(buf, &mut pos)? as usize;
+        // All of shape/count are untrusted: overflow must reject, never
+        // panic, and allocations must be bounded by the buffer itself.
+        let mut n = 1usize;
+        for &d in &shape {
+            n = n
+                .checked_mul(d)
+                .ok_or_else(|| anyhow::anyhow!("shape {shape:?} overflows"))?;
+        }
+        // A manifest cannot plausibly index more chunks than there are
+        // samples, and each entry occupies ≥ 18 serialized bytes.
+        if count == 0 || count > n.max(1) || count > buf.len() / 18 + 1 {
+            bail!("implausible chunk count {count} for shape {shape:?}");
+        }
+        let flag_bytes = count.div_ceil(8);
+        if pos + 2 * flag_bytes > buf.len() {
+            bail!("truncated manifest flags");
+        }
+        let s_ok = unpack_flags(&buf[pos..pos + flag_bytes], count);
+        pos += flag_bytes;
+        let f_ok = unpack_flags(&buf[pos..pos + flag_bytes], count);
+        pos += flag_bytes;
+        let mut chunks = Vec::with_capacity(count);
+        for i in 0..count {
+            let offset = varint::read(buf, &mut pos)?;
+            let length = varint::read(buf, &mut pos)?;
+            let max_spatial_ratio = read_f64(buf, &mut pos)?;
+            let max_frequency_ratio = read_f64(buf, &mut pos)?;
+            let pocs_iterations = varint::read(buf, &mut pos)? as u32;
+            chunks.push(ChunkEntry {
+                offset,
+                length,
+                stats: ChunkStats {
+                    spatial_ok: s_ok[i],
+                    frequency_ok: f_ok[i],
+                    max_spatial_ratio,
+                    max_frequency_ratio,
+                    pocs_iterations,
+                },
+            });
+        }
+        if pos != buf.len() {
+            bail!("{} trailing bytes after manifest", buf.len() - pos);
+        }
+        let manifest = Manifest {
+            shape,
+            precision,
+            chunk_shape,
+            codec,
+            chunks,
+        };
+        manifest.grid()?; // validates shapes and the entry count
+        Ok(manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            shape: vec![10, 6],
+            precision: Precision::Double,
+            chunk_shape: vec![4, 4],
+            codec: CodecSpec::Ffcz {
+                base: "sz-like".into(),
+                spatial_rel: 1e-3,
+                frequency_rel: Some(1e-3),
+            },
+            chunks: (0..6)
+                .map(|i| ChunkEntry {
+                    offset: 8 + 100 * i,
+                    length: 100,
+                    stats: ChunkStats {
+                        spatial_ok: true,
+                        frequency_ok: i != 3,
+                        max_spatial_ratio: 0.5,
+                        max_frequency_ratio: 0.25 * i as f64,
+                        pocs_iterations: i as u32,
+                    },
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample();
+        let bytes = m.to_bytes();
+        let back = Manifest::from_bytes(&bytes).unwrap();
+        assert_eq!(back, m);
+        assert!(!back.all_chunks_ok()); // chunk 3 has frequency_ok = false
+        assert_eq!(back.payload_bytes(), 600);
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_prefix() {
+        let bytes = sample().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                Manifest::from_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes unexpectedly parsed"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_and_bad_version() {
+        let mut bytes = sample().to_bytes();
+        bytes.push(0);
+        assert!(Manifest::from_bytes(&bytes).is_err());
+        let mut bad = Vec::new();
+        varint::write(&mut bad, 99);
+        assert!(Manifest::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_entry_count_mismatch() {
+        let mut m = sample();
+        m.chunks.pop();
+        assert!(Manifest::from_bytes(&m.to_bytes()).is_err());
+    }
+}

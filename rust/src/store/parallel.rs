@@ -1,0 +1,80 @@
+//! Work-stealing-free worker pool for per-chunk codec work.
+//!
+//! Chunks are independent (the dual-domain guarantee is per chunk, see
+//! [`super::codec`]), so compress/decompress parallelizes with a plain
+//! `std::thread` scope and an atomic work index — no dependencies, no
+//! channels, deterministic output order. This is the chunk-level analogue
+//! of how [`crate::coordinator::sharding`] parallelizes over shards.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Apply `f` to every index in `0..n` using up to `workers` OS threads and
+/// collect the results in index order. Returns the first error (by index)
+/// if any task fails; remaining tasks may still have run.
+pub fn par_try_map<T, F>(n: usize, workers: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    if workers == 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("every index claimed by exactly one worker")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    #[test]
+    fn preserves_order_across_worker_counts() {
+        for workers in [1usize, 2, 4, 9] {
+            let out = par_try_map(17, workers, |i| Ok(i * i)).unwrap();
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<usize> = par_try_map(0, 4, |i| Ok(i)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn first_error_by_index_wins() {
+        let err = par_try_map(10, 3, |i| {
+            if i >= 4 {
+                bail!("task {i} failed");
+            }
+            Ok(i)
+        })
+        .unwrap_err();
+        assert_eq!(format!("{err}"), "task 4 failed");
+    }
+}

@@ -1,0 +1,297 @@
+//! Store reader: manifest-only open, random-access chunk decode, and
+//! partial `read_region` that touches only intersecting chunks.
+
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Field;
+
+use super::codec::ChunkCodec;
+use super::grid::{extract_subarray, insert_subarray, ChunkGrid};
+use super::manifest::{Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
+use super::parallel::par_try_map;
+
+enum Source {
+    /// Seekable file; chunk payloads are read on demand.
+    File(Mutex<std::fs::File>),
+    /// Whole container held in memory.
+    Mem(Vec<u8>),
+}
+
+/// An opened `.ffcz` chunked store.
+///
+/// Opening parses only the footer and manifest; chunk payloads are fetched
+/// and decoded on demand, so a [`Store::read_region`] over a small window
+/// of a large array does a small fraction of the full decode work. The
+/// number of chunk decodes is observable via [`Store::chunks_decoded`]
+/// (used by tests to assert partial-decode behaviour).
+pub struct Store {
+    source: Source,
+    manifest: Manifest,
+    grid: ChunkGrid,
+    codec: Box<dyn ChunkCodec>,
+    /// Start of the manifest region — chunk payloads must end before it.
+    manifest_offset: u64,
+    chunks_decoded: AtomicUsize,
+}
+
+impl Store {
+    /// Open a store file, reading only footer + manifest.
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let file_len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        let (manifest_offset, manifest_len) = Self::parse_footer_source(
+            &mut file,
+            file_len,
+        )?;
+        let mut manifest_buf = vec![0u8; manifest_len as usize];
+        file.seek(SeekFrom::Start(manifest_offset))?;
+        file.read_exact(&mut manifest_buf)
+            .context("reading manifest")?;
+        let manifest = Manifest::from_bytes(&manifest_buf)?;
+        Self::build(Source::File(Mutex::new(file)), manifest, manifest_offset)
+    }
+
+    /// Open a store held fully in memory.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        let len = bytes.len() as u64;
+        if bytes.len() < STORE_MAGIC.len() + FOOTER_LEN || &bytes[..8] != STORE_MAGIC {
+            bail!("not a .ffcz store (bad head magic or too short)");
+        }
+        let footer = &bytes[bytes.len() - FOOTER_LEN..];
+        let (manifest_offset, manifest_len) = Self::parse_footer(footer, len)?;
+        let manifest = Manifest::from_bytes(
+            &bytes[manifest_offset as usize..(manifest_offset + manifest_len) as usize],
+        )?;
+        Self::build(Source::Mem(bytes), manifest, manifest_offset)
+    }
+
+    fn parse_footer_source(file: &mut std::fs::File, file_len: u64) -> Result<(u64, u64)> {
+        if file_len < (STORE_MAGIC.len() + FOOTER_LEN) as u64 {
+            bail!("not a .ffcz store (file too short)");
+        }
+        let mut head = [0u8; 8];
+        file.seek(SeekFrom::Start(0))?;
+        file.read_exact(&mut head)?;
+        if &head != STORE_MAGIC {
+            bail!("not a .ffcz store (bad head magic)");
+        }
+        let mut footer = [0u8; FOOTER_LEN];
+        file.seek(SeekFrom::End(-(FOOTER_LEN as i64)))?;
+        file.read_exact(&mut footer)?;
+        Self::parse_footer(&footer, file_len)
+    }
+
+    fn parse_footer(footer: &[u8], total_len: u64) -> Result<(u64, u64)> {
+        debug_assert_eq!(footer.len(), FOOTER_LEN);
+        if &footer[16..24] != FOOTER_MAGIC {
+            bail!("not a .ffcz store (bad footer magic)");
+        }
+        let manifest_offset = u64::from_le_bytes(footer[0..8].try_into().unwrap());
+        let manifest_len = u64::from_le_bytes(footer[8..16].try_into().unwrap());
+        let payload_start = STORE_MAGIC.len() as u64;
+        let footer_start = total_len - FOOTER_LEN as u64;
+        if manifest_offset < payload_start
+            || manifest_offset.checked_add(manifest_len) != Some(footer_start)
+        {
+            bail!(
+                "corrupt footer: manifest [{manifest_offset}, +{manifest_len}) \
+                 does not fit the {total_len}-byte container"
+            );
+        }
+        Ok((manifest_offset, manifest_len))
+    }
+
+    fn build(source: Source, manifest: Manifest, manifest_offset: u64) -> Result<Self> {
+        let grid = manifest.grid()?;
+        let codec = manifest.codec.build()?;
+        // Chunk ranges must lie inside the payload region.
+        for (i, c) in manifest.chunks.iter().enumerate() {
+            let end = c.offset.checked_add(c.length);
+            let in_payload = c.offset >= STORE_MAGIC.len() as u64
+                && matches!(end, Some(end) if end <= manifest_offset);
+            if !in_payload {
+                bail!(
+                    "chunk {} byte range [{}, +{}) escapes the payload region",
+                    grid.chunk_key(i),
+                    c.offset,
+                    c.length
+                );
+            }
+        }
+        Ok(Self {
+            source,
+            manifest,
+            grid,
+            codec,
+            manifest_offset,
+            chunks_decoded: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn grid(&self) -> &ChunkGrid {
+        &self.grid
+    }
+
+    /// Array shape of the stored field.
+    pub fn shape(&self) -> &[usize] {
+        &self.manifest.shape
+    }
+
+    /// Number of chunk decodes performed by this handle so far.
+    pub fn chunks_decoded(&self) -> usize {
+        self.chunks_decoded.load(Ordering::Relaxed)
+    }
+
+    /// Raw payload bytes of chunk `index`.
+    fn chunk_bytes(&self, index: usize) -> Result<Vec<u8>> {
+        let entry = &self.manifest.chunks[index];
+        let mut buf = vec![0u8; entry.length as usize];
+        match &self.source {
+            Source::Mem(bytes) => {
+                let start = entry.offset as usize;
+                buf.copy_from_slice(&bytes[start..start + entry.length as usize]);
+            }
+            Source::File(file) => {
+                let mut file = file.lock().unwrap();
+                file.seek(SeekFrom::Start(entry.offset))?;
+                file.read_exact(&mut buf)
+                    .with_context(|| format!("reading chunk {}", self.grid.chunk_key(index)))?;
+            }
+        }
+        Ok(buf)
+    }
+
+    /// Decode chunk `index` (its edge-clipped extent as a standalone field).
+    pub fn decode_chunk(&self, index: usize) -> Result<Field> {
+        if index >= self.manifest.chunks.len() {
+            bail!(
+                "chunk index {index} out of range ({} chunks)",
+                self.manifest.chunks.len()
+            );
+        }
+        let coords = self.grid.chunk_coords(index);
+        let extent = self.grid.chunk_extent(&coords);
+        let bytes = self.chunk_bytes(index)?;
+        self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
+        self.codec
+            .decode(&bytes, &extent, self.manifest.precision)
+            .with_context(|| format!("decoding chunk {}", self.grid.chunk_key(index)))
+    }
+
+    /// Decode the subarray `[origin, origin + shape)`, touching only the
+    /// chunks that intersect it. Chunk decodes run on up to `workers`
+    /// threads.
+    pub fn read_region(&self, origin: &[usize], shape: &[usize], workers: usize) -> Result<Field> {
+        let ids = self.grid.chunks_intersecting(origin, shape)?;
+        let n: usize = shape.iter().product();
+        let mut out = vec![0.0f64; n];
+        let pieces = par_try_map(ids.len(), workers, |j| {
+            let index = ids[j];
+            let chunk = self.decode_chunk(index)?;
+            let coords = self.grid.chunk_coords(index);
+            let c_origin = self.grid.chunk_origin(&coords);
+            let c_extent = self.grid.chunk_extent(&coords);
+            // Intersection of the chunk box with the requested region.
+            let lo: Vec<usize> = (0..shape.len())
+                .map(|d| origin[d].max(c_origin[d]))
+                .collect();
+            let hi: Vec<usize> = (0..shape.len())
+                .map(|d| (origin[d] + shape[d]).min(c_origin[d] + c_extent[d]))
+                .collect();
+            let sub_shape: Vec<usize> = (0..shape.len()).map(|d| hi[d] - lo[d]).collect();
+            let chunk_local: Vec<usize> =
+                (0..shape.len()).map(|d| lo[d] - c_origin[d]).collect();
+            let sub = extract_subarray(chunk.data(), &c_extent, &chunk_local, &sub_shape);
+            let region_local: Vec<usize> = (0..shape.len()).map(|d| lo[d] - origin[d]).collect();
+            Ok((region_local, sub_shape, sub))
+        })?;
+        for (region_local, sub_shape, sub) in pieces {
+            insert_subarray(&mut out, shape, &region_local, &sub, &sub_shape);
+        }
+        Ok(Field::new(shape, out, self.manifest.precision))
+    }
+
+    /// Decode the whole array (all chunks, in parallel).
+    pub fn decompress_all(&self, workers: usize) -> Result<Field> {
+        let origin = vec![0usize; self.manifest.shape.len()];
+        let shape = self.manifest.shape.clone();
+        self.read_region(&origin, &shape, workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::grf::GrfBuilder;
+    use crate::store::codec::CodecSpec;
+    use crate::store::writer::{encode_store, StoreWriteOptions};
+
+    fn store_bytes() -> (Field, Vec<u8>) {
+        let field = GrfBuilder::new(&[12, 10]).lognormal(1.0).seed(9).build();
+        let opts = StoreWriteOptions::new(&[5, 4]).workers(2);
+        let (bytes, _, _) = encode_store(&field, &CodecSpec::Lossless, &opts).unwrap();
+        (field, bytes)
+    }
+
+    #[test]
+    fn full_decode_matches_source() {
+        let (field, bytes) = store_bytes();
+        let store = Store::from_bytes(bytes).unwrap();
+        let out = store.decompress_all(3).unwrap();
+        assert_eq!(out.shape(), field.shape());
+        assert_eq!(out.data(), field.data());
+        assert_eq!(out.precision(), field.precision());
+        assert_eq!(store.chunks_decoded(), store.grid().chunk_count());
+    }
+
+    #[test]
+    fn read_region_touches_only_intersecting_chunks() {
+        let (field, bytes) = store_bytes();
+        let store = Store::from_bytes(bytes).unwrap();
+        // A window inside chunk (0, 0) only.
+        let region = store.read_region(&[1, 1], &[3, 2], 1).unwrap();
+        assert_eq!(store.chunks_decoded(), 1);
+        let expect = extract_subarray(field.data(), field.shape(), &[1, 1], &[3, 2]);
+        assert_eq!(region.data(), &expect[..]);
+    }
+
+    #[test]
+    fn corrupt_containers_rejected() {
+        let (_, bytes) = store_bytes();
+        // Bad head magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(Store::from_bytes(bad).is_err());
+        // Bad footer magic.
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0xFF;
+        assert!(Store::from_bytes(bad).is_err());
+        // Truncated tail.
+        let bad = bytes[..bytes.len() - 10].to_vec();
+        assert!(Store::from_bytes(bad).is_err());
+        // Too short entirely.
+        assert!(Store::from_bytes(b"FFCZSTR1".to_vec()).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_region_rejected() {
+        let (_, bytes) = store_bytes();
+        let store = Store::from_bytes(bytes).unwrap();
+        assert!(store.read_region(&[10, 8], &[4, 4], 1).is_err());
+        assert!(store.read_region(&[0], &[4], 1).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Chunked store encoder: tile a field, encode chunks in parallel, and
+//! assemble the `.ffcz` container (payloads first, manifest appended,
+//! 24-byte footer last — see [`super::manifest`] for the exact layout).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::data::Field;
+
+use super::codec::CodecSpec;
+use super::grid::{extract_subarray, ChunkGrid};
+use super::manifest::{ChunkEntry, Manifest, FOOTER_MAGIC, STORE_MAGIC};
+use super::parallel::par_try_map;
+
+/// Options for store creation.
+#[derive(Debug, Clone)]
+pub struct StoreWriteOptions {
+    /// Chunk shape (same dimensionality as the field).
+    pub chunk_shape: Vec<usize>,
+    /// Worker threads for per-chunk encoding.
+    pub workers: usize,
+}
+
+impl StoreWriteOptions {
+    pub fn new(chunk_shape: &[usize]) -> Self {
+        Self {
+            chunk_shape: chunk_shape.to_vec(),
+            workers: 1,
+        }
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Default chunking for a field: axis-0 slabs, `max(workers, 2)` of
+    /// them (so even a single-worker write produces a multi-chunk store —
+    /// partial reads stay partial), clamped to the axis-0 extent. The
+    /// sharding-style default used by the CLI and the pipeline store sink.
+    pub fn default_for(field_shape: &[usize], workers: usize) -> Result<Self> {
+        let grid = ChunkGrid::axis0(field_shape, workers.max(2))?;
+        Ok(Self {
+            chunk_shape: grid.chunk_shape().to_vec(),
+            workers: workers.max(1),
+        })
+    }
+}
+
+/// Summary of one store write.
+#[derive(Debug, Clone)]
+pub struct StoreWriteReport {
+    pub chunk_count: usize,
+    pub payload_bytes: usize,
+    pub manifest_bytes: usize,
+    pub total_bytes: usize,
+    /// True iff every chunk's dual-domain verification passed.
+    pub all_chunks_ok: bool,
+    pub elapsed: Duration,
+}
+
+/// Encode `field` as an in-memory `.ffcz` store.
+pub fn encode_store(
+    field: &Field,
+    spec: &CodecSpec,
+    opts: &StoreWriteOptions,
+) -> Result<(Vec<u8>, Manifest, StoreWriteReport)> {
+    let t0 = Instant::now();
+    let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
+    let codec = spec.build()?;
+
+    let encoded = par_try_map(grid.chunk_count(), opts.workers, |i| {
+        let coords = grid.chunk_coords(i);
+        let origin = grid.chunk_origin(&coords);
+        let extent = grid.chunk_extent(&coords);
+        let chunk = Field::new(
+            &extent,
+            extract_subarray(field.data(), field.shape(), &origin, &extent),
+            field.precision(),
+        );
+        codec
+            .encode(&chunk)
+            .with_context(|| format!("encoding chunk {}", grid.chunk_key(i)))
+    })?;
+
+    // Assemble: head magic, payloads, manifest, footer.
+    let mut out = Vec::new();
+    out.extend_from_slice(STORE_MAGIC);
+    let mut chunks = Vec::with_capacity(encoded.len());
+    for enc in &encoded {
+        chunks.push(ChunkEntry {
+            offset: out.len() as u64,
+            length: enc.bytes.len() as u64,
+            stats: enc.stats,
+        });
+        out.extend_from_slice(&enc.bytes);
+    }
+    let manifest = Manifest {
+        shape: field.shape().to_vec(),
+        precision: field.precision(),
+        chunk_shape: opts.chunk_shape.clone(),
+        codec: spec.clone(),
+        chunks,
+    };
+    let manifest_bytes = manifest.to_bytes();
+    let manifest_offset = out.len() as u64;
+    out.extend_from_slice(&manifest_bytes);
+    out.extend_from_slice(&manifest_offset.to_le_bytes());
+    out.extend_from_slice(&(manifest_bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(FOOTER_MAGIC);
+
+    let report = StoreWriteReport {
+        chunk_count: manifest.chunks.len(),
+        payload_bytes: manifest.payload_bytes() as usize,
+        manifest_bytes: manifest_bytes.len(),
+        total_bytes: out.len(),
+        all_chunks_ok: manifest.all_chunks_ok(),
+        elapsed: t0.elapsed(),
+    };
+    Ok((out, manifest, report))
+}
+
+/// Encode `field` and write the store to `path`.
+pub fn write_store(
+    field: &Field,
+    spec: &CodecSpec,
+    opts: &StoreWriteOptions,
+    path: &Path,
+) -> Result<StoreWriteReport> {
+    let (bytes, _, report) = encode_store(field, spec, opts)?;
+    std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::grf::GrfBuilder;
+
+    #[test]
+    fn encode_produces_consistent_manifest() {
+        let field = GrfBuilder::new(&[12, 10]).lognormal(1.0).seed(3).build();
+        let spec = CodecSpec::Lossless;
+        let opts = StoreWriteOptions::new(&[5, 4]).workers(2);
+        let (bytes, manifest, report) = encode_store(&field, &spec, &opts).unwrap();
+        assert_eq!(report.chunk_count, 3 * 3);
+        assert_eq!(manifest.chunks.len(), 9);
+        assert!(report.all_chunks_ok);
+        // Payload ranges tile [8, manifest_offset) without gaps.
+        let mut cursor = STORE_MAGIC.len() as u64;
+        for c in &manifest.chunks {
+            assert_eq!(c.offset, cursor);
+            cursor += c.length;
+        }
+        assert_eq!(report.total_bytes, bytes.len());
+        assert_eq!(&bytes[..8], STORE_MAGIC);
+        assert_eq!(&bytes[bytes.len() - 8..], FOOTER_MAGIC);
+    }
+
+    #[test]
+    fn chunk_shape_mismatch_rejected() {
+        let field = GrfBuilder::new(&[8, 8]).seed(1).build();
+        let opts = StoreWriteOptions::new(&[4]);
+        assert!(encode_store(&field, &CodecSpec::Lossless, &opts).is_err());
+    }
+}

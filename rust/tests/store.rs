@@ -1,0 +1,190 @@
+//! Integration tests for the chunked spectral archive store: partial
+//! decode equivalence, per-base-compressor roundtrips, corruption
+//! rejection, and the per-chunk dual-domain guarantee on a GRF field.
+
+use ffcz::data::synth::grf::GrfBuilder;
+use ffcz::data::{Field, Precision};
+use ffcz::store::{encode_store, extract_subarray, CodecSpec, Store, StoreWriteOptions};
+use ffcz::util::XorShift;
+
+fn grf_3d(shape: &[usize], seed: u64) -> Field {
+    GrfBuilder::new(shape)
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(seed)
+        .build()
+}
+
+fn ffcz_spec(base: &str) -> CodecSpec {
+    CodecSpec::Ffcz {
+        base: base.into(),
+        spatial_rel: 1e-3,
+        frequency_rel: Some(1e-3),
+    }
+}
+
+#[test]
+fn read_region_equals_full_decompress_slice_random_windows() {
+    // Property test (proptest is unavailable offline; cases are drawn with
+    // the crate's seeded XorShift): for random origins and shapes, a
+    // partial read must be bit-identical to slicing a full decompress.
+    let field = grf_3d(&[12, 10, 8], 42);
+    let opts = StoreWriteOptions::new(&[5, 4, 3]).workers(3);
+    let (bytes, _, report) = encode_store(&field, &ffcz_spec("sz-like"), &opts).unwrap();
+    assert!(report.all_chunks_ok);
+    let store = Store::from_bytes(bytes).unwrap();
+    let full = store.decompress_all(2).unwrap();
+
+    let mut rng = XorShift::new(7);
+    for _ in 0..25 {
+        let mut origin = Vec::new();
+        let mut shape = Vec::new();
+        for &d in field.shape() {
+            let o = (rng.next_f64() * d as f64) as usize % d;
+            let max_len = d - o;
+            let s = 1 + (rng.next_f64() * max_len as f64) as usize % max_len.max(1);
+            origin.push(o);
+            shape.push(s.min(max_len));
+        }
+        let region = store.read_region(&origin, &shape, 2).unwrap();
+        let expect = extract_subarray(full.data(), full.shape(), &origin, &shape);
+        assert_eq!(
+            region.data(),
+            &expect[..],
+            "window origin {origin:?} shape {shape:?} diverges from full decompress"
+        );
+    }
+}
+
+#[test]
+fn partial_decode_touches_only_intersecting_chunks() {
+    let field = grf_3d(&[12, 10, 8], 5);
+    let opts = StoreWriteOptions::new(&[4, 5, 4]).workers(2);
+    let (bytes, _, _) = encode_store(&field, &ffcz_spec("sz-like"), &opts).unwrap();
+    // Grid is 3 × 2 × 2 = 12 chunks.
+    let store = Store::from_bytes(bytes).unwrap();
+    assert_eq!(store.grid().chunk_count(), 12);
+
+    // Window inside a single chunk.
+    store.read_region(&[0, 0, 0], &[3, 4, 3], 1).unwrap();
+    assert_eq!(store.chunks_decoded(), 1, "single-chunk window");
+
+    // Window spanning exactly two chunks along axis 0.
+    store.read_region(&[2, 0, 0], &[4, 5, 4], 1).unwrap();
+    assert_eq!(store.chunks_decoded(), 1 + 2, "two-chunk window");
+
+    // Full read touches all 12.
+    store.decompress_all(4).unwrap();
+    assert_eq!(store.chunks_decoded(), 3 + 12);
+}
+
+#[test]
+fn roundtrip_with_every_base_compressor() {
+    let field = grf_3d(&[8, 8, 8], 11);
+    for base in ["sz-like", "zfp-like", "sperr-like", "identity"] {
+        let opts = StoreWriteOptions::new(&[4, 8, 8]).workers(2);
+        let (bytes, manifest, report) =
+            encode_store(&field, &ffcz_spec(base), &opts).unwrap();
+        assert!(report.all_chunks_ok, "{base}: chunk bound violated");
+        assert!(manifest.all_chunks_ok());
+        let store = Store::from_bytes(bytes).unwrap();
+        let recon = store.decompress_all(2).unwrap();
+        assert_eq!(recon.shape(), field.shape());
+        assert_eq!(recon.precision(), field.precision());
+        // Per-chunk spatial bound: |err| ≤ eb · chunk_span ≤ eb · field_span.
+        let e = 1e-3 * field.value_span() * (1.0 + 1e-9);
+        for (a, b) in field.data().iter().zip(recon.data()) {
+            assert!((a - b).abs() <= e, "{base}: |{a} - {b}| > {e}");
+        }
+    }
+}
+
+#[test]
+fn lossless_codec_roundtrip_is_bit_exact() {
+    let field = grf_3d(&[9, 7, 5], 13);
+    let opts = StoreWriteOptions::new(&[4, 4, 4]).workers(2);
+    let (bytes, _, _) = encode_store(&field, &CodecSpec::Lossless, &opts).unwrap();
+    let store = Store::from_bytes(bytes).unwrap();
+    assert_eq!(store.decompress_all(3).unwrap().data(), field.data());
+}
+
+#[test]
+fn grf_manifest_records_dual_domain_ok_for_every_chunk() {
+    // Acceptance criterion: on a GRF test field, the per-chunk dual-domain
+    // stats recorded in the manifest show spatial_ok && frequency_ok
+    // everywhere, with in-bound ratios.
+    let field = grf_3d(&[16, 16, 16], 77);
+    let opts = StoreWriteOptions::new(&[8, 8, 8]).workers(4);
+    let (_, manifest, _) = encode_store(&field, &ffcz_spec("sz-like"), &opts).unwrap();
+    assert_eq!(manifest.chunks.len(), 8);
+    for (i, c) in manifest.chunks.iter().enumerate() {
+        assert!(
+            c.stats.spatial_ok && c.stats.frequency_ok,
+            "chunk {i}: stats {:?}",
+            c.stats
+        );
+        assert!(c.stats.max_spatial_ratio <= 1.0 + 1e-9);
+        assert!(c.stats.max_frequency_ratio <= 1.0 + 1e-9);
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_stores_are_rejected() {
+    let field = grf_3d(&[8, 6, 4], 3);
+    let opts = StoreWriteOptions::new(&[4, 3, 2]).workers(1);
+    let (bytes, _, _) = encode_store(&field, &CodecSpec::Lossless, &opts).unwrap();
+
+    // Every truncation of the container fails to open.
+    for frac in [0.1, 0.5, 0.9, 0.999] {
+        let cut = (bytes.len() as f64 * frac) as usize;
+        assert!(
+            Store::from_bytes(bytes[..cut].to_vec()).is_err(),
+            "truncated to {cut} bytes unexpectedly opened"
+        );
+    }
+
+    // Corrupting the footer (manifest offset/length fields or the end
+    // magic) must always fail to open. (Flips inside the manifest's stats
+    // fields only change recorded stats; structural manifest corruption is
+    // covered by the truncation sweep above and the manifest unit tests.)
+    for i in [
+        bytes.len() - 24, // manifest offset
+        bytes.len() - 12, // manifest length
+        bytes.len() - 4,  // footer magic
+        0,                // head magic
+    ] {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x5A;
+        assert!(
+            Store::from_bytes(bad).is_err(),
+            "byte flip at {i} went unnoticed"
+        );
+    }
+
+    // A payload flip is caught at decode time (entropy-coded chunks fail to
+    // parse or decode to the wrong length).
+    let mut bad = bytes.clone();
+    bad[10] ^= 0xFF;
+    if let Ok(store) = Store::from_bytes(bad) {
+        assert!(store.decompress_all(1).is_err() || {
+            // Lossless payloads checksum-free: accept a successful decode
+            // only if it differs from the original (corruption visible).
+            let out = store.decompress_all(1).unwrap();
+            out.data() != field.data()
+        });
+    }
+}
+
+#[test]
+fn store_preserves_precision_tag() {
+    let data: Vec<f64> = (0..24).map(|i| (i as f64) * 0.5).collect();
+    let field = Field::new(&[4, 6], data, Precision::Single);
+    let opts = StoreWriteOptions::new(&[2, 3]).workers(1);
+    let (bytes, manifest, _) = encode_store(&field, &CodecSpec::Lossless, &opts).unwrap();
+    assert_eq!(manifest.precision, Precision::Single);
+    let store = Store::from_bytes(bytes).unwrap();
+    assert_eq!(
+        store.read_region(&[1, 2], &[2, 2], 1).unwrap().precision(),
+        Precision::Single
+    );
+}

@@ -1,0 +1,199 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the `ffcz` crate uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!`, `bail!`,
+//! and `ensure!` macros. Context frames accumulate outermost-first and the
+//! alternate display format (`{:#}`) renders the full chain
+//! (`outer: inner: root`), matching upstream behaviour.
+//!
+//! Not implemented (unused by this repo): downcasting, backtraces,
+//! `std::error::Error` for [`Error`] itself.
+
+use std::fmt;
+
+/// An error type that can wrap any `std::error::Error` plus a stack of
+/// human-readable context frames.
+pub struct Error {
+    /// Outermost context first; the last element is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Push a new outermost context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, exactly like
+// upstream anyhow — that keeps this blanket conversion coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to `Result` and `Option` values.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn context_chain_renders_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u8>.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<()> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Err(anyhow!("fell through with {x}"))
+        }
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(1).unwrap_err()), "fell through with 1");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "root cause");
+    }
+}

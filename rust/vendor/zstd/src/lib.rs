@@ -1,0 +1,207 @@
+//! Offline drop-in subset of the `zstd` crate API.
+//!
+//! The real `zstd` crate binds the C libzstd, which is unavailable in this
+//! offline build environment. This shim keeps the two entry points the
+//! `ffcz` crate uses — [`encode_all`] and [`decode_all`] — with the same
+//! signatures, backed by a self-consistent greedy LZ77 coder (4-byte
+//! minimum match, unbounded window, varint token lengths). It is **not**
+//! the zstd wire format: archives written with this shim must be read by a
+//! shim build, and vice versa — `ffcz::encoding::lossless` tags both with
+//! the same codec byte, so a build linked against real libzstd would fail
+//! to decode shim frames (with this module's `ZSHM` magic in the error
+//! path, not silent corruption). If real zstd ever lands, bump the frame
+//! codec byte in `encoding::lossless` so the two formats stay
+//! distinguishable (tracked in ROADMAP "Store subsystem follow-ups").
+//!
+//! Ratios are worse than real zstd (no entropy stage), but long runs and
+//! repeated structure — the shape of quantized-edit and flag payloads —
+//! still collapse well, and `lossless_compress` falls back to a raw frame
+//! whenever this coder would expand the data.
+
+use std::io::{Error, ErrorKind, Read, Result};
+
+const MAGIC: &[u8; 4] = b"ZSHM";
+const TOKEN_LITERALS: u8 = 0;
+const TOKEN_MATCH: u8 = 1;
+const MIN_MATCH: usize = 4;
+const HASH_BITS: u32 = 16;
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&byte) = buf.get(*pos) else {
+            return Err(Error::new(ErrorKind::UnexpectedEof, "truncated varint"));
+        };
+        *pos += 1;
+        if shift >= 64 {
+            return Err(Error::new(ErrorKind::InvalidData, "varint overflow"));
+        }
+        v |= ((byte & 0x7F) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes(data[i..i + 4].try_into().unwrap());
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+fn emit_literals(out: &mut Vec<u8>, lits: &[u8]) {
+    if lits.is_empty() {
+        return;
+    }
+    out.push(TOKEN_LITERALS);
+    write_varint(out, lits.len() as u64);
+    out.extend_from_slice(lits);
+}
+
+/// Compress everything readable from `source`. `level` is accepted for API
+/// compatibility and ignored (the shim has a single effort level).
+pub fn encode_all<R: Read>(mut source: R, level: i32) -> Result<Vec<u8>> {
+    let _ = level;
+    let mut data = Vec::new();
+    source.read_to_end(&mut data)?;
+
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    out.extend_from_slice(MAGIC);
+    write_varint(&mut out, data.len() as u64);
+
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i + MIN_MATCH <= data.len() {
+        let h = hash4(&data, i);
+        let cand = table[h];
+        table[h] = i;
+        if cand != usize::MAX && data[cand..cand + MIN_MATCH] == data[i..i + MIN_MATCH] {
+            let mut len = MIN_MATCH;
+            while i + len < data.len() && data[cand + len] == data[i + len] {
+                len += 1;
+            }
+            emit_literals(&mut out, &data[lit_start..i]);
+            out.push(TOKEN_MATCH);
+            write_varint(&mut out, (i - cand) as u64);
+            write_varint(&mut out, len as u64);
+            i += len;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    emit_literals(&mut out, &data[lit_start..]);
+    Ok(out)
+}
+
+/// Decompress everything readable from `source`.
+pub fn decode_all<R: Read>(mut source: R) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    source.read_to_end(&mut buf)?;
+    if buf.len() < MAGIC.len() || &buf[..MAGIC.len()] != MAGIC {
+        return Err(Error::new(ErrorKind::InvalidData, "bad shim-zstd magic"));
+    }
+    let mut pos = MAGIC.len();
+    let n = read_varint(&buf, &mut pos)? as usize;
+    let mut out = Vec::with_capacity(n);
+    while pos < buf.len() {
+        let token = buf[pos];
+        pos += 1;
+        match token {
+            TOKEN_LITERALS => {
+                let len = read_varint(&buf, &mut pos)? as usize;
+                if pos + len > buf.len() {
+                    return Err(Error::new(ErrorKind::UnexpectedEof, "truncated literals"));
+                }
+                out.extend_from_slice(&buf[pos..pos + len]);
+                pos += len;
+            }
+            TOKEN_MATCH => {
+                let dist = read_varint(&buf, &mut pos)? as usize;
+                let len = read_varint(&buf, &mut pos)? as usize;
+                if dist == 0 || dist > out.len() {
+                    return Err(Error::new(ErrorKind::InvalidData, "bad match distance"));
+                }
+                // Overlapping copies are the LZ77 run-extension case: copy
+                // byte by byte.
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+            x => {
+                return Err(Error::new(
+                    ErrorKind::InvalidData,
+                    format!("unknown token {x}"),
+                ));
+            }
+        }
+    }
+    if out.len() != n {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            format!("decoded {} bytes, header promised {n}", out.len()),
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let c = encode_all(data, 3).unwrap();
+        assert_eq!(decode_all(&c[..]).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_cases() {
+        roundtrip(b"");
+        roundtrip(b"abc");
+        roundtrip(&[7u8; 100_000]);
+        roundtrip(b"abcdabcdabcdabcdxyz");
+        // Pseudo-random (incompressible) bytes.
+        let mut x = 0x2545F4914F6CDD1Du64;
+        let data: Vec<u8> = (0..10_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                x as u8
+            })
+            .collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn long_runs_collapse() {
+        let c = encode_all(&[7u8; 100_000][..], 3).unwrap();
+        assert!(c.len() < 100, "run-length case should be tiny, got {}", c.len());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(decode_all(&[0xFFu8, 0xFF][..]).is_err());
+        assert!(decode_all(&b"ZSHM"[..]).is_err()); // truncated length
+        let mut c = encode_all(&b"hello world hello world"[..], 3).unwrap();
+        c.truncate(c.len() - 3);
+        assert!(decode_all(&c[..]).is_err());
+    }
+}
