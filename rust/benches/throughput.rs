@@ -8,7 +8,8 @@ use ffcz::compressors::{paper_compressors, ErrorBound};
 use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
 use ffcz::correction::{correct_reconstruction, FfczConfig};
 use ffcz::data::synth;
-use ffcz::store::{encode_store, CodecSpec, StoreWriteOptions};
+use ffcz::codec::CodecChainSpec;
+use ffcz::store::{encode_store, StoreWriteOptions};
 use ffcz::util::bench::{black_box, Bench};
 
 fn main() {
@@ -29,11 +30,7 @@ fn store_comparison() {
         .seed(500)
         .build();
     let bytes = field.original_bytes();
-    let spec = CodecSpec::Ffcz {
-        base: "sz-like".into(),
-        spatial_rel: 1e-3,
-        frequency_rel: Some(1e-3),
-    };
+    let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
     let mut rows: Vec<(String, f64, f64)> = Vec::new();
 
     // Baseline: whole-field compress + correct (single chunk, one worker).

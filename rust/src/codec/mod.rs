@@ -1,0 +1,449 @@
+//! Composable per-chunk codec chains (the crate's one "field → bytes"
+//! surface).
+//!
+//! Historically the crate exposed three disjoint ways to turn a field into
+//! bytes: the [`Compressor`](crate::compressors::Compressor) trait, the
+//! [`crate::correction`] free functions driven by [`FfczConfig`], and a
+//! closed store-codec enum that could only express two relative bounds.
+//! This module unifies them, zarrs-style, into one chain model:
+//!
+//! * **array→bytes** ([`ArrayStage`]) — raw f64, or any *registered* base
+//!   compressor (built-ins plus anything added at runtime with
+//!   [`register_codec`], no central enum to edit);
+//! * **FFCz correction** ([`CorrectionStage`], optional) — the dual-domain
+//!   POCS stage carrying a **full** [`FfczConfig`]: absolute, relative,
+//!   and power-spectrum bounds, iteration cap, quantization retries;
+//! * **bytes→bytes** ([`BytesCodec`] stages) — the lossless backend
+//!   family, also registry-extensible.
+//!
+//! A chain is described by a serializable, versioned [`CodecChainSpec`]
+//! (stored in the manifest v2 chain table, see [`crate::store::manifest`])
+//! and executed by a [`CodecChain`], which is `Send + Sync` and shared
+//! across the store's worker threads.
+//!
+//! ```
+//! use ffcz::codec::{CodecChain, CodecChainSpec};
+//! use ffcz::correction::FfczConfig;
+//! use ffcz::data::synth::grf::GrfBuilder;
+//!
+//! let chunk = GrfBuilder::new(&[16, 16]).lognormal(1.0).seed(1).build();
+//! let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+//! let chain = CodecChain::from_spec(&spec).unwrap();
+//!
+//! let enc = chain.encode_chunk(&chunk).unwrap();
+//! assert!(enc.stats.spatial_ok && enc.stats.frequency_ok);
+//! let dec = chain
+//!     .decode_chunk(&enc.bytes, chunk.shape(), chunk.precision())
+//!     .unwrap();
+//! assert_eq!(dec.shape(), chunk.shape());
+//!
+//! // The spec is self-describing and round-trips through bytes.
+//! let bytes = spec.to_bytes();
+//! let mut pos = 0;
+//! assert_eq!(CodecChainSpec::from_bytes(&bytes, &mut pos).unwrap(), spec);
+//! ```
+
+pub mod registry;
+pub mod spec;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::compressors::{Compressor, ErrorBound};
+use crate::correction::{
+    self, BoundSpec, CorrectionStats, EditsBlock, FfczArchive, FfczConfig,
+};
+use crate::data::{Field, Precision};
+
+pub use registry::{
+    build_bytes_codec, build_compressor, bytes_codec_names, compressor_names, register_bytes_codec,
+    register_codec, require_bytes_codec, require_compressor, BytesCodec,
+};
+pub use spec::{ArrayStage, BytesStage, CodecChainSpec, CorrectionStage, CHAIN_SPEC_VERSION};
+
+/// Dual-domain verification outcome of one chunk, recorded at encode time
+/// and persisted per chunk in the store manifest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkStats {
+    pub spatial_ok: bool,
+    pub frequency_ok: bool,
+    /// max |ε_n| / E_n over the chunk (≤ 1 is in-bound).
+    pub max_spatial_ratio: f64,
+    /// max ‖δ_k‖∞ / Δ_k over the chunk (≤ 1 is in-bound).
+    pub max_frequency_ratio: f64,
+    /// POCS iterations spent correcting this chunk.
+    pub pocs_iterations: u32,
+}
+
+impl ChunkStats {
+    /// Stats of a bit-exact (lossless) chunk.
+    pub fn exact() -> Self {
+        Self {
+            spatial_ok: true,
+            frequency_ok: true,
+            max_spatial_ratio: 0.0,
+            max_frequency_ratio: 0.0,
+            pocs_iterations: 0,
+        }
+    }
+}
+
+/// One encoded chunk plus the verification stats recorded in the manifest.
+#[derive(Debug, Clone)]
+pub struct EncodedChunk {
+    pub bytes: Vec<u8>,
+    pub stats: ChunkStats,
+}
+
+/// An executable codec chain: a validated [`CodecChainSpec`] with its
+/// stages resolved against the registries. Shareable across worker
+/// threads.
+pub struct CodecChain {
+    spec: CodecChainSpec,
+    /// Resolved base compressor (base-compressor array stage only).
+    base: Option<Box<dyn Compressor>>,
+    /// Resolved bytes→bytes stages, encode order.
+    bytes: Vec<Arc<dyn BytesCodec>>,
+}
+
+impl CodecChain {
+    /// Resolve and validate a spec against the codec registries. Unknown
+    /// stage names fail here with the full known-name list.
+    pub fn from_spec(spec: &CodecChainSpec) -> Result<Self> {
+        spec.validate_shape()?;
+        let base = match &spec.array {
+            ArrayStage::RawF64 => None,
+            ArrayStage::Base { name, .. } => Some(registry::require_compressor(name)?),
+        };
+        let bytes = spec
+            .bytes
+            .iter()
+            .map(|stage| registry::require_bytes_codec(&stage.name))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            spec: spec.clone(),
+            base,
+            bytes,
+        })
+    }
+
+    /// The chain's serializable description.
+    pub fn spec(&self) -> &CodecChainSpec {
+        &self.spec
+    }
+
+    /// One-line human description.
+    pub fn describe(&self) -> String {
+        self.spec.describe()
+    }
+
+    /// Encode one chunk, verifying the advertised bounds; the outcome is
+    /// recorded in the returned [`ChunkStats`].
+    pub fn encode_chunk(&self, chunk: &Field) -> Result<EncodedChunk> {
+        let (payload, stats) = match &self.spec.array {
+            ArrayStage::RawF64 => {
+                let mut raw = Vec::with_capacity(chunk.len() * 8);
+                for &v in chunk.data() {
+                    raw.extend_from_slice(&v.to_le_bytes());
+                }
+                (raw, ChunkStats::exact())
+            }
+            ArrayStage::Base { name, spatial } => {
+                let base = self
+                    .base
+                    .as_ref()
+                    .expect("base stage resolved in from_spec");
+                match self.spec.ffcz_config() {
+                    Some(cfg) => self.encode_ffcz(chunk, name, base.as_ref(), &cfg)?,
+                    None => encode_base_only(chunk, name, base.as_ref(), spatial)?,
+                }
+            }
+        };
+        let mut bytes = payload;
+        for stage in &self.bytes {
+            bytes = stage.encode(&bytes)?;
+        }
+        Ok(EncodedChunk { bytes, stats })
+    }
+
+    fn encode_ffcz(
+        &self,
+        chunk: &Field,
+        name: &str,
+        base: &dyn Compressor,
+        cfg: &FfczConfig,
+    ) -> Result<(Vec<u8>, ChunkStats)> {
+        let bound = error_bound(&cfg.spatial);
+        let payload = base.compress(chunk, bound)?;
+        let recon0 = base.decompress(&payload)?;
+        // The archive records the *registry* name, so decode resolves
+        // runtime-registered compressors even when their `name()` differs.
+        let archive = correction::correct_reconstruction(chunk, &recon0, name, payload, cfg)?;
+        // Dual-domain verification against the original chunk; the outcome
+        // is recorded per chunk in the manifest.
+        let recon = correction::decompress(&archive)?;
+        let report = correction::verify(chunk, &recon, cfg);
+        let stats = ChunkStats {
+            spatial_ok: report.spatial_ok,
+            frequency_ok: report.frequency_ok,
+            max_spatial_ratio: report.max_spatial_ratio,
+            max_frequency_ratio: report.max_frequency_ratio,
+            pocs_iterations: archive.stats.iterations as u32,
+        };
+        Ok((archive.to_bytes(), stats))
+    }
+
+    /// Decode a chunk; `shape`/`precision` come from the manifest and the
+    /// decoded field must match both.
+    pub fn decode_chunk(
+        &self,
+        bytes: &[u8],
+        shape: &[usize],
+        precision: Precision,
+    ) -> Result<Field> {
+        // Undo the bytes stages without copying when there are none (the
+        // default FFCz chain), keeping the hot read path allocation-free.
+        let mut owned: Option<Vec<u8>> = None;
+        for stage in self.bytes.iter().rev() {
+            let input: &[u8] = owned.as_deref().unwrap_or(bytes);
+            owned = Some(stage.decode(input)?);
+        }
+        let payload: &[u8] = owned.as_deref().unwrap_or(bytes);
+        match &self.spec.array {
+            ArrayStage::RawF64 => {
+                let n: usize = shape.iter().product();
+                if payload.len() != n * 8 {
+                    bail!(
+                        "raw-f64 chunk decodes to {} bytes, expected {}",
+                        payload.len(),
+                        n * 8
+                    );
+                }
+                let data: Vec<f64> = payload
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(Field::new(shape, data, precision))
+            }
+            ArrayStage::Base { .. } => {
+                let archive = FfczArchive::from_bytes(payload)?;
+                let field = correction::decompress(&archive)?;
+                check_decoded(&field, shape, precision)?;
+                Ok(field)
+            }
+        }
+    }
+}
+
+/// Base compressor without a correction stage: spatial bound only. The
+/// payload is still framed as an [`FfczArchive`] (with an empty edit
+/// block) so every base-stage chunk decodes through one path — and so v1
+/// archives remain bit-compatible.
+fn encode_base_only(
+    chunk: &Field,
+    name: &str,
+    base: &dyn Compressor,
+    spatial: &BoundSpec,
+) -> Result<(Vec<u8>, ChunkStats)> {
+    let bound = error_bound(spatial);
+    let payload = base.compress(chunk, bound)?;
+    let recon = base.decompress(&payload)?;
+    let e = bound.absolute_for(chunk);
+    let max_err = chunk
+        .data()
+        .iter()
+        .zip(recon.data())
+        .map(|(x, r)| (r - x).abs())
+        .fold(0.0f64, f64::max);
+    let archive = FfczArchive {
+        base_name: name.to_string(),
+        base_payload: payload,
+        edits: EditsBlock::Raw {
+            n: chunk.len(),
+            spat: Vec::new(),
+            freq: Vec::new(),
+        },
+        stats: CorrectionStats {
+            converged: true,
+            ..CorrectionStats::default()
+        },
+    };
+    // `frequency_ok = true, ratio 0` records "not requested".
+    let stats = ChunkStats {
+        spatial_ok: max_err <= e,
+        frequency_ok: true,
+        max_spatial_ratio: max_err / e.max(f64::MIN_POSITIVE),
+        max_frequency_ratio: 0.0,
+        pocs_iterations: 0,
+    };
+    Ok((archive.to_bytes(), stats))
+}
+
+fn error_bound(spec: &BoundSpec) -> ErrorBound {
+    match *spec {
+        BoundSpec::Absolute(v) => ErrorBound::Absolute(v),
+        BoundSpec::Relative(r) => ErrorBound::Relative(r),
+    }
+}
+
+fn check_decoded(field: &Field, shape: &[usize], precision: Precision) -> Result<()> {
+    if field.shape() != shape {
+        bail!(
+            "decoded chunk shape {:?} does not match manifest {:?}",
+            field.shape(),
+            shape
+        );
+    }
+    // The base payload carries its own precision tag; a disagreement with
+    // the manifest means the container was tampered with or mis-assembled.
+    if field.precision() != precision {
+        bail!(
+            "decoded chunk precision '{}' does not match manifest '{}'",
+            field.precision().name(),
+            precision.name()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::grf::GrfBuilder;
+
+    fn grf_chunk() -> Field {
+        GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(11).build()
+    }
+
+    #[test]
+    fn lossless_chain_is_bit_exact() {
+        let chunk = grf_chunk();
+        let chain = CodecChain::from_spec(&CodecChainSpec::lossless()).unwrap();
+        let enc = chain.encode_chunk(&chunk).unwrap();
+        assert!(enc.stats.spatial_ok && enc.stats.frequency_ok);
+        let dec = chain
+            .decode_chunk(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        assert_eq!(dec.data(), chunk.data());
+    }
+
+    #[test]
+    fn ffcz_chain_roundtrips_within_bounds() {
+        let chunk = grf_chunk();
+        let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+        let chain = CodecChain::from_spec(&spec).unwrap();
+        let enc = chain.encode_chunk(&chunk).unwrap();
+        assert!(enc.stats.spatial_ok && enc.stats.frequency_ok);
+        assert!(enc.stats.max_spatial_ratio <= 1.0 + 1e-9);
+        let dec = chain
+            .decode_chunk(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        assert_eq!(dec.shape(), chunk.shape());
+        let e = chunk.value_span() * 1e-3;
+        for (a, b) in chunk.data().iter().zip(dec.data()) {
+            assert!((a - b).abs() <= e * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn absolute_bound_chain_roundtrips() {
+        // The legacy store codec could not express absolute bounds at all.
+        let chunk = grf_chunk();
+        let e = chunk.value_span() * 1e-3;
+        let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::absolute(e, e));
+        let chain = CodecChain::from_spec(&spec).unwrap();
+        let enc = chain.encode_chunk(&chunk).unwrap();
+        assert!(enc.stats.spatial_ok && enc.stats.frequency_ok, "{:?}", enc.stats);
+        let dec = chain
+            .decode_chunk(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        for (a, b) in chunk.data().iter().zip(dec.data()) {
+            assert!((a - b).abs() <= e * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn power_spectrum_chain_records_stats() {
+        let chunk = GrfBuilder::new(&[16, 16]).lognormal(1.0).seed(6).build();
+        let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::power_spectrum(1e-2, 1e-3));
+        let chain = CodecChain::from_spec(&spec).unwrap();
+        let enc = chain.encode_chunk(&chunk).unwrap();
+        assert!(enc.stats.spatial_ok && enc.stats.frequency_ok, "{:?}", enc.stats);
+        assert!(enc.stats.pocs_iterations >= 1);
+        let dec = chain
+            .decode_chunk(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        let ps0 = crate::fourier::power_spectrum(&chunk);
+        let ps1 = crate::fourier::power_spectrum(&dec);
+        let max_rel = ps1.max_relative_error(&ps0);
+        assert!(max_rel <= 1.1e-3, "power-spectrum rel err {max_rel}");
+    }
+
+    #[test]
+    fn base_only_chain_skips_correction_but_bounds_spatially() {
+        let chunk = grf_chunk();
+        let spec = CodecChainSpec::base_only("sz-like", BoundSpec::Relative(1e-3));
+        let chain = CodecChain::from_spec(&spec).unwrap();
+        let enc = chain.encode_chunk(&chunk).unwrap();
+        assert!(enc.stats.spatial_ok);
+        assert!(enc.stats.frequency_ok, "frequency bound not requested");
+        assert_eq!(enc.stats.pocs_iterations, 0, "no POCS in base-only mode");
+        assert_eq!(enc.stats.max_frequency_ratio, 0.0);
+        let dec = chain
+            .decode_chunk(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        let e = chunk.value_span() * 1e-3;
+        for (a, b) in chunk.data().iter().zip(dec.data()) {
+            assert!((a - b).abs() <= e * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn extra_bytes_stage_composes() {
+        let chunk = grf_chunk();
+        let spec = CodecChainSpec::base_only("identity", BoundSpec::Relative(1e-6))
+            .with_bytes_stage("lossless");
+        let chain = CodecChain::from_spec(&spec).unwrap();
+        let enc = chain.encode_chunk(&chunk).unwrap();
+        let dec = chain
+            .decode_chunk(&enc.bytes, chunk.shape(), chunk.precision())
+            .unwrap();
+        assert_eq!(dec.data(), chunk.data(), "identity base is bit-exact");
+    }
+
+    #[test]
+    fn unknown_stage_names_fail_actionably() {
+        let spec = CodecChainSpec::base_only("nope", BoundSpec::Relative(1e-3));
+        let err = CodecChain::from_spec(&spec).unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("register_codec"), "{err}");
+        let spec = CodecChainSpec::lossless().with_bytes_stage("nope-bytes");
+        let err = CodecChain::from_spec(&spec).unwrap_err().to_string();
+        assert!(err.contains("nope-bytes"), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_wrong_shape_and_precision() {
+        let chunk = grf_chunk();
+        let chain = CodecChain::from_spec(&CodecChainSpec::lossless()).unwrap();
+        let enc = chain.encode_chunk(&chunk).unwrap();
+        assert!(chain
+            .decode_chunk(&enc.bytes, &[4, 4], chunk.precision())
+            .is_err());
+
+        // Regression: decode must validate the manifest precision against
+        // the decoded field (it used to be silently re-tagged).
+        let single = Field::new(chunk.shape(), chunk.data().to_vec(), Precision::Single);
+        let spec = CodecChainSpec::base_only("identity", BoundSpec::Relative(1e-6));
+        let chain = CodecChain::from_spec(&spec).unwrap();
+        let enc = chain.encode_chunk(&single).unwrap();
+        assert!(chain
+            .decode_chunk(&enc.bytes, single.shape(), Precision::Single)
+            .is_ok());
+        let err = chain
+            .decode_chunk(&enc.bytes, single.shape(), Precision::Double)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("precision"), "{err}");
+    }
+}

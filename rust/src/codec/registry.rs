@@ -1,0 +1,214 @@
+//! Runtime codec registries.
+//!
+//! Two registries back the codec-chain subsystem:
+//!
+//! * **base compressors** (array→bytes) — the built-in
+//!   [`crate::compressors::by_name`] family plus anything added at runtime
+//!   with [`register_codec`], so new error-bounded compressors plug into
+//!   chunked stores, [`crate::correction::decompress`], and the CLI without
+//!   editing a central enum;
+//! * **bytes→bytes codecs** — the lossless backend family, extensible with
+//!   [`register_bytes_codec`].
+//!
+//! Both registries are process-global (`OnceLock<RwLock<…>>`): a codec
+//! registered once decodes archives on every thread, matching the
+//! plugin-registration model of the zarrs ecosystem. Built-in names are
+//! reserved — registering over them is an error, so an archive's meaning
+//! can never be silently re-bound.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::compressors::{by_name, Compressor};
+use crate::encoding::{lossless_compress, lossless_decompress};
+
+/// Builder closure producing a fresh boxed compressor.
+pub type CompressorBuilder = Arc<dyn Fn() -> Box<dyn Compressor> + Send + Sync>;
+
+/// Built-in base compressor names (always resolvable, never overridable).
+pub const BUILTIN_COMPRESSORS: [&str; 4] = ["sz-like", "zfp-like", "sperr-like", "identity"];
+
+fn compressor_table() -> &'static RwLock<HashMap<String, CompressorBuilder>> {
+    static TABLE: OnceLock<RwLock<HashMap<String, CompressorBuilder>>> = OnceLock::new();
+    TABLE.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Register a base compressor under `name` so codec chains, stores, and
+/// FFCz archives can reference it. Errors if the name is reserved by a
+/// built-in compressor or already registered (re-binding a name would
+/// change the meaning of existing archives).
+pub fn register_codec<F>(name: &str, builder: F) -> Result<()>
+where
+    F: Fn() -> Box<dyn Compressor> + Send + Sync + 'static,
+{
+    if name.is_empty() {
+        bail!("codec name must be non-empty");
+    }
+    if by_name(name).is_some() {
+        bail!("codec name '{name}' is reserved by a built-in compressor");
+    }
+    let mut table = compressor_table().write().unwrap();
+    if table.contains_key(name) {
+        bail!("codec '{name}' is already registered");
+    }
+    table.insert(name.to_string(), Arc::new(builder));
+    Ok(())
+}
+
+/// Instantiate the base compressor registered under `name` (built-ins
+/// first, then runtime registrations). `None` if unknown.
+pub fn build_compressor(name: &str) -> Option<Box<dyn Compressor>> {
+    if let Some(c) = by_name(name) {
+        return Some(c);
+    }
+    let builder = compressor_table().read().unwrap().get(name).cloned();
+    builder.map(|b| b())
+}
+
+/// Every resolvable base compressor name (built-ins then runtime
+/// registrations, the latter sorted for stable error messages).
+pub fn compressor_names() -> Vec<String> {
+    let mut names: Vec<String> = BUILTIN_COMPRESSORS.iter().map(|s| s.to_string()).collect();
+    let mut registered: Vec<String> =
+        compressor_table().read().unwrap().keys().cloned().collect();
+    registered.sort();
+    names.extend(registered);
+    names
+}
+
+/// Instantiate a base compressor or fail with an actionable error listing
+/// every known name.
+pub fn require_compressor(name: &str) -> Result<Box<dyn Compressor>> {
+    build_compressor(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown base compressor '{name}' (known: {}; add new ones with \
+             ffcz::codec::register_codec)",
+            compressor_names().join(", ")
+        )
+    })
+}
+
+/// A bytes→bytes codec stage (lossless backend family). Implementations
+/// must be stateless enough to share across the store's worker threads.
+pub trait BytesCodec: Send + Sync {
+    /// Registry name recorded in chain specs.
+    fn name(&self) -> &str;
+    fn encode(&self, data: &[u8]) -> Result<Vec<u8>>;
+    fn decode(&self, data: &[u8]) -> Result<Vec<u8>>;
+}
+
+/// The crate's Huffman→ZSTD lossless cascade as a chain stage.
+struct LosslessBytes;
+
+impl BytesCodec for LosslessBytes {
+    fn name(&self) -> &str {
+        "lossless"
+    }
+
+    fn encode(&self, data: &[u8]) -> Result<Vec<u8>> {
+        Ok(lossless_compress(data))
+    }
+
+    fn decode(&self, data: &[u8]) -> Result<Vec<u8>> {
+        lossless_decompress(data)
+    }
+}
+
+/// Built-in bytes→bytes stage names.
+pub const BUILTIN_BYTES_CODECS: [&str; 1] = ["lossless"];
+
+fn bytes_table() -> &'static RwLock<HashMap<String, Arc<dyn BytesCodec>>> {
+    static TABLE: OnceLock<RwLock<HashMap<String, Arc<dyn BytesCodec>>>> = OnceLock::new();
+    TABLE.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Register a bytes→bytes codec stage. Errors on reserved or duplicate
+/// names, mirroring [`register_codec`].
+pub fn register_bytes_codec(codec: Arc<dyn BytesCodec>) -> Result<()> {
+    let name = codec.name().to_string();
+    if name.is_empty() {
+        bail!("bytes codec name must be non-empty");
+    }
+    if BUILTIN_BYTES_CODECS.contains(&name.as_str()) {
+        bail!("bytes codec name '{name}' is reserved by a built-in stage");
+    }
+    let mut table = bytes_table().write().unwrap();
+    if table.contains_key(&name) {
+        bail!("bytes codec '{name}' is already registered");
+    }
+    table.insert(name, codec);
+    Ok(())
+}
+
+/// Instantiate the bytes→bytes stage registered under `name`.
+pub fn build_bytes_codec(name: &str) -> Option<Arc<dyn BytesCodec>> {
+    if name == "lossless" {
+        return Some(Arc::new(LosslessBytes));
+    }
+    bytes_table().read().unwrap().get(name).cloned()
+}
+
+/// Every resolvable bytes→bytes stage name.
+pub fn bytes_codec_names() -> Vec<String> {
+    let mut names: Vec<String> = BUILTIN_BYTES_CODECS.iter().map(|s| s.to_string()).collect();
+    let mut registered: Vec<String> = bytes_table().read().unwrap().keys().cloned().collect();
+    registered.sort();
+    names.extend(registered);
+    names
+}
+
+/// Instantiate a bytes→bytes stage or fail with the known-name list.
+pub fn require_bytes_codec(name: &str) -> Result<Arc<dyn BytesCodec>> {
+    build_bytes_codec(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown bytes codec '{name}' (known: {}; add new ones with \
+             ffcz::codec::register_bytes_codec)",
+            bytes_codec_names().join(", ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::identity::Identity;
+
+    #[test]
+    fn builtins_resolve_and_are_reserved() {
+        for name in BUILTIN_COMPRESSORS {
+            assert!(build_compressor(name).is_some(), "{name} missing");
+            assert!(
+                register_codec(name, || Box::new(Identity) as Box<dyn Compressor>).is_err()
+            );
+        }
+        assert!(build_compressor("no-such-codec").is_none());
+        let err = require_compressor("no-such-codec").unwrap_err().to_string();
+        assert!(err.contains("sz-like"), "error not actionable: {err}");
+    }
+
+    #[test]
+    fn runtime_registration_resolves_and_rejects_duplicates() {
+        register_codec("registry-test-identity", || {
+            Box::new(Identity) as Box<dyn Compressor>
+        })
+        .unwrap();
+        let c = build_compressor("registry-test-identity").unwrap();
+        assert_eq!(c.name(), "identity");
+        assert!(register_codec("registry-test-identity", || {
+            Box::new(Identity) as Box<dyn Compressor>
+        })
+        .is_err());
+        assert!(compressor_names().contains(&"registry-test-identity".to_string()));
+    }
+
+    #[test]
+    fn lossless_bytes_stage_roundtrips() {
+        let stage = require_bytes_codec("lossless").unwrap();
+        let data: Vec<u8> = (0..255u8).cycle().take(4000).collect();
+        let enc = stage.encode(&data).unwrap();
+        assert_eq!(stage.decode(&enc).unwrap(), data);
+        assert!(require_bytes_codec("no-such-stage").is_err());
+    }
+}

@@ -1,0 +1,511 @@
+//! Self-describing, versioned codec-chain specs.
+//!
+//! A [`CodecChainSpec`] is the serializable description of one per-chunk
+//! codec chain: an array→bytes stage ([`ArrayStage`]), an optional FFCz
+//! dual-domain correction stage ([`CorrectionStage`], carrying the *full*
+//! [`FfczConfig`] parameter space — absolute/relative/power-spectrum
+//! bounds, iteration cap, quantization retries), and an ordered list of
+//! bytes→bytes stages. Manifest v2 stores a table of these specs plus a
+//! per-chunk index into it (see [`crate::store::manifest`]).
+//!
+//! ## Wire format (chain spec version 1)
+//!
+//! ```text
+//! version          u8 (= 1)
+//! array stage      u8 tag: 0 = raw-f64 · 1 = base compressor
+//!                  base: varint name len · name bytes · bound spec
+//! correction flag  u8 (0 / 1)
+//!                  if 1: frequency bound · varint max_iters ·
+//!                        varint max_quant_retries
+//! bytes stages     varint count, then per stage varint name len · name
+//! ```
+//!
+//! where a *bound spec* is `u8 tag (0 = absolute, 1 = relative) · f64 LE`
+//! and a *frequency bound* is `u8 tag (0 = uniform absolute, 1 = uniform
+//! relative, 2 = power-spectrum relative) · f64 LE`.
+//!
+//! The manifest v1 `CodecSpec` wire format is still parseable through
+//! [`CodecChainSpec::from_legacy_v1_bytes`], which maps the two legacy
+//! shapes (lossless; base + optional uniform relative bound) onto
+//! equivalent chains.
+
+use anyhow::{bail, Result};
+
+use crate::correction::{BoundSpec, FfczConfig, FrequencyBound};
+use crate::encoding::varint;
+
+/// Version byte leading every serialized chain spec.
+pub const CHAIN_SPEC_VERSION: u8 = 1;
+
+/// The array→bytes stage of a codec chain.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrayStage {
+    /// Raw little-endian f64 samples (bit-exact).
+    RawF64,
+    /// A registered error-bounded base compressor and its spatial bound
+    /// (resolved per chunk; used directly in base-only chains and as the
+    /// FFCz spatial bound E when a correction stage follows).
+    Base {
+        /// Registry name (`"sz-like"`, …, or anything added with
+        /// [`crate::codec::register_codec`]).
+        name: String,
+        /// Spatial bound E.
+        spatial: BoundSpec,
+    },
+}
+
+/// The optional FFCz dual-domain correction stage. Together with the base
+/// stage's spatial bound this is a complete [`FfczConfig`] — including the
+/// absolute and power-spectrum frequency modes the legacy store codec
+/// could not express.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CorrectionStage {
+    /// Frequency bound Δ (uniform absolute/relative, or power-spectrum
+    /// relative — Fig. 10 mode).
+    pub frequency: FrequencyBound,
+    /// POCS iteration cap.
+    pub max_iters: usize,
+    /// Bound-shrink retry ladder for quantization.
+    pub max_quant_retries: usize,
+}
+
+/// One named bytes→bytes stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BytesStage {
+    /// Registry name (`"lossless"`, or anything added with
+    /// [`crate::codec::register_bytes_codec`]).
+    pub name: String,
+}
+
+/// A composable per-chunk codec chain: array stage → optional FFCz
+/// correction → bytes stages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodecChainSpec {
+    pub array: ArrayStage,
+    pub correction: Option<CorrectionStage>,
+    /// Applied in order after the array stage on encode, reversed on
+    /// decode.
+    pub bytes: Vec<BytesStage>,
+}
+
+impl CodecChainSpec {
+    /// Bit-exact chain: raw f64 through the lossless backend.
+    pub fn lossless() -> Self {
+        Self {
+            array: ArrayStage::RawF64,
+            correction: None,
+            bytes: vec![BytesStage {
+                name: "lossless".to_string(),
+            }],
+        }
+    }
+
+    /// Base compressor + FFCz correction with the full `cfg` parameter
+    /// space (any spatial/frequency bound mode, iteration cap, retries).
+    pub fn ffcz(base: &str, cfg: &FfczConfig) -> Self {
+        Self {
+            array: ArrayStage::Base {
+                name: base.to_string(),
+                spatial: cfg.spatial,
+            },
+            correction: Some(CorrectionStage {
+                frequency: cfg.frequency.clone(),
+                max_iters: cfg.max_iters,
+                max_quant_retries: cfg.max_quant_retries,
+            }),
+            bytes: Vec::new(),
+        }
+    }
+
+    /// Base compressor alone: spatial bound only, no frequency guarantee.
+    pub fn base_only(base: &str, spatial: BoundSpec) -> Self {
+        Self {
+            array: ArrayStage::Base {
+                name: base.to_string(),
+                spatial,
+            },
+            correction: None,
+            bytes: Vec::new(),
+        }
+    }
+
+    /// Append a bytes→bytes stage.
+    pub fn with_bytes_stage(mut self, name: &str) -> Self {
+        self.bytes.push(BytesStage {
+            name: name.to_string(),
+        });
+        self
+    }
+
+    /// The full FFCz configuration this chain implies, if it has a
+    /// correction stage.
+    pub fn ffcz_config(&self) -> Option<FfczConfig> {
+        let correction = self.correction.as_ref()?;
+        let ArrayStage::Base { spatial, .. } = &self.array else {
+            return None;
+        };
+        Some(FfczConfig {
+            spatial: *spatial,
+            frequency: correction.frequency.clone(),
+            max_iters: correction.max_iters,
+            max_quant_retries: correction.max_quant_retries,
+        })
+    }
+
+    /// One-line human description (for `archive inspect`).
+    pub fn describe(&self) -> String {
+        let mut out = match &self.array {
+            ArrayStage::RawF64 => "raw-f64 (bit-exact)".to_string(),
+            ArrayStage::Base { name, spatial } => match (&self.correction, spatial) {
+                (Some(c), _) => format!(
+                    "{name} + FFCz ({}, {}, per chunk)",
+                    describe_bound("eb", spatial),
+                    describe_frequency(&c.frequency),
+                ),
+                (None, s) => format!(
+                    "{name} ({}, per chunk, no frequency bound)",
+                    describe_bound("eb", s)
+                ),
+            },
+        };
+        for stage in &self.bytes {
+            out.push_str(" → ");
+            out.push_str(&stage.name);
+        }
+        out
+    }
+
+    /// Serialize (chain spec version 1, see the module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = vec![CHAIN_SPEC_VERSION];
+        match &self.array {
+            ArrayStage::RawF64 => out.push(0u8),
+            ArrayStage::Base { name, spatial } => {
+                out.push(1u8);
+                varint::write(&mut out, name.len() as u64);
+                out.extend_from_slice(name.as_bytes());
+                write_bound(&mut out, spatial);
+            }
+        }
+        match &self.correction {
+            None => out.push(0u8),
+            Some(c) => {
+                out.push(1u8);
+                write_frequency(&mut out, &c.frequency);
+                varint::write(&mut out, c.max_iters as u64);
+                varint::write(&mut out, c.max_quant_retries as u64);
+            }
+        }
+        varint::write(&mut out, self.bytes.len() as u64);
+        for stage in &self.bytes {
+            varint::write(&mut out, stage.name.len() as u64);
+            out.extend_from_slice(stage.name.as_bytes());
+        }
+        out
+    }
+
+    /// Parse a chain spec at `*pos`, advancing it.
+    pub fn from_bytes(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let version = read_u8(buf, pos)?;
+        if version != CHAIN_SPEC_VERSION {
+            bail!("unsupported codec chain spec version {version}");
+        }
+        let array = match read_u8(buf, pos)? {
+            0 => ArrayStage::RawF64,
+            1 => {
+                let name = read_name(buf, pos, "base compressor")?;
+                let spatial = read_bound(buf, pos)?;
+                ArrayStage::Base { name, spatial }
+            }
+            x => bail!("unknown array stage tag {x} in codec chain spec"),
+        };
+        let correction = match read_u8(buf, pos)? {
+            0 => None,
+            1 => {
+                let frequency = read_frequency(buf, pos)?;
+                let max_iters = varint::read(buf, pos)? as usize;
+                let max_quant_retries = varint::read(buf, pos)? as usize;
+                Some(CorrectionStage {
+                    frequency,
+                    max_iters,
+                    max_quant_retries,
+                })
+            }
+            x => bail!("bad correction flag {x} in codec chain spec"),
+        };
+        let n_stages = varint::read(buf, pos)? as usize;
+        // A stage occupies ≥ 2 serialized bytes; bound allocations by the
+        // (untrusted) buffer.
+        if n_stages > buf.len() {
+            bail!("implausible bytes stage count {n_stages}");
+        }
+        let mut bytes = Vec::with_capacity(n_stages);
+        for _ in 0..n_stages {
+            bytes.push(BytesStage {
+                name: read_name(buf, pos, "bytes codec")?,
+            });
+        }
+        let spec = Self {
+            array,
+            correction,
+            bytes,
+        };
+        spec.validate_shape()?;
+        Ok(spec)
+    }
+
+    /// Structural validation (stage compatibility; name resolution happens
+    /// in [`crate::codec::CodecChain::from_spec`]).
+    pub fn validate_shape(&self) -> Result<()> {
+        if self.correction.is_some() && matches!(self.array, ArrayStage::RawF64) {
+            bail!("FFCz correction stage requires a base-compressor array stage, not raw-f64");
+        }
+        Ok(())
+    }
+
+    /// Parse a **manifest v1** `CodecSpec` at `*pos` and lift it onto an
+    /// equivalent chain. Legacy archives only ever expressed two shapes:
+    ///
+    /// * tag 0, lossless → raw-f64 + `lossless` bytes stage;
+    /// * tag 1, base + relative spatial bound + optional uniform relative
+    ///   frequency bound → base stage (+ correction stage with the v1-era
+    ///   defaults `max_iters = 200`, `max_quant_retries = 3`, which is what
+    ///   the v1 store encoder hard-coded).
+    pub fn from_legacy_v1_bytes(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        match read_u8(buf, pos)? {
+            0 => Ok(Self::lossless()),
+            1 => {
+                let base = read_name(buf, pos, "base compressor")?;
+                let spatial_rel = read_f64(buf, pos)?;
+                let frequency_rel = match read_u8(buf, pos)? {
+                    0 => None,
+                    1 => Some(read_f64(buf, pos)?),
+                    x => bail!("bad frequency flag {x} in v1 codec spec"),
+                };
+                Ok(match frequency_rel {
+                    Some(db) => Self::ffcz(&base, &FfczConfig::relative(spatial_rel, db)),
+                    None => Self::base_only(&base, BoundSpec::Relative(spatial_rel)),
+                })
+            }
+            x => bail!("unknown v1 codec spec tag {x}"),
+        }
+    }
+}
+
+fn describe_bound(label: &str, b: &BoundSpec) -> String {
+    match b {
+        BoundSpec::Absolute(v) => format!("{label} {v:.3e} abs"),
+        BoundSpec::Relative(r) => format!("{label} {r:.3e} rel"),
+    }
+}
+
+fn describe_frequency(f: &FrequencyBound) -> String {
+    match f {
+        FrequencyBound::Uniform(b) => describe_bound("db", b),
+        FrequencyBound::PowerSpectrumRelative(p) => format!("power-spectrum {p:.3e} rel"),
+    }
+}
+
+fn write_bound(out: &mut Vec<u8>, b: &BoundSpec) {
+    match b {
+        BoundSpec::Absolute(v) => {
+            out.push(0u8);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        BoundSpec::Relative(r) => {
+            out.push(1u8);
+            out.extend_from_slice(&r.to_le_bytes());
+        }
+    }
+}
+
+fn read_bound(buf: &[u8], pos: &mut usize) -> Result<BoundSpec> {
+    match read_u8(buf, pos)? {
+        0 => Ok(BoundSpec::Absolute(read_f64(buf, pos)?)),
+        1 => Ok(BoundSpec::Relative(read_f64(buf, pos)?)),
+        x => bail!("unknown bound spec tag {x}"),
+    }
+}
+
+fn write_frequency(out: &mut Vec<u8>, f: &FrequencyBound) {
+    match f {
+        FrequencyBound::Uniform(BoundSpec::Absolute(v)) => {
+            out.push(0u8);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        FrequencyBound::Uniform(BoundSpec::Relative(r)) => {
+            out.push(1u8);
+            out.extend_from_slice(&r.to_le_bytes());
+        }
+        FrequencyBound::PowerSpectrumRelative(p) => {
+            out.push(2u8);
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+    }
+}
+
+fn read_frequency(buf: &[u8], pos: &mut usize) -> Result<FrequencyBound> {
+    match read_u8(buf, pos)? {
+        0 => Ok(FrequencyBound::Uniform(BoundSpec::Absolute(read_f64(
+            buf, pos,
+        )?))),
+        1 => Ok(FrequencyBound::Uniform(BoundSpec::Relative(read_f64(
+            buf, pos,
+        )?))),
+        2 => Ok(FrequencyBound::PowerSpectrumRelative(read_f64(buf, pos)?)),
+        x => bail!("unknown frequency bound tag {x}"),
+    }
+}
+
+fn read_u8(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    let v = *buf
+        .get(*pos)
+        .ok_or_else(|| anyhow::anyhow!("truncated codec chain spec"))?;
+    *pos += 1;
+    Ok(v)
+}
+
+fn read_name(buf: &[u8], pos: &mut usize, what: &str) -> Result<String> {
+    let len = varint::read(buf, pos)? as usize;
+    if len > 255 {
+        bail!("implausible {what} name length {len}");
+    }
+    if *pos + len > buf.len() {
+        bail!("truncated {what} name");
+    }
+    let name = String::from_utf8(buf[*pos..*pos + len].to_vec())?;
+    *pos += len;
+    Ok(name)
+}
+
+/// Read a little-endian f64 at `*pos`, advancing it (shared with the
+/// manifest parser).
+pub(crate) fn read_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    if *pos + 8 > buf.len() {
+        bail!("truncated f64");
+    }
+    let v = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every bound mode `FfczConfig` can express — including absolute and
+    /// power-spectrum, which the legacy `CodecSpec` could not encode.
+    fn exhaustive_specs() -> Vec<CodecChainSpec> {
+        vec![
+            CodecChainSpec::lossless(),
+            CodecChainSpec::base_only("zfp-like", BoundSpec::Relative(1e-2)),
+            CodecChainSpec::base_only("sperr-like", BoundSpec::Absolute(2.5e-4)),
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3)),
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::absolute(1e-4, 5e-4)),
+            CodecChainSpec::ffcz("zfp-like", &FfczConfig::power_spectrum(1e-2, 1e-3)),
+            CodecChainSpec::ffcz(
+                "sperr-like",
+                &FfczConfig {
+                    spatial: BoundSpec::Absolute(3e-3),
+                    frequency: FrequencyBound::Uniform(BoundSpec::Relative(2e-3)),
+                    max_iters: 77,
+                    max_quant_retries: 2,
+                },
+            ),
+            CodecChainSpec::base_only("identity", BoundSpec::Relative(1e-6))
+                .with_bytes_stage("lossless"),
+        ]
+    }
+
+    #[test]
+    fn spec_roundtrips_every_bound_mode() {
+        for spec in exhaustive_specs() {
+            let bytes = spec.to_bytes();
+            let mut pos = 0;
+            let back = CodecChainSpec::from_bytes(&bytes, &mut pos).unwrap();
+            assert_eq!(back, spec, "roundtrip failed for {}", spec.describe());
+            assert_eq!(pos, bytes.len());
+        }
+    }
+
+    #[test]
+    fn ffcz_config_roundtrips_through_spec() {
+        let cfg = FfczConfig::power_spectrum(1e-2, 1e-3);
+        let spec = CodecChainSpec::ffcz("sz-like", &cfg);
+        let back = spec.ffcz_config().unwrap();
+        assert_eq!(back.spatial, cfg.spatial);
+        assert_eq!(back.frequency, cfg.frequency);
+        assert_eq!(back.max_iters, cfg.max_iters);
+        assert_eq!(back.max_quant_retries, cfg.max_quant_retries);
+        assert!(CodecChainSpec::lossless().ffcz_config().is_none());
+    }
+
+    #[test]
+    fn rejects_bad_bytes() {
+        let mut pos = 0;
+        assert!(CodecChainSpec::from_bytes(&[], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(CodecChainSpec::from_bytes(&[99], &mut pos).is_err());
+        // Correction over raw-f64 is structurally invalid.
+        let mut bad = vec![CHAIN_SPEC_VERSION, 0u8, 1u8, 1u8];
+        bad.extend_from_slice(&1e-3f64.to_le_bytes());
+        bad.extend_from_slice(&[200, 1, 3, 0]); // varint 200 = [200, 1]
+        let mut pos = 0;
+        assert!(CodecChainSpec::from_bytes(&bad, &mut pos).is_err());
+        // Truncation at every prefix must error, never panic.
+        let bytes = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3)).to_bytes();
+        for cut in 0..bytes.len() {
+            let mut pos = 0;
+            assert!(
+                CodecChainSpec::from_bytes(&bytes[..cut], &mut pos).is_err(),
+                "prefix of {cut} bytes unexpectedly parsed"
+            );
+        }
+    }
+
+    #[test]
+    fn legacy_v1_specs_lift_onto_chains() {
+        // Hand-built v1 wire bytes: tag 0 (lossless).
+        let mut pos = 0;
+        let spec = CodecChainSpec::from_legacy_v1_bytes(&[0u8], &mut pos).unwrap();
+        assert_eq!(spec, CodecChainSpec::lossless());
+
+        // Tag 1: base "sz-like", eb 1e-3 rel, db 1e-3 rel.
+        let mut v1 = vec![1u8, 7u8];
+        v1.extend_from_slice(b"sz-like");
+        v1.extend_from_slice(&1e-3f64.to_le_bytes());
+        v1.push(1u8);
+        v1.extend_from_slice(&1e-3f64.to_le_bytes());
+        let mut pos = 0;
+        let spec = CodecChainSpec::from_legacy_v1_bytes(&v1, &mut pos).unwrap();
+        assert_eq!(pos, v1.len());
+        assert_eq!(
+            spec,
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3))
+        );
+
+        // Tag 1 without frequency bound → base-only chain.
+        let mut v1 = vec![1u8, 8u8];
+        v1.extend_from_slice(b"zfp-like");
+        v1.extend_from_slice(&1e-2f64.to_le_bytes());
+        v1.push(0u8);
+        let mut pos = 0;
+        let spec = CodecChainSpec::from_legacy_v1_bytes(&v1, &mut pos).unwrap();
+        assert_eq!(
+            spec,
+            CodecChainSpec::base_only("zfp-like", BoundSpec::Relative(1e-2))
+        );
+
+        let mut pos = 0;
+        assert!(CodecChainSpec::from_legacy_v1_bytes(&[9u8], &mut pos).is_err());
+    }
+
+    #[test]
+    fn describe_names_every_stage() {
+        let d = CodecChainSpec::lossless().describe();
+        assert!(d.contains("raw-f64") && d.contains("lossless"), "{d}");
+        let d =
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::power_spectrum(1e-2, 1e-3)).describe();
+        assert!(d.contains("sz-like") && d.contains("power-spectrum"), "{d}");
+    }
+}

@@ -65,7 +65,10 @@ pub trait Compressor: Send + Sync {
     fn decompress(&self, payload: &[u8]) -> Result<Field>;
 }
 
-/// Look up a compressor by its `name()` (for archive decoding and the CLI).
+/// Look up a **built-in** compressor by its `name()`. Most callers want
+/// [`crate::codec::build_compressor`] instead, which also resolves base
+/// compressors registered at runtime with [`crate::codec::register_codec`];
+/// this function is the registry's built-in tier.
 pub fn by_name(name: &str) -> Option<Box<dyn Compressor>> {
     match name {
         "sz-like" => Some(Box::new(szlike::SzLike::default())),

@@ -16,10 +16,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::codec::CodecChainSpec;
 use crate::compressors::Compressor;
 use crate::correction::{correct_reconstruction, FfczArchive, FfczConfig};
 use crate::data::Field;
-use crate::store::{encode_store, CodecSpec, StoreWriteOptions, StoreWriteReport};
+use crate::store::{encode_store, StoreWriteOptions, StoreWriteReport};
 
 /// Pipeline execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -249,34 +250,37 @@ fn finish_report(
 pub struct StoreSink {
     /// Output directory (created if missing).
     pub dir: PathBuf,
-    /// Per-chunk codec chain applied to every instance.
-    pub spec: CodecSpec,
+    /// Default per-chunk codec chain applied to every instance.
+    pub spec: CodecChainSpec,
     /// Chunk shape; `None` picks the sharding-style default of
     /// [`StoreWriteOptions::default_for`]: axis-0 slabs, `max(workers, 2)`
     /// of them (the chunked analogue of [`super::sharding::shard_field`]).
     pub chunk_shape: Option<Vec<usize>>,
     /// Worker threads for per-chunk encoding.
     pub workers: usize,
+    /// Per-chunk chain overrides (chunk key → chain), applied to every
+    /// instance's grid; see [`StoreWriteOptions::overrides`].
+    pub overrides: Vec<(String, CodecChainSpec)>,
 }
 
 impl StoreSink {
-    pub fn new(dir: PathBuf, spec: CodecSpec) -> Self {
+    pub fn new(dir: PathBuf, spec: CodecChainSpec) -> Self {
         Self {
             dir,
             spec,
             chunk_shape: None,
             workers: 2,
+            overrides: Vec::new(),
         }
     }
 
     fn options_for(&self, field: &Field) -> Result<StoreWriteOptions> {
-        match &self.chunk_shape {
-            Some(c) => Ok(StoreWriteOptions {
-                chunk_shape: c.clone(),
-                workers: self.workers.max(1),
-            }),
-            None => StoreWriteOptions::default_for(field.shape(), self.workers),
-        }
+        let mut opts = match &self.chunk_shape {
+            Some(c) => StoreWriteOptions::new(c).workers(self.workers),
+            None => StoreWriteOptions::default_for(field.shape(), self.workers)?,
+        };
+        opts.overrides = self.overrides.clone();
+        Ok(opts)
     }
 }
 
@@ -449,11 +453,7 @@ mod tests {
         let originals: Vec<(String, Field)> = insts.clone();
         let sink = StoreSink::new(
             dir.clone(),
-            CodecSpec::Ffcz {
-                base: "sz-like".into(),
-                spatial_rel: 1e-3,
-                frequency_rel: Some(1e-3),
-            },
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3)),
         );
         let report = run_pipeline_to_store(insts, &sink).unwrap();
         assert_eq!(report.outputs.len(), 3);

@@ -628,10 +628,13 @@ fn edits_satisfy_bounds(
     s_ok && f_ok
 }
 
-/// Decompress an FFCz archive: base decompress + edit application.
+/// Decompress an FFCz archive: base decompress + edit application. The
+/// base compressor is resolved through the codec registry
+/// ([`crate::codec::build_compressor`]), so archives referencing
+/// runtime-registered compressors decode as long as the codec was
+/// registered in this process.
 pub fn decompress(archive: &FfczArchive) -> Result<Field> {
-    let base = crate::compressors::by_name(&archive.base_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown base compressor {}", archive.base_name))?;
+    let base = crate::codec::require_compressor(&archive.base_name)?;
     let recon0 = base.decompress(&archive.base_payload)?;
     apply::apply_edits(&recon0, &archive.edits)
 }

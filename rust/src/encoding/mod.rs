@@ -1,15 +1,17 @@
 //! Entropy coding and bit-level utilities shared by the base compressors
 //! and the FFCz edit codec: bit I/O, canonical Huffman coding, bit-packed
-//! flag vectors, varints, and the Huffman→ZSTD lossless cascade the paper
-//! applies to quantized edits (§IV-B).
+//! flag vectors, varints, CRC-32 payload checksums, and the Huffman→ZSTD
+//! lossless cascade the paper applies to quantized edits (§IV-B).
 
 pub mod bitio;
+pub mod crc32;
 pub mod flags;
 pub mod huffman;
 pub mod lossless;
 pub mod varint;
 
 pub use bitio::{BitReader, BitWriter};
+pub use crc32::crc32;
 pub use flags::{pack_flags, unpack_flags};
 pub use huffman::{huffman_decode, huffman_encode};
 pub use lossless::{lossless_compress, lossless_decompress};

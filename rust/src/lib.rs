@@ -15,6 +15,10 @@
 //! * [`correction`] — the FFCz contribution itself: POCS alternating
 //!   projection between the *s-cube* and *f-cube*, plus edit compaction,
 //!   quantization, and entropy coding;
+//! * [`codec`] — composable per-chunk codec chains: a runtime registry of
+//!   base compressors and bytes→bytes stages, an optional FFCz correction
+//!   stage with the full bound space, and a self-describing versioned
+//!   chain spec;
 //! * [`coordinator`] — a streaming pipeline that overlaps base compression
 //!   of instance *i+1* with FFCz editing of instance *i* (paper Fig. 7d),
 //!   with an optional chunked-store sink for streamed instances;
@@ -60,22 +64,36 @@
 //!
 //! ```text
 //! "FFCZSTR1"            8-byte head magic
-//! chunk payloads        one codec output per chunk, row-major grid order
+//! chunk payloads        one codec-chain output per chunk, row-major order
 //! manifest              versioned binary manifest (see below)
 //! footer                manifest offset u64 LE · manifest len u64 LE ·
 //!                       "FFCZEND1"              (24 bytes total)
 //! ```
 //!
-//! The manifest (version 1, varint-based — see [`store::manifest`] for the
+//! The manifest (version 2, varint-based — see [`store::manifest`] for the
 //! field-by-field layout) records the array shape and source precision,
-//! the regular chunk grid, the codec chain (base compressor + FFCz bounds,
-//! or lossless), and a per-chunk table of byte ranges plus dual-domain
+//! the regular chunk grid, a **codec chain table** (each entry a
+//! serialized [`codec::CodecChainSpec`]: raw-f64 or any registered base
+//! compressor, an optional FFCz correction stage carrying the full
+//! [`correction::FfczConfig`] — absolute, relative, and power-spectrum
+//! bounds — and bytes→bytes lossless stages), and a per-chunk table of
+//! byte ranges, chain indices, CRC-32 payload checksums, and dual-domain
 //! verification stats: bit-packed `spatial_ok` / `frequency_ok` flags and
-//! the max spatial/frequency bound ratios measured at encode time. Readers
-//! parse footer + manifest only and fetch chunks on demand, so
+//! the max spatial/frequency bound ratios measured at encode time. The
+//! per-chunk chain index is what makes mixed archives possible — e.g.
+//! bit-exact lossless boundary chunks around FFCz-corrected interior
+//! chunks.
+//!
+//! Manifest **version 1** archives (single store-wide codec, two relative
+//! bounds only, no checksums) remain readable: the legacy codec spec is
+//! lifted onto an equivalent chain at parse time and checksum verification
+//! is skipped. Writers always emit version 2. Readers parse footer +
+//! manifest only and fetch chunks on demand, so
 //! [`store::Store::read_region`] decodes exactly the chunks intersecting
-//! the requested window.
+//! the requested window, CRC-verifying each payload before it reaches a
+//! codec.
 
+pub mod codec;
 pub mod compressors;
 pub mod coordinator;
 pub mod correction;
@@ -90,6 +108,7 @@ pub mod util;
 
 /// Convenient re-exports of the most commonly used types.
 pub mod prelude {
+    pub use crate::codec::{register_codec, CodecChain, CodecChainSpec};
     pub use crate::compressors::{
         sperrlike::SperrLike, szlike::SzLike, zfplike::ZfpLike, Compressor, ErrorBound,
     };
@@ -97,5 +116,5 @@ pub mod prelude {
     pub use crate::data::Field;
     pub use crate::fourier::{Complex, Fft};
     pub use crate::metrics::QualityReport;
-    pub use crate::store::{CodecSpec, Store, StoreWriteOptions};
+    pub use crate::store::{Store, StoreWriteOptions};
 }

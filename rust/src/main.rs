@@ -5,13 +5,15 @@
 //!
 //! ```text
 //! ffcz compress   --input f.ffld --output f.fz [--base sz-like]
-//!                 [--eb 1e-3] [--db 1e-3 | --power-spectrum 1e-3]
+//!                 [--eb 1e-3 | --abs-eb 2e-4]
+//!                 [--db 1e-3 | --abs-db 2e-4 | --power-spectrum 1e-3]
 //! ffcz decompress --input f.fz --output f.ffld
 //! ffcz verify     --original f.ffld --archive f.fz [--eb ..] [--db ..]
 //! ffcz synth      --dataset nyx-baryon --scale 32 --output f.ffld
 //! ffcz experiment <fig1|table2|...|all> [--scale 32] [--out results]
 //! ffcz pipeline   --instances 4 --scale 32 [--sequential] [--store dir]
-//! ffcz archive    create|extract|inspect|read-region …  (chunked .ffcz store)
+//! ffcz archive    create|extract|inspect|read-region …  (chunked .ffcz store,
+//!                 per-chunk codec chains via --chunk-codec)
 //! ffcz info       --archive f.fz
 //! ```
 
@@ -21,13 +23,13 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use ffcz::compressors::by_name;
+use ffcz::codec::{require_compressor, CodecChainSpec};
 use ffcz::coordinator::{run_pipeline, run_pipeline_to_store, ExecMode, PipelineConfig, StoreSink};
 use ffcz::correction::{self, BoundSpec, FfczArchive, FfczConfig, FrequencyBound};
 use ffcz::data::{io, synth};
 use ffcz::experiments::{self, ExpOptions};
 use ffcz::metrics::QualityReport;
-use ffcz::store::{write_store, CodecSpec, Store, StoreWriteOptions};
+use ffcz::store::{write_store, Store, StoreWriteOptions};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -71,7 +73,8 @@ fn print_usage() {
          \n\
          commands:\n\
          \x20 compress    --input F --output F [--base sz-like|zfp-like|sperr-like]\n\
-         \x20             [--eb REL] [--db REL | --power-spectrum REL]\n\
+         \x20             [--eb REL | --abs-eb ABS]\n\
+         \x20             [--db REL | --abs-db ABS | --power-spectrum REL]\n\
          \x20 decompress  --input F --output F\n\
          \x20 verify      --original F --archive F [--eb REL] [--db REL]\n\
          \x20 synth       --dataset NAME --scale N --output F   (nyx-baryon, nyx-dm,\n\
@@ -79,9 +82,15 @@ fn print_usage() {
          \x20 experiment  <id|all> [--scale N] [--out DIR] [--artifacts DIR]\n\
          \x20 pipeline    [--instances N] [--scale N] [--sequential]\n\
          \x20             [--store DIR] [--chunk A,B,C] [--workers N]\n\
+         \x20             store sink also takes the archive-create codec flags\n\
+         \x20             (--lossless, --base-only, bound flags, --chunk-codec)\n\
          \x20 archive     create --input F --output F [--chunk A,B,C]\n\
-         \x20             [--base NAME | --lossless] [--base-only] [--eb REL]\n\
-         \x20             [--db REL] [--workers N]\n\
+         \x20             [--base NAME | --lossless] [--base-only]\n\
+         \x20             [--eb REL | --abs-eb ABS]\n\
+         \x20             [--db REL | --abs-db ABS | --power-spectrum REL]\n\
+         \x20             [--chunk-codec 'KEY=SPEC[;KEY=SPEC…]'] [--workers N]\n\
+         \x20             KEY is a chunk key ('c/0/1'); SPEC is 'lossless' or\n\
+         \x20             'BASE[:eb=R,abs-eb=A,db=R,abs-db=A,ps=R,base-only]'\n\
          \x20 archive     extract --input F --output F [--workers N]\n\
          \x20 archive     inspect --input F [--chunks]\n\
          \x20 archive     read-region --input F --origin A,B,C --shape A,B,C\n\
@@ -105,27 +114,125 @@ fn parse_workers(flags: &HashMap<String, String>) -> Result<usize> {
     Ok(parse_f64(flags, "workers", 2.0)?.max(1.0) as usize)
 }
 
-/// Build the per-chunk codec spec from `--lossless` / `--base` /
-/// `--base-only` / `--eb` / `--db`.
-fn build_codec_spec(flags: &HashMap<String, String>) -> Result<CodecSpec> {
+/// Build the default per-chunk codec chain from `--lossless` / `--base` /
+/// `--base-only` and the bound flags (`--eb`/`--abs-eb`,
+/// `--db`/`--abs-db`/`--power-spectrum`).
+fn build_chain_spec(flags: &HashMap<String, String>) -> Result<CodecChainSpec> {
     if flags.contains_key("lossless") {
-        return Ok(CodecSpec::Lossless);
+        return Ok(CodecChainSpec::lossless());
     }
     let base = flags.get("base").map(|s| s.as_str()).unwrap_or("sz-like");
-    if by_name(base).is_none() {
-        bail!("unknown base compressor '{base}'");
+    require_compressor(base)?;
+    if flags.contains_key("base-only") {
+        Ok(CodecChainSpec::base_only(base, spatial_bound_flag(flags)?))
+    } else {
+        Ok(CodecChainSpec::ffcz(base, &build_config(flags)?))
     }
-    let eb = parse_f64(flags, "eb", 1e-3)?;
-    let db = parse_f64(flags, "db", 1e-3)?;
-    Ok(CodecSpec::Ffcz {
-        base: base.to_string(),
-        spatial_rel: eb,
-        frequency_rel: if flags.contains_key("base-only") {
-            None
-        } else {
-            Some(db)
-        },
+}
+
+/// Spatial bound E from `--abs-eb` (absolute) or `--eb` (relative,
+/// default 1e-3).
+fn spatial_bound_flag(flags: &HashMap<String, String>) -> Result<BoundSpec> {
+    match flags.get("abs-eb") {
+        Some(v) => Ok(BoundSpec::Absolute(
+            v.parse().context("--abs-eb expects a number")?,
+        )),
+        None => Ok(BoundSpec::Relative(parse_f64(flags, "eb", 1e-3)?)),
+    }
+}
+
+/// Frequency bound Δ from `--power-spectrum`, `--abs-db`, or `--db`
+/// (relative, default 1e-3).
+fn frequency_bound_flag(flags: &HashMap<String, String>) -> Result<FrequencyBound> {
+    if let Some(ps) = flags.get("power-spectrum") {
+        let p: f64 = ps.parse().context("--power-spectrum expects a number")?;
+        return Ok(FrequencyBound::PowerSpectrumRelative(p));
+    }
+    match flags.get("abs-db") {
+        Some(v) => Ok(FrequencyBound::Uniform(BoundSpec::Absolute(
+            v.parse().context("--abs-db expects a number")?,
+        ))),
+        None => Ok(FrequencyBound::Uniform(BoundSpec::Relative(parse_f64(
+            flags, "db", 1e-3,
+        )?))),
+    }
+}
+
+/// Parse one `--chunk-codec` chain mini-spec: `lossless`, or
+/// `BASE[:key=val,…]` with keys `eb` / `abs-eb` / `db` / `abs-db` / `ps`
+/// (power-spectrum relative) / `base-only`.
+fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
+    let s = s.trim();
+    if s == "lossless" {
+        return Ok(CodecChainSpec::lossless());
+    }
+    let (base, params) = match s.split_once(':') {
+        Some((b, p)) => (b.trim(), p),
+        None => (s, ""),
+    };
+    require_compressor(base)?;
+    let mut spatial = BoundSpec::Relative(1e-3);
+    let mut frequency: Option<FrequencyBound> = None;
+    let mut base_only = false;
+    for part in params.split(',').filter(|p| !p.trim().is_empty()) {
+        let (key, val) = match part.split_once('=') {
+            Some((k, v)) => (k.trim(), v.trim()),
+            None => (part.trim(), ""),
+        };
+        let num = || {
+            val.parse::<f64>()
+                .with_context(|| format!("chunk-codec key '{key}' expects a number, got '{val}'"))
+        };
+        match key {
+            "eb" => spatial = BoundSpec::Relative(num()?),
+            "abs-eb" => spatial = BoundSpec::Absolute(num()?),
+            "db" => frequency = Some(FrequencyBound::Uniform(BoundSpec::Relative(num()?))),
+            "abs-db" => frequency = Some(FrequencyBound::Uniform(BoundSpec::Absolute(num()?))),
+            "ps" => frequency = Some(FrequencyBound::PowerSpectrumRelative(num()?)),
+            "base-only" => base_only = true,
+            other => bail!("unknown chunk-codec key '{other}' in '{s}'"),
+        }
+    }
+    if base_only && frequency.is_some() {
+        bail!(
+            "chunk-codec spec '{s}' combines base-only with a frequency bound key \
+             (db / abs-db / ps) — pick one"
+        );
+    }
+    Ok(if base_only {
+        CodecChainSpec::base_only(base, spatial)
+    } else {
+        CodecChainSpec::ffcz(
+            base,
+            &FfczConfig {
+                spatial,
+                frequency: frequency
+                    .unwrap_or(FrequencyBound::Uniform(BoundSpec::Relative(1e-3))),
+                max_iters: 200,
+                max_quant_retries: 3,
+            },
+        )
     })
+}
+
+/// Parse `--chunk-codec 'KEY=SPEC[;KEY=SPEC…]'` into per-chunk overrides.
+fn parse_chunk_codec_overrides(
+    flags: &HashMap<String, String>,
+) -> Result<Vec<(String, CodecChainSpec)>> {
+    let Some(value) = flags.get("chunk-codec") else {
+        return Ok(Vec::new());
+    };
+    let mut overrides = Vec::new();
+    for item in value.split(';').filter(|p| !p.trim().is_empty()) {
+        let Some((key, spec)) = item.split_once('=') else {
+            bail!("--chunk-codec expects KEY=SPEC[;KEY=SPEC…], got '{item}'");
+        };
+        overrides.push((key.trim().to_string(), parse_chain_mini(spec)?));
+    }
+    if overrides.is_empty() {
+        bail!("--chunk-codec given but no KEY=SPEC entries parsed");
+    }
+    Ok(overrides)
 }
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -168,27 +275,19 @@ fn parse_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result
 }
 
 fn build_config(flags: &HashMap<String, String>) -> Result<FfczConfig> {
-    let eb = parse_f64(flags, "eb", 1e-3)?;
-    let cfg = if let Some(ps) = flags.get("power-spectrum") {
-        let p: f64 = ps.parse().context("--power-spectrum expects a number")?;
-        FfczConfig::power_spectrum(eb, p)
-    } else {
-        let db = parse_f64(flags, "db", 1e-3)?;
-        FfczConfig {
-            spatial: BoundSpec::Relative(eb),
-            frequency: FrequencyBound::Uniform(BoundSpec::Relative(db)),
-            max_iters: 200,
-            max_quant_retries: 3,
-        }
-    };
-    Ok(cfg)
+    Ok(FfczConfig {
+        spatial: spatial_bound_flag(flags)?,
+        frequency: frequency_bound_flag(flags)?,
+        max_iters: 200,
+        max_quant_retries: 3,
+    })
 }
 
 fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
     let input = PathBuf::from(get(flags, "input")?);
     let output = PathBuf::from(get(flags, "output")?);
     let base_name = flags.get("base").map(|s| s.as_str()).unwrap_or("sz-like");
-    let base = by_name(base_name).ok_or_else(|| anyhow::anyhow!("unknown base {base_name}"))?;
+    let base = require_compressor(base_name)?;
     let cfg = build_config(flags)?;
 
     let field = io::load(&input)?;
@@ -301,7 +400,7 @@ fn cmd_pipeline(flags: &HashMap<String, String>) -> Result<()> {
     let n: usize = parse_f64(flags, "instances", 4.0)? as usize;
     let scale: usize = parse_f64(flags, "scale", 32.0)? as usize;
     let base_name = flags.get("base").map(|s| s.as_str()).unwrap_or("sz-like");
-    let base = by_name(base_name).ok_or_else(|| anyhow::anyhow!("unknown base {base_name}"))?;
+    let base = require_compressor(base_name)?;
     let mut cfg = PipelineConfig::new(build_config(flags)?);
     if flags.contains_key("sequential") {
         cfg.mode = ExecMode::Sequential;
@@ -319,8 +418,9 @@ fn cmd_pipeline(flags: &HashMap<String, String>) -> Result<()> {
         .collect();
     if let Some(dir) = flags.get("store") {
         // Streamed instances land directly in chunked .ffcz stores.
-        let mut sink = StoreSink::new(PathBuf::from(dir), build_codec_spec(flags)?);
+        let mut sink = StoreSink::new(PathBuf::from(dir), build_chain_spec(flags)?);
         sink.workers = parse_workers(flags)?;
+        sink.overrides = parse_chunk_codec_overrides(flags)?;
         if let Some(chunk) = flags.get("chunk") {
             sink.chunk_shape = Some(parse_axes(chunk, "chunk")?);
         }
@@ -367,15 +467,13 @@ fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
     let input = PathBuf::from(get(flags, "input")?);
     let output = PathBuf::from(get(flags, "output")?);
     let field = io::load(&input)?;
-    let spec = build_codec_spec(flags)?;
+    let spec = build_chain_spec(flags)?;
     let workers = parse_workers(flags)?;
-    let opts = match flags.get("chunk") {
-        Some(c) => StoreWriteOptions {
-            chunk_shape: parse_axes(c, "chunk")?,
-            workers,
-        },
+    let mut opts = match flags.get("chunk") {
+        Some(c) => StoreWriteOptions::new(&parse_axes(c, "chunk")?).workers(workers),
         None => StoreWriteOptions::default_for(field.shape(), workers)?,
     };
+    opts.overrides = parse_chunk_codec_overrides(flags)?;
     let chunk_shape = opts.chunk_shape.clone();
     let report = write_store(&field, &spec, &opts, &output)?;
     println!(
@@ -428,11 +526,25 @@ fn cmd_archive_inspect(flags: &HashMap<String, String>) -> Result<()> {
         store.grid().grid_shape(),
         m.chunk_shape
     );
-    println!("codec        : {}", m.codec.describe());
+    for (i, chain) in m.chains.iter().enumerate() {
+        println!(
+            "codec chain  : #{i} {}{}",
+            chain.describe(),
+            if i == 0 { " (default)" } else { "" }
+        );
+    }
     println!(
         "payload      : {} in {} chunks",
         ffcz::util::human_bytes(m.payload_bytes() as usize),
         m.chunks.len()
+    );
+    println!(
+        "checksums    : {}",
+        if m.chunks.iter().all(|c| c.crc32.is_some()) {
+            "CRC-32 per chunk"
+        } else {
+            "none (manifest v1 archive)"
+        }
     );
     println!(
         "dual bounds  : {}",
@@ -443,13 +555,19 @@ fn cmd_archive_inspect(flags: &HashMap<String, String>) -> Result<()> {
         }
     );
     if flags.contains_key("chunks") {
-        println!("chunk        offset      bytes  s-ok f-ok  s-ratio  f-ratio  iters");
+        println!(
+            "chunk        offset      bytes  chain       crc32  s-ok f-ok  s-ratio  f-ratio  iters"
+        );
         for (i, c) in m.chunks.iter().enumerate() {
             println!(
-                "{:<10} {:>8} {:>10}  {:>4} {:>4}  {:>7.3} {:>8.3} {:>6}",
+                "{:<10} {:>8} {:>10}  {:>5} {:>10}  {:>4} {:>4}  {:>7.3} {:>8.3} {:>6}",
                 store.grid().chunk_key(i),
                 c.offset,
                 c.length,
+                format!("#{}", c.chain),
+                c.crc32
+                    .map(|v| format!("{v:08x}"))
+                    .unwrap_or_else(|| "-".to_string()),
                 if c.stats.spatial_ok { "yes" } else { "NO" },
                 if c.stats.frequency_ok { "yes" } else { "NO" },
                 c.stats.max_spatial_ratio,

@@ -1,7 +1,8 @@
 //! Versioned binary manifest of a `.ffcz` chunked store.
 //!
-//! The manifest is self-describing: array shape and source precision, the
-//! chunk grid, the codec chain, and a per-chunk table of byte ranges plus
+//! The manifest is self-describing: array shape and source precision, a
+//! **codec chain table** ([`CodecChainSpec`] entries), and a per-chunk
+//! table of byte ranges, chain indices, CRC-32 payload checksums, and
 //! dual-domain verification stats. It is serialized with the crate's
 //! [`varint`] primitives; the per-chunk `spatial_ok` / `frequency_ok` bits
 //! are bit-packed with [`crate::encoding::pack_flags`].
@@ -20,28 +21,40 @@
 //! Readers locate the manifest through the footer, so chunk payloads can be
 //! streamed to the file as they are encoded and the manifest appended last.
 //!
-//! ## Manifest layout (version 1)
+//! ## Manifest layout (version 2)
 //!
 //! ```text
-//! version            varint (= 1)
+//! version            varint (= 2)
 //! precision          u8 (0 = single, 1 = double)
 //! ndim               varint, then ndim × shape varints
 //!                    then ndim × chunk-shape varints
-//! codec spec         see CodecSpec::to_bytes
+//! chain count        varint (≥ 1)
+//! per chain          varint byte length · CodecChainSpec::to_bytes
 //! chunk count        varint (must equal the grid's chunk count)
+//! table flags        u8 (bit 0: per-chunk CRC-32 present)
 //! spatial_ok bits    ceil(count / 8) bytes, MSB-first
 //! frequency_ok bits  ceil(count / 8) bytes, MSB-first
-//! per chunk          offset varint · length varint ·
+//! per chunk          chain index varint · offset varint · length varint ·
+//!                    [crc32 u32 LE, if table bit 0] ·
 //!                    max_spatial_ratio f64 LE · max_frequency_ratio f64 LE ·
 //!                    pocs_iterations varint
 //! ```
+//!
+//! ## Version 1 compatibility
+//!
+//! Version 1 manifests (single store-wide legacy `CodecSpec`, no chunk
+//! checksums) are still parsed: the legacy codec spec is lifted onto an
+//! equivalent [`CodecChainSpec`] via
+//! [`CodecChainSpec::from_legacy_v1_bytes`], every chunk references chain
+//! 0, and [`ChunkEntry::crc32`] is `None` (nothing to verify). Writers
+//! always emit version 2.
 
 use anyhow::{bail, Result};
 
+use crate::codec::{ChunkStats, CodecChainSpec};
 use crate::data::Precision;
 use crate::encoding::{pack_flags, unpack_flags, varint};
 
-use super::codec::{read_f64, CodecSpec};
 use super::grid::ChunkGrid;
 
 /// Head magic of a `.ffcz` store file.
@@ -50,42 +63,26 @@ pub const STORE_MAGIC: &[u8; 8] = b"FFCZSTR1";
 pub const FOOTER_MAGIC: &[u8; 8] = b"FFCZEND1";
 /// Footer size in bytes.
 pub const FOOTER_LEN: usize = 24;
-/// Current manifest version.
-pub const MANIFEST_VERSION: u64 = 1;
+/// Manifest version written by this crate.
+pub const MANIFEST_VERSION: u64 = 2;
+/// Oldest manifest version still readable.
+pub const MIN_MANIFEST_VERSION: u64 = 1;
 
-/// Dual-domain verification outcome of one chunk, recorded at encode time.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct ChunkStats {
-    pub spatial_ok: bool,
-    pub frequency_ok: bool,
-    /// max |ε_n| / E_n over the chunk (≤ 1 is in-bound).
-    pub max_spatial_ratio: f64,
-    /// max ‖δ_k‖∞ / Δ_k over the chunk (≤ 1 is in-bound).
-    pub max_frequency_ratio: f64,
-    /// POCS iterations spent correcting this chunk.
-    pub pocs_iterations: u32,
-}
+/// Table-flags bit: every chunk entry carries a CRC-32.
+const TABLE_FLAG_CRC32: u8 = 0b0000_0001;
 
-impl ChunkStats {
-    /// Stats of a bit-exact (lossless) chunk.
-    pub fn exact() -> Self {
-        Self {
-            spatial_ok: true,
-            frequency_ok: true,
-            max_spatial_ratio: 0.0,
-            max_frequency_ratio: 0.0,
-            pocs_iterations: 0,
-        }
-    }
-}
-
-/// Byte range and stats of one chunk.
+/// Byte range, codec chain, checksum, and stats of one chunk.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChunkEntry {
     /// Payload offset from the start of the file.
     pub offset: u64,
     /// Payload length in bytes.
     pub length: u64,
+    /// Index into [`Manifest::chains`].
+    pub chain: usize,
+    /// CRC-32 (IEEE) of the encoded payload; `None` for manifest v1
+    /// archives, which predate chunk checksums.
+    pub crc32: Option<u32>,
     pub stats: ChunkStats,
 }
 
@@ -95,7 +92,9 @@ pub struct Manifest {
     pub shape: Vec<usize>,
     pub precision: Precision,
     pub chunk_shape: Vec<usize>,
-    pub codec: CodecSpec,
+    /// Codec chain table; chunk entries index into it. Chain 0 is the
+    /// store default.
+    pub chains: Vec<CodecChainSpec>,
     /// One entry per chunk, in row-major grid order.
     pub chunks: Vec<ChunkEntry>,
 }
@@ -114,6 +113,11 @@ impl Manifest {
         Ok(grid)
     }
 
+    /// The chain spec governing chunk `index`.
+    pub fn chain_of(&self, index: usize) -> &CodecChainSpec {
+        &self.chains[self.chunks[index].chain]
+    }
+
     /// Do all chunks satisfy both recorded bounds?
     pub fn all_chunks_ok(&self) -> bool {
         self.chunks
@@ -126,6 +130,9 @@ impl Manifest {
         self.chunks.iter().map(|c| c.length).sum()
     }
 
+    /// Serialize as manifest version 2. Chunk CRCs are emitted only when
+    /// every entry carries one (a v1-loaded manifest round-trips its
+    /// checksum-less state instead of inventing checksums).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
         varint::write(&mut out, MANIFEST_VERSION);
@@ -140,15 +147,26 @@ impl Manifest {
         for &d in &self.chunk_shape {
             varint::write(&mut out, d as u64);
         }
-        out.extend_from_slice(&self.codec.to_bytes());
+        varint::write(&mut out, self.chains.len() as u64);
+        for chain in &self.chains {
+            let bytes = chain.to_bytes();
+            varint::write(&mut out, bytes.len() as u64);
+            out.extend_from_slice(&bytes);
+        }
         varint::write(&mut out, self.chunks.len() as u64);
+        let with_crc = self.chunks.iter().all(|c| c.crc32.is_some());
+        out.push(if with_crc { TABLE_FLAG_CRC32 } else { 0u8 });
         let s_ok: Vec<bool> = self.chunks.iter().map(|c| c.stats.spatial_ok).collect();
         let f_ok: Vec<bool> = self.chunks.iter().map(|c| c.stats.frequency_ok).collect();
         out.extend_from_slice(&pack_flags(&s_ok));
         out.extend_from_slice(&pack_flags(&f_ok));
         for c in &self.chunks {
+            varint::write(&mut out, c.chain as u64);
             varint::write(&mut out, c.offset);
             varint::write(&mut out, c.length);
+            if with_crc {
+                out.extend_from_slice(&c.crc32.unwrap().to_le_bytes());
+            }
             out.extend_from_slice(&c.stats.max_spatial_ratio.to_le_bytes());
             out.extend_from_slice(&c.stats.max_frequency_ratio.to_le_bytes());
             varint::write(&mut out, c.stats.pocs_iterations as u64);
@@ -159,8 +177,11 @@ impl Manifest {
     pub fn from_bytes(buf: &[u8]) -> Result<Self> {
         let mut pos = 0usize;
         let version = varint::read(buf, &mut pos)?;
-        if version != MANIFEST_VERSION {
-            bail!("unsupported manifest version {version}");
+        if !(MIN_MANIFEST_VERSION..=MANIFEST_VERSION).contains(&version) {
+            bail!(
+                "unsupported manifest version {version} (this build reads \
+                 {MIN_MANIFEST_VERSION}..={MANIFEST_VERSION})"
+            );
         }
         let precision = match buf.get(pos) {
             Some(0) => Precision::Single,
@@ -181,8 +202,53 @@ impl Manifest {
         for _ in 0..ndim {
             chunk_shape.push(varint::read(buf, &mut pos)? as usize);
         }
-        let codec = CodecSpec::from_bytes(buf, &mut pos)?;
+        let (chains, with_crc) = if version == 1 {
+            // v1 shim: one store-wide legacy codec spec, no checksums.
+            (
+                vec![CodecChainSpec::from_legacy_v1_bytes(buf, &mut pos)?],
+                false,
+            )
+        } else {
+            let n_chains = varint::read(buf, &mut pos)? as usize;
+            // A serialized chain occupies ≥ 4 bytes; bound allocations by
+            // the (untrusted) buffer.
+            if n_chains == 0 || n_chains > buf.len() / 4 + 1 {
+                bail!("implausible chain count {n_chains}");
+            }
+            let mut chains = Vec::with_capacity(n_chains);
+            for _ in 0..n_chains {
+                let len = varint::read(buf, &mut pos)? as usize;
+                // `len` is untrusted and may be near u64::MAX: compare
+                // against the remaining bytes, never compute `pos + len`.
+                if len > buf.len() - pos {
+                    bail!("truncated codec chain spec");
+                }
+                let mut spec_pos = 0usize;
+                let spec = CodecChainSpec::from_bytes(&buf[pos..pos + len], &mut spec_pos)?;
+                if spec_pos != len {
+                    bail!(
+                        "{} trailing bytes after codec chain spec",
+                        len - spec_pos
+                    );
+                }
+                pos += len;
+                chains.push(spec);
+            }
+            (chains, true)
+        };
         let count = varint::read(buf, &mut pos)? as usize;
+        let with_crc = if version == 1 {
+            with_crc
+        } else {
+            let flags = *buf
+                .get(pos)
+                .ok_or_else(|| anyhow::anyhow!("truncated manifest table flags"))?;
+            pos += 1;
+            if flags & !TABLE_FLAG_CRC32 != 0 {
+                bail!("unknown manifest table flags {flags:#04x}");
+            }
+            flags & TABLE_FLAG_CRC32 != 0
+        };
         // All of shape/count are untrusted: overflow must reject, never
         // panic, and allocations must be bounded by the buffer itself.
         let mut n = 1usize;
@@ -192,8 +258,8 @@ impl Manifest {
                 .ok_or_else(|| anyhow::anyhow!("shape {shape:?} overflows"))?;
         }
         // A manifest cannot plausibly index more chunks than there are
-        // samples, and each entry occupies ≥ 18 serialized bytes.
-        if count == 0 || count > n.max(1) || count > buf.len() / 18 + 1 {
+        // samples, and each entry occupies ≥ 19 serialized bytes.
+        if count == 0 || count > n.max(1) || count > buf.len() / 19 + 1 {
             bail!("implausible chunk count {count} for shape {shape:?}");
         }
         let flag_bytes = count.div_ceil(8);
@@ -206,14 +272,37 @@ impl Manifest {
         pos += flag_bytes;
         let mut chunks = Vec::with_capacity(count);
         for i in 0..count {
+            let chain = if version == 1 {
+                0usize
+            } else {
+                varint::read(buf, &mut pos)? as usize
+            };
+            if chain >= chains.len() {
+                bail!(
+                    "chunk {i} references chain {chain}, but the table has {} entries",
+                    chains.len()
+                );
+            }
             let offset = varint::read(buf, &mut pos)?;
             let length = varint::read(buf, &mut pos)?;
-            let max_spatial_ratio = read_f64(buf, &mut pos)?;
-            let max_frequency_ratio = read_f64(buf, &mut pos)?;
+            let crc32 = if with_crc {
+                if pos + 4 > buf.len() {
+                    bail!("truncated chunk CRC");
+                }
+                let v = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+                pos += 4;
+                Some(v)
+            } else {
+                None
+            };
+            let max_spatial_ratio = crate::codec::spec::read_f64(buf, &mut pos)?;
+            let max_frequency_ratio = crate::codec::spec::read_f64(buf, &mut pos)?;
             let pocs_iterations = varint::read(buf, &mut pos)? as u32;
             chunks.push(ChunkEntry {
                 offset,
                 length,
+                chain,
+                crc32,
                 stats: ChunkStats {
                     spatial_ok: s_ok[i],
                     frequency_ok: f_ok[i],
@@ -230,7 +319,7 @@ impl Manifest {
             shape,
             precision,
             chunk_shape,
-            codec,
+            chains,
             chunks,
         };
         manifest.grid()?; // validates shapes and the entry count
@@ -241,21 +330,23 @@ impl Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::correction::FfczConfig;
 
     fn sample() -> Manifest {
         Manifest {
             shape: vec![10, 6],
             precision: Precision::Double,
             chunk_shape: vec![4, 4],
-            codec: CodecSpec::Ffcz {
-                base: "sz-like".into(),
-                spatial_rel: 1e-3,
-                frequency_rel: Some(1e-3),
-            },
+            chains: vec![
+                CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3)),
+                CodecChainSpec::lossless(),
+            ],
             chunks: (0..6)
                 .map(|i| ChunkEntry {
                     offset: 8 + 100 * i,
                     length: 100,
+                    chain: (i % 2) as usize,
+                    crc32: Some(0xDEAD_0000 + i as u32),
                     stats: ChunkStats {
                         spatial_ok: true,
                         frequency_ok: i != 3,
@@ -269,23 +360,84 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip() {
+    fn roundtrip_v2() {
         let m = sample();
         let bytes = m.to_bytes();
         let back = Manifest::from_bytes(&bytes).unwrap();
         assert_eq!(back, m);
         assert!(!back.all_chunks_ok()); // chunk 3 has frequency_ok = false
         assert_eq!(back.payload_bytes(), 600);
+        assert_eq!(back.chain_of(1), &CodecChainSpec::lossless());
+    }
+
+    #[test]
+    fn roundtrip_without_checksums() {
+        // A v1-loaded manifest (crc32 = None) re-serializes faithfully
+        // instead of inventing checksums.
+        let mut m = sample();
+        for c in &mut m.chunks {
+            c.crc32 = None;
+        }
+        let back = Manifest::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    /// Hand-built manifest v1 bytes (the frozen legacy layout: single
+    /// store-wide codec spec, no chain table, no checksums).
+    fn v1_bytes() -> Vec<u8> {
+        let mut out = Vec::new();
+        varint::write(&mut out, 1); // version
+        out.push(1u8); // double precision
+        varint::write(&mut out, 2); // ndim
+        varint::write(&mut out, 10);
+        varint::write(&mut out, 6);
+        varint::write(&mut out, 4); // chunk shape
+        varint::write(&mut out, 4);
+        // Legacy CodecSpec::Ffcz { "sz-like", 1e-3, Some(1e-3) }.
+        out.push(1u8);
+        varint::write(&mut out, 7);
+        out.extend_from_slice(b"sz-like");
+        out.extend_from_slice(&1e-3f64.to_le_bytes());
+        out.push(1u8);
+        out.extend_from_slice(&1e-3f64.to_le_bytes());
+        varint::write(&mut out, 6); // chunk count
+        out.extend_from_slice(&pack_flags(&[true; 6]));
+        out.extend_from_slice(&pack_flags(&[true; 6]));
+        for i in 0..6u64 {
+            varint::write(&mut out, 8 + 100 * i); // offset
+            varint::write(&mut out, 100); // length
+            out.extend_from_slice(&0.5f64.to_le_bytes());
+            out.extend_from_slice(&0.25f64.to_le_bytes());
+            varint::write(&mut out, i); // pocs iterations
+        }
+        out
+    }
+
+    #[test]
+    fn v1_manifest_parses_through_the_shim() {
+        let m = Manifest::from_bytes(&v1_bytes()).unwrap();
+        assert_eq!(m.shape, vec![10, 6]);
+        assert_eq!(m.chains.len(), 1);
+        assert_eq!(
+            m.chains[0],
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3))
+        );
+        assert!(m.chunks.iter().all(|c| c.chain == 0 && c.crc32.is_none()));
+        assert!(m.all_chunks_ok());
+        // And re-serializes as v2 without inventing checksums.
+        let back = Manifest::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(back, m);
     }
 
     #[test]
     fn rejects_truncation_at_every_prefix() {
-        let bytes = sample().to_bytes();
-        for cut in 0..bytes.len() {
-            assert!(
-                Manifest::from_bytes(&bytes[..cut]).is_err(),
-                "prefix of {cut} bytes unexpectedly parsed"
-            );
+        for bytes in [sample().to_bytes(), v1_bytes()] {
+            for cut in 0..bytes.len() {
+                assert!(
+                    Manifest::from_bytes(&bytes[..cut]).is_err(),
+                    "prefix of {cut} bytes unexpectedly parsed"
+                );
+            }
         }
     }
 
@@ -300,9 +452,12 @@ mod tests {
     }
 
     #[test]
-    fn rejects_entry_count_mismatch() {
+    fn rejects_entry_count_mismatch_and_bad_chain_index() {
         let mut m = sample();
         m.chunks.pop();
+        assert!(Manifest::from_bytes(&m.to_bytes()).is_err());
+        let mut m = sample();
+        m.chunks[0].chain = 7;
         assert!(Manifest::from_bytes(&m.to_bytes()).is_err());
     }
 }

@@ -8,35 +8,43 @@
 //!
 //! * [`grid`] — a regular chunk grid with edge-chunk clipping and
 //!   zarr-style chunk keys;
-//! * [`codec`] — the per-chunk codec pipeline: any base [`crate::compressors::Compressor`]
-//!   composed with the FFCz POCS correction stage and the lossless backend,
-//!   or a bit-exact lossless baseline;
-//! * [`manifest`] — the versioned binary manifest: shape, precision, chunk
-//!   grid, codec chain, and per-chunk byte ranges + dual-domain
-//!   verification stats;
+//! * [`crate::codec`] — the composable per-chunk codec chains: any
+//!   registered base compressor, an optional FFCz correction stage with
+//!   the full [`crate::correction::FfczConfig`] bound space, and
+//!   bytes→bytes lossless stages;
+//! * [`manifest`] — the versioned binary manifest (version 2): shape,
+//!   precision, the codec **chain table**, and a per-chunk table of byte
+//!   ranges, chain indices, CRC-32 checksums, and dual-domain
+//!   verification stats (version 1 archives remain readable through a
+//!   migration shim);
 //! * [`parallel`] — the `std::thread` worker pool that fans per-chunk
 //!   encode/decode work across cores;
-//! * [`writer`] / [`reader`] — container assembly and manifest-only open
-//!   with partial [`Store::read_region`] decode.
+//! * [`writer`] / [`reader`] — container assembly (with per-chunk codec
+//!   overrides via [`StoreWriteOptions::overrides`]) and manifest-only
+//!   open with partial [`Store::read_region`] decode.
 //!
 //! Because every chunk is corrected independently, the dual-domain bound
 //! (`spatial_ok && frequency_ok`) holds *per chunk* — exactly the guarantee
 //! a partial reader needs, and the same granularity
-//! [`crate::coordinator::sharding`] uses for streamed instances.
+//! [`crate::coordinator::sharding`] uses for streamed instances. Per-chunk
+//! chains extend this: e.g. bit-exact lossless boundary chunks with FFCz
+//! interior chunks in one archive.
 //!
 //! ```
+//! use ffcz::codec::CodecChainSpec;
+//! use ffcz::correction::FfczConfig;
 //! use ffcz::data::synth::grf::GrfBuilder;
-//! use ffcz::store::{CodecSpec, Store, StoreWriteOptions};
+//! use ffcz::store::{Store, StoreWriteOptions};
 //!
 //! let field = GrfBuilder::new(&[16, 16]).lognormal(1.0).seed(1).build();
-//! let spec = CodecSpec::Ffcz {
-//!     base: "sz-like".into(),
-//!     spatial_rel: 1e-3,
-//!     frequency_rel: Some(1e-3),
-//! };
-//! let opts = StoreWriteOptions::new(&[8, 8]).workers(2);
-//! let (bytes, manifest, _report) = ffcz::store::encode_store(&field, &spec, &opts).unwrap();
+//! let chain = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+//! // Boundary chunk c/0/0 stays bit-exact; the rest go through FFCz.
+//! let opts = StoreWriteOptions::new(&[8, 8])
+//!     .workers(2)
+//!     .override_chunk("c/0/0", CodecChainSpec::lossless());
+//! let (bytes, manifest, _report) = ffcz::store::encode_store(&field, &chain, &opts).unwrap();
 //! assert!(manifest.all_chunks_ok());
+//! assert_eq!(manifest.chains.len(), 2);
 //!
 //! let store = Store::from_bytes(bytes).unwrap();
 //! let window = store.read_region(&[4, 4], &[8, 8], 2).unwrap();
@@ -45,16 +53,22 @@
 //! assert_eq!(store.chunks_decoded(), 4);
 //! ```
 
-pub mod codec;
 pub mod grid;
 pub mod manifest;
 pub mod parallel;
 pub mod reader;
 pub mod writer;
 
-pub use codec::{ChunkCodec, CodecSpec, EncodedChunk};
+pub use crate::codec::{ChunkStats, CodecChain, CodecChainSpec, EncodedChunk};
 pub use grid::{extract_subarray, insert_subarray, ChunkGrid};
-pub use manifest::{ChunkEntry, ChunkStats, Manifest};
+pub use manifest::{ChunkEntry, Manifest};
 pub use parallel::par_try_map;
 pub use reader::Store;
 pub use writer::{encode_store, write_store, StoreWriteOptions, StoreWriteReport};
+
+/// Legacy name of the store codec description, kept for one release so
+/// downstream code migrates gradually. The enum variants are gone — build
+/// chains with [`CodecChainSpec::lossless`], [`CodecChainSpec::ffcz`], or
+/// [`CodecChainSpec::base_only`] instead.
+#[deprecated(note = "use ffcz::codec::CodecChainSpec (CodecSpec's enum variants are retired)")]
+pub type CodecSpec = crate::codec::CodecChainSpec;

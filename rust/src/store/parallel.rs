@@ -1,7 +1,7 @@
 //! Work-stealing-free worker pool for per-chunk codec work.
 //!
 //! Chunks are independent (the dual-domain guarantee is per chunk, see
-//! [`super::codec`]), so compress/decompress parallelizes with a plain
+//! [`crate::codec`]), so compress/decompress parallelizes with a plain
 //! `std::thread` scope and an atomic work index — no dependencies, no
 //! channels, deterministic output order. This is the chunk-level analogue
 //! of how [`crate::coordinator::sharding`] parallelizes over shards.

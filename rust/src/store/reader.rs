@@ -1,5 +1,6 @@
-//! Store reader: manifest-only open, random-access chunk decode, and
-//! partial `read_region` that touches only intersecting chunks.
+//! Store reader: manifest-only open, random-access chunk decode (CRC-32
+//! verified, per-chunk codec chains), and partial `read_region` that
+//! touches only intersecting chunks.
 
 use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
@@ -8,9 +9,10 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::codec::CodecChain;
 use crate::data::Field;
+use crate::encoding::crc32;
 
-use super::codec::ChunkCodec;
 use super::grid::{extract_subarray, insert_subarray, ChunkGrid};
 use super::manifest::{Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
 use super::parallel::par_try_map;
@@ -26,14 +28,18 @@ enum Source {
 ///
 /// Opening parses only the footer and manifest; chunk payloads are fetched
 /// and decoded on demand, so a [`Store::read_region`] over a small window
-/// of a large array does a small fraction of the full decode work. The
+/// of a large array does a small fraction of the full decode work. Every
+/// chain in the manifest's chain table is resolved against the codec
+/// registries at open time, and chunk payloads are CRC-32-verified before
+/// decode (manifest v2 archives; v1 archives predate checksums). The
 /// number of chunk decodes is observable via [`Store::chunks_decoded`]
 /// (used by tests to assert partial-decode behaviour).
 pub struct Store {
     source: Source,
     manifest: Manifest,
     grid: ChunkGrid,
-    codec: Box<dyn ChunkCodec>,
+    /// One executable chain per manifest chain-table entry.
+    codecs: Vec<CodecChain>,
     /// Start of the manifest region — chunk payloads must end before it.
     manifest_offset: u64,
     chunks_decoded: AtomicUsize,
@@ -112,7 +118,11 @@ impl Store {
 
     fn build(source: Source, manifest: Manifest, manifest_offset: u64) -> Result<Self> {
         let grid = manifest.grid()?;
-        let codec = manifest.codec.build()?;
+        let codecs = manifest
+            .chains
+            .iter()
+            .map(CodecChain::from_spec)
+            .collect::<Result<Vec<_>>>()?;
         // Chunk ranges must lie inside the payload region.
         for (i, c) in manifest.chunks.iter().enumerate() {
             let end = c.offset.checked_add(c.length);
@@ -131,7 +141,7 @@ impl Store {
             source,
             manifest,
             grid,
-            codec,
+            codecs,
             manifest_offset,
             chunks_decoded: AtomicUsize::new(0),
         })
@@ -171,6 +181,19 @@ impl Store {
                     .with_context(|| format!("reading chunk {}", self.grid.chunk_key(index)))?;
             }
         }
+        // Verify the payload against the manifest checksum before it
+        // reaches any codec: corruption in the payload region surfaces as
+        // a precise error here, not as a downstream parse failure.
+        if let Some(expect) = entry.crc32 {
+            let got = crc32(&buf);
+            if got != expect {
+                bail!(
+                    "chunk {} payload corrupt: CRC-32 {got:#010x} does not match \
+                     manifest {expect:#010x}",
+                    self.grid.chunk_key(index)
+                );
+            }
+        }
         Ok(buf)
     }
 
@@ -186,8 +209,8 @@ impl Store {
         let extent = self.grid.chunk_extent(&coords);
         let bytes = self.chunk_bytes(index)?;
         self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
-        self.codec
-            .decode(&bytes, &extent, self.manifest.precision)
+        self.codecs[self.manifest.chunks[index].chain]
+            .decode_chunk(&bytes, &extent, self.manifest.precision)
             .with_context(|| format!("decoding chunk {}", self.grid.chunk_key(index)))
     }
 
@@ -235,14 +258,14 @@ impl Store {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::CodecChainSpec;
     use crate::data::synth::grf::GrfBuilder;
-    use crate::store::codec::CodecSpec;
     use crate::store::writer::{encode_store, StoreWriteOptions};
 
     fn store_bytes() -> (Field, Vec<u8>) {
         let field = GrfBuilder::new(&[12, 10]).lognormal(1.0).seed(9).build();
         let opts = StoreWriteOptions::new(&[5, 4]).workers(2);
-        let (bytes, _, _) = encode_store(&field, &CodecSpec::Lossless, &opts).unwrap();
+        let (bytes, _, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
         (field, bytes)
     }
 
@@ -285,6 +308,17 @@ mod tests {
         assert!(Store::from_bytes(bad).is_err());
         // Too short entirely.
         assert!(Store::from_bytes(b"FFCZSTR1".to_vec()).is_err());
+    }
+
+    #[test]
+    fn payload_corruption_caught_by_crc() {
+        let (_, bytes) = store_bytes();
+        let mut bad = bytes.clone();
+        bad[10] ^= 0xFF; // inside chunk 0's payload
+        let store = Store::from_bytes(bad).unwrap();
+        let err = store.decode_chunk(0).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC-32"), "{err:#}");
+        assert!(store.decompress_all(1).is_err());
     }
 
     #[test]

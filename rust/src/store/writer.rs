@@ -1,15 +1,18 @@
-//! Chunked store encoder: tile a field, encode chunks in parallel, and
-//! assemble the `.ffcz` container (payloads first, manifest appended,
-//! 24-byte footer last — see [`super::manifest`] for the exact layout).
+//! Chunked store encoder: tile a field, encode chunks in parallel (each
+//! through its codec chain), and assemble the `.ffcz` container (payloads
+//! first, manifest appended, 24-byte footer last — see [`super::manifest`]
+//! for the exact layout).
 
+use std::collections::HashMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::codec::{CodecChain, CodecChainSpec};
 use crate::data::Field;
+use crate::encoding::crc32;
 
-use super::codec::CodecSpec;
 use super::grid::{extract_subarray, ChunkGrid};
 use super::manifest::{ChunkEntry, Manifest, FOOTER_MAGIC, STORE_MAGIC};
 use super::parallel::par_try_map;
@@ -21,6 +24,11 @@ pub struct StoreWriteOptions {
     pub chunk_shape: Vec<usize>,
     /// Worker threads for per-chunk encoding.
     pub workers: usize,
+    /// Per-chunk codec chain overrides, keyed by the grid's zarr-style
+    /// chunk key (`"c/1/0"`); chunks not named here use the store default
+    /// (e.g. a lossless chain for boundary chunks, FFCz elsewhere).
+    /// Unknown keys are rejected at encode time.
+    pub overrides: Vec<(String, CodecChainSpec)>,
 }
 
 impl StoreWriteOptions {
@@ -28,11 +36,19 @@ impl StoreWriteOptions {
         Self {
             chunk_shape: chunk_shape.to_vec(),
             workers: 1,
+            overrides: Vec::new(),
         }
     }
 
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Encode the chunk with key `key` (e.g. `"c/0/1"`) through `chain`
+    /// instead of the store default.
+    pub fn override_chunk(mut self, key: &str, chain: CodecChainSpec) -> Self {
+        self.overrides.push((key.to_string(), chain));
         self
     }
 
@@ -45,6 +61,7 @@ impl StoreWriteOptions {
         Ok(Self {
             chunk_shape: grid.chunk_shape().to_vec(),
             workers: workers.max(1),
+            overrides: Vec::new(),
         })
     }
 }
@@ -61,15 +78,56 @@ pub struct StoreWriteReport {
     pub elapsed: Duration,
 }
 
-/// Encode `field` as an in-memory `.ffcz` store.
+/// Resolve the default chain plus overrides into a deduplicated chain
+/// table and a per-chunk chain assignment.
+fn resolve_chains(
+    grid: &ChunkGrid,
+    default: &CodecChainSpec,
+    overrides: &[(String, CodecChainSpec)],
+) -> Result<(Vec<CodecChainSpec>, Vec<usize>)> {
+    let mut chains = vec![default.clone()];
+    let mut assign = vec![0usize; grid.chunk_count()];
+    if !overrides.is_empty() {
+        let key_to_index: HashMap<String, usize> = (0..grid.chunk_count())
+            .map(|i| (grid.chunk_key(i), i))
+            .collect();
+        for (key, chain) in overrides {
+            let Some(&i) = key_to_index.get(key) else {
+                bail!(
+                    "codec override names chunk '{key}', but the {:?} grid has keys \
+                     'c/0/…' through '{}'",
+                    grid.grid_shape(),
+                    grid.chunk_key(grid.chunk_count() - 1)
+                );
+            };
+            let idx = match chains.iter().position(|c| c == chain) {
+                Some(idx) => idx,
+                None => {
+                    chains.push(chain.clone());
+                    chains.len() - 1
+                }
+            };
+            assign[i] = idx;
+        }
+    }
+    Ok((chains, assign))
+}
+
+/// Encode `field` as an in-memory `.ffcz` store. `chain` is the default
+/// codec chain; per-chunk overrides come from
+/// [`StoreWriteOptions::overrides`].
 pub fn encode_store(
     field: &Field,
-    spec: &CodecSpec,
+    chain: &CodecChainSpec,
     opts: &StoreWriteOptions,
 ) -> Result<(Vec<u8>, Manifest, StoreWriteReport)> {
     let t0 = Instant::now();
     let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
-    let codec = spec.build()?;
+    let (chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
+    let built: Vec<CodecChain> = chains
+        .iter()
+        .map(CodecChain::from_spec)
+        .collect::<Result<_>>()?;
 
     let encoded = par_try_map(grid.chunk_count(), opts.workers, |i| {
         let coords = grid.chunk_coords(i);
@@ -80,8 +138,8 @@ pub fn encode_store(
             extract_subarray(field.data(), field.shape(), &origin, &extent),
             field.precision(),
         );
-        codec
-            .encode(&chunk)
+        built[assign[i]]
+            .encode_chunk(&chunk)
             .with_context(|| format!("encoding chunk {}", grid.chunk_key(i)))
     })?;
 
@@ -89,10 +147,12 @@ pub fn encode_store(
     let mut out = Vec::new();
     out.extend_from_slice(STORE_MAGIC);
     let mut chunks = Vec::with_capacity(encoded.len());
-    for enc in &encoded {
+    for (i, enc) in encoded.iter().enumerate() {
         chunks.push(ChunkEntry {
             offset: out.len() as u64,
             length: enc.bytes.len() as u64,
+            chain: assign[i],
+            crc32: Some(crc32(&enc.bytes)),
             stats: enc.stats,
         });
         out.extend_from_slice(&enc.bytes);
@@ -101,7 +161,7 @@ pub fn encode_store(
         shape: field.shape().to_vec(),
         precision: field.precision(),
         chunk_shape: opts.chunk_shape.clone(),
-        codec: spec.clone(),
+        chains,
         chunks,
     };
     let manifest_bytes = manifest.to_bytes();
@@ -125,11 +185,11 @@ pub fn encode_store(
 /// Encode `field` and write the store to `path`.
 pub fn write_store(
     field: &Field,
-    spec: &CodecSpec,
+    chain: &CodecChainSpec,
     opts: &StoreWriteOptions,
     path: &Path,
 ) -> Result<StoreWriteReport> {
-    let (bytes, _, report) = encode_store(field, spec, opts)?;
+    let (bytes, _, report) = encode_store(field, chain, opts)?;
     std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
     Ok(report)
 }
@@ -137,21 +197,26 @@ pub fn write_store(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::correction::FfczConfig;
     use crate::data::synth::grf::GrfBuilder;
 
     #[test]
     fn encode_produces_consistent_manifest() {
         let field = GrfBuilder::new(&[12, 10]).lognormal(1.0).seed(3).build();
-        let spec = CodecSpec::Lossless;
+        let spec = CodecChainSpec::lossless();
         let opts = StoreWriteOptions::new(&[5, 4]).workers(2);
         let (bytes, manifest, report) = encode_store(&field, &spec, &opts).unwrap();
         assert_eq!(report.chunk_count, 3 * 3);
         assert_eq!(manifest.chunks.len(), 9);
         assert!(report.all_chunks_ok);
-        // Payload ranges tile [8, manifest_offset) without gaps.
+        // Payload ranges tile [8, manifest_offset) without gaps, every
+        // chunk checksummed against its payload and on the default chain.
         let mut cursor = STORE_MAGIC.len() as u64;
         for c in &manifest.chunks {
             assert_eq!(c.offset, cursor);
+            assert_eq!(c.chain, 0);
+            let payload = &bytes[c.offset as usize..(c.offset + c.length) as usize];
+            assert_eq!(c.crc32, Some(crc32(payload)));
             cursor += c.length;
         }
         assert_eq!(report.total_bytes, bytes.len());
@@ -163,6 +228,36 @@ mod tests {
     fn chunk_shape_mismatch_rejected() {
         let field = GrfBuilder::new(&[8, 8]).seed(1).build();
         let opts = StoreWriteOptions::new(&[4]);
-        assert!(encode_store(&field, &CodecSpec::Lossless, &opts).is_err());
+        assert!(encode_store(&field, &CodecChainSpec::lossless(), &opts).is_err());
+    }
+
+    #[test]
+    fn overrides_build_a_deduplicated_chain_table() {
+        let field = GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(5).build();
+        let ffcz = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+        // 2 × 2 grid; two overrides with the same lossless chain dedup to
+        // one extra table entry.
+        let opts = StoreWriteOptions::new(&[4, 4])
+            .workers(2)
+            .override_chunk("c/0/0", CodecChainSpec::lossless())
+            .override_chunk("c/1/1", CodecChainSpec::lossless());
+        let (_, manifest, report) = encode_store(&field, &ffcz, &opts).unwrap();
+        assert!(report.all_chunks_ok);
+        assert_eq!(manifest.chains.len(), 2);
+        assert_eq!(manifest.chains[0], ffcz);
+        assert_eq!(manifest.chains[1], CodecChainSpec::lossless());
+        let assigned: Vec<usize> = manifest.chunks.iter().map(|c| c.chain).collect();
+        assert_eq!(assigned, vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn unknown_override_key_rejected() {
+        let field = GrfBuilder::new(&[8, 8]).seed(1).build();
+        let opts = StoreWriteOptions::new(&[4, 4])
+            .override_chunk("c/9/9", CodecChainSpec::lossless());
+        let err = encode_store(&field, &CodecChainSpec::lossless(), &opts)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("c/9/9"), "{err}");
     }
 }

@@ -1,10 +1,18 @@
 //! Integration tests for the chunked spectral archive store: partial
 //! decode equivalence, per-base-compressor roundtrips, corruption
-//! rejection, and the per-chunk dual-domain guarantee on a GRF field.
+//! rejection, per-chunk codec chains, manifest v1 backward compatibility,
+//! runtime codec registration, and the per-chunk dual-domain guarantee on
+//! a GRF field.
 
+use anyhow::Result;
+
+use ffcz::codec::{register_codec, CodecChainSpec};
+use ffcz::compressors::{Compressor, ErrorBound};
+use ffcz::correction::{BoundSpec, FfczConfig};
 use ffcz::data::synth::grf::GrfBuilder;
 use ffcz::data::{Field, Precision};
-use ffcz::store::{encode_store, extract_subarray, CodecSpec, Store, StoreWriteOptions};
+use ffcz::encoding::{lossless_compress, pack_flags, varint};
+use ffcz::store::{encode_store, extract_subarray, ChunkGrid, Store, StoreWriteOptions};
 use ffcz::util::XorShift;
 
 fn grf_3d(shape: &[usize], seed: u64) -> Field {
@@ -15,12 +23,8 @@ fn grf_3d(shape: &[usize], seed: u64) -> Field {
         .build()
 }
 
-fn ffcz_spec(base: &str) -> CodecSpec {
-    CodecSpec::Ffcz {
-        base: base.into(),
-        spatial_rel: 1e-3,
-        frequency_rel: Some(1e-3),
-    }
+fn ffcz_spec(base: &str) -> CodecChainSpec {
+    CodecChainSpec::ffcz(base, &FfczConfig::relative(1e-3, 1e-3))
 }
 
 #[test]
@@ -103,7 +107,7 @@ fn roundtrip_with_every_base_compressor() {
 fn lossless_codec_roundtrip_is_bit_exact() {
     let field = grf_3d(&[9, 7, 5], 13);
     let opts = StoreWriteOptions::new(&[4, 4, 4]).workers(2);
-    let (bytes, _, _) = encode_store(&field, &CodecSpec::Lossless, &opts).unwrap();
+    let (bytes, _, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
     let store = Store::from_bytes(bytes).unwrap();
     assert_eq!(store.decompress_all(3).unwrap().data(), field.data());
 }
@@ -125,14 +129,235 @@ fn grf_manifest_records_dual_domain_ok_for_every_chunk() {
         );
         assert!(c.stats.max_spatial_ratio <= 1.0 + 1e-9);
         assert!(c.stats.max_frequency_ratio <= 1.0 + 1e-9);
+        assert!(c.crc32.is_some(), "chunk {i} missing checksum");
     }
+}
+
+/// Acceptance criterion: one store carrying two different per-chunk codec
+/// chains — lossless boundary chunk + FFCz power-spectrum interior —
+/// round-trips via `read_region` with correct per-chunk stats.
+#[test]
+fn mixed_per_chunk_chains_roundtrip_with_stats() {
+    let field = grf_3d(&[12, 8, 8], 21);
+    // Chunk shape [6, 8, 8] → two chunks: c/0/0/0 (lossless override) and
+    // c/1/0/0 (default FFCz power-spectrum chain).
+    let ffcz_ps = CodecChainSpec::ffcz("sz-like", &FfczConfig::power_spectrum(1e-2, 1e-3));
+    let opts = StoreWriteOptions::new(&[6, 8, 8])
+        .workers(2)
+        .override_chunk("c/0/0/0", CodecChainSpec::lossless());
+    let (bytes, manifest, report) = encode_store(&field, &ffcz_ps, &opts).unwrap();
+    assert!(report.all_chunks_ok);
+    assert_eq!(manifest.chains.len(), 2);
+    assert_eq!(manifest.chains[0], ffcz_ps);
+    assert_eq!(manifest.chains[1], CodecChainSpec::lossless());
+    assert_eq!(manifest.chunks[0].chain, 1, "boundary chunk on lossless chain");
+    assert_eq!(manifest.chunks[1].chain, 0, "interior chunk on default chain");
+    // Per-chunk stats: the lossless chunk is exact, the FFCz chunk ran
+    // POCS and stayed in bound.
+    assert_eq!(manifest.chunks[0].stats.max_spatial_ratio, 0.0);
+    assert_eq!(manifest.chunks[0].stats.pocs_iterations, 0);
+    assert!(manifest.chunks[1].stats.pocs_iterations >= 1);
+    assert!(manifest.chunks[1].stats.spatial_ok && manifest.chunks[1].stats.frequency_ok);
+
+    let store = Store::from_bytes(bytes).unwrap();
+    // The lossless chunk's region decodes bit-exactly.
+    let r0 = store.read_region(&[0, 0, 0], &[6, 8, 8], 2).unwrap();
+    let expect0 = extract_subarray(field.data(), field.shape(), &[0, 0, 0], &[6, 8, 8]);
+    assert_eq!(r0.data(), &expect0[..]);
+    // The FFCz chunk's region preserves its power spectrum per bin.
+    let r1 = store.read_region(&[6, 0, 0], &[6, 8, 8], 2).unwrap();
+    let chunk1 = Field::new(
+        &[6, 8, 8],
+        extract_subarray(field.data(), field.shape(), &[6, 0, 0], &[6, 8, 8]),
+        field.precision(),
+    );
+    let ps0 = ffcz::fourier::power_spectrum(&chunk1);
+    let ps1 = ffcz::fourier::power_spectrum(&r1);
+    let max_rel = ps1.max_relative_error(&ps0);
+    assert!(max_rel <= 1.1e-3, "power-spectrum rel err {max_rel}");
+    // And a full decode agrees with the per-region reads.
+    let full = store.decompress_all(2).unwrap();
+    let full0 = extract_subarray(full.data(), full.shape(), &[0, 0, 0], &[6, 8, 8]);
+    assert_eq!(&full0[..], r0.data());
+}
+
+/// A minimal runtime-registered base compressor: stores halved samples
+/// exactly (halving/doubling a finite f64 is an exponent shift, so the
+/// roundtrip is bit-exact for these fields). Its `name()` matches the
+/// registry key, as the `Compressor` contract requires for archives.
+struct DoublingCodec;
+
+impl Compressor for DoublingCodec {
+    fn name(&self) -> &'static str {
+        "test-doubling"
+    }
+
+    fn compress(&self, field: &Field, _bound: ErrorBound) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        out.push(field.shape().len() as u8);
+        for &d in field.shape() {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.push(match field.precision() {
+            Precision::Single => 0u8,
+            Precision::Double => 1u8,
+        });
+        for &v in field.data() {
+            out.extend_from_slice(&(v / 2.0).to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    fn decompress(&self, payload: &[u8]) -> Result<Field> {
+        let ndim = payload[0] as usize;
+        let mut pos = 1usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u64::from_le_bytes(payload[pos..pos + 8].try_into().unwrap()) as usize);
+            pos += 8;
+        }
+        let precision = if payload[pos] == 0 {
+            Precision::Single
+        } else {
+            Precision::Double
+        };
+        pos += 1;
+        let data: Vec<f64> = payload[pos..]
+            .chunks_exact(8)
+            .map(|c| 2.0 * f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Field::new(&shape, data, precision))
+    }
+}
+
+/// Acceptance criterion: a codec registered at runtime round-trips through
+/// a store encode/decode and through `CodecChainSpec` bytes; unknown names
+/// fail with actionable errors.
+#[test]
+fn registered_codec_roundtrips_through_store_and_spec_bytes() {
+    register_codec("test-doubling", || Box::new(DoublingCodec) as Box<dyn Compressor>).unwrap();
+
+    let field = grf_3d(&[8, 6, 4], 31);
+    let chain = CodecChainSpec::base_only("test-doubling", BoundSpec::Relative(1e-6));
+    // Spec bytes round-trip with the custom name.
+    let spec_bytes = chain.to_bytes();
+    let mut pos = 0;
+    assert_eq!(
+        CodecChainSpec::from_bytes(&spec_bytes, &mut pos).unwrap(),
+        chain
+    );
+
+    let opts = StoreWriteOptions::new(&[4, 3, 2]).workers(2);
+    let (bytes, manifest, report) = encode_store(&field, &chain, &opts).unwrap();
+    assert!(report.all_chunks_ok);
+    assert_eq!(manifest.chains[0], chain);
+    let store = Store::from_bytes(bytes).unwrap();
+    assert_eq!(
+        store.decompress_all(2).unwrap().data(),
+        field.data(),
+        "doubling codec is bit-exact"
+    );
+
+    // Unknown names fail with the registry's actionable error.
+    let unknown = CodecChainSpec::base_only("not-a-codec", BoundSpec::Relative(1e-3));
+    let err = encode_store(&field, &unknown, &opts).unwrap_err().to_string();
+    assert!(
+        err.contains("not-a-codec") && err.contains("register_codec"),
+        "{err}"
+    );
+}
+
+/// Frozen manifest v1 writer: byte-for-byte the layout the v1 store
+/// encoder produced for a lossless archive (single store-wide codec spec,
+/// no chain table, no checksums). The new reader must keep opening these.
+fn v1_lossless_container(field: &Field, chunk_shape: &[usize]) -> Vec<u8> {
+    let grid = ChunkGrid::new(field.shape(), chunk_shape).unwrap();
+    let mut out = Vec::new();
+    out.extend_from_slice(b"FFCZSTR1");
+    let mut entries: Vec<(u64, u64)> = Vec::new();
+    for i in 0..grid.chunk_count() {
+        let coords = grid.chunk_coords(i);
+        let origin = grid.chunk_origin(&coords);
+        let extent = grid.chunk_extent(&coords);
+        let sub = extract_subarray(field.data(), field.shape(), &origin, &extent);
+        let mut raw = Vec::with_capacity(sub.len() * 8);
+        for v in sub {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let payload = lossless_compress(&raw);
+        entries.push((out.len() as u64, payload.len() as u64));
+        out.extend_from_slice(&payload);
+    }
+    // Manifest v1.
+    let mut m = Vec::new();
+    varint::write(&mut m, 1); // version
+    m.push(match field.precision() {
+        Precision::Single => 0u8,
+        Precision::Double => 1u8,
+    });
+    varint::write(&mut m, field.shape().len() as u64);
+    for &d in field.shape() {
+        varint::write(&mut m, d as u64);
+    }
+    for &d in chunk_shape {
+        varint::write(&mut m, d as u64);
+    }
+    m.push(0u8); // legacy CodecSpec::Lossless
+    varint::write(&mut m, entries.len() as u64);
+    let flags = vec![true; entries.len()];
+    m.extend_from_slice(&pack_flags(&flags)); // spatial_ok
+    m.extend_from_slice(&pack_flags(&flags)); // frequency_ok
+    for &(offset, length) in &entries {
+        varint::write(&mut m, offset);
+        varint::write(&mut m, length);
+        m.extend_from_slice(&0.0f64.to_le_bytes()); // max_spatial_ratio
+        m.extend_from_slice(&0.0f64.to_le_bytes()); // max_frequency_ratio
+        varint::write(&mut m, 0); // pocs_iterations
+    }
+    let manifest_offset = out.len() as u64;
+    out.extend_from_slice(&m);
+    out.extend_from_slice(&manifest_offset.to_le_bytes());
+    out.extend_from_slice(&(m.len() as u64).to_le_bytes());
+    out.extend_from_slice(b"FFCZEND1");
+    out
+}
+
+/// Acceptance criterion: a manifest v1 `.ffcz` fixture still opens,
+/// inspects, and `read_region`s correctly under the new reader.
+#[test]
+fn manifest_v1_fixture_remains_readable() {
+    let field = grf_3d(&[10, 6, 4], 19);
+    let bytes = v1_lossless_container(&field, &[4, 4, 4]);
+
+    // In-memory open.
+    let store = Store::from_bytes(bytes.clone()).unwrap();
+    let m = store.manifest();
+    assert_eq!(m.shape, field.shape());
+    assert_eq!(m.chains.len(), 1);
+    assert_eq!(m.chains[0], CodecChainSpec::lossless());
+    assert!(m.chunks.iter().all(|c| c.chain == 0 && c.crc32.is_none()));
+    assert!(m.all_chunks_ok());
+
+    // Full decode and partial reads are bit-exact.
+    assert_eq!(store.decompress_all(2).unwrap().data(), field.data());
+    let region = store.read_region(&[3, 1, 0], &[5, 4, 3], 2).unwrap();
+    let expect = extract_subarray(field.data(), field.shape(), &[3, 1, 0], &[5, 4, 3]);
+    assert_eq!(region.data(), &expect[..]);
+
+    // File-based open (the `archive inspect` / `extract` path).
+    let path = std::env::temp_dir().join("ffcz_v1_fixture_test.ffcz");
+    std::fs::write(&path, &bytes).unwrap();
+    let store = Store::open(&path).unwrap();
+    assert_eq!(store.shape(), field.shape());
+    assert_eq!(store.decompress_all(1).unwrap().data(), field.data());
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
 fn corrupt_and_truncated_stores_are_rejected() {
     let field = grf_3d(&[8, 6, 4], 3);
     let opts = StoreWriteOptions::new(&[4, 3, 2]).workers(1);
-    let (bytes, _, _) = encode_store(&field, &CodecSpec::Lossless, &opts).unwrap();
+    let (bytes, _, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
 
     // Every truncation of the container fails to open.
     for frac in [0.1, 0.5, 0.9, 0.999] {
@@ -161,18 +386,16 @@ fn corrupt_and_truncated_stores_are_rejected() {
         );
     }
 
-    // A payload flip is caught at decode time (entropy-coded chunks fail to
-    // parse or decode to the wrong length).
+    // A payload flip is rejected by the per-chunk CRC with a precise
+    // error, before any codec sees the bytes (ROADMAP checksum item).
     let mut bad = bytes.clone();
     bad[10] ^= 0xFF;
-    if let Ok(store) = Store::from_bytes(bad) {
-        assert!(store.decompress_all(1).is_err() || {
-            // Lossless payloads checksum-free: accept a successful decode
-            // only if it differs from the original (corruption visible).
-            let out = store.decompress_all(1).unwrap();
-            out.data() != field.data()
-        });
-    }
+    let store = Store::from_bytes(bad).unwrap();
+    let err = store.decompress_all(1).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("CRC-32"),
+        "payload corruption not attributed to checksums: {err:#}"
+    );
 }
 
 #[test]
@@ -180,7 +403,7 @@ fn store_preserves_precision_tag() {
     let data: Vec<f64> = (0..24).map(|i| (i as f64) * 0.5).collect();
     let field = Field::new(&[4, 6], data, Precision::Single);
     let opts = StoreWriteOptions::new(&[2, 3]).workers(1);
-    let (bytes, manifest, _) = encode_store(&field, &CodecSpec::Lossless, &opts).unwrap();
+    let (bytes, manifest, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
     assert_eq!(manifest.precision, Precision::Single);
     let store = Store::from_bytes(bytes).unwrap();
     assert_eq!(
