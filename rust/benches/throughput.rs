@@ -9,7 +9,7 @@ use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
 use ffcz::correction::{correct_reconstruction, FfczConfig};
 use ffcz::data::synth;
 use ffcz::codec::CodecChainSpec;
-use ffcz::store::{encode_store, StoreWriteOptions};
+use ffcz::store::{encode_store, write_store, StoreWriteOptions};
 use ffcz::util::bench::{black_box, Bench};
 
 fn main() {
@@ -20,8 +20,9 @@ fn main() {
 }
 
 /// Whole-field FFCz compression vs chunked-parallel store encoding at
-/// 1/2/4 workers. Emits `BENCH_store.json` (median seconds + GB/s per
-/// configuration) for the perf trajectory.
+/// 1/2/4 workers, in-memory vs streamed-to-file. Emits `BENCH_store.json`
+/// (median seconds + GB/s + peak payload bytes in flight — the peak-RSS
+/// proxy — per configuration) for the perf trajectory.
 fn store_comparison() {
     println!("== store benchmarks (32-cubed GRF) ==");
     let field = synth::grf::GrfBuilder::new(&[32, 32, 32])
@@ -31,43 +32,79 @@ fn store_comparison() {
         .build();
     let bytes = field.original_bytes();
     let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
-    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    // (name, median_s, gbps, peak_payload_bytes)
+    let mut rows: Vec<(String, f64, f64, usize)> = Vec::new();
 
     // Baseline: whole-field compress + correct (single chunk, one worker).
     let whole_opts = StoreWriteOptions::new(&[32, 32, 32]).workers(1);
+    let mut peak = 0usize;
     let r = Bench::new("store_whole_field".to_string())
         .bytes(bytes)
         .samples(3)
-        .run(|| black_box(encode_store(&field, &spec, &whole_opts).unwrap().0.len()));
+        .run(|| {
+            let (out, _, rep) = encode_store(&field, &spec, &whole_opts).unwrap();
+            peak = rep.peak_payload_bytes;
+            black_box(out.len())
+        });
     println!("{}", r.report());
     rows.push((
         "whole_field".to_string(),
         r.median.as_secs_f64(),
         r.gbps().unwrap_or(0.0),
+        peak,
     ));
 
-    // Chunked-parallel: 8 chunks of 16³, varying worker count.
+    // Chunked: 8 chunks of 16³, varying worker count, both write paths.
+    let stream_path = std::env::temp_dir().join("ffcz_bench_stream.ffcz");
     for workers in [1usize, 2, 4] {
         let opts = StoreWriteOptions::new(&[16, 16, 16]).workers(workers);
+
+        let mut peak = 0usize;
         let r = Bench::new(format!("store_chunked_16cubed_w{workers}"))
             .bytes(bytes)
             .samples(3)
-            .run(|| black_box(encode_store(&field, &spec, &opts).unwrap().0.len()));
+            .run(|| {
+                let (out, _, rep) = encode_store(&field, &spec, &opts).unwrap();
+                peak = rep.peak_payload_bytes;
+                black_box(out.len())
+            });
         println!("{}", r.report());
         rows.push((
             format!("chunked_w{workers}"),
             r.median.as_secs_f64(),
             r.gbps().unwrap_or(0.0),
+            peak,
+        ));
+
+        // Streaming to a real file: chunk payloads spill as they finish,
+        // bounding peak payload memory to the in-flight window.
+        let mut peak = 0usize;
+        let r = Bench::new(format!("store_streamed_16cubed_w{workers}"))
+            .bytes(bytes)
+            .samples(3)
+            .run(|| {
+                let rep = write_store(&field, &spec, &opts, &stream_path).unwrap();
+                peak = rep.peak_payload_bytes;
+                black_box(rep.total_bytes)
+            });
+        println!("{}", r.report());
+        rows.push((
+            format!("streamed_w{workers}"),
+            r.median.as_secs_f64(),
+            r.gbps().unwrap_or(0.0),
+            peak,
         ));
     }
+    let _ = std::fs::remove_file(&stream_path);
 
     // Hand-rolled JSON (no serde in the offline crate universe).
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"store_throughput\",\n");
     json.push_str("  \"field\": [32, 32, 32],\n  \"configs\": [\n");
-    for (i, (name, secs, gbps)) in rows.iter().enumerate() {
+    for (i, (name, secs, gbps, peak)) in rows.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"name\": \"{name}\", \"median_s\": {secs:.6}, \"gbps\": {gbps:.4}}}{}\n",
+            "    {{\"name\": \"{name}\", \"median_s\": {secs:.6}, \"gbps\": {gbps:.4}, \
+             \"peak_payload_bytes\": {peak}}}{}\n",
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }

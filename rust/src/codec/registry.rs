@@ -39,6 +39,24 @@ fn compressor_table() -> &'static RwLock<HashMap<String, CompressorBuilder>> {
 /// FFCz archives can reference it. Errors if the name is reserved by a
 /// built-in compressor or already registered (re-binding a name would
 /// change the meaning of existing archives).
+///
+/// ```
+/// use ffcz::codec::{register_codec, require_compressor, CodecChainSpec};
+/// use ffcz::compressors::{identity::Identity, Compressor};
+/// use ffcz::correction::BoundSpec;
+///
+/// register_codec("my-identity", || Box::new(Identity) as Box<dyn Compressor>).unwrap();
+///
+/// // The name now resolves everywhere codecs are looked up …
+/// assert!(require_compressor("my-identity").is_ok());
+/// // … including codec chains destined for store manifests.
+/// let spec = CodecChainSpec::base_only("my-identity", BoundSpec::Relative(1e-6));
+/// assert!(ffcz::codec::CodecChain::from_spec(&spec).is_ok());
+///
+/// // Built-in names are reserved; duplicates are rejected.
+/// assert!(register_codec("sz-like", || Box::new(Identity) as Box<dyn Compressor>).is_err());
+/// assert!(register_codec("my-identity", || Box::new(Identity) as Box<dyn Compressor>).is_err());
+/// ```
 pub fn register_codec<F>(name: &str, builder: F) -> Result<()>
 where
     F: Fn() -> Box<dyn Compressor> + Send + Sync + 'static,

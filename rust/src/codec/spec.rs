@@ -79,6 +79,25 @@ pub struct BytesStage {
 
 /// A composable per-chunk codec chain: array stage → optional FFCz
 /// correction → bytes stages.
+///
+/// Specs are self-describing and round-trip through their wire encoding
+/// (the manifest chain table stores exactly these bytes):
+///
+/// ```
+/// use ffcz::codec::CodecChainSpec;
+/// use ffcz::correction::FfczConfig;
+///
+/// let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::power_spectrum(1e-2, 1e-3))
+///     .with_bytes_stage("lossless");
+/// let bytes = spec.to_bytes();
+/// let mut pos = 0;
+/// assert_eq!(CodecChainSpec::from_bytes(&bytes, &mut pos).unwrap(), spec);
+/// assert_eq!(pos, bytes.len());
+///
+/// // The chain implies a complete FFCz configuration.
+/// let cfg = spec.ffcz_config().unwrap();
+/// assert_eq!(cfg.max_iters, 200);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct CodecChainSpec {
     pub array: ArrayStage,

@@ -20,7 +20,7 @@ use crate::codec::CodecChainSpec;
 use crate::compressors::Compressor;
 use crate::correction::{correct_reconstruction, FfczArchive, FfczConfig};
 use crate::data::Field;
-use crate::store::{encode_store, StoreWriteOptions, StoreWriteReport};
+use crate::store::{encode_store, write_store, StoreWriteOptions, StoreWriteReport};
 
 /// Pipeline execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -261,6 +261,11 @@ pub struct StoreSink {
     /// Per-chunk chain overrides (chunk key → chain), applied to every
     /// instance's grid; see [`StoreWriteOptions::overrides`].
     pub overrides: Vec<(String, CodecChainSpec)>,
+    /// Assemble each instance's container fully in memory before writing
+    /// (the pre-streaming behavior; peak memory is payload + container).
+    /// Default `false`: chunk payloads stream to the file as they are
+    /// encoded, holding at most `workers + queue_depth` payloads.
+    pub in_memory: bool,
 }
 
 impl StoreSink {
@@ -271,6 +276,7 @@ impl StoreSink {
             chunk_shape: None,
             workers: 2,
             overrides: Vec::new(),
+            in_memory: false,
         }
     }
 
@@ -312,16 +318,33 @@ struct EncodedInstance {
     encode_end: Duration,
 }
 
-/// Stream instances straight into chunked `.ffcz` stores: stage 1 encodes
-/// instance `i+1` (chunk-parallel, see [`crate::store`]) while stage 2
-/// writes instance `i` to disk — the Fig. 7(d) overlap applied to the
-/// archive path.
+/// Stream instances straight into chunked `.ffcz` stores, one file per
+/// instance.
+///
+/// Default (streaming) mode fuses encode and write per instance: the chunk
+/// worker pool hands each finished payload to the writer thread, which
+/// spills it to the instance's file immediately (see
+/// [`crate::store::stream_store_to`]). Peak payload memory per instance is
+/// O((workers + queue_depth) × chunk) instead of O(field) — the property
+/// that lets multi-GB instances flow through without hitting the in-memory
+/// scale wall. Instances run in sequence; parallelism comes from the
+/// per-chunk workers, and the fused elapsed time is attributed to
+/// [`StorePipelineReport::encode_total`].
+///
+/// With [`StoreSink::in_memory`] set, the original two-stage overlap runs
+/// instead: stage 1 assembles instance `i+1`'s whole container in memory
+/// (chunk-parallel) while stage 2 writes instance `i` to disk — the
+/// Fig. 7(d) overlap applied to the archive path, at the cost of holding
+/// payload + container for an instance at once.
 pub fn run_pipeline_to_store(
     instances: Vec<(String, Field)>,
     sink: &StoreSink,
 ) -> Result<StorePipelineReport> {
     std::fs::create_dir_all(&sink.dir)
         .with_context(|| format!("creating {}", sink.dir.display()))?;
+    if !sink.in_memory {
+        return run_streaming_to_store(instances, sink);
+    }
     let t0 = Instant::now();
     let (tx, rx) = sync_channel::<Result<EncodedInstance>>(2);
 
@@ -370,6 +393,32 @@ pub fn run_pipeline_to_store(
         makespan: t0.elapsed(),
         encode_total,
         write_total,
+    })
+}
+
+/// Streaming store path: each instance's chunks spill to its file as they
+/// are encoded. `write_total` stays zero — file writes happen inside the
+/// fused encode stage, interleaved with chunk encoding.
+fn run_streaming_to_store(
+    instances: Vec<(String, Field)>,
+    sink: &StoreSink,
+) -> Result<StorePipelineReport> {
+    let t0 = Instant::now();
+    let mut outputs = Vec::with_capacity(instances.len());
+    let mut encode_total = Duration::ZERO;
+    for (name, field) in instances {
+        let opts = sink.options_for(&field)?;
+        let path = sink.dir.join(format!("{name}.ffcz"));
+        let report = write_store(&field, &sink.spec, &opts, &path)
+            .with_context(|| format!("streaming instance '{name}' to {}", path.display()))?;
+        encode_total += report.elapsed;
+        outputs.push((name, path, report));
+    }
+    Ok(StorePipelineReport {
+        outputs,
+        makespan: t0.elapsed(),
+        encode_total,
+        write_total: Duration::ZERO,
     })
 }
 
@@ -470,6 +519,36 @@ mod tests {
             assert!(store.manifest().all_chunks_ok());
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streaming_and_in_memory_sinks_produce_identical_archives() {
+        let root = std::env::temp_dir().join("ffcz_sink_equivalence_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+        let mut streaming = StoreSink::new(root.join("streaming"), spec.clone());
+        streaming.workers = 3;
+        let mut in_memory = StoreSink::new(root.join("in_memory"), spec);
+        in_memory.workers = 3;
+        in_memory.in_memory = true;
+
+        let a = run_pipeline_to_store(instances(2), &streaming).unwrap();
+        let b = run_pipeline_to_store(instances(2), &in_memory).unwrap();
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        for ((name_a, path_a, rep_a), (name_b, path_b, rep_b)) in
+            a.outputs.iter().zip(&b.outputs)
+        {
+            assert_eq!(name_a, name_b);
+            assert!(rep_a.streamed && !rep_b.streamed);
+            assert_eq!(
+                std::fs::read(path_a).unwrap(),
+                std::fs::read(path_b).unwrap(),
+                "streamed and in-memory archives diverge for '{name_a}'"
+            );
+            // The streamed write never held the whole payload at once.
+            assert!(rep_a.peak_payload_bytes <= rep_b.peak_payload_bytes);
+        }
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -55,6 +55,39 @@
 //! assert!(report.spatial_ok && report.frequency_ok);
 //! ```
 //!
+//! ## Architecture
+//!
+//! Dataflow of a store write, with the module that owns each stage:
+//!
+//! ```text
+//! field ──[store::grid]──▶ chunks ──[compressors]──▶ base payload
+//!                                        │
+//!                         [correction] FFCz POCS edit stage (optional)
+//!                                        │
+//!                         [encoding]   lossless bytes stages (optional)
+//!                                        │
+//!          [codec] one CodecChain payload per chunk
+//!                                        │
+//!          [store::writer] streamed into the .ffcz container
+//!                          (payloads spill as chunks finish; manifest
+//!                           + 24-byte trailer written last)
+//! ```
+//!
+//! Reads run the same chain backwards: [`store::Store`] opens trailer +
+//! manifest only, fetches the chunks a [`store::Store::read_region`]
+//! window intersects, CRC-checks each payload, and decodes through the
+//! chunk's chain. Above the chunk level, [`coordinator`] pipelines
+//! instance streams (and lands them in stores via
+//! [`coordinator::run_pipeline_to_store`]); [`data`], [`metrics`], and
+//! [`experiments`] supply fields, quality metrics, and the paper's
+//! figures; the `ffcz` binary (`main.rs`) wraps it all in a CLI.
+//!
+//! Two cross-cutting decisions shape the code: every guarantee is **per
+//! chunk** (which is what makes partial decode, per-chunk codec
+//! overrides, and worker-pool parallelism composable), and every codec is
+//! resolved through a **runtime registry** by name
+//! ([`codec::register_codec`]), never a closed enum.
+//!
 //! ## Archive format
 //!
 //! Two on-disk containers exist. A whole-field [`correction::FfczArchive`]
@@ -66,9 +99,16 @@
 //! "FFCZSTR1"            8-byte head magic
 //! chunk payloads        one codec-chain output per chunk, row-major order
 //! manifest              versioned binary manifest (see below)
-//! footer                manifest offset u64 LE · manifest len u64 LE ·
+//! trailer               manifest offset u64 LE · manifest len u64 LE ·
 //!                       "FFCZEND1"              (24 bytes total)
 //! ```
+//!
+//! The **normative, third-party-implementable byte-level specification**
+//! of this container — header, payload framing, CRC-32 placement, chain
+//! table, manifest v1 vs v2, trailer, and the CLI `--chunk-codec`
+//! grammar — lives in `docs/FORMAT.md` at the repository root; the test
+//! `tests/format_doc.rs` keeps it honest by walking real archives with an
+//! independent parser built from that document alone.
 //!
 //! The manifest (version 2, varint-based — see [`store::manifest`] for the
 //! field-by-field layout) records the array shape and source precision,
@@ -87,11 +127,16 @@
 //! Manifest **version 1** archives (single store-wide codec, two relative
 //! bounds only, no checksums) remain readable: the legacy codec spec is
 //! lifted onto an equivalent chain at parse time and checksum verification
-//! is skipped. Writers always emit version 2. Readers parse footer +
+//! is skipped. Writers always emit version 2. Readers parse trailer +
 //! manifest only and fetch chunks on demand, so
 //! [`store::Store::read_region`] decodes exactly the chunks intersecting
 //! the requested window, CRC-verifying each payload before it reaches a
-//! codec.
+//! codec. Writers **stream** by default — chunk payloads spill to the
+//! file through a bounded in-flight window as they are encoded
+//! ([`store::stream_store_to`]), so peak payload memory is
+//! O(workers × chunk) rather than O(field), and an interrupted write is
+//! rejected at open with a precise truncation error because the trailer
+//! never made it to disk.
 
 pub mod codec;
 pub mod compressors;

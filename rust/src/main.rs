@@ -12,8 +12,11 @@
 //! ffcz synth      --dataset nyx-baryon --scale 32 --output f.ffld
 //! ffcz experiment <fig1|table2|...|all> [--scale 32] [--out results]
 //! ffcz pipeline   --instances 4 --scale 32 [--sequential] [--store dir]
+//!                 [--in-memory]
 //! ffcz archive    create|extract|inspect|read-region …  (chunked .ffcz store,
-//!                 per-chunk codec chains via --chunk-codec)
+//!                 streamed writes by default with --in-memory escape hatch,
+//!                 per-chunk codec chains via --chunk-codec — grammar in
+//!                 docs/FORMAT.md)
 //! ffcz info       --archive f.fz
 //! ```
 
@@ -29,7 +32,7 @@ use ffcz::correction::{self, BoundSpec, FfczArchive, FfczConfig, FrequencyBound}
 use ffcz::data::{io, synth};
 use ffcz::experiments::{self, ExpOptions};
 use ffcz::metrics::QualityReport;
-use ffcz::store::{write_store, Store, StoreWriteOptions};
+use ffcz::store::{write_store, write_store_in_memory, Store, StoreWriteOptions};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -81,16 +84,28 @@ fn print_usage() {
          \x20             s3d-co2, hedm, eeg)\n\
          \x20 experiment  <id|all> [--scale N] [--out DIR] [--artifacts DIR]\n\
          \x20 pipeline    [--instances N] [--scale N] [--sequential]\n\
-         \x20             [--store DIR] [--chunk A,B,C] [--workers N]\n\
-         \x20             store sink also takes the archive-create codec flags\n\
+         \x20             [--store DIR] [--chunk A,B,C] [--workers N] [--in-memory]\n\
+         \x20             store sink streams chunk payloads to each file by\n\
+         \x20             default (--in-memory assembles containers first) and\n\
+         \x20             also takes the archive-create codec flags\n\
          \x20             (--lossless, --base-only, bound flags, --chunk-codec)\n\
          \x20 archive     create --input F --output F [--chunk A,B,C]\n\
          \x20             [--base NAME | --lossless] [--base-only]\n\
          \x20             [--eb REL | --abs-eb ABS]\n\
          \x20             [--db REL | --abs-db ABS | --power-spectrum REL]\n\
-         \x20             [--chunk-codec 'KEY=SPEC[;KEY=SPEC…]'] [--workers N]\n\
-         \x20             KEY is a chunk key ('c/0/1'); SPEC is 'lossless' or\n\
-         \x20             'BASE[:eb=R,abs-eb=A,db=R,abs-db=A,ps=R,base-only]'\n\
+         \x20             [--max-iters N] [--quant-retries N]\n\
+         \x20             [--chunk-codec 'KEY=SPEC[;KEY=SPEC…]']\n\
+         \x20             [--workers N] [--queue-depth N] [--in-memory]\n\
+         \x20             streams chunk payloads to the file as they are\n\
+         \x20             encoded (peak payload memory ≈ (workers + queue)\n\
+         \x20             chunks); --in-memory restores full assembly first.\n\
+         \x20             chunk-codec mini-language (EBNF in docs/FORMAT.md):\n\
+         \x20               overrides = entry {';' entry}\n\
+         \x20               entry     = KEY '=' SPEC        KEY: 'c/0/1' …\n\
+         \x20               SPEC      = 'lossless' | BASE [':' opt {',' opt}]\n\
+         \x20               opt       = 'eb=R' | 'abs-eb=A' | 'db=R' | 'abs-db=A'\n\
+         \x20                         | 'ps=R' | 'iters=N' | 'quant-retries=N'\n\
+         \x20                         | 'base-only'\n\
          \x20 archive     extract --input F --output F [--workers N]\n\
          \x20 archive     inspect --input F [--chunks]\n\
          \x20 archive     read-region --input F --origin A,B,C --shape A,B,C\n\
@@ -160,7 +175,9 @@ fn frequency_bound_flag(flags: &HashMap<String, String>) -> Result<FrequencyBoun
 
 /// Parse one `--chunk-codec` chain mini-spec: `lossless`, or
 /// `BASE[:key=val,…]` with keys `eb` / `abs-eb` / `db` / `abs-db` / `ps`
-/// (power-spectrum relative) / `base-only`.
+/// (power-spectrum relative) / `iters` (POCS iteration cap) /
+/// `quant-retries` (quantization bound-shrink retries) / `base-only`.
+/// The full grammar (EBNF) is in `docs/FORMAT.md`.
 fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
     let s = s.trim();
     if s == "lossless" {
@@ -173,6 +190,9 @@ fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
     require_compressor(base)?;
     let mut spatial = BoundSpec::Relative(1e-3);
     let mut frequency: Option<FrequencyBound> = None;
+    let mut max_iters = 200usize;
+    let mut max_quant_retries = 3usize;
+    let mut correction_knobs = false;
     let mut base_only = false;
     for part in params.split(',').filter(|p| !p.trim().is_empty()) {
         let (key, val) = match part.split_once('=') {
@@ -183,20 +203,37 @@ fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
             val.parse::<f64>()
                 .with_context(|| format!("chunk-codec key '{key}' expects a number, got '{val}'"))
         };
+        let int = || {
+            val.parse::<usize>().with_context(|| {
+                format!("chunk-codec key '{key}' expects a non-negative integer, got '{val}'")
+            })
+        };
         match key {
             "eb" => spatial = BoundSpec::Relative(num()?),
             "abs-eb" => spatial = BoundSpec::Absolute(num()?),
             "db" => frequency = Some(FrequencyBound::Uniform(BoundSpec::Relative(num()?))),
             "abs-db" => frequency = Some(FrequencyBound::Uniform(BoundSpec::Absolute(num()?))),
             "ps" => frequency = Some(FrequencyBound::PowerSpectrumRelative(num()?)),
+            "iters" => {
+                max_iters = int()?;
+                if max_iters == 0 {
+                    bail!("chunk-codec key 'iters' must be ≥ 1 in '{s}' (0 would skip POCS \
+                           and the chunk could never meet its frequency bound)");
+                }
+                correction_knobs = true;
+            }
+            "quant-retries" => {
+                max_quant_retries = int()?;
+                correction_knobs = true;
+            }
             "base-only" => base_only = true,
             other => bail!("unknown chunk-codec key '{other}' in '{s}'"),
         }
     }
-    if base_only && frequency.is_some() {
+    if base_only && (frequency.is_some() || correction_knobs) {
         bail!(
-            "chunk-codec spec '{s}' combines base-only with a frequency bound key \
-             (db / abs-db / ps) — pick one"
+            "chunk-codec spec '{s}' combines base-only with a correction key \
+             (db / abs-db / ps / iters / quant-retries) — pick one"
         );
     }
     Ok(if base_only {
@@ -208,8 +245,8 @@ fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
                 spatial,
                 frequency: frequency
                     .unwrap_or(FrequencyBound::Uniform(BoundSpec::Relative(1e-3))),
-                max_iters: 200,
-                max_quant_retries: 3,
+                max_iters,
+                max_quant_retries,
             },
         )
     })
@@ -278,8 +315,8 @@ fn build_config(flags: &HashMap<String, String>) -> Result<FfczConfig> {
     Ok(FfczConfig {
         spatial: spatial_bound_flag(flags)?,
         frequency: frequency_bound_flag(flags)?,
-        max_iters: 200,
-        max_quant_retries: 3,
+        max_iters: parse_f64(flags, "max-iters", 200.0)?.max(1.0) as usize,
+        max_quant_retries: parse_f64(flags, "quant-retries", 3.0)?.max(0.0) as usize,
     })
 }
 
@@ -421,6 +458,7 @@ fn cmd_pipeline(flags: &HashMap<String, String>) -> Result<()> {
         let mut sink = StoreSink::new(PathBuf::from(dir), build_chain_spec(flags)?);
         sink.workers = parse_workers(flags)?;
         sink.overrides = parse_chunk_codec_overrides(flags)?;
+        sink.in_memory = flags.contains_key("in-memory");
         if let Some(chunk) = flags.get("chunk") {
             sink.chunk_shape = Some(parse_axes(chunk, "chunk")?);
         }
@@ -473,9 +511,14 @@ fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
         Some(c) => StoreWriteOptions::new(&parse_axes(c, "chunk")?).workers(workers),
         None => StoreWriteOptions::default_for(field.shape(), workers)?,
     };
+    opts.queue_depth = parse_f64(flags, "queue-depth", opts.queue_depth as f64)? as usize;
     opts.overrides = parse_chunk_codec_overrides(flags)?;
     let chunk_shape = opts.chunk_shape.clone();
-    let report = write_store(&field, &spec, &opts, &output)?;
+    let report = if flags.contains_key("in-memory") {
+        write_store_in_memory(&field, &spec, &opts, &output)?
+    } else {
+        write_store(&field, &spec, &opts, &output)?
+    };
     println!(
         "archived {} (shape {:?}) -> {} ({}, ratio {:.1})",
         input.display(),
@@ -493,6 +536,15 @@ fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
         workers,
         ffcz::util::human_duration(report.elapsed),
         if report.all_chunks_ok { "OK" } else { "VIOLATED" },
+    );
+    println!(
+        "{}: peak {} of chunk payloads in memory",
+        if report.streamed {
+            "streamed"
+        } else {
+            "in-memory assembly"
+        },
+        ffcz::util::human_bytes(report.peak_payload_bytes),
     );
     if !report.all_chunks_ok {
         bail!("dual-domain verification failed for at least one chunk");

@@ -14,12 +14,18 @@
 //! offset 8          chunk payload 0 … k-1      concatenated codec output
 //! manifest_offset   manifest bytes             (this module)
 //! end - 24          manifest_offset  u64 LE ┐
-//! end - 16          manifest_len     u64 LE │  24-byte footer
+//! end - 16          manifest_len     u64 LE │  24-byte footer (trailer)
 //! end - 8           "FFCZEND1"               ┘
 //! ```
 //!
-//! Readers locate the manifest through the footer, so chunk payloads can be
-//! streamed to the file as they are encoded and the manifest appended last.
+//! Readers locate the manifest through the trailer, which is why the
+//! streaming writer ([`super::writer::StoreStreamWriter`]) can spill chunk
+//! payloads to the file as they are encoded and append manifest + trailer
+//! last: a write interrupted at any earlier point leaves no trailer, and
+//! opening such a file fails with a precise "truncated or
+//! partially-written" error. The normative, third-party-implementable
+//! byte-level specification of this container lives in `docs/FORMAT.md` at
+//! the repository root.
 //!
 //! ## Manifest layout (version 2)
 //!

@@ -18,10 +18,17 @@
 //!   verification stats (version 1 archives remain readable through a
 //!   migration shim);
 //! * [`parallel`] — the `std::thread` worker pool that fans per-chunk
-//!   encode/decode work across cores;
-//! * [`writer`] / [`reader`] — container assembly (with per-chunk codec
-//!   overrides via [`StoreWriteOptions::overrides`]) and manifest-only
+//!   encode/decode work across cores, plus the bounded-window ordered sink
+//!   ([`par_try_map_ordered_sink`]) behind the streaming writer;
+//! * [`writer`] / [`reader`] — container production (streaming by default:
+//!   chunk payloads spill to the output as they complete, holding at most
+//!   `workers + queue_depth` payloads in memory; per-chunk codec overrides
+//!   via [`StoreWriteOptions::overrides`]) and trailer-aware, manifest-only
 //!   open with partial [`Store::read_region`] decode.
+//!
+//! The on-disk container format is specified normatively, byte by byte, in
+//! `docs/FORMAT.md` at the repository root; [`manifest`] documents the
+//! same layout from the implementation side.
 //!
 //! Because every chunk is corrected independently, the dual-domain bound
 //! (`spatial_ok && frequency_ok`) holds *per chunk* — exactly the guarantee
@@ -62,9 +69,12 @@ pub mod writer;
 pub use crate::codec::{ChunkStats, CodecChain, CodecChainSpec, EncodedChunk};
 pub use grid::{extract_subarray, insert_subarray, ChunkGrid};
 pub use manifest::{ChunkEntry, Manifest};
-pub use parallel::par_try_map;
+pub use parallel::{par_try_map, par_try_map_ordered_sink};
 pub use reader::Store;
-pub use writer::{encode_store, write_store, StoreWriteOptions, StoreWriteReport};
+pub use writer::{
+    encode_store, stream_store_to, write_store, write_store_in_memory, StoreStreamWriter,
+    StoreWriteOptions, StoreWriteReport,
+};
 
 /// Legacy name of the store codec description, kept for one release so
 /// downstream code migrates gradually. The enum variants are gone — build

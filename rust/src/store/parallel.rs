@@ -5,9 +5,20 @@
 //! `std::thread` scope and an atomic work index — no dependencies, no
 //! channels, deterministic output order. This is the chunk-level analogue
 //! of how [`crate::coordinator::sharding`] parallelizes over shards.
+//!
+//! Two entry points:
+//!
+//! * [`par_try_map`] collects every result into a `Vec` (decode paths,
+//!   where the caller needs all pieces anyway);
+//! * [`par_try_map_ordered_sink`] hands results to a single-threaded sink
+//!   **in index order** through a bounded window, so at most
+//!   `window` results exist at once — the streaming store writer uses this
+//!   to spill chunk payloads to disk with O(window × chunk) peak memory
+//!   instead of O(field).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use anyhow::Result;
 
@@ -47,6 +58,124 @@ where
         .collect()
 }
 
+/// Producer-side gate of the ordered sink: `written` is the next index the
+/// sink expects, `abort` wakes producers blocked on a full window when the
+/// consumer bails out early.
+struct WindowGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    written: usize,
+    abort: bool,
+}
+
+/// Apply `f` to every index in `0..n` on up to `workers` OS threads and
+/// feed the results to `sink` **in index order** on the calling thread.
+///
+/// Backpressure: a worker does not start index `i` until
+/// `i < written + window` (where `written` is the number of results the
+/// sink has consumed), so at most `window` results are in flight —
+/// produced but not yet sunk — at any moment. This is what bounds the
+/// streaming store writer's peak payload memory to O(window × chunk).
+///
+/// Because the sink always observes index order, the byte stream it
+/// produces is identical for every worker count (and identical to a
+/// sequential run). Errors from `f` propagate at their index position
+/// (first error by index wins, as in [`par_try_map`]); a sink error aborts
+/// the remaining work.
+pub fn par_try_map_ordered_sink<T, F, S>(
+    n: usize,
+    workers: usize,
+    window: usize,
+    f: F,
+    mut sink: S,
+) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+    S: FnMut(usize, T) -> Result<()>,
+{
+    let workers = workers.clamp(1, n.max(1));
+    let window = window.max(workers);
+    if workers == 1 || n <= 1 {
+        for i in 0..n {
+            sink(i, f(i)?)?;
+        }
+        return Ok(());
+    }
+    let next = AtomicUsize::new(0);
+    let gate = WindowGate {
+        state: Mutex::new(GateState {
+            written: 0,
+            abort: false,
+        }),
+        cv: Condvar::new(),
+    };
+    let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, Result<T>)>(window);
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let (next, gate, f) = (&next, &gate, &f);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // Wait for index i to enter the write window.
+                {
+                    let mut st = gate.state.lock().unwrap();
+                    while !st.abort && i >= st.written + window {
+                        st = gate.cv.wait(st).unwrap();
+                    }
+                    if st.abort {
+                        break;
+                    }
+                }
+                if tx.send((i, f(i))).is_err() {
+                    break; // consumer hung up (early error)
+                }
+            });
+        }
+        drop(tx);
+
+        // Single consumer on this thread: reorder to index order. The
+        // reorder buffer is bounded by the window (no worker may run ahead
+        // of `written + window`). On any failure, raise `abort` so workers
+        // blocked on the gate wake up; dropping `rx` on return unblocks
+        // workers stalled on a full channel.
+        let abort = |gate: &WindowGate| {
+            let mut st = gate.state.lock().unwrap();
+            st.abort = true;
+            gate.cv.notify_all();
+        };
+        let mut pending: BTreeMap<usize, Result<T>> = BTreeMap::new();
+        let mut expect = 0usize;
+        for (i, r) in rx {
+            pending.insert(i, r);
+            while let Some(r) = pending.remove(&expect) {
+                let value = match r {
+                    Ok(v) => v,
+                    Err(e) => {
+                        abort(&gate);
+                        return Err(e);
+                    }
+                };
+                if let Err(e) = sink(expect, value) {
+                    abort(&gate);
+                    return Err(e);
+                }
+                expect += 1;
+                let mut st = gate.state.lock().unwrap();
+                st.written = expect;
+                gate.cv.notify_all();
+            }
+        }
+        Ok(())
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +205,113 @@ mod tests {
         })
         .unwrap_err();
         assert_eq!(format!("{err}"), "task 4 failed");
+    }
+
+    #[test]
+    fn ordered_sink_sees_index_order_for_every_worker_count() {
+        for workers in [1usize, 2, 4, 9] {
+            for window in [1usize, 2, 5] {
+                let mut seen = Vec::new();
+                par_try_map_ordered_sink(
+                    17,
+                    workers,
+                    window,
+                    |i| Ok(i * i),
+                    |i, v| {
+                        seen.push((i, v));
+                        Ok(())
+                    },
+                )
+                .unwrap();
+                let expect: Vec<(usize, usize)> = (0..17).map(|i| (i, i * i)).collect();
+                assert_eq!(seen, expect, "workers={workers} window={window}");
+            }
+        }
+    }
+
+    #[test]
+    fn ordered_sink_handles_empty_input() {
+        let mut calls = 0usize;
+        par_try_map_ordered_sink(0, 4, 2, |i| Ok(i), |_, _: usize| {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn ordered_sink_propagates_first_error_by_index() {
+        for workers in [1usize, 3] {
+            let mut sunk = Vec::new();
+            let err = par_try_map_ordered_sink(
+                10,
+                workers,
+                3,
+                |i| {
+                    if i >= 4 {
+                        bail!("task {i} failed");
+                    }
+                    Ok(i)
+                },
+                |i, v| {
+                    sunk.push((i, v));
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+            assert_eq!(format!("{err}"), "task 4 failed", "workers={workers}");
+            assert_eq!(sunk, vec![(0, 0), (1, 1), (2, 2), (3, 3)]);
+        }
+    }
+
+    #[test]
+    fn ordered_sink_aborts_on_sink_error() {
+        for workers in [1usize, 4] {
+            let err = par_try_map_ordered_sink(
+                100,
+                workers,
+                2,
+                |i| Ok(i),
+                |i, _| {
+                    if i == 5 {
+                        bail!("sink full");
+                    }
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+            assert_eq!(format!("{err}"), "sink full", "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn ordered_sink_window_bounds_lead_over_writer() {
+        // With window w, no producer may start index i before i - w items
+        // have been sunk: the max "lead" observed inside f is < w + sunk.
+        let written = AtomicUsize::new(0);
+        let max_lead = AtomicUsize::new(0);
+        let window = 3usize;
+        par_try_map_ordered_sink(
+            40,
+            4,
+            window,
+            |i| {
+                let w = written.load(Ordering::SeqCst);
+                let lead = i.saturating_sub(w);
+                max_lead.fetch_max(lead, Ordering::SeqCst);
+                Ok(i)
+            },
+            |_, _| {
+                written.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+        )
+        .unwrap();
+        let observed = max_lead.load(Ordering::SeqCst);
+        assert!(
+            observed <= window + 1,
+            "producer ran {observed} ahead of the sink (window {window})"
+        );
     }
 }

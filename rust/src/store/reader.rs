@@ -24,16 +24,43 @@ enum Source {
     Mem(Vec<u8>),
 }
 
+/// The precise error for archives whose streaming write never completed:
+/// valid head magic, missing or displaced trailer.
+fn truncated_store_error() -> anyhow::Error {
+    anyhow::anyhow!(
+        "truncated or partially-written .ffcz store: the file starts with a valid \
+         \"FFCZSTR1\" header but does not end with the 24-byte \"FFCZEND1\" trailer \
+         (the write was interrupted before finish, or the tail was cut off)"
+    )
+}
+
 /// An opened `.ffcz` chunked store.
 ///
-/// Opening parses only the footer and manifest; chunk payloads are fetched
-/// and decoded on demand, so a [`Store::read_region`] over a small window
-/// of a large array does a small fraction of the full decode work. Every
-/// chain in the manifest's chain table is resolved against the codec
-/// registries at open time, and chunk payloads are CRC-32-verified before
-/// decode (manifest v2 archives; v1 archives predate checksums). The
-/// number of chunk decodes is observable via [`Store::chunks_decoded`]
-/// (used by tests to assert partial-decode behaviour).
+/// Opening parses only the trailer (footer) and manifest; chunk payloads
+/// are fetched and decoded on demand, so a [`Store::read_region`] over a
+/// small window of a large array does a small fraction of the full decode
+/// work. Every chain in the manifest's chain table is resolved against the
+/// codec registries at open time, and chunk payloads are CRC-32-verified
+/// before decode (manifest v2 archives; v1 archives predate checksums).
+/// The number of chunk decodes is observable via [`Store::chunks_decoded`]
+/// (used by tests to assert partial-decode behaviour). A container whose
+/// streaming write was interrupted — valid header, no trailer — is
+/// rejected at open with a precise "truncated or partially-written" error.
+///
+/// ```
+/// use ffcz::codec::CodecChainSpec;
+/// use ffcz::data::synth::grf::GrfBuilder;
+/// use ffcz::store::{encode_store, Store, StoreWriteOptions};
+///
+/// let field = GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(2).build();
+/// let opts = StoreWriteOptions::new(&[4, 4]);
+/// let (bytes, _, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
+///
+/// let store = Store::from_bytes(bytes).unwrap();
+/// assert_eq!(store.shape(), &[8, 8]);
+/// assert_eq!(store.grid().chunk_count(), 4);
+/// assert_eq!(store.decompress_all(1).unwrap().data(), field.data());
+/// ```
 pub struct Store {
     source: Source,
     manifest: Manifest,
@@ -69,8 +96,11 @@ impl Store {
     /// Open a store held fully in memory.
     pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
         let len = bytes.len() as u64;
-        if bytes.len() < STORE_MAGIC.len() + FOOTER_LEN || &bytes[..8] != STORE_MAGIC {
-            bail!("not a .ffcz store (bad head magic or too short)");
+        if bytes.len() < STORE_MAGIC.len() || &bytes[..STORE_MAGIC.len()] != STORE_MAGIC {
+            bail!("not a .ffcz store (bad head magic)");
+        }
+        if bytes.len() < STORE_MAGIC.len() + FOOTER_LEN {
+            bail!(truncated_store_error());
         }
         let footer = &bytes[bytes.len() - FOOTER_LEN..];
         let (manifest_offset, manifest_len) = Self::parse_footer(footer, len)?;
@@ -81,7 +111,7 @@ impl Store {
     }
 
     fn parse_footer_source(file: &mut std::fs::File, file_len: u64) -> Result<(u64, u64)> {
-        if file_len < (STORE_MAGIC.len() + FOOTER_LEN) as u64 {
+        if file_len < STORE_MAGIC.len() as u64 {
             bail!("not a .ffcz store (file too short)");
         }
         let mut head = [0u8; 8];
@@ -89,6 +119,9 @@ impl Store {
         file.read_exact(&mut head)?;
         if &head != STORE_MAGIC {
             bail!("not a .ffcz store (bad head magic)");
+        }
+        if file_len < (STORE_MAGIC.len() + FOOTER_LEN) as u64 {
+            bail!(truncated_store_error());
         }
         let mut footer = [0u8; FOOTER_LEN];
         file.seek(SeekFrom::End(-(FOOTER_LEN as i64)))?;
@@ -99,7 +132,11 @@ impl Store {
     fn parse_footer(footer: &[u8], total_len: u64) -> Result<(u64, u64)> {
         debug_assert_eq!(footer.len(), FOOTER_LEN);
         if &footer[16..24] != FOOTER_MAGIC {
-            bail!("not a .ffcz store (bad footer magic)");
+            // A valid header without the trailer is the signature of a
+            // write interrupted mid-payload or mid-manifest: streaming
+            // writers emit the trailer last, precisely so this case is
+            // distinguishable from "not our file at all".
+            bail!(truncated_store_error());
         }
         let manifest_offset = u64::from_le_bytes(footer[0..8].try_into().unwrap());
         let manifest_len = u64::from_le_bytes(footer[8..16].try_into().unwrap());
@@ -217,6 +254,23 @@ impl Store {
     /// Decode the subarray `[origin, origin + shape)`, touching only the
     /// chunks that intersect it. Chunk decodes run on up to `workers`
     /// threads.
+    ///
+    /// ```
+    /// use ffcz::codec::CodecChainSpec;
+    /// use ffcz::data::synth::grf::GrfBuilder;
+    /// use ffcz::store::{encode_store, extract_subarray, Store, StoreWriteOptions};
+    ///
+    /// let field = GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(3).build();
+    /// let opts = StoreWriteOptions::new(&[4, 4]);
+    /// let (bytes, _, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
+    /// let store = Store::from_bytes(bytes).unwrap();
+    ///
+    /// // A 3 × 2 window inside chunk c/0/0: one chunk decoded, bit-exact.
+    /// let region = store.read_region(&[1, 1], &[3, 2], 1).unwrap();
+    /// assert_eq!(store.chunks_decoded(), 1);
+    /// let expect = extract_subarray(field.data(), field.shape(), &[1, 1], &[3, 2]);
+    /// assert_eq!(region.data(), &expect[..]);
+    /// ```
     pub fn read_region(&self, origin: &[usize], shape: &[usize], workers: usize) -> Result<Field> {
         let ids = self.grid.chunks_intersecting(origin, shape)?;
         let n: usize = shape.iter().product();

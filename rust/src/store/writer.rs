@@ -1,21 +1,40 @@
 //! Chunked store encoder: tile a field, encode chunks in parallel (each
-//! through its codec chain), and assemble the `.ffcz` container (payloads
-//! first, manifest appended, 24-byte footer last — see [`super::manifest`]
-//! for the exact layout).
+//! through its codec chain), and produce the `.ffcz` container (payloads
+//! first, manifest appended, 24-byte trailer last — normative layout in
+//! `docs/FORMAT.md`, field-by-field notes in [`super::manifest`]).
+//!
+//! Two write paths share one byte format:
+//!
+//! * **streaming** ([`stream_store_to`] / [`write_store`], the default) —
+//!   the worker pool hands finished chunk payloads to this (single writer)
+//!   thread through a bounded in-flight window and each payload is spilled
+//!   to the output as it completes, so peak payload memory is
+//!   O((workers + queue_depth) × chunk), not O(field). The manifest and
+//!   trailer are written last, which is exactly why readers locate the
+//!   manifest through the trailer.
+//! * **in-memory** ([`encode_store`] / [`write_store_in_memory`]) — the
+//!   whole container is assembled in a `Vec<u8>` (useful for tests and
+//!   `Store::from_bytes` round-trips; the CLI exposes it as
+//!   `--in-memory`).
+//!
+//! Because the streaming sink consumes chunks in index order, both paths
+//! produce **byte-identical** archives for any worker count.
 
 use std::collections::HashMap;
+use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::codec::{CodecChain, CodecChainSpec};
-use crate::data::Field;
+use crate::codec::{CodecChain, CodecChainSpec, EncodedChunk};
+use crate::data::{Field, Precision};
 use crate::encoding::crc32;
 
 use super::grid::{extract_subarray, ChunkGrid};
-use super::manifest::{ChunkEntry, Manifest, FOOTER_MAGIC, STORE_MAGIC};
-use super::parallel::par_try_map;
+use super::manifest::{ChunkEntry, Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
+use super::parallel::{par_try_map, par_try_map_ordered_sink};
 
 /// Options for store creation.
 #[derive(Debug, Clone)]
@@ -24,6 +43,10 @@ pub struct StoreWriteOptions {
     pub chunk_shape: Vec<usize>,
     /// Worker threads for per-chunk encoding.
     pub workers: usize,
+    /// Extra in-flight chunk payloads the streaming writer may buffer
+    /// beyond one per worker (the bounded hand-off window is
+    /// `workers + queue_depth`). Irrelevant to the in-memory path.
+    pub queue_depth: usize,
     /// Per-chunk codec chain overrides, keyed by the grid's zarr-style
     /// chunk key (`"c/1/0"`); chunks not named here use the store default
     /// (e.g. a lossless chain for boundary chunks, FFCz elsewhere).
@@ -36,12 +59,20 @@ impl StoreWriteOptions {
         Self {
             chunk_shape: chunk_shape.to_vec(),
             workers: 1,
+            queue_depth: 2,
             overrides: Vec::new(),
         }
     }
 
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Bound the streaming writer's in-flight window to
+    /// `workers + queue_depth` encoded-but-unwritten chunk payloads.
+    pub fn queue_depth(mut self, queue_depth: usize) -> Self {
+        self.queue_depth = queue_depth;
         self
     }
 
@@ -61,8 +92,15 @@ impl StoreWriteOptions {
         Ok(Self {
             chunk_shape: grid.chunk_shape().to_vec(),
             workers: workers.max(1),
+            queue_depth: 2,
             overrides: Vec::new(),
         })
+    }
+
+    /// The streaming writer's bounded in-flight window: how many encoded
+    /// chunk payloads may exist at once before workers stall.
+    pub fn window(&self) -> usize {
+        self.workers.max(1) + self.queue_depth
     }
 }
 
@@ -75,6 +113,13 @@ pub struct StoreWriteReport {
     pub total_bytes: usize,
     /// True iff every chunk's dual-domain verification passed.
     pub all_chunks_ok: bool,
+    /// High-water mark of encoded-but-unwritten chunk payload bytes (a
+    /// peak-RSS proxy). The streaming path bounds this to the in-flight
+    /// window; the in-memory path holds every payload, so it equals
+    /// `payload_bytes` there.
+    pub peak_payload_bytes: usize,
+    /// True for the streaming write path, false for in-memory assembly.
+    pub streamed: bool,
     pub elapsed: Duration,
 }
 
@@ -177,13 +222,249 @@ pub fn encode_store(
         manifest_bytes: manifest_bytes.len(),
         total_bytes: out.len(),
         all_chunks_ok: manifest.all_chunks_ok(),
+        // Every payload is held until assembly: the in-memory scale wall.
+        peak_payload_bytes: manifest.payload_bytes() as usize,
+        streamed: false,
         elapsed: t0.elapsed(),
     };
     Ok((out, manifest, report))
 }
 
-/// Encode `field` and write the store to `path`.
+/// Incremental `.ffcz` container writer: the `StoreSink`-style streaming
+/// API underneath [`stream_store_to`].
+///
+/// The container is written strictly front-to-back — head magic at
+/// construction, one payload per [`StoreStreamWriter::append_chunk`] call
+/// (in chunk index order), manifest and 24-byte trailer at
+/// [`StoreStreamWriter::finish`] — so `W` only needs [`Write`], never
+/// `Seek`, and a crash before `finish` leaves a file without the trailer,
+/// which readers reject with a precise "truncated or partially-written"
+/// error instead of decoding garbage.
+pub struct StoreStreamWriter<W: Write> {
+    out: W,
+    shape: Vec<usize>,
+    precision: Precision,
+    chunk_shape: Vec<usize>,
+    chains: Vec<CodecChainSpec>,
+    chunk_count: usize,
+    entries: Vec<ChunkEntry>,
+    /// Next payload byte offset (tracked, not seeked).
+    offset: u64,
+}
+
+impl<W: Write> StoreStreamWriter<W> {
+    /// Start a container: validates the grid, writes the head magic.
+    pub fn new(
+        mut out: W,
+        shape: &[usize],
+        precision: Precision,
+        chunk_shape: &[usize],
+        chains: Vec<CodecChainSpec>,
+    ) -> Result<Self> {
+        if chains.is_empty() {
+            bail!("store needs at least one codec chain (chain 0 is the default)");
+        }
+        let grid = ChunkGrid::new(shape, chunk_shape)?;
+        out.write_all(STORE_MAGIC).context("writing store header")?;
+        Ok(Self {
+            out,
+            shape: shape.to_vec(),
+            precision,
+            chunk_shape: chunk_shape.to_vec(),
+            chains,
+            chunk_count: grid.chunk_count(),
+            entries: Vec::with_capacity(grid.chunk_count()),
+            offset: STORE_MAGIC.len() as u64,
+        })
+    }
+
+    /// Number of chunks appended so far (the next expected chunk index).
+    pub fn chunks_written(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Spill the payload of the next chunk (in row-major grid order) to
+    /// the output and record its manifest entry. `chain` indexes the chain
+    /// table passed to [`StoreStreamWriter::new`].
+    pub fn append_chunk(&mut self, chain: usize, enc: &EncodedChunk) -> Result<()> {
+        if self.entries.len() >= self.chunk_count {
+            bail!(
+                "store already holds all {} chunks; nothing more to append",
+                self.chunk_count
+            );
+        }
+        if chain >= self.chains.len() {
+            bail!(
+                "chunk {} references chain {chain}, but the table has {} entries",
+                self.entries.len(),
+                self.chains.len()
+            );
+        }
+        self.out
+            .write_all(&enc.bytes)
+            .with_context(|| format!("writing payload of chunk {}", self.entries.len()))?;
+        self.entries.push(ChunkEntry {
+            offset: self.offset,
+            length: enc.bytes.len() as u64,
+            chain,
+            crc32: Some(crc32(&enc.bytes)),
+            stats: enc.stats,
+        });
+        self.offset += enc.bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Write the manifest and trailer, flush, and return the manifest plus
+    /// the total container size. Fails if any chunk is missing — a partial
+    /// container must never gain a valid trailer.
+    pub fn finish(mut self) -> Result<(Manifest, u64)> {
+        if self.entries.len() != self.chunk_count {
+            bail!(
+                "store finish with {} of {} chunks written",
+                self.entries.len(),
+                self.chunk_count
+            );
+        }
+        let manifest = Manifest {
+            shape: self.shape,
+            precision: self.precision,
+            chunk_shape: self.chunk_shape,
+            chains: self.chains,
+            chunks: self.entries,
+        };
+        let manifest_bytes = manifest.to_bytes();
+        self.out
+            .write_all(&manifest_bytes)
+            .context("writing manifest")?;
+        self.out
+            .write_all(&self.offset.to_le_bytes())
+            .context("writing trailer")?;
+        self.out
+            .write_all(&(manifest_bytes.len() as u64).to_le_bytes())
+            .context("writing trailer")?;
+        self.out.write_all(FOOTER_MAGIC).context("writing trailer")?;
+        self.out.flush().context("flushing store")?;
+        let total = self.offset + manifest_bytes.len() as u64 + FOOTER_LEN as u64;
+        Ok((manifest, total))
+    }
+}
+
+/// Encode `field` and stream the container to `out`: chunks are encoded on
+/// `opts.workers` threads and each payload is written by this thread as
+/// soon as it (and every earlier chunk) is done, holding at most
+/// `opts.window()` payloads in memory. Produces bytes identical to
+/// [`encode_store`] for any worker count.
+pub fn stream_store_to<W: Write>(
+    field: &Field,
+    chain: &CodecChainSpec,
+    opts: &StoreWriteOptions,
+    out: W,
+) -> Result<(Manifest, StoreWriteReport)> {
+    let t0 = Instant::now();
+    let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
+    let (chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
+    let built: Vec<CodecChain> = chains
+        .iter()
+        .map(CodecChain::from_spec)
+        .collect::<Result<_>>()?;
+    let mut writer = StoreStreamWriter::new(
+        out,
+        field.shape(),
+        field.precision(),
+        &opts.chunk_shape,
+        chains,
+    )?;
+
+    // Payload-bytes-in-flight gauge (encoded, not yet written): the
+    // peak-RSS proxy asserted by tests and reported by the bench.
+    let in_flight = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    par_try_map_ordered_sink(
+        grid.chunk_count(),
+        opts.workers,
+        opts.window(),
+        |i| {
+            let coords = grid.chunk_coords(i);
+            let origin = grid.chunk_origin(&coords);
+            let extent = grid.chunk_extent(&coords);
+            let chunk = Field::new(
+                &extent,
+                extract_subarray(field.data(), field.shape(), &origin, &extent),
+                field.precision(),
+            );
+            let enc = built[assign[i]]
+                .encode_chunk(&chunk)
+                .with_context(|| format!("encoding chunk {}", grid.chunk_key(i)))?;
+            let now = in_flight.fetch_add(enc.bytes.len(), Ordering::SeqCst) + enc.bytes.len();
+            peak.fetch_max(now, Ordering::SeqCst);
+            Ok(enc)
+        },
+        |i, enc| {
+            writer.append_chunk(assign[i], &enc)?;
+            in_flight.fetch_sub(enc.bytes.len(), Ordering::SeqCst);
+            Ok(())
+        },
+    )?;
+    let (manifest, total_bytes) = writer.finish()?;
+
+    let manifest_bytes = total_bytes as usize
+        - manifest.payload_bytes() as usize
+        - STORE_MAGIC.len()
+        - FOOTER_LEN;
+    let report = StoreWriteReport {
+        chunk_count: manifest.chunks.len(),
+        payload_bytes: manifest.payload_bytes() as usize,
+        manifest_bytes,
+        total_bytes: total_bytes as usize,
+        all_chunks_ok: manifest.all_chunks_ok(),
+        peak_payload_bytes: peak.load(Ordering::SeqCst),
+        streamed: true,
+        elapsed: t0.elapsed(),
+    };
+    Ok((manifest, report))
+}
+
+/// Encode `field` and write the store to `path`, **streaming** chunk
+/// payloads to the file as they complete (see [`stream_store_to`]); peak
+/// payload memory is bounded by `opts.window()` chunks. Use
+/// [`write_store_in_memory`] to assemble the container in memory first.
+///
+/// The stream goes to a `<path>.tmp` sibling that is renamed over `path`
+/// only after the trailer is flushed, so a failed or interrupted write
+/// never clobbers an existing archive at `path` and never leaves a
+/// trailer-less file under the final name.
 pub fn write_store(
+    field: &Field,
+    chain: &CodecChainSpec,
+    opts: &StoreWriteOptions,
+    path: &Path,
+) -> Result<StoreWriteReport> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    let file = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    let mut out = std::io::BufWriter::new(file);
+    let result = stream_store_to(field, chain, opts, &mut out)
+        .with_context(|| format!("writing {}", tmp.display()));
+    drop(out);
+    match result {
+        Ok((_, report)) => {
+            std::fs::rename(&tmp, path).with_context(|| {
+                format!("renaming {} to {}", tmp.display(), path.display())
+            })?;
+            Ok(report)
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// Encode `field` fully in memory, then write the store to `path` (the
+/// pre-streaming behavior; peak memory is payload + container).
+pub fn write_store_in_memory(
     field: &Field,
     chain: &CodecChainSpec,
     opts: &StoreWriteOptions,
@@ -259,5 +540,60 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("c/9/9"), "{err}");
+    }
+
+    #[test]
+    fn streaming_matches_in_memory_byte_for_byte() {
+        let field = GrfBuilder::new(&[12, 10]).lognormal(1.0).seed(3).build();
+        let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+        for workers in [1usize, 3] {
+            let opts = StoreWriteOptions::new(&[5, 4]).workers(workers).queue_depth(1);
+            let (mem, mem_manifest, mem_report) = encode_store(&field, &spec, &opts).unwrap();
+            let mut streamed = Vec::new();
+            let (manifest, report) =
+                stream_store_to(&field, &spec, &opts, &mut streamed).unwrap();
+            assert_eq!(streamed, mem, "workers={workers}: byte streams diverge");
+            assert_eq!(manifest, mem_manifest);
+            assert!(report.streamed && !mem_report.streamed);
+            assert_eq!(report.total_bytes, mem_report.total_bytes);
+            assert_eq!(report.manifest_bytes, mem_report.manifest_bytes);
+            assert!(report.peak_payload_bytes <= mem_report.peak_payload_bytes);
+        }
+    }
+
+    #[test]
+    fn stream_writer_guards_chunk_count_and_chain_index() {
+        let enc = EncodedChunk {
+            bytes: vec![1, 2, 3],
+            stats: crate::codec::ChunkStats::exact(),
+        };
+        // 2 × 1 grid: exactly two chunks, one chain.
+        let mut w = StoreStreamWriter::new(
+            Vec::<u8>::new(),
+            &[8, 4],
+            Precision::Double,
+            &[4, 4],
+            vec![CodecChainSpec::lossless()],
+        )
+        .unwrap();
+        assert!(w.append_chunk(1, &enc).is_err(), "chain index out of table");
+        w.append_chunk(0, &enc).unwrap();
+        assert_eq!(w.chunks_written(), 1);
+
+        // Finishing with a chunk missing must not mint a valid trailer.
+        let err = w.finish().unwrap_err().to_string();
+        assert!(err.contains("1 of 2"), "{err}");
+
+        let mut w = StoreStreamWriter::new(
+            Vec::<u8>::new(),
+            &[8, 4],
+            Precision::Double,
+            &[4, 4],
+            vec![CodecChainSpec::lossless()],
+        )
+        .unwrap();
+        w.append_chunk(0, &enc).unwrap();
+        w.append_chunk(0, &enc).unwrap();
+        assert!(w.append_chunk(0, &enc).is_err(), "third chunk on a 2-chunk grid");
     }
 }

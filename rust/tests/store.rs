@@ -12,7 +12,10 @@ use ffcz::correction::{BoundSpec, FfczConfig};
 use ffcz::data::synth::grf::GrfBuilder;
 use ffcz::data::{Field, Precision};
 use ffcz::encoding::{lossless_compress, pack_flags, varint};
-use ffcz::store::{encode_store, extract_subarray, ChunkGrid, Store, StoreWriteOptions};
+use ffcz::store::{
+    encode_store, extract_subarray, stream_store_to, write_store, write_store_in_memory,
+    ChunkGrid, Store, StoreWriteOptions,
+};
 use ffcz::util::XorShift;
 
 fn grf_3d(shape: &[usize], seed: u64) -> Field {
@@ -396,6 +399,119 @@ fn corrupt_and_truncated_stores_are_rejected() {
         format!("{err:#}").contains("CRC-32"),
         "payload corruption not attributed to checksums: {err:#}"
     );
+}
+
+/// Acceptance criterion: streaming and in-memory writers produce archives
+/// that decode identically — in fact byte-identically, manifest and
+/// trailer included, because the streaming sink consumes chunks in index
+/// order regardless of worker count.
+#[test]
+fn streaming_and_in_memory_writers_produce_identical_files() {
+    let field = grf_3d(&[12, 10, 8], 42);
+    let spec = ffcz_spec("sz-like");
+    let opts = StoreWriteOptions::new(&[5, 4, 3]).workers(3);
+    let dir = std::env::temp_dir().join("ffcz_stream_vs_mem_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let p_stream = dir.join("streamed.ffcz");
+    let p_mem = dir.join("in_memory.ffcz");
+
+    let r_stream = write_store(&field, &spec, &opts, &p_stream).unwrap();
+    let r_mem = write_store_in_memory(&field, &spec, &opts, &p_mem).unwrap();
+    assert!(r_stream.streamed, "write_store streams by default");
+    assert!(!r_mem.streamed);
+    assert_eq!(r_stream.total_bytes, r_mem.total_bytes);
+
+    let a = std::fs::read(&p_stream).unwrap();
+    let b = std::fs::read(&p_mem).unwrap();
+    assert_eq!(a, b, "streamed and in-memory files diverge");
+
+    // Both decode through the ordinary reader path (CRCs verified).
+    let fa = Store::open(&p_stream).unwrap().decompress_all(2).unwrap();
+    let fb = Store::from_bytes(b).unwrap().decompress_all(2).unwrap();
+    assert_eq!(fa.data(), fb.data());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance criterion: streaming a field ≥ 8× the chunk size never
+/// holds more than (workers + queue_depth) chunk payloads at once —
+/// asserted via the writer's payload-bytes-in-flight gauge — and the
+/// archive decodes fully through the existing reader with per-chunk CRC
+/// verification.
+#[test]
+fn streaming_write_bounds_payload_memory_and_roundtrips() {
+    // 4 × 2 × 1 = 8 chunks; 2 workers + queue 2 → in-flight window of 4.
+    let field = grf_3d(&[16, 8, 8], 47);
+    let opts = StoreWriteOptions::new(&[4, 4, 8]).workers(2).queue_depth(2);
+    assert_eq!(opts.window(), 4);
+
+    let mut bytes = Vec::new();
+    let (manifest, report) =
+        stream_store_to(&field, &CodecChainSpec::lossless(), &opts, &mut bytes).unwrap();
+    assert_eq!(manifest.chunks.len(), 8);
+    assert!(report.streamed);
+
+    let max_chunk = manifest.chunks.iter().map(|c| c.length).max().unwrap() as usize;
+    assert!(
+        report.peak_payload_bytes <= opts.window() * max_chunk,
+        "peak {} exceeds window {} × max chunk {}",
+        report.peak_payload_bytes,
+        opts.window(),
+        max_chunk
+    );
+    assert!(
+        report.peak_payload_bytes < report.payload_bytes,
+        "streaming held the entire payload ({} of {} bytes)",
+        report.peak_payload_bytes,
+        report.payload_bytes
+    );
+
+    // Full decode through the existing reader path, CRCs checked.
+    assert!(manifest.chunks.iter().all(|c| c.crc32.is_some()));
+    let store = Store::from_bytes(bytes).unwrap();
+    assert_eq!(store.decompress_all(2).unwrap().data(), field.data());
+}
+
+/// Acceptance criterion: cutting a streamed archive mid-chunk or
+/// mid-manifest fails open/decode with the precise truncation error (the
+/// trailer never made it to disk), via both the in-memory and the file
+/// open paths.
+#[test]
+fn truncated_archives_fail_with_a_precise_error() {
+    let field = grf_3d(&[8, 6, 4], 3);
+    let opts = StoreWriteOptions::new(&[4, 3, 2]).workers(2);
+    let dir = std::env::temp_dir().join("ffcz_truncation_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("full.ffcz");
+    write_store(&field, &CodecChainSpec::lossless(), &opts, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let manifest = Store::open(&path).unwrap().manifest().clone();
+
+    let footer_at = bytes.len() - 24;
+    let manifest_offset =
+        u64::from_le_bytes(bytes[footer_at..footer_at + 8].try_into().unwrap()) as usize;
+    let mid_chunk = (manifest.chunks[0].offset + manifest.chunks[0].length / 2) as usize;
+    let mid_manifest = manifest_offset + 5;
+    let mid_trailer = bytes.len() - 10;
+    for cut in [mid_chunk, mid_manifest, mid_trailer] {
+        assert!(cut > 8 && cut < bytes.len(), "cut {cut} out of range");
+        let err = Store::from_bytes(bytes[..cut].to_vec())
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("truncated or partially-written"),
+            "cut at {cut}: unspecific error: {err}"
+        );
+        let trunc = dir.join(format!("cut_{cut}.ffcz"));
+        std::fs::write(&trunc, &bytes[..cut]).unwrap();
+        let err = format!("{:#}", Store::open(&trunc).unwrap_err());
+        assert!(
+            err.contains("truncated or partially-written"),
+            "file cut at {cut}: unspecific error: {err}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
