@@ -1,22 +1,226 @@
 //! End-to-end FFCz correction benchmarks (Table III / Fig. 9 analogue):
-//! the full alternating-projection + edit-coding path across Δ regimes and
-//! field sizes, native engine vs PJRT artifact when available.
+//! the POCS engine comparison (full-complex reference vs the half-spectrum
+//! rfft path, single- and multi-threaded) across 1-D/2-D/3-D pow2 and
+//! Bluestein shapes — written to `BENCH_correction.json` so the correction
+//! kernel finally has a perf trajectory — plus the full
+//! alternating-projection + edit-coding path across Δ regimes and field
+//! sizes, native engine vs PJRT artifact when available.
 //!
-//! `cargo bench --bench correction`
+//! `cargo bench --bench correction`            # everything
+//! `cargo bench --bench correction -- --quick` # engine table only, small
+//!                                             # shapes (CI schema smoke)
 
 use ffcz::compressors::{szlike::SzLike, Compressor, ErrorBound};
-use ffcz::correction::{alternating_projection, Bounds, PocsParams};
+use ffcz::correction::{
+    alternating_projection, alternating_projection_reference, Bounds, PocsParams,
+};
 use ffcz::data::synth;
 use ffcz::fourier::Complex;
 use ffcz::util::bench::{black_box, Bench};
 
 fn main() {
-    println!("== correction benchmarks ==");
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("FFCZ_BENCH_QUICK").is_ok();
+    println!("== correction benchmarks{} ==", if quick { " (quick)" } else { "" });
+    pocs_engine_comparison(quick);
+    if quick {
+        return;
+    }
     for &scale in &[16usize, 32] {
         bench_scale(scale);
     }
     bench_pjrt();
     bench_predictor_ablation();
+}
+
+/// One measured configuration of the POCS loop.
+struct EngineRow {
+    name: &'static str,
+    shape: Vec<usize>,
+    /// "complex" (reference full-spectrum loop) or "rfft" (half-spectrum).
+    path: &'static str,
+    threads: usize,
+    iterations: usize,
+    median_s: f64,
+    ns_per_iter: f64,
+    /// Effective error-vector traffic: n·8 bytes per iteration.
+    gbps: f64,
+    /// vs the complex reference on the same shape (1.0 for the reference).
+    speedup: f64,
+}
+
+/// POCS-loop engine comparison: complex reference vs rfft fast path
+/// (threads 1/2/4 on the 3-D shapes), on pow2 and Bluestein shapes across
+/// dimensionalities. Emits `BENCH_correction.json` and prints a one-line
+/// summary per shape.
+fn pocs_engine_comparison(quick: bool) {
+    println!("== POCS engine: complex reference vs rfft half-spectrum ==");
+    // (name, shape, thread counts for the rfft path)
+    let shapes: Vec<(&'static str, Vec<usize>, Vec<usize>)> = if quick {
+        vec![
+            ("1d_pow2", vec![4096], vec![1]),
+            ("1d_bluestein", vec![600], vec![1]),
+            ("2d_pow2", vec![64, 64], vec![1]),
+            ("2d_bluestein", vec![60, 60], vec![1]),
+            ("3d_pow2", vec![16, 16, 16], vec![1, 2]),
+            ("3d_bluestein", vec![12, 12, 12], vec![1, 2]),
+        ]
+    } else {
+        vec![
+            ("1d_pow2", vec![65536], vec![1]),
+            ("1d_bluestein", vec![50000], vec![1]),
+            ("2d_pow2", vec![256, 256], vec![1, 2, 4]),
+            ("2d_bluestein", vec![200, 200], vec![1]),
+            ("3d_pow2", vec![64, 64, 64], vec![1, 2, 4]),
+            ("3d_bluestein", vec![40, 40, 40], vec![1, 2, 4]),
+        ]
+    };
+    let samples = if quick { 2 } else { 5 };
+    let mut rows: Vec<EngineRow> = Vec::new();
+
+    for &(name, ref shape, ref thread_counts) in &shapes {
+        let n: usize = shape.iter().product();
+        let e = 0.1;
+        let mut rng = ffcz::util::XorShift::new(3000 + n as u64);
+        let eps0: Vec<f64> = (0..n).map(|_| rng.uniform(-e, e)).collect();
+        // Mid regime: tail clipping with a couple of alternations — the
+        // shape-independent Δ scaling from the property tests.
+        let d = 0.25 * e * (n as f64).sqrt();
+        let params = PocsParams {
+            spatial: Bounds::Global(e),
+            frequency: Bounds::Global(d),
+            max_iters: 500,
+            threads: 1,
+        };
+
+        // Reference full-complex loop.
+        let reference = alternating_projection_reference(&eps0, shape, &params);
+        let iters = reference.iterations;
+        let bytes = n * 8 * iters.max(1);
+        let r = Bench::new(format!("pocs_complex_{name}"))
+            .bytes(bytes)
+            .samples(samples)
+            .run(|| black_box(alternating_projection_reference(&eps0, shape, &params)));
+        println!("{}   [{} iters]", r.report(), iters);
+        let ref_median = r.median.as_secs_f64();
+        rows.push(EngineRow {
+            name,
+            shape: shape.clone(),
+            path: "complex",
+            threads: 1,
+            iterations: iters,
+            median_s: ref_median,
+            ns_per_iter: ref_median / iters.max(1) as f64 * 1e9,
+            gbps: r.gbps().unwrap_or(0.0),
+            speedup: 1.0,
+        });
+
+        // Half-spectrum fast path at each thread count. Each row is
+        // normalized by its *own* iteration count (the engines can differ
+        // by one at a rounding-level convergence boundary), and the
+        // speedup compares per-iteration times so a convergence-count
+        // difference never inflates it.
+        let ref_ns_per_iter = ref_median / iters.max(1) as f64 * 1e9;
+        for &threads in thread_counts {
+            let params_t = PocsParams {
+                threads,
+                ..params.clone()
+            };
+            let fast = alternating_projection(&eps0, shape, &params_t);
+            let fast_iters = fast.iterations;
+            if fast_iters != iters {
+                println!(
+                    "(note: engines ran {fast_iters} vs {iters} iterations on {name} — \
+                     rounding-level convergence-check difference; rows are per-iteration)"
+                );
+            }
+            let r = Bench::new(format!("pocs_rfft_{name}_t{threads}"))
+                .bytes(n * 8 * fast_iters.max(1))
+                .samples(samples)
+                .run(|| black_box(alternating_projection(&eps0, shape, &params_t)));
+            let median = r.median.as_secs_f64();
+            let ns_per_iter = median / fast_iters.max(1) as f64 * 1e9;
+            let speedup = ref_ns_per_iter / ns_per_iter;
+            println!(
+                "{}   [{} iters, {:.2}x vs complex]",
+                r.report(),
+                fast_iters,
+                speedup
+            );
+            rows.push(EngineRow {
+                name,
+                shape: shape.clone(),
+                path: "rfft",
+                threads,
+                iterations: fast_iters,
+                median_s: median,
+                ns_per_iter,
+                gbps: r.gbps().unwrap_or(0.0),
+                speedup,
+            });
+        }
+    }
+
+    // One-line summary table.
+    println!("-- POCS loop summary (ns/iter) --");
+    println!(
+        "{:<14} {:>14} {:>14} {:>9} {:>14} {:>9}",
+        "shape", "complex", "rfft t1", "speedup", "rfft tmax", "speedup"
+    );
+    for (name, shape, _) in &shapes {
+        let find = |path: &str, max: bool| {
+            rows.iter()
+                .filter(|r| r.name == *name && r.path == path)
+                .max_by_key(|r| if max { r.threads } else { usize::MAX - r.threads })
+        };
+        let (c, t1, tm) = (
+            find("complex", true),
+            find("rfft", false),
+            find("rfft", true),
+        );
+        if let (Some(c), Some(t1), Some(tm)) = (c, t1, tm) {
+            println!(
+                "{:<14} {:>14.0} {:>14.0} {:>8.2}x {:>11.0}/t{} {:>8.2}x",
+                format!("{name} {shape:?}"),
+                c.ns_per_iter,
+                t1.ns_per_iter,
+                t1.speedup,
+                tm.ns_per_iter,
+                tm.threads,
+                tm.speedup
+            );
+        }
+    }
+
+    // Hand-rolled JSON (no serde in the offline crate universe).
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"correction_pocs\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let shape: Vec<String> = r.shape.iter().map(|s| s.to_string()).collect();
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"shape\": [{}], \"path\": \"{}\", \"threads\": {}, \
+             \"iterations\": {}, \"median_s\": {:.6}, \"ns_per_iter\": {:.1}, \
+             \"gbps\": {:.4}, \"speedup_vs_complex\": {:.3}}}{}\n",
+            r.name,
+            shape.join(", "),
+            r.path,
+            r.threads,
+            r.iterations,
+            r.median_s,
+            r.ns_per_iter,
+            r.gbps,
+            r.speedup,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write("BENCH_correction.json", &json) {
+        eprintln!("warning: could not write BENCH_correction.json: {e}");
+    } else {
+        println!("wrote BENCH_correction.json");
+    }
 }
 
 fn bench_scale(scale: usize) {
@@ -56,6 +260,7 @@ fn bench_scale(scale: usize) {
             spatial: Bounds::Global(e_abs),
             frequency: Bounds::Global(d_abs),
             max_iters: 500,
+            threads: 1,
         };
         let shape = field.shape().to_vec();
         let r = Bench::new(format!("pocs_{scale}cubed_{regime}"))
@@ -105,6 +310,7 @@ fn bench_pjrt() {
         spatial: Bounds::Global(0.05),
         frequency: Bounds::Global(1.0),
         max_iters: 64,
+        threads: 1,
     };
     let r = Bench::new("native_correct_1d_4096")
         .bytes(4096 * 8)

@@ -9,7 +9,7 @@ use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
 use ffcz::correction::{correct_reconstruction, FfczConfig};
 use ffcz::data::synth;
 use ffcz::codec::CodecChainSpec;
-use ffcz::store::{encode_store, write_store, StoreWriteOptions};
+use ffcz::store::{encode_store, write_store, Store, StoreWriteOptions};
 use ffcz::util::bench::{black_box, Bench};
 
 fn main() {
@@ -96,6 +96,60 @@ fn store_comparison() {
         ));
     }
     let _ = std::fs::remove_file(&stream_path);
+
+    // Overlapping read_region windows: decoded-chunk LRU vs cold decode.
+    // A sliding 16³ window over the 32³ field re-touches most chunks every
+    // step; the byte budget holds the whole decoded field (8 × 16³ chunks).
+    {
+        let opts = StoreWriteOptions::new(&[16, 16, 16]).workers(2);
+        let (store_bytes, _, _) = encode_store(&field, &spec, &opts).unwrap();
+        let windows: Vec<[usize; 3]> = (0..=16)
+            .step_by(4)
+            .map(|o| [o, (o / 2) & !1usize, 0])
+            .collect();
+        let region = [16usize, 16, 16];
+        let read_all = |store: &Store| {
+            let mut total = 0usize;
+            for w in &windows {
+                total += store.read_region(w, &region, 2).unwrap().len();
+            }
+            total
+        };
+
+        let cold = Store::from_bytes(store_bytes.clone()).unwrap();
+        let r = Bench::new("read_region_cold".to_string())
+            .bytes(windows.len() * region.iter().product::<usize>() * 8)
+            .samples(3)
+            .run(|| black_box(read_all(&cold)));
+        println!("{}   [{} chunk decodes]", r.report(), cold.chunks_decoded());
+        rows.push((
+            "read_region_cold".to_string(),
+            r.median.as_secs_f64(),
+            r.gbps().unwrap_or(0.0),
+            0,
+        ));
+
+        let cached = Store::from_bytes(store_bytes).unwrap();
+        cached.set_cache_budget(field.len() * 8);
+        read_all(&cached); // warm
+        let r = Bench::new("read_region_lru".to_string())
+            .bytes(windows.len() * region.iter().product::<usize>() * 8)
+            .samples(3)
+            .run(|| black_box(read_all(&cached)));
+        println!(
+            "{}   [{} hits / {} misses, {} decodes total]",
+            r.report(),
+            cached.cache_hits(),
+            cached.cache_misses(),
+            cached.chunks_decoded()
+        );
+        rows.push((
+            "read_region_lru".to_string(),
+            r.median.as_secs_f64(),
+            r.gbps().unwrap_or(0.0),
+            0,
+        ));
+    }
 
     // Hand-rolled JSON (no serde in the offline crate universe).
     let mut json = String::new();

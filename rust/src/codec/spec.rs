@@ -20,6 +20,10 @@
 //! bytes stages     varint count, then per stage varint name len · name
 //! ```
 //!
+//! The correction stage's `threads` field (POCS transform parallelism) is
+//! an execution knob with no effect on the encoded bytes; it is **not**
+//! part of the wire format and parses as 1.
+//!
 //! where a *bound spec* is `u8 tag (0 = absolute, 1 = relative) · f64 LE`
 //! and a *frequency bound* is `u8 tag (0 = uniform absolute, 1 = uniform
 //! relative, 2 = power-spectrum relative) · f64 LE`.
@@ -58,7 +62,7 @@ pub enum ArrayStage {
 /// stage's spatial bound this is a complete [`FfczConfig`] — including the
 /// absolute and power-spectrum frequency modes the legacy store codec
 /// could not express.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct CorrectionStage {
     /// Frequency bound Δ (uniform absolute/relative, or power-spectrum
     /// relative — Fig. 10 mode).
@@ -67,6 +71,23 @@ pub struct CorrectionStage {
     pub max_iters: usize,
     /// Bound-shrink retry ladder for quantization.
     pub max_quant_retries: usize,
+    /// OS threads for the POCS transforms (`FfczConfig::threads`). An
+    /// *execution* knob, not codec identity: the encoded bytes are
+    /// identical for every value, so it is **not serialized** (decoders
+    /// always see 1) and is excluded from equality.
+    pub threads: usize,
+}
+
+/// `threads` is an execution knob, not part of the codec's identity — two
+/// stages that differ only in thread count produce byte-identical chunks,
+/// so they compare equal (and the wire roundtrip, which drops `threads`,
+/// stays an identity).
+impl PartialEq for CorrectionStage {
+    fn eq(&self, other: &Self) -> bool {
+        self.frequency == other.frequency
+            && self.max_iters == other.max_iters
+            && self.max_quant_retries == other.max_quant_retries
+    }
 }
 
 /// One named bytes→bytes stage.
@@ -131,6 +152,7 @@ impl CodecChainSpec {
                 frequency: cfg.frequency.clone(),
                 max_iters: cfg.max_iters,
                 max_quant_retries: cfg.max_quant_retries,
+                threads: cfg.threads,
             }),
             bytes: Vec::new(),
         }
@@ -168,6 +190,7 @@ impl CodecChainSpec {
             frequency: correction.frequency.clone(),
             max_iters: correction.max_iters,
             max_quant_retries: correction.max_quant_retries,
+            threads: correction.threads.max(1),
         })
     }
 
@@ -177,9 +200,14 @@ impl CodecChainSpec {
             ArrayStage::RawF64 => "raw-f64 (bit-exact)".to_string(),
             ArrayStage::Base { name, spatial } => match (&self.correction, spatial) {
                 (Some(c), _) => format!(
-                    "{name} + FFCz ({}, {}, per chunk)",
+                    "{name} + FFCz ({}, {}, per chunk{})",
                     describe_bound("eb", spatial),
                     describe_frequency(&c.frequency),
+                    if c.threads > 1 {
+                        format!(", {} threads", c.threads)
+                    } else {
+                        String::new()
+                    },
                 ),
                 (None, s) => format!(
                     "{name} ({}, per chunk, no frequency bound)",
@@ -248,6 +276,9 @@ impl CodecChainSpec {
                     frequency,
                     max_iters,
                     max_quant_retries,
+                    // Execution knob, never serialized: decoders run
+                    // single-threaded unless the caller overrides.
+                    threads: 1,
                 })
             }
             x => bail!("bad correction flag {x} in codec chain spec"),
@@ -429,6 +460,7 @@ mod tests {
                     frequency: FrequencyBound::Uniform(BoundSpec::Relative(2e-3)),
                     max_iters: 77,
                     max_quant_retries: 2,
+                    threads: 1,
                 },
             ),
             CodecChainSpec::base_only("identity", BoundSpec::Relative(1e-6))
@@ -457,6 +489,26 @@ mod tests {
         assert_eq!(back.max_iters, cfg.max_iters);
         assert_eq!(back.max_quant_retries, cfg.max_quant_retries);
         assert!(CodecChainSpec::lossless().ffcz_config().is_none());
+    }
+
+    #[test]
+    fn threads_knob_is_execution_only() {
+        // In memory, the knob propagates into the implied FfczConfig …
+        let cfg = FfczConfig::relative(1e-3, 1e-3).with_threads(4);
+        let spec = CodecChainSpec::ffcz("sz-like", &cfg);
+        assert_eq!(spec.ffcz_config().unwrap().threads, 4);
+        // … but it is not codec identity: the wire roundtrip drops it and
+        // the specs still compare equal (byte-identical chunks).
+        let bytes = spec.to_bytes();
+        assert_eq!(
+            bytes,
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3)).to_bytes(),
+            "threads must not leak into the wire format"
+        );
+        let mut pos = 0;
+        let back = CodecChainSpec::from_bytes(&bytes, &mut pos).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.ffcz_config().unwrap().threads, 1);
     }
 
     #[test]

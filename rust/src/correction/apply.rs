@@ -4,41 +4,56 @@
 //! The complete spatial-domain correction is
 //! `spat_edits + Re(IFFT(freq_edits))`; added to the base reconstruction it
 //! yields the final dual-domain-bounded output.
+//!
+//! The stored edit streams index the *full* spectrum (the wire format is
+//! unchanged), but the output of `Re(IFFT(·))` only depends on the
+//! Hermitian part of the edits — so the inverse runs on the half spectrum:
+//! fold the dense vector ([`HalfSpectrum::fold_full`], which is exactly
+//! the Hermitian projection `Re(IFFT(F)) == irfftn(fold(F))`), then a real
+//! inverse at half the transform cost.
 
 use anyhow::Result;
 
 use super::EditsBlock;
 use crate::data::Field;
-use crate::fourier::{ifftn_inplace, Complex};
+use crate::fourier::{irfftn, rfftn, Complex, HalfSpectrum};
+
+/// `Re(IFFT(freq))` of a dense full-layout frequency vector, via the
+/// Hermitian fold + half-spectrum inverse (half the transform work of the
+/// complex `ifftn` it replaced; identical output up to rounding for any
+/// input, Hermitian or not).
+fn real_ifftn(freq: &[Complex], shape: &[usize]) -> Vec<f64> {
+    irfftn(&HalfSpectrum::fold_full(freq, shape))
+}
 
 /// Corrected spatial error vector: `ε₀ + spat + IFFT(freq)` (real part).
 pub fn corrected_eps(eps0: &[f64], edits: &EditsBlock, shape: &[usize]) -> Vec<f64> {
-    let (spat, mut freq) = edits.dense();
-    ifftn_inplace(&mut freq, shape);
+    let (spat, freq) = edits.dense();
+    let freq_s = real_ifftn(&freq, shape);
     eps0.iter()
         .zip(&spat)
-        .zip(&freq)
-        .map(|((&e, &s), f)| e + s + f.re)
+        .zip(&freq_s)
+        .map(|((&e, &s), &f)| e + s + f)
         .collect()
 }
 
 /// Apply edits to a base reconstruction.
 pub fn apply_edits(recon0: &Field, edits: &EditsBlock) -> Result<Field> {
     let shape = recon0.shape().to_vec();
-    let (spat, mut freq) = edits.dense();
+    let (spat, freq) = edits.dense();
     anyhow::ensure!(
         spat.len() == recon0.len(),
         "edit length {} != field length {}",
         spat.len(),
         recon0.len()
     );
-    ifftn_inplace(&mut freq, &shape);
+    let freq_s = real_ifftn(&freq, &shape);
     let data: Vec<f64> = recon0
         .data()
         .iter()
         .zip(&spat)
-        .zip(&freq)
-        .map(|((&r, &s), f)| r + s + f.re)
+        .zip(&freq_s)
+        .map(|((&r, &s), &f)| r + s + f)
         .collect();
     Ok(recon0.with_data(data))
 }
@@ -47,17 +62,17 @@ pub fn apply_edits(recon0: &Field, edits: &EditsBlock) -> Result<Field> {
 /// Fig. 5, fourth column): `freq_edits + FFT(spat_edits)`.
 pub fn total_frequency_edits(edits: &EditsBlock, shape: &[usize]) -> Vec<Complex> {
     let (spat, freq) = edits.dense();
-    let mut spat_c: Vec<Complex> = spat.iter().map(|&v| Complex::new(v, 0.0)).collect();
-    crate::fourier::fftn_inplace(&mut spat_c, shape);
+    // spat is real: its full spectrum is the expanded half spectrum.
+    let spat_c = rfftn(&spat, shape).expand();
     freq.iter().zip(&spat_c).map(|(a, b)| *a + *b).collect()
 }
 
 /// The complete edits expressed purely in the *spatial* domain:
 /// `spat_edits + IFFT(freq_edits)`.
 pub fn total_spatial_edits(edits: &EditsBlock, shape: &[usize]) -> Vec<f64> {
-    let (spat, mut freq) = edits.dense();
-    ifftn_inplace(&mut freq, shape);
-    spat.iter().zip(&freq).map(|(&s, f)| s + f.re).collect()
+    let (spat, freq) = edits.dense();
+    let freq_s = real_ifftn(&freq, shape);
+    spat.iter().zip(&freq_s).map(|(&s, &f)| s + f).collect()
 }
 
 #[cfg(test)]

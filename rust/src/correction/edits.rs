@@ -165,6 +165,14 @@ pub struct QuantizedComplexEdits {
 }
 
 impl QuantizedComplexEdits {
+    /// Quantize frequency edits kept in half-spectrum layout by the POCS
+    /// fast path: the dense Hermitian vector is materialized here — once,
+    /// at the cold coding boundary — so the stored stream (and therefore
+    /// the archive bytes) are identical to quantizing the full vector.
+    pub fn quantize_half(edits: &crate::fourier::HalfSpectrum) -> Self {
+        Self::quantize(&edits.expand())
+    }
+
     pub fn quantize(edits: &[Complex]) -> Self {
         let re: Vec<f64> = edits.iter().map(|c| c.re).collect();
         let im: Vec<f64> = edits.iter().map(|c| c.im).collect();
@@ -332,6 +340,17 @@ pub struct PointwiseQuantizedEdits {
 }
 
 impl PointwiseQuantizedEdits {
+    /// Half-spectrum-layout counterpart of
+    /// [`PointwiseQuantizedEdits::quantize`] (see
+    /// [`QuantizedComplexEdits::quantize_half`]).
+    pub fn quantize_half(
+        edits: &crate::fourier::HalfSpectrum,
+        bound_at: impl Fn(usize) -> f64,
+        gap: f64,
+    ) -> Self {
+        Self::quantize(&edits.expand(), bound_at, gap)
+    }
+
     /// Quantize a dense complex edit vector against pointwise bounds:
     /// each active component gets the largest power-of-two step
     /// `≤ bound_at(k)·gap`, so dequantization error ≤ `Δ_k·gap/2`.

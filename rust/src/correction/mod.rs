@@ -23,10 +23,13 @@ use anyhow::{bail, Result};
 use crate::compressors::{Compressor, ErrorBound};
 use crate::data::Field;
 use crate::encoding::{lossless_compress, lossless_decompress, varint};
-use crate::fourier::{fftn, Complex};
+use crate::fourier::{for_each_full_bin, rfftn, Complex, HalfSpectrum};
 
 pub use edits::{PointwiseQuantizedEdits, QuantizedComplexEdits, QuantizedEdits, QUANT_BITS};
-pub use pocs::{alternating_projection, check_dual_bounds, Bounds, PocsParams, PocsResult};
+pub use pocs::{
+    alternating_projection, alternating_projection_reference, check_dual_bounds, Bounds,
+    PocsParams, PocsResult,
+};
 
 /// How a bound is specified.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -60,6 +63,11 @@ pub struct FfczConfig {
     pub max_iters: usize,
     /// Bound-shrink retry ladder for quantization (see module docs).
     pub max_quant_retries: usize,
+    /// OS threads for the N-D line transforms inside the POCS loop. An
+    /// *execution* knob, not codec identity: the correction (and the
+    /// archive bytes) are bit-identical for every value, so it is never
+    /// serialized into specs or manifests.
+    pub threads: usize,
 }
 
 impl FfczConfig {
@@ -70,6 +78,7 @@ impl FfczConfig {
             frequency: FrequencyBound::Uniform(BoundSpec::Relative(frequency)),
             max_iters: 200,
             max_quant_retries: 3,
+            threads: 1,
         }
     }
 
@@ -80,6 +89,7 @@ impl FfczConfig {
             frequency: FrequencyBound::Uniform(BoundSpec::Absolute(frequency)),
             max_iters: 200,
             max_quant_retries: 3,
+            threads: 1,
         }
     }
 
@@ -91,7 +101,14 @@ impl FfczConfig {
             frequency: FrequencyBound::PowerSpectrumRelative(spectrum_rel),
             max_iters: 200,
             max_quant_retries: 3,
+            threads: 1,
         }
+    }
+
+    /// Set the POCS transform thread count (builder style).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 }
 
@@ -118,8 +135,10 @@ pub fn resolve_bounds(field: &Field, cfg: &FfczConfig) -> ResolvedBounds {
     let frequency = match &cfg.frequency {
         FrequencyBound::Uniform(BoundSpec::Absolute(v)) => Bounds::Global(*v),
         FrequencyBound::Uniform(BoundSpec::Relative(r)) => {
-            let spec = field_fft(field);
-            let max_mag = spec.iter().map(|c| c.abs()).fold(0.0f64, f64::max);
+            // max_k |X_k| over the half spectrum equals the full-lattice
+            // max (conjugation preserves magnitude).
+            let spec = field_half_spectrum(field);
+            let max_mag = spec.data().iter().map(|c| c.abs()).fold(0.0f64, f64::max);
             Bounds::Global(r * max_mag.max(f64::MIN_POSITIVE))
         }
         FrequencyBound::PowerSpectrumRelative(p) => {
@@ -131,14 +150,18 @@ pub fn resolve_bounds(field: &Field, cfg: &FfczConfig) -> ResolvedBounds {
             // DC error). The DC component itself is pinned to the floor
             // bound so the mean shift is negligible; zero/near-zero modes
             // get the same floor so the f-cube stays satisfiable.
-            let spec = field_fft(field);
+            //
+            // Built from the half spectrum: mirrored bins read the same
+            // stored magnitude, so `Δ_{−k} == Δ_k` holds *exactly* — which
+            // is what keeps the POCS fast path on the half spectrum.
+            let spec = field_half_spectrum(field);
             let r = (1.0 + 0.9 * p).sqrt() - 1.0;
-            let max_mag = spec.iter().map(|c| c.abs()).fold(0.0f64, f64::max);
+            let max_mag = spec.data().iter().map(|c| c.abs()).fold(0.0f64, f64::max);
             let floor = r * 1e-4 * max_mag.max(f64::MIN_POSITIVE);
-            let mut per: Vec<f64> = spec
-                .iter()
-                .map(|c| (r * c.abs() / std::f64::consts::SQRT_2).max(floor))
-                .collect();
+            let mut per = vec![0.0f64; field.len()];
+            for_each_full_bin(field.shape(), |full, half, _conj| {
+                per[full] = (r * spec.data()[half].abs() / std::f64::consts::SQRT_2).max(floor);
+            });
             per[0] = floor; // pin DC: preserve the mean
             spectral_rule = Some((r, floor));
             Bounds::Pointwise(per)
@@ -151,9 +174,10 @@ pub fn resolve_bounds(field: &Field, cfg: &FfczConfig) -> ResolvedBounds {
     }
 }
 
-fn field_fft(field: &Field) -> Vec<Complex> {
-    let buf: Vec<Complex> = field.data().iter().map(|&v| Complex::new(v, 0.0)).collect();
-    fftn(&buf, field.shape())
+/// Half spectrum of the original (real) field — the bound-resolution
+/// transform at half the cost of the full `fftn` it replaced.
+fn field_half_spectrum(field: &Field) -> HalfSpectrum {
+    rfftn(field.data(), field.shape())
 }
 
 /// Stored edit payload: quantized in the common case (with an optional
@@ -486,6 +510,7 @@ pub fn correct_reconstruction(
             spatial: bounds.spatial.scaled(shrink),
             frequency: bounds.frequency.scaled(shrink),
             max_iters: cfg.max_iters,
+            threads: cfg.threads,
         };
         let result = alternating_projection(&eps0, shape, &params);
         stats.quant_attempts = attempt + 1;
@@ -498,6 +523,10 @@ pub fn correct_reconstruction(
             );
         }
         let spat_q = QuantizedEdits::quantize(&result.spat_edits);
+        // The projector keeps frequency edits in half-spectrum layout; the
+        // quantizers expand to the full Hermitian vector here — once, at
+        // the cold coding boundary — so the stored stream (and the archive
+        // bytes) are unchanged.
         let block = if matches!(bounds.frequency, Bounds::Pointwise(_)) {
             // Pointwise bounds: per-component steps a factor `gap` below
             // each Δ_k, so quantization error stays inside this attempt's
@@ -506,7 +535,7 @@ pub fn correct_reconstruction(
             let fb = &bounds.frequency;
             EditsBlock::PointwiseQuantized {
                 spat: spat_q.clone(),
-                freq: PointwiseQuantizedEdits::quantize(
+                freq: PointwiseQuantizedEdits::quantize_half(
                     &result.freq_edits,
                     |k| fb.at(k),
                     gap,
@@ -515,7 +544,7 @@ pub fn correct_reconstruction(
         } else {
             EditsBlock::Quantized {
                 spat: spat_q.clone(),
-                freq: QuantizedComplexEdits::quantize(&result.freq_edits),
+                freq: QuantizedComplexEdits::quantize_half(&result.freq_edits),
                 patch: Vec::new(),
             }
         };
@@ -534,19 +563,21 @@ pub fn correct_reconstruction(
         // and re-verified before committing.
         if let EditsBlock::Quantized { freq: freq_q, .. } = &block {
             let eps_q = apply::corrected_eps(&eps0, &block, shape);
-            let mut delta_q: Vec<Complex> =
-                eps_q.iter().map(|&e| Complex::new(e, 0.0)).collect();
-            crate::fourier::fftn_inplace(&mut delta_q, shape);
+            // δ of the (real) quantized error vector, via the half
+            // spectrum; mirror bins are read conjugated.
+            let spec_q = rfftn(&eps_q, shape);
             let target = bounds.frequency.scaled(shrink);
             let mut patch_list: Vec<(u32, f64, f64)> = Vec::new();
-            for (k, d) in delta_q.iter().enumerate() {
-                if d.linf() > bounds.frequency.at(k) {
-                    let t = target.at(k);
+            for_each_full_bin(shape, |full, half, conj| {
+                let stored = spec_q.data()[half];
+                let d = if conj { stored.conj() } else { stored };
+                if d.linf() > bounds.frequency.at(full) {
+                    let t = target.at(full);
                     let re = d.re.clamp(-t, t) - d.re;
                     let im = d.im.clamp(-t, t) - d.im;
-                    patch_list.push((k as u32, re, im));
+                    patch_list.push((full as u32, re, im));
                 }
-            }
+            });
             // Patching only pays off while it is sparse.
             if patch_list.len() <= eps0.len() / 20 {
                 let patched = EditsBlock::Quantized {
@@ -573,6 +604,7 @@ pub fn correct_reconstruction(
                 spatial: bounds.spatial.clone(),
                 frequency: bounds.frequency.clone(),
                 max_iters: cfg.max_iters,
+                threads: cfg.threads,
             };
             let result = alternating_projection(&eps0, shape, &params);
             if !result.converged {
@@ -587,6 +619,7 @@ pub fn correct_reconstruction(
                 .collect();
             let freq: Vec<(u32, f64, f64)> = result
                 .freq_edits
+                .expand()
                 .iter()
                 .enumerate()
                 .filter(|(_, c)| c.re != 0.0 || c.im != 0.0)

@@ -10,11 +10,30 @@
 //! 3. `ε = IFFT(δ)`; project onto the **s-cube** by clipping `ε` to
 //!    `±E_n`, recording the displacement as *spatial edits*.
 //!
-//! Because the input is real and the per-component bounds are symmetric
-//! under Hermitian conjugation, clipping preserves Hermitian symmetry and
-//! `ε` stays real throughout (we drop rounding-level imaginary residue).
+//! Because `ε` is real and the per-component bounds are Hermitian-symmetric
+//! (`Δ_{−k} = Δ_k` — always true for the bounds this crate derives, since
+//! pointwise bounds come from `|X_k|` of a real field), the spectrum stays
+//! Hermitian through every projection. [`alternating_projection`] therefore
+//! runs the whole loop on the **half spectrum** via
+//! [`NdRealFft`]: half the transform arithmetic, half the clip work, half
+//! the memory traffic, with frequency edits accumulated in
+//! [`HalfSpectrum`] layout and expanded only at the (cold) quantization
+//! boundary. Transforms reuse one [`NdFftWorkspace`] across iterations, so
+//! the steady state allocates nothing, and `threads` fans the N-D line
+//! transforms across OS threads (bit-identical output for any count).
+//!
+//! [`alternating_projection_reference`] keeps the original full-complex
+//! loop as the correctness oracle; property tests assert the two agree to
+//! 1e-10. If pointwise frequency bounds are *not* Hermitian-symmetric
+//! (impossible through [`crate::correction::resolve_bounds`], but reachable
+//! through the public `Bounds` API), the fast path detects it and falls
+//! back to the reference loop, so the projection is correct for every
+//! input.
 
-use crate::fourier::{fftn_inplace, ifftn_inplace, Complex};
+use crate::fourier::{
+    fftn_inplace, for_each_full_bin, ifftn_inplace, Complex, HalfSpectrum, NdFftWorkspace,
+    NdRealFft,
+};
 
 /// Per-axis bounds: one global scalar or a full pointwise vector.
 #[derive(Debug, Clone)]
@@ -48,15 +67,17 @@ pub struct PocsResult {
     pub corrected_eps: Vec<f64>,
     /// Cumulative spatial edits (length N; sparse in practice).
     pub spat_edits: Vec<f64>,
-    /// Cumulative frequency edits (length N complex; sparse in practice).
-    pub freq_edits: Vec<Complex>,
+    /// Cumulative frequency edits in half-spectrum layout (sparse in
+    /// practice; [`HalfSpectrum::expand`] recovers the full Hermitian
+    /// vector on demand).
+    pub freq_edits: HalfSpectrum,
     /// Number of loop iterations executed (paper Table III).
     pub iterations: usize,
     /// Whether the loop hit the f-cube constraint before `max_iters`.
     pub converged: bool,
     /// Count of nonzero spatial edits.
     pub active_spat: usize,
-    /// Count of frequency components with a nonzero edit.
+    /// Count of full-spectrum frequency components with a nonzero edit.
     pub active_freq: usize,
 }
 
@@ -70,11 +91,173 @@ pub struct PocsParams {
     pub frequency: Bounds,
     /// Iteration cap; the paper observes 1–100 iterations in practice.
     pub max_iters: usize,
+    /// OS threads for the N-D line transforms inside the loop (1 =
+    /// single-threaded; the result is bit-identical for every value).
+    pub threads: usize,
 }
+
+/// Relative FFT-roundoff tolerance for the convergence check: a bound
+/// exceedance is only *significant* (keeps the loop running) beyond this
+/// margin — without it the loop can chase 1-ulp exceedances forever.
+const VIOLATION_SLACK: f64 = 1.0 + 1e-10;
 
 /// Run the alternating projection on the spatial error vector `eps0` of a
 /// row-major field with `shape`.
+///
+/// This is the half-spectrum fast path (see the module docs); it produces
+/// the same corrections as [`alternating_projection_reference`] up to FFT
+/// rounding (≤ 1e-10 relative, asserted by the property tests).
 pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams) -> PocsResult {
+    let n = eps0.len();
+    debug_assert_eq!(n, shape.iter().product::<usize>());
+    // The half-spectrum projection is only equivalent when clipping a bin
+    // also clips its Hermitian mate identically. Asymmetric pointwise
+    // bounds (never produced by this crate's bound resolution) go through
+    // the full-spectrum reference loop instead.
+    if let Bounds::Pointwise(v) = &params.frequency {
+        if !bounds_hermitian_symmetric(v, shape) {
+            return alternating_projection_reference(eps0, shape, params);
+        }
+    }
+    let threads = params.threads.max(1);
+    let plan = NdRealFft::new(shape);
+    let last = shape[shape.len() - 1];
+    let h = last / 2 + 1;
+    let h_total = plan.half_len();
+    let rows = h_total / h;
+    let mut ws = NdFftWorkspace::new();
+
+    let mut eps: Vec<f64> = eps0.to_vec();
+    let mut spec = vec![Complex::ZERO; h_total];
+    let mut spat_edits = vec![0.0f64; n];
+    let mut freq_half = vec![Complex::ZERO; h_total];
+    let mut iterations = 0usize;
+    let mut converged = false;
+
+    while iterations < params.max_iters {
+        iterations += 1;
+        // δ = FFT(ε), half spectrum only.
+        plan.forward(&eps, &mut spec, threads, &mut ws);
+
+        // Convergence check + f-cube projection fused in one pass over the
+        // half bins. Clipping a stored bin implicitly clips its Hermitian
+        // mate (conjugate value, equal bound), exactly as the reference
+        // clips both. Sub-tolerance exceedances are still clipped (and
+        // recorded) before terminating. The Global/Pointwise dispatch is
+        // hoisted out of the hot loop.
+        let mut violated = false;
+        let mut clip_f = |hk: usize, d: f64, spec: &mut [Complex]| {
+            let v = spec[hk];
+            let re = v.re.clamp(-d, d);
+            let im = v.im.clamp(-d, d);
+            if re != v.re || im != v.im {
+                if v.linf() > d * VIOLATION_SLACK {
+                    violated = true;
+                }
+                let clipped = Complex::new(re, im);
+                freq_half[hk] += clipped - v;
+                spec[hk] = clipped;
+            }
+        };
+        match &params.frequency {
+            Bounds::Global(d) => {
+                let d = *d;
+                for hk in 0..h_total {
+                    clip_f(hk, d, &mut spec);
+                }
+            }
+            Bounds::Pointwise(v) => {
+                // Bound index = full-spectrum linear index of the stored
+                // bin: row r of the half buffer holds full bins
+                // r·last + 0..h.
+                for r in 0..rows {
+                    for k in 0..h {
+                        clip_f(r * h + k, v[r * last + k], &mut spec);
+                    }
+                }
+            }
+        }
+
+        // Back to the spatial basis (ε stays real by construction).
+        plan.inverse(&mut spec, &mut eps, threads, &mut ws);
+        if !violated {
+            // Already inside the f-cube: stop.
+            converged = true;
+            break;
+        }
+
+        // s-cube projection.
+        let mut clip_s = |i: usize, e: f64, eps: &mut [f64]| {
+            let v = eps[i];
+            let clipped = v.clamp(-e, e);
+            if clipped != v {
+                spat_edits[i] += clipped - v;
+                eps[i] = clipped;
+            }
+        };
+        match &params.spatial {
+            Bounds::Global(e) => {
+                let e = *e;
+                for i in 0..n {
+                    clip_s(i, e, &mut eps);
+                }
+            }
+            Bounds::Pointwise(v) => {
+                for i in 0..n {
+                    clip_s(i, v[i], &mut eps);
+                }
+            }
+        }
+    }
+
+    let active_spat = spat_edits.iter().filter(|&&e| e != 0.0).count();
+    let freq_edits = HalfSpectrum::from_parts(shape, freq_half);
+    let active_freq = freq_edits.active_full();
+    PocsResult {
+        corrected_eps: eps,
+        spat_edits,
+        freq_edits,
+        iterations,
+        converged,
+        active_spat,
+        active_freq,
+    }
+}
+
+/// `Δ_{−k} == Δ_k` for every component of the full lattice (the condition
+/// under which clipping the half spectrum is exactly the reference
+/// projection — including the `k_last = 0` / Nyquist planes, whose
+/// conjugate mates are stored bins themselves).
+fn bounds_hermitian_symmetric(v: &[f64], shape: &[usize]) -> bool {
+    let d = shape.len();
+    let mut idx = vec![0usize; d];
+    for &b in v.iter() {
+        let mut mirror = 0usize;
+        for (dd, &n) in shape.iter().enumerate() {
+            mirror = mirror * n + ((n - idx[dd]) % n);
+        }
+        if v[mirror] != b {
+            return false;
+        }
+        for dd in (0..d).rev() {
+            idx[dd] += 1;
+            if idx[dd] < shape[dd] {
+                break;
+            }
+            idx[dd] = 0;
+        }
+    }
+    true
+}
+
+/// The original full-complex-spectrum projection loop, kept as the
+/// correctness oracle for [`alternating_projection`] (equivalence-tested to
+/// 1e-10) and as the fallback for non-Hermitian pointwise bounds.
+pub fn alternating_projection_reference(
+    eps0: &[f64],
+    shape: &[usize],
+    params: &PocsParams,
+) -> PocsResult {
     let n = eps0.len();
     debug_assert_eq!(n, shape.iter().product::<usize>());
     let mut eps: Vec<Complex> = eps0.iter().map(|&e| Complex::new(e, 0.0)).collect();
@@ -88,19 +271,13 @@ pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams
         // δ = FFT(ε)
         fftn_inplace(&mut eps, shape);
 
-        // Convergence check + f-cube projection fused in one pass. A
-        // violation is only *significant* (keeps the loop running) when it
-        // exceeds the bound beyond FFT roundoff — without this tolerance
-        // the loop can chase 1-ulp exceedances forever. Sub-tolerance
-        // exceedances are still clipped (and recorded) before terminating.
-        // The Global/Pointwise dispatch is hoisted out of the hot loop.
         let mut violated = false;
         let mut clip_f = |k: usize, d: f64, eps: &mut [Complex]| {
             let v = eps[k];
             let re = v.re.clamp(-d, d);
             let im = v.im.clamp(-d, d);
             if re != v.re || im != v.im {
-                if v.linf() > d * (1.0 + 1e-10) {
+                if v.linf() > d * VIOLATION_SLACK {
                     violated = true;
                 }
                 let clipped = Complex::new(re, im);
@@ -164,7 +341,14 @@ pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams
     PocsResult {
         corrected_eps,
         spat_edits,
-        freq_edits,
+        // Half-spectrum storage via the Hermitian *projection*: with
+        // symmetric bounds the edits are already Hermitian and the fold is
+        // an identity (up to averaging rounding noise across mates); with
+        // asymmetric pointwise bounds (the fallback case) the edits are
+        // not, but only their Hermitian part ever reaches the real ε —
+        // `irfftn(fold(F)) == Re(ifftn(F))` exactly — so the
+        // edits-reconstruct-the-correction invariant holds either way.
+        freq_edits: HalfSpectrum::fold_full(&freq_edits, shape),
         iterations,
         converged,
         active_spat,
@@ -176,6 +360,10 @@ pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams
 /// the archive verifier). Returns `(spatial_ok, frequency_ok, max_spat,
 /// max_freq_linf)` where the maxima are normalized by their bound (≤ 1 is
 /// in-bound).
+///
+/// The frequency check walks the full bin lattice but transforms only the
+/// half spectrum (`ε` is real, and `‖conj(z)‖∞ = ‖z‖∞`), so it is exact for
+/// arbitrary — even asymmetric — pointwise bounds at half the FFT cost.
 pub fn check_dual_bounds(
     eps: &[f64],
     shape: &[usize],
@@ -188,15 +376,17 @@ pub fn check_dual_bounds(
         let r = if b > 0.0 { e.abs() / b } else if e == 0.0 { 0.0 } else { f64::INFINITY };
         max_s = max_s.max(r);
     }
-    let mut delta: Vec<Complex> = eps.iter().map(|&e| Complex::new(e, 0.0)).collect();
-    fftn_inplace(&mut delta, shape);
+    let plan = NdRealFft::new(shape);
+    let mut ws = NdFftWorkspace::new();
+    let mut spec = vec![Complex::ZERO; plan.half_len()];
+    plan.forward(eps, &mut spec, 1, &mut ws);
     let mut max_f = 0.0f64;
-    for (k, d) in delta.iter().enumerate() {
-        let b = frequency.at(k);
-        let linf = d.linf();
+    for_each_full_bin(shape, |full, half, _conj| {
+        let b = frequency.at(full);
+        let linf = spec[half].linf();
         let r = if b > 0.0 { linf / b } else if linf == 0.0 { 0.0 } else { f64::INFINITY };
         max_f = max_f.max(r);
-    }
+    });
     // Tiny tolerance for FFT roundoff in the *verifier* (the projector
     // itself clips hard).
     (max_s <= 1.0 + 1e-9, max_f <= 1.0 + 1e-9, max_s, max_f)
@@ -205,6 +395,7 @@ pub fn check_dual_bounds(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fourier::ifftn_inplace;
     use crate::util::XorShift;
 
     fn random_eps(n: usize, e: f64, seed: u64) -> Vec<f64> {
@@ -221,6 +412,7 @@ mod tests {
             spatial: Bounds::Global(0.1),
             frequency: Bounds::Global(1e6),
             max_iters: 100,
+            threads: 1,
         };
         let r = alternating_projection(&eps, &[n], &params);
         assert!(r.converged);
@@ -244,6 +436,7 @@ mod tests {
                 spatial: Bounds::Global(e),
                 frequency: Bounds::Global(delta),
                 max_iters: 500,
+                threads: 1,
             };
             let r = alternating_projection(&eps, &[n], &params);
             assert!(r.converged, "seed {seed} did not converge");
@@ -268,9 +461,10 @@ mod tests {
             spatial: Bounds::Global(0.1),
             frequency: Bounds::Global(0.3),
             max_iters: 500,
+            threads: 1,
         };
         let r = alternating_projection(&eps, &[n], &params);
-        let mut freq_part = r.freq_edits.clone();
+        let mut freq_part = r.freq_edits.expand();
         ifftn_inplace(&mut freq_part, &[n]);
         for i in 0..n {
             let rebuilt = eps[i] + r.spat_edits[i] + freq_part[i].re;
@@ -292,6 +486,7 @@ mod tests {
             spatial: Bounds::Global(0.1),
             frequency: Bounds::Global(1e-6),
             max_iters: 50,
+            threads: 1,
         };
         let r = alternating_projection(&eps, &[n], &params);
         assert!(r.converged);
@@ -304,13 +499,18 @@ mod tests {
         let n = 32;
         let eps = random_eps(n, 0.2, 9);
         let spat: Vec<f64> = (0..n).map(|i| 0.05 + 0.01 * (i % 5) as f64).collect();
+        // Hermitian-symmetric frequency bounds (as resolve_bounds builds).
         let freq: Vec<f64> = (0..n)
-            .map(|k| if k % 2 == 0 { 0.5 } else { 0.1 })
+            .map(|k| {
+                let m = k.min(n - k);
+                if m % 2 == 0 { 0.5 } else { 0.1 }
+            })
             .collect();
         let params = PocsParams {
             spatial: Bounds::Pointwise(spat.clone()),
             frequency: Bounds::Pointwise(freq.clone()),
             max_iters: 1000,
+            threads: 1,
         };
         // Start inside the s-cube: clip the input first.
         let eps: Vec<f64> = eps
@@ -330,6 +530,39 @@ mod tests {
     }
 
     #[test]
+    fn asymmetric_pointwise_bounds_fall_back_to_reference() {
+        // Bounds with Δ_{−k} ≠ Δ_k cannot use the half-spectrum path; the
+        // dispatcher must still produce a projection inside both cubes.
+        let n = 16;
+        let eps = random_eps(n, 0.1, 21);
+        let freq: Vec<f64> = (0..n).map(|k| 0.1 + 0.02 * k as f64).collect();
+        let params = PocsParams {
+            spatial: Bounds::Global(0.1),
+            frequency: Bounds::Pointwise(freq),
+            max_iters: 1000,
+            threads: 1,
+        };
+        let r = alternating_projection(&eps, &[n], &params);
+        assert!(r.converged);
+        let (s_ok, f_ok, ms, mf) =
+            check_dual_bounds(&r.corrected_eps, &[n], &params.spatial, &params.frequency);
+        assert!(s_ok && f_ok, "max_s {ms} max_f {mf}");
+        // The reference's edits are non-Hermitian under asymmetric bounds,
+        // but the stored Hermitian projection must still reconstruct the
+        // correction: ε' == ε₀ + spat + Re(IFFT(freq)).
+        let mut freq = r.freq_edits.expand();
+        ifftn_inplace(&mut freq, &[n]);
+        for i in 0..n {
+            let rebuilt = eps[i] + r.spat_edits[i] + freq[i].re;
+            assert!(
+                (rebuilt - r.corrected_eps[i]).abs() < 1e-10,
+                "i={i}: {rebuilt} vs {}",
+                r.corrected_eps[i]
+            );
+        }
+    }
+
+    #[test]
     fn works_in_2d_and_3d() {
         for shape in [vec![16usize, 16], vec![8, 8, 8]] {
             let n: usize = shape.iter().product();
@@ -338,6 +571,7 @@ mod tests {
                 spatial: Bounds::Global(0.1),
                 frequency: Bounds::Global(0.4),
                 max_iters: 500,
+                threads: 1,
             };
             let r = alternating_projection(&eps, &shape, &params);
             assert!(r.converged, "shape {shape:?}");
@@ -357,6 +591,7 @@ mod tests {
             spatial: Bounds::Global(0.1),
             frequency: Bounds::Global(0.25),
             max_iters: 400,
+            threads: 1,
         };
         let r = alternating_projection(&eps, &[n], &params);
         assert!(r.converged);
@@ -364,5 +599,101 @@ mod tests {
         let r2 = alternating_projection(&r.corrected_eps, &[n], &params);
         assert_eq!(r2.iterations, 1);
         assert!(r2.converged);
+    }
+
+    /// Fast path vs reference oracle: corrections agree to 1e-10 and the
+    /// expanded frequency edits match, across dimensionalities and FFT
+    /// kernels (pow2, odd/Bluestein, mixed).
+    #[test]
+    fn fast_path_matches_reference() {
+        for (shape, seed) in [
+            (vec![64usize], 1u64),
+            (vec![100], 2),
+            (vec![45], 3),
+            (vec![16, 16], 4),
+            (vec![12, 10], 5),
+            (vec![8, 8, 8], 6),
+            (vec![6, 5, 9], 7),
+        ] {
+            let n: usize = shape.iter().product();
+            let e = 0.1;
+            let eps = random_eps(n, e, seed);
+            let d = 0.25 * e * (n as f64).sqrt();
+            let params = PocsParams {
+                spatial: Bounds::Global(e),
+                frequency: Bounds::Global(d),
+                max_iters: 1000,
+                threads: 1,
+            };
+            let fast = alternating_projection(&eps, &shape, &params);
+            let reference = alternating_projection_reference(&eps, &shape, &params);
+            // The engines differ at FFT-rounding level, so the final
+            // convergence check can fire one iteration apart when an
+            // overshoot sits exactly on the tolerance; the *corrections*
+            // still agree to 1e-10 below.
+            let di = fast.iterations.abs_diff(reference.iterations);
+            assert!(di <= 1, "shape {shape:?}: iterations {} vs {}", fast.iterations, reference.iterations);
+            assert_eq!(fast.converged, reference.converged, "shape {shape:?}");
+            if di == 0 {
+                assert_eq!(fast.active_spat, reference.active_spat, "shape {shape:?}");
+                assert_eq!(fast.active_freq, reference.active_freq, "shape {shape:?}");
+            }
+            for i in 0..n {
+                assert!(
+                    (fast.corrected_eps[i] - reference.corrected_eps[i]).abs() < 1e-9,
+                    "shape {shape:?} corrected idx {i}"
+                );
+                assert!(
+                    (fast.spat_edits[i] - reference.spat_edits[i]).abs() < 1e-9,
+                    "shape {shape:?} spat idx {i}"
+                );
+            }
+            let ff = fast.freq_edits.expand();
+            let rf = reference.freq_edits.expand();
+            for k in 0..n {
+                assert!(
+                    (ff[k] - rf[k]).abs() < 1e-10 * (n as f64).sqrt(),
+                    "shape {shape:?} freq bin {k}: {:?} vs {:?}",
+                    ff[k],
+                    rf[k]
+                );
+            }
+            // The fast output satisfies the bounds in its own right.
+            let (s_ok, f_ok, ms, mf) = check_dual_bounds(
+                &fast.corrected_eps,
+                &shape,
+                &params.spatial,
+                &params.frequency,
+            );
+            assert!(s_ok && f_ok, "shape {shape:?}: max_s {ms} max_f {mf}");
+        }
+    }
+
+    /// Threading only changes the execution schedule, never the arithmetic:
+    /// results are bit-identical for every thread count.
+    #[test]
+    fn threaded_projection_is_bit_identical() {
+        for shape in [vec![16usize, 16], vec![8, 8, 8], vec![12, 10]] {
+            let n: usize = shape.iter().product();
+            let eps = random_eps(n, 0.1, 31);
+            let base = PocsParams {
+                spatial: Bounds::Global(0.1),
+                frequency: Bounds::Global(0.25 * 0.1 * (n as f64).sqrt()),
+                max_iters: 500,
+                threads: 1,
+            };
+            let r1 = alternating_projection(&eps, &shape, &base);
+            for threads in [2usize, 4] {
+                let params = PocsParams {
+                    threads,
+                    ..base.clone()
+                };
+                let rt = alternating_projection(&eps, &shape, &params);
+                assert_eq!(rt.iterations, r1.iterations, "shape {shape:?}");
+                assert_eq!(rt.corrected_eps, r1.corrected_eps, "shape {shape:?}");
+                assert_eq!(rt.spat_edits, r1.spat_edits, "shape {shape:?}");
+                assert_eq!(rt.freq_edits, r1.freq_edits, "shape {shape:?}");
+            }
+        }
     }
 }

@@ -110,6 +110,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         spatial: Bounds::Global(ErrorBound::Relative(1e-3).absolute_for(&field)),
         frequency: Bounds::Global(spec_max),
         max_iters: 200,
+        threads: 1,
     };
     let t = instrumented_pocs(&eps0, field.shape(), &params);
     let total = t.total();
@@ -192,6 +193,7 @@ mod tests {
             spatial: Bounds::Global(1e-3),
             frequency: Bounds::Global(1e-2),
             max_iters: 50,
+            threads: 1,
         };
         let t = instrumented_pocs(&eps0, field.shape(), &params);
         assert!(t.iterations >= 1);

@@ -72,6 +72,7 @@ fn one_cell(name: &str, field: &Field, base: &dyn Compressor) -> Result<Vec<Stri
         )),
         max_iters: 200,
         max_quant_retries: 3,
+        threads: 1,
     };
     let archive = correction::compress(field, base, &cfg)?;
     let ratio_ours = metrics::compression_ratio(field, archive.total_bytes());

@@ -55,6 +55,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             spatial: Bounds::Global(e_abs),
             frequency: Bounds::Global(delta_rel * spec_max),
             max_iters: 500,
+            threads: 1,
         };
         let t0 = Instant::now();
         let r = alternating_projection(&eps0, field.shape(), &params);
@@ -98,6 +99,7 @@ mod tests {
             spatial: Bounds::Global(e_abs),
             frequency: Bounds::Global(1e-9),
             max_iters: 100,
+            threads: 1,
         };
         let r = alternating_projection(&eps0, field.shape(), &params);
         assert!(r.converged);

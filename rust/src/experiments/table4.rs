@@ -56,6 +56,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         spatial: Bounds::Global(e_abs),
         frequency: Bounds::Global(d_abs),
         max_iters: 200,
+        threads: 1,
     };
 
     // --- stage metrics from the instrumented engine

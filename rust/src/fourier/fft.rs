@@ -47,6 +47,9 @@ enum Kind {
     },
 }
 
+// `len` has no `is_empty` companion on purpose: the constructor asserts
+// `n ≥ 1`, so a plan can never be empty.
+#[allow(clippy::len_without_is_empty)]
 impl Fft {
     /// Plan a transform of size `n` (n ≥ 1).
     pub fn new(n: usize) -> Self {
@@ -97,24 +100,50 @@ impl Fft {
         self.n
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.n == 0
+    /// Scratch elements required by [`Fft::process_with_scratch`]: zero for
+    /// radix-2 plans, the padded convolution length `m` for Bluestein.
+    pub fn scratch_len(&self) -> usize {
+        match &self.kind {
+            Kind::Radix2 { .. } => 0,
+            Kind::Bluestein { m, .. } => *m,
+        }
     }
 
-    /// In-place transform of a buffer of length `n`.
+    /// In-place transform of a buffer of length `n`. Allocates Bluestein
+    /// scratch internally; steady-state callers (the POCS loop, the N-D
+    /// axis sweeps) should use [`Fft::process_with_scratch`] instead.
     pub fn process(&self, data: &mut [Complex], dir: FftDirection) {
+        let mut scratch = vec![Complex::ZERO; self.scratch_len()];
+        self.process_with_scratch(data, dir, &mut scratch);
+    }
+
+    /// In-place transform with caller-provided scratch (`scratch.len() ≥`
+    /// [`Fft::scratch_len`]); allocates nothing. Scratch contents on entry
+    /// are irrelevant and unspecified on exit.
+    pub fn process_with_scratch(
+        &self,
+        data: &mut [Complex],
+        dir: FftDirection,
+        scratch: &mut [Complex],
+    ) {
         assert_eq!(data.len(), self.n, "buffer length != plan size");
+        assert!(
+            scratch.len() >= self.scratch_len(),
+            "scratch {} < required {}",
+            scratch.len(),
+            self.scratch_len()
+        );
         if self.n == 1 {
             return;
         }
         match dir {
-            FftDirection::Forward => self.forward(data),
+            FftDirection::Forward => self.forward(data, scratch),
             FftDirection::Inverse => {
                 // ifft(x) = conj(fft(conj(x))) / n
                 for v in data.iter_mut() {
                     *v = v.conj();
                 }
-                self.forward(data);
+                self.forward(data, scratch);
                 let s = 1.0 / self.n as f64;
                 for v in data.iter_mut() {
                     *v = v.conj().scale(s);
@@ -130,7 +159,7 @@ impl Fft {
         buf
     }
 
-    fn forward(&self, data: &mut [Complex]) {
+    fn forward(&self, data: &mut [Complex], scratch: &mut [Complex]) {
         match &self.kind {
             Kind::Radix2 { .. } => self.forward_inplace_radix2(data),
             Kind::Bluestein {
@@ -140,11 +169,16 @@ impl Fft {
                 kernel_fft,
             } => {
                 let n = self.n;
-                let mut a = vec![Complex::ZERO; *m];
+                // The padded chirp product lives in caller scratch — no
+                // per-call allocation in the convolution.
+                let a = &mut scratch[..*m];
                 for k in 0..n {
                     a[k] = data[k] * chirp[k];
                 }
-                inner.forward_inplace_radix2(&mut a);
+                for v in a[n..].iter_mut() {
+                    *v = Complex::ZERO;
+                }
+                inner.forward_inplace_radix2(a);
                 for (x, k) in a.iter_mut().zip(kernel_fft.iter()) {
                     *x = *x * *k;
                 }
@@ -152,7 +186,7 @@ impl Fft {
                 for v in a.iter_mut() {
                     *v = v.conj();
                 }
-                inner.forward_inplace_radix2(&mut a);
+                inner.forward_inplace_radix2(a);
                 let s = 1.0 / *m as f64;
                 for (k, out) in data.iter_mut().enumerate() {
                     *out = a[k].conj().scale(s) * chirp[k];
@@ -320,6 +354,26 @@ mod tests {
         let fsum = plan.transform(&sum, FftDirection::Forward);
         let expect: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| *x + *y).collect();
         assert_close(&fsum, &expect, 1e-10);
+    }
+
+    #[test]
+    fn scratch_path_matches_allocating_path() {
+        // Bluestein via explicit scratch must be bit-identical to the
+        // allocating wrapper (same kernel, different storage), and the
+        // scratch contents on entry must not matter.
+        for &n in &[7usize, 100, 509, 128] {
+            let x = random_signal(n, 42 + n as u64);
+            let plan = Fft::new(n);
+            let mut a = x.clone();
+            plan.process(&mut a, FftDirection::Forward);
+            let mut b = x.clone();
+            let mut scratch = vec![Complex::new(3.25, -7.5); plan.scratch_len()];
+            plan.process_with_scratch(&mut b, FftDirection::Forward, &mut scratch);
+            assert_eq!(a, b, "n={n}");
+            // Round-trip through the scratch path too.
+            plan.process_with_scratch(&mut b, FftDirection::Inverse, &mut scratch);
+            assert_close(&b, &x, 1e-10);
+        }
     }
 
     #[test]

@@ -1,21 +1,39 @@
 //! Fourier-analysis substrate: complex arithmetic, 1-D FFTs (radix-2,
-//! Bluestein for arbitrary sizes), N-D transforms, and the radially-binned
-//! power spectrum used throughout the paper's evaluation.
+//! Bluestein for arbitrary sizes), real-to-complex half-spectrum
+//! transforms, N-D transforms (complex and real, with a multi-threaded
+//! strided-line engine and allocation-free scratch plans), and the
+//! radially-binned power spectrum used throughout the paper's evaluation.
 //!
 //! The paper's GPU implementation delegates to cuFFT; this crate builds the
 //! transform from scratch (no FFT crate exists in the offline dependency
 //! set) and validates it against a naive O(N²) DFT and analytic golden
 //! vectors in this module's tests plus python golden files.
+//!
+//! Real fields are the common case (every POCS iteration transforms a real
+//! error vector), so the hot paths run on the **half spectrum**: [`rfftn`]
+//! / [`irfftn`] and the planned [`NdRealFft`] compute only the
+//! `prod(shape[..d−1]) · (last/2 + 1)` non-redundant bins — half the
+//! arithmetic and memory traffic of [`fftn`] — and [`HalfSpectrum`] expands
+//! to the full Hermitian vector on demand.
 
 mod complex;
 mod fft;
 mod ndfft;
+mod ndrfft;
 mod power_spectrum;
+mod rfft;
 
 pub use complex::Complex;
 pub use fft::{Fft, FftDirection};
-pub use ndfft::{fftn, ifftn, fftn_inplace, ifftn_inplace};
-pub use power_spectrum::{power_spectrum, PowerSpectrum};
+pub use ndfft::{fftn, ifftn, fftn_inplace, ifftn_inplace, plan_for};
+pub use ndrfft::{
+    for_each_full_bin, half_len, irfftn, rfftn, rplan_for, HalfSpectrum, NdFftWorkspace,
+    NdRealFft,
+};
+pub use power_spectrum::{
+    power_spectrum, power_spectrum_of_complex, power_spectrum_of_real, PowerSpectrum,
+};
+pub use rfft::RealFft;
 
 /// Naive O(N²) reference DFT (forward, unnormalized), used as a correctness
 /// oracle for the fast transforms.

@@ -8,6 +8,7 @@
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
 
+use super::ndrfft::NdFftWorkspace;
 use super::{Complex, Fft, FftDirection};
 
 /// Process-wide FFT plan cache. The POCS loop runs two N-D transforms per
@@ -17,15 +18,19 @@ use super::{Complex, Fft, FftDirection};
 static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, std::sync::Arc<Fft>>>> = OnceLock::new();
 
 /// Fetch (or build) the shared plan for size `n`.
+///
+/// The plan is built *outside* the cache lock: Bluestein planning for a
+/// large odd size is O(m log m) work, and holding the global mutex through
+/// it serialized every store worker on first contact with a new size.
+/// Racing builders do redundant work once; the first insert wins and
+/// everyone shares it.
 pub fn plan_for(n: usize) -> std::sync::Arc<Fft> {
-    let mut cache = PLAN_CACHE
-        .get_or_init(|| Mutex::new(HashMap::new()))
-        .lock()
-        .unwrap();
-    cache
-        .entry(n)
-        .or_insert_with(|| std::sync::Arc::new(Fft::new(n)))
-        .clone()
+    let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(plan) = cache.lock().unwrap().get(&n) {
+        return plan.clone();
+    }
+    let built = std::sync::Arc::new(Fft::new(n));
+    cache.lock().unwrap().entry(n).or_insert(built).clone()
 }
 
 /// Forward N-D FFT (out-of-place convenience).
@@ -58,66 +63,17 @@ fn transform_nd(data: &mut [Complex], shape: &[usize], dir: FftDirection) {
     if n == 0 {
         return;
     }
+    // The gather blocks and Bluestein pads live in a workspace so the axis
+    // sweeps share them; the threaded line engine itself lives in
+    // `ndrfft` (it is common to the complex and the half-spectrum paths).
+    let mut ws = NdFftWorkspace::new();
     for axis in 0..shape.len() {
         let len = shape[axis];
         if len == 1 {
             continue;
         }
         let plan = plan_for(len);
-        apply_axis(data, shape, axis, &plan, dir);
-    }
-}
-
-/// Number of strided lines gathered/scattered together. Batching turns the
-/// stride-`s` single-element accesses of a lone line into `B`-element
-/// consecutive runs (adjacent lines differ by 1 in the inner index), so
-/// each cache-line fetch serves `B` lines.
-const LINE_BLOCK: usize = 8;
-
-/// Apply a planned 1-D transform along `axis` of a row-major buffer.
-fn apply_axis(data: &mut [Complex], shape: &[usize], axis: usize, plan: &Fft, dir: FftDirection) {
-    let len = shape[axis];
-    // stride between successive elements along `axis`
-    let stride: usize = shape[axis + 1..].iter().product();
-    // number of 1-D lines
-    let total: usize = data.len() / len;
-    // Lines are enumerated by (outer, inner): outer indexes the dims before
-    // `axis`, inner the dims after. Base offset = outer*len*stride + inner.
-    let inner = stride;
-    let outer = total / inner;
-    if stride == 1 {
-        // Contiguous fast path: transform in place within each slice.
-        for o in 0..outer {
-            let base = o * len;
-            plan.process(&mut data[base..base + len], dir);
-        }
-        return;
-    }
-    let mut block = vec![Complex::ZERO; LINE_BLOCK * len];
-    for o in 0..outer {
-        let mut i = 0;
-        while i < inner {
-            let b = LINE_BLOCK.min(inner - i);
-            let base = o * len * stride + i;
-            // Gather b adjacent lines: for each j the addresses
-            // base + j·stride + 0..b are consecutive.
-            for j in 0..len {
-                let src = base + j * stride;
-                for (k, s) in data[src..src + b].iter().enumerate() {
-                    block[k * len + j] = *s;
-                }
-            }
-            for k in 0..b {
-                plan.process(&mut block[k * len..(k + 1) * len], dir);
-            }
-            for j in 0..len {
-                let dst = base + j * stride;
-                for (k, d) in data[dst..dst + b].iter_mut().enumerate() {
-                    *d = block[k * len + j];
-                }
-            }
-            i += b;
-        }
+        super::ndrfft::apply_axis(data, shape, axis, &plan, dir, 1, &mut ws);
     }
 }
 

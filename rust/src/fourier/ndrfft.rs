@@ -1,0 +1,869 @@
+//! N-dimensional real-to-complex transforms over row-major buffers, plus
+//! the multi-threaded strided-line engine shared with [`super::ndfft`].
+//!
+//! The separable scheme (the half-spectrum analogue of `fftn`):
+//!
+//! 1. a planned 1-D [`RealFft`] runs along the **last** axis — each of the
+//!    `prod(shape[..d−1])` contiguous real lines becomes `last/2 + 1`
+//!    complex bins, so the working buffer is the *half spectrum* of
+//!    `prod(shape[..d−1]) × (last/2 + 1)` elements (numpy `rfftn` layout);
+//! 2. planned complex FFTs run along every leading axis of that half
+//!    buffer.
+//!
+//! This is where the POCS hot loop gets its 2× arithmetic/traffic saving:
+//! the spatial error vector is real and stays real, so the full complex
+//! N-D transform of [`super::ndfft`] computes (and clips, and inverts)
+//! twice the data the math requires.
+//!
+//! All entry points take an explicit [`NdFftWorkspace`] and a `threads`
+//! count. The workspace owns every scratch buffer (gather blocks, Bluestein
+//! convolution pads) and only ever grows, so steady-state transforms — the
+//! POCS iterations — allocate nothing. Line transforms fan out across up to
+//! `threads` OS threads (`std::thread::scope`, an atomic work index over
+//! line blocks — the same worker-pool shape as
+//! [`crate::store::parallel::par_try_map`]); every line is transformed by
+//! exactly one thread with identical arithmetic, so the output is
+//! bit-identical for every thread count.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::ndfft::plan_for;
+use super::{Complex, Fft, FftDirection, RealFft};
+
+/// Process-wide [`RealFft`] plan cache (the real-transform analogue of
+/// [`plan_for`]). Plans are built outside the cache lock; racing builders
+/// keep the first insert.
+static RPLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<RealFft>>>> = OnceLock::new();
+
+/// Fetch (or build) the shared real-transform plan for size `n`.
+pub fn rplan_for(n: usize) -> Arc<RealFft> {
+    let cache = RPLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(plan) = cache.lock().unwrap().get(&n) {
+        return plan.clone();
+    }
+    let built = Arc::new(RealFft::new(n));
+    cache.lock().unwrap().entry(n).or_insert(built).clone()
+}
+
+/// Number of complex elements in the half spectrum of a real field with
+/// `shape`: `prod(shape[..d−1]) · (shape[d−1]/2 + 1)`.
+pub fn half_len(shape: &[usize]) -> usize {
+    let d = shape.len();
+    assert!(d >= 1, "scalar (0-d) transforms are not supported");
+    shape[..d - 1].iter().product::<usize>() * (shape[d - 1] / 2 + 1)
+}
+
+/// Reusable scratch for the N-D transform engines: one lane per worker
+/// thread, each holding a gather block for strided lines and 1-D FFT
+/// scratch (Bluestein convolution pad). Lanes only ever grow, so holding a
+/// workspace across POCS iterations makes the steady state allocation-free.
+pub struct NdFftWorkspace {
+    lanes: Vec<Lane>,
+}
+
+struct Lane {
+    /// Gather/scatter block for strided axis sweeps (`LINE_BLOCK` lines).
+    block: Vec<Complex>,
+    /// 1-D plan scratch (max of the sizes seen so far).
+    scratch: Vec<Complex>,
+}
+
+impl NdFftWorkspace {
+    pub fn new() -> Self {
+        Self { lanes: Vec::new() }
+    }
+
+    /// Grow (never shrink) to `lanes` lanes with at least the given block
+    /// and scratch capacities.
+    fn ensure(&mut self, lanes: usize, block: usize, scratch: usize) {
+        while self.lanes.len() < lanes {
+            self.lanes.push(Lane {
+                block: Vec::new(),
+                scratch: Vec::new(),
+            });
+        }
+        for lane in &mut self.lanes[..lanes] {
+            if lane.block.len() < block {
+                lane.block.resize(block, Complex::ZERO);
+            }
+            if lane.scratch.len() < scratch {
+                lane.scratch.resize(scratch, Complex::ZERO);
+            }
+        }
+    }
+
+    /// Total complex elements currently owned (tests assert this is stable
+    /// across steady-state iterations — no per-iteration growth).
+    pub fn allocated_elems(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.block.capacity() + l.scratch.capacity())
+            .sum()
+    }
+}
+
+impl Default for NdFftWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Number of strided lines gathered/scattered together. Batching turns the
+/// stride-`s` single-element accesses of a lone line into `B`-element
+/// consecutive runs (adjacent lines differ by 1 in the inner index), so
+/// each cache-line fetch serves `B` lines.
+pub(crate) const LINE_BLOCK: usize = 8;
+
+/// Raw base pointer handed to worker threads. Safety rests on the work
+/// decomposition in [`run_line_item`]: distinct items address disjoint
+/// element sets, so no element is ever aliased by two threads.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut Complex);
+unsafe impl Send for SendPtr {}
+
+/// Apply a planned 1-D transform along `axis` of the row-major buffer
+/// `data` with `shape`, fanning independent line blocks across up to
+/// `threads` OS threads. Output is bit-identical for every thread count.
+pub(crate) fn apply_axis(
+    data: &mut [Complex],
+    shape: &[usize],
+    axis: usize,
+    plan: &Fft,
+    dir: FftDirection,
+    threads: usize,
+    ws: &mut NdFftWorkspace,
+) {
+    let len = shape[axis];
+    if len <= 1 || data.is_empty() {
+        return;
+    }
+    debug_assert_eq!(plan.len(), len, "plan size != axis length");
+    // stride between successive elements along `axis`
+    let stride: usize = shape[axis + 1..].iter().product();
+    // Lines are enumerated by (outer, inner): outer indexes the dims before
+    // `axis`, inner the dims after. Base offset = outer·len·stride + inner.
+    let inner = stride;
+    let outer = data.len() / (len * inner);
+    // One work item = up to LINE_BLOCK lines (contiguous lines when
+    // stride == 1, adjacent strided lines otherwise).
+    let items = if stride == 1 {
+        outer.div_ceil(LINE_BLOCK)
+    } else {
+        outer * inner.div_ceil(LINE_BLOCK)
+    };
+    let lanes = threads.clamp(1, items.max(1));
+    let block_elems = if stride == 1 { 0 } else { LINE_BLOCK * len };
+    ws.ensure(lanes, block_elems, plan.scratch_len());
+
+    if lanes == 1 {
+        let lane = &mut ws.lanes[0];
+        for item in 0..items {
+            // SAFETY: single thread holding `&mut data` — no aliasing.
+            unsafe {
+                run_line_item(data.as_mut_ptr(), item, len, stride, inner, outer, plan, dir, lane)
+            };
+        }
+        return;
+    }
+
+    let next = AtomicUsize::new(0);
+    let ptr = SendPtr(data.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for lane in ws.lanes[..lanes].iter_mut() {
+            let next = &next;
+            scope.spawn(move || loop {
+                let item = next.fetch_add(1, Ordering::Relaxed);
+                if item >= items {
+                    break;
+                }
+                // SAFETY: distinct items address disjoint element sets of
+                // `data` (see `run_line_item`), and the scope outlives
+                // every worker.
+                unsafe {
+                    run_line_item(ptr.0, item, len, stride, inner, outer, plan, dir, lane)
+                };
+            });
+        }
+    });
+}
+
+/// Execute one line-block work item.
+///
+/// # Safety
+///
+/// `data` must be valid for `outer · len · inner` elements, and no other
+/// thread may concurrently touch the elements this item addresses. Item
+/// index sets are disjoint by construction: when `stride == 1` item `i`
+/// owns the contiguous lines `[i·B, min((i+1)·B, outer))`; otherwise item
+/// `i = o·ceil(inner/B) + ib` owns offsets `o·len·stride + j·stride + t`
+/// for `j in 0..len`, `t in [ib·B, min(ib·B + B, inner))`, which are
+/// disjoint across distinct `(o, ib)`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_line_item(
+    data: *mut Complex,
+    item: usize,
+    len: usize,
+    stride: usize,
+    inner: usize,
+    outer: usize,
+    plan: &Fft,
+    dir: FftDirection,
+    lane: &mut Lane,
+) {
+    if stride == 1 {
+        // Contiguous fast path: transform in place within each line.
+        let o0 = item * LINE_BLOCK;
+        let ob = LINE_BLOCK.min(outer - o0);
+        for o in o0..o0 + ob {
+            let line = std::slice::from_raw_parts_mut(data.add(o * len), len);
+            plan.process_with_scratch(line, dir, &mut lane.scratch);
+        }
+        return;
+    }
+    let iblocks = inner.div_ceil(LINE_BLOCK);
+    let o = item / iblocks;
+    let i0 = (item % iblocks) * LINE_BLOCK;
+    let b = LINE_BLOCK.min(inner - i0);
+    let base = o * len * stride + i0;
+    let block = &mut lane.block;
+    // Gather b adjacent lines: for each j the addresses
+    // base + j·stride + 0..b are consecutive.
+    for j in 0..len {
+        let src = base + j * stride;
+        for t in 0..b {
+            block[t * len + j] = *data.add(src + t);
+        }
+    }
+    for t in 0..b {
+        plan.process_with_scratch(&mut block[t * len..(t + 1) * len], dir, &mut lane.scratch);
+    }
+    for j in 0..len {
+        let dst = base + j * stride;
+        for t in 0..b {
+            *data.add(dst + t) = block[t * len + j];
+        }
+    }
+}
+
+/// A planned N-D real transform of fixed shape: one [`RealFft`] for the
+/// last axis plus one cached complex [`Fft`] per leading axis, all shared
+/// through the process-wide plan caches.
+pub struct NdRealFft {
+    shape: Vec<usize>,
+    /// `shape` with the last axis replaced by `last/2 + 1`.
+    half_shape: Vec<usize>,
+    /// `prod(shape[..d−1])` — number of 1-D real lines along the last axis.
+    rows: usize,
+    rplan: Arc<RealFft>,
+    lead_plans: Vec<Arc<Fft>>,
+}
+
+impl NdRealFft {
+    /// Plan the transform for `shape` (row-major, every axis ≥ 1).
+    pub fn new(shape: &[usize]) -> Self {
+        let d = shape.len();
+        assert!(d >= 1, "scalar (0-d) transforms are not supported");
+        assert!(
+            shape.iter().all(|&s| s >= 1),
+            "every axis must be ≥ 1, got {shape:?}"
+        );
+        let last = shape[d - 1];
+        let mut half_shape = shape.to_vec();
+        half_shape[d - 1] = last / 2 + 1;
+        Self {
+            shape: shape.to_vec(),
+            half_shape,
+            rows: shape[..d - 1].iter().product(),
+            rplan: rplan_for(last),
+            lead_plans: shape[..d - 1].iter().map(|&n| plan_for(n)).collect(),
+        }
+    }
+
+    /// The planned (full, real-space) shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// The half-spectrum buffer shape (`shape` with last → `last/2 + 1`).
+    pub fn half_shape(&self) -> &[usize] {
+        &self.half_shape
+    }
+
+    /// Number of real samples, `prod(shape)`.
+    pub fn len_full(&self) -> usize {
+        self.rows * self.shape[self.shape.len() - 1]
+    }
+
+    /// Number of half-spectrum elements, `prod(half_shape)`.
+    pub fn half_len(&self) -> usize {
+        self.rows * self.half_shape[self.half_shape.len() - 1]
+    }
+
+    /// Forward transform: real `input` (len `prod(shape)`) → half spectrum
+    /// `spec` (len [`NdRealFft::half_len`]). Unnormalized (numpy `rfftn`).
+    pub fn forward(
+        &self,
+        input: &[f64],
+        spec: &mut [Complex],
+        threads: usize,
+        ws: &mut NdFftWorkspace,
+    ) {
+        assert_eq!(input.len(), self.len_full(), "input length != prod(shape)");
+        assert_eq!(spec.len(), self.half_len(), "spectrum length != half_len");
+        self.rfft_rows(input, spec, threads, ws);
+        for (axis, plan) in self.lead_plans.iter().enumerate() {
+            apply_axis(
+                spec,
+                &self.half_shape,
+                axis,
+                plan.as_ref(),
+                FftDirection::Forward,
+                threads,
+                ws,
+            );
+        }
+    }
+
+    /// Inverse transform: half spectrum `spec` → real `out`, normalized by
+    /// `1/prod(shape)` (numpy `irfftn`). `spec` is consumed as scratch (its
+    /// contents are destroyed); the spectrum is taken as the half spectrum
+    /// of a real field, i.e. the Hermitian extension is implied.
+    pub fn inverse(
+        &self,
+        spec: &mut [Complex],
+        out: &mut [f64],
+        threads: usize,
+        ws: &mut NdFftWorkspace,
+    ) {
+        assert_eq!(spec.len(), self.half_len(), "spectrum length != half_len");
+        assert_eq!(out.len(), self.len_full(), "output length != prod(shape)");
+        for (axis, plan) in self.lead_plans.iter().enumerate().rev() {
+            apply_axis(
+                spec,
+                &self.half_shape,
+                axis,
+                plan.as_ref(),
+                FftDirection::Inverse,
+                threads,
+                ws,
+            );
+        }
+        self.irfft_rows(spec, out, threads, ws);
+    }
+
+    /// Stage 1 of `forward`: per-row real FFT along the (contiguous) last
+    /// axis, statically partitioned across threads (rows are uniform cost).
+    fn rfft_rows(
+        &self,
+        input: &[f64],
+        spec: &mut [Complex],
+        threads: usize,
+        ws: &mut NdFftWorkspace,
+    ) {
+        let last = self.shape[self.shape.len() - 1];
+        let h = last / 2 + 1;
+        let rows = self.rows;
+        let lanes = threads.clamp(1, rows.max(1));
+        ws.ensure(lanes, 0, self.rplan.scratch_len());
+        if lanes == 1 {
+            let lane = &mut ws.lanes[0];
+            for r in 0..rows {
+                self.rplan.forward_with_scratch(
+                    &input[r * last..(r + 1) * last],
+                    &mut spec[r * h..(r + 1) * h],
+                    &mut lane.scratch,
+                );
+            }
+            return;
+        }
+        let rplan = self.rplan.as_ref();
+        let base = rows / lanes;
+        let rem = rows % lanes;
+        std::thread::scope(|scope| {
+            let mut spec_rest = spec;
+            let mut input_rest = input;
+            for (t, lane) in ws.lanes[..lanes].iter_mut().enumerate() {
+                let nrows = base + usize::from(t < rem);
+                let (sp, sr) = std::mem::take(&mut spec_rest).split_at_mut(nrows * h);
+                let (ip, ir) = input_rest.split_at(nrows * last);
+                spec_rest = sr;
+                input_rest = ir;
+                scope.spawn(move || {
+                    for r in 0..nrows {
+                        rplan.forward_with_scratch(
+                            &ip[r * last..(r + 1) * last],
+                            &mut sp[r * h..(r + 1) * h],
+                            &mut lane.scratch,
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    /// Final stage of `inverse`: per-row inverse real FFT.
+    fn irfft_rows(
+        &self,
+        spec: &[Complex],
+        out: &mut [f64],
+        threads: usize,
+        ws: &mut NdFftWorkspace,
+    ) {
+        let last = self.shape[self.shape.len() - 1];
+        let h = last / 2 + 1;
+        let rows = self.rows;
+        let lanes = threads.clamp(1, rows.max(1));
+        ws.ensure(lanes, 0, self.rplan.scratch_len());
+        if lanes == 1 {
+            let lane = &mut ws.lanes[0];
+            for r in 0..rows {
+                self.rplan.inverse_with_scratch(
+                    &spec[r * h..(r + 1) * h],
+                    &mut out[r * last..(r + 1) * last],
+                    &mut lane.scratch,
+                );
+            }
+            return;
+        }
+        let rplan = self.rplan.as_ref();
+        let base = rows / lanes;
+        let rem = rows % lanes;
+        std::thread::scope(|scope| {
+            let mut out_rest = out;
+            let mut spec_rest = spec;
+            for (t, lane) in ws.lanes[..lanes].iter_mut().enumerate() {
+                let nrows = base + usize::from(t < rem);
+                let (op, or) = std::mem::take(&mut out_rest).split_at_mut(nrows * last);
+                let (sp, sr) = spec_rest.split_at(nrows * h);
+                out_rest = or;
+                spec_rest = sr;
+                scope.spawn(move || {
+                    for r in 0..nrows {
+                        rplan.inverse_with_scratch(
+                            &sp[r * h..(r + 1) * h],
+                            &mut op[r * last..(r + 1) * last],
+                            &mut lane.scratch,
+                        );
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Frequency-domain data of a real field in numpy `rfftn` layout: full
+/// resolution along every axis except the last, which keeps only bins
+/// `0..=last/2`. The Hermitian extension
+/// `X[k] = conj(X[−k mod shape])` recovers the full spectrum.
+///
+/// This is how [`crate::correction`] stores POCS frequency edits: half the
+/// memory of the full vector, expanded on demand at the (cold)
+/// quantization and serialization boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HalfSpectrum {
+    shape: Vec<usize>,
+    data: Vec<Complex>,
+}
+
+impl HalfSpectrum {
+    /// All-zero half spectrum for a real field with `shape`.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![Complex::ZERO; half_len(shape)],
+        }
+    }
+
+    /// Wrap an existing half-layout buffer (`data.len()` must equal
+    /// [`half_len`]`(shape)`).
+    pub fn from_parts(shape: &[usize], data: Vec<Complex>) -> Self {
+        assert_eq!(data.len(), half_len(shape), "buffer is not half-layout");
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Keep the half bins of a full-spectrum vector. Exact when `full` is
+    /// Hermitian (the spectrum of a real field); otherwise the discarded
+    /// redundant bins are simply dropped — use [`HalfSpectrum::fold_full`]
+    /// to project instead.
+    pub fn from_full(full: &[Complex], shape: &[usize]) -> Self {
+        let d = shape.len();
+        let last = shape[d - 1];
+        let h = last / 2 + 1;
+        let rows: usize = shape[..d - 1].iter().product();
+        assert_eq!(full.len(), rows * last, "full buffer does not match shape");
+        let mut data = Vec::with_capacity(rows * h);
+        for r in 0..rows {
+            data.extend_from_slice(&full[r * last..r * last + h]);
+        }
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Hermitian projection of an arbitrary full-spectrum vector:
+    /// `half[k] = (full[k] + conj(full[−k mod shape])) / 2`. Satisfies
+    /// `irfftn(fold_full(F)) == Re(ifftn(F))` exactly (up to rounding) for
+    /// every `F`, Hermitian or not.
+    pub fn fold_full(full: &[Complex], shape: &[usize]) -> Self {
+        let d = shape.len();
+        let last = shape[d - 1];
+        let h = last / 2 + 1;
+        let lead = &shape[..d - 1];
+        let rows: usize = lead.iter().product();
+        assert_eq!(full.len(), rows * last, "full buffer does not match shape");
+        let mut data = vec![Complex::ZERO; rows * h];
+        let mut idx = vec![0usize; lead.len()];
+        for r in 0..rows {
+            let mut mr = 0usize;
+            for (dd, &n) in lead.iter().enumerate() {
+                mr = mr * n + ((n - idx[dd]) % n);
+            }
+            for k in 0..h {
+                let mirror = full[mr * last + ((last - k) % last)].conj();
+                data[r * h + k] = (full[r * last + k] + mirror).scale(0.5);
+            }
+            for dd in (0..lead.len()).rev() {
+                idx[dd] += 1;
+                if idx[dd] < lead[dd] {
+                    break;
+                }
+                idx[dd] = 0;
+            }
+        }
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// The full logical (real-space) shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Half-layout storage (length [`half_len`]`(shape)`).
+    pub fn data(&self) -> &[Complex] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [Complex] {
+        &mut self.data
+    }
+
+    /// Consume into the raw half-layout buffer.
+    pub fn into_data(self) -> Vec<Complex> {
+        self.data
+    }
+
+    /// Number of full-spectrum elements, `prod(shape)`.
+    pub fn len_full(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Expand to the full Hermitian spectrum vector (length
+    /// `prod(shape)`): `full[k] = half[k]` for stored bins,
+    /// `conj(half[−k mod shape])` for the rest.
+    pub fn expand(&self) -> Vec<Complex> {
+        let d = self.shape.len();
+        let last = self.shape[d - 1];
+        let h = last / 2 + 1;
+        let lead = &self.shape[..d - 1];
+        let rows: usize = lead.iter().product();
+        let mut full = vec![Complex::ZERO; rows * last];
+        let mut idx = vec![0usize; lead.len()];
+        for r in 0..rows {
+            let mut mr = 0usize;
+            for (dd, &n) in lead.iter().enumerate() {
+                mr = mr * n + ((n - idx[dd]) % n);
+            }
+            let hrow = &self.data[r * h..(r + 1) * h];
+            let mrow = &self.data[mr * h..(mr + 1) * h];
+            let out = &mut full[r * last..(r + 1) * last];
+            out[..h].copy_from_slice(hrow);
+            for k in h..last {
+                out[k] = mrow[last - k].conj();
+            }
+            for dd in (0..lead.len()).rev() {
+                idx[dd] += 1;
+                if idx[dd] < lead[dd] {
+                    break;
+                }
+                idx[dd] = 0;
+            }
+        }
+        full
+    }
+
+    /// Number of *full-spectrum* components with a nonzero value: stored
+    /// bins whose mirror lives outside the half layout count twice (their
+    /// conjugate twin is nonzero iff they are).
+    pub fn active_full(&self) -> usize {
+        let last = self.shape[self.shape.len() - 1];
+        let h = last / 2 + 1;
+        let nyq = if last % 2 == 0 { last / 2 } else { usize::MAX };
+        let mut count = 0usize;
+        for (i, c) in self.data.iter().enumerate() {
+            if c.re == 0.0 && c.im == 0.0 {
+                continue;
+            }
+            let k = i % h;
+            count += if k == 0 || k == nyq { 1 } else { 2 };
+        }
+        count
+    }
+}
+
+/// Visit every bin of the full spectrum of a real field with `shape`,
+/// calling `f(full_idx, half_idx, conjugate)`: the full bin's value is
+/// `half[half_idx]`, conjugated when `conjugate` is true. Lets verifiers
+/// and bound builders walk the full lattice while reading only the half
+/// spectrum.
+pub fn for_each_full_bin(shape: &[usize], mut f: impl FnMut(usize, usize, bool)) {
+    let d = shape.len();
+    assert!(d >= 1, "scalar (0-d) transforms are not supported");
+    let last = shape[d - 1];
+    let h = last / 2 + 1;
+    let lead = &shape[..d - 1];
+    let rows: usize = lead.iter().product();
+    let mut idx = vec![0usize; lead.len()];
+    for r in 0..rows {
+        let mut mr = 0usize;
+        for (dd, &n) in lead.iter().enumerate() {
+            mr = mr * n + ((n - idx[dd]) % n);
+        }
+        let full_base = r * last;
+        for k in 0..h {
+            f(full_base + k, r * h + k, false);
+        }
+        for k in h..last {
+            f(full_base + k, mr * h + (last - k), true);
+        }
+        for dd in (0..lead.len()).rev() {
+            idx[dd] += 1;
+            if idx[dd] < lead[dd] {
+                break;
+            }
+            idx[dd] = 0;
+        }
+    }
+}
+
+/// Forward N-D real FFT (out-of-place convenience): real `input` → its
+/// [`HalfSpectrum`]. Single-threaded; plan and scratch are built per call.
+pub fn rfftn(input: &[f64], shape: &[usize]) -> HalfSpectrum {
+    let plan = NdRealFft::new(shape);
+    let mut ws = NdFftWorkspace::new();
+    let mut data = vec![Complex::ZERO; plan.half_len()];
+    plan.forward(input, &mut data, 1, &mut ws);
+    HalfSpectrum {
+        shape: shape.to_vec(),
+        data,
+    }
+}
+
+/// Inverse N-D real FFT (out-of-place convenience): [`HalfSpectrum`] →
+/// real samples, normalized by `1/prod(shape)`.
+pub fn irfftn(spec: &HalfSpectrum) -> Vec<f64> {
+    let plan = NdRealFft::new(&spec.shape);
+    let mut ws = NdFftWorkspace::new();
+    let mut data = spec.data.clone();
+    let mut out = vec![0.0f64; plan.len_full()];
+    plan.inverse(&mut data, &mut out, 1, &mut ws);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fourier::{fftn, ifftn};
+    use crate::util::XorShift;
+
+    fn random_real(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![
+            vec![8],
+            vec![9],
+            vec![1],
+            vec![2],
+            vec![6, 8],
+            vec![5, 4],
+            vec![4, 6, 8],
+            vec![3, 5, 7],
+            vec![2, 2, 4],
+            vec![1, 16],
+            vec![16, 1],
+            vec![12, 10],
+        ]
+    }
+
+    #[test]
+    fn expand_matches_complex_fftn() {
+        for shape in shapes() {
+            let n: usize = shape.iter().product();
+            let x = random_real(n, 11 + n as u64);
+            let buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+            let want = fftn(&buf, &shape);
+            let got = rfftn(&x, &shape).expand();
+            let scale = want.iter().map(|c| c.abs()).fold(1.0f64, f64::max);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (*a - *b).abs() <= 1e-9 * scale,
+                    "shape {shape:?} bin {i}: {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for shape in shapes() {
+            let n: usize = shape.iter().product();
+            let x = random_real(n, 29 + n as u64);
+            let back = irfftn(&rfftn(&x, &shape));
+            let scale = x.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+            for (i, (a, b)) in x.iter().zip(&back).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-11 * scale,
+                    "shape {shape:?} idx {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_output_is_bit_identical() {
+        for shape in [vec![16usize, 16], vec![8, 8, 8], vec![4, 100], vec![60]] {
+            let n: usize = shape.iter().product();
+            let x = random_real(n, 7);
+            let plan = NdRealFft::new(&shape);
+            let mut base = vec![Complex::ZERO; plan.half_len()];
+            let mut ws = NdFftWorkspace::new();
+            plan.forward(&x, &mut base, 1, &mut ws);
+            for threads in [2usize, 3, 7] {
+                let mut spec = vec![Complex::ZERO; plan.half_len()];
+                let mut ws_t = NdFftWorkspace::new();
+                plan.forward(&x, &mut spec, threads, &mut ws_t);
+                assert_eq!(spec, base, "shape {shape:?} threads {threads}");
+                let mut out = vec![0.0f64; n];
+                plan.inverse(&mut spec, &mut out, threads, &mut ws_t);
+                let mut base_out = vec![0.0f64; n];
+                let mut base_spec = base.clone();
+                plan.inverse(&mut base_spec, &mut base_out, 1, &mut ws);
+                assert_eq!(out, base_out, "shape {shape:?} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_is_stable_across_iterations() {
+        // Steady-state POCS iterations must not grow the workspace: after
+        // the first forward/inverse pair, allocated capacity is fixed.
+        let shape = [12usize, 10, 9]; // odd last axis exercises Bluestein
+        let n: usize = shape.iter().product();
+        let x = random_real(n, 5);
+        let plan = NdRealFft::new(&shape);
+        let mut ws = NdFftWorkspace::new();
+        let mut spec = vec![Complex::ZERO; plan.half_len()];
+        let mut out = vec![0.0f64; n];
+        plan.forward(&x, &mut spec, 2, &mut ws);
+        plan.inverse(&mut spec, &mut out, 2, &mut ws);
+        let warm = ws.allocated_elems();
+        assert!(warm > 0);
+        for _ in 0..3 {
+            plan.forward(&x, &mut spec, 2, &mut ws);
+            plan.inverse(&mut spec, &mut out, 2, &mut ws);
+        }
+        assert_eq!(ws.allocated_elems(), warm, "workspace grew in steady state");
+    }
+
+    #[test]
+    fn fold_full_matches_real_part_of_ifftn() {
+        // irfftn(fold_full(F)) == Re(ifftn(F)) for arbitrary, non-Hermitian F.
+        let mut rng = XorShift::new(88);
+        for shape in [vec![8usize], vec![9], vec![6, 8], vec![3, 4, 5]] {
+            let n: usize = shape.iter().product();
+            let full: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.normal(), rng.normal()))
+                .collect();
+            let want: Vec<f64> = ifftn(&full, &shape).iter().map(|c| c.re).collect();
+            let got = irfftn(&HalfSpectrum::fold_full(&full, &shape));
+            let scale = want.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-11 * scale,
+                    "shape {shape:?} idx {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_full_and_expand_are_inverse_on_hermitian_input() {
+        let shape = [6usize, 8];
+        let x = random_real(48, 3);
+        let half = rfftn(&x, &shape);
+        let full = half.expand();
+        let back = HalfSpectrum::from_full(&full, &shape);
+        assert_eq!(back, half);
+    }
+
+    #[test]
+    fn active_full_counts_hermitian_pairs() {
+        // 1-D n=8: bins 1..=3 are paired, 0 and 4 self-conjugate.
+        let mut hs = HalfSpectrum::zeros(&[8]);
+        hs.data_mut()[0] = Complex::ONE; // DC: 1
+        hs.data_mut()[2] = Complex::I; // paired: 2
+        hs.data_mut()[4] = Complex::ONE; // Nyquist: 1
+        assert_eq!(hs.active_full(), 4);
+        // Odd n=9: only bin 0 is self-conjugate.
+        let mut hs = HalfSpectrum::zeros(&[9]);
+        hs.data_mut()[4] = Complex::ONE; // paired: 2
+        assert_eq!(hs.active_full(), 2);
+    }
+
+    #[test]
+    fn for_each_full_bin_covers_the_lattice_once() {
+        for shape in [vec![8usize], vec![9], vec![4, 6], vec![3, 4, 5]] {
+            let n: usize = shape.iter().product();
+            let mut seen = vec![0usize; n];
+            let h_total = half_len(&shape);
+            for_each_full_bin(&shape, |full, half, _conj| {
+                assert!(half < h_total);
+                seen[full] += 1;
+            });
+            assert!(seen.iter().all(|&c| c == 1), "shape {shape:?}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn for_each_full_bin_values_match_fftn() {
+        let shape = [4usize, 6];
+        let x = random_real(24, 17);
+        let half = rfftn(&x, &shape);
+        let buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+        let full = fftn(&buf, &shape);
+        let scale = full.iter().map(|c| c.abs()).fold(1.0f64, f64::max);
+        for_each_full_bin(&shape, |fi, hi, conj| {
+            let v = if conj {
+                half.data()[hi].conj()
+            } else {
+                half.data()[hi]
+            };
+            assert!(
+                (v - full[fi]).abs() < 1e-10 * scale,
+                "full {fi} half {hi} conj {conj}: {v:?} vs {:?}",
+                full[fi]
+            );
+        });
+    }
+}

@@ -8,7 +8,7 @@
 
 use crate::data::Field;
 
-use super::{fftn, signed_freq, Complex};
+use super::{fftn, rfftn, signed_freq, Complex};
 
 /// A binned power spectrum: `power[k]` is `P(k)` for wavenumber `k`,
 /// `count[k]` the number of Fourier modes in the shell.
@@ -69,12 +69,23 @@ impl PowerSpectrum {
 pub fn power_spectrum(field: &Field) -> PowerSpectrum {
     let mean = field.mean();
     let denom = if mean.abs() < 1e-30 { 1.0 } else { mean };
-    let fluct: Vec<Complex> = field
+    let fluct: Vec<f64> = field
         .data()
         .iter()
-        .map(|&v| Complex::new((v - mean) / denom, 0.0))
+        .map(|&v| (v - mean) / denom)
         .collect();
-    power_spectrum_of_complex(&fluct, field.shape())
+    power_spectrum_of_real(&fluct, field.shape())
+}
+
+/// Power spectrum of a real buffer (no normalization), computed from the
+/// half spectrum: a Hermitian pair contributes `2·|X_k|²` to its shell
+/// (both mates land in the same shell because the radius is even in `k`),
+/// so only `rfftn` — half the transform work of [`power_spectrum_of_complex`]
+/// — is needed. Shell sums and mode counts are identical to the
+/// full-spectrum path up to rounding.
+pub fn power_spectrum_of_real(data: &[f64], shape: &[usize]) -> PowerSpectrum {
+    let half = rfftn(data, shape);
+    bin_radial_half(half.data(), shape)
 }
 
 /// Power spectrum of an already-prepared complex buffer (no normalization).
@@ -115,6 +126,54 @@ fn bin_radial(spec: &[Complex], shape: &[usize]) -> PowerSpectrum {
         for d in (0..ndim).rev() {
             idx[d] += 1;
             if idx[d] < shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    PowerSpectrum { power, count }
+}
+
+/// Radially bin a half-spectrum buffer (numpy `rfftn` layout). Stored bins
+/// whose Hermitian mate lies outside the half layout count with weight 2;
+/// the mate has the same shell radius (`signed_freq` is odd under `k → −k`,
+/// the radius is even) and the same `|X|²`.
+fn bin_radial_half(half: &[Complex], shape: &[usize]) -> PowerSpectrum {
+    let ndim = shape.len();
+    let last = shape[ndim - 1];
+    let h = last / 2 + 1;
+    let lead = &shape[..ndim - 1];
+    let rows: usize = lead.iter().product();
+    let nyq = if last % 2 == 0 { last / 2 } else { usize::MAX };
+    let mut max_r2 = 0.0f64;
+    for &d in shape {
+        let ny = (d / 2) as f64;
+        max_r2 += ny * ny;
+    }
+    let nbins = max_r2.sqrt().round() as usize + 1;
+    let mut power = vec![0.0; nbins];
+    let mut count = vec![0usize; nbins];
+
+    let mut idx = vec![0usize; lead.len()];
+    for r in 0..rows {
+        let mut r2_lead = 0.0f64;
+        for (d, &n) in lead.iter().enumerate() {
+            let f = signed_freq(idx[d], n) as f64;
+            r2_lead += f * f;
+        }
+        for (k, v) in half[r * h..(r + 1) * h].iter().enumerate() {
+            // Half-layout bins satisfy k ≤ last/2, so signed_freq(k) = k.
+            let f = k as f64;
+            let shell = (r2_lead + f * f).sqrt().round() as usize;
+            if shell < nbins {
+                let w = if k == 0 || k == nyq { 1 } else { 2 };
+                power[shell] += w as f64 * v.norm_sqr();
+                count[shell] += w;
+            }
+        }
+        for d in (0..lead.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < lead[d] {
                 break;
             }
             idx[d] = 0;
@@ -179,6 +238,35 @@ mod tests {
         // Every mode whose radius rounds inside the bin range is counted;
         // the 8³ box has corner radius √48 ≈ 6.93 so all 512 modes fit.
         assert_eq!(covered, 512);
+    }
+
+    #[test]
+    fn half_spectrum_binning_matches_full_path() {
+        // The rfft-based spectrum must reproduce the full-complex path to
+        // 1e-12 relative (same shells, same counts, same sums up to
+        // rounding) — this is the acceptance bar for swapping the engine.
+        use crate::util::XorShift;
+        for shape in [vec![64usize], vec![45], vec![12, 10], vec![8, 7, 6]] {
+            let n: usize = shape.iter().product();
+            let mut rng = XorShift::new(77 + n as u64);
+            let data: Vec<f64> = (0..n).map(|_| 50.0 + rng.normal()).collect();
+            let f = Field::new(&shape, data.clone(), Precision::Double);
+            let fast = power_spectrum(&f);
+            let mean = f.mean();
+            let fluct: Vec<Complex> = data
+                .iter()
+                .map(|&v| Complex::new((v - mean) / mean, 0.0))
+                .collect();
+            let slow = power_spectrum_of_complex(&fluct, &shape);
+            assert_eq!(fast.count, slow.count, "shape {shape:?}");
+            let peak = slow.power.iter().fold(0.0f64, |a, &b| a.max(b));
+            for (k, (a, b)) in fast.power.iter().zip(&slow.power).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * peak,
+                    "shape {shape:?} bin {k}: {a} vs {b}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Real-to-complex 1-D FFTs (half spectrum, numpy `rfft`/`irfft` layout).
+//!
+//! A length-`n` real signal has a Hermitian spectrum (`X[n−k] = conj(X[k])`),
+//! so only the `n/2 + 1` bins `0..=n/2` carry information. Computing just
+//! those — and inverting from just those — halves the arithmetic and memory
+//! traffic of the POCS hot loop relative to a full complex transform.
+//!
+//! * **Even `n`** uses the classic pack-split scheme: the real samples are
+//!   packed into `n/2` complex samples (`z[j] = x[2j] + i·x[2j+1]`), a
+//!   single `n/2`-point complex FFT runs (radix-2 when `n/2` is a power of
+//!   two, Bluestein otherwise — so *every* even size goes through the
+//!   packed form), and a twiddle pass splits the result into the half
+//!   spectrum. The inverse runs the same algebra backwards.
+//! * **Odd `n`** has no 2-sample packing; it falls back to one full complex
+//!   transform (Bluestein) and keeps bins `0..=n/2`. Correct for every `n`,
+//!   just without the 2× packing win.
+//!
+//! A [`RealFft`] is a *plan* (like [`Fft`]): twiddles and the inner complex
+//! plan are precomputed, and the `*_with_scratch` entry points allocate
+//! nothing.
+
+use std::f64::consts::PI;
+
+use super::{Complex, Fft, FftDirection};
+
+/// A planned real-to-complex FFT of fixed size `n`.
+///
+/// Layout and normalization follow numpy: `forward` is unnormalized and
+/// returns bins `0..=n/2`; `inverse` scales by `1/n`, so
+/// `irfft(rfft(x)) == x`.
+pub struct RealFft {
+    n: usize,
+    kind: RealKind,
+}
+
+enum RealKind {
+    /// n == 1: X[0] = x[0].
+    Tiny,
+    /// Even n: pack into n/2 complex samples, transform, post-split.
+    Packed {
+        /// Complex plan of size n/2.
+        inner: Fft,
+        /// w^k = e^{-2πik/n} for k in 0..=n/2.
+        twiddles: Vec<Complex>,
+    },
+    /// Odd n > 1: full complex transform, keep bins 0..=n/2.
+    Odd {
+        /// Complex plan of size n.
+        inner: Fft,
+    },
+}
+
+// `len` has no `is_empty` companion on purpose: the constructor asserts
+// `n ≥ 1`, so a plan can never be empty.
+#[allow(clippy::len_without_is_empty)]
+impl RealFft {
+    /// Plan a real transform of size `n` (n ≥ 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "real FFT size must be ≥ 1");
+        let kind = if n == 1 {
+            RealKind::Tiny
+        } else if n % 2 == 0 {
+            let m = n / 2;
+            let mut twiddles = Vec::with_capacity(m + 1);
+            for k in 0..=m {
+                twiddles.push(Complex::from_angle(-2.0 * PI * k as f64 / n as f64));
+            }
+            RealKind::Packed {
+                inner: Fft::new(m),
+                twiddles,
+            }
+        } else {
+            RealKind::Odd { inner: Fft::new(n) }
+        };
+        RealFft { n, kind }
+    }
+
+    /// Transform size (number of real samples).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Number of half-spectrum bins, `n/2 + 1`.
+    pub fn half_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Scratch elements required by the `*_with_scratch` entry points.
+    pub fn scratch_len(&self) -> usize {
+        match &self.kind {
+            RealKind::Tiny => 0,
+            RealKind::Packed { inner, .. } => self.n / 2 + inner.scratch_len(),
+            RealKind::Odd { inner } => self.n + inner.scratch_len(),
+        }
+    }
+
+    /// Forward transform: `n` real samples → `n/2 + 1` complex bins.
+    /// `out.len()` must be exactly `half_len()`; `scratch.len() ≥`
+    /// [`RealFft::scratch_len`]. Allocates nothing.
+    pub fn forward_with_scratch(
+        &self,
+        input: &[f64],
+        out: &mut [Complex],
+        scratch: &mut [Complex],
+    ) {
+        assert_eq!(input.len(), self.n, "input length != plan size");
+        assert_eq!(out.len(), self.half_len(), "output length != n/2 + 1");
+        match &self.kind {
+            RealKind::Tiny => {
+                out[0] = Complex::new(input[0], 0.0);
+            }
+            RealKind::Packed { inner, twiddles } => {
+                let m = self.n / 2;
+                let (z, rest) = scratch.split_at_mut(m);
+                for (j, zj) in z.iter_mut().enumerate() {
+                    *zj = Complex::new(input[2 * j], input[2 * j + 1]);
+                }
+                inner.process_with_scratch(z, FftDirection::Forward, rest);
+                // Split Z into the even/odd-sample spectra and recombine:
+                //   Xe = (Z[k] + conj(Z[m−k]))/2
+                //   Xo = −i·(Z[k] − conj(Z[m−k]))/2
+                //   X[k] = Xe + w^k·Xo,  w = e^{−2πi/n}
+                for (k, o) in out.iter_mut().enumerate() {
+                    let zk = z[k % m];
+                    let zmk = z[(m - k) % m].conj();
+                    let xe = (zk + zmk).scale(0.5);
+                    let t = (zk - zmk).scale(0.5);
+                    let xo = Complex::new(t.im, -t.re); // −i·t
+                    *o = xe + twiddles[k] * xo;
+                }
+            }
+            RealKind::Odd { inner } => {
+                let (buf, rest) = scratch.split_at_mut(self.n);
+                for (b, &x) in buf.iter_mut().zip(input) {
+                    *b = Complex::new(x, 0.0);
+                }
+                inner.process_with_scratch(buf, FftDirection::Forward, rest);
+                out.copy_from_slice(&buf[..self.half_len()]);
+            }
+        }
+    }
+
+    /// Inverse transform: `n/2 + 1` complex bins → `n` real samples, with
+    /// the numpy `1/n` normalization. The spectrum is taken as the half
+    /// spectrum of a real signal (the Hermitian extension is implied).
+    /// Allocates nothing.
+    pub fn inverse_with_scratch(
+        &self,
+        spec: &[Complex],
+        out: &mut [f64],
+        scratch: &mut [Complex],
+    ) {
+        assert_eq!(spec.len(), self.half_len(), "spectrum length != n/2 + 1");
+        assert_eq!(out.len(), self.n, "output length != plan size");
+        match &self.kind {
+            RealKind::Tiny => {
+                out[0] = spec[0].re;
+            }
+            RealKind::Packed { inner, twiddles } => {
+                let m = self.n / 2;
+                let (z, rest) = scratch.split_at_mut(m);
+                // Invert the split:
+                //   Xe = (X[k] + conj(X[m−k]))/2
+                //   Xo = (X[k] − conj(X[m−k]))/2 · w^{−k}
+                //   Z[k] = Xe + i·Xo
+                for (k, zk) in z.iter_mut().enumerate() {
+                    let xk = spec[k];
+                    let xmk = spec[m - k].conj();
+                    let xe = (xk + xmk).scale(0.5);
+                    let t = (xk - xmk).scale(0.5);
+                    let xo = t * twiddles[k].conj();
+                    *zk = Complex::new(xe.re - xo.im, xe.im + xo.re); // Xe + i·Xo
+                }
+                inner.process_with_scratch(z, FftDirection::Inverse, rest);
+                for (j, zj) in z.iter().enumerate() {
+                    out[2 * j] = zj.re;
+                    out[2 * j + 1] = zj.im;
+                }
+            }
+            RealKind::Odd { inner } => {
+                let h = self.half_len();
+                let (buf, rest) = scratch.split_at_mut(self.n);
+                buf[..h].copy_from_slice(spec);
+                for k in h..self.n {
+                    buf[k] = spec[self.n - k].conj();
+                }
+                inner.process_with_scratch(buf, FftDirection::Inverse, rest);
+                for (o, b) in out.iter_mut().zip(buf.iter()) {
+                    *o = b.re;
+                }
+            }
+        }
+    }
+
+    /// Out-of-place convenience wrapper around
+    /// [`RealFft::forward_with_scratch`].
+    pub fn forward(&self, input: &[f64]) -> Vec<Complex> {
+        let mut out = vec![Complex::ZERO; self.half_len()];
+        let mut scratch = vec![Complex::ZERO; self.scratch_len()];
+        self.forward_with_scratch(input, &mut out, &mut scratch);
+        out
+    }
+
+    /// Out-of-place convenience wrapper around
+    /// [`RealFft::inverse_with_scratch`].
+    pub fn inverse(&self, spec: &[Complex]) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.n];
+        let mut scratch = vec![Complex::ZERO; self.scratch_len()];
+        self.inverse_with_scratch(spec, &mut out, &mut scratch);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn random_real(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Half spectrum via the complex plan — the correctness oracle.
+    fn rfft_via_complex(x: &[f64]) -> Vec<Complex> {
+        let n = x.len();
+        let buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+        let full = Fft::new(n).transform(&buf, FftDirection::Forward);
+        full[..n / 2 + 1].to_vec()
+    }
+
+    fn assert_close_c(a: &[Complex], b: &[Complex], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        let scale = b.iter().map(|c| c.abs()).fold(1.0f64, f64::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let d = (*x - *y).abs();
+            assert!(d <= tol * scale, "bin {i}: {x:?} vs {y:?} (|d|={d:.3e})");
+        }
+    }
+
+    #[test]
+    fn matches_complex_fft_all_parities() {
+        // pow2, even non-pow2 (packed + Bluestein inner), odd (fallback).
+        for &n in &[1usize, 2, 4, 8, 64, 256, 6, 10, 12, 100, 30, 3, 5, 7, 45, 243] {
+            let x = random_real(n, 1000 + n as u64);
+            let got = RealFft::new(n).forward(&x);
+            let want = rfft_via_complex(&x);
+            assert_close_c(&got, &want, 1e-9);
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for &n in &[1usize, 2, 8, 10, 17, 100, 128, 1000, 509] {
+            let x = random_real(n, 7 + n as u64);
+            let plan = RealFft::new(n);
+            let back = plan.inverse(&plan.forward(&x));
+            let scale = x.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+            for (i, (a, b)) in x.iter().zip(&back).enumerate() {
+                assert!((a - b).abs() < 1e-11 * scale, "n={n} i={i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_entry_points_allocate_into_caller_buffers() {
+        let n = 48;
+        let x = random_real(n, 3);
+        let plan = RealFft::new(n);
+        // Dirty scratch must not affect the result.
+        let mut out = vec![Complex::ZERO; plan.half_len()];
+        let mut scratch = vec![Complex::new(1.5, -2.5); plan.scratch_len()];
+        plan.forward_with_scratch(&x, &mut out, &mut scratch);
+        assert_close_c(&out, &rfft_via_complex(&x), 1e-10);
+        let mut back = vec![0.0f64; n];
+        plan.inverse_with_scratch(&out, &mut back, &mut scratch);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dc_and_nyquist_are_real_for_real_input() {
+        let n = 64;
+        let x = random_real(n, 9);
+        let spec = RealFft::new(n).forward(&x);
+        assert!(spec[0].im.abs() < 1e-12, "DC {:?}", spec[0]);
+        assert!(spec[n / 2].im.abs() < 1e-9, "Nyquist {:?}", spec[n / 2]);
+        let sum: f64 = x.iter().sum();
+        assert!((spec[0].re - sum).abs() < 1e-9 * sum.abs().max(1.0));
+    }
+
+    #[test]
+    fn pure_cosine_lands_in_one_bin() {
+        let n = 128;
+        let k0 = 9;
+        let x: Vec<f64> = (0..n)
+            .map(|i| (2.0 * PI * k0 as f64 * i as f64 / n as f64).cos())
+            .collect();
+        let spec = RealFft::new(n).forward(&x);
+        for (k, c) in spec.iter().enumerate() {
+            if k == k0 {
+                assert!((c.re - n as f64 / 2.0).abs() < 1e-9, "bin {k}: {c:?}");
+            } else {
+                assert!(c.abs() < 1e-9, "leakage at {k}: {c:?}");
+            }
+        }
+    }
+}

@@ -8,8 +8,11 @@
 //!
 //! The crate contains everything the paper depends on, built from scratch:
 //!
-//! * [`fourier`] — FFTs (radix-2 / mixed-radix / Bluestein), N-D transforms,
-//!   and radially-binned power spectra;
+//! * [`fourier`] — FFTs (radix-2 / mixed-radix / Bluestein), real
+//!   half-spectrum transforms ([`fourier::rfftn`] / [`fourier::NdRealFft`] —
+//!   the POCS hot path: half the arithmetic of the complex transform,
+//!   allocation-free scratch plans, multi-threaded line sweeps), N-D
+//!   transforms, and radially-binned power spectra;
 //! * [`compressors`] — three error-bounded base compressors in the style of
 //!   SZ3 (prediction-based), ZFP (block-transform), and SPERR (wavelet);
 //! * [`correction`] — the FFCz contribution itself: POCS alternating

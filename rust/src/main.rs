@@ -78,6 +78,8 @@ fn print_usage() {
          \x20 compress    --input F --output F [--base sz-like|zfp-like|sperr-like]\n\
          \x20             [--eb REL | --abs-eb ABS]\n\
          \x20             [--db REL | --abs-db ABS | --power-spectrum REL]\n\
+         \x20             [--threads N]  POCS transform threads (output is\n\
+         \x20             identical for every N)\n\
          \x20 decompress  --input F --output F\n\
          \x20 verify      --original F --archive F [--eb REL] [--db REL]\n\
          \x20 synth       --dataset NAME --scale N --output F   (nyx-baryon, nyx-dm,\n\
@@ -93,7 +95,7 @@ fn print_usage() {
          \x20             [--base NAME | --lossless] [--base-only]\n\
          \x20             [--eb REL | --abs-eb ABS]\n\
          \x20             [--db REL | --abs-db ABS | --power-spectrum REL]\n\
-         \x20             [--max-iters N] [--quant-retries N]\n\
+         \x20             [--max-iters N] [--quant-retries N] [--threads N]\n\
          \x20             [--chunk-codec 'KEY=SPEC[;KEY=SPEC…]']\n\
          \x20             [--workers N] [--queue-depth N] [--in-memory]\n\
          \x20             streams chunk payloads to the file as they are\n\
@@ -105,7 +107,7 @@ fn print_usage() {
          \x20               SPEC      = 'lossless' | BASE [':' opt {',' opt}]\n\
          \x20               opt       = 'eb=R' | 'abs-eb=A' | 'db=R' | 'abs-db=A'\n\
          \x20                         | 'ps=R' | 'iters=N' | 'quant-retries=N'\n\
-         \x20                         | 'base-only'\n\
+         \x20                         | 'threads=N' | 'base-only'\n\
          \x20 archive     extract --input F --output F [--workers N]\n\
          \x20 archive     inspect --input F [--chunks]\n\
          \x20 archive     read-region --input F --origin A,B,C --shape A,B,C\n\
@@ -176,7 +178,8 @@ fn frequency_bound_flag(flags: &HashMap<String, String>) -> Result<FrequencyBoun
 /// Parse one `--chunk-codec` chain mini-spec: `lossless`, or
 /// `BASE[:key=val,…]` with keys `eb` / `abs-eb` / `db` / `abs-db` / `ps`
 /// (power-spectrum relative) / `iters` (POCS iteration cap) /
-/// `quant-retries` (quantization bound-shrink retries) / `base-only`.
+/// `quant-retries` (quantization bound-shrink retries) / `threads` (POCS
+/// transform threads, execution-only) / `base-only`.
 /// The full grammar (EBNF) is in `docs/FORMAT.md`.
 fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
     let s = s.trim();
@@ -192,6 +195,7 @@ fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
     let mut frequency: Option<FrequencyBound> = None;
     let mut max_iters = 200usize;
     let mut max_quant_retries = 3usize;
+    let mut threads = 1usize;
     let mut correction_knobs = false;
     let mut base_only = false;
     for part in params.split(',').filter(|p| !p.trim().is_empty()) {
@@ -226,6 +230,13 @@ fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
                 max_quant_retries = int()?;
                 correction_knobs = true;
             }
+            "threads" => {
+                threads = int()?;
+                if threads == 0 {
+                    bail!("chunk-codec key 'threads' must be ≥ 1 in '{s}'");
+                }
+                correction_knobs = true;
+            }
             "base-only" => base_only = true,
             other => bail!("unknown chunk-codec key '{other}' in '{s}'"),
         }
@@ -233,7 +244,7 @@ fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
     if base_only && (frequency.is_some() || correction_knobs) {
         bail!(
             "chunk-codec spec '{s}' combines base-only with a correction key \
-             (db / abs-db / ps / iters / quant-retries) — pick one"
+             (db / abs-db / ps / iters / quant-retries / threads) — pick one"
         );
     }
     Ok(if base_only {
@@ -247,6 +258,7 @@ fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
                     .unwrap_or(FrequencyBound::Uniform(BoundSpec::Relative(1e-3))),
                 max_iters,
                 max_quant_retries,
+                threads,
             },
         )
     })
@@ -317,6 +329,7 @@ fn build_config(flags: &HashMap<String, String>) -> Result<FfczConfig> {
         frequency: frequency_bound_flag(flags)?,
         max_iters: parse_f64(flags, "max-iters", 200.0)?.max(1.0) as usize,
         max_quant_retries: parse_f64(flags, "quant-retries", 3.0)?.max(0.0) as usize,
+        threads: parse_f64(flags, "threads", 1.0)?.max(1.0) as usize,
     })
 }
 

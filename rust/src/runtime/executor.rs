@@ -127,7 +127,11 @@ impl PjrtEngine {
         Ok(PocsResult {
             corrected_eps: corrected.iter().map(|&v| v as f64).collect(),
             spat_edits,
-            freq_edits,
+            // Hermitian *projection* (like the native engines): the f32
+            // artifact's mirror bins match the stored bins only up to f32
+            // rounding, and only the Hermitian part of the edits reaches
+            // the real ε — folding keeps the edits-reconstruct invariant.
+            freq_edits: crate::fourier::HalfSpectrum::fold_full(&freq_edits, shape),
             iterations: iterations.max(0) as usize,
             converged,
             active_spat,

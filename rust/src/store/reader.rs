@@ -2,10 +2,11 @@
 //! verified, per-chunk codec chains), and partial `read_region` that
 //! touches only intersecting chunks.
 
+use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -70,6 +71,55 @@ pub struct Store {
     /// Start of the manifest region — chunk payloads must end before it.
     manifest_offset: u64,
     chunks_decoded: AtomicUsize,
+    /// Decoded-chunk LRU (disabled until [`Store::set_cache_budget`]).
+    cache: Mutex<ChunkCache>,
+    cache_hits: AtomicUsize,
+    cache_misses: AtomicUsize,
+}
+
+/// Decoded-chunk LRU keyed by chunk index, bounded by a byte budget
+/// (decoded `f64` samples). Overlapping `read_region` windows re-touch the
+/// same chunks; caching the decoded fields skips the payload fetch,
+/// CRC check, and codec decode on every re-touch.
+struct ChunkCache {
+    /// Byte budget; 0 disables caching entirely (the default).
+    budget: usize,
+    /// Decoded bytes currently held.
+    bytes: usize,
+    /// Monotonic access clock for LRU ordering.
+    clock: u64,
+    entries: HashMap<usize, CacheEntry>,
+}
+
+struct CacheEntry {
+    stamp: u64,
+    field: Arc<Field>,
+}
+
+impl ChunkCache {
+    fn disabled() -> Self {
+        Self {
+            budget: 0,
+            bytes: 0,
+            clock: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Evict least-recently-used entries until within budget.
+    fn evict_to_budget(&mut self) {
+        while self.bytes > self.budget && !self.entries.is_empty() {
+            let oldest = *self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k)
+                .expect("non-empty cache has a minimum");
+            if let Some(e) = self.entries.remove(&oldest) {
+                self.bytes -= e.field.len() * 8;
+            }
+        }
+    }
 }
 
 impl Store {
@@ -181,6 +231,9 @@ impl Store {
             codecs,
             manifest_offset,
             chunks_decoded: AtomicUsize::new(0),
+            cache: Mutex::new(ChunkCache::disabled()),
+            cache_hits: AtomicUsize::new(0),
+            cache_misses: AtomicUsize::new(0),
         })
     }
 
@@ -197,9 +250,96 @@ impl Store {
         &self.manifest.shape
     }
 
-    /// Number of chunk decodes performed by this handle so far.
+    /// Number of chunk decodes performed by this handle so far (cache hits
+    /// do not decode, so they do not count).
     pub fn chunks_decoded(&self) -> usize {
         self.chunks_decoded.load(Ordering::Relaxed)
+    }
+
+    /// Enable (or resize) the decoded-chunk LRU cache: decoded chunks are
+    /// kept up to `bytes` of decoded samples and served to overlapping
+    /// [`Store::read_region`] windows without re-fetching or re-decoding.
+    /// A budget of 0 disables caching and drops held chunks (the default
+    /// state). Shrinking evicts least-recently-used entries immediately.
+    pub fn set_cache_budget(&self, bytes: usize) {
+        let mut cache = self.cache.lock().unwrap();
+        cache.budget = bytes;
+        if bytes == 0 {
+            cache.entries.clear();
+            cache.bytes = 0;
+        } else {
+            cache.evict_to_budget();
+        }
+    }
+
+    /// Builder-style [`Store::set_cache_budget`].
+    pub fn with_cache_budget(self, bytes: usize) -> Self {
+        self.set_cache_budget(bytes);
+        self
+    }
+
+    /// Cache hits served so far (0 while the cache is disabled).
+    pub fn cache_hits(&self) -> usize {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (decodes performed with the cache enabled).
+    pub fn cache_misses(&self) -> usize {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Decoded bytes currently held by the cache.
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.lock().unwrap().bytes
+    }
+
+    /// Decode chunk `index` through the LRU cache (a plain
+    /// [`Store::decode_chunk`] when caching is disabled). The chunk decode
+    /// itself runs outside the cache lock, so concurrent
+    /// [`Store::read_region`] workers never serialize on a decode; two
+    /// racing misses on the same chunk decode twice and the second insert
+    /// wins.
+    pub fn decode_chunk_cached(&self, index: usize) -> Result<Arc<Field>> {
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if cache.budget == 0 {
+                drop(cache);
+                return Ok(Arc::new(self.decode_chunk(index)?));
+            }
+            cache.clock += 1;
+            let stamp = cache.clock;
+            if let Some(entry) = cache.entries.get_mut(&index) {
+                entry.stamp = stamp;
+                let field = entry.field.clone();
+                drop(cache);
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(field);
+            }
+        }
+        let field = Arc::new(self.decode_chunk(index)?);
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let mut cache = self.cache.lock().unwrap();
+        if cache.budget == 0 {
+            // Disabled while we were decoding.
+            return Ok(field);
+        }
+        let field_bytes = field.len() * 8;
+        if field_bytes <= cache.budget {
+            cache.clock += 1;
+            let stamp = cache.clock;
+            if let Some(old) = cache.entries.insert(
+                index,
+                CacheEntry {
+                    stamp,
+                    field: field.clone(),
+                },
+            ) {
+                cache.bytes -= old.field.len() * 8;
+            }
+            cache.bytes += field_bytes;
+            cache.evict_to_budget();
+        }
+        Ok(field)
     }
 
     /// Raw payload bytes of chunk `index`.
@@ -277,7 +417,7 @@ impl Store {
         let mut out = vec![0.0f64; n];
         let pieces = par_try_map(ids.len(), workers, |j| {
             let index = ids[j];
-            let chunk = self.decode_chunk(index)?;
+            let chunk = self.decode_chunk_cached(index)?;
             let coords = self.grid.chunk_coords(index);
             let c_origin = self.grid.chunk_origin(&coords);
             let c_extent = self.grid.chunk_extent(&coords);
@@ -373,6 +513,50 @@ mod tests {
         let err = store.decode_chunk(0).unwrap_err();
         assert!(format!("{err:#}").contains("CRC-32"), "{err:#}");
         assert!(store.decompress_all(1).is_err());
+    }
+
+    #[test]
+    fn lru_cache_serves_overlapping_regions_without_redecoding() {
+        let (field, bytes) = store_bytes();
+        let store = Store::from_bytes(bytes).unwrap();
+        store.set_cache_budget(field.len() * 8); // room for every chunk
+        let a = store.read_region(&[0, 0], &[10, 8], 2).unwrap();
+        let decoded_cold = store.chunks_decoded();
+        assert!(decoded_cold >= 4);
+        assert_eq!(store.cache_misses(), decoded_cold);
+        assert_eq!(store.cache_hits(), 0);
+        // Same window again: all chunks come from the cache.
+        let b = store.read_region(&[0, 0], &[10, 8], 2).unwrap();
+        assert_eq!(store.chunks_decoded(), decoded_cold, "re-decoded");
+        assert_eq!(store.cache_hits(), decoded_cold);
+        assert_eq!(a.data(), b.data());
+        // Overlapping window: only the newly-touched chunks decode.
+        let expect = extract_subarray(field.data(), field.shape(), &[2, 2], &[6, 5]);
+        let c = store.read_region(&[2, 2], &[6, 5], 1).unwrap();
+        assert_eq!(c.data(), &expect[..]);
+        assert_eq!(store.chunks_decoded(), decoded_cold, "window inside cached chunks");
+    }
+
+    #[test]
+    fn lru_cache_respects_byte_budget() {
+        let (_, bytes) = store_bytes();
+        let store = Store::from_bytes(bytes).unwrap();
+        // Room for roughly two 5×4 chunks of f64s.
+        let budget = 2 * 5 * 4 * 8;
+        store.set_cache_budget(budget);
+        store.decompress_all(1).unwrap();
+        assert!(
+            store.cache_bytes() <= budget,
+            "cache {} bytes exceeds budget {budget}",
+            store.cache_bytes()
+        );
+        assert!(store.cache_bytes() > 0);
+        // Disabling drops everything and stops counting.
+        store.set_cache_budget(0);
+        assert_eq!(store.cache_bytes(), 0);
+        let (hits, misses) = (store.cache_hits(), store.cache_misses());
+        store.decompress_all(1).unwrap();
+        assert_eq!((store.cache_hits(), store.cache_misses()), (hits, misses));
     }
 
     #[test]

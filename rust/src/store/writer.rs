@@ -123,6 +123,12 @@ pub struct StoreWriteReport {
     pub elapsed: Duration,
 }
 
+/// POCS transform thread count a chain runs with (1 when it has no
+/// correction stage).
+fn chain_threads(spec: &CodecChainSpec) -> usize {
+    spec.correction.as_ref().map_or(1, |c| c.threads.max(1))
+}
+
 /// Resolve the default chain plus overrides into a deduplicated chain
 /// table and a per-chunk chain assignment.
 fn resolve_chains(
@@ -145,7 +151,17 @@ fn resolve_chains(
                     grid.chunk_key(grid.chunk_count() - 1)
                 );
             };
-            let idx = match chains.iter().position(|c| c == chain) {
+            // Dedup requires the *execution* thread count to match too:
+            // `CodecChainSpec::eq` deliberately ignores `threads` (it is
+            // not codec identity and never serialized), but collapsing a
+            // `threads=`-only override onto an existing entry would encode
+            // the chunk with the existing entry's thread count. Entries
+            // that differ only in threads serialize to identical bytes, so
+            // the extra table slot costs a few manifest bytes at most.
+            let idx = match chains
+                .iter()
+                .position(|c| c == chain && chain_threads(c) == chain_threads(chain))
+            {
                 Some(idx) => idx,
                 None => {
                     chains.push(chain.clone());
@@ -510,6 +526,24 @@ mod tests {
         let field = GrfBuilder::new(&[8, 8]).seed(1).build();
         let opts = StoreWriteOptions::new(&[4]);
         assert!(encode_store(&field, &CodecChainSpec::lossless(), &opts).is_err());
+    }
+
+    #[test]
+    fn threads_only_override_keeps_its_own_chain_entry() {
+        // `CodecChainSpec::eq` ignores `threads`, but a threads-only
+        // override must NOT collapse onto the default chain entry — the
+        // chunk would silently encode with the default's thread count.
+        let grid = ChunkGrid::new(&[8, 8], &[4, 4]).unwrap();
+        let default = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+        let threaded =
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3).with_threads(4));
+        let overrides = vec![("c/0/1".to_string(), threaded.clone())];
+        let (chains, assign) = resolve_chains(&grid, &default, &overrides).unwrap();
+        assert_eq!(chains.len(), 2, "threads-only override was deduped away");
+        assert_eq!(assign, vec![0, 1, 0, 0]);
+        assert_eq!(chains[1].ffcz_config().unwrap().threads, 4);
+        // Wire bytes are still identical (threads is never serialized).
+        assert_eq!(chains[0].to_bytes(), chains[1].to_bytes());
     }
 
     #[test]

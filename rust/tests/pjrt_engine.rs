@@ -65,6 +65,7 @@ fn pjrt_matches_native_engine() {
             spatial: Bounds::Global(e),
             frequency: Bounds::Global(d),
             max_iters: 64,
+            threads: 1,
         },
     );
     assert_eq!(pjrt.converged, native.converged);

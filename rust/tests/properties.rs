@@ -9,15 +9,21 @@
 //! 4. Huffman/bit-I/O/varint round-trip arbitrary data;
 //! 5. every base compressor obeys its pointwise bound on adversarial
 //!    random fields;
-//! 6. FFT–IFFT identity on random shapes.
+//! 6. FFT–IFFT identity on random shapes;
+//! 7. `rfftn`/`irfftn` match the complex `fftn` on random real inputs
+//!    across pow2/odd/mixed N-D shapes (and round-trip);
+//! 8. the half-spectrum POCS fast path reproduces
+//!    `alternating_projection_reference` within 1e-10, with dual bounds
+//!    verified by `check_dual_bounds` on every corrected output.
 
 use ffcz::compressors::{paper_compressors, ErrorBound};
 use ffcz::correction::{
-    alternating_projection, check_dual_bounds, Bounds, PocsParams, QuantizedEdits,
+    alternating_projection, alternating_projection_reference, check_dual_bounds, Bounds,
+    PocsParams, QuantizedEdits,
 };
 use ffcz::data::{Field, Precision};
 use ffcz::encoding::{huffman_decode, huffman_encode};
-use ffcz::fourier::{fftn, ifftn, Complex};
+use ffcz::fourier::{fftn, ifftn, irfftn, rfftn, Complex};
 use ffcz::util::XorShift;
 
 const CASES: usize = 25;
@@ -44,6 +50,7 @@ fn prop_pocs_always_lands_in_intersection() {
             spatial: Bounds::Global(e),
             frequency: Bounds::Global(d),
             max_iters: 2000,
+            threads: 1,
         };
         let r = alternating_projection(&eps0, &shape, &params);
         assert!(r.converged, "case {case} shape {shape:?} did not converge");
@@ -69,9 +76,10 @@ fn prop_edits_reconstruct_correction() {
             spatial: Bounds::Global(e),
             frequency: Bounds::Global(d),
             max_iters: 2000,
+            threads: 1,
         };
         let r = alternating_projection(&eps0, &shape, &params);
-        let mut freq = r.freq_edits.clone();
+        let mut freq = r.freq_edits.expand();
         ffcz::fourier::ifftn_inplace(&mut freq, &shape);
         for i in 0..n {
             let rebuilt = eps0[i] + r.spat_edits[i] + freq[i].re;
@@ -179,6 +187,101 @@ fn prop_fft_roundtrip_random_shapes() {
         let scale = x.iter().map(|c| c.abs()).fold(1.0f64, f64::max);
         for (a, b) in x.iter().zip(&y) {
             assert!((*a - *b).abs() < 1e-10 * scale);
+        }
+    }
+}
+
+#[test]
+fn prop_rfftn_matches_complex_fftn() {
+    // The expanded half spectrum of a random real field equals the full
+    // complex transform, and irfftn inverts rfftn — across pow2, odd
+    // (Bluestein), and mixed N-D shapes.
+    let mut rng = XorShift::new(0x5EC7);
+    for case in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let n: usize = shape.iter().product();
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let half = rfftn(&x, &shape);
+        let expanded = half.expand();
+        let buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+        let full = fftn(&buf, &shape);
+        let scale = full.iter().map(|c| c.abs()).fold(1.0f64, f64::max);
+        for (k, (a, b)) in expanded.iter().zip(&full).enumerate() {
+            assert!(
+                (*a - *b).abs() < 1e-9 * scale,
+                "case {case} shape {shape:?} bin {k}: {a:?} vs {b:?}"
+            );
+        }
+        let back = irfftn(&half);
+        let xscale = x.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+        for (i, (a, b)) in x.iter().zip(&back).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-10 * xscale,
+                "case {case} shape {shape:?} idx {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pocs_fast_path_matches_reference() {
+    // The half-spectrum loop is the production path; the full-complex loop
+    // is the oracle. Corrections, spatial edits, and expanded frequency
+    // edits must agree to 1e-10, and the fast output must pass the
+    // dual-bound verifier in its own right.
+    let mut rng = XorShift::new(0xFA57);
+    for case in 0..15 {
+        let shape = random_shape(&mut rng);
+        let n: usize = shape.iter().product();
+        let e = rng.uniform(0.01, 0.5);
+        let d = rng.uniform(0.1, 1.0) * e * (n as f64).sqrt();
+        let eps0: Vec<f64> = (0..n).map(|_| rng.uniform(-e, e)).collect();
+        let params = PocsParams {
+            spatial: Bounds::Global(e),
+            frequency: Bounds::Global(d),
+            max_iters: 2000,
+            threads: 1,
+        };
+        let fast = alternating_projection(&eps0, &shape, &params);
+        let reference = alternating_projection_reference(&eps0, &shape, &params);
+        // FFT-rounding differences can fire the convergence check one
+        // iteration apart; the corrections still agree to 1e-10 below.
+        assert!(
+            fast.iterations.abs_diff(reference.iterations) <= 1,
+            "case {case} shape {shape:?}: iterations {} vs {}",
+            fast.iterations,
+            reference.iterations
+        );
+        assert_eq!(fast.converged, reference.converged, "case {case}");
+        // 1e-9, scaled by the bound magnitudes: covers FFT rounding plus
+        // the sub-tolerance clips of a rounding-level extra iteration.
+        let scale = 1e-9 * (1.0 + d);
+        for i in 0..n {
+            assert!(
+                (fast.corrected_eps[i] - reference.corrected_eps[i]).abs() < scale,
+                "case {case} shape {shape:?} corrected idx {i}"
+            );
+            assert!(
+                (fast.spat_edits[i] - reference.spat_edits[i]).abs() < scale,
+                "case {case} shape {shape:?} spat idx {i}"
+            );
+        }
+        let ff = fast.freq_edits.expand();
+        let rf = reference.freq_edits.expand();
+        let fscale = 1e-9 * (d + e * (n as f64).sqrt());
+        for k in 0..n {
+            assert!(
+                (ff[k] - rf[k]).abs() < fscale,
+                "case {case} shape {shape:?} freq bin {k}"
+            );
+        }
+        if fast.converged {
+            let (s_ok, f_ok, ms, mf) =
+                check_dual_bounds(&fast.corrected_eps, &shape, &params.spatial, &params.frequency);
+            assert!(
+                s_ok && f_ok,
+                "case {case} shape {shape:?}: max_s {ms} max_f {mf}"
+            );
         }
     }
 }
