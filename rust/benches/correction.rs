@@ -1,28 +1,32 @@
 //! End-to-end FFCz correction benchmarks (Table III / Fig. 9 analogue):
-//! the POCS engine comparison (full-complex reference vs the half-spectrum
-//! rfft path, single- and multi-threaded) across 1-D/2-D/3-D pow2 and
-//! Bluestein shapes — written to `BENCH_correction.json` so the correction
-//! kernel finally has a perf trajectory — plus the full
-//! alternating-projection + edit-coding path across Δ regimes and field
-//! sizes, native engine vs PJRT artifact when available.
+//! the pow-2 FFT *kernel* comparison (split-radix-family radix-4 vs the
+//! radix-2 oracle baseline, over every last-axis line of 1-D/2-D/3-D pow2
+//! volumes), the POCS engine comparison (full-complex reference vs the
+//! half-spectrum rfft path, single- and multi-threaded) across
+//! 1-D/2-D/3-D pow2 and Bluestein shapes — written to
+//! `BENCH_correction.json` so the correction kernel finally has a perf
+//! trajectory — plus the full alternating-projection + edit-coding path
+//! across Δ regimes and field sizes, native engine vs PJRT artifact when
+//! available.
 //!
 //! `cargo bench --bench correction`            # everything
-//! `cargo bench --bench correction -- --quick` # engine table only, small
-//!                                             # shapes (CI schema smoke)
+//! `cargo bench --bench correction -- --quick` # kernel + engine tables,
+//!                                             # small shapes (CI smoke)
 
 use ffcz::compressors::{szlike::SzLike, Compressor, ErrorBound};
 use ffcz::correction::{
     alternating_projection, alternating_projection_reference, Bounds, PocsParams,
 };
 use ffcz::data::synth;
-use ffcz::fourier::Complex;
+use ffcz::fourier::{Complex, Fft, FftDirection};
 use ffcz::util::bench::{black_box, Bench};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("FFCZ_BENCH_QUICK").is_ok();
     println!("== correction benchmarks{} ==", if quick { " (quick)" } else { "" });
-    pocs_engine_comparison(quick);
+    let kernel_rows = kernel_comparison(quick);
+    pocs_engine_comparison(quick, &kernel_rows);
     if quick {
         return;
     }
@@ -31,6 +35,104 @@ fn main() {
     }
     bench_pjrt();
     bench_predictor_ablation();
+}
+
+/// One measured pow-2 kernel configuration.
+struct KernelRow {
+    name: &'static str,
+    shape: Vec<usize>,
+    /// "split_radix4" (production radix-4 + radix-2 finish) or "radix2"
+    /// (the oracle baseline).
+    kernel: &'static str,
+    median_s: f64,
+    /// Per 1-D line transform (forward + inverse pair counted as two).
+    ns_per_transform: f64,
+    gbps: f64,
+    /// vs the radix-2 baseline on the same shape (1.0 for the baseline).
+    speedup_vs_radix2: f64,
+}
+
+/// Pow-2 complex-kernel comparison: the production split-radix-family
+/// radix-4 kernel vs the radix-2 oracle, measured over every last-axis
+/// line of each volume (one forward + inverse sweep per iteration — the
+/// line-transform workload the N-D engines are built from). Emits the
+/// `kernel_rows` table of `BENCH_correction.json`; the acceptance target
+/// is ≥ 1.15× on the 3-D pow-2 shape.
+fn kernel_comparison(quick: bool) -> Vec<KernelRow> {
+    println!("== pow-2 FFT kernel: split-radix (radix-4) vs radix-2 baseline ==");
+    let shapes: Vec<(&'static str, Vec<usize>)> = if quick {
+        vec![("1d_pow2", vec![4096]), ("3d_pow2", vec![16, 16, 16])]
+    } else {
+        vec![
+            ("1d_pow2", vec![65536]),
+            ("2d_pow2", vec![256, 256]),
+            ("3d_pow2", vec![64, 64, 64]),
+        ]
+    };
+    let samples = if quick { 3 } else { 7 };
+    let mut rows: Vec<KernelRow> = Vec::new();
+    for &(name, ref shape) in &shapes {
+        let n: usize = shape.iter().product();
+        let len = shape[shape.len() - 1];
+        let lines = n / len;
+        let plan = Fft::new(len);
+        let mut rng = ffcz::util::XorShift::new(9000 + n as u64);
+        let mut buf: Vec<Complex> = (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect();
+        let mut scratch = vec![Complex::ZERO; plan.scratch_len()];
+        // One iteration = forward + inverse over every line: 2·lines
+        // transforms moving 2·n complex elements (32 B per element pair of
+        // passes).
+        let transforms = 2 * lines;
+        let bytes = 2 * n * 16;
+
+        let mut measure = |kernel: &'static str| {
+            let r = Bench::new(format!("fft_{kernel}_{name}"))
+                .bytes(bytes)
+                .samples(samples)
+                .run(|| {
+                    for dir in [FftDirection::Forward, FftDirection::Inverse] {
+                        for li in 0..lines {
+                            let line = &mut buf[li * len..(li + 1) * len];
+                            if kernel == "radix2" {
+                                plan.process_with_scratch_radix2(line, dir, &mut scratch);
+                            } else {
+                                plan.process_with_scratch(line, dir, &mut scratch);
+                            }
+                        }
+                    }
+                    black_box(buf[0])
+                });
+            println!("{}", r.report());
+            r
+        };
+        let base = measure("radix2");
+        let base_median = base.median.as_secs_f64();
+        rows.push(KernelRow {
+            name,
+            shape: shape.clone(),
+            kernel: "radix2",
+            median_s: base_median,
+            ns_per_transform: base_median / transforms as f64 * 1e9,
+            gbps: base.gbps().unwrap_or(0.0),
+            speedup_vs_radix2: 1.0,
+        });
+        let fast = measure("split_radix4");
+        let fast_median = fast.median.as_secs_f64();
+        let speedup = base_median / fast_median;
+        println!("  -> {name} {shape:?}: split-radix {speedup:.2}x vs radix-2");
+        rows.push(KernelRow {
+            name,
+            shape: shape.clone(),
+            kernel: "split_radix4",
+            median_s: fast_median,
+            ns_per_transform: fast_median / transforms as f64 * 1e9,
+            gbps: fast.gbps().unwrap_or(0.0),
+            speedup_vs_radix2: speedup,
+        });
+    }
+    rows
 }
 
 /// One measured configuration of the POCS loop.
@@ -51,9 +153,10 @@ struct EngineRow {
 
 /// POCS-loop engine comparison: complex reference vs rfft fast path
 /// (threads 1/2/4 on the 3-D shapes), on pow2 and Bluestein shapes across
-/// dimensionalities. Emits `BENCH_correction.json` and prints a one-line
+/// dimensionalities. Emits `BENCH_correction.json` (including the
+/// `kernel_rows` table from [`kernel_comparison`]) and prints a one-line
 /// summary per shape.
-fn pocs_engine_comparison(quick: bool) {
+fn pocs_engine_comparison(quick: bool, kernel_rows: &[KernelRow]) {
     println!("== POCS engine: complex reference vs rfft half-spectrum ==");
     // (name, shape, thread counts for the rfft path)
     let shapes: Vec<(&'static str, Vec<usize>, Vec<usize>)> = if quick {
@@ -196,6 +299,24 @@ fn pocs_engine_comparison(quick: bool) {
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"correction_pocs\",\n");
     json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str("  \"kernel_rows\": [\n");
+    for (i, k) in kernel_rows.iter().enumerate() {
+        let shape: Vec<String> = k.shape.iter().map(|s| s.to_string()).collect();
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"shape\": [{}], \"kernel\": \"{}\", \
+             \"median_s\": {:.6}, \"ns_per_transform\": {:.1}, \"gbps\": {:.4}, \
+             \"speedup_vs_radix2\": {:.3}}}{}\n",
+            k.name,
+            shape.join(", "),
+            k.kernel,
+            k.median_s,
+            k.ns_per_transform,
+            k.gbps,
+            k.speedup_vs_radix2,
+            if i + 1 < kernel_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         let shape: Vec<String> = r.shape.iter().map(|s| s.to_string()).collect();

@@ -1,31 +1,124 @@
 //! End-to-end throughput benchmarks (Fig. 7 / Table II analogue): base
-//! compressor vs FFCz editing per dataset, and the pipelined-vs-sequential
-//! makespan comparison.
+//! compressor vs FFCz editing per dataset, the pipelined-vs-sequential
+//! makespan comparison, chunked store encoding, and the encode-path
+//! scratch-reuse gauge (allocations per steady-state chunk — must be 0).
 //!
-//! `cargo bench --bench throughput`
+//! `cargo bench --bench throughput`            # everything
+//! `cargo bench --bench throughput -- --quick` # store encode + scratch
+//!                                             # gauge only (CI smoke)
 
 use ffcz::compressors::{paper_compressors, ErrorBound};
 use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
-use ffcz::correction::{correct_reconstruction, FfczConfig};
+use ffcz::correction::{correct_reconstruction, CorrectionScratch, FfczConfig};
 use ffcz::data::synth;
-use ffcz::codec::CodecChainSpec;
+use ffcz::codec::{CodecChain, CodecChainSpec};
 use ffcz::store::{encode_store, write_store, Store, StoreWriteOptions};
 use ffcz::util::bench::{black_box, Bench};
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("FFCZ_BENCH_QUICK").is_ok();
+    if quick {
+        println!("== throughput benchmarks (quick: store + encode scratch) ==");
+        store_comparison(true);
+        return;
+    }
     println!("== throughput benchmarks (scale 24) ==");
     per_dataset();
     pipeline_comparison();
-    store_comparison();
+    store_comparison(false);
+}
+
+/// Steady-state encode-path scratch measurement: allocations per chunk
+/// after warm-up (the gauge CI asserts is zero) and one-scratch-per-worker
+/// reuse vs a fresh scratch per chunk. Returns
+/// `(chunk_shape, chunks, allocs_per_chunk, reuse_median_s,
+/// fresh_median_s, speedup, total_bytes)`.
+fn encode_scratch_gauge(quick: bool) -> (Vec<usize>, usize, f64, f64, f64, f64, usize) {
+    let chunk_shape: Vec<usize> = if quick { vec![8, 8, 8] } else { vec![16, 16, 16] };
+    let n_chunks = if quick { 4 } else { 8 };
+    let chunks: Vec<ffcz::data::Field> = (0..n_chunks)
+        .map(|i| {
+            synth::grf::GrfBuilder::new(&chunk_shape)
+                .spectral_index(1.8)
+                .lognormal(1.2)
+                .seed(600 + i as u64)
+                .build()
+        })
+        .collect();
+    let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+    let chain = CodecChain::from_spec(&spec).unwrap();
+
+    // Gauge: warm on the first chunk, then count scratch allocation events
+    // across the rest — steady state must add zero.
+    let mut scratch = CorrectionScratch::new();
+    chain.encode_chunk_with_scratch(&chunks[0], &mut scratch).unwrap();
+    let warm_events = scratch.allocation_events();
+    for chunk in &chunks[1..] {
+        chain.encode_chunk_with_scratch(chunk, &mut scratch).unwrap();
+    }
+    let steady_events = scratch.allocation_events() - warm_events;
+    let allocs_per_chunk = steady_events as f64 / (n_chunks - 1) as f64;
+    println!(
+        "encode scratch gauge: {warm_events} warm-up events, {steady_events} steady-state \
+         events over {} chunks ({allocs_per_chunk:.3} per chunk)",
+        n_chunks - 1
+    );
+
+    // Timing: warmed per-worker scratch vs a fresh scratch per chunk.
+    let total_bytes: usize = chunks.iter().map(|c| c.original_bytes()).sum();
+    let samples = if quick { 3 } else { 5 };
+    let r_reuse = Bench::new("encode_scratch_reuse".to_string())
+        .bytes(total_bytes)
+        .samples(samples)
+        .run(|| {
+            let mut total = 0usize;
+            for chunk in &chunks {
+                total += chain
+                    .encode_chunk_with_scratch(chunk, &mut scratch)
+                    .unwrap()
+                    .bytes
+                    .len();
+            }
+            black_box(total)
+        });
+    println!("{}", r_reuse.report());
+    let r_fresh = Bench::new("encode_scratch_fresh".to_string())
+        .bytes(total_bytes)
+        .samples(samples)
+        .run(|| {
+            let mut total = 0usize;
+            for chunk in &chunks {
+                total += chain.encode_chunk(chunk).unwrap().bytes.len();
+            }
+            black_box(total)
+        });
+    println!("{}", r_fresh.report());
+    let reuse_s = r_reuse.median.as_secs_f64();
+    let fresh_s = r_fresh.median.as_secs_f64();
+    println!("  -> scratch reuse {:.2}x vs fresh-per-chunk", fresh_s / reuse_s);
+    (
+        chunk_shape,
+        n_chunks,
+        allocs_per_chunk,
+        reuse_s,
+        fresh_s,
+        fresh_s / reuse_s,
+        total_bytes,
+    )
 }
 
 /// Whole-field FFCz compression vs chunked-parallel store encoding at
-/// 1/2/4 workers, in-memory vs streamed-to-file. Emits `BENCH_store.json`
-/// (median seconds + GB/s + peak payload bytes in flight — the peak-RSS
-/// proxy — per configuration) for the perf trajectory.
-fn store_comparison() {
-    println!("== store benchmarks (32-cubed GRF) ==");
-    let field = synth::grf::GrfBuilder::new(&[32, 32, 32])
+/// 1/2/4 workers, in-memory vs streamed-to-file, plus the encode-path
+/// scratch gauge. Emits `BENCH_store.json` (median seconds + GB/s + peak
+/// payload bytes in flight — the peak-RSS proxy — per configuration, and
+/// the `encode_path` object with the allocations-per-chunk gauge) for the
+/// perf trajectory. Quick mode shrinks the field and skips the LRU sweep.
+fn store_comparison(quick: bool) {
+    let dim = if quick { 16 } else { 32 };
+    let chunk_dim = dim / 2;
+    println!("== store benchmarks ({dim}-cubed GRF) ==");
+    let field = synth::grf::GrfBuilder::new(&[dim, dim, dim])
         .spectral_index(1.8)
         .lognormal(1.2)
         .seed(500)
@@ -34,13 +127,14 @@ fn store_comparison() {
     let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
     // (name, median_s, gbps, peak_payload_bytes)
     let mut rows: Vec<(String, f64, f64, usize)> = Vec::new();
+    let samples = if quick { 2 } else { 3 };
 
     // Baseline: whole-field compress + correct (single chunk, one worker).
-    let whole_opts = StoreWriteOptions::new(&[32, 32, 32]).workers(1);
+    let whole_opts = StoreWriteOptions::new(&[dim, dim, dim]).workers(1);
     let mut peak = 0usize;
     let r = Bench::new("store_whole_field".to_string())
         .bytes(bytes)
-        .samples(3)
+        .samples(samples)
         .run(|| {
             let (out, _, rep) = encode_store(&field, &spec, &whole_opts).unwrap();
             peak = rep.peak_payload_bytes;
@@ -54,15 +148,17 @@ fn store_comparison() {
         peak,
     ));
 
-    // Chunked: 8 chunks of 16³, varying worker count, both write paths.
+    // Chunked: 8 chunks of (dim/2)³, varying worker count, both write
+    // paths.
     let stream_path = std::env::temp_dir().join("ffcz_bench_stream.ffcz");
-    for workers in [1usize, 2, 4] {
-        let opts = StoreWriteOptions::new(&[16, 16, 16]).workers(workers);
+    let worker_counts: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
+    for &workers in worker_counts {
+        let opts = StoreWriteOptions::new(&[chunk_dim, chunk_dim, chunk_dim]).workers(workers);
 
         let mut peak = 0usize;
-        let r = Bench::new(format!("store_chunked_16cubed_w{workers}"))
+        let r = Bench::new(format!("store_chunked_{chunk_dim}cubed_w{workers}"))
             .bytes(bytes)
-            .samples(3)
+            .samples(samples)
             .run(|| {
                 let (out, _, rep) = encode_store(&field, &spec, &opts).unwrap();
                 peak = rep.peak_payload_bytes;
@@ -79,9 +175,9 @@ fn store_comparison() {
         // Streaming to a real file: chunk payloads spill as they finish,
         // bounding peak payload memory to the in-flight window.
         let mut peak = 0usize;
-        let r = Bench::new(format!("store_streamed_16cubed_w{workers}"))
+        let r = Bench::new(format!("store_streamed_{chunk_dim}cubed_w{workers}"))
             .bytes(bytes)
-            .samples(3)
+            .samples(samples)
             .run(|| {
                 let rep = write_store(&field, &spec, &opts, &stream_path).unwrap();
                 peak = rep.peak_payload_bytes;
@@ -100,7 +196,9 @@ fn store_comparison() {
     // Overlapping read_region windows: decoded-chunk LRU vs cold decode.
     // A sliding 16³ window over the 32³ field re-touches most chunks every
     // step; the byte budget holds the whole decoded field (8 × 16³ chunks).
-    {
+    // Skipped in quick mode (the LRU rows are not part of the CI schema
+    // floor).
+    if !quick {
         let opts = StoreWriteOptions::new(&[16, 16, 16]).workers(2);
         let (store_bytes, _, _) = encode_store(&field, &spec, &opts).unwrap();
         let windows: Vec<[usize; 3]> = (0..=16)
@@ -151,10 +249,24 @@ fn store_comparison() {
         ));
     }
 
+    // Encode-path scratch gauge + reuse timing.
+    let (gauge_shape, gauge_chunks, allocs_per_chunk, reuse_s, fresh_s, speedup, _) =
+        encode_scratch_gauge(quick);
+
     // Hand-rolled JSON (no serde in the offline crate universe).
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"store_throughput\",\n");
-    json.push_str("  \"field\": [32, 32, 32],\n  \"configs\": [\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!("  \"field\": [{dim}, {dim}, {dim}],\n"));
+    let gs: Vec<String> = gauge_shape.iter().map(|s| s.to_string()).collect();
+    json.push_str(&format!(
+        "  \"encode_path\": {{\"chunk_shape\": [{}], \"chunks\": {gauge_chunks}, \
+         \"allocs_per_chunk_steady\": {allocs_per_chunk:.4}, \
+         \"reuse_median_s\": {reuse_s:.6}, \"fresh_median_s\": {fresh_s:.6}, \
+         \"speedup_vs_fresh\": {speedup:.3}}},\n",
+        gs.join(", ")
+    ));
+    json.push_str("  \"configs\": [\n");
     for (i, (name, secs, gbps, peak)) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"name\": \"{name}\", \"median_s\": {secs:.6}, \"gbps\": {gbps:.4}, \

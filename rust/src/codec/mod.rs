@@ -52,7 +52,7 @@ use anyhow::{bail, Result};
 
 use crate::compressors::{Compressor, ErrorBound};
 use crate::correction::{
-    self, BoundSpec, CorrectionStats, EditsBlock, FfczArchive, FfczConfig,
+    self, BoundSpec, CorrectionScratch, CorrectionStats, EditsBlock, FfczArchive, FfczConfig,
 };
 use crate::data::{Field, Precision};
 
@@ -139,8 +139,26 @@ impl CodecChain {
     }
 
     /// Encode one chunk, verifying the advertised bounds; the outcome is
-    /// recorded in the returned [`ChunkStats`].
+    /// recorded in the returned [`ChunkStats`]. Transform state (plan
+    /// handles, FFT workspace, spectrum buffers) is built per call; batch
+    /// encoders — the store's chunk workers — should hold one
+    /// [`CorrectionScratch`] per worker and call
+    /// [`CodecChain::encode_chunk_with_scratch`] so the state warms once
+    /// per chunk shape and is reused across chunks.
     pub fn encode_chunk(&self, chunk: &Field) -> Result<EncodedChunk> {
+        self.encode_chunk_with_scratch(chunk, &mut CorrectionScratch::new())
+    }
+
+    /// [`CodecChain::encode_chunk`] with caller-owned correction scratch.
+    /// Bytes are bit-identical to the fresh-state entry point (scratch
+    /// contents never influence results); after warm-up on a chunk shape
+    /// the correction stage performs zero scratch allocations per chunk
+    /// ([`CorrectionScratch::allocation_events`] is the gauge).
+    pub fn encode_chunk_with_scratch(
+        &self,
+        chunk: &Field,
+        scratch: &mut CorrectionScratch,
+    ) -> Result<EncodedChunk> {
         let (payload, stats) = match &self.spec.array {
             ArrayStage::RawF64 => {
                 let mut raw = Vec::with_capacity(chunk.len() * 8);
@@ -155,7 +173,7 @@ impl CodecChain {
                     .as_ref()
                     .expect("base stage resolved in from_spec");
                 match self.spec.ffcz_config() {
-                    Some(cfg) => self.encode_ffcz(chunk, name, base.as_ref(), &cfg)?,
+                    Some(cfg) => self.encode_ffcz(chunk, name, base.as_ref(), &cfg, scratch)?,
                     None => encode_base_only(chunk, name, base.as_ref(), spatial)?,
                 }
             }
@@ -173,17 +191,28 @@ impl CodecChain {
         name: &str,
         base: &dyn Compressor,
         cfg: &FfczConfig,
+        scratch: &mut CorrectionScratch,
     ) -> Result<(Vec<u8>, ChunkStats)> {
         let bound = error_bound(&cfg.spatial);
         let payload = base.compress(chunk, bound)?;
         let recon0 = base.decompress(&payload)?;
         // The archive records the *registry* name, so decode resolves
         // runtime-registered compressors even when their `name()` differs.
-        let archive = correction::correct_reconstruction(chunk, &recon0, name, payload, cfg)?;
+        let archive = correction::correct_reconstruction_with_scratch(
+            chunk, &recon0, name, payload, cfg, scratch,
+        )?;
         // Dual-domain verification against the original chunk; the outcome
-        // is recorded per chunk in the manifest.
-        let recon = correction::decompress(&archive)?;
-        let report = correction::verify(chunk, &recon, cfg);
+        // is recorded per chunk in the manifest. The base payload is
+        // decoded *again* from the stored bytes on purpose — verifying the
+        // real decode path (not the encoder's in-hand reconstruction)
+        // keeps the write-time guarantee honest even for a registered
+        // compressor whose decompress disagrees with its encoder — while
+        // the edit application and verification transforms run through the
+        // worker's scratch.
+        let base_recon = base.decompress(&archive.base_payload)?;
+        let recon =
+            correction::apply::apply_edits_with_scratch(&base_recon, &archive.edits, scratch)?;
+        let report = correction::verify_with_scratch(chunk, &recon, cfg, scratch);
         let stats = ChunkStats {
             spatial_ok: report.spatial_ok,
             frequency_ok: report.frequency_ok,

@@ -22,7 +22,8 @@
 //!
 //! The correction stage's `threads` field (POCS transform parallelism) is
 //! an execution knob with no effect on the encoded bytes; it is **not**
-//! part of the wire format and parses as 1.
+//! part of the wire format and parses as 0 (auto — see
+//! [`FfczConfig::threads`]).
 //!
 //! where a *bound spec* is `u8 tag (0 = absolute, 1 = relative) · f64 LE`
 //! and a *frequency bound* is `u8 tag (0 = uniform absolute, 1 = uniform
@@ -71,10 +72,12 @@ pub struct CorrectionStage {
     pub max_iters: usize,
     /// Bound-shrink retry ladder for quantization.
     pub max_quant_retries: usize,
-    /// OS threads for the POCS transforms (`FfczConfig::threads`). An
-    /// *execution* knob, not codec identity: the encoded bytes are
-    /// identical for every value, so it is **not serialized** (decoders
-    /// always see 1) and is excluded from equality.
+    /// OS threads for the POCS transforms (`FfczConfig::threads`; 0 =
+    /// auto, cooperatively budgeted by the store writer as
+    /// `available_parallelism() / workers`). An *execution* knob, not
+    /// codec identity: the encoded bytes are identical for every value,
+    /// so it is **not serialized** (decoders see 0) and is excluded from
+    /// equality.
     pub threads: usize,
 }
 
@@ -276,9 +279,11 @@ impl CodecChainSpec {
                     frequency,
                     max_iters,
                     max_quant_retries,
-                    // Execution knob, never serialized: decoders run
-                    // single-threaded unless the caller overrides.
-                    threads: 1,
+                    // Execution knob, never serialized: parsed chains are
+                    // on auto unless the caller overrides (decode never
+                    // runs POCS, and a re-encode through the store writer
+                    // budgets auto cooperatively).
+                    threads: 0,
                 })
             }
             x => bail!("bad correction flag {x} in codec chain spec"),

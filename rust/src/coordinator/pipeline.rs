@@ -18,7 +18,9 @@ use anyhow::{Context, Result};
 
 use crate::codec::CodecChainSpec;
 use crate::compressors::Compressor;
-use crate::correction::{correct_reconstruction, FfczArchive, FfczConfig};
+use crate::correction::{
+    correct_reconstruction_with_scratch, CorrectionScratch, FfczArchive, FfczConfig,
+};
 use crate::data::Field;
 use crate::store::{encode_store, write_store, StoreWriteOptions, StoreWriteReport};
 
@@ -146,14 +148,21 @@ fn compress_stage(
     })
 }
 
+/// Edit one instance. `scratch` lives on the editing thread across
+/// instances, so same-shape snapshots after the first reuse every plan
+/// handle and transform buffer (instance sequences are the common case —
+/// same grid every step).
 fn edit_stage(
     base_name: &str,
     cfg: &PipelineConfig,
     t0: Instant,
     s: StageOutput,
+    scratch: &mut CorrectionScratch,
 ) -> Result<((String, FfczArchive), InstanceTiming)> {
     let edit_start = t0.elapsed();
-    let archive = correct_reconstruction(&s.field, &s.recon, base_name, s.payload, &cfg.ffcz)?;
+    let archive = correct_reconstruction_with_scratch(
+        &s.field, &s.recon, base_name, s.payload, &cfg.ffcz, scratch,
+    )?;
     let edit_end = t0.elapsed();
     Ok((
         (s.name.clone(), archive),
@@ -178,6 +187,7 @@ fn run_pipelined(
 
     let mut archives = Vec::new();
     let mut timings = Vec::new();
+    let mut scratch = CorrectionScratch::new();
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         std::thread::scope(|scope| -> Result<()> {
             // Stage 1: compression worker.
@@ -194,7 +204,7 @@ fn run_pipelined(
             // error return drops it, which unblocks a producer stalled on a
             // full queue (its send fails and the worker exits).
             for out in rx {
-                let (arch, timing) = edit_stage(base_name, cfg, t0, out?)?;
+                let (arch, timing) = edit_stage(base_name, cfg, t0, out?, &mut scratch)?;
                 archives.push(arch);
                 timings.push(timing);
             }
@@ -215,9 +225,10 @@ fn run_sequential(
     let base_name = base.name();
     let mut archives = Vec::new();
     let mut timings = Vec::new();
+    let mut scratch = CorrectionScratch::new();
     for (name, field) in instances {
         let out = compress_stage(base, cfg, t0, name, field)?;
-        let (arch, timing) = edit_stage(base_name, cfg, t0, out)?;
+        let (arch, timing) = edit_stage(base_name, cfg, t0, out, &mut scratch)?;
         archives.push(arch);
         timings.push(timing);
     }

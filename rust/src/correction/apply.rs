@@ -8,28 +8,55 @@
 //! The stored edit streams index the *full* spectrum (the wire format is
 //! unchanged), but the output of `Re(IFFT(·))` only depends on the
 //! Hermitian part of the edits — so the inverse runs on the half spectrum:
-//! fold the dense vector ([`HalfSpectrum::fold_full`], which is exactly
-//! the Hermitian projection `Re(IFFT(F)) == irfftn(fold(F))`), then a real
-//! inverse at half the transform cost.
+//! fold the dense vector ([`crate::fourier::fold_full_into`], which is
+//! exactly the Hermitian projection `Re(IFFT(F)) == irfftn(fold(F))`),
+//! then a real inverse at half the transform cost — both through the
+//! caller's [`CorrectionScratch`] on the encode-side verify paths.
 
 use anyhow::Result;
 
+use super::scratch::CorrectionScratch;
 use super::EditsBlock;
 use crate::data::Field;
-use crate::fourier::{irfftn, rfftn, Complex, HalfSpectrum};
+use crate::fourier::{fold_full_into, rfftn, Complex};
 
 /// `Re(IFFT(freq))` of a dense full-layout frequency vector, via the
 /// Hermitian fold + half-spectrum inverse (half the transform work of the
 /// complex `ifftn` it replaced; identical output up to rounding for any
-/// input, Hermitian or not).
-fn real_ifftn(freq: &[Complex], shape: &[usize]) -> Vec<f64> {
-    irfftn(&HalfSpectrum::fold_full(freq, shape))
+/// input, Hermitian or not). The fold target, plan handle, and transform
+/// workspace come from `scratch`; only the returned samples allocate.
+fn real_ifftn_with_scratch(
+    freq: &[Complex],
+    shape: &[usize],
+    scratch: &mut CorrectionScratch,
+) -> Vec<f64> {
+    let plan = scratch.plan(shape);
+    let h = plan.half_len();
+    scratch.ensure_spec2(h);
+    let mut out = vec![0.0f64; plan.len_full()];
+    let CorrectionScratch { spec2, ws, .. } = scratch;
+    let spec2 = &mut spec2[..h];
+    fold_full_into(freq, shape, spec2);
+    plan.inverse(spec2, &mut out, 1, ws);
+    out
 }
 
 /// Corrected spatial error vector: `ε₀ + spat + IFFT(freq)` (real part).
 pub fn corrected_eps(eps0: &[f64], edits: &EditsBlock, shape: &[usize]) -> Vec<f64> {
+    corrected_eps_with_scratch(eps0, edits, shape, &mut CorrectionScratch::new())
+}
+
+/// [`corrected_eps`] with caller-owned transform state — what the encode
+/// retry ladder's quantization re-checks use, so each attempt folds and
+/// inverts through warmed buffers.
+pub fn corrected_eps_with_scratch(
+    eps0: &[f64],
+    edits: &EditsBlock,
+    shape: &[usize],
+    scratch: &mut CorrectionScratch,
+) -> Vec<f64> {
     let (spat, freq) = edits.dense();
-    let freq_s = real_ifftn(&freq, shape);
+    let freq_s = real_ifftn_with_scratch(&freq, shape, scratch);
     eps0.iter()
         .zip(&spat)
         .zip(&freq_s)
@@ -39,6 +66,16 @@ pub fn corrected_eps(eps0: &[f64], edits: &EditsBlock, shape: &[usize]) -> Vec<f
 
 /// Apply edits to a base reconstruction.
 pub fn apply_edits(recon0: &Field, edits: &EditsBlock) -> Result<Field> {
+    apply_edits_with_scratch(recon0, edits, &mut CorrectionScratch::new())
+}
+
+/// [`apply_edits`] with caller-owned transform state (the store encoder's
+/// per-chunk archive verification decodes through this).
+pub fn apply_edits_with_scratch(
+    recon0: &Field,
+    edits: &EditsBlock,
+    scratch: &mut CorrectionScratch,
+) -> Result<Field> {
     let shape = recon0.shape().to_vec();
     let (spat, freq) = edits.dense();
     anyhow::ensure!(
@@ -47,7 +84,7 @@ pub fn apply_edits(recon0: &Field, edits: &EditsBlock) -> Result<Field> {
         spat.len(),
         recon0.len()
     );
-    let freq_s = real_ifftn(&freq, &shape);
+    let freq_s = real_ifftn_with_scratch(&freq, &shape, scratch);
     let data: Vec<f64> = recon0
         .data()
         .iter()
@@ -71,7 +108,7 @@ pub fn total_frequency_edits(edits: &EditsBlock, shape: &[usize]) -> Vec<Complex
 /// `spat_edits + IFFT(freq_edits)`.
 pub fn total_spatial_edits(edits: &EditsBlock, shape: &[usize]) -> Vec<f64> {
     let (spat, freq) = edits.dense();
-    let freq_s = real_ifftn(&freq, shape);
+    let freq_s = real_ifftn_with_scratch(&freq, shape, &mut CorrectionScratch::new());
     spat.iter().zip(&freq_s).map(|(&s, &f)| s + f).collect()
 }
 

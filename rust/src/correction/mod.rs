@@ -13,23 +13,35 @@
 //! with a larger bound shrink (or falls back to raw f64 edits) if the
 //! guarantee would be violated — so every archive that leaves this module
 //! satisfies the user's bounds exactly.
+//!
+//! The whole encode path — bound resolution, every projection attempt,
+//! every quantization re-check, the final archive verification — runs
+//! through a [`CorrectionScratch`]: shared plan handles plus grow-only
+//! transform buffers, threaded from [`correct_reconstruction`] down into
+//! the POCS entry points. Batch encoders hold one scratch per worker (the
+//! store) or per stage thread (the pipeline); after warm-up on a chunk
+//! shape the steady-state encode performs zero scratch allocations, and
+//! scratch-reusing encodes are bit-identical to fresh-state ones.
 
 pub mod apply;
 pub mod edits;
 pub mod pocs;
+pub mod scratch;
 
 use anyhow::{bail, Result};
 
 use crate::compressors::{Compressor, ErrorBound};
 use crate::data::Field;
 use crate::encoding::{lossless_compress, lossless_decompress, varint};
-use crate::fourier::{for_each_full_bin, rfftn, Complex, HalfSpectrum};
+use crate::fourier::{fold_full_into, for_each_full_bin, Complex};
 
 pub use edits::{PointwiseQuantizedEdits, QuantizedComplexEdits, QuantizedEdits, QUANT_BITS};
 pub use pocs::{
-    alternating_projection, alternating_projection_reference, check_dual_bounds, Bounds,
-    PocsParams, PocsResult,
+    alternating_projection, alternating_projection_reference,
+    alternating_projection_with_scratch, check_dual_bounds, check_dual_bounds_with_scratch,
+    Bounds, PocsParams, PocsResult,
 };
+pub use scratch::CorrectionScratch;
 
 /// How a bound is specified.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -66,7 +78,13 @@ pub struct FfczConfig {
     /// OS threads for the N-D line transforms inside the POCS loop. An
     /// *execution* knob, not codec identity: the correction (and the
     /// archive bytes) are bit-identical for every value, so it is never
-    /// serialized into specs or manifests.
+    /// serialized into specs or manifests. `0` (the default) means
+    /// **auto**: the store writer budgets it cooperatively as
+    /// `available_parallelism() / workers`, so per-chunk line threading
+    /// and the cross-chunk worker pool compose without oversubscription;
+    /// direct (whole-field) correction runs resolve auto to one thread.
+    /// Explicit values ([`FfczConfig::with_threads`], `--threads`, the
+    /// `threads=` chunk-codec key) always win over auto.
     pub threads: usize,
 }
 
@@ -78,7 +96,7 @@ impl FfczConfig {
             frequency: FrequencyBound::Uniform(BoundSpec::Relative(frequency)),
             max_iters: 200,
             max_quant_retries: 3,
-            threads: 1,
+            threads: 0,
         }
     }
 
@@ -89,7 +107,7 @@ impl FfczConfig {
             frequency: FrequencyBound::Uniform(BoundSpec::Absolute(frequency)),
             max_iters: 200,
             max_quant_retries: 3,
-            threads: 1,
+            threads: 0,
         }
     }
 
@@ -101,11 +119,13 @@ impl FfczConfig {
             frequency: FrequencyBound::PowerSpectrumRelative(spectrum_rel),
             max_iters: 200,
             max_quant_retries: 3,
-            threads: 1,
+            threads: 0,
         }
     }
 
-    /// Set the POCS transform thread count (builder style).
+    /// Set an explicit POCS transform thread count (builder style). The
+    /// count is clamped to ≥ 1 — auto-budgeting is requested by *leaving*
+    /// `threads` at its default of 0, not by setting it.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
@@ -124,8 +144,21 @@ pub struct ResolvedBounds {
 }
 
 /// Resolve the configured bounds against the original field. Frequency
-/// bounds need the original's FFT for `Relative` and `PowerSpectrum` modes.
+/// bounds need the original's FFT for `Relative` and `PowerSpectrum`
+/// modes; plan and transform scratch are built per call — the encode hot
+/// path reuses them through [`resolve_bounds_with_scratch`].
 pub fn resolve_bounds(field: &Field, cfg: &FfczConfig) -> ResolvedBounds {
+    resolve_bounds_with_scratch(field, cfg, &mut CorrectionScratch::new())
+}
+
+/// [`resolve_bounds`] with caller-owned transform state: the bound
+/// resolution's forward transform runs through `scratch`'s plan handle,
+/// workspace, and spectrum buffer.
+pub fn resolve_bounds_with_scratch(
+    field: &Field,
+    cfg: &FfczConfig,
+    scratch: &mut CorrectionScratch,
+) -> ResolvedBounds {
     let e = match cfg.spatial {
         BoundSpec::Absolute(v) => v,
         BoundSpec::Relative(r) => ErrorBound::Relative(r).absolute_for(field),
@@ -137,8 +170,8 @@ pub fn resolve_bounds(field: &Field, cfg: &FfczConfig) -> ResolvedBounds {
         FrequencyBound::Uniform(BoundSpec::Relative(r)) => {
             // max_k |X_k| over the half spectrum equals the full-lattice
             // max (conjugation preserves magnitude).
-            let spec = field_half_spectrum(field);
-            let max_mag = spec.data().iter().map(|c| c.abs()).fold(0.0f64, f64::max);
+            let spec = half_spectrum_into_scratch(field, scratch);
+            let max_mag = spec.iter().map(|c| c.abs()).fold(0.0f64, f64::max);
             Bounds::Global(r * max_mag.max(f64::MIN_POSITIVE))
         }
         FrequencyBound::PowerSpectrumRelative(p) => {
@@ -154,13 +187,13 @@ pub fn resolve_bounds(field: &Field, cfg: &FfczConfig) -> ResolvedBounds {
             // Built from the half spectrum: mirrored bins read the same
             // stored magnitude, so `Δ_{−k} == Δ_k` holds *exactly* — which
             // is what keeps the POCS fast path on the half spectrum.
-            let spec = field_half_spectrum(field);
+            let spec = half_spectrum_into_scratch(field, scratch);
             let r = (1.0 + 0.9 * p).sqrt() - 1.0;
-            let max_mag = spec.data().iter().map(|c| c.abs()).fold(0.0f64, f64::max);
+            let max_mag = spec.iter().map(|c| c.abs()).fold(0.0f64, f64::max);
             let floor = r * 1e-4 * max_mag.max(f64::MIN_POSITIVE);
             let mut per = vec![0.0f64; field.len()];
             for_each_full_bin(field.shape(), |full, half, _conj| {
-                per[full] = (r * spec.data()[half].abs() / std::f64::consts::SQRT_2).max(floor);
+                per[full] = (r * spec[half].abs() / std::f64::consts::SQRT_2).max(floor);
             });
             per[0] = floor; // pin DC: preserve the mean
             spectral_rule = Some((r, floor));
@@ -174,10 +207,21 @@ pub fn resolve_bounds(field: &Field, cfg: &FfczConfig) -> ResolvedBounds {
     }
 }
 
-/// Half spectrum of the original (real) field — the bound-resolution
-/// transform at half the cost of the full `fftn` it replaced.
-fn field_half_spectrum(field: &Field) -> HalfSpectrum {
-    rfftn(field.data(), field.shape())
+/// Half spectrum of the original (real) field, transformed into the
+/// scratch's primary spectrum buffer (no allocation once warmed) — the
+/// bound-resolution transform at half the cost of the full `fftn` it
+/// replaced.
+fn half_spectrum_into_scratch<'a>(
+    field: &Field,
+    scratch: &'a mut CorrectionScratch,
+) -> &'a [Complex] {
+    let plan = scratch.plan(field.shape());
+    let h = plan.half_len();
+    scratch.ensure_spec(h);
+    let CorrectionScratch { spec, ws, .. } = scratch;
+    let spec = &mut spec[..h];
+    plan.forward(field.data(), spec, 1, ws);
+    spec
 }
 
 /// Stored edit payload: quantized in the common case (with an optional
@@ -464,7 +508,13 @@ pub fn compress(field: &Field, base: &dyn Compressor, cfg: &FfczConfig) -> Resul
 }
 
 /// Correct an existing base-compressor reconstruction (the "edit" step in
-/// isolation — what the paper's throughput plots time).
+/// isolation — what the paper's throughput plots time). Plan handles and
+/// transform workspace are built per call; batch encoders (the store's
+/// chunk workers, the pipeline's edit stage) thread one
+/// [`CorrectionScratch`] through
+/// [`correct_reconstruction_with_scratch`] instead, so the whole retry
+/// ladder — projection, quantization re-checks, patch transform — reuses
+/// one warmed set of buffers per worker.
 pub fn correct_reconstruction(
     field: &Field,
     recon0: &Field,
@@ -472,7 +522,30 @@ pub fn correct_reconstruction(
     base_payload: Vec<u8>,
     cfg: &FfczConfig,
 ) -> Result<FfczArchive> {
-    let bounds = resolve_bounds(field, cfg);
+    correct_reconstruction_with_scratch(
+        field,
+        recon0,
+        base_name,
+        base_payload,
+        cfg,
+        &mut CorrectionScratch::new(),
+    )
+}
+
+/// [`correct_reconstruction`] with caller-owned transform state. After the
+/// scratch has warmed up on a chunk shape, further chunks of that shape
+/// encode with zero scratch allocations
+/// ([`CorrectionScratch::allocation_events`] is the gauge); archives are
+/// bit-identical to fresh-state encoding (property-tested).
+pub fn correct_reconstruction_with_scratch(
+    field: &Field,
+    recon0: &Field,
+    base_name: &str,
+    base_payload: Vec<u8>,
+    cfg: &FfczConfig,
+    scratch: &mut CorrectionScratch,
+) -> Result<FfczArchive> {
+    let bounds = resolve_bounds_with_scratch(field, cfg, scratch);
     let eps0: Vec<f64> = recon0
         .data()
         .iter()
@@ -512,7 +585,7 @@ pub fn correct_reconstruction(
             max_iters: cfg.max_iters,
             threads: cfg.threads,
         };
-        let result = alternating_projection(&eps0, shape, &params);
+        let result = alternating_projection_with_scratch(&eps0, shape, &params, scratch);
         stats.quant_attempts = attempt + 1;
         if !result.converged {
             // Non-intersecting cubes within the iteration cap: surface it.
@@ -548,7 +621,7 @@ pub fn correct_reconstruction(
                 patch: Vec::new(),
             }
         };
-        if edits_satisfy_bounds(&eps0, &block, shape, &bounds) {
+        if edits_satisfy_bounds(&eps0, &block, shape, &bounds, cfg.threads, scratch) {
             stats.iterations = result.iterations;
             stats.converged = true;
             chosen = Some((block, result));
@@ -562,22 +635,29 @@ pub fn correct_reconstruction(
         // domain shifts by ≤ Σ|patch|/N — absorbed by the shrink margin
         // and re-verified before committing.
         if let EditsBlock::Quantized { freq: freq_q, .. } = &block {
-            let eps_q = apply::corrected_eps(&eps0, &block, shape);
-            // δ of the (real) quantized error vector, via the half
-            // spectrum; mirror bins are read conjugated.
-            let spec_q = rfftn(&eps_q, shape);
+            let eps_q = apply::corrected_eps_with_scratch(&eps0, &block, shape, scratch);
             let target = bounds.frequency.scaled(shrink);
             let mut patch_list: Vec<(u32, f64, f64)> = Vec::new();
-            for_each_full_bin(shape, |full, half, conj| {
-                let stored = spec_q.data()[half];
-                let d = if conj { stored.conj() } else { stored };
-                if d.linf() > bounds.frequency.at(full) {
-                    let t = target.at(full);
-                    let re = d.re.clamp(-t, t) - d.re;
-                    let im = d.im.clamp(-t, t) - d.im;
-                    patch_list.push((full as u32, re, im));
-                }
-            });
+            {
+                // δ of the (real) quantized error vector, via the half
+                // spectrum in scratch; mirror bins are read conjugated.
+                let plan = scratch.plan(shape);
+                let h_total = plan.half_len();
+                scratch.ensure_spec(h_total);
+                let CorrectionScratch { spec, ws, .. } = scratch;
+                let spec = &mut spec[..h_total];
+                plan.forward(&eps_q, spec, cfg.threads.max(1), ws);
+                for_each_full_bin(shape, |full, half, conj| {
+                    let stored = spec[half];
+                    let d = if conj { stored.conj() } else { stored };
+                    if d.linf() > bounds.frequency.at(full) {
+                        let t = target.at(full);
+                        let re = d.re.clamp(-t, t) - d.re;
+                        let im = d.im.clamp(-t, t) - d.im;
+                        patch_list.push((full as u32, re, im));
+                    }
+                });
+            }
             // Patching only pays off while it is sparse.
             if patch_list.len() <= eps0.len() / 20 {
                 let patched = EditsBlock::Quantized {
@@ -585,7 +665,7 @@ pub fn correct_reconstruction(
                     freq: freq_q.clone(),
                     patch: patch_list,
                 };
-                if edits_satisfy_bounds(&eps0, &patched, shape, &bounds) {
+                if edits_satisfy_bounds(&eps0, &patched, shape, &bounds, cfg.threads, scratch) {
                     stats.iterations = result.iterations;
                     stats.converged = true;
                     chosen = Some((patched, result));
@@ -606,7 +686,7 @@ pub fn correct_reconstruction(
                 max_iters: cfg.max_iters,
                 threads: cfg.threads,
             };
-            let result = alternating_projection(&eps0, shape, &params);
+            let result = alternating_projection_with_scratch(&eps0, shape, &params, scratch);
             if !result.converged {
                 bail!("POCS did not converge even without quantization shrink");
             }
@@ -649,16 +729,49 @@ pub fn correct_reconstruction(
     })
 }
 
-/// Check the dual bounds for `eps0 + edits` (dequantized).
+/// Check the dual bounds for `eps0 + edits` (dequantized): the retry
+/// ladder's per-attempt verifier. Equivalent to
+/// [`apply::corrected_eps`] followed by [`check_dual_bounds`] (same
+/// arithmetic — IEEE addition is commutative — and the same `1 + 1e-9`
+/// verifier roundoff tolerance), but fused through `scratch` so the
+/// corrected-ε candidate, the Hermitian fold target, and the verification
+/// spectrum all live in warmed grow-only buffers: after the first attempt
+/// on a shape, a re-check performs zero scratch allocations. `threads`
+/// drives the transforms (bit-identical for every count).
 fn edits_satisfy_bounds(
     eps0: &[f64],
     block: &EditsBlock,
     shape: &[usize],
     bounds: &ResolvedBounds,
+    threads: usize,
+    scratch: &mut CorrectionScratch,
 ) -> bool {
-    let eps = apply::corrected_eps(eps0, block, shape);
-    let (s_ok, f_ok, _, _) = check_dual_bounds(&eps, shape, &bounds.spatial, &bounds.frequency);
-    s_ok && f_ok
+    let n = eps0.len();
+    let threads = threads.max(1);
+    let (spat, freq) = block.dense();
+    let plan = scratch.plan(shape);
+    let h = plan.half_len();
+    scratch.ensure_spec(h);
+    scratch.ensure_spec2(h);
+    scratch.ensure_real(n);
+    let CorrectionScratch {
+        spec, spec2, real, ws, ..
+    } = scratch;
+    let spec = &mut spec[..h];
+    let spec2 = &mut spec2[..h];
+    let eps = &mut real[..n];
+    // ε = ε₀ + spat + Re(IFFT(freq)), built in place: inverse-transform
+    // the folded edits into the real buffer, then add the other terms.
+    fold_full_into(&freq, shape, spec2);
+    plan.inverse(spec2, eps, threads, ws);
+    for i in 0..n {
+        eps[i] += eps0[i] + spat[i];
+    }
+    // Ratios and tolerance shared with `check_dual_bounds`.
+    let max_s = pocs::max_spatial_ratio(eps, &bounds.spatial);
+    plan.forward(eps, spec, threads, ws);
+    let max_f = pocs::max_frequency_ratio_half(spec, shape, &bounds.frequency);
+    max_s <= pocs::VERIFIER_TOL && max_f <= pocs::VERIFIER_TOL
 }
 
 /// Decompress an FFCz archive: base decompress + edit application. The
@@ -686,18 +799,32 @@ pub struct VerifyReport {
 /// Verify that a reconstruction satisfies the configured dual bounds
 /// against the original field.
 pub fn verify(original: &Field, reconstruction: &Field, cfg: &FfczConfig) -> VerifyReport {
-    let bounds = resolve_bounds(original, cfg);
+    verify_with_scratch(original, reconstruction, cfg, &mut CorrectionScratch::new())
+}
+
+/// [`verify`] with caller-owned transform state — the store encoder
+/// verifies every chunk it writes, so the per-worker scratch serves this
+/// transform too.
+pub fn verify_with_scratch(
+    original: &Field,
+    reconstruction: &Field,
+    cfg: &FfczConfig,
+    scratch: &mut CorrectionScratch,
+) -> VerifyReport {
+    let bounds = resolve_bounds_with_scratch(original, cfg, scratch);
     let eps: Vec<f64> = reconstruction
         .data()
         .iter()
         .zip(original.data())
         .map(|(r, x)| r - x)
         .collect();
-    let (spatial_ok, frequency_ok, max_s, max_f) = check_dual_bounds(
+    let (spatial_ok, frequency_ok, max_s, max_f) = check_dual_bounds_with_scratch(
         &eps,
         original.shape(),
         &bounds.spatial,
         &bounds.frequency,
+        cfg.threads,
+        scratch,
     );
     VerifyReport {
         spatial_ok,

@@ -15,10 +15,10 @@
 //! pointwise bounds come from `|X_k|` of a real field), the spectrum stays
 //! Hermitian through every projection. [`alternating_projection`] therefore
 //! runs the whole loop on the **half spectrum** via
-//! [`NdRealFft`]: half the transform arithmetic, half the clip work, half
+//! [`crate::fourier::NdRealFft`]: half the transform arithmetic, half the clip work, half
 //! the memory traffic, with frequency edits accumulated in
 //! [`HalfSpectrum`] layout and expanded only at the (cold) quantization
-//! boundary. Transforms reuse one [`NdFftWorkspace`] across iterations, so
+//! boundary. Transforms reuse one [`crate::fourier::NdFftWorkspace`] across iterations, so
 //! the steady state allocates nothing, and `threads` fans the N-D line
 //! transforms across OS threads (bit-identical output for any count).
 //!
@@ -31,9 +31,11 @@
 //! input.
 
 use crate::fourier::{
-    fftn_inplace, for_each_full_bin, ifftn_inplace, Complex, HalfSpectrum, NdFftWorkspace,
-    NdRealFft,
+    fftn_inplace, for_each_full_bin, for_each_row_with_mirror, ifftn_inplace, Complex,
+    HalfSpectrum,
 };
+
+use super::scratch::CorrectionScratch;
 
 /// Per-axis bounds: one global scalar or a full pointwise vector.
 #[derive(Debug, Clone)]
@@ -92,7 +94,8 @@ pub struct PocsParams {
     /// Iteration cap; the paper observes 1–100 iterations in practice.
     pub max_iters: usize,
     /// OS threads for the N-D line transforms inside the loop (1 =
-    /// single-threaded; the result is bit-identical for every value).
+    /// single-threaded, 0 is clamped to 1; the result is bit-identical
+    /// for every value).
     pub threads: usize,
 }
 
@@ -101,13 +104,71 @@ pub struct PocsParams {
 /// margin — without it the loop can chase 1-ulp exceedances forever.
 const VIOLATION_SLACK: f64 = 1.0 + 1e-10;
 
+/// Roundoff tolerance shared by every dual-bound *verifier* (the
+/// projector itself clips hard): a normalized ratio ≤ this counts as
+/// in-bound. One constant so the retry ladder's accept/reject
+/// ([`super::correct_reconstruction`]) can never drift from the archive
+/// verifier ([`check_dual_bounds`]).
+pub(crate) const VERIFIER_TOL: f64 = 1.0 + 1e-9;
+
+/// `max_i |ε_i| / E_i` (≤ 1 is in-bound; a zero bound is satisfied only
+/// by an exactly-zero component).
+pub(crate) fn max_spatial_ratio(eps: &[f64], spatial: &Bounds) -> f64 {
+    let mut max_s = 0.0f64;
+    for (i, &e) in eps.iter().enumerate() {
+        let b = spatial.at(i);
+        let r = if b > 0.0 { e.abs() / b } else if e == 0.0 { 0.0 } else { f64::INFINITY };
+        max_s = max_s.max(r);
+    }
+    max_s
+}
+
+/// `max_k ‖δ_k‖∞ / Δ_k` over the full bin lattice, read from the half
+/// spectrum (`ε` is real and `‖conj(z)‖∞ = ‖z‖∞`, so this is exact even
+/// for asymmetric pointwise bounds).
+pub(crate) fn max_frequency_ratio_half(
+    spec: &[Complex],
+    shape: &[usize],
+    frequency: &Bounds,
+) -> f64 {
+    let mut max_f = 0.0f64;
+    for_each_full_bin(shape, |full, half, _conj| {
+        let b = frequency.at(full);
+        let linf = spec[half].linf();
+        let r = if b > 0.0 { linf / b } else if linf == 0.0 { 0.0 } else { f64::INFINITY };
+        max_f = max_f.max(r);
+    });
+    max_f
+}
+
 /// Run the alternating projection on the spatial error vector `eps0` of a
 /// row-major field with `shape`.
 ///
 /// This is the half-spectrum fast path (see the module docs); it produces
 /// the same corrections as [`alternating_projection_reference`] up to FFT
-/// rounding (≤ 1e-10 relative, asserted by the property tests).
+/// rounding (≤ 1e-10 relative, asserted by the property tests). Plan and
+/// transform scratch are built per call; the encode hot path reuses them
+/// across retries and chunks through
+/// [`alternating_projection_with_scratch`].
 pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams) -> PocsResult {
+    let mut scratch = CorrectionScratch::new();
+    alternating_projection_with_scratch(eps0, shape, params, &mut scratch)
+}
+
+/// [`alternating_projection`] with caller-owned transform state: the plan
+/// handle, line-engine workspace, and δ half-spectrum buffer come from
+/// `scratch` (grown on first contact with `shape`, reused afterwards), so
+/// a warmed scratch makes every further projection of the same shape
+/// allocation-free in the scratch-managed state. Results are bit-identical
+/// to the fresh-state entry point: every scratch buffer is fully
+/// overwritten before it is read. The edit/result vectors themselves are
+/// freshly allocated — they escape into the returned [`PocsResult`].
+pub fn alternating_projection_with_scratch(
+    eps0: &[f64],
+    shape: &[usize],
+    params: &PocsParams,
+    scratch: &mut CorrectionScratch,
+) -> PocsResult {
     let n = eps0.len();
     debug_assert_eq!(n, shape.iter().product::<usize>());
     // The half-spectrum projection is only equivalent when clipping a bin
@@ -120,15 +181,16 @@ pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams
         }
     }
     let threads = params.threads.max(1);
-    let plan = NdRealFft::new(shape);
+    let plan = scratch.plan(shape);
     let last = shape[shape.len() - 1];
     let h = last / 2 + 1;
     let h_total = plan.half_len();
     let rows = h_total / h;
-    let mut ws = NdFftWorkspace::new();
+    scratch.ensure_spec(h_total);
+    let CorrectionScratch { spec, ws, .. } = scratch;
+    let mut spec = &mut spec[..h_total];
 
     let mut eps: Vec<f64> = eps0.to_vec();
-    let mut spec = vec![Complex::ZERO; h_total];
     let mut spat_edits = vec![0.0f64; n];
     let mut freq_half = vec![Complex::ZERO; h_total];
     let mut iterations = 0usize;
@@ -137,7 +199,7 @@ pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams
     while iterations < params.max_iters {
         iterations += 1;
         // δ = FFT(ε), half spectrum only.
-        plan.forward(&eps, &mut spec, threads, &mut ws);
+        plan.forward(&eps, spec, threads, ws);
 
         // Convergence check + f-cube projection fused in one pass over the
         // half bins. Clipping a stored bin implicitly clips its Hermitian
@@ -179,7 +241,7 @@ pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams
         }
 
         // Back to the spatial basis (ε stays real by construction).
-        plan.inverse(&mut spec, &mut eps, threads, &mut ws);
+        plan.inverse(&mut spec, &mut eps, threads, ws);
         if !violated {
             // Already inside the f-cube: stop.
             converged = true;
@@ -227,27 +289,18 @@ pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams
 /// `Δ_{−k} == Δ_k` for every component of the full lattice (the condition
 /// under which clipping the half spectrum is exactly the reference
 /// projection — including the `k_last = 0` / Nyquist planes, whose
-/// conjugate mates are stored bins themselves).
+/// conjugate mates are stored bins themselves). Deliberately walks the
+/// **full** lattice — [`for_each_row_with_mirror`] with the complete
+/// `shape`, not just the leading dims — so asymmetry anywhere is caught.
 fn bounds_hermitian_symmetric(v: &[f64], shape: &[usize]) -> bool {
-    let d = shape.len();
-    let mut idx = vec![0usize; d];
-    for &b in v.iter() {
-        let mut mirror = 0usize;
-        for (dd, &n) in shape.iter().enumerate() {
-            mirror = mirror * n + ((n - idx[dd]) % n);
+    debug_assert_eq!(v.len(), shape.iter().product::<usize>());
+    let mut symmetric = true;
+    for_each_row_with_mirror(shape, |i, mirror| {
+        if v[mirror] != v[i] {
+            symmetric = false;
         }
-        if v[mirror] != b {
-            return false;
-        }
-        for dd in (0..d).rev() {
-            idx[dd] += 1;
-            if idx[dd] < shape[dd] {
-                break;
-            }
-            idx[dd] = 0;
-        }
-    }
-    true
+    });
+    symmetric
 }
 
 /// The original full-complex-spectrum projection loop, kept as the
@@ -370,26 +423,31 @@ pub fn check_dual_bounds(
     spatial: &Bounds,
     frequency: &Bounds,
 ) -> (bool, bool, f64, f64) {
-    let mut max_s = 0.0f64;
-    for (i, &e) in eps.iter().enumerate() {
-        let b = spatial.at(i);
-        let r = if b > 0.0 { e.abs() / b } else if e == 0.0 { 0.0 } else { f64::INFINITY };
-        max_s = max_s.max(r);
-    }
-    let plan = NdRealFft::new(shape);
-    let mut ws = NdFftWorkspace::new();
-    let mut spec = vec![Complex::ZERO; plan.half_len()];
-    plan.forward(eps, &mut spec, 1, &mut ws);
-    let mut max_f = 0.0f64;
-    for_each_full_bin(shape, |full, half, _conj| {
-        let b = frequency.at(full);
-        let linf = spec[half].linf();
-        let r = if b > 0.0 { linf / b } else if linf == 0.0 { 0.0 } else { f64::INFINITY };
-        max_f = max_f.max(r);
-    });
-    // Tiny tolerance for FFT roundoff in the *verifier* (the projector
-    // itself clips hard).
-    (max_s <= 1.0 + 1e-9, max_f <= 1.0 + 1e-9, max_s, max_f)
+    let mut scratch = CorrectionScratch::new();
+    check_dual_bounds_with_scratch(eps, shape, spatial, frequency, 1, &mut scratch)
+}
+
+/// [`check_dual_bounds`] with caller-owned transform state (and an
+/// explicit `threads` count for the verification transform — the output is
+/// bit-identical for every value, see [`crate::fourier::NdRealFft`]). The
+/// encode retry ladder calls this once per quantization attempt; a warmed
+/// scratch makes each call allocation-free.
+pub fn check_dual_bounds_with_scratch(
+    eps: &[f64],
+    shape: &[usize],
+    spatial: &Bounds,
+    frequency: &Bounds,
+    threads: usize,
+    scratch: &mut CorrectionScratch,
+) -> (bool, bool, f64, f64) {
+    let max_s = max_spatial_ratio(eps, spatial);
+    let plan = scratch.plan(shape);
+    scratch.ensure_spec(plan.half_len());
+    let CorrectionScratch { spec, ws, .. } = scratch;
+    let spec = &mut spec[..plan.half_len()];
+    plan.forward(eps, spec, threads.max(1), ws);
+    let max_f = max_frequency_ratio_half(spec, shape, frequency);
+    (max_s <= VERIFIER_TOL, max_f <= VERIFIER_TOL, max_s, max_f)
 }
 
 #[cfg(test)]

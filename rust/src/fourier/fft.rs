@@ -1,7 +1,14 @@
 //! 1-D fast Fourier transforms.
 //!
-//! * Power-of-two sizes use an iterative in-place radix-2 Cooley–Tukey with
-//!   a precomputed bit-reversal permutation and per-stage twiddle tables.
+//! * Power-of-two sizes use an iterative in-place split-radix-family
+//!   kernel: radix-4 butterflies with a radix-2 first stage when log₂n is
+//!   odd, on a precomputed bit-reversal permutation with per-stage twiddle
+//!   tables. Radix-4 needs 3 complex multiplies per 4 outputs where
+//!   radix-2 needs 4, and halves the number of full passes over the data —
+//!   the ~25–33% multiply saving the FFT literature attributes to the
+//!   split-radix family. The plain radix-2 kernel is kept as the
+//!   equivalence oracle ([`Fft::process_with_scratch_radix2`]), used by the
+//!   property tests and the kernel benchmark baseline.
 //! * Arbitrary sizes fall back to Bluestein's algorithm (chirp-z), which
 //!   reduces an N-point DFT to a power-of-two cyclic convolution.
 //!
@@ -20,6 +27,15 @@ pub enum FftDirection {
     Inverse,
 }
 
+/// Which pow-2 butterfly kernel to run (the plan data is shared).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kernel {
+    /// Production kernel: radix-4 stages, radix-2 finish for odd log₂n.
+    Radix4,
+    /// Equivalence oracle: plain iterative radix-2.
+    Radix2,
+}
+
 /// A planned 1-D FFT of fixed size.
 ///
 /// Normalization follows the numpy convention: `Forward` is unnormalized,
@@ -30,10 +46,11 @@ pub struct Fft {
 }
 
 enum Kind {
-    /// Radix-2: bit-reversal permutation + full twiddle table (size n/2).
-    Radix2 {
+    /// Power of two: bit-reversal permutation + twiddle table
+    /// `w^j = e^{-2πi j / n}` for `j in 0..3n/4` (radix-2 reads `< n/2`,
+    /// the radix-4 stages read `w^{3k}` up to `< 3n/4`).
+    Pow2 {
         rev: Vec<u32>,
-        /// Forward twiddles w^j = e^{-2πi j / n} for j in 0..n/2.
         twiddles: Vec<Complex>,
     },
     /// Bluestein chirp-z: pad to power-of-two m ≥ 2n-1.
@@ -56,13 +73,15 @@ impl Fft {
         assert!(n >= 1, "FFT size must be ≥ 1");
         if n.is_power_of_two() {
             let rev = bit_reversal(n);
-            let mut twiddles = Vec::with_capacity(n / 2);
-            for j in 0..n / 2 {
+            // 3n/4 entries: enough for the radix-4 stages' w^{3k} factors
+            // (and a superset of the n/2 the radix-2 oracle reads).
+            let mut twiddles = Vec::with_capacity(3 * n / 4);
+            for j in 0..3 * n / 4 {
                 twiddles.push(Complex::from_angle(-2.0 * PI * j as f64 / n as f64));
             }
             Fft {
                 n,
-                kind: Kind::Radix2 { rev, twiddles },
+                kind: Kind::Pow2 { rev, twiddles },
             }
         } else {
             // Bluestein: x_k · a_k convolved with b; b_j = e^{iπ j²/n}.
@@ -82,7 +101,7 @@ impl Fft {
                     kernel[m - j] = b;
                 }
             }
-            inner.forward_inplace_radix2(&mut kernel);
+            inner.forward_inplace_pow2(&mut kernel, Kernel::Radix4);
             Fft {
                 n,
                 kind: Kind::Bluestein {
@@ -101,10 +120,10 @@ impl Fft {
     }
 
     /// Scratch elements required by [`Fft::process_with_scratch`]: zero for
-    /// radix-2 plans, the padded convolution length `m` for Bluestein.
+    /// pow-2 plans, the padded convolution length `m` for Bluestein.
     pub fn scratch_len(&self) -> usize {
         match &self.kind {
-            Kind::Radix2 { .. } => 0,
+            Kind::Pow2 { .. } => 0,
             Kind::Bluestein { m, .. } => *m,
         }
     }
@@ -126,6 +145,32 @@ impl Fft {
         dir: FftDirection,
         scratch: &mut [Complex],
     ) {
+        self.process_inner(data, dir, scratch, Kernel::Radix4);
+    }
+
+    /// [`Fft::process_with_scratch`] through the plain radix-2 butterfly
+    /// kernel — the equivalence *oracle* for the production radix-4 path
+    /// (property-tested to agree at rounding level) and the baseline the
+    /// kernel benchmark measures the split-radix speedup against. Same
+    /// plan, same scratch contract; only the butterfly schedule differs,
+    /// so results agree to FFT rounding (not bit-exactly — the summation
+    /// order differs).
+    pub fn process_with_scratch_radix2(
+        &self,
+        data: &mut [Complex],
+        dir: FftDirection,
+        scratch: &mut [Complex],
+    ) {
+        self.process_inner(data, dir, scratch, Kernel::Radix2);
+    }
+
+    fn process_inner(
+        &self,
+        data: &mut [Complex],
+        dir: FftDirection,
+        scratch: &mut [Complex],
+        kernel: Kernel,
+    ) {
         assert_eq!(data.len(), self.n, "buffer length != plan size");
         assert!(
             scratch.len() >= self.scratch_len(),
@@ -137,13 +182,13 @@ impl Fft {
             return;
         }
         match dir {
-            FftDirection::Forward => self.forward(data, scratch),
+            FftDirection::Forward => self.forward(data, scratch, kernel),
             FftDirection::Inverse => {
                 // ifft(x) = conj(fft(conj(x))) / n
                 for v in data.iter_mut() {
                     *v = v.conj();
                 }
-                self.forward(data, scratch);
+                self.forward(data, scratch, kernel);
                 let s = 1.0 / self.n as f64;
                 for v in data.iter_mut() {
                     *v = v.conj().scale(s);
@@ -159,9 +204,9 @@ impl Fft {
         buf
     }
 
-    fn forward(&self, data: &mut [Complex], scratch: &mut [Complex]) {
+    fn forward(&self, data: &mut [Complex], scratch: &mut [Complex], kernel: Kernel) {
         match &self.kind {
-            Kind::Radix2 { .. } => self.forward_inplace_radix2(data),
+            Kind::Pow2 { .. } => self.forward_inplace_pow2(data, kernel),
             Kind::Bluestein {
                 m,
                 inner,
@@ -178,7 +223,7 @@ impl Fft {
                 for v in a[n..].iter_mut() {
                     *v = Complex::ZERO;
                 }
-                inner.forward_inplace_radix2(a);
+                inner.forward_inplace_pow2(a, kernel);
                 for (x, k) in a.iter_mut().zip(kernel_fft.iter()) {
                     *x = *x * *k;
                 }
@@ -186,7 +231,7 @@ impl Fft {
                 for v in a.iter_mut() {
                     *v = v.conj();
                 }
-                inner.forward_inplace_radix2(a);
+                inner.forward_inplace_pow2(a, kernel);
                 let s = 1.0 / *m as f64;
                 for (k, out) in data.iter_mut().enumerate() {
                     *out = a[k].conj().scale(s) * chirp[k];
@@ -195,11 +240,90 @@ impl Fft {
         }
     }
 
-    /// The radix-2 kernel (only valid when `kind` is `Radix2`).
+    /// The pow-2 kernel dispatcher (only valid when `kind` is `Pow2`).
+    fn forward_inplace_pow2(&self, data: &mut [Complex], kernel: Kernel) {
+        match kernel {
+            Kernel::Radix4 => self.forward_inplace_radix4(data),
+            Kernel::Radix2 => self.forward_inplace_radix2(data),
+        }
+    }
+
+    /// Production pow-2 kernel: DIT radix-4 stages after the shared
+    /// bit-reversal permutation, with one twiddle-free radix-2 stage first
+    /// when log₂n is odd. On base-2 bit-reversed input the four quarter
+    /// sub-transforms of a size-`4q` block sit in memory order
+    /// residue-0, residue-**2**, residue-**1**, residue-3 (reversing the
+    /// two low bits swaps residues 1 and 2), so the middle two blocks are
+    /// read swapped — the standard trick that lets radix-4 run on the
+    /// radix-2 permutation the oracle shares.
+    fn forward_inplace_radix4(&self, data: &mut [Complex]) {
+        let (rev, twiddles) = match &self.kind {
+            Kind::Pow2 { rev, twiddles } => (rev, twiddles),
+            _ => unreachable!("pow-2 kernel called on non-pow2 plan"),
+        };
+        let n = data.len();
+        // Bit-reversal permutation.
+        for i in 0..n {
+            let j = rev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+        let mut half = 1;
+        if n.trailing_zeros() % 2 == 1 {
+            // Odd log₂n: one radix-2 stage over adjacent pairs (twiddle =
+            // 1, so no multiplies), leaving a power-of-4 ladder above.
+            let mut j = 0;
+            while j < n {
+                let u = data[j];
+                let v = data[j + 1];
+                data[j] = u + v;
+                data[j + 1] = u - v;
+                j += 2;
+            }
+            half = 2;
+        }
+        // Radix-4 stages: combine four size-q blocks into one size-4q DFT.
+        //   t0 = A[k], t1 = w^k B[k], t2 = w^{2k} C[k], t3 = w^{3k} D[k]
+        //   X[k]    = (t0+t2) + (t1+t3)      X[k+2q] = (t0+t2) − (t1+t3)
+        //   X[k+q]  = (t0−t2) − i(t1−t3)     X[k+3q] = (t0−t2) + i(t1−t3)
+        // with B at offset 2q and C at offset q (see the method docs).
+        while half < n {
+            let q = half;
+            let l = 4 * q;
+            let stride = n / l;
+            let mut base = 0;
+            while base < n {
+                for k in 0..q {
+                    let w1 = twiddles[k * stride];
+                    let w2 = twiddles[2 * k * stride];
+                    let w3 = twiddles[3 * k * stride];
+                    let t0 = data[base + k];
+                    let t2 = data[base + k + q] * w2;
+                    let t1 = data[base + k + 2 * q] * w1;
+                    let t3 = data[base + k + 3 * q] * w3;
+                    let s0 = t0 + t2;
+                    let d0 = t0 - t2;
+                    let s1 = t1 + t3;
+                    let d1 = t1 - t3;
+                    // −i·d1 rotates the odd-half difference.
+                    let md1 = Complex::new(d1.im, -d1.re);
+                    data[base + k] = s0 + s1;
+                    data[base + k + q] = d0 + md1;
+                    data[base + k + 2 * q] = s0 - s1;
+                    data[base + k + 3 * q] = d0 - md1;
+                }
+                base += l;
+            }
+            half = l;
+        }
+    }
+
+    /// The radix-2 oracle kernel (only valid when `kind` is `Pow2`).
     fn forward_inplace_radix2(&self, data: &mut [Complex]) {
         let (rev, twiddles) = match &self.kind {
-            Kind::Radix2 { rev, twiddles } => (rev, twiddles),
-            _ => unreachable!("radix-2 kernel called on non-pow2 plan"),
+            Kind::Pow2 { rev, twiddles } => (rev, twiddles),
+            _ => unreachable!("pow-2 kernel called on non-pow2 plan"),
         };
         let n = data.len();
         // Bit-reversal permutation.
@@ -212,7 +336,8 @@ impl Fft {
         // Iterative butterflies. Stage with half-size `half` uses twiddle
         // stride n / (2*half). (A specialized-first-stages variant was
         // measured 15% *slower* — see EXPERIMENTS.md §Perf — so the
-        // uniform loop stays.)
+        // uniform loop stays; the production speedup comes from the
+        // radix-4 kernel above instead.)
         let mut half = 1;
         while half < n {
             let stride = n / (2 * half);
@@ -288,6 +413,38 @@ mod tests {
             let fast = plan.transform(&x, FftDirection::Forward);
             let slow = dft_naive(&x);
             assert_close(&fast, &slow, 1e-9);
+        }
+    }
+
+    /// The production radix-4 kernel and the radix-2 oracle agree at FFT
+    /// rounding level across every pow-2 size — including n = 2 (pure
+    /// radix-2 finish stage) and both parities of log₂n — in both
+    /// directions, and through the Bluestein convolution that runs its
+    /// inner pow-2 transforms with whichever kernel is selected.
+    #[test]
+    fn radix4_matches_radix2_oracle_all_pow2() {
+        for &n in &[2usize, 4, 8, 16, 32, 64, 128, 256, 1024, 4096] {
+            let x = random_signal(n, 7000 + n as u64);
+            let plan = Fft::new(n);
+            let mut scratch = vec![Complex::ZERO; plan.scratch_len()];
+            for dir in [FftDirection::Forward, FftDirection::Inverse] {
+                let mut fast = x.clone();
+                plan.process_with_scratch(&mut fast, dir, &mut scratch);
+                let mut oracle = x.clone();
+                plan.process_with_scratch_radix2(&mut oracle, dir, &mut scratch);
+                assert_close(&fast, &oracle, 1e-12);
+            }
+        }
+        // Bluestein sizes: both kernels drive the inner convolution.
+        for &n in &[7usize, 100, 509] {
+            let x = random_signal(n, 9000 + n as u64);
+            let plan = Fft::new(n);
+            let mut scratch = vec![Complex::ZERO; plan.scratch_len()];
+            let mut fast = x.clone();
+            plan.process_with_scratch(&mut fast, FftDirection::Forward, &mut scratch);
+            let mut oracle = x.clone();
+            plan.process_with_scratch_radix2(&mut oracle, FftDirection::Forward, &mut scratch);
+            assert_close(&fast, &oracle, 1e-11);
         }
     }
 

@@ -1,8 +1,10 @@
-//! Fourier-analysis substrate: complex arithmetic, 1-D FFTs (radix-2,
-//! Bluestein for arbitrary sizes), real-to-complex half-spectrum
-//! transforms, N-D transforms (complex and real, with a multi-threaded
-//! strided-line engine and allocation-free scratch plans), and the
-//! radially-binned power spectrum used throughout the paper's evaluation.
+//! Fourier-analysis substrate: complex arithmetic, 1-D FFTs (pow-2 sizes
+//! run a split-radix-family radix-4 kernel with the radix-2 oracle kept as
+//! the equivalence baseline; Bluestein for arbitrary sizes),
+//! real-to-complex half-spectrum transforms, N-D transforms (complex and
+//! real, with a multi-threaded strided-line engine, per-axis-length gather
+//! blocks, and allocation-free scratch plans), and the radially-binned
+//! power spectrum used throughout the paper's evaluation.
 //!
 //! The paper's GPU implementation delegates to cuFFT; this crate builds the
 //! transform from scratch (no FFT crate exists in the offline dependency
@@ -27,8 +29,8 @@ pub use complex::Complex;
 pub use fft::{Fft, FftDirection};
 pub use ndfft::{fftn, ifftn, fftn_inplace, ifftn_inplace, plan_for};
 pub use ndrfft::{
-    for_each_full_bin, half_len, irfftn, rfftn, rplan_for, HalfSpectrum, NdFftWorkspace,
-    NdRealFft,
+    fold_full_into, for_each_full_bin, for_each_row_with_mirror, half_len, irfftn, ndrplan_for,
+    rfftn, rplan_for, HalfSpectrum, NdFftWorkspace, NdRealFft,
 };
 pub use power_spectrum::{
     power_spectrum, power_spectrum_of_complex, power_spectrum_of_real, PowerSpectrum,

@@ -47,6 +47,29 @@ pub fn rplan_for(n: usize) -> Arc<RealFft> {
     cache.lock().unwrap().entry(n).or_insert(built).clone()
 }
 
+/// Process-wide [`NdRealFft`] plan cache keyed by shape, so the encode hot
+/// path ([`crate::correction`]'s retry ladder, the store's per-chunk
+/// verifiers) can hold *handles* to one shared plan per chunk shape
+/// instead of re-deriving the per-axis plan list on every call. Like
+/// [`plan_for`]/[`rplan_for`], plans are built outside the cache lock and
+/// racing builders keep the first insert.
+static NDRPLAN_CACHE: OnceLock<Mutex<HashMap<Vec<usize>, Arc<NdRealFft>>>> = OnceLock::new();
+
+/// Fetch (or build) the shared N-D real-transform plan for `shape`.
+pub fn ndrplan_for(shape: &[usize]) -> Arc<NdRealFft> {
+    let cache = NDRPLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(plan) = cache.lock().unwrap().get(shape) {
+        return plan.clone();
+    }
+    let built = Arc::new(NdRealFft::new(shape));
+    cache
+        .lock()
+        .unwrap()
+        .entry(shape.to_vec())
+        .or_insert(built)
+        .clone()
+}
+
 /// Number of complex elements in the half spectrum of a real field with
 /// `shape`: `prod(shape[..d−1]) · (shape[d−1]/2 + 1)`.
 pub fn half_len(shape: &[usize]) -> usize {
@@ -61,10 +84,16 @@ pub fn half_len(shape: &[usize]) -> usize {
 /// workspace across POCS iterations makes the steady state allocation-free.
 pub struct NdFftWorkspace {
     lanes: Vec<Lane>,
+    /// Buffer-growth events since construction (lane added, gather block
+    /// or 1-D scratch resized). Stable in steady state; the encode-path
+    /// allocation gauge sums this into
+    /// [`crate::correction::CorrectionScratch::allocation_events`].
+    grow_events: u64,
 }
 
 struct Lane {
-    /// Gather/scatter block for strided axis sweeps (`LINE_BLOCK` lines).
+    /// Gather/scatter block for strided axis sweeps (up to [`line_block`]
+    /// lines of the longest axis seen).
     block: Vec<Complex>,
     /// 1-D plan scratch (max of the sizes seen so far).
     scratch: Vec<Complex>,
@@ -72,7 +101,10 @@ struct Lane {
 
 impl NdFftWorkspace {
     pub fn new() -> Self {
-        Self { lanes: Vec::new() }
+        Self {
+            lanes: Vec::new(),
+            grow_events: 0,
+        }
     }
 
     /// Grow (never shrink) to `lanes` lanes with at least the given block
@@ -83,13 +115,16 @@ impl NdFftWorkspace {
                 block: Vec::new(),
                 scratch: Vec::new(),
             });
+            self.grow_events += 1;
         }
         for lane in &mut self.lanes[..lanes] {
             if lane.block.len() < block {
                 lane.block.resize(block, Complex::ZERO);
+                self.grow_events += 1;
             }
             if lane.scratch.len() < scratch {
                 lane.scratch.resize(scratch, Complex::ZERO);
+                self.grow_events += 1;
             }
         }
     }
@@ -102,6 +137,13 @@ impl NdFftWorkspace {
             .map(|l| l.block.capacity() + l.scratch.capacity())
             .sum()
     }
+
+    /// Number of buffer-growth events so far (see the field docs). A
+    /// workspace that has warmed up on a shape reports the same value
+    /// after every further transform of that shape.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
 }
 
 impl Default for NdFftWorkspace {
@@ -110,11 +152,30 @@ impl Default for NdFftWorkspace {
     }
 }
 
-/// Number of strided lines gathered/scattered together. Batching turns the
-/// stride-`s` single-element accesses of a lone line into `B`-element
-/// consecutive runs (adjacent lines differ by 1 in the inner index), so
-/// each cache-line fetch serves `B` lines.
+/// Maximum number of strided lines gathered/scattered together. Batching
+/// turns the stride-`s` single-element accesses of a lone line into
+/// `B`-element consecutive runs (adjacent lines differ by 1 in the inner
+/// index), so each cache-line fetch serves `B` lines.
 pub(crate) const LINE_BLOCK: usize = 8;
+
+/// Lines per gather block for an axis of length `len`. A block stages
+/// `B · len` complex elements (16 B each) contiguously, so long lines —
+/// Bluestein axes additionally drag an `≥ 2·len`-point convolution pad
+/// through the same lane — must shrink `B` to keep the working set inside
+/// the L2 cache (≈ 256 KiB budget; the `kernels` bench is the measurement
+/// harness, see EXPERIMENTS.md §Perf "Per-axis line blocks"). Short lines
+/// keep the full 8-line block that amortizes the strided gather; the
+/// floor is 2 lines (1 would forfeit batching entirely), accepting an
+/// over-budget block on extreme axis lengths.
+pub(crate) fn line_block(len: usize) -> usize {
+    if len <= 2048 {
+        LINE_BLOCK // 8 lines ≤ 256 KiB staged
+    } else if len <= 4096 {
+        4 // ≤ 256 KiB
+    } else {
+        2
+    }
+}
 
 /// Raw base pointer handed to worker threads. Safety rests on the work
 /// decomposition in [`run_line_item`]: distinct items address disjoint
@@ -146,15 +207,17 @@ pub(crate) fn apply_axis(
     // `axis`, inner the dims after. Base offset = outer·len·stride + inner.
     let inner = stride;
     let outer = data.len() / (len * inner);
-    // One work item = up to LINE_BLOCK lines (contiguous lines when
-    // stride == 1, adjacent strided lines otherwise).
+    // One work item = up to `lb` lines (contiguous lines when stride == 1,
+    // adjacent strided lines otherwise); `lb` shrinks for long lines so
+    // the staged block stays cache-resident.
+    let lb = line_block(len);
     let items = if stride == 1 {
-        outer.div_ceil(LINE_BLOCK)
+        outer.div_ceil(lb)
     } else {
-        outer * inner.div_ceil(LINE_BLOCK)
+        outer * inner.div_ceil(lb)
     };
     let lanes = threads.clamp(1, items.max(1));
-    let block_elems = if stride == 1 { 0 } else { LINE_BLOCK * len };
+    let block_elems = if stride == 1 { 0 } else { lb * len };
     ws.ensure(lanes, block_elems, plan.scratch_len());
 
     if lanes == 1 {
@@ -162,7 +225,7 @@ pub(crate) fn apply_axis(
         for item in 0..items {
             // SAFETY: single thread holding `&mut data` — no aliasing.
             unsafe {
-                run_line_item(data.as_mut_ptr(), item, len, stride, inner, outer, plan, dir, lane)
+                run_line_item(data.as_mut_ptr(), item, lb, len, stride, inner, outer, plan, dir, lane)
             };
         }
         return;
@@ -182,21 +245,23 @@ pub(crate) fn apply_axis(
                 // `data` (see `run_line_item`), and the scope outlives
                 // every worker.
                 unsafe {
-                    run_line_item(ptr.0, item, len, stride, inner, outer, plan, dir, lane)
+                    run_line_item(ptr.0, item, lb, len, stride, inner, outer, plan, dir, lane)
                 };
             });
         }
     });
 }
 
-/// Execute one line-block work item.
+/// Execute one line-block work item (`lb` = block line count from
+/// [`line_block`], fixed per axis sweep).
 ///
 /// # Safety
 ///
 /// `data` must be valid for `outer · len · inner` elements, and no other
 /// thread may concurrently touch the elements this item addresses. Item
-/// index sets are disjoint by construction: when `stride == 1` item `i`
-/// owns the contiguous lines `[i·B, min((i+1)·B, outer))`; otherwise item
+/// index sets are disjoint by construction (with `B = lb`): when
+/// `stride == 1` item `i` owns the contiguous lines
+/// `[i·B, min((i+1)·B, outer))`; otherwise item
 /// `i = o·ceil(inner/B) + ib` owns offsets `o·len·stride + j·stride + t`
 /// for `j in 0..len`, `t in [ib·B, min(ib·B + B, inner))`, which are
 /// disjoint across distinct `(o, ib)`.
@@ -204,6 +269,7 @@ pub(crate) fn apply_axis(
 unsafe fn run_line_item(
     data: *mut Complex,
     item: usize,
+    lb: usize,
     len: usize,
     stride: usize,
     inner: usize,
@@ -214,18 +280,18 @@ unsafe fn run_line_item(
 ) {
     if stride == 1 {
         // Contiguous fast path: transform in place within each line.
-        let o0 = item * LINE_BLOCK;
-        let ob = LINE_BLOCK.min(outer - o0);
+        let o0 = item * lb;
+        let ob = lb.min(outer - o0);
         for o in o0..o0 + ob {
             let line = std::slice::from_raw_parts_mut(data.add(o * len), len);
             plan.process_with_scratch(line, dir, &mut lane.scratch);
         }
         return;
     }
-    let iblocks = inner.div_ceil(LINE_BLOCK);
+    let iblocks = inner.div_ceil(lb);
     let o = item / iblocks;
-    let i0 = (item % iblocks) * LINE_BLOCK;
-    let b = LINE_BLOCK.min(inner - i0);
+    let i0 = (item % iblocks) * lb;
+    let b = lb.min(inner - i0);
     let base = o * len * stride + i0;
     let block = &mut lane.block;
     // Gather b adjacent lines: for each j the addresses
@@ -509,33 +575,11 @@ impl HalfSpectrum {
     /// Hermitian projection of an arbitrary full-spectrum vector:
     /// `half[k] = (full[k] + conj(full[−k mod shape])) / 2`. Satisfies
     /// `irfftn(fold_full(F)) == Re(ifftn(F))` exactly (up to rounding) for
-    /// every `F`, Hermitian or not.
+    /// every `F`, Hermitian or not. Allocation-free callers fold into an
+    /// existing buffer with [`fold_full_into`].
     pub fn fold_full(full: &[Complex], shape: &[usize]) -> Self {
-        let d = shape.len();
-        let last = shape[d - 1];
-        let h = last / 2 + 1;
-        let lead = &shape[..d - 1];
-        let rows: usize = lead.iter().product();
-        assert_eq!(full.len(), rows * last, "full buffer does not match shape");
-        let mut data = vec![Complex::ZERO; rows * h];
-        let mut idx = vec![0usize; lead.len()];
-        for r in 0..rows {
-            let mut mr = 0usize;
-            for (dd, &n) in lead.iter().enumerate() {
-                mr = mr * n + ((n - idx[dd]) % n);
-            }
-            for k in 0..h {
-                let mirror = full[mr * last + ((last - k) % last)].conj();
-                data[r * h + k] = (full[r * last + k] + mirror).scale(0.5);
-            }
-            for dd in (0..lead.len()).rev() {
-                idx[dd] += 1;
-                if idx[dd] < lead[dd] {
-                    break;
-                }
-                idx[dd] = 0;
-            }
-        }
+        let mut data = vec![Complex::ZERO; half_len(shape)];
+        fold_full_into(full, shape, &mut data);
         Self {
             shape: shape.to_vec(),
             data,
@@ -576,12 +620,7 @@ impl HalfSpectrum {
         let lead = &self.shape[..d - 1];
         let rows: usize = lead.iter().product();
         let mut full = vec![Complex::ZERO; rows * last];
-        let mut idx = vec![0usize; lead.len()];
-        for r in 0..rows {
-            let mut mr = 0usize;
-            for (dd, &n) in lead.iter().enumerate() {
-                mr = mr * n + ((n - idx[dd]) % n);
-            }
+        for_each_row_with_mirror(lead, |r, mr| {
             let hrow = &self.data[r * h..(r + 1) * h];
             let mrow = &self.data[mr * h..(mr + 1) * h];
             let out = &mut full[r * last..(r + 1) * last];
@@ -589,14 +628,7 @@ impl HalfSpectrum {
             for k in h..last {
                 out[k] = mrow[last - k].conj();
             }
-            for dd in (0..lead.len()).rev() {
-                idx[dd] += 1;
-                if idx[dd] < lead[dd] {
-                    break;
-                }
-                idx[dd] = 0;
-            }
-        }
+        });
         full
     }
 
@@ -619,6 +651,56 @@ impl HalfSpectrum {
     }
 }
 
+/// Visit every lattice point of the row-major `dims` lattice together with
+/// its negation mirror: `f(i, mi)` where `mi` is the linear index of
+/// `(−idx) mod dims`. An empty `dims` visits the single point `(0, 0)`.
+///
+/// This is the one shared mixed-radix odometer behind every Hermitian
+/// mirror walk in the crate: [`HalfSpectrum::expand`] /
+/// [`HalfSpectrum::fold_full`] / [`for_each_full_bin`] pass the *leading*
+/// dims (mirroring half-spectrum rows), while the POCS bound-symmetry
+/// check passes the **full** shape — the full-lattice variant it needs so
+/// asymmetry on the `k_last = 0` / Nyquist planes (whose mates are stored
+/// bins themselves) is still caught.
+pub fn for_each_row_with_mirror(dims: &[usize], mut f: impl FnMut(usize, usize)) {
+    let rows: usize = dims.iter().product();
+    let mut idx = vec![0usize; dims.len()];
+    for r in 0..rows {
+        let mut mr = 0usize;
+        for (d, &n) in dims.iter().enumerate() {
+            mr = mr * n + ((n - idx[d]) % n);
+        }
+        f(r, mr);
+        for d in (0..dims.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// [`HalfSpectrum::fold_full`] into a caller-provided half-layout buffer
+/// (`out.len() ==` [`half_len`]`(shape)`), allocating nothing — the
+/// encode-path verifiers fold edit spectra into correction scratch.
+pub fn fold_full_into(full: &[Complex], shape: &[usize], out: &mut [Complex]) {
+    let d = shape.len();
+    assert!(d >= 1, "scalar (0-d) transforms are not supported");
+    let last = shape[d - 1];
+    let h = last / 2 + 1;
+    let lead = &shape[..d - 1];
+    let rows: usize = lead.iter().product();
+    assert_eq!(full.len(), rows * last, "full buffer does not match shape");
+    assert_eq!(out.len(), rows * h, "output is not half-layout");
+    for_each_row_with_mirror(lead, |r, mr| {
+        for k in 0..h {
+            let mirror = full[mr * last + ((last - k) % last)].conj();
+            out[r * h + k] = (full[r * last + k] + mirror).scale(0.5);
+        }
+    });
+}
+
 /// Visit every bin of the full spectrum of a real field with `shape`,
 /// calling `f(full_idx, half_idx, conjugate)`: the full bin's value is
 /// `half[half_idx]`, conjugated when `conjugate` is true. Lets verifiers
@@ -629,14 +711,7 @@ pub fn for_each_full_bin(shape: &[usize], mut f: impl FnMut(usize, usize, bool))
     assert!(d >= 1, "scalar (0-d) transforms are not supported");
     let last = shape[d - 1];
     let h = last / 2 + 1;
-    let lead = &shape[..d - 1];
-    let rows: usize = lead.iter().product();
-    let mut idx = vec![0usize; lead.len()];
-    for r in 0..rows {
-        let mut mr = 0usize;
-        for (dd, &n) in lead.iter().enumerate() {
-            mr = mr * n + ((n - idx[dd]) % n);
-        }
+    for_each_row_with_mirror(&shape[..d - 1], |r, mr| {
         let full_base = r * last;
         for k in 0..h {
             f(full_base + k, r * h + k, false);
@@ -644,14 +719,7 @@ pub fn for_each_full_bin(shape: &[usize], mut f: impl FnMut(usize, usize, bool))
         for k in h..last {
             f(full_base + k, mr * h + (last - k), true);
         }
-        for dd in (0..lead.len()).rev() {
-            idx[dd] += 1;
-            if idx[dd] < lead[dd] {
-                break;
-            }
-            idx[dd] = 0;
-        }
-    }
+    });
 }
 
 /// Forward N-D real FFT (out-of-place convenience): real `input` → its
@@ -778,12 +846,19 @@ mod tests {
         plan.forward(&x, &mut spec, 2, &mut ws);
         plan.inverse(&mut spec, &mut out, 2, &mut ws);
         let warm = ws.allocated_elems();
+        let warm_events = ws.grow_events();
         assert!(warm > 0);
+        assert!(warm_events > 0);
         for _ in 0..3 {
             plan.forward(&x, &mut spec, 2, &mut ws);
             plan.inverse(&mut spec, &mut out, 2, &mut ws);
         }
         assert_eq!(ws.allocated_elems(), warm, "workspace grew in steady state");
+        assert_eq!(
+            ws.grow_events(),
+            warm_events,
+            "workspace recorded growth events in steady state"
+        );
     }
 
     #[test]
@@ -829,6 +904,88 @@ mod tests {
         let mut hs = HalfSpectrum::zeros(&[9]);
         hs.data_mut()[4] = Complex::ONE; // paired: 2
         assert_eq!(hs.active_full(), 2);
+    }
+
+    #[test]
+    fn row_mirror_walk_matches_explicit_negation() {
+        // The shared odometer visits every point once, in row-major order,
+        // with the mirror of the mirror landing back on the point.
+        for dims in [vec![], vec![8usize], vec![9], vec![4, 6], vec![3, 4, 5]] {
+            let rows: usize = dims.iter().product();
+            let mut seen = vec![false; rows];
+            let mut expect_r = 0usize;
+            for_each_row_with_mirror(&dims, |r, mr| {
+                assert_eq!(r, expect_r, "dims {dims:?}: not row-major order");
+                expect_r += 1;
+                assert!(mr < rows.max(1), "dims {dims:?}: mirror out of range");
+                assert!(!seen[r], "dims {dims:?}: row {r} visited twice");
+                seen[r] = true;
+                // Explicit negation: decompose r, negate per axis, rebuild.
+                let mut rest = r;
+                let mut coords = vec![0usize; dims.len()];
+                for d in (0..dims.len()).rev() {
+                    coords[d] = rest % dims[d];
+                    rest /= dims[d];
+                }
+                let mut want = 0usize;
+                for (d, &n) in dims.iter().enumerate() {
+                    want = want * n + ((n - coords[d]) % n);
+                }
+                assert_eq!(mr, want, "dims {dims:?} row {r}");
+            });
+            assert_eq!(expect_r, rows.max(1));
+        }
+        // The mirror is an involution.
+        let dims = [3usize, 4, 5];
+        let mut mirror = vec![0usize; 60];
+        for_each_row_with_mirror(&dims, |r, mr| mirror[r] = mr);
+        for r in 0..60 {
+            assert_eq!(mirror[mirror[r]], r, "mirror not involutive at {r}");
+        }
+    }
+
+    #[test]
+    fn fold_full_into_matches_allocating_fold() {
+        let mut rng = XorShift::new(44);
+        for shape in [vec![8usize], vec![9], vec![6, 8], vec![3, 4, 5]] {
+            let n: usize = shape.iter().product();
+            let full: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.normal(), rng.normal()))
+                .collect();
+            let want = HalfSpectrum::fold_full(&full, &shape);
+            // Dirty output buffer must not leak through.
+            let mut out = vec![Complex::new(9.0, -9.0); half_len(&shape)];
+            fold_full_into(&full, &shape, &mut out);
+            assert_eq!(out, want.data(), "shape {shape:?}");
+        }
+    }
+
+    #[test]
+    fn line_block_shrinks_for_long_lines() {
+        assert_eq!(line_block(8), LINE_BLOCK);
+        assert_eq!(line_block(2048), LINE_BLOCK);
+        assert_eq!(line_block(4096), 4);
+        assert_eq!(line_block(8192), 2);
+        assert_eq!(line_block(65536), 2);
+        // The shrink tiers keep the staged block within the ~256 KiB
+        // budget up to 8192-point axes (16 B per complex element); beyond
+        // that the 2-line floor holds batching without a budget claim.
+        for len in [1usize, 64, 2048, 2049, 4096, 4097, 8192] {
+            let b = line_block(len);
+            assert!((2..=LINE_BLOCK).contains(&b));
+            assert!(b * len * 16 <= 256 * 1024, "len {len}: {} B staged", b * len * 16);
+        }
+        assert_eq!(line_block(1 << 20), 2);
+    }
+
+    #[test]
+    fn ndrplan_cache_returns_shared_handles() {
+        let a = ndrplan_for(&[6, 8]);
+        let b = ndrplan_for(&[6, 8]);
+        assert!(Arc::ptr_eq(&a, &b), "same shape must share one plan");
+        assert_eq!(a.shape(), &[6, 8]);
+        let c = ndrplan_for(&[8, 6]);
+        assert!(!Arc::ptr_eq(&a, &c), "distinct shapes get distinct plans");
     }
 
     #[test]

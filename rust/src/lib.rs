@@ -8,16 +8,20 @@
 //!
 //! The crate contains everything the paper depends on, built from scratch:
 //!
-//! * [`fourier`] — FFTs (radix-2 / mixed-radix / Bluestein), real
-//!   half-spectrum transforms ([`fourier::rfftn`] / [`fourier::NdRealFft`] —
-//!   the POCS hot path: half the arithmetic of the complex transform,
-//!   allocation-free scratch plans, multi-threaded line sweeps), N-D
-//!   transforms, and radially-binned power spectra;
+//! * [`fourier`] — FFTs (split-radix-family radix-4 pow-2 kernel with a
+//!   radix-2 oracle / Bluestein for arbitrary sizes), real half-spectrum
+//!   transforms ([`fourier::rfftn`] / [`fourier::NdRealFft`] — the POCS
+//!   hot path: half the arithmetic of the complex transform,
+//!   allocation-free scratch plans, multi-threaded line sweeps with
+//!   per-axis-length gather blocks), N-D transforms, and radially-binned
+//!   power spectra;
 //! * [`compressors`] — three error-bounded base compressors in the style of
 //!   SZ3 (prediction-based), ZFP (block-transform), and SPERR (wavelet);
 //! * [`correction`] — the FFCz contribution itself: POCS alternating
 //!   projection between the *s-cube* and *f-cube*, plus edit compaction,
-//!   quantization, and entropy coding;
+//!   quantization, entropy coding, and the reusable
+//!   [`correction::CorrectionScratch`] that makes the encode retry ladder
+//!   allocation-free in steady state;
 //! * [`codec`] — composable per-chunk codec chains: a runtime registry of
 //!   base compressors and bytes→bytes stages, an optional FFCz correction
 //!   stage with the full bound space, and a self-describing versioned
@@ -160,7 +164,9 @@ pub mod prelude {
     pub use crate::compressors::{
         sperrlike::SperrLike, szlike::SzLike, zfplike::ZfpLike, Compressor, ErrorBound,
     };
-    pub use crate::correction::{compress, decompress, verify, BoundSpec, FfczConfig};
+    pub use crate::correction::{
+        compress, decompress, verify, BoundSpec, CorrectionScratch, FfczConfig,
+    };
     pub use crate::data::Field;
     pub use crate::fourier::{Complex, Fft};
     pub use crate::metrics::QualityReport;

@@ -78,8 +78,9 @@ fn print_usage() {
          \x20 compress    --input F --output F [--base sz-like|zfp-like|sperr-like]\n\
          \x20             [--eb REL | --abs-eb ABS]\n\
          \x20             [--db REL | --abs-db ABS | --power-spectrum REL]\n\
-         \x20             [--threads N]  POCS transform threads (output is\n\
-         \x20             identical for every N)\n\
+         \x20             [--threads N]  POCS transform threads (default auto:\n\
+         \x20             archive writes budget cores/workers per chunk;\n\
+         \x20             output is identical for every N)\n\
          \x20 decompress  --input F --output F\n\
          \x20 verify      --original F --archive F [--eb REL] [--db REL]\n\
          \x20 synth       --dataset NAME --scale N --output F   (nyx-baryon, nyx-dm,\n\
@@ -195,7 +196,9 @@ fn parse_chain_mini(s: &str) -> Result<CodecChainSpec> {
     let mut frequency: Option<FrequencyBound> = None;
     let mut max_iters = 200usize;
     let mut max_quant_retries = 3usize;
-    let mut threads = 1usize;
+    // 0 = auto (cooperatively budgeted by the store writer); the
+    // `threads=` key sets an explicit count.
+    let mut threads = 0usize;
     let mut correction_knobs = false;
     let mut base_only = false;
     for part in params.split(',').filter(|p| !p.trim().is_empty()) {
@@ -329,7 +332,10 @@ fn build_config(flags: &HashMap<String, String>) -> Result<FfczConfig> {
         frequency: frequency_bound_flag(flags)?,
         max_iters: parse_f64(flags, "max-iters", 200.0)?.max(1.0) as usize,
         max_quant_retries: parse_f64(flags, "quant-retries", 3.0)?.max(0.0) as usize,
-        threads: parse_f64(flags, "threads", 1.0)?.max(1.0) as usize,
+        // Default 0 = auto: the store writer budgets
+        // available_parallelism()/workers per chunk; whole-field paths run
+        // single-threaded. An explicit --threads N (≥ 1) always wins.
+        threads: parse_f64(flags, "threads", 0.0)?.max(0.0) as usize,
     })
 }
 
@@ -551,13 +557,14 @@ fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
         if report.all_chunks_ok { "OK" } else { "VIOLATED" },
     );
     println!(
-        "{}: peak {} of chunk payloads in memory",
+        "{}: peak {} of chunk payloads in memory, {} scratch warm-up allocations",
         if report.streamed {
             "streamed"
         } else {
             "in-memory assembly"
         },
         ffcz::util::human_bytes(report.peak_payload_bytes),
+        report.scratch_alloc_events,
     );
     if !report.all_chunks_ok {
         bail!("dual-domain verification failed for at least one chunk");

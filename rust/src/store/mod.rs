@@ -69,7 +69,9 @@ pub mod writer;
 pub use crate::codec::{ChunkStats, CodecChain, CodecChainSpec, EncodedChunk};
 pub use grid::{extract_subarray, insert_subarray, ChunkGrid};
 pub use manifest::{ChunkEntry, Manifest};
-pub use parallel::{par_try_map, par_try_map_ordered_sink};
+pub use parallel::{
+    par_try_map, par_try_map_ordered_sink, par_try_map_ordered_sink_with, par_try_map_with,
+};
 pub use reader::Store;
 pub use writer::{
     encode_store, stream_store_to, write_store, write_store_in_memory, StoreStreamWriter,

@@ -6,7 +6,7 @@
 //! channels, deterministic output order. This is the chunk-level analogue
 //! of how [`crate::coordinator::sharding`] parallelizes over shards.
 //!
-//! Two entry points:
+//! Entry points:
 //!
 //! * [`par_try_map`] collects every result into a `Vec` (decode paths,
 //!   where the caller needs all pieces anyway);
@@ -14,7 +14,13 @@
 //!   **in index order** through a bounded window, so at most
 //!   `window` results exist at once — the streaming store writer uses this
 //!   to spill chunk payloads to disk with O(window × chunk) peak memory
-//!   instead of O(field).
+//!   instead of O(field);
+//! * the `*_with` variants ([`par_try_map_with`],
+//!   [`par_try_map_ordered_sink_with`]) additionally give each worker
+//!   thread its own state built by an `init` closure — how the store
+//!   encoder hands every worker one
+//!   [`crate::correction::CorrectionScratch`] that lives across all the
+//!   chunks that worker encodes.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -30,21 +36,39 @@ where
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
 {
+    par_try_map_with(n, workers, || (), |i, _: &mut ()| f(i))
+}
+
+/// [`par_try_map`] with per-worker state: every worker thread builds one
+/// `S` with `init` at start-up and threads it through each `f(index,
+/// &mut state)` call it executes. State is worker-private (no `Sync`
+/// bound, never crosses threads), so grow-only scratch warms once per
+/// worker and is reused for every further index that worker claims.
+pub fn par_try_map_with<T, S, I, F>(n: usize, workers: usize, init: I, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> Result<T> + Sync,
+{
     let workers = workers.clamp(1, n.max(1));
     if workers == 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(i, &mut state)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &mut state);
+                    *slots[i].lock().unwrap() = Some(r);
                 }
-                let r = f(i);
-                *slots[i].lock().unwrap() = Some(r);
             });
         }
     });
@@ -90,18 +114,41 @@ pub fn par_try_map_ordered_sink<T, F, S>(
     workers: usize,
     window: usize,
     f: F,
-    mut sink: S,
+    sink: S,
 ) -> Result<()>
 where
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
     S: FnMut(usize, T) -> Result<()>,
 {
+    par_try_map_ordered_sink_with(n, workers, window, || (), |i, _: &mut ()| f(i), sink)
+}
+
+/// [`par_try_map_ordered_sink`] with per-worker state (see
+/// [`par_try_map_with`]): each producer thread builds one `S` with `init`
+/// and reuses it for every index it claims, while the sink still observes
+/// strict index order — the combination behind the streaming store
+/// writer's per-worker correction scratch.
+pub fn par_try_map_ordered_sink_with<T, S, I, F, Snk>(
+    n: usize,
+    workers: usize,
+    window: usize,
+    init: I,
+    f: F,
+    mut sink: Snk,
+) -> Result<()>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> Result<T> + Sync,
+    Snk: FnMut(usize, T) -> Result<()>,
+{
     let workers = workers.clamp(1, n.max(1));
     let window = window.max(workers);
     if workers == 1 || n <= 1 {
+        let mut state = init();
         for i in 0..n {
-            sink(i, f(i)?)?;
+            sink(i, f(i, &mut state)?)?;
         }
         return Ok(());
     }
@@ -117,24 +164,27 @@ where
     std::thread::scope(|scope| -> Result<()> {
         for _ in 0..workers {
             let tx = tx.clone();
-            let (next, gate, f) = (&next, &gate, &f);
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                // Wait for index i to enter the write window.
-                {
-                    let mut st = gate.state.lock().unwrap();
-                    while !st.abort && i >= st.written + window {
-                        st = gate.cv.wait(st).unwrap();
-                    }
-                    if st.abort {
+            let (next, gate, f, init) = (&next, &gate, &f, &init);
+            scope.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
                         break;
                     }
-                }
-                if tx.send((i, f(i))).is_err() {
-                    break; // consumer hung up (early error)
+                    // Wait for index i to enter the write window.
+                    {
+                        let mut st = gate.state.lock().unwrap();
+                        while !st.abort && i >= st.written + window {
+                            st = gate.cv.wait(st).unwrap();
+                        }
+                        if st.abort {
+                            break;
+                        }
+                    }
+                    if tx.send((i, f(i, &mut state))).is_err() {
+                        break; // consumer hung up (early error)
+                    }
                 }
             });
         }
@@ -283,6 +333,62 @@ mod tests {
             .unwrap_err();
             assert_eq!(format!("{err}"), "sink full", "workers={workers}");
         }
+    }
+
+    #[test]
+    fn per_worker_state_is_private_and_reused() {
+        // Each worker's state counts how many indices it handled; the sum
+        // of all per-state counts must equal n (every index touched one
+        // state exactly once — states are never shared across threads).
+        let total_handled = AtomicUsize::new(0);
+        for workers in [1usize, 3] {
+            total_handled.store(0, Ordering::SeqCst);
+            let out = par_try_map_with(
+                23,
+                workers,
+                || 0usize,
+                |i, count| {
+                    *count += 1;
+                    // Report the running per-state count so the final sum
+                    // over "last seen per state" equals n.
+                    total_handled.fetch_add(1, Ordering::SeqCst);
+                    Ok((i, *count))
+                },
+            )
+            .unwrap();
+            assert_eq!(total_handled.load(Ordering::SeqCst), 23);
+            assert_eq!(out.len(), 23);
+            // Indices arrive in order and every state was reused at least
+            // once when there are fewer workers than items.
+            for (j, (i, count)) in out.iter().enumerate() {
+                assert_eq!(*i, j);
+                assert!(*count >= 1);
+            }
+            let max_count = out.iter().map(|(_, c)| *c).max().unwrap();
+            assert!(
+                max_count >= 23 / workers.max(1) / 2,
+                "workers={workers}: states not reused (max count {max_count})"
+            );
+        }
+
+        // Ordered-sink variant: same invariant, sink still in order.
+        let mut seen = Vec::new();
+        par_try_map_ordered_sink_with(
+            17,
+            4,
+            3,
+            || 0usize,
+            |i, count| {
+                *count += 1;
+                Ok(i)
+            },
+            |i, v| {
+                seen.push((i, v));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, (0..17).map(|i| (i, i)).collect::<Vec<_>>());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! verified, per-chunk codec chains), and partial `read_region` that
 //! touches only intersecting chunks.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -89,6 +89,13 @@ struct ChunkCache {
     /// Monotonic access clock for LRU ordering.
     clock: u64,
     entries: HashMap<usize, CacheEntry>,
+    /// Stamp-ordered eviction index: `stamp → chunk index`, mirroring
+    /// `entries` exactly (each entry's current stamp appears once; stamps
+    /// are unique because the clock only ticks under the cache lock).
+    /// Eviction pops the smallest stamp — O(log n) per evicted chunk —
+    /// instead of min-scanning the entry map, which made mass evictions
+    /// (budget shrink, hot sweeps over 10⁵+ cached chunks) quadratic.
+    order: BTreeMap<u64, usize>,
 }
 
 struct CacheEntry {
@@ -103,22 +110,40 @@ impl ChunkCache {
             bytes: 0,
             clock: 0,
             entries: HashMap::new(),
+            order: BTreeMap::new(),
         }
+    }
+
+    /// Re-stamp `index` as most recently used and hand back its decoded
+    /// field; `None` if the chunk is not cached. One map lookup — this is
+    /// the whole hit path under the cache lock.
+    fn touch(&mut self, index: usize) -> Option<Arc<Field>> {
+        self.clock += 1;
+        let stamp = self.clock;
+        let entry = self.entries.get_mut(&index)?;
+        self.order.remove(&entry.stamp);
+        entry.stamp = stamp;
+        self.order.insert(stamp, index);
+        Some(entry.field.clone())
     }
 
     /// Evict least-recently-used entries until within budget.
     fn evict_to_budget(&mut self) {
-        while self.bytes > self.budget && !self.entries.is_empty() {
-            let oldest = *self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.stamp)
-                .map(|(k, _)| k)
-                .expect("non-empty cache has a minimum");
+        while self.bytes > self.budget {
+            let Some((_, oldest)) = self.order.pop_first() else {
+                break;
+            };
             if let Some(e) = self.entries.remove(&oldest) {
                 self.bytes -= e.field.len() * 8;
             }
         }
+    }
+
+    /// Drop every entry (budget set to 0 / cache disabled).
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.order.clear();
+        self.bytes = 0;
     }
 }
 
@@ -265,8 +290,7 @@ impl Store {
         let mut cache = self.cache.lock().unwrap();
         cache.budget = bytes;
         if bytes == 0 {
-            cache.entries.clear();
-            cache.bytes = 0;
+            cache.clear();
         } else {
             cache.evict_to_budget();
         }
@@ -306,11 +330,7 @@ impl Store {
                 drop(cache);
                 return Ok(Arc::new(self.decode_chunk(index)?));
             }
-            cache.clock += 1;
-            let stamp = cache.clock;
-            if let Some(entry) = cache.entries.get_mut(&index) {
-                entry.stamp = stamp;
-                let field = entry.field.clone();
+            if let Some(field) = cache.touch(index) {
                 drop(cache);
                 self.cache_hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(field);
@@ -334,8 +354,12 @@ impl Store {
                     field: field.clone(),
                 },
             ) {
+                // Racing miss on the same chunk: replace the loser's entry
+                // and retire its stamp from the eviction index.
                 cache.bytes -= old.field.len() * 8;
+                cache.order.remove(&old.stamp);
             }
+            cache.order.insert(stamp, index);
             cache.bytes += field_bytes;
             cache.evict_to_budget();
         }
@@ -557,6 +581,47 @@ mod tests {
         let (hits, misses) = (store.cache_hits(), store.cache_misses());
         store.decompress_all(1).unwrap();
         assert_eq!((store.cache_hits(), store.cache_misses()), (hits, misses));
+    }
+
+    #[test]
+    fn lru_stamp_index_stays_consistent_under_churn_and_mass_eviction() {
+        let (field, bytes) = store_bytes();
+        let store = Store::from_bytes(bytes).unwrap();
+        // Budget for roughly two full 5×4 chunks: constant churn.
+        let budget = 2 * 5 * 4 * 8;
+        store.set_cache_budget(budget);
+        // Sweep overlapping windows in a non-monotonic order so hits,
+        // misses, evictions, and re-inserts interleave.
+        let windows = [
+            ([0usize, 0usize], [6usize, 6usize]),
+            ([4, 2], [8, 8]),
+            ([0, 0], [6, 6]),
+            ([6, 4], [6, 6]),
+            ([2, 0], [4, 10]),
+            ([0, 0], [12, 10]),
+            ([4, 2], [8, 8]),
+        ];
+        for (origin, shape) in windows {
+            let got = store.read_region(&origin, &shape, 2).unwrap();
+            let want = extract_subarray(field.data(), field.shape(), &origin, &shape);
+            assert_eq!(got.data(), &want[..], "window {origin:?}+{shape:?}");
+            assert!(
+                store.cache_bytes() <= budget,
+                "cache {} exceeds budget {budget}",
+                store.cache_bytes()
+            );
+        }
+        assert!(store.cache_hits() > 0, "sweep produced no cache hits");
+        assert!(store.cache_misses() > 0);
+        // Mass eviction via budget shrink: one chunk's worth left.
+        store.set_cache_budget(5 * 4 * 8);
+        assert!(store.cache_bytes() <= 5 * 4 * 8);
+        // The cache still serves correct data afterwards.
+        let got = store.read_region(&[0, 0], &[12, 10], 1).unwrap();
+        assert_eq!(got.data(), field.data());
+        // Disable: everything dropped, index emptied with it.
+        store.set_cache_budget(0);
+        assert_eq!(store.cache_bytes(), 0);
     }
 
     #[test]

@@ -29,12 +29,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::codec::{CodecChain, CodecChainSpec, EncodedChunk};
+use crate::correction::CorrectionScratch;
 use crate::data::{Field, Precision};
 use crate::encoding::crc32;
 
 use super::grid::{extract_subarray, ChunkGrid};
 use super::manifest::{ChunkEntry, Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
-use super::parallel::{par_try_map, par_try_map_ordered_sink};
+use super::parallel::{par_try_map_ordered_sink_with, par_try_map_with};
 
 /// Options for store creation.
 #[derive(Debug, Clone)]
@@ -120,13 +121,52 @@ pub struct StoreWriteReport {
     pub peak_payload_bytes: usize,
     /// True for the streaming write path, false for in-memory assembly.
     pub streamed: bool,
+    /// Correction-scratch allocation events summed over all workers (plan
+    /// first contacts, spectrum/workspace buffer growth — see
+    /// [`CorrectionScratch::allocation_events`]). Each worker warms once
+    /// per chunk shape; steady-state chunks add zero, so on a
+    /// uniform-chunk grid this stays O(workers), not O(chunks). The
+    /// throughput bench emits the per-chunk steady-state gauge derived
+    /// from the same counter and CI asserts it is zero.
+    pub scratch_alloc_events: usize,
     pub elapsed: Duration,
 }
 
-/// POCS transform thread count a chain runs with (1 when it has no
-/// correction stage).
+/// POCS transform thread count a chain requests (1 when it has no
+/// correction stage). `0` = auto, kept distinct from an explicit 1 so an
+/// auto-threaded override never dedups onto an explicitly single-threaded
+/// chain entry (or vice versa).
 fn chain_threads(spec: &CodecChainSpec) -> usize {
-    spec.correction.as_ref().map_or(1, |c| c.threads.max(1))
+    spec.correction.as_ref().map_or(1, |c| c.threads)
+}
+
+/// Cooperative per-chunk transform thread budget for chains that left
+/// `threads` on auto (0): divide the machine between the cross-chunk
+/// worker pool, so per-chunk line threading composes with `workers`
+/// concurrent chunk encodes without oversubscription. One core per worker
+/// is the floor. Callers pass the *effective* worker count
+/// (`min(workers, chunks)`) so a pool bigger than the grid doesn't
+/// undersubscribe the machine.
+fn auto_thread_budget(workers: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    (cores / workers.max(1)).max(1)
+}
+
+/// Resolve `threads == 0` (auto) to the cooperative budget on every chain
+/// with a correction stage. Explicit thread counts (≥ 1) always win.
+/// Execution-only: `threads` is never serialized, so resolved and
+/// unresolved chains produce identical manifests and archive bytes.
+fn resolve_auto_threads(chains: &mut [CodecChainSpec], workers: usize) {
+    let budget = auto_thread_budget(workers);
+    for spec in chains.iter_mut() {
+        if let Some(correction) = spec.correction.as_mut() {
+            if correction.threads == 0 {
+                correction.threads = budget;
+            }
+        }
+    }
 }
 
 /// Resolve the default chain plus overrides into a deduplicated chain
@@ -184,25 +224,43 @@ pub fn encode_store(
 ) -> Result<(Vec<u8>, Manifest, StoreWriteReport)> {
     let t0 = Instant::now();
     let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
-    let (chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
+    let (mut chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
+    // Budget against the number of workers that will actually run (the
+    // pool clamps itself to the chunk count).
+    resolve_auto_threads(&mut chains, opts.workers.clamp(1, grid.chunk_count().max(1)));
     let built: Vec<CodecChain> = chains
         .iter()
         .map(CodecChain::from_spec)
         .collect::<Result<_>>()?;
 
-    let encoded = par_try_map(grid.chunk_count(), opts.workers, |i| {
-        let coords = grid.chunk_coords(i);
-        let origin = grid.chunk_origin(&coords);
-        let extent = grid.chunk_extent(&coords);
-        let chunk = Field::new(
-            &extent,
-            extract_subarray(field.data(), field.shape(), &origin, &extent),
-            field.precision(),
-        );
-        built[assign[i]]
-            .encode_chunk(&chunk)
-            .with_context(|| format!("encoding chunk {}", grid.chunk_key(i)))
-    })?;
+    // Each worker owns one correction scratch across every chunk it
+    // encodes; the counter audits that reuse (warm-up only, zero steady
+    // state).
+    let scratch_events = AtomicUsize::new(0);
+    let encoded = par_try_map_with(
+        grid.chunk_count(),
+        opts.workers,
+        CorrectionScratch::new,
+        |i, scratch| {
+            let coords = grid.chunk_coords(i);
+            let origin = grid.chunk_origin(&coords);
+            let extent = grid.chunk_extent(&coords);
+            let chunk = Field::new(
+                &extent,
+                extract_subarray(field.data(), field.shape(), &origin, &extent),
+                field.precision(),
+            );
+            let before = scratch.allocation_events();
+            let enc = built[assign[i]]
+                .encode_chunk_with_scratch(&chunk, scratch)
+                .with_context(|| format!("encoding chunk {}", grid.chunk_key(i)))?;
+            scratch_events.fetch_add(
+                (scratch.allocation_events() - before) as usize,
+                Ordering::Relaxed,
+            );
+            Ok(enc)
+        },
+    )?;
 
     // Assemble: head magic, payloads, manifest, footer.
     let mut out = Vec::new();
@@ -241,6 +299,7 @@ pub fn encode_store(
         // Every payload is held until assembly: the in-memory scale wall.
         peak_payload_bytes: manifest.payload_bytes() as usize,
         streamed: false,
+        scratch_alloc_events: scratch_events.load(Ordering::Relaxed),
         elapsed: t0.elapsed(),
     };
     Ok((out, manifest, report))
@@ -378,7 +437,10 @@ pub fn stream_store_to<W: Write>(
 ) -> Result<(Manifest, StoreWriteReport)> {
     let t0 = Instant::now();
     let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
-    let (chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
+    let (mut chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
+    // Budget against the number of workers that will actually run (the
+    // pool clamps itself to the chunk count).
+    resolve_auto_threads(&mut chains, opts.workers.clamp(1, grid.chunk_count().max(1)));
     let built: Vec<CodecChain> = chains
         .iter()
         .map(CodecChain::from_spec)
@@ -395,11 +457,15 @@ pub fn stream_store_to<W: Write>(
     // peak-RSS proxy asserted by tests and reported by the bench.
     let in_flight = AtomicUsize::new(0);
     let peak = AtomicUsize::new(0);
-    par_try_map_ordered_sink(
+    // Per-worker correction scratch, reused across every chunk a worker
+    // encodes (audited by the allocation-event counter).
+    let scratch_events = AtomicUsize::new(0);
+    par_try_map_ordered_sink_with(
         grid.chunk_count(),
         opts.workers,
         opts.window(),
-        |i| {
+        CorrectionScratch::new,
+        |i, scratch| {
             let coords = grid.chunk_coords(i);
             let origin = grid.chunk_origin(&coords);
             let extent = grid.chunk_extent(&coords);
@@ -408,9 +474,14 @@ pub fn stream_store_to<W: Write>(
                 extract_subarray(field.data(), field.shape(), &origin, &extent),
                 field.precision(),
             );
+            let before = scratch.allocation_events();
             let enc = built[assign[i]]
-                .encode_chunk(&chunk)
+                .encode_chunk_with_scratch(&chunk, scratch)
                 .with_context(|| format!("encoding chunk {}", grid.chunk_key(i)))?;
+            scratch_events.fetch_add(
+                (scratch.allocation_events() - before) as usize,
+                Ordering::Relaxed,
+            );
             let now = in_flight.fetch_add(enc.bytes.len(), Ordering::SeqCst) + enc.bytes.len();
             peak.fetch_max(now, Ordering::SeqCst);
             Ok(enc)
@@ -435,6 +506,7 @@ pub fn stream_store_to<W: Write>(
         all_chunks_ok: manifest.all_chunks_ok(),
         peak_payload_bytes: peak.load(Ordering::SeqCst),
         streamed: true,
+        scratch_alloc_events: scratch_events.load(Ordering::Relaxed),
         elapsed: t0.elapsed(),
     };
     Ok((manifest, report))
@@ -544,6 +616,55 @@ mod tests {
         assert_eq!(chains[1].ffcz_config().unwrap().threads, 4);
         // Wire bytes are still identical (threads is never serialized).
         assert_eq!(chains[0].to_bytes(), chains[1].to_bytes());
+    }
+
+    #[test]
+    fn auto_threads_resolved_cooperatively_explicit_wins() {
+        // Default-constructed configs request auto (threads == 0); the
+        // writer resolves them to the cooperative budget. Explicit counts
+        // pass through untouched.
+        let auto = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+        let explicit =
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3).with_threads(1));
+        // Read the raw stage field: `ffcz_config()` clamps to ≥ 1 for
+        // direct execution, which would mask the auto sentinel here.
+        assert_eq!(
+            auto.correction.as_ref().unwrap().threads,
+            0,
+            "default must be auto"
+        );
+        let mut chains = vec![auto, explicit, CodecChainSpec::lossless()];
+        resolve_auto_threads(&mut chains, 2);
+        let budget = auto_thread_budget(2);
+        assert!(budget >= 1);
+        assert_eq!(chains[0].correction.as_ref().unwrap().threads, budget);
+        assert_eq!(chains[0].ffcz_config().unwrap().threads, budget);
+        assert_eq!(
+            chains[1].correction.as_ref().unwrap().threads,
+            1,
+            "explicit clobbered"
+        );
+        assert!(chains[2].correction.is_none());
+        // More workers than cores degrades gracefully to 1 thread each.
+        assert_eq!(auto_thread_budget(usize::MAX / 2), 1);
+    }
+
+    #[test]
+    fn scratch_warms_once_per_worker_not_per_chunk() {
+        // Same chunk shape, 4× the chunk count: the per-worker scratch
+        // must warm up on the first chunk and add nothing afterwards, so
+        // the allocation-event total is identical for both encodes.
+        let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+        let small = GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(7).build();
+        let large = GrfBuilder::new(&[16, 16]).lognormal(1.0).seed(8).build();
+        let opts = StoreWriteOptions::new(&[4, 4]).workers(1);
+        let (_, _, small_report) = encode_store(&small, &spec, &opts).unwrap();
+        let (_, _, large_report) = encode_store(&large, &spec, &opts).unwrap();
+        assert!(small_report.scratch_alloc_events > 0, "warm-up must register");
+        assert_eq!(
+            small_report.scratch_alloc_events, large_report.scratch_alloc_events,
+            "steady-state chunks allocated scratch (4 vs 16 chunks of [4, 4])"
+        );
     }
 
     #[test]

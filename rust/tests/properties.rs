@@ -14,7 +14,10 @@
 //!    across pow2/odd/mixed N-D shapes (and round-trip);
 //! 8. the half-spectrum POCS fast path reproduces
 //!    `alternating_projection_reference` within 1e-10, with dual bounds
-//!    verified by `check_dual_bounds` on every corrected output.
+//!    verified by `check_dual_bounds` on every corrected output;
+//! 9. a `CorrectionScratch` reused across chunks of different shapes and
+//!    bound modes produces byte-identical archives to fresh-state
+//!    encoding, and stops allocating once warmed on every shape.
 
 use ffcz::compressors::{paper_compressors, ErrorBound};
 use ffcz::correction::{
@@ -284,4 +287,107 @@ fn prop_pocs_fast_path_matches_reference() {
             );
         }
     }
+}
+
+/// 9. One `CorrectionScratch` driven across a sequence of chunks with
+///    *different* shapes and bound modes produces archives byte-identical
+///    to fresh-state encoding, and the scratch is workspace-stable: after
+///    the first pass over all shapes, a second pass performs zero
+///    allocation events.
+#[test]
+fn prop_scratch_reuse_bit_identical_across_shapes_and_bound_modes() {
+    use ffcz::codec::{CodecChain, CodecChainSpec};
+    use ffcz::compressors::{szlike::SzLike, Compressor};
+    use ffcz::correction::{
+        correct_reconstruction, correct_reconstruction_with_scratch, BoundSpec,
+        CorrectionScratch, FfczConfig,
+    };
+    use ffcz::data::synth::{eeg::EegBuilder, grf::GrfBuilder};
+
+    let base = SzLike::default();
+    // (field, config): mixed dimensionalities and all three bound modes.
+    let abs_field = GrfBuilder::new(&[12, 10]).lognormal(1.0).seed(31).build();
+    let abs_e = abs_field.value_span() * 1e-3;
+    let cases: Vec<(Field, FfczConfig)> = vec![
+        (
+            GrfBuilder::new(&[16, 16]).lognormal(1.0).seed(29).build(),
+            FfczConfig::relative(1e-3, 1e-3),
+        ),
+        (
+            GrfBuilder::new(&[8, 8, 8]).lognormal(1.0).seed(30).build(),
+            FfczConfig::relative(1e-3, 1e-3),
+        ),
+        (
+            EegBuilder::new(512).seed(32).build(),
+            FfczConfig::relative(1e-3, 5e-4),
+        ),
+        (abs_field, FfczConfig::absolute(abs_e, abs_e)),
+        (
+            GrfBuilder::new(&[16, 16]).lognormal(1.0).seed(33).build(),
+            FfczConfig::power_spectrum(1e-2, 1e-3),
+        ),
+    ];
+
+    let mut scratch = CorrectionScratch::new();
+    let mut warm_events = 0u64;
+    for pass in 0..2 {
+        for (ci, (field, cfg)) in cases.iter().enumerate() {
+            let bound = match cfg.spatial {
+                BoundSpec::Absolute(v) => ErrorBound::Absolute(v),
+                BoundSpec::Relative(r) => ErrorBound::Relative(r),
+            };
+            let payload = base.compress(field, bound).unwrap();
+            let recon0 = base.decompress(&payload).unwrap();
+            let fresh =
+                correct_reconstruction(field, &recon0, "sz-like", payload.clone(), cfg).unwrap();
+            let reused = correct_reconstruction_with_scratch(
+                field,
+                &recon0,
+                "sz-like",
+                payload.clone(),
+                cfg,
+                &mut scratch,
+            )
+            .unwrap();
+            assert_eq!(
+                fresh.to_bytes(),
+                reused.to_bytes(),
+                "pass {pass} case {ci}: scratch-reused archive differs from fresh"
+            );
+        }
+        if pass == 0 {
+            warm_events = scratch.allocation_events();
+            assert!(warm_events > 0, "warm-up recorded no allocation events");
+        }
+    }
+    assert_eq!(
+        scratch.allocation_events(),
+        warm_events,
+        "scratch grew after warming on every shape"
+    );
+
+    // Codec-chain level: the store's per-worker entry point must be
+    // byte-identical to the fresh-state one (covers the verify transform
+    // and archive framing too).
+    let chunk = GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(34).build();
+    let chain = CodecChain::from_spec(&CodecChainSpec::ffcz(
+        "sz-like",
+        &FfczConfig::relative(1e-3, 1e-3),
+    ))
+    .unwrap();
+    let mut scratch = CorrectionScratch::new();
+    let fresh = chain.encode_chunk(&chunk).unwrap();
+    let reused = chain.encode_chunk_with_scratch(&chunk, &mut scratch).unwrap();
+    assert_eq!(fresh.bytes, reused.bytes);
+    assert_eq!(fresh.stats.spatial_ok, reused.stats.spatial_ok);
+    assert_eq!(fresh.stats.frequency_ok, reused.stats.frequency_ok);
+    // And a second encode through the warmed scratch allocates nothing.
+    let warmed = scratch.allocation_events();
+    let again = chain.encode_chunk_with_scratch(&chunk, &mut scratch).unwrap();
+    assert_eq!(again.bytes, fresh.bytes);
+    assert_eq!(
+        scratch.allocation_events(),
+        warmed,
+        "steady-state chunk encode allocated scratch"
+    );
 }
