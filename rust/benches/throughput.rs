@@ -253,6 +253,10 @@ fn store_comparison(quick: bool) {
     let (gauge_shape, gauge_chunks, allocs_per_chunk, reuse_s, fresh_s, speedup, _) =
         encode_scratch_gauge(quick);
 
+    // Disabled-mode telemetry cost relative to one chunk encode.
+    let encode_chunk_s = reuse_s / gauge_chunks as f64;
+    let (telemetry_s, overhead_pct) = telemetry_overhead(encode_chunk_s);
+
     // Hand-rolled JSON (no serde in the offline crate universe).
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"store_throughput\",\n");
@@ -265,6 +269,12 @@ fn store_comparison(quick: bool) {
          \"reuse_median_s\": {reuse_s:.6}, \"fresh_median_s\": {fresh_s:.6}, \
          \"speedup_vs_fresh\": {speedup:.3}}},\n",
         gs.join(", ")
+    ));
+    json.push_str(&format!(
+        "  \"telemetry_overhead\": {{\"per_chunk_ns\": {:.1}, \
+         \"encode_chunk_ms\": {:.4}, \"overhead_pct\": {overhead_pct:.4}}},\n",
+        telemetry_s * 1e9,
+        encode_chunk_s * 1e3
     ));
     json.push_str("  \"configs\": [\n");
     for (i, (name, secs, gbps, peak)) in rows.iter().enumerate() {
@@ -280,6 +290,52 @@ fn store_comparison(quick: bool) {
     } else {
         println!("wrote BENCH_store.json");
     }
+}
+
+/// Disabled-mode telemetry cost per chunk: time a loop of the telemetry
+/// operations one chunk encode performs (stage span guards + counter /
+/// gauge / histogram bumps) with tracing off, and express it as a
+/// percentage of the measured per-chunk encode wall time. Recording is
+/// off by default, so this is the price every un-traced run pays — the
+/// quick bench emits it as the `telemetry_overhead` row of
+/// `BENCH_store.json` and CI gates it at ≤ 2%.
+fn telemetry_overhead(encode_chunk_s: f64) -> (f64, f64) {
+    ffcz::telemetry::trace::disable();
+    let counter = ffcz::telemetry::counter("bench.telemetry.overhead_probe");
+    let gauge = ffcz::telemetry::gauge("bench.telemetry.overhead_gauge");
+    let hist = ffcz::telemetry::histogram("bench.telemetry.overhead_hist");
+    let iters = 200_000u64;
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        // One chunk's worth of telemetry traffic on the store encode
+        // path: six span guards (inert while tracing is off), the encode
+        // counters, the peak gauge, and the chunk-time histogram.
+        let _s1 = ffcz::telemetry::span("bench.overhead.encode");
+        let _s2 = ffcz::telemetry::span("bench.overhead.base");
+        let _s3 = ffcz::telemetry::span("bench.overhead.correct");
+        let _s4 = ffcz::telemetry::span("bench.overhead.verify");
+        let _s5 = ffcz::telemetry::span("bench.overhead.lossless");
+        let _s6 = ffcz::telemetry::span("bench.overhead.sink");
+        counter.incr();
+        counter.add(black_box(i) & 0xF);
+        counter.incr();
+        counter.add(3);
+        counter.incr();
+        counter.incr();
+        counter.incr();
+        counter.incr();
+        gauge.max(black_box(i));
+        hist.record(black_box(i));
+    }
+    let per_op_s = t0.elapsed().as_secs_f64() / iters as f64;
+    let overhead_pct = 100.0 * per_op_s / encode_chunk_s.max(1e-12);
+    println!(
+        "telemetry overhead (disabled): {:.1} ns per chunk = {overhead_pct:.4}% of the \
+         {:.3} ms per-chunk encode",
+        per_op_s * 1e9,
+        encode_chunk_s * 1e3
+    );
+    (per_op_s, overhead_pct)
 }
 
 fn per_dataset() {

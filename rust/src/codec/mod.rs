@@ -89,11 +89,75 @@ impl ChunkStats {
     }
 }
 
-/// One encoded chunk plus the verification stats recorded in the manifest.
+/// Per-chunk encode measurements beyond the manifest-persisted
+/// [`ChunkStats`]: stage wall times and retry-ladder outcomes. In-memory
+/// only — the `.ffcz` wire format is unchanged; the store writer lifts
+/// this into [`crate::store::StoreWriteReport`] chunk reports and the
+/// `archive create --stats` table.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChunkEncodeDetail {
+    /// Uncompressed chunk size in bytes (`len · 8`).
+    pub bytes_in: usize,
+    /// Base-compressor stage (compress + probe decompress).
+    pub base_compress: std::time::Duration,
+    /// FFCz POCS correction (the whole quantization retry ladder).
+    pub correct: std::time::Duration,
+    /// Write-time dual-domain verification through the real decode path.
+    pub verify: std::time::Duration,
+    /// bytes→bytes lossless stages (zero when the chain has none).
+    pub lossless: std::time::Duration,
+    /// Whole-chunk encode wall time.
+    pub total: std::time::Duration,
+    /// Quantization retry-ladder attempts consumed (0 without correction).
+    pub quant_attempts: u32,
+    /// Whether the raw-edit fallback fired for this chunk.
+    pub used_raw_fallback: bool,
+}
+
+/// One encoded chunk plus the verification stats recorded in the manifest
+/// and the in-memory encode measurements.
 #[derive(Debug, Clone)]
 pub struct EncodedChunk {
     pub bytes: Vec<u8>,
     pub stats: ChunkStats,
+    pub detail: ChunkEncodeDetail,
+}
+
+/// Registered-counter handles for the encode path, fetched once.
+struct EncodeMetrics {
+    chunks: crate::telemetry::Counter,
+    pocs_iters: crate::telemetry::Counter,
+    quant_attempts: crate::telemetry::Counter,
+    raw_fallbacks: crate::telemetry::Counter,
+    bytes_in: crate::telemetry::Counter,
+    bytes_out: crate::telemetry::Counter,
+    chunk_ns: crate::telemetry::Histogram,
+}
+
+fn encode_metrics() -> &'static EncodeMetrics {
+    static METRICS: std::sync::OnceLock<EncodeMetrics> = std::sync::OnceLock::new();
+    METRICS.get_or_init(|| EncodeMetrics {
+        chunks: crate::telemetry::counter("store.encode.chunks"),
+        pocs_iters: crate::telemetry::counter("store.encode.pocs_iters"),
+        quant_attempts: crate::telemetry::counter("store.encode.quant_attempts"),
+        raw_fallbacks: crate::telemetry::counter("store.encode.raw_fallbacks"),
+        bytes_in: crate::telemetry::counter("store.encode.bytes_in"),
+        bytes_out: crate::telemetry::counter("store.encode.bytes_out"),
+        chunk_ns: crate::telemetry::histogram("store.encode.chunk_ns"),
+    })
+}
+
+struct DecodeMetrics {
+    chunks: crate::telemetry::Counter,
+    chunk_ns: crate::telemetry::Histogram,
+}
+
+fn decode_metrics() -> &'static DecodeMetrics {
+    static METRICS: std::sync::OnceLock<DecodeMetrics> = std::sync::OnceLock::new();
+    METRICS.get_or_init(|| DecodeMetrics {
+        chunks: crate::telemetry::counter("store.decode.chunks"),
+        chunk_ns: crate::telemetry::histogram("store.decode.chunk_ns"),
+    })
 }
 
 /// An executable codec chain: a validated [`CodecChainSpec`] with its
@@ -159,6 +223,11 @@ impl CodecChain {
         chunk: &Field,
         scratch: &mut CorrectionScratch,
     ) -> Result<EncodedChunk> {
+        let t_chunk = std::time::Instant::now();
+        let mut detail = ChunkEncodeDetail {
+            bytes_in: chunk.len() * 8,
+            ..Default::default()
+        };
         let (payload, stats) = match &self.spec.array {
             ArrayStage::RawF64 => {
                 let mut raw = Vec::with_capacity(chunk.len() * 8);
@@ -173,16 +242,44 @@ impl CodecChain {
                     .as_ref()
                     .expect("base stage resolved in from_spec");
                 match self.spec.ffcz_config() {
-                    Some(cfg) => self.encode_ffcz(chunk, name, base.as_ref(), &cfg, scratch)?,
-                    None => encode_base_only(chunk, name, base.as_ref(), spatial)?,
+                    Some(cfg) => {
+                        self.encode_ffcz(chunk, name, base.as_ref(), &cfg, scratch, &mut detail)?
+                    }
+                    None => {
+                        let _span = crate::telemetry::span("store.chunk.base_compress");
+                        let t = std::time::Instant::now();
+                        let out = encode_base_only(chunk, name, base.as_ref(), spatial)?;
+                        detail.base_compress = t.elapsed();
+                        out
+                    }
                 }
             }
         };
         let mut bytes = payload;
-        for stage in &self.bytes {
-            bytes = stage.encode(&bytes)?;
+        if !self.bytes.is_empty() {
+            let _span = crate::telemetry::span("store.chunk.lossless");
+            let t = std::time::Instant::now();
+            for stage in &self.bytes {
+                bytes = stage.encode(&bytes)?;
+            }
+            detail.lossless = t.elapsed();
         }
-        Ok(EncodedChunk { bytes, stats })
+        detail.total = t_chunk.elapsed();
+        let metrics = encode_metrics();
+        metrics.chunks.incr();
+        metrics.pocs_iters.add(stats.pocs_iterations as u64);
+        metrics.quant_attempts.add(detail.quant_attempts as u64);
+        if detail.used_raw_fallback {
+            metrics.raw_fallbacks.incr();
+        }
+        metrics.bytes_in.add(detail.bytes_in as u64);
+        metrics.bytes_out.add(bytes.len() as u64);
+        metrics.chunk_ns.record_duration(detail.total);
+        Ok(EncodedChunk {
+            bytes,
+            stats,
+            detail,
+        })
     }
 
     fn encode_ffcz(
@@ -192,15 +289,26 @@ impl CodecChain {
         base: &dyn Compressor,
         cfg: &FfczConfig,
         scratch: &mut CorrectionScratch,
+        detail: &mut ChunkEncodeDetail,
     ) -> Result<(Vec<u8>, ChunkStats)> {
         let bound = error_bound(&cfg.spatial);
+        let span = crate::telemetry::span("store.chunk.base_compress");
+        let t = std::time::Instant::now();
         let payload = base.compress(chunk, bound)?;
         let recon0 = base.decompress(&payload)?;
+        detail.base_compress = t.elapsed();
+        drop(span);
         // The archive records the *registry* name, so decode resolves
         // runtime-registered compressors even when their `name()` differs.
+        let span = crate::telemetry::span("store.chunk.pocs_correct");
+        let t = std::time::Instant::now();
         let archive = correction::correct_reconstruction_with_scratch(
             chunk, &recon0, name, payload, cfg, scratch,
         )?;
+        detail.correct = t.elapsed();
+        detail.quant_attempts = archive.stats.quant_attempts as u32;
+        detail.used_raw_fallback = archive.stats.used_raw_fallback;
+        drop(span);
         // Dual-domain verification against the original chunk; the outcome
         // is recorded per chunk in the manifest. The base payload is
         // decoded *again* from the stored bytes on purpose — verifying the
@@ -209,10 +317,14 @@ impl CodecChain {
         // compressor whose decompress disagrees with its encoder — while
         // the edit application and verification transforms run through the
         // worker's scratch.
+        let span = crate::telemetry::span("store.chunk.verify");
+        let t = std::time::Instant::now();
         let base_recon = base.decompress(&archive.base_payload)?;
         let recon =
             correction::apply::apply_edits_with_scratch(&base_recon, &archive.edits, scratch)?;
         let report = correction::verify_with_scratch(chunk, &recon, cfg, scratch);
+        detail.verify = t.elapsed();
+        drop(span);
         let stats = ChunkStats {
             spatial_ok: report.spatial_ok,
             frequency_ok: report.frequency_ok,
@@ -226,6 +338,21 @@ impl CodecChain {
     /// Decode a chunk; `shape`/`precision` come from the manifest and the
     /// decoded field must match both.
     pub fn decode_chunk(
+        &self,
+        bytes: &[u8],
+        shape: &[usize],
+        precision: Precision,
+    ) -> Result<Field> {
+        let _span = crate::telemetry::span("store.chunk.decode").arg("bytes", bytes.len() as u64);
+        let t = std::time::Instant::now();
+        let field = self.decode_chunk_inner(bytes, shape, precision)?;
+        let metrics = decode_metrics();
+        metrics.chunks.incr();
+        metrics.chunk_ns.record_duration(t.elapsed());
+        Ok(field)
+    }
+
+    fn decode_chunk_inner(
         &self,
         bytes: &[u8],
         shape: &[usize],

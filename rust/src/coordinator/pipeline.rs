@@ -23,6 +23,7 @@ use crate::correction::{
 };
 use crate::data::Field;
 use crate::store::{encode_store, write_store, StoreWriteOptions, StoreWriteReport};
+use crate::telemetry;
 
 /// Pipeline execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -183,6 +184,8 @@ fn run_pipelined(
 ) -> Result<PipelineReport> {
     let t0 = Instant::now();
     let base_name = base.name();
+    let run_span = telemetry::span("pipeline.run").arg("instances", instances.len() as u64);
+    let run_span_id = run_span.id();
     let (tx, rx) = sync_channel::<Result<StageOutput>>(cfg.queue_depth.max(1));
 
     let mut archives = Vec::new();
@@ -193,7 +196,10 @@ fn run_pipelined(
             // Stage 1: compression worker.
             scope.spawn(move || {
                 for (name, field) in instances {
+                    let stage_span =
+                        telemetry::span_with_parent("pipeline.compress", run_span_id);
                     let out = compress_stage(base, cfg, t0, name, field);
+                    drop(stage_span);
                     if tx.send(out).is_err() {
                         break; // consumer hung up
                     }
@@ -204,7 +210,9 @@ fn run_pipelined(
             // error return drops it, which unblocks a producer stalled on a
             // full queue (its send fails and the worker exits).
             for out in rx {
+                let stage_span = telemetry::span("pipeline.edit");
                 let (arch, timing) = edit_stage(base_name, cfg, t0, out?, &mut scratch)?;
+                drop(stage_span);
                 archives.push(arch);
                 timings.push(timing);
             }
@@ -223,12 +231,17 @@ fn run_sequential(
 ) -> Result<PipelineReport> {
     let t0 = Instant::now();
     let base_name = base.name();
+    let _run_span = telemetry::span("pipeline.run").arg("instances", instances.len() as u64);
     let mut archives = Vec::new();
     let mut timings = Vec::new();
     let mut scratch = CorrectionScratch::new();
     for (name, field) in instances {
+        let stage_span = telemetry::span("pipeline.compress");
         let out = compress_stage(base, cfg, t0, name, field)?;
+        drop(stage_span);
+        let stage_span = telemetry::span("pipeline.edit");
         let (arch, timing) = edit_stage(base_name, cfg, t0, out, &mut scratch)?;
+        drop(stage_span);
         archives.push(arch);
         timings.push(timing);
     }
@@ -357,6 +370,9 @@ pub fn run_pipeline_to_store(
         return run_streaming_to_store(instances, sink);
     }
     let t0 = Instant::now();
+    let run_span =
+        telemetry::span("pipeline.store").arg("instances", instances.len() as u64);
+    let run_span_id = run_span.id();
     let (tx, rx) = sync_channel::<Result<EncodedInstance>>(2);
 
     let mut outputs = Vec::new();
@@ -366,6 +382,8 @@ pub fn run_pipeline_to_store(
         std::thread::scope(|scope| -> Result<()> {
             scope.spawn(move || {
                 for (name, field) in instances {
+                    let _stage_span =
+                        telemetry::span_with_parent("pipeline.encode", run_span_id);
                     let encode_start = t0.elapsed();
                     let out = sink.options_for(&field).and_then(|opts| {
                         encode_store(&field, &sink.spec, &opts).map(|(bytes, _, report)| {
@@ -386,6 +404,7 @@ pub fn run_pipeline_to_store(
             });
             for enc in rx {
                 let enc = enc?;
+                let _stage_span = telemetry::span("pipeline.write");
                 let write_start = t0.elapsed();
                 let path = sink.dir.join(format!("{}.ffcz", enc.name));
                 std::fs::write(&path, &enc.bytes)
@@ -415,9 +434,12 @@ fn run_streaming_to_store(
     sink: &StoreSink,
 ) -> Result<StorePipelineReport> {
     let t0 = Instant::now();
+    let _run_span =
+        telemetry::span("pipeline.store").arg("instances", instances.len() as u64);
     let mut outputs = Vec::with_capacity(instances.len());
     let mut encode_total = Duration::ZERO;
     for (name, field) in instances {
+        let _stage_span = telemetry::span("pipeline.encode");
         let opts = sink.options_for(&field)?;
         let path = sink.dir.join(format!("{name}.ffcz"));
         let report = write_store(&field, &sink.spec, &opts, &path)

@@ -721,11 +721,34 @@ pub fn correct_reconstruction_with_scratch(
     stats.active_spat = result.active_spat;
     stats.active_freq = result.active_freq;
 
+    let metrics = retry_metrics();
+    metrics.attempts.add(stats.quant_attempts as u64);
+    if stats.used_raw_fallback {
+        metrics.raw_fallbacks.incr();
+    }
+
     Ok(FfczArchive {
         base_name: base_name.to_string(),
         base_payload,
         edits: block,
         stats,
+    })
+}
+
+/// Registry handles for the quantization retry ladder, fetched once:
+/// `correction.retry.attempts` (total ladder attempts across all encodes)
+/// and `correction.retry.raw_fallbacks` (chunks that abandoned
+/// quantization for raw f64 edits).
+struct RetryMetrics {
+    attempts: crate::telemetry::Counter,
+    raw_fallbacks: crate::telemetry::Counter,
+}
+
+fn retry_metrics() -> &'static RetryMetrics {
+    static METRICS: std::sync::OnceLock<RetryMetrics> = std::sync::OnceLock::new();
+    METRICS.get_or_init(|| RetryMetrics {
+        attempts: crate::telemetry::counter("correction.retry.attempts"),
+        raw_fallbacks: crate::telemetry::counter("correction.retry.raw_fallbacks"),
     })
 }
 

@@ -155,6 +155,14 @@ pub fn alternating_projection(eps0: &[f64], shape: &[usize], params: &PocsParams
     alternating_projection_with_scratch(eps0, shape, params, &mut scratch)
 }
 
+/// `correction.pocs.rfft_fallbacks`: projections that left the
+/// half-spectrum fast path for the full-complex reference loop because
+/// the pointwise frequency bounds were not Hermitian-symmetric.
+fn rfft_fallbacks() -> &'static crate::telemetry::Counter {
+    static COUNTER: std::sync::OnceLock<crate::telemetry::Counter> = std::sync::OnceLock::new();
+    COUNTER.get_or_init(|| crate::telemetry::counter("correction.pocs.rfft_fallbacks"))
+}
+
 /// [`alternating_projection`] with caller-owned transform state: the plan
 /// handle, line-engine workspace, and δ half-spectrum buffer come from
 /// `scratch` (grown on first contact with `shape`, reused afterwards), so
@@ -177,6 +185,7 @@ pub fn alternating_projection_with_scratch(
     // the full-spectrum reference loop instead.
     if let Bounds::Pointwise(v) = &params.frequency {
         if !bounds_hermitian_symmetric(v, shape) {
+            rfft_fallbacks().incr();
             return alternating_projection_reference(eps0, shape, params);
         }
     }

@@ -128,6 +128,28 @@ impl Fft {
         }
     }
 
+    /// Approximate resident bytes of this plan's tables (permutation,
+    /// twiddles, Bluestein chirp + kernel, recursively) — the unit of
+    /// account for the plan-cache byte budget.
+    pub fn approx_bytes(&self) -> usize {
+        let own = std::mem::size_of::<Self>();
+        own + match &self.kind {
+            Kind::Pow2 { rev, twiddles } => {
+                rev.len() * std::mem::size_of::<u32>()
+                    + twiddles.len() * std::mem::size_of::<Complex>()
+            }
+            Kind::Bluestein {
+                inner,
+                chirp,
+                kernel_fft,
+                ..
+            } => {
+                inner.approx_bytes()
+                    + (chirp.len() + kernel_fft.len()) * std::mem::size_of::<Complex>()
+            }
+        }
+    }
+
     /// In-place transform of a buffer of length `n`. Allocates Bluestein
     /// scratch internally; steady-state callers (the POCS loop, the N-D
     /// axis sweeps) should use [`Fft::process_with_scratch`] instead.

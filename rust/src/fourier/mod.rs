@@ -22,6 +22,7 @@ mod complex;
 mod fft;
 mod ndfft;
 mod ndrfft;
+mod plancache;
 mod power_spectrum;
 mod rfft;
 
@@ -35,7 +36,22 @@ pub use ndrfft::{
 pub use power_spectrum::{
     power_spectrum, power_spectrum_of_complex, power_spectrum_of_real, PowerSpectrum,
 };
+pub use plancache::DEFAULT_PLAN_CACHE_BUDGET;
 pub use rfft::RealFft;
+
+/// Bound each process-wide FFT plan cache ([`plan_for`], [`rplan_for`],
+/// [`ndrplan_for`]) to approximately `bytes` of plan tables. Least-
+/// recently-used plans are evicted first; `Arc`-shared handles already
+/// held by callers stay valid, and the most-recently-used plan of each
+/// cache is never evicted. Sizes, hits, misses, and evictions are
+/// exported through the [`crate::telemetry`] registry as
+/// `fourier.plan_cache.{fft,rfft,ndrfft}.*`. The default per-cache
+/// budget is [`DEFAULT_PLAN_CACHE_BUDGET`].
+pub fn set_plan_cache_budget(bytes: usize) {
+    ndfft::set_plan_budget(bytes);
+    ndrfft::set_rplan_budget(bytes);
+    ndrfft::set_ndrplan_budget(bytes);
+}
 
 /// Naive O(N²) reference DFT (forward, unnormalized), used as a correctness
 /// oracle for the fast transforms.

@@ -5,17 +5,28 @@
 //! planned 1-D FFT, and scatter back — the standard cache-friendly scheme
 //! for row-major N-D transforms. Plans are cached per distinct axis length.
 
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 
 use super::ndrfft::NdFftWorkspace;
+use super::plancache::{PlanCache, DEFAULT_PLAN_CACHE_BUDGET};
 use super::{Complex, Fft, FftDirection};
 
 /// Process-wide FFT plan cache. The POCS loop runs two N-D transforms per
 /// iteration over the same shape; rebuilding twiddle tables (and Bluestein
 /// chirps for odd sizes) every call dominated small-transform cost before
-/// this cache existed (see EXPERIMENTS.md §Perf).
-static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, std::sync::Arc<Fft>>>> = OnceLock::new();
+/// this cache existed (see EXPERIMENTS.md §Perf). Since PR 6 the cache is
+/// byte-budgeted LRU (see [`super::plancache`]) with
+/// `fourier.plan_cache.fft.*` registry metrics.
+fn plan_cache() -> &'static PlanCache<usize, Fft> {
+    static CACHE: OnceLock<PlanCache<usize, Fft>> = OnceLock::new();
+    CACHE.get_or_init(|| PlanCache::new("fft", DEFAULT_PLAN_CACHE_BUDGET))
+}
+
+/// Set the byte budget of the complex-plan cache
+/// (use [`super::set_plan_cache_budget`] to set all three caches).
+pub(super) fn set_plan_budget(bytes: usize) {
+    plan_cache().set_budget(bytes);
+}
 
 /// Fetch (or build) the shared plan for size `n`.
 ///
@@ -25,12 +36,11 @@ static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, std::sync::Arc<Fft>>>> = OnceLo
 /// Racing builders do redundant work once; the first insert wins and
 /// everyone shares it.
 pub fn plan_for(n: usize) -> std::sync::Arc<Fft> {
-    let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(plan) = cache.lock().unwrap().get(&n) {
-        return plan.clone();
-    }
-    let built = std::sync::Arc::new(Fft::new(n));
-    cache.lock().unwrap().entry(n).or_insert(built).clone()
+    plan_cache().get_or_insert_with(&n, || {
+        let built = std::sync::Arc::new(Fft::new(n));
+        let bytes = built.approx_bytes();
+        (built, bytes)
+    })
 }
 
 /// Forward N-D FFT (out-of-place convenience).

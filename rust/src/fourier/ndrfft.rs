@@ -25,49 +25,65 @@
 //! exactly one thread with identical arithmetic, so the output is
 //! bit-identical for every thread count.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 use super::ndfft::plan_for;
+use super::plancache::{PlanCache, DEFAULT_PLAN_CACHE_BUDGET};
 use super::{Complex, Fft, FftDirection, RealFft};
 
 /// Process-wide [`RealFft`] plan cache (the real-transform analogue of
-/// [`plan_for`]). Plans are built outside the cache lock; racing builders
-/// keep the first insert.
-static RPLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<RealFft>>>> = OnceLock::new();
+/// [`plan_for`]). Byte-budgeted LRU with `fourier.plan_cache.rfft.*`
+/// registry metrics; plans are built outside the cache lock and racing
+/// builders keep the first insert (see [`super::plancache`]).
+fn rplan_cache() -> &'static PlanCache<usize, RealFft> {
+    static CACHE: OnceLock<PlanCache<usize, RealFft>> = OnceLock::new();
+    CACHE.get_or_init(|| PlanCache::new("rfft", DEFAULT_PLAN_CACHE_BUDGET))
+}
+
+/// Set the byte budget of the real-plan cache
+/// (use [`super::set_plan_cache_budget`] to set all three caches).
+pub(super) fn set_rplan_budget(bytes: usize) {
+    rplan_cache().set_budget(bytes);
+}
 
 /// Fetch (or build) the shared real-transform plan for size `n`.
 pub fn rplan_for(n: usize) -> Arc<RealFft> {
-    let cache = RPLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(plan) = cache.lock().unwrap().get(&n) {
-        return plan.clone();
-    }
-    let built = Arc::new(RealFft::new(n));
-    cache.lock().unwrap().entry(n).or_insert(built).clone()
+    rplan_cache().get_or_insert_with(&n, || {
+        let built = Arc::new(RealFft::new(n));
+        let bytes = built.approx_bytes();
+        (built, bytes)
+    })
 }
 
 /// Process-wide [`NdRealFft`] plan cache keyed by shape, so the encode hot
 /// path ([`crate::correction`]'s retry ladder, the store's per-chunk
 /// verifiers) can hold *handles* to one shared plan per chunk shape
 /// instead of re-deriving the per-axis plan list on every call. Like
-/// [`plan_for`]/[`rplan_for`], plans are built outside the cache lock and
-/// racing builders keep the first insert.
-static NDRPLAN_CACHE: OnceLock<Mutex<HashMap<Vec<usize>, Arc<NdRealFft>>>> = OnceLock::new();
+/// [`plan_for`]/[`rplan_for`], a byte-budgeted LRU
+/// (`fourier.plan_cache.ndrfft.*` metrics); plans are built outside the
+/// cache lock and racing builders keep the first insert. Eviction here
+/// only drops the shape-level handle table — the 1-D sub-plans are
+/// `Arc`-shared with (and accounted by) the 1-D caches.
+fn ndrplan_cache() -> &'static PlanCache<Vec<usize>, NdRealFft> {
+    static CACHE: OnceLock<PlanCache<Vec<usize>, NdRealFft>> = OnceLock::new();
+    CACHE.get_or_init(|| PlanCache::new("ndrfft", DEFAULT_PLAN_CACHE_BUDGET))
+}
+
+/// Set the byte budget of the N-D real-plan cache
+/// (use [`super::set_plan_cache_budget`] to set all three caches).
+pub(super) fn set_ndrplan_budget(bytes: usize) {
+    ndrplan_cache().set_budget(bytes);
+}
 
 /// Fetch (or build) the shared N-D real-transform plan for `shape`.
 pub fn ndrplan_for(shape: &[usize]) -> Arc<NdRealFft> {
-    let cache = NDRPLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(plan) = cache.lock().unwrap().get(shape) {
-        return plan.clone();
-    }
-    let built = Arc::new(NdRealFft::new(shape));
-    cache
-        .lock()
-        .unwrap()
-        .entry(shape.to_vec())
-        .or_insert(built)
-        .clone()
+    let key = shape.to_vec();
+    ndrplan_cache().get_or_insert_with(&key, || {
+        let built = Arc::new(NdRealFft::new(shape));
+        let bytes = built.approx_bytes();
+        (built, bytes)
+    })
 }
 
 /// Number of complex elements in the half spectrum of a real field with
@@ -355,6 +371,16 @@ impl NdRealFft {
     /// The half-spectrum buffer shape (`shape` with last → `last/2 + 1`).
     pub fn half_shape(&self) -> &[usize] {
         &self.half_shape
+    }
+
+    /// Approximate resident bytes owned by this plan *itself* (shape
+    /// vectors + sub-plan handle table). The 1-D sub-plans are shared
+    /// `Arc` handles accounted by their own caches, so they are not
+    /// double-counted here.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + (self.shape.capacity() + self.half_shape.capacity()) * std::mem::size_of::<usize>()
+            + self.lead_plans.capacity() * std::mem::size_of::<Arc<Fft>>()
     }
 
     /// Number of real samples, `prod(shape)`.

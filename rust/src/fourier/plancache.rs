@@ -1,0 +1,249 @@
+//! Byte-budgeted LRU for the process-wide FFT plan caches.
+//!
+//! PR 5's plan caches grew without bound — fine for a CLI run over a few
+//! chunk shapes, unacceptable for a long-lived archive service decoding
+//! arbitrary shapes (ROADMAP direction 1). [`PlanCache`] keeps the
+//! build-outside-the-lock / first-insert-wins discipline of the original
+//! caches and adds: a byte budget (approximate plan table sizes), oldest-
+//! stamp eviction through a `BTreeMap` recency index (the same scheme as
+//! the store's decoded-chunk LRU), and registry metrics —
+//! `fourier.plan_cache.<name>.{hits,misses,evictions}` counters plus
+//! `.{bytes,entries}` gauges.
+//!
+//! Eviction only drops the cache's *handle*: plans are `Arc`-shared, so
+//! in-flight users (a [`super::NdRealFft`] holding 1-D sub-plans, a
+//! worker mid-transform) keep theirs alive. The most-recently-used entry
+//! is never evicted, so a single plan larger than the budget still
+//! caches.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::telemetry::{Counter, Gauge};
+
+/// Default byte budget per plan cache (tables only, approximate).
+pub const DEFAULT_PLAN_CACHE_BUDGET: usize = 64 << 20;
+
+struct Slot<V> {
+    value: Arc<V>,
+    stamp: u64,
+    bytes: usize,
+}
+
+struct Inner<K, V> {
+    map: HashMap<K, Slot<V>>,
+    /// Recency index: stamp → key, oldest stamp first. Stamps are unique
+    /// (a per-cache logical clock), so this is a total recency order.
+    order: BTreeMap<u64, K>,
+    clock: u64,
+    bytes: usize,
+}
+
+struct CacheMetrics {
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
+    bytes: Gauge,
+    entries: Gauge,
+}
+
+/// A byte-budgeted, LRU-evicting, metric-exporting plan cache.
+pub(crate) struct PlanCache<K, V> {
+    budget: AtomicUsize,
+    metrics: CacheMetrics,
+    inner: Mutex<Inner<K, V>>,
+}
+
+impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
+    /// `name` is the registry suffix: metrics register as
+    /// `fourier.plan_cache.<name>.*`.
+    pub fn new(name: &str, budget: usize) -> Self {
+        let metric = |kind: &str| format!("fourier.plan_cache.{name}.{kind}");
+        Self {
+            budget: AtomicUsize::new(budget),
+            metrics: CacheMetrics {
+                hits: crate::telemetry::counter(&metric("hits")),
+                misses: crate::telemetry::counter(&metric("misses")),
+                evictions: crate::telemetry::counter(&metric("evictions")),
+                bytes: crate::telemetry::gauge(&metric("bytes")),
+                entries: crate::telemetry::gauge(&metric("entries")),
+            },
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: BTreeMap::new(),
+                clock: 0,
+                bytes: 0,
+            }),
+        }
+    }
+
+    /// Set the byte budget and evict immediately if now over it.
+    pub fn set_budget(&self, bytes: usize) {
+        self.budget.store(bytes, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        self.evict_to_budget(&mut inner);
+    }
+
+    /// Fetch the plan for `key`, building it with `build` on a miss.
+    ///
+    /// `build` runs **outside** the lock (Bluestein planning is O(m log m);
+    /// holding the mutex through it would serialize every store worker on
+    /// first contact with a new size) and must return the plan plus its
+    /// approximate byte footprint. Racing builders do redundant work once;
+    /// the first insert wins and everyone shares it.
+    pub fn get_or_insert_with(&self, key: &K, build: impl FnOnce() -> (Arc<V>, usize)) -> Arc<V> {
+        if let Some(found) = self.touch(key) {
+            self.metrics.hits.incr();
+            return found;
+        }
+        let (built, built_bytes) = build();
+        self.metrics.misses.incr();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(slot) = inner.map.get(key) {
+            // A racing builder inserted first; adopt its plan.
+            return slot.value.clone();
+        }
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.order.insert(stamp, key.clone());
+        inner.map.insert(
+            key.clone(),
+            Slot {
+                value: built.clone(),
+                stamp,
+                bytes: built_bytes,
+            },
+        );
+        inner.bytes += built_bytes;
+        self.evict_to_budget(&mut inner);
+        built
+    }
+
+    /// Look up `key` and refresh its recency stamp.
+    fn touch(&self, key: &K) -> Option<Arc<V>> {
+        let mut inner = self.inner.lock().unwrap();
+        let (value, old_stamp) = match inner.map.get(key) {
+            Some(slot) => (slot.value.clone(), slot.stamp),
+            None => return None,
+        };
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.order.remove(&old_stamp);
+        inner.order.insert(stamp, key.clone());
+        if let Some(slot) = inner.map.get_mut(key) {
+            slot.stamp = stamp;
+        }
+        Some(value)
+    }
+
+    /// Drop oldest entries until within budget, keeping at least the
+    /// most-recently-used one. Caller holds the lock.
+    fn evict_to_budget(&self, inner: &mut Inner<K, V>) {
+        let budget = self.budget.load(Ordering::Relaxed);
+        while inner.bytes > budget && inner.order.len() > 1 {
+            let oldest = match inner.order.iter().next() {
+                Some((&stamp, _)) => stamp,
+                None => break,
+            };
+            let key = inner.order.remove(&oldest).expect("stamp just observed");
+            if let Some(slot) = inner.map.remove(&key) {
+                inner.bytes -= slot.bytes;
+                self.metrics.evictions.incr();
+            }
+        }
+        self.metrics.bytes.set(inner.bytes as u64);
+        self.metrics.entries.set(inner.map.len() as u64);
+    }
+
+    /// Number of cached plans (for tests and diagnostics).
+    pub fn entries(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Approximate bytes currently cached.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(budget: usize) -> PlanCache<usize, usize> {
+        // Unique-ish metric names per test run are unnecessary: handles
+        // are shared but values are only read through the cache itself.
+        PlanCache::new("test", budget)
+    }
+
+    fn fetch(c: &PlanCache<usize, usize>, key: usize, bytes: usize) -> Arc<usize> {
+        c.get_or_insert_with(&key, || (Arc::new(key * 10), bytes))
+    }
+
+    #[test]
+    fn hits_share_the_same_arc() {
+        let c = cache(1000);
+        let a = fetch(&c, 3, 100);
+        let b = fetch(&c, 3, 100);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(c.entries(), 1);
+        assert_eq!(c.bytes(), 100);
+    }
+
+    #[test]
+    fn evicts_oldest_when_over_budget() {
+        let c = cache(250);
+        fetch(&c, 1, 100);
+        fetch(&c, 2, 100);
+        let third = fetch(&c, 3, 100); // 300 bytes > 250 → evict key 1
+        assert_eq!(c.entries(), 2);
+        assert_eq!(c.bytes(), 200);
+        assert_eq!(*fetch(&c, 2, 100), 20); // still cached (no rebuild)
+        assert!(Arc::ptr_eq(&third, &fetch(&c, 3, 100)));
+        // Key 1 was evicted: refetching rebuilds (new Arc, same value).
+        let rebuilt = fetch(&c, 1, 100);
+        assert_eq!(*rebuilt, 10);
+    }
+
+    #[test]
+    fn touch_refreshes_recency() {
+        let c = cache(250);
+        fetch(&c, 1, 100);
+        fetch(&c, 2, 100);
+        fetch(&c, 1, 100); // touch 1: now 2 is oldest
+        fetch(&c, 3, 100); // over budget → evicts 2, keeps 1 and 3
+        assert_eq!(c.entries(), 2);
+        let mut rebuilt = false;
+        let _ = c.get_or_insert_with(&1, || {
+            rebuilt = true;
+            (Arc::new(0), 100)
+        });
+        assert!(!rebuilt, "key 1 was touched and must still be cached");
+        let _ = c.get_or_insert_with(&2, || {
+            rebuilt = true;
+            (Arc::new(0), 100)
+        });
+        assert!(rebuilt, "key 2 was the LRU entry and must have been evicted");
+    }
+
+    #[test]
+    fn mru_entry_survives_tiny_budget() {
+        let c = cache(10);
+        let a = fetch(&c, 7, 1000); // way over budget, but MRU stays
+        assert_eq!(c.entries(), 1);
+        assert!(Arc::ptr_eq(&a, &fetch(&c, 7, 1000)));
+    }
+
+    #[test]
+    fn set_budget_evicts_immediately() {
+        let c = cache(1000);
+        for k in 0..5 {
+            fetch(&c, k, 100);
+        }
+        assert_eq!(c.entries(), 5);
+        c.set_budget(150);
+        assert_eq!(c.entries(), 1, "only the MRU entry may remain");
+    }
+}

@@ -94,6 +94,20 @@ impl RealFft {
         }
     }
 
+    /// Approximate resident bytes of this plan's tables (split twiddles
+    /// plus the inner complex plan) — the unit of account for the
+    /// plan-cache byte budget.
+    pub fn approx_bytes(&self) -> usize {
+        let own = std::mem::size_of::<Self>();
+        own + match &self.kind {
+            RealKind::Tiny => 0,
+            RealKind::Packed { inner, twiddles } => {
+                inner.approx_bytes() + twiddles.len() * std::mem::size_of::<Complex>()
+            }
+            RealKind::Odd { inner } => inner.approx_bytes(),
+        }
+    }
+
     /// Forward transform: `n` real samples → `n/2 + 1` complex bins.
     /// `out.len()` must be exactly `half_len()`; `scratch.len() ≥`
     /// [`RealFft::scratch_len`]. Allocates nothing.

@@ -37,6 +37,11 @@
 //! * [`data`] — n-dimensional fields and seeded synthetic generators that
 //!   stand in for the paper's Nyx / S3D / HEDM / EEG datasets;
 //! * [`metrics`] — PSNR, SSNR, relative frequency error, bitrate, ratios;
+//! * [`telemetry`] — observability: a process-wide metrics registry
+//!   (counters/gauges/histograms with a stable-JSON snapshot), RAII span
+//!   tracing exported as Chrome `trace_event` JSON (`--trace-out`), and
+//!   leveled CLI diagnostics — disabled-by-default recording that is
+//!   measurably free when off;
 //! * [`experiments`] — drivers that regenerate every table and figure of the
 //!   paper's evaluation section.
 //!
@@ -156,6 +161,7 @@ pub mod fourier;
 pub mod metrics;
 pub mod runtime;
 pub mod store;
+pub mod telemetry;
 pub mod util;
 
 /// Convenient re-exports of the most commonly used types.

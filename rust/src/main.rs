@@ -33,13 +33,14 @@ use ffcz::data::{io, synth};
 use ffcz::experiments::{self, ExpOptions};
 use ffcz::metrics::QualityReport;
 use ffcz::store::{write_store, write_store_in_memory, Store, StoreWriteOptions};
+use ffcz::telemetry::{self, diag};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match dispatch(&args) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            diag::error(&format!("{e:#}"));
             ExitCode::FAILURE
         }
     }
@@ -51,7 +52,13 @@ fn dispatch(args: &[String]) -> Result<()> {
         return Ok(());
     };
     let (positional, flags) = parse_flags(&args[1..]);
-    match cmd.as_str() {
+    // Global diagnostic flags, honored uniformly by every subcommand.
+    diag::apply_flags(flags.contains_key("verbose"), flags.contains_key("quiet"));
+    let trace_out = flags.get("trace-out").map(PathBuf::from);
+    if trace_out.is_some() {
+        telemetry::trace::enable();
+    }
+    let result = match cmd.as_str() {
         "compress" => cmd_compress(&flags),
         "decompress" => cmd_decompress(&flags),
         "verify" => cmd_verify(&flags),
@@ -65,7 +72,18 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command '{other}' (try `ffcz help`)"),
+    };
+    if let Some(path) = &trace_out {
+        telemetry::trace::disable();
+        match telemetry::trace::write_chrome_json(path) {
+            Ok(n) => diag::info(&format!(
+                "wrote {n} trace events to {} (open in Perfetto or chrome://tracing)",
+                path.display()
+            )),
+            Err(e) => diag::warn(&format!("could not write trace: {e:#}")),
+        }
     }
+    result
 }
 
 fn print_usage() {
@@ -110,10 +128,19 @@ fn print_usage() {
          \x20                         | 'ps=R' | 'iters=N' | 'quant-retries=N'\n\
          \x20                         | 'threads=N' | 'base-only'\n\
          \x20 archive     extract --input F --output F [--workers N]\n\
-         \x20 archive     inspect --input F [--chunks]\n\
+         \x20 archive     inspect --input F [--chunks] [--stats]\n\
          \x20 archive     read-region --input F --origin A,B,C --shape A,B,C\n\
          \x20             --output F [--workers N]\n\
-         \x20 info        --archive F"
+         \x20 info        --archive F\n\
+         \n\
+         global flags (any command):\n\
+         \x20 --verbose       show per-stage detail lines\n\
+         \x20 --quiet         suppress progress/summary lines (errors still print)\n\
+         \x20 --trace-out F   record span traces and write Chrome trace_event\n\
+         \x20                 JSON to F on exit (load in https://ui.perfetto.dev\n\
+         \x20                 or chrome://tracing; see docs/TELEMETRY.md)\n\
+         \x20 --stats         (archive create/inspect) per-chunk encode table\n\
+         \x20                 plus a telemetry registry snapshot as JSON"
     );
 }
 
@@ -350,7 +377,7 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
     let archive = correction::compress(&field, base.as_ref(), &cfg)?;
     let bytes = archive.to_bytes();
     std::fs::write(&output, &bytes)?;
-    println!(
+    diag::info(&format!(
         "compressed {} ({} samples) -> {} ({}, ratio {:.1}, base {}, edits {})",
         input.display(),
         field.len(),
@@ -359,8 +386,8 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
         field.original_bytes() as f64 / bytes.len() as f64,
         ffcz::util::human_bytes(archive.base_bytes()),
         ffcz::util::human_bytes(archive.edit_bytes()),
-    );
-    println!(
+    ));
+    diag::info(&format!(
         "POCS: {} iterations, {} spatial + {} frequency active edits{}",
         archive.stats.iterations,
         archive.stats.active_spat,
@@ -370,7 +397,7 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
         } else {
             ""
         }
-    );
+    ));
     Ok(())
 }
 
@@ -380,12 +407,12 @@ fn cmd_decompress(flags: &HashMap<String, String>) -> Result<()> {
     let archive = FfczArchive::from_bytes(&std::fs::read(&input)?)?;
     let field = correction::decompress(&archive)?;
     io::save(&field, &output)?;
-    println!(
+    diag::info(&format!(
         "decompressed {} -> {} (shape {:?})",
         input.display(),
         output.display(),
         field.shape()
-    );
+    ));
     Ok(())
 }
 
@@ -428,12 +455,12 @@ fn cmd_synth(flags: &HashMap<String, String>) -> Result<()> {
         .map(|(_, f)| f)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
     io::save(&field, &output)?;
-    println!(
+    diag::info(&format!(
         "wrote {} (shape {:?}, {})",
         output.display(),
         field.shape(),
         ffcz::util::human_bytes(field.original_bytes())
-    );
+    ));
     Ok(())
 }
 
@@ -483,20 +510,23 @@ fn cmd_pipeline(flags: &HashMap<String, String>) -> Result<()> {
         }
         let report = run_pipeline_to_store(instances, &sink)?;
         for (name, path, w) in &report.outputs {
-            println!(
+            diag::info(&format!(
                 "{name}: {} ({} chunks, {}, all chunks {})",
                 path.display(),
                 w.chunk_count,
                 ffcz::util::human_bytes(w.total_bytes),
                 if w.all_chunks_ok { "OK" } else { "VIOLATED" },
-            );
+            ));
+            if flags.contains_key("stats") {
+                print!("{}", w.render_chunk_table());
+            }
         }
-        println!(
+        diag::info(&format!(
             "makespan {} (encode Σ {}, write Σ {})",
             ffcz::util::human_duration(report.makespan),
             ffcz::util::human_duration(report.encode_total),
             ffcz::util::human_duration(report.write_total),
-        );
+        ));
         if !report.all_chunks_ok() {
             bail!("dual-domain verification failed for at least one chunk");
         }
@@ -538,15 +568,15 @@ fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
     } else {
         write_store(&field, &spec, &opts, &output)?
     };
-    println!(
+    diag::info(&format!(
         "archived {} (shape {:?}) -> {} ({}, ratio {:.1})",
         input.display(),
         field.shape(),
         output.display(),
         ffcz::util::human_bytes(report.total_bytes),
         field.original_bytes() as f64 / report.total_bytes as f64,
-    );
-    println!(
+    ));
+    diag::info(&format!(
         "{} chunks of {:?} ({} payload + {} manifest), {} workers, {} — chunks {}",
         report.chunk_count,
         chunk_shape,
@@ -555,8 +585,8 @@ fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
         workers,
         ffcz::util::human_duration(report.elapsed),
         if report.all_chunks_ok { "OK" } else { "VIOLATED" },
-    );
-    println!(
+    ));
+    diag::verbose(&format!(
         "{}: peak {} of chunk payloads in memory, {} scratch warm-up allocations",
         if report.streamed {
             "streamed"
@@ -565,7 +595,12 @@ fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
         },
         ffcz::util::human_bytes(report.peak_payload_bytes),
         report.scratch_alloc_events,
-    );
+    ));
+    if flags.contains_key("stats") {
+        // Requested data, not a diagnostic: always printed.
+        print!("{}", report.render_chunk_table());
+        println!("{}", telemetry::snapshot().to_json());
+    }
     if !report.all_chunks_ok {
         bail!("dual-domain verification failed for at least one chunk");
     }
@@ -578,13 +613,13 @@ fn cmd_archive_extract(flags: &HashMap<String, String>) -> Result<()> {
     let store = Store::open(&input)?;
     let field = store.decompress_all(parse_workers(flags)?)?;
     io::save(&field, &output)?;
-    println!(
+    diag::info(&format!(
         "extracted {} -> {} (shape {:?}, {} chunks decoded)",
         input.display(),
         output.display(),
         field.shape(),
         store.chunks_decoded(),
-    );
+    ));
     Ok(())
 }
 
@@ -626,7 +661,7 @@ fn cmd_archive_inspect(flags: &HashMap<String, String>) -> Result<()> {
             "VIOLATED (at least one chunk)"
         }
     );
-    if flags.contains_key("chunks") {
+    if flags.contains_key("chunks") || flags.contains_key("stats") {
         println!(
             "chunk        offset      bytes  chain       crc32  s-ok f-ok  s-ratio  f-ratio  iters"
         );
@@ -648,6 +683,9 @@ fn cmd_archive_inspect(flags: &HashMap<String, String>) -> Result<()> {
             );
         }
     }
+    if flags.contains_key("stats") {
+        println!("{}", telemetry::snapshot().to_json());
+    }
     Ok(())
 }
 
@@ -659,7 +697,7 @@ fn cmd_archive_read_region(flags: &HashMap<String, String>) -> Result<()> {
     let store = Store::open(&input)?;
     let region = store.read_region(&origin, &shape, parse_workers(flags)?)?;
     io::save(&region, &output)?;
-    println!(
+    diag::info(&format!(
         "read region origin {:?} shape {:?} from {} ({} of {} chunks decoded) -> {}",
         origin,
         shape,
@@ -667,7 +705,7 @@ fn cmd_archive_read_region(flags: &HashMap<String, String>) -> Result<()> {
         store.chunks_decoded(),
         store.grid().chunk_count(),
         output.display(),
-    );
+    ));
     Ok(())
 }
 

@@ -52,6 +52,7 @@ where
 {
     let workers = workers.clamp(1, n.max(1));
     if workers == 1 || n <= 1 {
+        let _worker_span = crate::telemetry::span("store.worker");
         let mut state = init();
         return (0..n).map(|i| f(i, &mut state)).collect();
     }
@@ -60,6 +61,7 @@ where
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
+                let _worker_span = crate::telemetry::span("store.worker");
                 let mut state = init();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -146,6 +148,7 @@ where
     let workers = workers.clamp(1, n.max(1));
     let window = window.max(workers);
     if workers == 1 || n <= 1 {
+        let _worker_span = crate::telemetry::span("store.worker");
         let mut state = init();
         for i in 0..n {
             sink(i, f(i, &mut state)?)?;
@@ -166,6 +169,7 @@ where
             let tx = tx.clone();
             let (next, gate, f, init) = (&next, &gate, &f, &init);
             scope.spawn(move || {
+                let _worker_span = crate::telemetry::span("store.worker");
                 let mut state = init();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);

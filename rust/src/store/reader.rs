@@ -5,14 +5,14 @@
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
 use crate::codec::CodecChain;
 use crate::data::Field;
 use crate::encoding::crc32;
+use crate::telemetry;
 
 use super::grid::{extract_subarray, insert_subarray, ChunkGrid};
 use super::manifest::{Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
@@ -70,11 +70,32 @@ pub struct Store {
     codecs: Vec<CodecChain>,
     /// Start of the manifest region — chunk payloads must end before it.
     manifest_offset: u64,
-    chunks_decoded: AtomicUsize,
+    /// Per-handle decode/hit/miss tallies ride on unregistered
+    /// [`telemetry::Counter`] handles (tests assert exact per-store
+    /// counts); the process-wide `store.read.*` registry metrics
+    /// aggregate the same events across every store.
+    chunks_decoded: telemetry::Counter,
     /// Decoded-chunk LRU (disabled until [`Store::set_cache_budget`]).
     cache: Mutex<ChunkCache>,
-    cache_hits: AtomicUsize,
-    cache_misses: AtomicUsize,
+    cache_hits: telemetry::Counter,
+    cache_misses: telemetry::Counter,
+}
+
+/// Registered-metric handles for the read path, fetched once.
+struct ReadMetrics {
+    lru_hits: telemetry::Counter,
+    lru_misses: telemetry::Counter,
+    /// High-water mark of decoded bytes held by any one store's LRU.
+    lru_bytes: telemetry::Gauge,
+}
+
+fn read_metrics() -> &'static ReadMetrics {
+    static METRICS: OnceLock<ReadMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| ReadMetrics {
+        lru_hits: telemetry::counter("store.read.lru_hits"),
+        lru_misses: telemetry::counter("store.read.lru_misses"),
+        lru_bytes: telemetry::gauge("store.read.lru_bytes"),
+    })
 }
 
 /// Decoded-chunk LRU keyed by chunk index, bounded by a byte budget
@@ -255,10 +276,10 @@ impl Store {
             grid,
             codecs,
             manifest_offset,
-            chunks_decoded: AtomicUsize::new(0),
+            chunks_decoded: telemetry::Counter::new(),
             cache: Mutex::new(ChunkCache::disabled()),
-            cache_hits: AtomicUsize::new(0),
-            cache_misses: AtomicUsize::new(0),
+            cache_hits: telemetry::Counter::new(),
+            cache_misses: telemetry::Counter::new(),
         })
     }
 
@@ -278,7 +299,7 @@ impl Store {
     /// Number of chunk decodes performed by this handle so far (cache hits
     /// do not decode, so they do not count).
     pub fn chunks_decoded(&self) -> usize {
-        self.chunks_decoded.load(Ordering::Relaxed)
+        self.chunks_decoded.get() as usize
     }
 
     /// Enable (or resize) the decoded-chunk LRU cache: decoded chunks are
@@ -304,12 +325,12 @@ impl Store {
 
     /// Cache hits served so far (0 while the cache is disabled).
     pub fn cache_hits(&self) -> usize {
-        self.cache_hits.load(Ordering::Relaxed)
+        self.cache_hits.get() as usize
     }
 
     /// Cache misses (decodes performed with the cache enabled).
     pub fn cache_misses(&self) -> usize {
-        self.cache_misses.load(Ordering::Relaxed)
+        self.cache_misses.get() as usize
     }
 
     /// Decoded bytes currently held by the cache.
@@ -332,12 +353,14 @@ impl Store {
             }
             if let Some(field) = cache.touch(index) {
                 drop(cache);
-                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                self.cache_hits.incr();
+                read_metrics().lru_hits.incr();
                 return Ok(field);
             }
         }
         let field = Arc::new(self.decode_chunk(index)?);
-        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        self.cache_misses.incr();
+        read_metrics().lru_misses.incr();
         let mut cache = self.cache.lock().unwrap();
         if cache.budget == 0 {
             // Disabled while we were decoding.
@@ -362,6 +385,7 @@ impl Store {
             cache.order.insert(stamp, index);
             cache.bytes += field_bytes;
             cache.evict_to_budget();
+            read_metrics().lru_bytes.max(cache.bytes as u64);
         }
         Ok(field)
     }
@@ -409,7 +433,7 @@ impl Store {
         let coords = self.grid.chunk_coords(index);
         let extent = self.grid.chunk_extent(&coords);
         let bytes = self.chunk_bytes(index)?;
-        self.chunks_decoded.fetch_add(1, Ordering::Relaxed);
+        self.chunks_decoded.incr();
         self.codecs[self.manifest.chunks[index].chain]
             .decode_chunk(&bytes, &extent, self.manifest.precision)
             .with_context(|| format!("decoding chunk {}", self.grid.chunk_key(index)))
@@ -437,10 +461,14 @@ impl Store {
     /// ```
     pub fn read_region(&self, origin: &[usize], shape: &[usize], workers: usize) -> Result<Field> {
         let ids = self.grid.chunks_intersecting(origin, shape)?;
+        let read_span = telemetry::span("store.read_region").arg("chunks", ids.len() as u64);
+        let read_span_id = read_span.id();
         let n: usize = shape.iter().product();
         let mut out = vec![0.0f64; n];
         let pieces = par_try_map(ids.len(), workers, |j| {
             let index = ids[j];
+            let _chunk_span = telemetry::span_with_parent("store.chunk.read", read_span_id)
+                .arg("chunk", index as u64);
             let chunk = self.decode_chunk_cached(index)?;
             let coords = self.grid.chunk_coords(index);
             let c_origin = self.grid.chunk_origin(&coords);

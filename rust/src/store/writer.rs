@@ -32,6 +32,7 @@ use crate::codec::{CodecChain, CodecChainSpec, EncodedChunk};
 use crate::correction::CorrectionScratch;
 use crate::data::{Field, Precision};
 use crate::encoding::crc32;
+use crate::telemetry;
 
 use super::grid::{extract_subarray, ChunkGrid};
 use super::manifest::{ChunkEntry, Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
@@ -130,6 +131,125 @@ pub struct StoreWriteReport {
     /// from the same counter and CI asserts it is zero.
     pub scratch_alloc_events: usize,
     pub elapsed: Duration,
+    /// Per-chunk encode breakdown (manifest stats joined with stage wall
+    /// times from [`crate::codec::ChunkEncodeDetail`]), in chunk index
+    /// order. Powers `archive create --stats` and
+    /// [`StoreWriteReport::render_chunk_table`].
+    pub chunk_reports: Vec<ChunkEncodeReport>,
+}
+
+impl StoreWriteReport {
+    /// Human-readable per-chunk stats table (the `--stats` rendering).
+    /// Empty string when no chunk reports were collected.
+    pub fn render_chunk_table(&self) -> String {
+        if self.chunk_reports.is_empty() {
+            return String::new();
+        }
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<12} {:>5} {:>10} {:>10} {:>6} {:>5} {:>3} {:>2} {:>9} {:>9} {:>9} {:>9} {:>9}\n",
+            "chunk",
+            "chain",
+            "bytes_in",
+            "bytes_out",
+            "ratio",
+            "iters",
+            "att",
+            "fb",
+            "base_ms",
+            "pocs_ms",
+            "verif_ms",
+            "lossl_ms",
+            "total_ms"
+        ));
+        for r in &self.chunk_reports {
+            let ratio = if r.bytes_out > 0 {
+                r.bytes_in as f64 / r.bytes_out as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:<12} {:>5} {:>10} {:>10} {:>6.2} {:>5} {:>3} {:>2} {:>9.3} {:>9.3} {:>9.3} \
+                 {:>9.3} {:>9.3}\n",
+                r.key,
+                r.chain,
+                r.bytes_in,
+                r.bytes_out,
+                ratio,
+                r.pocs_iterations,
+                r.quant_attempts,
+                if r.used_raw_fallback { "y" } else { "-" },
+                ms(r.base_compress),
+                ms(r.correct),
+                ms(r.verify),
+                ms(r.lossless),
+                ms(r.total)
+            ));
+        }
+        out
+    }
+}
+
+/// Per-chunk breakdown of one store write: the manifest-persisted
+/// verification stats joined with the in-memory stage measurements the
+/// codec records while encoding.
+#[derive(Debug, Clone)]
+pub struct ChunkEncodeReport {
+    /// Row-major chunk index.
+    pub index: usize,
+    /// Zarr-style chunk key (`"c/1/0"`).
+    pub key: String,
+    /// Chain-table index the chunk encoded through.
+    pub chain: usize,
+    /// Uncompressed chunk bytes.
+    pub bytes_in: usize,
+    /// Encoded payload bytes.
+    pub bytes_out: usize,
+    /// POCS iterations spent correcting this chunk.
+    pub pocs_iterations: u32,
+    /// Quantization retry-ladder attempts consumed.
+    pub quant_attempts: u32,
+    /// Whether the raw-edit fallback fired.
+    pub used_raw_fallback: bool,
+    pub base_compress: Duration,
+    pub correct: Duration,
+    pub verify: Duration,
+    pub lossless: Duration,
+    pub total: Duration,
+}
+
+fn chunk_report(grid: &ChunkGrid, i: usize, chain: usize, enc: &EncodedChunk) -> ChunkEncodeReport {
+    let d = enc.detail;
+    ChunkEncodeReport {
+        index: i,
+        key: grid.chunk_key(i),
+        chain,
+        bytes_in: d.bytes_in,
+        bytes_out: enc.bytes.len(),
+        pocs_iterations: enc.stats.pocs_iterations,
+        quant_attempts: d.quant_attempts,
+        used_raw_fallback: d.used_raw_fallback,
+        base_compress: d.base_compress,
+        correct: d.correct,
+        verify: d.verify,
+        lossless: d.lossless,
+        total: d.total,
+    }
+}
+
+/// Registered-metric handles for the store write path, fetched once.
+struct WriteMetrics {
+    scratch_alloc_events: telemetry::Counter,
+    peak_payload_bytes: telemetry::Gauge,
+}
+
+fn write_metrics() -> &'static WriteMetrics {
+    static METRICS: std::sync::OnceLock<WriteMetrics> = std::sync::OnceLock::new();
+    METRICS.get_or_init(|| WriteMetrics {
+        scratch_alloc_events: telemetry::counter("store.encode.scratch_alloc_events"),
+        peak_payload_bytes: telemetry::gauge("store.write.peak_payload_bytes"),
+    })
 }
 
 /// POCS transform thread count a chain requests (1 when it has no
@@ -224,6 +344,8 @@ pub fn encode_store(
 ) -> Result<(Vec<u8>, Manifest, StoreWriteReport)> {
     let t0 = Instant::now();
     let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
+    let write_span = telemetry::span("store.write").arg("chunks", grid.chunk_count() as u64);
+    let write_span_id = write_span.id();
     let (mut chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
     // Budget against the number of workers that will actually run (the
     // pool clamps itself to the chunk count).
@@ -242,6 +364,8 @@ pub fn encode_store(
         opts.workers,
         CorrectionScratch::new,
         |i, scratch| {
+            let _chunk_span = telemetry::span_with_parent("store.chunk.encode", write_span_id)
+                .arg("chunk", i as u64);
             let coords = grid.chunk_coords(i);
             let origin = grid.chunk_origin(&coords);
             let extent = grid.chunk_extent(&coords);
@@ -290,6 +414,17 @@ pub fn encode_store(
     out.extend_from_slice(&(manifest_bytes.len() as u64).to_le_bytes());
     out.extend_from_slice(FOOTER_MAGIC);
 
+    let chunk_reports: Vec<ChunkEncodeReport> = encoded
+        .iter()
+        .enumerate()
+        .map(|(i, enc)| chunk_report(&grid, i, assign[i], enc))
+        .collect();
+    let scratch_alloc_events = scratch_events.load(Ordering::Relaxed);
+    let metrics = write_metrics();
+    metrics.scratch_alloc_events.add(scratch_alloc_events as u64);
+    metrics
+        .peak_payload_bytes
+        .max(manifest.payload_bytes());
     let report = StoreWriteReport {
         chunk_count: manifest.chunks.len(),
         payload_bytes: manifest.payload_bytes() as usize,
@@ -299,8 +434,9 @@ pub fn encode_store(
         // Every payload is held until assembly: the in-memory scale wall.
         peak_payload_bytes: manifest.payload_bytes() as usize,
         streamed: false,
-        scratch_alloc_events: scratch_events.load(Ordering::Relaxed),
+        scratch_alloc_events,
         elapsed: t0.elapsed(),
+        chunk_reports,
     };
     Ok((out, manifest, report))
 }
@@ -437,6 +573,8 @@ pub fn stream_store_to<W: Write>(
 ) -> Result<(Manifest, StoreWriteReport)> {
     let t0 = Instant::now();
     let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
+    let write_span = telemetry::span("store.write").arg("chunks", grid.chunk_count() as u64);
+    let write_span_id = write_span.id();
     let (mut chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
     // Budget against the number of workers that will actually run (the
     // pool clamps itself to the chunk count).
@@ -460,12 +598,15 @@ pub fn stream_store_to<W: Write>(
     // Per-worker correction scratch, reused across every chunk a worker
     // encodes (audited by the allocation-event counter).
     let scratch_events = AtomicUsize::new(0);
+    let mut chunk_reports: Vec<ChunkEncodeReport> = Vec::with_capacity(grid.chunk_count());
     par_try_map_ordered_sink_with(
         grid.chunk_count(),
         opts.workers,
         opts.window(),
         CorrectionScratch::new,
         |i, scratch| {
+            let _chunk_span = telemetry::span_with_parent("store.chunk.encode", write_span_id)
+                .arg("chunk", i as u64);
             let coords = grid.chunk_coords(i);
             let origin = grid.chunk_origin(&coords);
             let extent = grid.chunk_extent(&coords);
@@ -487,7 +628,11 @@ pub fn stream_store_to<W: Write>(
             Ok(enc)
         },
         |i, enc| {
+            let _sink_span = telemetry::span_with_parent("store.chunk.sink", write_span_id)
+                .arg("chunk", i as u64)
+                .arg("bytes", enc.bytes.len() as u64);
             writer.append_chunk(assign[i], &enc)?;
+            chunk_reports.push(chunk_report(&grid, i, assign[i], &enc));
             in_flight.fetch_sub(enc.bytes.len(), Ordering::SeqCst);
             Ok(())
         },
@@ -498,16 +643,22 @@ pub fn stream_store_to<W: Write>(
         - manifest.payload_bytes() as usize
         - STORE_MAGIC.len()
         - FOOTER_LEN;
+    let scratch_alloc_events = scratch_events.load(Ordering::Relaxed);
+    let peak_payload_bytes = peak.load(Ordering::SeqCst);
+    let metrics = write_metrics();
+    metrics.scratch_alloc_events.add(scratch_alloc_events as u64);
+    metrics.peak_payload_bytes.max(peak_payload_bytes as u64);
     let report = StoreWriteReport {
         chunk_count: manifest.chunks.len(),
         payload_bytes: manifest.payload_bytes() as usize,
         manifest_bytes,
         total_bytes: total_bytes as usize,
         all_chunks_ok: manifest.all_chunks_ok(),
-        peak_payload_bytes: peak.load(Ordering::SeqCst),
+        peak_payload_bytes,
         streamed: true,
-        scratch_alloc_events: scratch_events.load(Ordering::Relaxed),
+        scratch_alloc_events,
         elapsed: t0.elapsed(),
+        chunk_reports,
     };
     Ok((manifest, report))
 }
@@ -591,6 +742,18 @@ mod tests {
         assert_eq!(report.total_bytes, bytes.len());
         assert_eq!(&bytes[..8], STORE_MAGIC);
         assert_eq!(&bytes[bytes.len() - 8..], FOOTER_MAGIC);
+        // Per-chunk reports mirror the manifest, in index order.
+        assert_eq!(report.chunk_reports.len(), 9);
+        for (i, r) in report.chunk_reports.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.bytes_out as u64, manifest.chunks[i].length);
+            assert_eq!(r.pocs_iterations, manifest.chunks[i].stats.pocs_iterations);
+        }
+        // Chunk inputs tile the field exactly: Σ bytes_in = field bytes.
+        let total_in: usize = report.chunk_reports.iter().map(|r| r.bytes_in).sum();
+        assert_eq!(total_in, 12 * 10 * 8);
+        let table = report.render_chunk_table();
+        assert!(table.contains("chunk") && table.contains("c/0/0"), "{table}");
     }
 
     #[test]
@@ -713,6 +876,12 @@ mod tests {
             assert_eq!(report.total_bytes, mem_report.total_bytes);
             assert_eq!(report.manifest_bytes, mem_report.manifest_bytes);
             assert!(report.peak_payload_bytes <= mem_report.peak_payload_bytes);
+            // Both paths collect the same per-chunk breakdown (in order).
+            assert_eq!(report.chunk_reports.len(), mem_report.chunk_reports.len());
+            for (s, m) in report.chunk_reports.iter().zip(&mem_report.chunk_reports) {
+                assert_eq!((s.index, &s.key, s.bytes_out), (m.index, &m.key, m.bytes_out));
+                assert_eq!(s.pocs_iterations, m.pocs_iterations);
+            }
         }
     }
 
@@ -721,6 +890,7 @@ mod tests {
         let enc = EncodedChunk {
             bytes: vec![1, 2, 3],
             stats: crate::codec::ChunkStats::exact(),
+            detail: Default::default(),
         };
         // 2 × 1 grid: exactly two chunks, one chain.
         let mut w = StoreStreamWriter::new(

@@ -1,0 +1,130 @@
+//! Leveled CLI diagnostics routed through the metrics registry.
+//!
+//! The `ffcz` binary resolves `--verbose` / `--quiet` once per invocation
+//! into a process-wide [`Level`] ([`apply_flags`]); subcommands then emit
+//! progress and summary text through [`info`] / [`verbose`] / [`warn`] /
+//! [`error`] instead of bare `println!` / `eprintln!`. Primary command
+//! *output* (inspect tables, verification results, requested data) is not
+//! diagnostics and stays on plain stdout regardless of level.
+//!
+//! Every emitted message also bumps a `diag.messages.*` counter in the
+//! registry, so a [`crate::telemetry::snapshot`] records how chatty a run
+//! was.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::telemetry::Counter;
+
+/// Diagnostic verbosity, ordered: `Quiet < Normal < Verbose`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Errors only (`--quiet`).
+    Quiet = 0,
+    /// Errors, warnings, and one-line summaries (default).
+    Normal = 1,
+    /// Everything, including per-stage detail (`--verbose`).
+    Verbose = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Normal as u8);
+
+/// Set the process-wide diagnostic level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current diagnostic level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        2 => Level::Verbose,
+        _ => Level::Normal,
+    }
+}
+
+/// Resolve CLI flags into a level (`--verbose` wins over `--quiet`) and
+/// apply it. Returns the resolved level.
+pub fn apply_flags(verbose: bool, quiet: bool) -> Level {
+    let level = if verbose {
+        Level::Verbose
+    } else if quiet {
+        Level::Quiet
+    } else {
+        Level::Normal
+    };
+    set_level(level);
+    level
+}
+
+struct DiagCounters {
+    error: Counter,
+    warn: Counter,
+    info: Counter,
+    verbose: Counter,
+}
+
+fn counters() -> &'static DiagCounters {
+    static COUNTERS: OnceLock<DiagCounters> = OnceLock::new();
+    COUNTERS.get_or_init(|| DiagCounters {
+        error: crate::telemetry::counter("diag.messages.error"),
+        warn: crate::telemetry::counter("diag.messages.warn"),
+        info: crate::telemetry::counter("diag.messages.info"),
+        verbose: crate::telemetry::counter("diag.messages.verbose"),
+    })
+}
+
+/// Unconditional error line on stderr (never suppressed).
+pub fn error(msg: &str) {
+    counters().error.incr();
+    eprintln!("error: {msg}");
+}
+
+/// Warning on stderr, suppressed by `--quiet`.
+pub fn warn(msg: &str) {
+    counters().warn.incr();
+    if level() >= Level::Normal {
+        eprintln!("warning: {msg}");
+    }
+}
+
+/// Progress/summary line on stdout, suppressed by `--quiet`.
+pub fn info(msg: &str) {
+    counters().info.incr();
+    if level() >= Level::Normal {
+        println!("{msg}");
+    }
+}
+
+/// Detail line on stdout, shown only with `--verbose`.
+pub fn verbose(msg: &str) {
+    counters().verbose.incr();
+    if level() >= Level::Verbose {
+        println!("{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_resolve_with_verbose_winning() {
+        // Serialize against the global level; restore Normal afterwards.
+        assert_eq!(apply_flags(false, false), Level::Normal);
+        assert_eq!(apply_flags(false, true), Level::Quiet);
+        assert_eq!(apply_flags(true, false), Level::Verbose);
+        assert_eq!(apply_flags(true, true), Level::Verbose);
+        assert_eq!(level(), Level::Verbose);
+        set_level(Level::Normal);
+    }
+
+    #[test]
+    fn messages_bump_registry_counters() {
+        let before = crate::telemetry::counter("diag.messages.verbose").get();
+        verbose("detail that may or may not print");
+        let after = crate::telemetry::counter("diag.messages.verbose").get();
+        assert!(after > before);
+    }
+}

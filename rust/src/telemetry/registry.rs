@@ -1,0 +1,474 @@
+//! Process-wide metrics registry: named atomic counters, gauges, and
+//! log-bucketed histograms.
+//!
+//! [`Counter`], [`Gauge`], and [`Histogram`] are cheap cloneable handles
+//! over `Arc`'d atomics. A handle can live **unregistered** (a per-object
+//! counter such as a store's LRU hit count — construct with
+//! [`Counter::new`]) or be **registered** under a stable name with
+//! [`counter`]/[`gauge`]/[`histogram`], which return the shared handle for
+//! that name, creating it on first use. Either way the cell type is the
+//! same — there is exactly one counter implementation in the crate.
+//!
+//! [`snapshot`] captures every registered metric into a [`Snapshot`] with
+//! deterministic ordering (names are held in `BTreeMap`s), serializable as
+//! stable JSON via [`Snapshot::to_json`] and parseable back with
+//! [`Snapshot::from_json`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{escape, Json};
+
+/// Number of histogram buckets: bucket `i ≥ 1` holds values whose bit
+/// width is `i` (i.e. `2^(i-1) ≤ v < 2^i`); bucket 0 holds zero.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// A monotonically increasing `u64` counter (relaxed atomics).
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    /// A fresh unregistered counter starting at zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins `u64` gauge with a monotonic-max helper.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    /// A fresh unregistered gauge starting at zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the gauge to `v`.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.cell.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if `v` is larger (peak tracking).
+    #[inline]
+    pub fn max(&self, v: u64) {
+        self.cell.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+struct HistogramCells {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// A log2-bucketed `u64` histogram (typically nanosecond durations):
+/// recording is three relaxed atomic adds, no locks, no allocation.
+#[derive(Clone)]
+pub struct Histogram {
+    cells: Arc<HistogramCells>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            cells: Arc::new(HistogramCells {
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                count: AtomicU64::new(0),
+                sum: AtomicU64::new(0),
+            }),
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .finish()
+    }
+}
+
+/// Bucket index for a value: bit width of `v` (0 for `v == 0`).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+impl Histogram {
+    /// A fresh unregistered histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.cells.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.cells.count.fetch_add(1, Ordering::Relaxed);
+        self.cells.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.cells.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> u64 {
+        self.cells.sum.load(Ordering::Relaxed)
+    }
+
+    fn snapshot(&self) -> HistogramSnapshot {
+        let buckets = (0..HISTOGRAM_BUCKETS)
+            .filter_map(|i| {
+                let n = self.cells.buckets[i].load(Ordering::Relaxed);
+                (n > 0).then_some((i as u32, n))
+            })
+            .collect();
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            buckets,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+/// Shared handle for the counter registered under `name` (created on
+/// first use). Hot paths should fetch the handle once and keep it.
+pub fn counter(name: &str) -> Counter {
+    let mut map = registry().counters.lock().unwrap();
+    map.entry(name.to_string()).or_default().clone()
+}
+
+/// Shared handle for the gauge registered under `name`.
+pub fn gauge(name: &str) -> Gauge {
+    let mut map = registry().gauges.lock().unwrap();
+    map.entry(name.to_string()).or_default().clone()
+}
+
+/// Shared handle for the histogram registered under `name`.
+pub fn histogram(name: &str) -> Histogram {
+    let mut map = registry().histograms.lock().unwrap();
+    map.entry(name.to_string()).or_default().clone()
+}
+
+/// Point-in-time values of one registered histogram.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// Sparse `(bucket index, count)` pairs, ascending by index; bucket
+    /// `i ≥ 1` covers `[2^(i-1), 2^i)`, bucket 0 is exactly zero.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+/// Point-in-time capture of every registered metric, with deterministic
+/// (sorted-by-name) ordering.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+/// Capture every registered metric. Values are read with relaxed loads;
+/// concurrent writers may land between reads of different metrics.
+pub fn snapshot() -> Snapshot {
+    let reg = registry();
+    let counters = reg
+        .counters
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.get()))
+        .collect();
+    let gauges = reg
+        .gauges
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.get()))
+        .collect();
+    let histograms = reg
+        .histograms
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.snapshot()))
+        .collect();
+    Snapshot {
+        counters,
+        gauges,
+        histograms,
+    }
+}
+
+impl Snapshot {
+    /// Value of a counter in this snapshot (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Value of a gauge in this snapshot (0 if absent).
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    /// Counter delta against an earlier snapshot (saturating at 0).
+    pub fn counter_delta(&self, earlier: &Snapshot, name: &str) -> u64 {
+        self.counter(name).saturating_sub(earlier.counter(name))
+    }
+
+    /// Stable JSON: object with `counters`, `gauges`, `histograms`, every
+    /// map sorted by name, histograms as sparse `[bucket, count]` pairs.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"counters\": {");
+        push_u64_map(&mut out, &self.counters);
+        out.push_str("},\n  \"gauges\": {");
+        push_u64_map(&mut out, &self.gauges);
+        out.push_str("},\n  \"histograms\": {");
+        let mut first = true;
+        for (name, h) in &self.histograms {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n    \"{}\": {{\"count\": {}, \"sum\": {}, \"buckets\": [",
+                escape(name),
+                h.count,
+                h.sum
+            ));
+            for (i, (bucket, n)) in h.buckets.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("[{bucket}, {n}]"));
+            }
+            out.push_str("]}");
+        }
+        if !first {
+            out.push_str("\n  ");
+        }
+        out.push_str("}\n}\n");
+        out
+    }
+
+    /// Parse a document produced by [`Snapshot::to_json`].
+    pub fn from_json(text: &str) -> Result<Snapshot> {
+        let doc = Json::parse(text)?;
+        let mut snap = Snapshot::default();
+        for (key, value) in obj_fields(&doc, "snapshot")? {
+            match key.as_str() {
+                "counters" => snap.counters = parse_u64_map(value, "counters")?,
+                "gauges" => snap.gauges = parse_u64_map(value, "gauges")?,
+                "histograms" => {
+                    for (name, h) in obj_fields(value, "histograms")? {
+                        snap.histograms
+                            .insert(name.clone(), parse_histogram(h, name)?);
+                    }
+                }
+                other => bail!("unknown snapshot section {other:?}"),
+            }
+        }
+        Ok(snap)
+    }
+}
+
+fn push_u64_map(out: &mut String, map: &BTreeMap<String, u64>) {
+    let mut first = true;
+    for (name, v) in map {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!("\n    \"{}\": {}", escape(name), v));
+    }
+    if !first {
+        out.push_str("\n  ");
+    }
+}
+
+fn obj_fields<'a>(v: &'a Json, what: &str) -> Result<&'a [(String, Json)]> {
+    v.as_obj().ok_or_else(|| anyhow!("{what} is not an object"))
+}
+
+fn parse_u64_map(v: &Json, what: &str) -> Result<BTreeMap<String, u64>> {
+    let mut map = BTreeMap::new();
+    for (name, value) in obj_fields(v, what)? {
+        let n = value
+            .as_u64()
+            .ok_or_else(|| anyhow!("{what}.{name} is not a u64"))?;
+        map.insert(name.clone(), n);
+    }
+    Ok(map)
+}
+
+fn parse_histogram(v: &Json, name: &str) -> Result<HistogramSnapshot> {
+    let count = v
+        .get("count")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("histogram {name}: missing count"))?;
+    let sum = v
+        .get("sum")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("histogram {name}: missing sum"))?;
+    let raw = v
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("histogram {name}: missing buckets"))?;
+    let mut buckets = Vec::with_capacity(raw.len());
+    for pair in raw {
+        let pair = pair
+            .as_arr()
+            .ok_or_else(|| anyhow!("histogram {name}: bucket entry is not a pair"))?;
+        if pair.len() != 2 {
+            bail!("histogram {name}: bucket entry is not a pair");
+        }
+        let idx = pair[0]
+            .as_u64()
+            .ok_or_else(|| anyhow!("histogram {name}: bad bucket index"))?;
+        let n = pair[1]
+            .as_u64()
+            .ok_or_else(|| anyhow!("histogram {name}: bad bucket count"))?;
+        buckets.push((idx as u32, n));
+    }
+    Ok(HistogramSnapshot {
+        count,
+        sum,
+        buckets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registered_handles_share_the_cell() {
+        let a = counter("test.registry.shared");
+        let b = counter("test.registry.shared");
+        a.add(3);
+        b.incr();
+        assert_eq!(a.get(), 4);
+        assert_eq!(b.get(), 4);
+    }
+
+    #[test]
+    fn unregistered_counters_are_independent() {
+        let a = Counter::new();
+        let b = Counter::new();
+        a.add(2);
+        assert_eq!(a.get(), 2);
+        assert_eq!(b.get(), 0);
+    }
+
+    #[test]
+    fn gauge_set_and_max() {
+        let g = gauge("test.registry.gauge");
+        g.set(10);
+        g.max(5);
+        assert_eq!(g.get(), 10);
+        g.max(20);
+        assert_eq!(g.get(), 20);
+    }
+
+    #[test]
+    fn histogram_buckets_by_bit_width() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1006);
+        let s = h.snapshot();
+        assert_eq!(s.buckets, vec![(0, 1), (1, 1), (2, 2), (10, 1)]);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        counter("test.registry.json.count").add(7);
+        gauge("test.registry.json.gauge").set(1234);
+        let h = histogram("test.registry.json.hist");
+        h.record(0);
+        h.record(300);
+        let snap = snapshot();
+        let parsed = Snapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(parsed.counter("test.registry.json.count"), 7);
+        assert_eq!(parsed.gauge("test.registry.json.gauge"), 1234);
+        let hist = &parsed.histograms["test.registry.json.hist"];
+        assert_eq!(hist.count, 2);
+        assert_eq!(hist.sum, 300);
+        // Full snapshots may differ (other tests run concurrently); the
+        // sections we own must round-trip exactly.
+        assert_eq!(
+            parsed.counters["test.registry.json.count"],
+            snap.counters["test.registry.json.count"]
+        );
+    }
+
+    #[test]
+    fn empty_snapshot_serializes_and_parses() {
+        let empty = Snapshot::default();
+        let parsed = Snapshot::from_json(&empty.to_json()).unwrap();
+        assert_eq!(parsed, empty);
+    }
+}

@@ -1,0 +1,416 @@
+//! Span tracing: RAII guards, per-thread lock-free buffers, Chrome
+//! `trace_event` JSON export.
+//!
+//! Tracing is **disabled by default** and must be measurably free when
+//! off: [`span`] is then a single relaxed atomic load returning an inert
+//! guard — no clock read, no allocation, no lock. Enable with [`enable`]
+//! (the CLI does this for `--trace-out`), run the workload, then
+//! [`drain`] or [`write_chrome_json`].
+//!
+//! When enabled, each [`Span`] records a *complete event*: name, span id,
+//! parent id, thread id, start, duration, and optional numeric args.
+//! Parent linkage is implicit through a per-thread span stack — a span
+//! opened while another is open on the same thread becomes its child —
+//! or explicit via [`span_with_parent`] for cross-thread edges (a worker
+//! pool span parented to the coordinator's root span). Finished spans go
+//! to a thread-local buffer (no lock on the hot path) that is flushed
+//! into the global collector whenever the thread's span stack empties or
+//! the thread exits.
+//!
+//! The export format is the Chrome `trace_event` JSON array-of-`"ph":
+//! "X"` form, loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`; see `docs/TELEMETRY.md`.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_THREAD_ID: AtomicU64 = AtomicU64::new(1);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos().min(u64::MAX as u128) as u64
+}
+
+fn collector() -> &'static Mutex<Vec<SpanEvent>> {
+    static COLLECTOR: OnceLock<Mutex<Vec<SpanEvent>>> = OnceLock::new();
+    COLLECTOR.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn spans_recorded() -> &'static crate::telemetry::Counter {
+    static COUNTER: OnceLock<crate::telemetry::Counter> = OnceLock::new();
+    COUNTER.get_or_init(|| crate::telemetry::counter("trace.spans.recorded"))
+}
+
+/// One finished span (a Chrome *complete event*).
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// Process-unique span id (> 0).
+    pub id: u64,
+    /// Id of the enclosing span, 0 for roots.
+    pub parent: u64,
+    /// Small stable per-thread id (assigned on a thread's first span).
+    pub tid: u64,
+    /// Start, nanoseconds since the trace epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Numeric attributes (chunk index, byte counts, …).
+    pub args: Vec<(&'static str, u64)>,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    stack: Vec<u64>,
+    events: Vec<SpanEvent>,
+}
+
+impl ThreadBuf {
+    fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        spans_recorded().add(self.events.len() as u64);
+        collector().lock().unwrap().append(&mut self.events);
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_THREAD_ID.fetch_add(1, Ordering::Relaxed),
+        stack: Vec::new(),
+        events: Vec::new(),
+    });
+}
+
+/// Turn recording on. Idempotent; pins the trace epoch on first call.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn recording off. Spans already open keep recording until dropped.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Whether recording is currently on.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+struct ActiveSpan {
+    name: &'static str,
+    id: u64,
+    parent: u64,
+    start_ns: u64,
+    args: Vec<(&'static str, u64)>,
+}
+
+/// RAII span guard: records a [`SpanEvent`] on drop. Inert (and free)
+/// when tracing is disabled.
+#[must_use = "a span measures the scope it is alive for"]
+pub struct Span(Option<ActiveSpan>);
+
+/// Open a span parented to the innermost open span on this thread (a
+/// root span if none). Returns an inert guard when tracing is off.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !is_enabled() {
+        return Span(None);
+    }
+    open(name, None)
+}
+
+/// Open a span with an explicit parent id — for cross-thread edges,
+/// e.g. worker-pool chunk spans parented to the writer's root span.
+/// `parent == 0` makes a root span.
+#[inline]
+pub fn span_with_parent(name: &'static str, parent: u64) -> Span {
+    if !is_enabled() {
+        return Span(None);
+    }
+    open(name, Some(parent))
+}
+
+fn open(name: &'static str, parent: Option<u64>) -> Span {
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        let parent = parent.unwrap_or_else(|| b.stack.last().copied().unwrap_or(0));
+        b.stack.push(id);
+        parent
+    });
+    Span(Some(ActiveSpan {
+        name,
+        id,
+        parent,
+        start_ns: now_ns(),
+        args: Vec::new(),
+    }))
+}
+
+impl Span {
+    /// This span's id (0 when inert) — pass to [`span_with_parent`].
+    pub fn id(&self) -> u64 {
+        self.0.as_ref().map_or(0, |s| s.id)
+    }
+
+    /// Attach a numeric attribute (no-op when inert).
+    pub fn arg(mut self, key: &'static str, value: u64) -> Self {
+        if let Some(active) = self.0.as_mut() {
+            active.args.push((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(active) = self.0.take() else {
+            return;
+        };
+        let end_ns = now_ns();
+        BUF.with(|b| {
+            let mut b = b.borrow_mut();
+            // Our id should be the stack top; truncate defensively in
+            // case a child guard outlived its parent.
+            if let Some(pos) = b.stack.iter().rposition(|&id| id == active.id) {
+                b.stack.truncate(pos);
+            }
+            let tid = b.tid;
+            b.events.push(SpanEvent {
+                name: active.name,
+                id: active.id,
+                parent: active.parent,
+                tid,
+                start_ns: active.start_ns,
+                dur_ns: end_ns.saturating_sub(active.start_ns),
+                args: active.args,
+            });
+            if b.stack.is_empty() {
+                b.flush();
+            }
+        });
+    }
+}
+
+/// Flush this thread's buffer and take every collected event. Threads
+/// with spans still open keep those until the spans close.
+pub fn drain() -> Vec<SpanEvent> {
+    BUF.with(|b| b.borrow_mut().flush());
+    std::mem::take(&mut *collector().lock().unwrap())
+}
+
+/// Render events as a Chrome `trace_event` JSON array (`"ph": "X"`
+/// complete events, timestamps in microseconds), sorted by start time
+/// with enclosing spans before identically-timed children.
+pub fn to_chrome_json(events: &[SpanEvent]) -> String {
+    let mut sorted: Vec<&SpanEvent> = events.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.start_ns
+            .cmp(&b.start_ns)
+            .then(b.dur_ns.cmp(&a.dur_ns))
+            .then(a.id.cmp(&b.id))
+    });
+    let mut out = String::from("[");
+    for (i, e) in sorted.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n{{\"name\": \"{}\", \"cat\": \"ffcz\", \"ph\": \"X\", \"ts\": {:.3}, \
+             \"dur\": {:.3}, \"pid\": 1, \"tid\": {}, \"args\": {{\"span_id\": {}, \
+             \"parent\": {}",
+            e.name,
+            e.start_ns as f64 / 1e3,
+            e.dur_ns as f64 / 1e3,
+            e.tid,
+            e.id,
+            e.parent
+        ));
+        for (key, value) in &e.args {
+            out.push_str(&format!(", \"{key}\": {value}"));
+        }
+        out.push_str("}}");
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Drain all collected spans and write them to `path` as Chrome
+/// `trace_event` JSON. Returns the number of events written.
+pub fn write_chrome_json(path: &Path) -> Result<usize> {
+    let events = drain();
+    let json = to_chrome_json(&events);
+    std::fs::write(path, json)
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Trace state is process-global and unit tests share one process:
+    // tests here serialize on this lock, and — because unrelated tests
+    // may run encode paths concurrently while recording is on — they
+    // always filter drained events down to their own span names.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn drain_named(prefix: &str) -> Vec<SpanEvent> {
+        drain()
+            .into_iter()
+            .filter(|e| e.name.starts_with(prefix))
+            .collect()
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _g = guard();
+        disable();
+        let s = span("test.noop");
+        assert_eq!(s.id(), 0);
+        drop(s);
+        assert!(drain_named("test.noop").is_empty());
+    }
+
+    #[test]
+    fn nesting_links_parents_on_one_thread() {
+        let _g = guard();
+        enable();
+        {
+            let root = span("test.nest.root");
+            let root_id = root.id();
+            assert!(root_id > 0);
+            {
+                let child = span("test.nest.child").arg("k", 7);
+                assert_ne!(child.id(), root_id);
+            }
+        }
+        disable();
+        let events = drain_named("test.nest.");
+        assert_eq!(events.len(), 2);
+        let root = events.iter().find(|e| e.name == "test.nest.root").unwrap();
+        let child = events.iter().find(|e| e.name == "test.nest.child").unwrap();
+        assert_eq!(root.parent, 0);
+        assert_eq!(child.parent, root.id);
+        assert_eq!(child.args, vec![("k", 7)]);
+        assert_eq!(root.tid, child.tid);
+        assert!(root.start_ns <= child.start_ns);
+        assert!(root.start_ns + root.dur_ns >= child.start_ns + child.dur_ns);
+    }
+
+    #[test]
+    fn explicit_parent_crosses_threads() {
+        let _g = guard();
+        enable();
+        let root = span("test.xthread.root");
+        let root_id = root.id();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                let _child = span_with_parent("test.xthread.child", root_id);
+            });
+        });
+        drop(root);
+        disable();
+        let events = drain_named("test.xthread.");
+        let root = events
+            .iter()
+            .find(|e| e.name == "test.xthread.root")
+            .unwrap();
+        let child = events
+            .iter()
+            .find(|e| e.name == "test.xthread.child")
+            .unwrap();
+        assert_eq!(child.parent, root.id);
+        assert_ne!(child.tid, root.tid);
+    }
+
+    #[test]
+    fn chrome_json_is_valid_and_sorted() {
+        // Built directly — no global state involved.
+        let events = vec![
+            SpanEvent {
+                name: "test.json.b",
+                id: 2,
+                parent: 1,
+                tid: 1,
+                start_ns: 2_500,
+                dur_ns: 1_000,
+                args: vec![("chunk", 3)],
+            },
+            SpanEvent {
+                name: "test.json.a",
+                id: 1,
+                parent: 0,
+                tid: 1,
+                start_ns: 1_000,
+                dur_ns: 5_000,
+                args: Vec::new(),
+            },
+        ];
+        let json = to_chrome_json(&events);
+        let doc = crate::util::json::Json::parse(&json).unwrap();
+        let arr = doc.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let mut last_ts = f64::MIN;
+        for e in arr {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert_eq!(e.get("cat").unwrap().as_str(), Some("ffcz"));
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last_ts);
+            last_ts = ts;
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("args").unwrap().get("span_id").is_some());
+        }
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("test.json.a"));
+        assert_eq!(arr[0].get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            arr[1].get("args").unwrap().get("chunk").unwrap().as_u64(),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn identical_start_orders_enclosing_span_first() {
+        let mk = |id: u64, dur_ns: u64| SpanEvent {
+            name: "test.tie",
+            id,
+            parent: 0,
+            tid: 1,
+            start_ns: 100,
+            dur_ns,
+            args: Vec::new(),
+        };
+        let json = to_chrome_json(&[mk(2, 10), mk(1, 50)]);
+        let doc = crate::util::json::Json::parse(&json).unwrap();
+        let arr = doc.as_arr().unwrap();
+        // Longer (enclosing) span first on a start-time tie.
+        assert_eq!(
+            arr[0].get("args").unwrap().get("span_id").unwrap().as_u64(),
+            Some(1)
+        );
+    }
+}

@@ -1,6 +1,7 @@
 //! Small shared utilities: seeded PRNG, statistics, timers, formatting.
 
 pub mod bench;
+pub mod json;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,232 @@
+//! Integration tests for the telemetry subsystem: snapshot JSON
+//! round-trip, trace-event validity on a real store write, and global
+//! counter correctness on a known 8-chunk encode.
+//!
+//! Telemetry state (the metrics registry and the trace collector) is
+//! process-global; every test here serializes on one lock and — where it
+//! drains spans — clears leftovers first, so the tests stay order- and
+//! parallelism-independent within this binary.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use ffcz::codec::CodecChainSpec;
+use ffcz::correction::FfczConfig;
+use ffcz::data::synth::grf::GrfBuilder;
+use ffcz::data::Field;
+use ffcz::store::{encode_store, Store, StoreWriteOptions};
+use ffcz::telemetry::{self, trace, Snapshot};
+use ffcz::util::json::Json;
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn grf_3d(shape: &[usize], seed: u64) -> Field {
+    GrfBuilder::new(shape)
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(seed)
+        .build()
+}
+
+fn ffcz_spec(base: &str) -> CodecChainSpec {
+    CodecChainSpec::ffcz(base, &FfczConfig::relative(1e-3, 1e-3))
+}
+
+fn hist_count(snap: &Snapshot, name: &str) -> u64 {
+    snap.histograms.get(name).map(|h| h.count).unwrap_or(0)
+}
+
+#[test]
+fn snapshot_json_round_trips_exactly() {
+    let _g = guard();
+    telemetry::counter("itest.telemetry.roundtrip.count").add(42);
+    telemetry::gauge("itest.telemetry.roundtrip.gauge").set(9001);
+    let h = telemetry::histogram("itest.telemetry.roundtrip.hist");
+    h.record(0);
+    h.record(17);
+    h.record(1 << 40);
+    // No other thread mutates the registry while the guard is held, so
+    // the parse of to_json() must reproduce the snapshot *exactly* —
+    // every counter, gauge, and sparse histogram bucket.
+    let snap = telemetry::snapshot();
+    let parsed = Snapshot::from_json(&snap.to_json()).unwrap();
+    assert_eq!(parsed, snap);
+    assert_eq!(parsed.counter("itest.telemetry.roundtrip.count"), 42);
+    assert_eq!(parsed.gauge("itest.telemetry.roundtrip.gauge"), 9001);
+    let hist = &parsed.histograms["itest.telemetry.roundtrip.hist"];
+    assert_eq!(hist.count, 3);
+    assert_eq!(hist.sum, 17 + (1 << 40));
+    assert_eq!(hist.buckets.len(), 3);
+}
+
+#[test]
+fn store_write_trace_nests_stage_spans_under_chunk_spans() {
+    let _g = guard();
+    trace::disable();
+    let _ = trace::drain(); // clear leftovers from other tests
+
+    trace::enable();
+    let field = grf_3d(&[16, 16, 16], 77);
+    let opts = StoreWriteOptions::new(&[8, 8, 8]).workers(2);
+    let (_, _, report) = encode_store(&field, &ffcz_spec("sz-like"), &opts).unwrap();
+    trace::disable();
+    assert!(report.all_chunks_ok);
+
+    let events: Vec<_> = trace::drain()
+        .into_iter()
+        .filter(|e| e.name.starts_with("store."))
+        .collect();
+    let by_id: HashMap<u64, &trace::SpanEvent> = events.iter().map(|e| (e.id, e)).collect();
+
+    // Exactly one root write span carrying the chunk count.
+    let roots: Vec<_> = events.iter().filter(|e| e.name == "store.write").collect();
+    assert_eq!(roots.len(), 1, "expected one store.write span");
+    let root = roots[0];
+    assert_eq!(root.parent, 0);
+    assert!(root.args.contains(&("chunks", 8)), "args: {:?}", root.args);
+
+    // Eight chunk spans, one per chunk index, cross-thread-parented to
+    // the root.
+    let chunks: Vec<_> = events.iter().filter(|e| e.name == "store.chunk.encode").collect();
+    assert_eq!(chunks.len(), 8);
+    let mut chunk_args: Vec<u64> = chunks
+        .iter()
+        .map(|e| {
+            assert_eq!(e.parent, root.id, "chunk span not parented to root");
+            e.args.iter().find(|(k, _)| *k == "chunk").expect("chunk arg").1
+        })
+        .collect();
+    chunk_args.sort_unstable();
+    assert_eq!(chunk_args, (0..8).collect::<Vec<u64>>());
+
+    // Each pipeline stage ran once per chunk, implicitly nested (same
+    // thread) inside its chunk span and contained within it in time.
+    let chunk_ids: Vec<u64> = chunks.iter().map(|e| e.id).collect();
+    for stage in [
+        "store.chunk.base_compress",
+        "store.chunk.pocs_correct",
+        "store.chunk.verify",
+    ] {
+        let spans: Vec<_> = events.iter().filter(|e| e.name == stage).collect();
+        assert_eq!(spans.len(), 8, "{stage}: expected one span per chunk");
+        for s in &spans {
+            assert!(chunk_ids.contains(&s.parent), "{stage} parent not a chunk");
+            let parent = by_id[&s.parent];
+            assert_eq!(s.tid, parent.tid, "{stage} on a different thread");
+            assert!(parent.start_ns <= s.start_ns);
+            assert!(s.start_ns + s.dur_ns <= parent.start_ns + parent.dur_ns);
+        }
+    }
+
+    // Worker threads announce themselves; every parent id resolves.
+    assert!(events.iter().any(|e| e.name == "store.worker"));
+    for e in &events {
+        assert!(e.parent == 0 || by_id.contains_key(&e.parent));
+    }
+
+    // The Chrome export of these events is valid JSON, sorted by start
+    // time, and carries the span/parent ids in args.
+    let json = trace::to_chrome_json(&events);
+    let doc = Json::parse(&json).unwrap();
+    let arr = doc.as_arr().unwrap();
+    assert_eq!(arr.len(), events.len());
+    let mut last_ts = f64::MIN;
+    for e in arr {
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "events not sorted by start time");
+        last_ts = ts;
+        let args = e.get("args").unwrap();
+        assert!(args.get("span_id").unwrap().as_u64().unwrap() > 0);
+        assert!(args.get("parent").is_some());
+    }
+}
+
+#[test]
+fn trace_file_round_trips_through_write_chrome_json() {
+    let _g = guard();
+    trace::disable();
+    let _ = trace::drain();
+
+    trace::enable();
+    {
+        let root = trace::span("itest.file.root").arg("k", 5);
+        let _child = trace::span_with_parent("itest.file.child", root.id());
+    }
+    trace::disable();
+
+    let path = std::env::temp_dir().join("ffcz_telemetry_trace_test.json");
+    let written = trace::write_chrome_json(&path).unwrap();
+    assert!(written >= 2, "expected at least the two spans, got {written}");
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = Json::parse(&text).unwrap();
+    let arr = doc.as_arr().unwrap();
+    let root = arr
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("itest.file.root"))
+        .expect("root span in file");
+    let child = arr
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("itest.file.child"))
+        .expect("child span in file");
+    assert_eq!(root.get("args").unwrap().get("k").unwrap().as_u64(), Some(5));
+    assert_eq!(
+        child.get("args").unwrap().get("parent").unwrap().as_u64(),
+        root.get("args").unwrap().get("span_id").unwrap().as_u64()
+    );
+    // The file write drained the collector: a second write sees nothing.
+    let again = std::env::temp_dir().join("ffcz_telemetry_trace_test2.json");
+    assert_eq!(trace::write_chrome_json(&again).unwrap(), 0);
+    std::fs::remove_file(&again).ok();
+}
+
+#[test]
+fn global_counters_match_write_report_on_known_encode() {
+    let _g = guard();
+    trace::disable();
+    let field = grf_3d(&[16, 16, 16], 21);
+
+    let before = telemetry::snapshot();
+    let opts = StoreWriteOptions::new(&[8, 8, 8]).workers(2);
+    let (bytes, manifest, report) = encode_store(&field, &ffcz_spec("sz-like"), &opts).unwrap();
+    let after = telemetry::snapshot();
+
+    // 16³ field in 8³ chunks: exactly 8 chunk encodes, each seen once by
+    // the registry and once in the per-chunk report.
+    assert_eq!(report.chunk_reports.len(), 8);
+    assert_eq!(after.counter_delta(&before, "store.encode.chunks"), 8);
+    assert_eq!(after.counter_delta(&before, "store.encode.bytes_in"), (16 * 16 * 16 * 8) as u64);
+    let iters: u64 = report.chunk_reports.iter().map(|r| r.pocs_iterations as u64).sum();
+    assert_eq!(after.counter_delta(&before, "store.encode.pocs_iters"), iters);
+    let attempts: u64 = report.chunk_reports.iter().map(|r| r.quant_attempts as u64).sum();
+    assert_eq!(after.counter_delta(&before, "store.encode.quant_attempts"), attempts);
+    let fallbacks = report.chunk_reports.iter().filter(|r| r.used_raw_fallback).count() as u64;
+    assert_eq!(after.counter_delta(&before, "store.encode.raw_fallbacks"), fallbacks);
+    // bytes_out agrees chunk-by-chunk with the manifest payload.
+    let out: u64 = report.chunk_reports.iter().map(|r| r.bytes_out as u64).sum();
+    assert_eq!(after.counter_delta(&before, "store.encode.bytes_out"), out);
+    assert_eq!(out, manifest.payload_bytes());
+    let hist_delta =
+        hist_count(&after, "store.encode.chunk_ns") - hist_count(&before, "store.encode.chunk_ns");
+    assert_eq!(hist_delta, 8);
+
+    // Decode side: with the LRU enabled, a repeated same-window read is
+    // one miss then one hit, and the per-store accessors agree with the
+    // global registry deltas.
+    let store = Store::from_bytes(bytes).unwrap();
+    store.set_cache_budget(8 * 8 * 8 * 8); // room for one decoded chunk
+    let b = telemetry::snapshot();
+    store.read_region(&[0, 0, 0], &[8, 8, 8], 1).unwrap();
+    store.read_region(&[0, 0, 0], &[8, 8, 8], 1).unwrap();
+    let a = telemetry::snapshot();
+    assert_eq!(store.cache_misses(), 1);
+    assert_eq!(store.cache_hits(), 1);
+    assert_eq!(a.counter_delta(&b, "store.read.lru_misses"), store.cache_misses() as u64);
+    assert_eq!(a.counter_delta(&b, "store.read.lru_hits"), store.cache_hits() as u64);
+    assert_eq!(a.counter_delta(&b, "store.decode.chunks"), 1);
+    assert!(a.gauge("store.read.lru_bytes") >= (8 * 8 * 8 * 8) as u64);
+}
