@@ -237,10 +237,10 @@ impl CodecChain {
                 (raw, ChunkStats::exact())
             }
             ArrayStage::Base { name, spatial } => {
-                let base = self
-                    .base
-                    .as_ref()
-                    .expect("base stage resolved in from_spec");
+                // from_spec always resolves `base` for an ArrayStage::Base
+                // spec; this expect is a constructor invariant, not input.
+                // ffcz-lint: allow(panic-policy)
+                let base = self.base.as_ref().expect("base stage resolved in from_spec");
                 match self.spec.ffcz_config() {
                     Some(cfg) => {
                         self.encode_ffcz(chunk, name, base.as_ref(), &cfg, scratch, &mut detail)?
@@ -378,7 +378,7 @@ impl CodecChain {
                 }
                 let data: Vec<f64> = payload
                     .chunks_exact(8)
-                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .map(|c| f64::from_le_bytes(crate::encoding::fixed::exact(c)))
                     .collect();
                 Ok(Field::new(shape, data, precision))
             }

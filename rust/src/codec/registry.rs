@@ -23,6 +23,7 @@ use anyhow::{bail, Result};
 
 use crate::compressors::{by_name, Compressor};
 use crate::encoding::{lossless_compress, lossless_decompress};
+use crate::util::sync::{read, write};
 
 /// Builder closure producing a fresh boxed compressor.
 pub type CompressorBuilder = Arc<dyn Fn() -> Box<dyn Compressor> + Send + Sync>;
@@ -67,7 +68,7 @@ where
     if by_name(name).is_some() {
         bail!("codec name '{name}' is reserved by a built-in compressor");
     }
-    let mut table = compressor_table().write().unwrap();
+    let mut table = write(compressor_table());
     if table.contains_key(name) {
         bail!("codec '{name}' is already registered");
     }
@@ -81,7 +82,7 @@ pub fn build_compressor(name: &str) -> Option<Box<dyn Compressor>> {
     if let Some(c) = by_name(name) {
         return Some(c);
     }
-    let builder = compressor_table().read().unwrap().get(name).cloned();
+    let builder = read(compressor_table()).get(name).cloned();
     builder.map(|b| b())
 }
 
@@ -89,8 +90,7 @@ pub fn build_compressor(name: &str) -> Option<Box<dyn Compressor>> {
 /// registrations, the latter sorted for stable error messages).
 pub fn compressor_names() -> Vec<String> {
     let mut names: Vec<String> = BUILTIN_COMPRESSORS.iter().map(|s| s.to_string()).collect();
-    let mut registered: Vec<String> =
-        compressor_table().read().unwrap().keys().cloned().collect();
+    let mut registered: Vec<String> = read(compressor_table()).keys().cloned().collect();
     registered.sort();
     names.extend(registered);
     names
@@ -152,7 +152,7 @@ pub fn register_bytes_codec(codec: Arc<dyn BytesCodec>) -> Result<()> {
     if BUILTIN_BYTES_CODECS.contains(&name.as_str()) {
         bail!("bytes codec name '{name}' is reserved by a built-in stage");
     }
-    let mut table = bytes_table().write().unwrap();
+    let mut table = write(bytes_table());
     if table.contains_key(&name) {
         bail!("bytes codec '{name}' is already registered");
     }
@@ -165,13 +165,13 @@ pub fn build_bytes_codec(name: &str) -> Option<Arc<dyn BytesCodec>> {
     if name == "lossless" {
         return Some(Arc::new(LosslessBytes));
     }
-    bytes_table().read().unwrap().get(name).cloned()
+    read(bytes_table()).get(name).cloned()
 }
 
 /// Every resolvable bytes→bytes stage name.
 pub fn bytes_codec_names() -> Vec<String> {
     let mut names: Vec<String> = BUILTIN_BYTES_CODECS.iter().map(|s| s.to_string()).collect();
-    let mut registered: Vec<String> = bytes_table().read().unwrap().keys().cloned().collect();
+    let mut registered: Vec<String> = read(bytes_table()).keys().cloned().collect();
     registered.sort();
     names.extend(registered);
     names

@@ -436,12 +436,7 @@ fn read_name(buf: &[u8], pos: &mut usize, what: &str) -> Result<String> {
 /// Read a little-endian f64 at `*pos`, advancing it (shared with the
 /// manifest parser).
 pub(crate) fn read_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
-    if *pos + 8 > buf.len() {
-        bail!("truncated f64");
-    }
-    let v = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
-    *pos += 8;
-    Ok(v)
+    crate::encoding::fixed::read_f64_le(buf, pos, "codec spec f64")
 }
 
 #[cfg(test)]

@@ -20,7 +20,7 @@ use anyhow::{bail, Result};
 use super::{Compressor, ErrorBound};
 use crate::data::{Field, Precision};
 use crate::encoding::{
-    huffman_decode, huffman_encode, lossless_compress, lossless_decompress, varint,
+    fixed, huffman_decode, huffman_encode, lossless_compress, lossless_decompress, varint,
 };
 
 pub use wavelet::{cdf97_forward_nd, cdf97_inverse_nd, max_levels};
@@ -145,11 +145,7 @@ impl Compressor for SperrLike {
         for _ in 0..ndim {
             shape.push(varint::read(payload, &mut pos)? as usize);
         }
-        if pos + 8 > payload.len() {
-            bail!("truncated header");
-        }
-        let eb = f64::from_le_bytes(payload[pos..pos + 8].try_into().unwrap());
-        pos += 8;
+        let eb = fixed::read_f64_le(payload, &mut pos, "header error bound")?;
         let quantum = eb / 2.0;
         let n: usize = shape.iter().product();
 
@@ -185,11 +181,7 @@ impl Compressor for SperrLike {
         }
         let mut outlier_val_v = Vec::with_capacity(n_out);
         for _ in 0..n_out {
-            if opos + 8 > ob.len() {
-                bail!("truncated outliers");
-            }
-            outlier_val_v.push(f64::from_le_bytes(ob[opos..opos + 8].try_into().unwrap()));
-            opos += 8;
+            outlier_val_v.push(fixed::read_f64_le(&ob, &mut opos, "outlier value")?);
         }
 
         // ---- reconstruct

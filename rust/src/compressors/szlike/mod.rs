@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 use super::{Compressor, ErrorBound};
 use crate::data::{Field, Precision};
 use crate::encoding::{
-    huffman_decode, huffman_encode, lossless_compress, lossless_decompress, varint,
+    fixed, huffman_decode, huffman_encode, lossless_compress, lossless_decompress, varint,
 };
 
 pub use interp::InterpPredictor;
@@ -162,11 +162,7 @@ impl Compressor for SzLike {
             shape.push(varint::read(payload, &mut pos)? as usize);
         }
         let n: usize = shape.iter().product();
-        if pos + 8 > payload.len() {
-            bail!("truncated header");
-        }
-        let eb = f64::from_le_bytes(payload[pos..pos + 8].try_into().unwrap());
-        pos += 8;
+        let eb = fixed::read_f64_le(payload, &mut pos, "header error bound")?;
         let quantum = 2.0 * eb;
 
         let code_len = varint::read(payload, &mut pos)? as usize;
@@ -187,7 +183,7 @@ impl Compressor for SzLike {
         }
         let literals: Vec<f64> = lit_bytes
             .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f64::from_le_bytes(fixed::exact(c)))
             .collect();
 
         let mut recon = vec![0.0f64; n];

@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 use super::{Compressor, ErrorBound};
 use crate::data::{Field, Precision};
 use crate::encoding::{
-    huffman_decode, huffman_encode, lossless_compress, lossless_decompress, varint,
+    fixed, huffman_decode, huffman_encode, lossless_compress, lossless_decompress, varint,
 };
 
 pub use transform::{inverse_lift_block, lift_block, BLOCK_EDGE};
@@ -193,11 +193,7 @@ impl Compressor for ZfpLike {
         for _ in 0..ndim {
             shape.push(varint::read(payload, &mut pos)? as usize);
         }
-        if pos + 8 > payload.len() {
-            bail!("truncated header");
-        }
-        let eb = f64::from_le_bytes(payload[pos..pos + 8].try_into().unwrap());
-        pos += 8;
+        let eb = fixed::read_f64_le(payload, &mut pos, "header error bound")?;
         let _ = eb;
 
         let read_section = |payload: &[u8], pos: &mut usize| -> Result<Vec<u8>> {
@@ -220,7 +216,7 @@ impl Compressor for ZfpLike {
         let exp_bytes = read_section(payload, &mut pos)?;
         let exponents: Vec<i16> = exp_bytes
             .chunks_exact(2)
-            .map(|c| i16::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| i16::from_le_bytes(fixed::exact(c)))
             .collect();
 
         let n_codes = varint::read(payload, &mut pos)? as usize;
@@ -249,13 +245,7 @@ impl Compressor for ZfpLike {
         }
         let mut outlier_val_v = Vec::with_capacity(total_out);
         for _ in 0..total_out {
-            if opos + 8 > out_bytes.len() {
-                bail!("truncated outlier values");
-            }
-            outlier_val_v.push(f64::from_le_bytes(
-                out_bytes[opos..opos + 8].try_into().unwrap(),
-            ));
-            opos += 8;
+            outlier_val_v.push(fixed::read_f64_le(&out_bytes, &mut opos, "outlier value")?);
         }
 
         // ---- reconstruct

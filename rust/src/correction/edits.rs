@@ -15,7 +15,7 @@
 use anyhow::{bail, Result};
 
 use crate::encoding::{
-    huffman_decode, huffman_encode, lossless_compress, lossless_decompress, pack_flags,
+    fixed, huffman_decode, huffman_encode, lossless_compress, lossless_decompress, pack_flags,
     unpack_flags, varint,
 };
 use crate::fourier::Complex;
@@ -112,11 +112,7 @@ impl QuantizedEdits {
     /// Inverse of [`QuantizedEdits::to_bytes`].
     pub fn from_bytes(buf: &[u8], pos: &mut usize) -> Result<Self> {
         let n = varint::read(buf, pos)? as usize;
-        if *pos + 8 > buf.len() {
-            bail!("truncated edit stream header");
-        }
-        let step = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
-        *pos += 8;
+        let step = fixed::read_f64_le(buf, pos, "edit stream quantization step")?;
         let count = varint::read(buf, pos)? as usize;
         if count == 0 {
             return Ok(Self {
@@ -459,11 +455,7 @@ impl PointwiseQuantizedEdits {
 
     pub fn from_bytes(buf: &[u8], pos: &mut usize) -> Result<Self> {
         let n = varint::read(buf, pos)? as usize;
-        if *pos + 8 > buf.len() {
-            bail!("truncated pointwise edit header");
-        }
-        let base_step = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
-        *pos += 8;
+        let base_step = fixed::read_f64_le(buf, pos, "pointwise edit base step")?;
         let count = varint::read(buf, pos)? as usize;
         if count == 0 {
             return Ok(Self {

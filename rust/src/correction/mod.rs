@@ -32,7 +32,7 @@ use anyhow::{bail, Result};
 
 use crate::compressors::{Compressor, ErrorBound};
 use crate::data::Field;
-use crate::encoding::{lossless_compress, lossless_decompress, varint};
+use crate::encoding::{fixed, lossless_compress, lossless_decompress, varint};
 use crate::fourier::{fold_full_into, for_each_full_bin, Complex};
 
 pub use edits::{PointwiseQuantizedEdits, QuantizedComplexEdits, QuantizedEdits, QUANT_BITS};
@@ -344,13 +344,8 @@ impl EditsBlock {
                 let mut patch = Vec::with_capacity(n_patch);
                 for _ in 0..n_patch {
                     let i = varint::read(buf, pos)? as u32;
-                    if *pos + 16 > buf.len() {
-                        bail!("truncated patch");
-                    }
-                    let re = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
-                    let im =
-                        f64::from_le_bytes(buf[*pos + 8..*pos + 16].try_into().unwrap());
-                    *pos += 16;
+                    let re = fixed::read_f64_le(buf, pos, "patch real part")?;
+                    let im = fixed::read_f64_le(buf, pos, "patch imaginary part")?;
                     patch.push((i, re, im));
                 }
                 Ok(EditsBlock::Quantized { spat, freq, patch })
@@ -368,23 +363,15 @@ impl EditsBlock {
                 let mut spat = Vec::with_capacity(ns);
                 for _ in 0..ns {
                     let i = varint::read(&raw, &mut rp)? as u32;
-                    if rp + 8 > raw.len() {
-                        bail!("truncated raw spat edit");
-                    }
-                    let v = f64::from_le_bytes(raw[rp..rp + 8].try_into().unwrap());
-                    rp += 8;
+                    let v = fixed::read_f64_le(&raw, &mut rp, "raw spat edit")?;
                     spat.push((i, v));
                 }
                 let nf = varint::read(&raw, &mut rp)? as usize;
                 let mut freq = Vec::with_capacity(nf);
                 for _ in 0..nf {
                     let i = varint::read(&raw, &mut rp)? as u32;
-                    if rp + 16 > raw.len() {
-                        bail!("truncated raw freq edit");
-                    }
-                    let re = f64::from_le_bytes(raw[rp..rp + 8].try_into().unwrap());
-                    let im = f64::from_le_bytes(raw[rp + 8..rp + 16].try_into().unwrap());
-                    rp += 16;
+                    let re = fixed::read_f64_le(&raw, &mut rp, "raw freq edit real part")?;
+                    let im = fixed::read_f64_le(&raw, &mut rp, "raw freq edit imaginary part")?;
                     freq.push((i, re, im));
                 }
                 Ok(EditsBlock::Raw { n, spat, freq })

@@ -7,6 +7,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::encoding::fixed;
+
 use super::{Field, Precision};
 
 const FFLD_MAGIC: &[u8; 4] = b"FFLD";
@@ -30,11 +32,11 @@ pub fn read_raw(path: &Path, shape: &[usize], precision: Precision) -> Result<Fi
     let data = match precision {
         Precision::Single => bytes
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+            .map(|c| f32::from_le_bytes(fixed::exact(c)) as f64)
             .collect(),
         Precision::Double => bytes
             .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f64::from_le_bytes(fixed::exact(c)))
             .collect(),
     };
     Ok(Field::new(shape, data, precision))

@@ -26,6 +26,11 @@ const fn build_table() -> [u32; 256] {
     table
 }
 
+/// The CRC-32/IEEE check value: `crc32(b"123456789")`. Normative in
+/// `docs/FORMAT.md` § 1.2 — an independent implementation that does not
+/// produce this value reads the wrong polynomial/reflection convention.
+pub const CRC32_CHECK: u32 = 0xCBF4_3926;
+
 /// CRC-32 of `data` (IEEE: init `0xFFFFFFFF`, final xor `0xFFFFFFFF`).
 pub fn crc32(data: &[u8]) -> u32 {
     let mut crc = 0xFFFF_FFFFu32;
@@ -43,7 +48,7 @@ mod tests {
     fn known_vectors() {
         // The standard CRC-32/IEEE check values.
         assert_eq!(crc32(b""), 0);
-        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"123456789"), CRC32_CHECK);
         assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
     }
 

@@ -1,0 +1,92 @@
+//! Bounds-checked reads of fixed-width little-endian values from byte
+//! cursors. Decode paths must never panic on truncated or corrupt
+//! input (the `panic-policy` lint enforces this), so the
+//! length-check + `try_into` dance every reader used to hand-roll
+//! lives here once, behind `Result`.
+
+use anyhow::{bail, Result};
+
+/// Read exactly `N` bytes at `*pos`, advancing the cursor. Fails with
+/// a `truncated {what}` error instead of panicking when the buffer is
+/// short.
+pub fn take<const N: usize>(buf: &[u8], pos: &mut usize, what: &str) -> Result<[u8; N]> {
+    let Some(bytes) = buf.get(*pos..).and_then(|b| b.get(..N)) else {
+        bail!("truncated {what}: need {N} bytes at offset {}", *pos);
+    };
+    let mut out = [0u8; N];
+    out.copy_from_slice(bytes);
+    *pos += N;
+    Ok(out)
+}
+
+/// `u32` LE at `*pos`.
+pub fn read_u32_le(buf: &[u8], pos: &mut usize, what: &str) -> Result<u32> {
+    Ok(u32::from_le_bytes(take::<4>(buf, pos, what)?))
+}
+
+/// `u64` LE at `*pos`.
+pub fn read_u64_le(buf: &[u8], pos: &mut usize, what: &str) -> Result<u64> {
+    Ok(u64::from_le_bytes(take::<8>(buf, pos, what)?))
+}
+
+/// `f64` LE at `*pos`.
+pub fn read_f64_le(buf: &[u8], pos: &mut usize, what: &str) -> Result<f64> {
+    Ok(f64::from_le_bytes(take::<8>(buf, pos, what)?))
+}
+
+/// Infallible slice→array copy for chunks whose length is already
+/// guaranteed by construction (a `chunks_exact(N)` iterator): the
+/// conversion the fallible `try_into().unwrap()` idiom used to do.
+pub fn exact<const N: usize>(chunk: &[u8]) -> [u8; N] {
+    debug_assert_eq!(chunk.len(), N, "exact::<{N}> on a {}-byte chunk", chunk.len());
+    let mut out = [0u8; N];
+    out.copy_from_slice(chunk);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reads_and_advances() {
+        let buf = [1u8, 2, 3, 4, 5];
+        let mut pos = 1;
+        assert_eq!(take::<2>(&buf, &mut pos, "x").unwrap(), [2, 3]);
+        assert_eq!(pos, 3);
+        assert_eq!(take::<2>(&buf, &mut pos, "x").unwrap(), [4, 5]);
+        assert_eq!(pos, 5);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let buf = [1u8, 2, 3];
+        let mut pos = 2;
+        let err = take::<4>(&buf, &mut pos, "header field").unwrap_err();
+        assert!(err.to_string().contains("truncated header field"), "{err}");
+        // The cursor does not advance past a failed read.
+        assert_eq!(pos, 2);
+        let mut end = 3;
+        assert!(read_f64_le(&buf, &mut end, "tail").is_err());
+    }
+
+    #[test]
+    fn typed_reads_round_trip() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&(-1.5f64).to_le_bytes());
+        let mut pos = 0;
+        assert_eq!(read_u32_le(&buf, &mut pos, "a").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_u64_le(&buf, &mut pos, "b").unwrap(), u64::MAX);
+        assert_eq!(read_f64_le(&buf, &mut pos, "c").unwrap(), -1.5);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn exact_converts_chunks() {
+        let data = [1u8, 0, 2, 0];
+        let words: Vec<u16> = data.chunks_exact(2).map(|c| u16::from_le_bytes(exact(c))).collect();
+        assert_eq!(words, [1, 2]);
+    }
+}

@@ -96,7 +96,7 @@ pub fn huffman_decode(buf: &[u8], count: usize) -> Result<Vec<u16>> {
     // symbol list ordered by (length, symbol) — canonical order.
     let mut ordered: Vec<(u32, u16)> = lengths.iter().map(|&(s, l)| (l, s)).collect();
     ordered.sort_unstable();
-    let max_len = ordered.last().unwrap().0;
+    let max_len = ordered.last().map(|&(l, _)| l).unwrap_or(0);
     let mut len_count = vec![0u32; (max_len + 2) as usize];
     for &(l, _) in &ordered {
         len_count[l as usize] += 1;

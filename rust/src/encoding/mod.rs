@@ -5,13 +5,14 @@
 
 pub mod bitio;
 pub mod crc32;
+pub mod fixed;
 pub mod flags;
 pub mod huffman;
 pub mod lossless;
 pub mod varint;
 
 pub use bitio::{BitReader, BitWriter};
-pub use crc32::crc32;
+pub use crc32::{crc32, CRC32_CHECK};
 pub use flags::{pack_flags, unpack_flags};
 pub use huffman::{huffman_decode, huffman_encode};
 pub use lossless::{lossless_compress, lossless_decompress};

@@ -198,6 +198,12 @@ pub(crate) fn line_block(len: usize) -> usize {
 /// element sets, so no element is ever aliased by two threads.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut Complex);
+// SAFETY: the pointer is only dereferenced inside `run_line_item`, whose
+// work decomposition hands every item a disjoint element set (see its
+// `# Safety` contract) and whose callers claim each item exactly once via
+// a shared atomic counter — so moving the pointer to another thread can
+// never produce an aliased write. The buffer itself outlives the workers:
+// they run inside a `thread::scope` that borrows `data`.
 unsafe impl Send for SendPtr {}
 
 /// Apply a planned 1-D transform along `axis` of the row-major buffer
@@ -294,9 +300,12 @@ unsafe fn run_line_item(
     dir: FftDirection,
     lane: &mut Lane,
 ) {
+    debug_assert!(lb > 0 && len > 0, "degenerate line block");
+    debug_assert_eq!(stride, inner, "strided layout invariant");
     if stride == 1 {
         // Contiguous fast path: transform in place within each line.
         let o0 = item * lb;
+        debug_assert!(o0 < outer, "item {item} outside the line range");
         let ob = lb.min(outer - o0);
         for o in o0..o0 + ob {
             let line = std::slice::from_raw_parts_mut(data.add(o * len), len);
@@ -307,9 +316,17 @@ unsafe fn run_line_item(
     let iblocks = inner.div_ceil(lb);
     let o = item / iblocks;
     let i0 = (item % iblocks) * lb;
+    debug_assert!(o < outer && i0 < inner, "item {item} outside the grid");
     let b = lb.min(inner - i0);
     let base = o * len * stride + i0;
+    // Highest offset this item touches stays inside the buffer, so the
+    // per-(o, ib) ownership sets in the `# Safety` contract are in bounds.
+    debug_assert!(
+        base + (len - 1) * stride + b <= outer * len * inner,
+        "item {item} overruns the buffer"
+    );
     let block = &mut lane.block;
+    debug_assert!(block.len() >= b * len, "lane block smaller than the item");
     // Gather b adjacent lines: for each j the addresses
     // base + j·stride + 0..b are consecutive.
     for j in 0..len {
@@ -854,6 +871,35 @@ mod tests {
                 let mut base_spec = base.clone();
                 plan.inverse(&mut base_spec, &mut base_out, 1, &mut ws);
                 assert_eq!(out, base_out, "shape {shape:?} threads {threads}");
+            }
+        }
+    }
+
+    /// Reduced-shape sweep sized for the Miri interpreter: drives both
+    /// `run_line_item` paths (contiguous lines and the strided
+    /// gather/scatter) single- and multi-threaded. The CI Miri job runs
+    /// exactly this test; full-size coverage lives in
+    /// `threaded_output_is_bit_identical`.
+    #[test]
+    fn miri_reduced_shapes_exercise_unsafe_paths() {
+        for shape in [vec![4usize, 6], vec![3, 4, 2], vec![8]] {
+            let n: usize = shape.iter().product();
+            let x = random_real(n, 3);
+            let plan = NdRealFft::new(&shape);
+            let mut base = vec![Complex::ZERO; plan.half_len()];
+            let mut ws = NdFftWorkspace::new();
+            plan.forward(&x, &mut base, 1, &mut ws);
+            let scale = x.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+            for threads in [1usize, 2] {
+                let mut spec = vec![Complex::ZERO; plan.half_len()];
+                let mut ws_t = NdFftWorkspace::new();
+                plan.forward(&x, &mut spec, threads, &mut ws_t);
+                assert_eq!(spec, base, "shape {shape:?} threads {threads}");
+                let mut out = vec![0.0f64; n];
+                plan.inverse(&mut spec, &mut out, threads, &mut ws_t);
+                for (a, b) in x.iter().zip(&out) {
+                    assert!((a - b).abs() < 1e-11 * scale, "shape {shape:?}");
+                }
             }
         }
     }

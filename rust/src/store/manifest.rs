@@ -59,7 +59,7 @@ use anyhow::{bail, Result};
 
 use crate::codec::{ChunkStats, CodecChainSpec};
 use crate::data::Precision;
-use crate::encoding::{pack_flags, unpack_flags, varint};
+use crate::encoding::{fixed, pack_flags, unpack_flags, varint};
 
 use super::grid::ChunkGrid;
 
@@ -170,8 +170,8 @@ impl Manifest {
             varint::write(&mut out, c.chain as u64);
             varint::write(&mut out, c.offset);
             varint::write(&mut out, c.length);
-            if with_crc {
-                out.extend_from_slice(&c.crc32.unwrap().to_le_bytes());
+            if let (true, Some(crc)) = (with_crc, c.crc32) {
+                out.extend_from_slice(&crc.to_le_bytes());
             }
             out.extend_from_slice(&c.stats.max_spatial_ratio.to_le_bytes());
             out.extend_from_slice(&c.stats.max_frequency_ratio.to_le_bytes());
@@ -292,12 +292,7 @@ impl Manifest {
             let offset = varint::read(buf, &mut pos)?;
             let length = varint::read(buf, &mut pos)?;
             let crc32 = if with_crc {
-                if pos + 4 > buf.len() {
-                    bail!("truncated chunk CRC");
-                }
-                let v = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
-                pos += 4;
-                Some(v)
+                Some(fixed::read_u32_le(buf, &mut pos, "chunk CRC")?)
             } else {
                 None
             };

@@ -26,7 +26,9 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+use crate::util::sync::lock;
 
 /// Apply `f` to every index in `0..n` using up to `workers` OS threads and
 /// collect the results in index order. Returns the first error (by index)
@@ -69,17 +71,22 @@ where
                         break;
                     }
                     let r = f(i, &mut state);
-                    *slots[i].lock().unwrap() = Some(r);
+                    *lock(&slots[i]) = Some(r);
                 }
             });
         }
     });
     slots
         .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap()
-                .expect("every index claimed by exactly one worker")
+        .enumerate()
+        .map(|(i, m)| {
+            let slot = m.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner());
+            match slot {
+                Some(r) => r,
+                // Unreachable by construction (every index is claimed by
+                // exactly one worker), but a library path must not panic.
+                None => bail!("worker pool bug: index {i} never produced a result"),
+            }
         })
         .collect()
 }
@@ -178,9 +185,12 @@ where
                     }
                     // Wait for index i to enter the write window.
                     {
-                        let mut st = gate.state.lock().unwrap();
+                        let mut st = lock(&gate.state);
                         while !st.abort && i >= st.written + window {
-                            st = gate.cv.wait(st).unwrap();
+                            st = gate
+                                .cv
+                                .wait(st)
+                                .unwrap_or_else(|poisoned| poisoned.into_inner());
                         }
                         if st.abort {
                             break;
@@ -200,7 +210,7 @@ where
         // blocked on the gate wake up; dropping `rx` on return unblocks
         // workers stalled on a full channel.
         let abort = |gate: &WindowGate| {
-            let mut st = gate.state.lock().unwrap();
+            let mut st = lock(&gate.state);
             st.abort = true;
             gate.cv.notify_all();
         };
@@ -221,7 +231,7 @@ where
                     return Err(e);
                 }
                 expect += 1;
-                let mut st = gate.state.lock().unwrap();
+                let mut st = lock(&gate.state);
                 st.written = expect;
                 gate.cv.notify_all();
             }

@@ -11,8 +11,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::codec::CodecChain;
 use crate::data::Field;
-use crate::encoding::crc32;
+use crate::encoding::{crc32, fixed};
 use crate::telemetry;
+use crate::util::sync::lock;
 
 use super::grid::{extract_subarray, insert_subarray, ChunkGrid};
 use super::manifest::{Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
@@ -234,8 +235,9 @@ impl Store {
             // distinguishable from "not our file at all".
             bail!(truncated_store_error());
         }
-        let manifest_offset = u64::from_le_bytes(footer[0..8].try_into().unwrap());
-        let manifest_len = u64::from_le_bytes(footer[8..16].try_into().unwrap());
+        let mut pos = 0usize;
+        let manifest_offset = fixed::read_u64_le(footer, &mut pos, "footer manifest offset")?;
+        let manifest_len = fixed::read_u64_le(footer, &mut pos, "footer manifest length")?;
         let payload_start = STORE_MAGIC.len() as u64;
         let footer_start = total_len - FOOTER_LEN as u64;
         if manifest_offset < payload_start
@@ -308,7 +310,7 @@ impl Store {
     /// A budget of 0 disables caching and drops held chunks (the default
     /// state). Shrinking evicts least-recently-used entries immediately.
     pub fn set_cache_budget(&self, bytes: usize) {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock(&self.cache);
         cache.budget = bytes;
         if bytes == 0 {
             cache.clear();
@@ -335,7 +337,7 @@ impl Store {
 
     /// Decoded bytes currently held by the cache.
     pub fn cache_bytes(&self) -> usize {
-        self.cache.lock().unwrap().bytes
+        lock(&self.cache).bytes
     }
 
     /// Decode chunk `index` through the LRU cache (a plain
@@ -346,7 +348,7 @@ impl Store {
     /// wins.
     pub fn decode_chunk_cached(&self, index: usize) -> Result<Arc<Field>> {
         {
-            let mut cache = self.cache.lock().unwrap();
+            let mut cache = lock(&self.cache);
             if cache.budget == 0 {
                 drop(cache);
                 return Ok(Arc::new(self.decode_chunk(index)?));
@@ -361,7 +363,7 @@ impl Store {
         let field = Arc::new(self.decode_chunk(index)?);
         self.cache_misses.incr();
         read_metrics().lru_misses.incr();
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock(&self.cache);
         if cache.budget == 0 {
             // Disabled while we were decoding.
             return Ok(field);
@@ -400,7 +402,7 @@ impl Store {
                 buf.copy_from_slice(&bytes[start..start + entry.length as usize]);
             }
             Source::File(file) => {
-                let mut file = file.lock().unwrap();
+                let mut file = lock(file);
                 file.seek(SeekFrom::Start(entry.offset))?;
                 file.read_exact(&mut buf)
                     .with_context(|| format!("reading chunk {}", self.grid.chunk_key(index)))?;

@@ -4,6 +4,7 @@ pub mod bench;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use rng::XorShift;
 pub use stats::Summary;

@@ -1,0 +1,63 @@
+//! Poison-recovering lock acquisition.
+//!
+//! The crate's shared state behind `Mutex`/`RwLock` (decoded-chunk LRU
+//! caches, codec registries, plan caches) is kept consistent by the
+//! holders themselves — every critical section either completes its
+//! bookkeeping or mutates nothing observable. A panic on one thread
+//! (say, a codec assertion in a worker) must therefore not poison the
+//! lock for every *other* thread: a concurrent read service would turn
+//! one bad chunk into a process-wide denial. These helpers take the
+//! guard out of a poisoned lock and carry on, which is the crate-wide
+//! policy for library paths (`.unwrap()` on locks is banned there by
+//! the `panic-policy` lint).
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// `Mutex::lock` that recovers the guard from a poisoned lock.
+pub fn lock<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `RwLock::read` that recovers the guard from a poisoned lock.
+pub fn read<T>(rwlock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    rwlock.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `RwLock::write` that recovers the guard from a poisoned lock.
+pub fn write<T>(rwlock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    rwlock.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn mutex_survives_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(7));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) = 8;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_survives_a_panicking_writer() {
+        let l = Arc::new(RwLock::new(1));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _guard = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*read(&l), 1);
+        *write(&l) = 2;
+        assert_eq!(*read(&l), 2);
+    }
+}

@@ -1,0 +1,256 @@
+//! Concurrency stress tests for the crate's shared mutable state: the
+//! process-wide FFT plan caches, the store's decoded-chunk LRU, the
+//! ordered-sink worker pool, and the trace collector's flush-on-thread-exit
+//! path.
+//!
+//! These tests are the designated workload for the ThreadSanitizer CI job
+//! (see `.github/workflows/ci.yml`): each one drives many OS threads
+//! through a shared structure hard enough that a missing acquire/release
+//! edge or an unlocked mutation shows up as a TSan report. Under plain
+//! `cargo test` they still assert the *logical* invariants — metric
+//! accounting, LRU budget, sink ordering, buffer flushing — so races that
+//! corrupt bookkeeping are caught even without a sanitizer.
+//!
+//! Every test serializes on [`stress_guard`]: they mutate process-global
+//! state (plan-cache budgets, telemetry counters, the trace collector)
+//! and would otherwise read each other's deltas.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use ffcz::data::synth::grf::GrfBuilder;
+use ffcz::data::Field;
+use ffcz::fourier::{
+    ndrplan_for, plan_for, rplan_for, set_plan_cache_budget, DEFAULT_PLAN_CACHE_BUDGET,
+};
+use ffcz::store::{
+    encode_store, extract_subarray, par_try_map_ordered_sink, Store, StoreWriteOptions,
+};
+use ffcz::telemetry;
+use ffcz::util::XorShift;
+
+/// Serializes tests that touch process-global state. Poison is irrelevant
+/// here (a failed test already failed); recover the guard and continue.
+fn stress_guard() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    GUARD
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn grf_3d(shape: &[usize], seed: u64) -> Field {
+    GrfBuilder::new(shape)
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(seed)
+        .build()
+}
+
+/// Hammer the real-FFT plan cache from many threads while the byte budget
+/// is small enough to force constant LRU eviction, then check that the
+/// hit/miss counters account for every single fetch and that the cache
+/// quiesces within budget.
+#[test]
+fn plan_cache_lru_consistent_under_thread_churn() {
+    let _guard = stress_guard();
+    // Mixed radix and prime (Bluestein) lengths so plans differ in size.
+    const SIZES: [usize; 8] = [96, 100, 101, 120, 144, 211, 240, 250];
+    const THREADS: usize = 8;
+    const ROUNDS: usize = 40;
+
+    set_plan_cache_budget(64 << 10); // tiny: a handful of plans at most
+    let before = telemetry::snapshot();
+    let fetches = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let fetches = &fetches;
+            scope.spawn(move || {
+                let mut rng = XorShift::new(0x5EED + t as u64);
+                for _ in 0..ROUNDS {
+                    let n = SIZES[(rng.next_f64() * SIZES.len() as f64) as usize % SIZES.len()];
+                    let plan = rplan_for(n);
+                    assert_eq!(plan.len(), n);
+                    fetches.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let after = telemetry::snapshot();
+
+    // Every fetch is exactly one hit or one miss — a lost update under
+    // contention breaks this equality.
+    let hits = after.counter_delta(&before, "fourier.plan_cache.rfft.hits");
+    let misses = after.counter_delta(&before, "fourier.plan_cache.rfft.misses");
+    assert_eq!(
+        hits + misses,
+        fetches.load(Ordering::Relaxed) as u64,
+        "hit/miss accounting lost fetches under contention"
+    );
+    assert!(misses >= 1, "distinct sizes must miss at least once");
+
+    // Quiesced cache respects the budget (the MRU plan is never evicted,
+    // so a single oversized plan may stand alone).
+    let bytes = after.gauge("fourier.plan_cache.rfft.bytes");
+    let entries = after.gauge("fourier.plan_cache.rfft.entries");
+    assert!(entries >= 1);
+    assert!(
+        bytes <= (64 << 10) || entries == 1,
+        "cache quiesced over budget: {bytes} bytes in {entries} entries"
+    );
+
+    // Second phase: all three caches at once (ndrplan_for nests rplan_for
+    // and plan_for), racing pure fetches — TSan fodder, logic asserted by
+    // the shape checks.
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            scope.spawn(move || {
+                for r in 0..12 {
+                    let shape = [4 + (t + r) % 5, 6 + r % 3, 8];
+                    let nd = ndrplan_for(&shape);
+                    assert_eq!(nd.shape(), &shape[..]);
+                    let c = plan_for(32 + (t * 7 + r) % 9);
+                    assert_eq!(c.len(), 32 + (t * 7 + r) % 9);
+                }
+            });
+        }
+    });
+
+    set_plan_cache_budget(DEFAULT_PLAN_CACHE_BUDGET);
+}
+
+/// Churn the store's decoded-chunk LRU from many readers at once with a
+/// budget that holds only ~2 of 27 chunks, comparing every window against
+/// a ground-truth full decompress.
+#[test]
+fn store_chunk_lru_churn_under_concurrent_read_region() {
+    let _guard = stress_guard();
+    let field = grf_3d(&[12, 10, 8], 99);
+    let spec = ffcz::codec::CodecChainSpec::ffcz(
+        "sz-like",
+        &ffcz::correction::FfczConfig::relative(1e-3, 1e-3),
+    );
+    let opts = StoreWriteOptions::new(&[5, 4, 3]).workers(3);
+    let (bytes, _, report) = encode_store(&field, &spec, &opts).unwrap();
+    assert!(report.all_chunks_ok);
+    let store = Store::from_bytes(bytes).unwrap();
+    let full = store.decompress_all(2).unwrap();
+
+    // Each decoded [5,4,3] chunk caches ≤ 480 bytes of f64s; 1000 bytes
+    // keeps ~2 of the 27 chunks resident, so readers evict constantly.
+    const BUDGET: usize = 1000;
+    store.set_cache_budget(BUDGET);
+
+    const THREADS: usize = 8;
+    const WINDOWS: usize = 15;
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let (store, field, full) = (&store, &field, &full);
+            scope.spawn(move || {
+                let mut rng = XorShift::new(0xCAFE + t as u64);
+                for _ in 0..WINDOWS {
+                    let mut origin = Vec::new();
+                    let mut shape = Vec::new();
+                    for &d in field.shape() {
+                        let o = (rng.next_f64() * d as f64) as usize % d;
+                        let max_len = d - o;
+                        let s = 1 + (rng.next_f64() * max_len as f64) as usize % max_len.max(1);
+                        origin.push(o);
+                        shape.push(s.min(max_len));
+                    }
+                    let region = store.read_region(&origin, &shape, 1).unwrap();
+                    let expect = extract_subarray(full.data(), full.shape(), &origin, &shape);
+                    assert_eq!(
+                        region.data(),
+                        &expect[..],
+                        "window {origin:?}+{shape:?} diverged under LRU churn"
+                    );
+                }
+            });
+        }
+    });
+
+    // Quiesced cache bookkeeping: within budget, and the hit/miss
+    // counters saw at least one decode per chunk the windows touched.
+    assert!(
+        store.cache_bytes() <= BUDGET,
+        "decoded-chunk LRU over budget after churn: {} bytes",
+        store.cache_bytes()
+    );
+    let touched = store.cache_hits() + store.cache_misses();
+    assert!(
+        touched >= THREADS * WINDOWS,
+        "every window decodes at least one chunk, saw only {touched} lookups"
+    );
+}
+
+/// Force the ordered sink to reorder: late indices finish first (their
+/// delay shrinks with the index), yet the sink must still observe strict
+/// index order for a byte stream that is identical to a sequential run.
+#[test]
+fn ordered_sink_stays_ordered_under_forced_reordering() {
+    let _guard = stress_guard();
+    const N: usize = 64;
+    for (workers, window) in [(4usize, 2usize), (8, 4)] {
+        let mut seen = Vec::with_capacity(N);
+        par_try_map_ordered_sink(
+            N,
+            workers,
+            window,
+            |i| {
+                // Invert completion order within each stripe of 8.
+                std::thread::sleep(Duration::from_micros(((8 - i % 8) * 300) as u64));
+                Ok(i * 3)
+            },
+            |i, v| {
+                seen.push((i, v));
+                Ok(())
+            },
+        )
+        .unwrap();
+        let expect: Vec<(usize, usize)> = (0..N).map(|i| (i, i * 3)).collect();
+        assert_eq!(seen, expect, "workers={workers} window={window}");
+    }
+}
+
+/// Spans buffered on a worker thread must reach the collector when the
+/// thread exits, even if an enclosing span is leaked and never closes
+/// (the thread-local buffer's `Drop` is the flush of last resort).
+#[test]
+fn trace_buffer_flushes_on_thread_exit() {
+    let _guard = stress_guard();
+    telemetry::trace::enable();
+    let _ = telemetry::trace::drain(); // discard other tests' leftovers
+
+    const THREADS: usize = 6;
+    const SPANS: usize = 10;
+    std::thread::scope(|scope| {
+        for _ in 0..THREADS {
+            scope.spawn(|| {
+                // Leak the outer span: the stack never empties, so the
+                // eager flush (on root-span close) never fires on this
+                // thread and only the exit flush can save the events.
+                let outer = telemetry::span("stress.trace.outer");
+                for _ in 0..SPANS {
+                    let _inner = telemetry::span("stress.trace.inner");
+                }
+                std::mem::forget(outer);
+            });
+        }
+    });
+
+    let events = telemetry::trace::drain();
+    telemetry::trace::disable();
+    let inner = events
+        .iter()
+        .filter(|e| e.name == "stress.trace.inner")
+        .count();
+    assert_eq!(
+        inner,
+        THREADS * SPANS,
+        "thread-exit flush dropped buffered spans"
+    );
+    // The leaked outer spans never closed, so they must not appear.
+    assert!(!events.iter().any(|e| e.name == "stress.trace.outer"));
+}

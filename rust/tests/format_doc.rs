@@ -26,27 +26,14 @@ fn format_doc() -> String {
     std::fs::read_to_string(path).expect("docs/FORMAT.md is part of the repository")
 }
 
-/// Extract the § 1.2 constants table: the only rows in the document with
-/// exactly two backtick-quoted cells (`| `NAME` | `VALUE` |`).
+/// Extract the § 1.2 constants table through the `xtask` parser — the
+/// same code the `format-constants` lint reads the document with, so
+/// this test and the lint can never disagree about what the table says.
 fn doc_constants(doc: &str) -> HashMap<String, String> {
-    let mut out = HashMap::new();
-    for line in doc.lines() {
-        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
-        // "| `A` | `B` |" splits into ["", "`A`", "`B`", ""].
-        if cells.len() == 4
-            && cells[1].len() > 2
-            && cells[1].starts_with('`')
-            && cells[1].ends_with('`')
-            && cells[2].starts_with('`')
-            && cells[2].ends_with('`')
-        {
-            out.insert(
-                cells[1].trim_matches('`').to_string(),
-                cells[2].trim_matches('`').to_string(),
-            );
-        }
-    }
-    out
+    xtask::docparse::format_constants(doc)
+        .into_iter()
+        .map(|c| (c.name, c.value))
+        .collect()
 }
 
 /// Unsigned LEB128 as specified in § 1.1 (independent of
@@ -133,6 +120,7 @@ fn doc_constants_match_the_implementation() {
     let check = u32::from_str_radix(c["CRC32_CHECK"].trim_start_matches("0x"), 16).unwrap();
     assert_eq!(doc_crc32(b"123456789"), check);
     assert_eq!(ffcz::encoding::crc32(b"123456789"), check);
+    assert_eq!(ffcz::encoding::CRC32_CHECK, check);
     // Varint example quoted in § 1.1: 300 → AC 02.
     let mut buf = Vec::new();
     doc_varint_write(&mut buf, 300);

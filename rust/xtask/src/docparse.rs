@@ -1,0 +1,261 @@
+//! Parsers for the two normative documents the lint checks code
+//! against: the `docs/FORMAT.md` § 1.2 constants table and the
+//! `docs/TELEMETRY.md` span/metric glossaries. `rust/tests/format_doc.rs`
+//! consumes [`format_constants`] too, so the doc-derived values have a
+//! single source of truth.
+
+/// One row of the FORMAT.md § 1.2 constants table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DocConstant {
+    pub name: String,
+    pub value: String,
+    /// 1-based line in the document.
+    pub line: usize,
+}
+
+/// Extract the § 1.2 constants table: the only rows in the document
+/// with exactly two backtick-quoted cells (`| \`NAME\` | \`VALUE\` |`).
+pub fn format_constants(doc: &str) -> Vec<DocConstant> {
+    let mut out = Vec::new();
+    for (idx, line) in doc.lines().enumerate() {
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        // "| `A` | `B` |" splits into ["", "`A`", "`B`", ""].
+        if cells.len() == 4
+            && cells[1].len() > 2
+            && cells[1].starts_with('`')
+            && cells[1].ends_with('`')
+            && cells[2].len() > 2
+            && cells[2].starts_with('`')
+            && cells[2].ends_with('`')
+        {
+            out.push(DocConstant {
+                name: cells[1].trim_matches('`').to_string(),
+                value: cells[2].trim_matches('`').to_string(),
+                line: idx + 1,
+            });
+        }
+    }
+    out
+}
+
+/// One documented telemetry name, fully expanded.
+#[derive(Debug, Clone)]
+pub struct DocName {
+    pub name: String,
+    /// 1-based line of the glossary row it expanded from.
+    pub line: usize,
+}
+
+/// The TELEMETRY.md glossaries: span names and metric names, with
+/// `{a,b,c}` brace sets and trailing `x/y/z` alternatives expanded.
+#[derive(Debug, Default)]
+pub struct TelemetryGlossary {
+    pub spans: Vec<DocName>,
+    pub metrics: Vec<DocName>,
+}
+
+impl TelemetryGlossary {
+    pub fn all(&self) -> impl Iterator<Item = &DocName> {
+        self.spans.iter().chain(self.metrics.iter())
+    }
+}
+
+/// Parse the two glossary tables. A table row belongs to whichever
+/// glossary the nearest preceding heading names; every backticked token
+/// in the row's first cell is a (possibly compound) name.
+pub fn telemetry_glossary(doc: &str) -> TelemetryGlossary {
+    let mut out = TelemetryGlossary::default();
+    let mut section = Section::None;
+    for (idx, line) in doc.lines().enumerate() {
+        if line.starts_with('#') {
+            section = if line.contains("Span-name glossary") {
+                Section::Spans
+            } else if line.contains("Metric-name glossary") {
+                Section::Metrics
+            } else {
+                Section::None
+            };
+            continue;
+        }
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        let dest = match section {
+            Section::Spans => &mut out.spans,
+            Section::Metrics => &mut out.metrics,
+            Section::None => continue,
+        };
+        let first_cell = line.trim_start().trim_start_matches('|');
+        let first_cell = first_cell.split('|').next().unwrap_or("");
+        for token in backticked(first_cell) {
+            for name in expand_name(&token) {
+                dest.push(DocName {
+                    name,
+                    line: idx + 1,
+                });
+            }
+        }
+    }
+    out
+}
+
+enum Section {
+    None,
+    Spans,
+    Metrics,
+}
+
+/// All `` `…` `` spans in a table cell.
+fn backticked(cell: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = cell;
+    while let Some(open) = rest.find('`') {
+        let after = &rest[open + 1..];
+        let Some(close) = after.find('`') else { break };
+        if close > 0 {
+            out.push(after[..close].to_string());
+        }
+        rest = &after[close + 1..];
+    }
+    out
+}
+
+/// Expand one glossary token into concrete names: first `{a,b,c}`
+/// brace sets (`diag.messages.{error,warn}` → two names), then
+/// `prefix.x/y/z` slash alternatives on the final segment
+/// (`….fft.hits/misses` → `….fft.hits`, `….fft.misses`).
+pub fn expand_name(token: &str) -> Vec<String> {
+    expand_braces(token)
+        .iter()
+        .flat_map(|n| expand_slashes(n))
+        .collect()
+}
+
+fn expand_braces(s: &str) -> Vec<String> {
+    if let Some(open) = s.find('{') {
+        if let Some(rel) = s[open..].find('}') {
+            let close = open + rel;
+            let inner = &s[open + 1..close];
+            if inner.contains(',') {
+                let mut out = Vec::new();
+                for alt in inner.split(',') {
+                    let expanded = format!("{}{}{}", &s[..open], alt.trim(), &s[close + 1..]);
+                    out.extend(expand_braces(&expanded));
+                }
+                return out;
+            }
+        }
+    }
+    vec![s.to_string()]
+}
+
+fn expand_slashes(s: &str) -> Vec<String> {
+    if !s.contains('/') {
+        return vec![s.to_string()];
+    }
+    let mut parts = s.split('/');
+    let head = parts.next().unwrap_or("");
+    let prefix = match head.rfind('.') {
+        Some(dot) => &head[..=dot],
+        None => "",
+    };
+    let mut out = vec![head.to_string()];
+    for alt in parts {
+        out.push(format!("{prefix}{alt}"));
+    }
+    out
+}
+
+/// Shape filter for concrete telemetry names: lowercase/digit/underscore
+/// segments joined by dots, at least two segments, at least one letter.
+/// This is what separates a metric name from an ordinary string literal
+/// that happens to sit on a telemetry-calling line.
+pub fn is_metric_shaped(s: &str) -> bool {
+    let mut has_alpha = false;
+    let mut segments = 0;
+    for seg in s.split('.') {
+        if seg.is_empty() {
+            return false;
+        }
+        for c in seg.chars() {
+            if c.is_ascii_lowercase() {
+                has_alpha = true;
+            } else if !c.is_ascii_digit() && c != '_' {
+                return false;
+            }
+        }
+        segments += 1;
+    }
+    segments >= 2 && has_alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_table_rows_parse_with_lines() {
+        let doc = "intro\n| constant | value |\n|---|---|\n| `MAGIC` | `ABCD` |\n| `VER` | `2` |\nnot | a | row\n";
+        let rows = format_constants(doc);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "MAGIC");
+        assert_eq!(rows[0].value, "ABCD");
+        assert_eq!(rows[0].line, 4);
+        assert_eq!(rows[1].name, "VER");
+        assert_eq!(rows[1].value, "2");
+    }
+
+    #[test]
+    fn glossaries_split_by_heading_and_expand() {
+        let doc = "\
+### Span-name glossary
+
+| span | where |
+|---|---|
+| `a.b` | x |
+| `p.run` / `p.store` | y |
+
+## Metric-name glossary
+
+| name | kind |
+|---|---|
+| `m.{x,y}.hits/misses` | C |
+
+## Other
+
+| `ignored.name` | z |
+";
+        let g = telemetry_glossary(doc);
+        let spans: Vec<&str> = g.spans.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(spans, ["a.b", "p.run", "p.store"]);
+        let metrics: Vec<&str> = g.metrics.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(metrics, ["m.x.hits", "m.x.misses", "m.y.hits", "m.y.misses"]);
+    }
+
+    #[test]
+    fn expansion_covers_braces_and_slash_alternatives() {
+        assert_eq!(
+            expand_name("fourier.plan_cache.{fft,rfft}.hits/misses/evictions"),
+            [
+                "fourier.plan_cache.fft.hits",
+                "fourier.plan_cache.fft.misses",
+                "fourier.plan_cache.fft.evictions",
+                "fourier.plan_cache.rfft.hits",
+                "fourier.plan_cache.rfft.misses",
+                "fourier.plan_cache.rfft.evictions",
+            ]
+        );
+        assert_eq!(expand_name("plain.name"), ["plain.name"]);
+    }
+
+    #[test]
+    fn metric_shape_filter() {
+        assert!(is_metric_shaped("store.encode.chunks"));
+        assert!(is_metric_shaped("store.chunk.pocs_correct"));
+        assert!(!is_metric_shaped("no_dots"));
+        assert!(!is_metric_shaped("Has.Upper"));
+        assert!(!is_metric_shaped("spaced out.name"));
+        assert!(!is_metric_shaped("trailing.dot."));
+        assert!(!is_metric_shaped("1.5"));
+    }
+}

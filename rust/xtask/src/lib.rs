@@ -1,0 +1,335 @@
+//! `ffcz-lint`: repo-invariant static analysis for the ffcz crate.
+//!
+//! A dependency-free line/token scanner (no `syn`) over `rust/src/`
+//! enforcing the repo-specific rules described in `docs/ANALYSIS.md`:
+//!
+//! * `telemetry-drift` (L1) — telemetry names in code ↔ the
+//!   `docs/TELEMETRY.md` glossaries, bidirectionally;
+//! * `format-constants` (L2) — `const` values ↔ the `docs/FORMAT.md`
+//!   § 1.2 normative table;
+//! * `unsafe-audit` (L3) — every `unsafe` site carries `// SAFETY:`,
+//!   plus a machine-readable inventory of all sites;
+//! * `diag-hygiene` (L4) — `println!`/`eprintln!` only in
+//!   `telemetry/diag.rs` and the checked-in allowlist;
+//! * `panic-policy` (L5) — `.unwrap()`/`.expect(` in decode/read paths
+//!   ratcheted against `rust/lint/panic_allow.txt`.
+//!
+//! Findings are always errors (`cargo run -p xtask -- lint` exits
+//! nonzero on any); suppress a single line with
+//! `// ffcz-lint: allow(<rule>)`.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub mod docparse;
+pub mod rules;
+pub mod scan;
+
+use scan::SourceFile;
+
+/// One lint finding.
+#[derive(Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-root-relative path the finding anchors to (a source file,
+    /// a doc, or an allowlist).
+    pub path: String,
+    /// 1-based line, 0 when the finding has no line anchor.
+    pub line: usize,
+    pub message: String,
+}
+
+/// One `unsafe` site from the L3 inventory.
+#[derive(Debug)]
+pub struct UnsafeSite {
+    pub path: String,
+    pub line: usize,
+    /// `"block"`, `"fn"`, or `"impl"`.
+    pub kind: String,
+    pub has_safety: bool,
+}
+
+/// Routes rule output and applies per-line suppressions.
+#[derive(Default)]
+pub struct Collector {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Collector::default()
+    }
+
+    /// Emit a finding anchored in a scanned source file, honoring its
+    /// `// ffcz-lint: allow(…)` suppressions.
+    pub fn emit(&mut self, file: &SourceFile, rule: &'static str, line: usize, message: String) {
+        if file.is_suppressed(rule, line) {
+            self.suppressed += 1;
+        } else {
+            self.findings.push(Finding {
+                rule,
+                path: file.path.clone(),
+                line,
+                message,
+            });
+        }
+    }
+
+    /// Emit a finding anchored somewhere suppressions cannot reach (a
+    /// doc table row, an allowlist row, a whole file).
+    pub fn emit_at(&mut self, rule: &'static str, path: &str, line: usize, message: String) {
+        self.findings.push(Finding {
+            rule,
+            path: path.to_string(),
+            line,
+            message,
+        });
+    }
+}
+
+/// The full lint result.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Stable JSON for CI: findings sorted by (path, line, rule), the
+    /// unsafe inventory by (path, line), all strings escaped.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n    {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+                json_escape(f.rule),
+                json_escape(&f.path),
+                f.line,
+                json_escape(&f.message)
+            );
+        }
+        s.push_str(if self.findings.is_empty() { "],\n" } else { "\n  ],\n" });
+        s.push_str("  \"unsafe_inventory\": [");
+        for (i, u) in self.unsafe_sites.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n    {{\"path\": \"{}\", \"line\": {}, \"kind\": \"{}\", \"has_safety\": {}}}",
+                json_escape(&u.path),
+                u.line,
+                json_escape(&u.kind),
+                u.has_safety
+            );
+        }
+        s.push_str(if self.unsafe_sites.is_empty() { "],\n" } else { "\n  ],\n" });
+        let _ = write!(
+            s,
+            "  \"summary\": {{\"files_scanned\": {}, \"findings\": {}, \"suppressed\": {}, \"unsafe_sites\": {}}}\n}}",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressed,
+            self.unsafe_sites.len()
+        );
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Every `.rs` file under `rust/src/`, sorted for determinism.
+fn rust_sources(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let src = root.join("rust").join("src");
+    let mut out = Vec::new();
+    let mut stack = vec![src.clone()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            fs::read_dir(&dir).map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+        for entry in entries {
+            let path = entry.map_err(|e| format!("readdir {}: {e}", dir.display()))?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(format!("no Rust sources under {}", src.display()));
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Run every rule against the repo at `root` (the directory holding
+/// `rust/` and `docs/`).
+pub fn run_lint(root: &Path) -> Result<Report, String> {
+    let mut col = Collector::new();
+    let mut files = Vec::new();
+    for path in rust_sources(root)? {
+        let text =
+            fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        files.push(scan::scan_str(&rel_path(root, &path), &text));
+    }
+
+    match fs::read_to_string(root.join("docs/TELEMETRY.md")) {
+        Ok(doc) => {
+            let glossary = docparse::telemetry_glossary(&doc);
+            if glossary.spans.is_empty() || glossary.metrics.is_empty() {
+                col.emit_at(
+                    rules::LINT_CONFIG,
+                    "docs/TELEMETRY.md",
+                    0,
+                    "span/metric glossary tables not found (did a heading change?)".to_string(),
+                );
+            } else {
+                rules::telemetry_drift(&files, &glossary, "docs/TELEMETRY.md", &mut col);
+            }
+        }
+        Err(e) => col.emit_at(
+            rules::LINT_CONFIG,
+            "docs/TELEMETRY.md",
+            0,
+            format!("cannot read the telemetry glossary: {e}"),
+        ),
+    }
+
+    match fs::read_to_string(root.join("docs/FORMAT.md")) {
+        Ok(doc) => {
+            let rows = docparse::format_constants(&doc);
+            if rows.is_empty() {
+                col.emit_at(
+                    rules::LINT_CONFIG,
+                    "docs/FORMAT.md",
+                    0,
+                    "§ 1.2 constants table not found".to_string(),
+                );
+            } else {
+                rules::format_constants_rule(&files, &rows, "docs/FORMAT.md", &mut col);
+            }
+        }
+        Err(e) => col.emit_at(
+            rules::LINT_CONFIG,
+            "docs/FORMAT.md",
+            0,
+            format!("cannot read the format spec: {e}"),
+        ),
+    }
+
+    let mut unsafe_sites = Vec::new();
+    rules::unsafe_audit(&files, &mut col, &mut unsafe_sites);
+
+    match fs::read_to_string(root.join("rust/lint/print_allow.txt")) {
+        Ok(text) => {
+            let allow = rules::PathAllowlist::parse(&text);
+            rules::diag_hygiene(&files, &allow, &mut col);
+        }
+        Err(e) => col.emit_at(
+            rules::LINT_CONFIG,
+            "rust/lint/print_allow.txt",
+            0,
+            format!("cannot read the print allowlist: {e}"),
+        ),
+    }
+
+    let panic_allow_path = "rust/lint/panic_allow.txt";
+    let panic_allow = match fs::read_to_string(root.join(panic_allow_path)) {
+        Ok(text) => rules::parse_panic_allowlist(&text, panic_allow_path, &mut col),
+        Err(e) => {
+            col.emit_at(
+                rules::LINT_CONFIG,
+                panic_allow_path,
+                0,
+                format!("cannot read the panic allowlist: {e}"),
+            );
+            Vec::new()
+        }
+    };
+    rules::panic_policy(&files, &panic_allow, panic_allow_path, &mut col);
+
+    col.findings
+        .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    unsafe_sites.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(Report {
+        findings: col.findings,
+        suppressed: col.suppressed,
+        unsafe_sites,
+        files_scanned: files.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_output_is_escaped_and_shaped() {
+        let report = Report {
+            findings: vec![Finding {
+                rule: "panic-policy",
+                path: "a\"b.rs".to_string(),
+                line: 3,
+                message: "uses \\ and \"quotes\"".to_string(),
+            }],
+            suppressed: 1,
+            unsafe_sites: vec![UnsafeSite {
+                path: "u.rs".to_string(),
+                line: 9,
+                kind: "block".to_string(),
+                has_safety: true,
+            }],
+            files_scanned: 2,
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"a\\\"b.rs\""), "{json}");
+        assert!(json.contains("uses \\\\ and \\\"quotes\\\""), "{json}");
+        assert!(json.contains("\"has_safety\": true"), "{json}");
+        assert!(json.contains("\"files_scanned\": 2"), "{json}");
+        // Shape check with the crate's own hand-rolled consumer style:
+        // balanced braces/brackets, no raw control characters.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn empty_report_is_valid_json_too() {
+        let report = Report {
+            findings: Vec::new(),
+            suppressed: 0,
+            unsafe_sites: Vec::new(),
+            files_scanned: 0,
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"findings\": []"), "{json}");
+        assert!(json.contains("\"unsafe_inventory\": []"), "{json}");
+    }
+}

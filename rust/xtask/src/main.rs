@@ -1,0 +1,79 @@
+//! `cargo run -p xtask -- lint [--json] [--root DIR]`
+//!
+//! Runs the ffcz-lint rules (see `docs/ANALYSIS.md`) over the repo and
+//! exits nonzero on any finding — findings are always errors, there is
+//! no warning mode. `--json` prints the stable machine-readable report
+//! instead of the human rendering.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo run -p xtask -- lint [--json] [--root DIR]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let Some(command) = args.next() else {
+        return usage();
+    };
+    if command != "lint" {
+        eprintln!("unknown command `{command}`");
+        return usage();
+    }
+    let mut json = false;
+    // The xtask manifest lives at <repo>/rust/xtask, so the repo root
+    // is two levels up; `--root` overrides for out-of-tree checkouts.
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    root.pop();
+    root.pop();
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => return usage(),
+            },
+            other => {
+                eprintln!("unknown flag `{other}`");
+                return usage();
+            }
+        }
+    }
+
+    let report = match xtask::run_lint(&root) {
+        Ok(report) => report,
+        Err(e) => {
+            eprintln!("ffcz-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        for f in &report.findings {
+            if f.line > 0 {
+                println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message);
+            } else {
+                println!("{}: [{}] {}", f.path, f.rule, f.message);
+            }
+        }
+        let audited = report.unsafe_sites.len();
+        let commented = report.unsafe_sites.iter().filter(|s| s.has_safety).count();
+        println!(
+            "ffcz-lint: {} file(s), {} finding(s), {} suppressed, {}/{} unsafe site(s) documented",
+            report.files_scanned,
+            report.findings.len(),
+            report.suppressed,
+            commented,
+            audited
+        );
+    }
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,717 @@
+//! The ffcz-lint rules. Every rule consumes the [`SourceFile`] line
+//! model plus whatever normative input it checks against (a doc
+//! glossary, a constants table, a checked-in allowlist) and reports
+//! through the [`Collector`], which routes per-line suppressions.
+
+use crate::docparse::{self, DocConstant, TelemetryGlossary};
+use crate::scan::{find_token, has_token, SourceFile};
+use crate::{Collector, UnsafeSite};
+
+/// L1 — metric/span names in code ↔ `docs/TELEMETRY.md` glossaries.
+pub const TELEMETRY_DRIFT: &str = "telemetry-drift";
+/// L2 — format constants ↔ `docs/FORMAT.md` § 1.2 table.
+pub const FORMAT_CONSTANTS: &str = "format-constants";
+/// L3 — every `unsafe` site carries an adjacent `// SAFETY:` comment.
+pub const UNSAFE_AUDIT: &str = "unsafe-audit";
+/// L4 — no `println!`/`eprintln!` outside `telemetry/diag.rs`.
+pub const DIAG_HYGIENE: &str = "diag-hygiene";
+/// L5 — no `unwrap()`/`expect()` in library decode/read paths.
+pub const PANIC_POLICY: &str = "panic-policy";
+/// Broken lint inputs (missing docs, malformed allowlists).
+pub const LINT_CONFIG: &str = "lint-config";
+
+// ---------------------------------------------------------------- L1 --
+
+const TELEMETRY_CALLS: [&str; 5] = [
+    "counter(",
+    "gauge(",
+    "histogram(",
+    "span(",
+    "span_with_parent(",
+];
+
+/// L1: every telemetry name constructed in code must appear in the
+/// glossaries, and every documented name must be constructed somewhere.
+/// Names built with `format!` become segment patterns whose `{…}`
+/// segments match any glossary segment.
+pub fn telemetry_drift(
+    files: &[SourceFile],
+    glossary: &TelemetryGlossary,
+    doc_path: &str,
+    out: &mut Collector,
+) {
+    // (name or pattern, file index, line)
+    let mut literals: Vec<(String, usize, usize)> = Vec::new();
+    let mut patterns: Vec<(String, usize, usize)> = Vec::new();
+    for (fi, file) in files.iter().enumerate() {
+        for line in &file.lines {
+            if line.in_test || line.strings.is_empty() {
+                continue;
+            }
+            let call = TELEMETRY_CALLS.iter().any(|t| has_token(&line.code, t));
+            let fmt = has_token(&line.code, "format!(");
+            if !call && !fmt {
+                continue;
+            }
+            for s in &line.strings {
+                if call && docparse::is_metric_shaped(s) {
+                    literals.push((s.clone(), fi, line.number));
+                } else if fmt && s.contains('{') {
+                    if is_pattern_shaped(s) {
+                        patterns.push((s.clone(), fi, line.number));
+                    }
+                } else if fmt && docparse::is_metric_shaped(s) {
+                    literals.push((s.clone(), fi, line.number));
+                }
+            }
+        }
+    }
+    let documented: Vec<&str> = glossary.all().map(|d| d.name.as_str()).collect();
+    for (name, fi, line) in &literals {
+        if !documented.iter().any(|d| d == name) {
+            out.emit(
+                &files[*fi],
+                TELEMETRY_DRIFT,
+                *line,
+                format!("telemetry name `{name}` is not in the {doc_path} glossary"),
+            );
+        }
+    }
+    for (pat, fi, line) in &patterns {
+        if !documented.iter().any(|d| pattern_matches(pat, d)) {
+            out.emit(
+                &files[*fi],
+                TELEMETRY_DRIFT,
+                *line,
+                format!("telemetry name pattern `{pat}` matches nothing in the {doc_path} glossary"),
+            );
+        }
+    }
+    for doc in glossary.all() {
+        let covered = literals.iter().any(|(n, ..)| n == &doc.name)
+            || patterns.iter().any(|(p, ..)| pattern_matches(p, &doc.name));
+        if !covered {
+            out.emit_at(
+                TELEMETRY_DRIFT,
+                doc_path,
+                doc.line,
+                format!(
+                    "documented telemetry name `{}` is never constructed by the code",
+                    doc.name
+                ),
+            );
+        }
+    }
+}
+
+/// A `format!` literal that plausibly builds a telemetry name: dotted
+/// lowercase segments where `{…}` placeholders are whole segments, at
+/// least three segments, at least two of them literal words. Filters
+/// out ordinary interpolations like `"{}.ffcz"`.
+fn is_pattern_shaped(s: &str) -> bool {
+    let mut literal_words = 0;
+    let mut segments = 0;
+    for seg in s.split('.') {
+        if seg.is_empty() {
+            return false;
+        }
+        segments += 1;
+        let placeholder = seg.starts_with('{') && seg.ends_with('}') && seg.len() >= 2;
+        let body = if placeholder { &seg[1..seg.len() - 1] } else { seg };
+        if !body
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            return false;
+        }
+        if !placeholder && body.chars().any(|c| c.is_ascii_lowercase()) {
+            literal_words += 1;
+        }
+    }
+    segments >= 3 && literal_words >= 2
+}
+
+/// Segment-wise match of a `format!` pattern against a concrete name:
+/// `{…}` segments are wildcards, everything else is literal.
+fn pattern_matches(pat: &str, name: &str) -> bool {
+    let ps: Vec<&str> = pat.split('.').collect();
+    let ns: Vec<&str> = name.split('.').collect();
+    ps.len() == ns.len()
+        && ps
+            .iter()
+            .zip(&ns)
+            .all(|(p, n)| (p.starts_with('{') && p.ends_with('}')) || p == n)
+}
+
+// ---------------------------------------------------------------- L2 --
+
+/// L2: every row of the FORMAT.md § 1.2 constants table must have a
+/// same-named `const` in the code with an equal value (numeric values
+/// compared after radix normalization, magics as byte strings).
+pub fn format_constants_rule(
+    files: &[SourceFile],
+    rows: &[DocConstant],
+    doc_path: &str,
+    out: &mut Collector,
+) {
+    // (name, code value text, string value if the literal was a string,
+    //  file index, line)
+    let mut consts: Vec<(String, String, Option<String>, usize, usize)> = Vec::new();
+    for (fi, file) in files.iter().enumerate() {
+        for line in &file.lines {
+            if line.in_test {
+                continue;
+            }
+            for at in find_token(&line.code, "const ") {
+                if let Some((name, value)) = parse_const(&line.code[at..]) {
+                    let string = if value == "b\"\"" || value == "\"\"" {
+                        line.strings.first().cloned()
+                    } else {
+                        None
+                    };
+                    consts.push((name, value, string, fi, line.number));
+                }
+            }
+        }
+    }
+    for row in rows {
+        let hits: Vec<_> = consts.iter().filter(|(n, ..)| n == &row.name).collect();
+        if hits.is_empty() {
+            out.emit_at(
+                FORMAT_CONSTANTS,
+                doc_path,
+                row.line,
+                format!(
+                    "documented constant `{}` has no `const {}` definition in the code",
+                    row.name, row.name
+                ),
+            );
+            continue;
+        }
+        for (name, value, string, fi, line) in hits {
+            if !values_equal(&row.value, value, string.as_deref()) {
+                out.emit(
+                    &files[*fi],
+                    FORMAT_CONSTANTS,
+                    *line,
+                    format!(
+                        "`const {name}` is `{value}` but {doc_path} documents `{}`",
+                        row.value
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Parse `const NAME: TYPE = VALUE;` from code starting at `const `.
+/// Only SCREAMING_CASE names count (skips `const fn` and const
+/// generics, which have no `= …;` of their own).
+fn parse_const(code: &str) -> Option<(String, String)> {
+    let rest = code.strip_prefix("const ")?;
+    let name: String = rest
+        .trim_start()
+        .chars()
+        .take_while(|&c| crate::scan::is_word(c))
+        .collect();
+    if name.is_empty() || !name.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_') {
+        return None;
+    }
+    let after_colon = rest.find(':')?;
+    let eq = rest[after_colon..].find('=')? + after_colon;
+    let semi = rest[eq..].find(';')? + eq;
+    Some((name, rest[eq + 1..semi].trim().to_string()))
+}
+
+fn values_equal(doc: &str, code_value: &str, code_string: Option<&str>) -> bool {
+    if let Some(s) = code_string {
+        return s == doc;
+    }
+    match (parse_int(doc), parse_int(code_value)) {
+        (Some(a), Some(b)) => a == b,
+        _ => doc == code_value,
+    }
+}
+
+/// Radix-normalizing integer parse: `0x01` == `0b0000_0001` == `1`,
+/// underscores and type suffixes stripped.
+fn parse_int(s: &str) -> Option<u128> {
+    let mut t: String = s.trim().chars().filter(|&c| c != '_').collect();
+    for suffix in [
+        "usize", "u128", "u64", "u32", "u16", "u8", "isize", "i128", "i64", "i32", "i16", "i8",
+    ] {
+        if let Some(head) = t.strip_suffix(suffix) {
+            if head.chars().next_back().is_some_and(|c| c.is_ascii_hexdigit()) {
+                t = head.to_string();
+            }
+            break;
+        }
+    }
+    let (digits, radix) = if let Some(h) = t.strip_prefix("0x") {
+        (h.to_string(), 16)
+    } else if let Some(b) = t.strip_prefix("0b") {
+        (b.to_string(), 2)
+    } else if let Some(o) = t.strip_prefix("0o") {
+        (o.to_string(), 8)
+    } else {
+        (t, 10)
+    };
+    if digits.is_empty() {
+        return None;
+    }
+    u128::from_str_radix(&digits, radix).ok()
+}
+
+// ---------------------------------------------------------------- L3 --
+
+/// L3: every `unsafe` block/fn/impl needs an adjacent `// SAFETY:`
+/// comment (or a `# Safety` doc section directly above). Emits the
+/// full inventory of unsafe sites either way.
+pub fn unsafe_audit(files: &[SourceFile], out: &mut Collector, inventory: &mut Vec<UnsafeSite>) {
+    for file in files {
+        for (li, line) in file.lines.iter().enumerate() {
+            if line.in_test || !has_token(&line.code, "unsafe") {
+                continue;
+            }
+            let kind = if has_token(&line.code, "unsafe impl") {
+                "impl"
+            } else if has_token(&line.code, "unsafe fn") {
+                "fn"
+            } else {
+                "block"
+            };
+            let has_safety = safety_nearby(file, li);
+            inventory.push(UnsafeSite {
+                path: file.path.clone(),
+                line: line.number,
+                kind: kind.to_string(),
+                has_safety,
+            });
+            if !has_safety {
+                out.emit(
+                    file,
+                    UNSAFE_AUDIT,
+                    line.number,
+                    format!("`unsafe` {kind} without an adjacent `// SAFETY:` comment"),
+                );
+            }
+        }
+    }
+}
+
+/// A SAFETY comment counts when it sits on the unsafe line itself or on
+/// a directly preceding run of comment/attribute/blank lines.
+fn safety_nearby(file: &SourceFile, li: usize) -> bool {
+    let has = |idx: usize| {
+        let c = &file.lines[idx].comment;
+        c.contains("SAFETY:") || c.contains("# Safety")
+    };
+    if has(li) {
+        return true;
+    }
+    let mut k = li;
+    while k > 0 {
+        k -= 1;
+        let code = file.lines[k].code.trim();
+        if !(code.is_empty() || code.starts_with("#[")) {
+            return false;
+        }
+        if has(k) {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------- L4 --
+
+/// File/dir-prefix allowlist (entries ending in `/` match as prefixes).
+pub struct PathAllowlist {
+    entries: Vec<String>,
+}
+
+impl PathAllowlist {
+    pub fn parse(text: &str) -> Self {
+        let entries = text
+            .lines()
+            .map(|l| l.split('#').next().unwrap_or("").trim().to_string())
+            .filter(|l| !l.is_empty())
+            .collect();
+        PathAllowlist { entries }
+    }
+
+    pub fn matches(&self, path: &str) -> bool {
+        self.entries
+            .iter()
+            .any(|e| if e.ends_with('/') { path.starts_with(e.as_str()) } else { path == e })
+    }
+}
+
+/// L4: `println!`/`eprintln!` are reserved for `telemetry/diag.rs` and
+/// the explicit allowlist (the CLI binary and experiment drivers).
+pub fn diag_hygiene(files: &[SourceFile], allow: &PathAllowlist, out: &mut Collector) {
+    for file in files {
+        if file.path == "rust/src/telemetry/diag.rs" || allow.matches(&file.path) {
+            continue;
+        }
+        for line in &file.lines {
+            if line.in_test {
+                continue;
+            }
+            for tok in ["println!", "eprintln!"] {
+                if has_token(&line.code, tok) {
+                    out.emit(
+                        file,
+                        DIAG_HYGIENE,
+                        line.number,
+                        format!(
+                            "`{tok}` outside telemetry/diag.rs — route through telemetry::diag \
+                             or add the file to rust/lint/print_allow.txt"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L5 --
+
+/// The library decode/read surface the panic policy covers.
+const PANIC_SCOPE_DIRS: [&str; 5] = [
+    "rust/src/store/",
+    "rust/src/codec/",
+    "rust/src/correction/",
+    "rust/src/encoding/",
+    "rust/src/compressors/",
+];
+const PANIC_SCOPE_FILES: [&str; 1] = ["rust/src/data/io.rs"];
+
+pub fn in_panic_scope(path: &str) -> bool {
+    PANIC_SCOPE_DIRS.iter().any(|d| path.starts_with(d))
+        || PANIC_SCOPE_FILES.iter().any(|f| path == *f)
+}
+
+/// One `path count` row of `rust/lint/panic_allow.txt`.
+pub struct PanicAllowEntry {
+    pub path: String,
+    pub count: usize,
+    /// 1-based line in the allowlist file.
+    pub line: usize,
+}
+
+pub fn parse_panic_allowlist(
+    text: &str,
+    allow_path: &str,
+    out: &mut Collector,
+) -> Vec<PanicAllowEntry> {
+    let mut entries = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(path), Some(count), None) = (it.next(), it.next(), it.next()) else {
+            out.emit_at(
+                LINT_CONFIG,
+                allow_path,
+                idx + 1,
+                format!("malformed allowlist row `{raw}` (expected `path count`)"),
+            );
+            continue;
+        };
+        let Ok(count) = count.parse::<usize>() else {
+            out.emit_at(
+                LINT_CONFIG,
+                allow_path,
+                idx + 1,
+                format!("malformed allowlist count in `{raw}`"),
+            );
+            continue;
+        };
+        entries.push(PanicAllowEntry {
+            path: path.to_string(),
+            count,
+            line: idx + 1,
+        });
+    }
+    entries
+}
+
+/// L5: count `.unwrap()` / `.expect(` occurrences per in-scope file and
+/// ratchet them against the checked-in allowlist — more than allowed is
+/// a violation, fewer is a stale entry, so every regression and every
+/// improvement shows up as a diff.
+pub fn panic_policy(
+    files: &[SourceFile],
+    allow: &[PanicAllowEntry],
+    allow_path: &str,
+    out: &mut Collector,
+) {
+    for file in files {
+        if !in_panic_scope(&file.path) {
+            continue;
+        }
+        let mut sites: Vec<usize> = Vec::new();
+        for line in &file.lines {
+            if line.in_test {
+                continue;
+            }
+            for tok in [".unwrap()", ".expect("] {
+                for _ in find_token(&line.code, tok) {
+                    if file.is_suppressed(PANIC_POLICY, line.number) {
+                        out.suppressed += 1;
+                    } else {
+                        sites.push(line.number);
+                    }
+                }
+            }
+        }
+        let allowed = allow.iter().find(|e| e.path == file.path);
+        let budget = allowed.map_or(0, |e| e.count);
+        if sites.len() > budget {
+            out.emit_at(
+                PANIC_POLICY,
+                &file.path,
+                sites[0],
+                format!(
+                    "{} unwrap()/expect() call(s) in a decode/read path (lines {:?}) but {} \
+                     allows {budget} — return Result errors instead, or raise the allowlist \
+                     entry with justification",
+                    sites.len(),
+                    sites,
+                    allow_path,
+                ),
+            );
+        } else if sites.len() < budget {
+            let entry = allowed.expect("budget > 0 implies an entry");
+            out.emit_at(
+                PANIC_POLICY,
+                allow_path,
+                entry.line,
+                format!(
+                    "stale allowlist entry: `{}` allows {budget} panic site(s) but only {} \
+                     remain — ratchet the count down",
+                    file.path,
+                    sites.len(),
+                ),
+            );
+        }
+    }
+    for entry in allow {
+        if !files.iter().any(|f| f.path == entry.path) {
+            out.emit_at(
+                PANIC_POLICY,
+                allow_path,
+                entry.line,
+                format!(
+                    "stale allowlist entry: `{}` does not name a scanned source file",
+                    entry.path
+                ),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan_str;
+
+    fn glossary(doc: &str) -> TelemetryGlossary {
+        crate::docparse::telemetry_glossary(doc)
+    }
+
+    const DOC: &str = "\
+### Span-name glossary
+
+| span | where |
+|---|---|
+| `op.run` | x |
+
+## Metric-name glossary
+
+| name | kind |
+|---|---|
+| `op.items` | C |
+| `cache.plan.{a,b}.hits/misses` | C |
+";
+
+    #[test]
+    fn l1_accepts_documented_names_and_patterns() {
+        let files = [scan_str(
+            "rust/src/x.rs",
+            "fn f() {\n    telemetry::counter(\"op.items\").add(1);\n    let _s = telemetry::span(\"op.run\");\n    let m = |k: &str| format!(\"cache.plan.{n}.{k}\");\n}\n",
+        )];
+        let mut col = Collector::new();
+        telemetry_drift(&files, &glossary(DOC), "DOC", &mut col);
+        assert!(col.findings.is_empty(), "{:?}", col.findings);
+    }
+
+    #[test]
+    fn l1_flags_undocumented_code_names_and_uncoded_doc_names() {
+        let files = [scan_str(
+            "rust/src/x.rs",
+            "fn f() {\n    telemetry::counter(\"op.items\").add(1);\n    telemetry::counter(\"rogue.metric\").add(1);\n}\n",
+        )];
+        let mut col = Collector::new();
+        telemetry_drift(&files, &glossary(DOC), "DOC", &mut col);
+        let msgs: Vec<&str> = col.findings.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("`rogue.metric`")), "{msgs:?}");
+        // op.run plus the four expanded cache.plan.* names are
+        // documented but never constructed.
+        assert_eq!(
+            col.findings.iter().filter(|f| f.message.contains("never constructed")).count(),
+            5,
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn l1_ignores_test_code_and_unshaped_literals() {
+        let files = [scan_str(
+            "rust/src/x.rs",
+            "fn f() {\n    let _ = format!(\"{}.ffcz\", stem);\n}\n#[cfg(test)]\nmod tests {\n    fn t() { telemetry::counter(\"test.only.name\").add(1); }\n}\n",
+        )];
+        let mut col = Collector::new();
+        telemetry_drift(&files, &glossary(DOC), "DOC", &mut col);
+        assert!(!col
+            .findings
+            .iter()
+            .any(|f| f.message.contains("test.only.name") || f.message.contains("ffcz")));
+    }
+
+    #[test]
+    fn l2_matches_values_across_radix_and_byte_strings() {
+        let files = [scan_str(
+            "rust/src/c.rs",
+            "pub const MAGIC: &[u8; 4] = b\"ABCD\";\npub const FLAG: u8 = 0b0000_0001;\npub const LEN: usize = 24;\n",
+        )];
+        let rows = crate::docparse::format_constants(
+            "| `MAGIC` | `ABCD` |\n| `FLAG` | `0x01` |\n| `LEN` | `24` |\n",
+        );
+        let mut col = Collector::new();
+        format_constants_rule(&files, &rows, "DOC", &mut col);
+        assert!(col.findings.is_empty(), "{:?}", col.findings);
+    }
+
+    #[test]
+    fn l2_flags_drifted_and_missing_constants() {
+        let files = [scan_str("rust/src/c.rs", "pub const FLAG: u8 = 0x02;\n")];
+        let rows =
+            crate::docparse::format_constants("| `FLAG` | `0x01` |\n| `GONE` | `7` |\n");
+        let mut col = Collector::new();
+        format_constants_rule(&files, &rows, "DOC", &mut col);
+        assert_eq!(col.findings.len(), 2, "{:?}", col.findings);
+        assert!(col.findings.iter().any(|f| f.message.contains("`const FLAG`")));
+        assert!(col.findings.iter().any(|f| f.message.contains("`GONE`")));
+    }
+
+    #[test]
+    fn l3_requires_adjacent_safety_comments() {
+        let ok = scan_str(
+            "rust/src/u.rs",
+            "// SAFETY: disjoint per the work split.\nunsafe { go() }\n\n/// # Safety\n/// caller upholds X\npub unsafe fn f() {}\n",
+        );
+        let bad = scan_str("rust/src/v.rs", "unsafe impl Send for P {}\n");
+        let mut col = Collector::new();
+        let mut inv = Vec::new();
+        unsafe_audit(&[ok, bad], &mut col, &mut inv);
+        assert_eq!(col.findings.len(), 1, "{:?}", col.findings);
+        assert_eq!(col.findings[0].path, "rust/src/v.rs");
+        assert!(col.findings[0].message.contains("impl"));
+        assert_eq!(inv.len(), 3);
+        assert_eq!(inv.iter().filter(|s| s.has_safety).count(), 2);
+    }
+
+    #[test]
+    fn l3_suppression_silences_but_inventories() {
+        let f = scan_str(
+            "rust/src/u.rs",
+            "// ffcz-lint: allow(unsafe-audit)\nunsafe { go() }\n",
+        );
+        let mut col = Collector::new();
+        let mut inv = Vec::new();
+        unsafe_audit(&[f], &mut col, &mut inv);
+        assert!(col.findings.is_empty());
+        assert_eq!(col.suppressed, 1);
+        assert_eq!(inv.len(), 1);
+        assert!(!inv[0].has_safety);
+    }
+
+    #[test]
+    fn l4_flags_prints_outside_the_allowlist() {
+        let files = [
+            scan_str("rust/src/a.rs", "fn f() { println!(\"x\"); }\n"),
+            scan_str("rust/src/main.rs", "fn main() { println!(\"x\"); }\n"),
+            scan_str("rust/src/experiments/fig1.rs", "fn f() { eprintln!(\"x\"); }\n"),
+            scan_str("rust/src/telemetry/diag.rs", "fn f() { eprintln!(\"x\"); }\n"),
+        ];
+        let allow = PathAllowlist::parse("rust/src/main.rs\nrust/src/experiments/ # drivers\n");
+        let mut col = Collector::new();
+        diag_hygiene(&files, &allow, &mut col);
+        assert_eq!(col.findings.len(), 1, "{:?}", col.findings);
+        assert_eq!(col.findings[0].path, "rust/src/a.rs");
+    }
+
+    #[test]
+    fn l5_ratchets_in_both_directions() {
+        let files = [
+            scan_str(
+                "rust/src/store/r.rs",
+                "fn f() { a.unwrap(); b.expect(\"m\"); }\n",
+            ),
+            scan_str("rust/src/codec/d.rs", "fn g() { c.unwrap(); }\n"),
+            scan_str("rust/src/fourier/out_of_scope.rs", "fn h() { d.unwrap(); }\n"),
+        ];
+        let mut col = Collector::new();
+        let allow = parse_panic_allowlist(
+            "rust/src/store/r.rs 2\nrust/src/codec/d.rs 3\n",
+            "LIST",
+            &mut col,
+        );
+        panic_policy(&files, &allow, "LIST", &mut col);
+        // store/r.rs exactly meets its budget; codec/d.rs is stale
+        // (allows 3, has 1); fourier is out of scope entirely.
+        assert_eq!(col.findings.len(), 1, "{:?}", col.findings);
+        assert!(col.findings[0].message.contains("stale"), "{:?}", col.findings);
+
+        let mut col = Collector::new();
+        panic_policy(&files, &[], "LIST", &mut col);
+        // With no allowlist both in-scope files violate.
+        assert_eq!(col.findings.len(), 2, "{:?}", col.findings);
+        assert!(col.findings.iter().all(|f| f.message.contains("decode/read path")));
+    }
+
+    #[test]
+    fn l5_inline_suppression_and_unwrap_or_are_exempt() {
+        let files = [scan_str(
+            "rust/src/store/r.rs",
+            "fn f() {\n    a.unwrap_or(0);\n    b.unwrap(); // ffcz-lint: allow(panic-policy)\n}\n",
+        )];
+        let mut col = Collector::new();
+        panic_policy(&files, &[], "LIST", &mut col);
+        assert!(col.findings.is_empty(), "{:?}", col.findings);
+        assert_eq!(col.suppressed, 1);
+    }
+
+    #[test]
+    fn l5_flags_stale_paths() {
+        let mut col = Collector::new();
+        let allow = parse_panic_allowlist("rust/src/store/gone.rs 1\n", "LIST", &mut col);
+        panic_policy(&[], &allow, "LIST", &mut col);
+        assert_eq!(col.findings.len(), 1);
+        assert!(col.findings[0].message.contains("does not name"));
+    }
+
+    #[test]
+    fn pattern_matching_is_segment_wise() {
+        assert!(pattern_matches("a.{x}.c", "a.b.c"));
+        assert!(!pattern_matches("a.{x}.c", "a.b.d"));
+        assert!(!pattern_matches("a.{x}.c", "a.b.c.d"));
+        assert!(is_pattern_shaped("fourier.plan_cache.{name}.{kind}"));
+        assert!(!is_pattern_shaped("{}.ffcz"));
+        assert!(!is_pattern_shaped("creating {}"));
+    }
+}

@@ -1,0 +1,444 @@
+//! A minimal lexical model of Rust source, hand-rolled in the spirit of
+//! the crate's `util/json.rs`: no `syn`, no proc-macro machinery — one
+//! pass that classifies every character as code, comment, or literal,
+//! which is exactly the fidelity the ffcz-lint rules need (token
+//! presence, string-literal extraction, brace depth, `#[cfg(test)]`
+//! regions, suppression comments).
+
+use std::collections::HashMap;
+
+/// One physical line of a scanned source file.
+#[derive(Debug, Default)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with comments removed and string/char literal contents
+    /// blanked. The delimiters remain, so tokens such as `.expect(` and
+    /// brace counts survive unchanged while literal contents can never
+    /// fake a token match.
+    pub code: String,
+    /// Contents of string literals that *close* on this line.
+    pub strings: Vec<String>,
+    /// Comment text on this line (line comments and block-comment
+    /// fragments, markers kept).
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+}
+
+/// A scanned source file: the unit every lint rule consumes.
+pub struct SourceFile {
+    /// Repo-root-relative path with forward slashes.
+    pub path: String,
+    pub lines: Vec<Line>,
+    /// Line number → rules suppressed on that line via
+    /// `// ffcz-lint: allow(<rule>, …)`.
+    suppressions: HashMap<usize, Vec<String>>,
+}
+
+impl SourceFile {
+    /// Whether `rule` findings are suppressed on `line` (1-based). A
+    /// suppression comment on its own line applies to the next line
+    /// that carries code; `allow(all)` suppresses every rule.
+    pub fn is_suppressed(&self, rule: &str, line: usize) -> bool {
+        self.suppressions
+            .get(&line)
+            .is_some_and(|rs| rs.iter().any(|r| r == rule || r == "all"))
+    }
+}
+
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str { raw_hashes: Option<u32>, buf: String },
+}
+
+/// Scan source text into the line model. `path` is carried through
+/// verbatim for findings.
+pub fn scan_str(path: &str, text: &str) -> SourceFile {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line {
+        number: 1,
+        ..Line::default()
+    };
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            match &mut mode {
+                Mode::LineComment => mode = Mode::Code,
+                Mode::Str { buf, .. } => buf.push('\n'),
+                _ => {}
+            }
+            let number = cur.number;
+            lines.push(std::mem::take(&mut cur));
+            cur.number = number + 1;
+            i += 1;
+            continue;
+        }
+        match &mut mode {
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    mode = Mode::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(1);
+                    cur.comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    let raw_hashes = raw_prefix(&cur.code);
+                    cur.code.push('"');
+                    mode = Mode::Str {
+                        raw_hashes,
+                        buf: String::new(),
+                    };
+                    i += 1;
+                } else if c == '\'' {
+                    i = consume_quote(&chars, i, &mut cur.code);
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    *depth -= 1;
+                    cur.comment.push_str("*/");
+                    if *depth == 0 {
+                        mode = Mode::Code;
+                    }
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    *depth += 1;
+                    cur.comment.push_str("/*");
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str { raw_hashes, buf } => match *raw_hashes {
+                None => {
+                    if c == '\\' {
+                        buf.push(c);
+                        if let Some(&next) = chars.get(i + 1) {
+                            buf.push(next);
+                        }
+                        i += 2;
+                    } else if c == '"' {
+                        cur.code.push('"');
+                        cur.strings.push(std::mem::take(buf));
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        buf.push(c);
+                        i += 1;
+                    }
+                }
+                Some(h) => {
+                    if c == '"' && (1..=h as usize).all(|k| chars.get(i + k) == Some(&'#')) {
+                        cur.code.push('"');
+                        for _ in 0..h {
+                            cur.code.push('#');
+                        }
+                        cur.strings.push(std::mem::take(buf));
+                        mode = Mode::Code;
+                        i += 1 + h as usize;
+                    } else {
+                        buf.push(c);
+                        i += 1;
+                    }
+                }
+            },
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() || !cur.strings.is_empty() {
+        lines.push(cur);
+    }
+    mark_tests(&mut lines);
+    let suppressions = collect_suppressions(&lines);
+    SourceFile {
+        path: path.to_string(),
+        lines,
+        suppressions,
+    }
+}
+
+/// At an opening `"` in code position: was it preceded by a raw-string
+/// prefix (`r`, `r#…`, `br`, `br#…`)? Returns the hash count when raw.
+fn raw_prefix(code: &str) -> Option<u32> {
+    let mut it = code.chars().rev();
+    let mut hashes = 0u32;
+    let mut c = it.next();
+    while c == Some('#') {
+        hashes += 1;
+        c = it.next();
+    }
+    if c == Some('r') {
+        // An identifier ending in `r` (or `br`) followed by `"` is not
+        // valid Rust, but keep the boundary check anyway.
+        let prev = it.next();
+        let prev = if prev == Some('b') { it.next() } else { prev };
+        if !prev.is_some_and(is_word) {
+            return Some(hashes);
+        }
+    }
+    None
+}
+
+/// At a `'` in code position: consume a char literal (blanked to `''`
+/// in `code`) or pass a lifetime tick through. Returns the next index.
+fn consume_quote(chars: &[char], i: usize, code: &mut String) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: the designator decides the body length
+        // (`'\n'`, `'\''`, `'\x7F'`, `'\u{1F600}'`).
+        let designator = chars.get(i + 2).copied().unwrap_or('\'');
+        let mut j = i + 3;
+        match designator {
+            'x' => j += 2,
+            'u' => {
+                while j < chars.len() && chars[j] != '}' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            _ => {}
+        }
+        if chars.get(j) == Some(&'\'') {
+            j += 1;
+        }
+        code.push_str("''");
+        j
+    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+        // Plain one-char literal, e.g. `'{'` — blanked so stray braces
+        // in char literals cannot skew brace depth.
+        code.push_str("''");
+        i + 3
+    } else {
+        // A lifetime tick (`&'a str`).
+        code.push('\'');
+        i + 1
+    }
+}
+
+const CFG_TEST: &str = "#[cfg(test)]";
+
+/// Mark lines inside `#[cfg(test)]` items by tracking brace depth. The
+/// attribute arms a pending flag; the next `{` opens the test region
+/// (closed when depth returns to its level) and a `;` first means the
+/// attribute applied to a braceless item (a `use`, say).
+fn mark_tests(lines: &mut [Line]) {
+    let mut depth: i32 = 0;
+    let mut pending = false;
+    let mut test_until: Option<i32> = None;
+    for line in lines.iter_mut() {
+        let attr_end = line.code.find(CFG_TEST).map(|p| p + CFG_TEST.len());
+        if attr_end.is_some() {
+            pending = true;
+        }
+        let mut in_test = test_until.is_some() || attr_end.is_some();
+        for (bi, ch) in line.code.char_indices() {
+            // An attribute later on this same line is not yet armed for
+            // braces that precede it.
+            let armed = pending && attr_end.map_or(true, |e| bi >= e);
+            match ch {
+                '{' => {
+                    if armed && test_until.is_none() {
+                        test_until = Some(depth);
+                        pending = false;
+                        in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(d) = test_until {
+                        if depth <= d {
+                            test_until = None;
+                        }
+                    }
+                }
+                ';' => {
+                    if armed && test_until.is_none() {
+                        pending = false;
+                        in_test = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        line.in_test = in_test || test_until.is_some();
+    }
+}
+
+fn collect_suppressions(lines: &[Line]) -> HashMap<usize, Vec<String>> {
+    let mut map: HashMap<usize, Vec<String>> = HashMap::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some(pos) = line.comment.find("ffcz-lint:") else {
+            continue;
+        };
+        let rest = &line.comment[pos + "ffcz-lint:".len()..];
+        let Some(open) = rest.find("allow(") else {
+            continue;
+        };
+        let body = &rest[open + "allow(".len()..];
+        let Some(close) = body.find(')') else {
+            continue;
+        };
+        let rules: Vec<String> = body[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        if rules.is_empty() {
+            continue;
+        }
+        // A comment-only line suppresses the next line that has code.
+        let mut target = line.number;
+        if line.code.trim().is_empty() {
+            if let Some(next) = lines[idx + 1..].iter().find(|l| !l.code.trim().is_empty()) {
+                target = next.number;
+            }
+        }
+        map.entry(target).or_default().extend(rules);
+    }
+    map
+}
+
+pub(crate) fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of word-boundary-respecting occurrences of `token` in
+/// `code`. Boundaries are only enforced on the token ends that are
+/// word characters, so `.expect(` matches after any receiver while
+/// `println!` refuses to match inside `eprintln!`.
+pub fn find_token(code: &str, token: &str) -> Vec<usize> {
+    let lead = token.chars().next().is_some_and(is_word);
+    let tail = token.chars().last().is_some_and(is_word);
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(token) {
+        let at = from + rel;
+        let end = at + token.len();
+        let before_ok = !lead || !code[..at].chars().next_back().is_some_and(is_word);
+        let after_ok = !tail || !code[end..].chars().next().is_some_and(is_word);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = end;
+    }
+    out
+}
+
+pub fn has_token(code: &str, token: &str) -> bool {
+    !find_token(code, token).is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_stripped_from_code() {
+        let f = scan_str(
+            "t.rs",
+            "let x = \"counter(\\\"a.b\\\")\"; // println!(\"hi\")\n/* unsafe */ let y = 1;\n",
+        );
+        assert!(!f.lines[0].code.contains("counter"));
+        assert_eq!(f.lines[0].strings, ["counter(\\\"a.b\\\")"]);
+        assert!(f.lines[0].comment.contains("println!"));
+        assert!(!f.lines[0].code.contains("println"));
+        assert!(!f.lines[1].code.contains("unsafe"));
+        assert!(f.lines[1].code.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let f = scan_str(
+            "t.rs",
+            "let a = r#\"un\"safe\"#;\nlet b = '{';\nlet c: &'static str = \"x\";\nlet d = '\\'';\n",
+        );
+        assert_eq!(f.lines[0].strings, ["un\"safe"]);
+        assert!(!f.lines[0].code.contains("safe"));
+        // Char-literal contents are blanked so brace depth stays true.
+        assert!(!f.lines[1].code.contains('{'));
+        // Lifetimes survive as plain code.
+        assert!(f.lines[2].code.contains("&'static str"));
+        assert!(f.lines[3].code.contains("''"));
+    }
+
+    #[test]
+    fn multiline_and_nested_block_comments() {
+        let f = scan_str("t.rs", "a /* one /* two */ still */ b\n/* open\nunsafe {\n*/ c\n");
+        assert_eq!(f.lines[0].code.trim(), "a  b");
+        assert!(f.lines[2].code.is_empty());
+        assert!(f.lines[2].comment.contains("unsafe"));
+        assert_eq!(f.lines[3].code.trim(), "c");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let f = scan_str("t.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn cfg_test_on_a_braceless_item() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() { body(); }\n";
+        let f = scan_str("t.rs", src);
+        assert!(f.lines[1].in_test);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn suppressions_attach_to_their_line_or_the_next_code_line() {
+        let src = "a.unwrap(); // ffcz-lint: allow(panic-policy)\n\
+                   // ffcz-lint: allow(unsafe-audit, diag-hygiene)\n\
+                   // explanatory second line\n\
+                   unsafe { boo() }\n\
+                   b.unwrap();\n";
+        let f = scan_str("t.rs", src);
+        assert!(f.is_suppressed("panic-policy", 1));
+        assert!(!f.is_suppressed("unsafe-audit", 1));
+        assert!(f.is_suppressed("unsafe-audit", 4));
+        assert!(f.is_suppressed("diag-hygiene", 4));
+        assert!(!f.is_suppressed("panic-policy", 4));
+        assert!(!f.is_suppressed("panic-policy", 5));
+    }
+
+    #[test]
+    fn allow_all_suppresses_every_rule() {
+        let f = scan_str("t.rs", "x.unwrap(); // ffcz-lint: allow(all)\n");
+        assert!(f.is_suppressed("panic-policy", 1));
+        assert!(f.is_suppressed("telemetry-drift", 1));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("telemetry::counter(\"\")", "counter("));
+        assert!(!has_token("chunk_counter(\"\")", "counter("));
+        assert!(has_token("eprintln!(\"\")", "eprintln!"));
+        assert!(!has_token("eprintln!(\"\")", "println!"));
+        assert!(has_token("unsafe { }", "unsafe"));
+        assert!(!has_token("unsafer()", "unsafe"));
+        assert!(has_token("v.expect(\"m\")", ".expect("));
+        assert!(!has_token("v.expect_err(\"m\")", ".expect("));
+        assert!(has_token("v.unwrap()", ".unwrap()"));
+        assert!(!has_token("v.unwrap_or(0)", ".unwrap()"));
+    }
+}
