@@ -110,9 +110,11 @@ fn encode_scratch_gauge(quick: bool) -> (Vec<usize>, usize, f64, f64, f64, f64, 
 
 /// Whole-field FFCz compression vs chunked-parallel store encoding at
 /// 1/2/4 workers, in-memory vs streamed-to-file, plus the encode-path
-/// scratch gauge. Emits `BENCH_store.json` (median seconds + GB/s + peak
-/// payload bytes in flight — the peak-RSS proxy — per configuration, and
-/// the `encode_path` object with the allocations-per-chunk gauge) for the
+/// scratch gauge and the archive read server under sustained concurrent
+/// load. Emits `BENCH_store.json` (median seconds + GB/s + peak payload
+/// bytes in flight — the peak-RSS proxy — per configuration, the
+/// `encode_path` object with the allocations-per-chunk gauge, and the
+/// `server` object with sustained QPS and latency percentiles) for the
 /// perf trajectory. Quick mode shrinks the field and skips the LRU sweep.
 fn store_comparison(quick: bool) {
     let dim = if quick { 16 } else { 32 };
@@ -257,6 +259,9 @@ fn store_comparison(quick: bool) {
     let encode_chunk_s = reuse_s / gauge_chunks as f64;
     let (telemetry_s, overhead_pct) = telemetry_overhead(encode_chunk_s);
 
+    // Archive read server under sustained concurrent load.
+    let (srv_clients, srv_requests, srv_qps, srv_p50_ms, srv_p99_ms) = server_bench(quick);
+
     // Hand-rolled JSON (no serde in the offline crate universe).
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"store_throughput\",\n");
@@ -276,6 +281,11 @@ fn store_comparison(quick: bool) {
         telemetry_s * 1e9,
         encode_chunk_s * 1e3
     ));
+    json.push_str(&format!(
+        "  \"server\": {{\"clients\": {srv_clients}, \"requests\": {srv_requests}, \
+         \"server_qps\": {srv_qps:.1}, \"server_p50_ms\": {srv_p50_ms:.4}, \
+         \"server_p99_ms\": {srv_p99_ms:.4}}},\n"
+    ));
     json.push_str("  \"configs\": [\n");
     for (i, (name, secs, gbps, peak)) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -290,6 +300,78 @@ fn store_comparison(quick: bool) {
     } else {
         println!("wrote BENCH_store.json");
     }
+}
+
+/// Sustained concurrent load on the archive read server: an in-process
+/// server over an in-memory archive, hammered by 8 client connections
+/// requesting seeded random windows. Reports `(clients, requests, qps,
+/// p50_ms, p99_ms)` — the `server` object of `BENCH_store.json`, whose
+/// QPS and p99 rows CI schema-checks. The decoded-chunk cache is sized
+/// to the field so the numbers measure the request path (framing, region
+/// planning, cache hits, response assembly), not cold decode throughput.
+fn server_bench(quick: bool) -> (usize, usize, f64, f64, f64) {
+    use ffcz::server::{ArchiveServer, Client, ServeOptions};
+    use std::sync::Arc;
+
+    let dim = if quick { 16 } else { 24 };
+    let field = synth::grf::GrfBuilder::new(&[dim, dim, dim])
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(700)
+        .build();
+    let spec = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+    let opts = StoreWriteOptions::new(&[dim / 2, dim / 2, dim / 2]).workers(2);
+    let (bytes, _, _) = encode_store(&field, &spec, &opts).unwrap();
+    let store = Store::from_bytes(bytes).unwrap();
+    store.set_cache_budget(field.len() * 8);
+    let server = ArchiveServer::start(ServeOptions::default()).unwrap();
+    server.register("bench", Arc::new(store));
+    let addr = server.local_addr().to_string();
+
+    const CLIENTS: usize = 8;
+    let per_client = if quick { 50 } else { 200 };
+    let window = dim / 2;
+    let t0 = std::time::Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(CLIENTS * per_client);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|t| {
+                let addr = &addr;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut rng = ffcz::util::XorShift::new(0xBE9C + t as u64);
+                    let mut lats = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let origin: Vec<usize> = (0..3)
+                            .map(|_| rng.below(dim - window + 1))
+                            .collect();
+                        let shape = [window, window, window];
+                        let r0 = std::time::Instant::now();
+                        let region = client.read_region("bench", &origin, &shape).unwrap();
+                        lats.push(r0.elapsed().as_secs_f64() * 1e3);
+                        black_box(region.len());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        for handle in handles {
+            latencies.extend(handle.join().unwrap());
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+
+    let requests = CLIENTS * per_client;
+    let qps = requests as f64 / wall.max(1e-9);
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    println!(
+        "server bench: {CLIENTS} clients x {per_client} requests of {window}^3 windows: \
+         {qps:.0} req/s sustained, p50 {p50:.3} ms, p99 {p99:.3} ms"
+    );
+    (CLIENTS, requests, qps, p50, p99)
 }
 
 /// Disabled-mode telemetry cost per chunk: time a loop of the telemetry

@@ -343,9 +343,23 @@ impl CodecChain {
         shape: &[usize],
         precision: Precision,
     ) -> Result<Field> {
+        self.decode_chunk_with_scratch(bytes, shape, precision, &mut CorrectionScratch::new())
+    }
+
+    /// [`CodecChain::decode_chunk`] with caller-owned correction scratch.
+    /// Output is bit-identical to the fresh-state entry point; batch
+    /// decoders (store read workers, server request handlers) reuse one
+    /// scratch so the inverse-transform state warms once per chunk shape.
+    pub fn decode_chunk_with_scratch(
+        &self,
+        bytes: &[u8],
+        shape: &[usize],
+        precision: Precision,
+        scratch: &mut CorrectionScratch,
+    ) -> Result<Field> {
         let _span = crate::telemetry::span("store.chunk.decode").arg("bytes", bytes.len() as u64);
         let t = std::time::Instant::now();
-        let field = self.decode_chunk_inner(bytes, shape, precision)?;
+        let field = self.decode_chunk_inner(bytes, shape, precision, scratch)?;
         let metrics = decode_metrics();
         metrics.chunks.incr();
         metrics.chunk_ns.record_duration(t.elapsed());
@@ -357,6 +371,7 @@ impl CodecChain {
         bytes: &[u8],
         shape: &[usize],
         precision: Precision,
+        scratch: &mut CorrectionScratch,
     ) -> Result<Field> {
         // Undo the bytes stages without copying when there are none (the
         // default FFCz chain), keeping the hot read path allocation-free.
@@ -384,7 +399,7 @@ impl CodecChain {
             }
             ArrayStage::Base { .. } => {
                 let archive = FfczArchive::from_bytes(payload)?;
-                let field = correction::decompress(&archive)?;
+                let field = correction::decompress_with_scratch(&archive, scratch)?;
                 check_decoded(&field, shape, precision)?;
                 Ok(field)
             }

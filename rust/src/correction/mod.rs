@@ -33,7 +33,7 @@ use anyhow::{bail, Result};
 use crate::compressors::{Compressor, ErrorBound};
 use crate::data::Field;
 use crate::encoding::{fixed, lossless_compress, lossless_decompress, varint};
-use crate::fourier::{fold_full_into, for_each_full_bin, Complex};
+use crate::fourier::{for_each_full_bin, half_index_of, Complex};
 
 pub use edits::{PointwiseQuantizedEdits, QuantizedComplexEdits, QuantizedEdits, QUANT_BITS};
 pub use pocs::{
@@ -274,6 +274,120 @@ impl EditsBlock {
                     f[i as usize] = Complex::new(re, im);
                 }
                 (s, f)
+            }
+        }
+    }
+
+    /// Scatter the Hermitian fold of this block's (conceptual) dense
+    /// frequency edit vector straight into the half-layout buffer `out`
+    /// (length [`crate::fourier::half_len`] of `shape`; zeroed here),
+    /// touching only stored bins.
+    ///
+    /// Bit-identical to `fold_full_into(&self.dense().1, shape, out)`
+    /// without materializing the dense vector: every edit stream is
+    /// exactly conjugate-symmetric (the quantizers grid the *expanded*
+    /// Hermitian vector with symmetric rounding, patch entries are pushed
+    /// in conjugate mirror pairs by the full-bin walk, raw edits come from
+    /// `HalfSpectrum::expand`), so the fold at a canonical bin computes
+    /// `(v + conj(conj v)) · ½ = v` exactly in IEEE arithmetic, and at a
+    /// self-conjugate bin `(v + conj v) · ½` — the real part unchanged,
+    /// the imaginary part an exact `+0.0`. Scattering only the canonical
+    /// entries (and dropping imaginary contributions at self-conjugate
+    /// bins) reproduces precisely that. The regression test
+    /// `sparse_fold_scatter_matches_dense_reference` pins the equivalence
+    /// bitwise per variant.
+    fn scatter_freq_folded(&self, shape: &[usize], out: &mut [Complex]) {
+        for c in out.iter_mut() {
+            *c = Complex::ZERO;
+        }
+        match self {
+            EditsBlock::Quantized { freq, patch, .. } => {
+                for (&i, &g) in freq.re.idx.iter().zip(&freq.re.q) {
+                    if let Some((half, _)) = half_index_of(shape, i as usize) {
+                        out[half].re = g as f64 * freq.re.step;
+                    }
+                }
+                for (&i, &g) in freq.im.idx.iter().zip(&freq.im.q) {
+                    if let Some((half, self_conj)) = half_index_of(shape, i as usize) {
+                        if !self_conj {
+                            out[half].im = g as f64 * freq.im.step;
+                        }
+                    }
+                }
+                // The patch *adds* on top of the dequantized planes, in
+                // stream order — same association as `dense()`.
+                for &(i, re, im) in patch {
+                    if let Some((half, self_conj)) = half_index_of(shape, i as usize) {
+                        out[half].re += re;
+                        if !self_conj {
+                            out[half].im += im;
+                        }
+                    }
+                }
+            }
+            EditsBlock::PointwiseQuantized { freq, .. } => {
+                for (((&k, &e), &gr), &gi) in freq
+                    .idx
+                    .iter()
+                    .zip(&freq.step_exp)
+                    .zip(&freq.q_re)
+                    .zip(&freq.q_im)
+                {
+                    if let Some((half, self_conj)) = half_index_of(shape, k as usize) {
+                        let s = freq.base_step * (2.0f64).powi(e as i32);
+                        out[half].re = gr as f64 * s;
+                        if !self_conj {
+                            out[half].im = gi as f64 * s;
+                        }
+                    }
+                }
+            }
+            EditsBlock::Raw { freq, .. } => {
+                for &(i, re, im) in freq {
+                    if let Some((half, self_conj)) = half_index_of(shape, i as usize) {
+                        out[half].re = re;
+                        if !self_conj {
+                            out[half].im = im;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `out[i] += eps0[i] + spat[i]` for every `i`, streaming the sparse
+    /// ascending spatial index list instead of materializing the dense
+    /// `spat` vector. Bit-identical to the dense form: absent entries
+    /// contribute an exact `+ 0.0`, matching the zero-initialized dense
+    /// vector, and present entries contribute the identical dequantized
+    /// value in the identical `eps0[i] + s` association.
+    fn add_eps0_and_spat(&self, eps0: &[f64], out: &mut [f64]) {
+        match self {
+            EditsBlock::Quantized { spat, .. } | EditsBlock::PointwiseQuantized { spat, .. } => {
+                let mut p = 0usize;
+                for i in 0..out.len() {
+                    let s = if p < spat.idx.len() && spat.idx[p] as usize == i {
+                        let v = spat.q[p] as f64 * spat.step;
+                        p += 1;
+                        v
+                    } else {
+                        0.0
+                    };
+                    out[i] += eps0[i] + s;
+                }
+            }
+            EditsBlock::Raw { spat, .. } => {
+                let mut p = 0usize;
+                for i in 0..out.len() {
+                    let s = if p < spat.len() && spat[p].0 as usize == i {
+                        let v = spat[p].1;
+                        p += 1;
+                        v
+                    } else {
+                        0.0
+                    };
+                    out[i] += eps0[i] + s;
+                }
             }
         }
     }
@@ -758,7 +872,6 @@ fn edits_satisfy_bounds(
 ) -> bool {
     let n = eps0.len();
     let threads = threads.max(1);
-    let (spat, freq) = block.dense();
     let plan = scratch.plan(shape);
     let h = plan.half_len();
     scratch.ensure_spec(h);
@@ -770,13 +883,17 @@ fn edits_satisfy_bounds(
     let spec = &mut spec[..h];
     let spec2 = &mut spec2[..h];
     let eps = &mut real[..n];
-    // ε = ε₀ + spat + Re(IFFT(freq)), built in place: inverse-transform
-    // the folded edits into the real buffer, then add the other terms.
-    fold_full_into(&freq, shape, spec2);
+    // ε = ε₀ + spat + Re(IFFT(freq)), built in place — sparse-aware: the
+    // Hermitian fold of the frequency edits is scattered from the stored
+    // sparse streams straight into the scratch half spectrum, and the
+    // spatial edits merge in from their ascending index list, so the
+    // verifier allocates no dense edit vectors (previously
+    // `EditsBlock::dense()` built two O(n) vectors per attempt — the last
+    // per-check allocations on the encode retry ladder). Bit-identical to
+    // the dense path; see `scatter_freq_folded` / `add_eps0_and_spat`.
+    block.scatter_freq_folded(shape, spec2);
     plan.inverse(spec2, eps, threads, ws);
-    for i in 0..n {
-        eps[i] += eps0[i] + spat[i];
-    }
+    block.add_eps0_and_spat(eps0, eps);
     // Ratios and tolerance shared with `check_dual_bounds`.
     let max_s = pocs::max_spatial_ratio(eps, &bounds.spatial);
     plan.forward(eps, spec, threads, ws);
@@ -790,9 +907,19 @@ fn edits_satisfy_bounds(
 /// runtime-registered compressors decode as long as the codec was
 /// registered in this process.
 pub fn decompress(archive: &FfczArchive) -> Result<Field> {
+    decompress_with_scratch(archive, &mut CorrectionScratch::new())
+}
+
+/// [`decompress`] with caller-owned transform state: batch decoders (the
+/// store read path, the archive read server) reuse one scratch so the
+/// inverse-transform plans and buffers warm once per chunk shape.
+pub fn decompress_with_scratch(
+    archive: &FfczArchive,
+    scratch: &mut CorrectionScratch,
+) -> Result<Field> {
     let base = crate::codec::require_compressor(&archive.base_name)?;
     let recon0 = base.decompress(&archive.base_payload)?;
-    apply::apply_edits(&recon0, &archive.edits)
+    apply::apply_edits_with_scratch(&recon0, &archive.edits, scratch)
 }
 
 /// Outcome of [`verify`].
@@ -923,6 +1050,152 @@ mod tests {
         let ps1 = crate::fourier::power_spectrum(&recon);
         let max_rel = ps1.max_relative_error(&ps0);
         assert!(max_rel <= 1.1e-3, "power-spectrum rel err {max_rel}");
+    }
+
+    #[test]
+    fn sparse_fold_scatter_matches_dense_reference() {
+        use crate::fourier::{fold_full_into, half_len, rfftn};
+        use crate::util::XorShift;
+
+        // Build edit blocks of every variant from genuinely Hermitian
+        // spectra (the only kind the encoder produces) and pin the sparse
+        // scatter / merge-walk paths *bitwise* against the dense
+        // `EditsBlock::dense()` reference they replaced.
+        let shapes: [&[usize]; 4] = [&[16], &[9], &[6, 8], &[3, 4, 5]];
+        for (si, shape) in shapes.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            let h = half_len(shape);
+            let mut rng = XorShift::new(90 + si as u64);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let spec_half = rfftn(&x, shape);
+            let spat_dense: Vec<f64> = (0..n)
+                .map(|_| if rng.next_f64() < 0.3 { rng.normal() * 1e-3 } else { 0.0 })
+                .collect();
+            let spat_q = QuantizedEdits::quantize(&spat_dense);
+            // Patch entries exactly as the retry ladder builds them: a
+            // full-bin walk over a Hermitian spectrum with a
+            // mirror-symmetric (magnitude) selection — entries land in
+            // exact conjugate pairs.
+            let t = spec_half
+                .data()
+                .iter()
+                .map(|c| c.linf())
+                .sum::<f64>()
+                / (h as f64);
+            let mut patch: Vec<(u32, f64, f64)> = Vec::new();
+            for_each_full_bin(shape, |full, half, conj| {
+                let stored = spec_half.data()[half];
+                let d = if conj { stored.conj() } else { stored };
+                if d.linf() > t {
+                    patch.push((full as u32, d.re * 1e-4, d.im * 1e-4));
+                }
+            });
+            assert!(!patch.is_empty(), "shape {shape:?}: degenerate patch");
+            let raw_spat: Vec<(u32, f64)> = spat_dense
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, &v)| (i as u32, v))
+                .collect();
+            let raw_freq: Vec<(u32, f64, f64)> = spec_half
+                .expand()
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.re != 0.0 || c.im != 0.0)
+                .map(|(i, c)| (i as u32, c.re, c.im))
+                .collect();
+            let blocks = vec![
+                EditsBlock::Quantized {
+                    spat: spat_q.clone(),
+                    freq: QuantizedComplexEdits::quantize_half(&spec_half),
+                    patch: Vec::new(),
+                },
+                EditsBlock::Quantized {
+                    spat: spat_q.clone(),
+                    freq: QuantizedComplexEdits::quantize_half(&spec_half),
+                    patch,
+                },
+                EditsBlock::PointwiseQuantized {
+                    spat: spat_q.clone(),
+                    freq: PointwiseQuantizedEdits::quantize_half(&spec_half, |_| 1.0, 0.25),
+                },
+                EditsBlock::Raw {
+                    n,
+                    spat: raw_spat,
+                    freq: raw_freq,
+                },
+            ];
+            for (bi, block) in blocks.iter().enumerate() {
+                let (spat_d, freq_d) = block.dense();
+                let mut ref_fold = vec![Complex::ZERO; h];
+                fold_full_into(&freq_d, shape, &mut ref_fold);
+                // Pre-fill with junk: the scatter owns the whole buffer.
+                let mut got_fold = vec![Complex::new(7.0, -7.0); h];
+                block.scatter_freq_folded(shape, &mut got_fold);
+                for i in 0..h {
+                    assert_eq!(
+                        (got_fold[i].re.to_bits(), got_fold[i].im.to_bits()),
+                        (ref_fold[i].re.to_bits(), ref_fold[i].im.to_bits()),
+                        "shape {shape:?} block {bi} bin {i}: \
+                         sparse {:?} vs dense {:?}",
+                        got_fold[i],
+                        ref_fold[i]
+                    );
+                }
+                let eps0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let mut ref_eps = base.clone();
+                for i in 0..n {
+                    ref_eps[i] += eps0[i] + spat_d[i];
+                }
+                let mut got_eps = base.clone();
+                block.add_eps0_and_spat(&eps0, &mut got_eps);
+                for i in 0..n {
+                    assert_eq!(
+                        got_eps[i].to_bits(),
+                        ref_eps[i].to_bits(),
+                        "shape {shape:?} block {bi} sample {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_verifier_is_allocation_free_when_warm() {
+        use crate::util::XorShift;
+
+        // The retry-ladder verifier must perform zero scratch allocations
+        // once warm on a shape — with `EditsBlock::dense()` gone, the
+        // whole per-attempt check runs in grow-only buffers.
+        let shape = [12usize, 10];
+        let n = 120usize;
+        let mut rng = XorShift::new(31);
+        let eps0: Vec<f64> = (0..n).map(|_| rng.normal() * 1e-3).collect();
+        let spat: Vec<f64> = (0..n).map(|_| rng.normal() * 1e-4).collect();
+        let freq = crate::fourier::rfftn(&eps0, &shape);
+        let block = EditsBlock::Quantized {
+            spat: QuantizedEdits::quantize(&spat),
+            freq: QuantizedComplexEdits::quantize_half(&freq),
+            patch: Vec::new(),
+        };
+        let bounds = ResolvedBounds {
+            spatial: Bounds::Global(1.0),
+            frequency: Bounds::Global(1e3),
+            spectral_rule: None,
+        };
+        let mut scratch = CorrectionScratch::new();
+        let verdict_cold = edits_satisfy_bounds(&eps0, &block, &shape, &bounds, 1, &mut scratch);
+        let warm = scratch.allocation_events();
+        for _ in 0..3 {
+            let verdict = edits_satisfy_bounds(&eps0, &block, &shape, &bounds, 1, &mut scratch);
+            assert_eq!(verdict, verdict_cold, "verdict changed across reuse");
+        }
+        assert_eq!(
+            scratch.allocation_events(),
+            warm,
+            "warm verifier allocated scratch"
+        );
     }
 
     #[test]

@@ -30,8 +30,8 @@ pub use complex::Complex;
 pub use fft::{Fft, FftDirection};
 pub use ndfft::{fftn, ifftn, fftn_inplace, ifftn_inplace, plan_for};
 pub use ndrfft::{
-    fold_full_into, for_each_full_bin, for_each_row_with_mirror, half_len, irfftn, ndrplan_for,
-    rfftn, rplan_for, HalfSpectrum, NdFftWorkspace, NdRealFft,
+    fold_full_into, for_each_full_bin, for_each_row_with_mirror, half_index_of, half_len, irfftn,
+    ndrplan_for, rfftn, rplan_for, HalfSpectrum, NdFftWorkspace, NdRealFft,
 };
 pub use power_spectrum::{
     power_spectrum, power_spectrum_of_complex, power_spectrum_of_real, PowerSpectrum,

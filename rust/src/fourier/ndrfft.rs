@@ -765,6 +765,44 @@ pub fn for_each_full_bin(shape: &[usize], mut f: impl FnMut(usize, usize, bool))
     });
 }
 
+/// Map a *full-spectrum* bin index to its half-layout storage slot:
+/// `Some((half_idx, self_conjugate))` for canonical bins (last-axis
+/// frequency `k < last/2 + 1`), `None` for mirror bins, whose value is the
+/// conjugate of a canonical bin's. `self_conjugate` is true when the bin
+/// is its own Hermitian mirror (`k ∈ {0, Nyquist}` on the last axis and
+/// every leading coordinate fixed under negation mod its dim) — the bins
+/// whose imaginary part a Hermitian fold zeroes exactly.
+///
+/// Agrees bin-for-bin with [`for_each_full_bin`] (unit-tested below);
+/// sparse consumers — the encode verifier scattering stored edit streams
+/// into a half-layout buffer — use this to resolve single bins without
+/// walking the whole lattice.
+pub fn half_index_of(shape: &[usize], full: usize) -> Option<(usize, bool)> {
+    let d = shape.len();
+    assert!(d >= 1, "scalar (0-d) transforms are not supported");
+    let last = shape[d - 1];
+    let h = last / 2 + 1;
+    let k = full % last;
+    if k >= h {
+        return None;
+    }
+    let row = full / last;
+    let k_fixed = k == 0 || (last % 2 == 0 && k == last / 2);
+    let mut self_conj = k_fixed;
+    if self_conj {
+        let mut r = row;
+        for &n in shape[..d - 1].iter().rev() {
+            let c = r % n;
+            r /= n;
+            if (n - c) % n != c {
+                self_conj = false;
+                break;
+            }
+        }
+    }
+    Some((row * h + k, self_conj))
+}
+
 /// Forward N-D real FFT (out-of-place convenience): real `input` → its
 /// [`HalfSpectrum`]. Single-threaded; plan and scratch are built per call.
 pub fn rfftn(input: &[f64], shape: &[usize]) -> HalfSpectrum {
@@ -1071,6 +1109,36 @@ mod tests {
                 seen[full] += 1;
             });
             assert!(seen.iter().all(|&c| c == 1), "shape {shape:?}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn half_index_of_agrees_with_full_bin_walk() {
+        for shape in [vec![8usize], vec![9], vec![1], vec![2], vec![4, 6], vec![3, 4, 5]] {
+            let n: usize = shape.iter().product();
+            // Full-lattice mirror map (negation mod dims over the whole
+            // shape — the same odometer the symmetry checker uses).
+            let mut mirror = vec![0usize; n];
+            for_each_row_with_mirror(&shape, |i, mi| mirror[i] = mi);
+            let mut canonical = 0usize;
+            for_each_full_bin(&shape, |full, half, conj| {
+                match half_index_of(&shape, full) {
+                    Some((got_half, self_conj)) => {
+                        assert!(!conj, "shape {shape:?} bin {full}: mirror marked canonical");
+                        assert_eq!(got_half, half, "shape {shape:?} bin {full}");
+                        assert_eq!(
+                            self_conj,
+                            mirror[full] == full,
+                            "shape {shape:?} bin {full}"
+                        );
+                        canonical += 1;
+                    }
+                    None => {
+                        assert!(conj, "shape {shape:?} bin {full}: canonical marked mirror");
+                    }
+                }
+            });
+            assert_eq!(canonical, half_len(&shape), "shape {shape:?}");
         }
     }
 

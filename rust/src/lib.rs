@@ -32,6 +32,10 @@
 //! * [`store`] — a zarrs-style chunked archive (`.ffcz` container): regular
 //!   chunk grid, per-chunk FFCz codec pipeline, parallel encode/decode, and
 //!   partial `read_region` decode;
+//! * [`server`] — a concurrent archive read server: a daemon that opens
+//!   many `.ffcz` stores and serves `read_region` / `stat` requests over
+//!   a length-prefixed TCP protocol (`docs/SERVER.md`), sharing each
+//!   archive's decoded-chunk LRU and codec table across connections;
 //! * [`runtime`] — a PJRT executor that runs the AOT-compiled JAX/Pallas
 //!   implementation of the projection loop from `artifacts/*.hlo.txt`;
 //! * [`data`] — n-dimensional fields and seeded synthetic generators that
@@ -88,7 +92,10 @@
 //! Reads run the same chain backwards: [`store::Store`] opens trailer +
 //! manifest only, fetches the chunks a [`store::Store::read_region`]
 //! window intersects, CRC-checks each payload, and decodes through the
-//! chunk's chain. Above the chunk level, [`coordinator`] pipelines
+//! chunk's chain — all byte fetches going through the
+//! [`store::ReadableStorage`] backends (file, memory, fault-injecting),
+//! and [`server`] exposes those reads to concurrent network clients.
+//! Above the chunk level, [`coordinator`] pipelines
 //! instance streams (and lands them in stores via
 //! [`coordinator::run_pipeline_to_store`]); [`data`], [`metrics`], and
 //! [`experiments`] supply fields, quality metrics, and the paper's
@@ -160,6 +167,7 @@ pub mod experiments;
 pub mod fourier;
 pub mod metrics;
 pub mod runtime;
+pub mod server;
 pub mod store;
 pub mod telemetry;
 pub mod util;

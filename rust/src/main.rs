@@ -17,6 +17,11 @@
 //!                 streamed writes by default with --in-memory escape hatch,
 //!                 per-chunk codec chains via --chunk-codec — grammar in
 //!                 docs/FORMAT.md)
+//! ffcz serve      --root archives/ [--addr 127.0.0.1:7070] [--cache-mb 64]
+//!                 [--port-file p.txt] [--no-shutdown]
+//! ffcz get        --addr 127.0.0.1:7070 --archive f --origin 0,0 --shape 8,8
+//!                 --output w.ffld   (also --ping | --stat | --shutdown;
+//!                 wire protocol in docs/SERVER.md)
 //! ffcz info       --archive f.fz
 //! ```
 
@@ -32,6 +37,7 @@ use ffcz::correction::{self, BoundSpec, FfczArchive, FfczConfig, FrequencyBound}
 use ffcz::data::{io, synth};
 use ffcz::experiments::{self, ExpOptions};
 use ffcz::metrics::QualityReport;
+use ffcz::server::{ArchiveServer, Client, ServeOptions};
 use ffcz::store::{write_store, write_store_in_memory, Store, StoreWriteOptions};
 use ffcz::telemetry::{self, diag};
 
@@ -66,6 +72,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&positional, &flags),
         "pipeline" => cmd_pipeline(&flags),
         "archive" => cmd_archive(&positional, &flags),
+        "serve" => cmd_serve(&flags),
+        "get" => cmd_get(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -127,6 +135,13 @@ fn print_usage() {
          \x20               opt       = 'eb=R' | 'abs-eb=A' | 'db=R' | 'abs-db=A'\n\
          \x20                         | 'ps=R' | 'iters=N' | 'quant-retries=N'\n\
          \x20                         | 'threads=N' | 'base-only'\n\
+         \x20 serve       --root DIR [--addr H:P] [--cache-mb N] [--port-file F]\n\
+         \x20             [--no-shutdown]  archive read server (protocol in\n\
+         \x20             docs/SERVER.md); --addr default 127.0.0.1:7070, port 0\n\
+         \x20             picks a free port (resolved address goes to --port-file)\n\
+         \x20 get         --addr H:P (--ping | --shutdown |\n\
+         \x20             --archive NAME --stat |\n\
+         \x20             --archive NAME --origin A,B,C --shape A,B,C --output F)\n\
          \x20 archive     extract --input F --output F [--workers N]\n\
          \x20 archive     inspect --input F [--chunks] [--stats]\n\
          \x20 archive     read-region --input F --origin A,B,C --shape A,B,C\n\
@@ -704,6 +719,78 @@ fn cmd_archive_read_region(flags: &HashMap<String, String>) -> Result<()> {
         input.display(),
         store.chunks_decoded(),
         store.grid().chunk_count(),
+        output.display(),
+    ));
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let root = PathBuf::from(get(flags, "root")?);
+    if !root.is_dir() {
+        bail!("--root {} is not a directory", root.display());
+    }
+    let opts = ServeOptions {
+        addr: flags
+            .get("addr")
+            .cloned()
+            .unwrap_or_else(|| "127.0.0.1:7070".to_string()),
+        root: Some(root.clone()),
+        cache_bytes: (parse_f64(flags, "cache-mb", 64.0)?.max(0.0) * (1 << 20) as f64) as usize,
+        allow_shutdown: !flags.contains_key("no-shutdown"),
+        ..ServeOptions::default()
+    };
+    let server = ArchiveServer::start(opts)?;
+    let addr = server.local_addr();
+    if let Some(port_file) = flags.get("port-file") {
+        std::fs::write(port_file, addr.to_string())
+            .with_context(|| format!("writing --port-file {port_file}"))?;
+    }
+    diag::info(&format!(
+        "serving archives from {} on {addr} (stop with `ffcz get --addr {addr} --shutdown`)",
+        root.display()
+    ));
+    server.join();
+    diag::info("server stopped");
+    Ok(())
+}
+
+fn cmd_get(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = get(flags, "addr")?;
+    let mut client = Client::connect(addr)?;
+    if flags.contains_key("ping") {
+        client.ping()?;
+        println!("ok");
+        return Ok(());
+    }
+    if flags.contains_key("shutdown") {
+        client.shutdown_server()?;
+        diag::info("server acknowledged shutdown");
+        return Ok(());
+    }
+    let name = get(flags, "archive")?;
+    if flags.contains_key("stat") {
+        let stat = client.stat(name)?;
+        println!("archive      : {name}");
+        println!("array shape  : {:?} ({})", stat.shape, stat.precision.name());
+        println!(
+            "chunk grid   : {} chunks of {:?}",
+            stat.chunks, stat.chunk_shape
+        );
+        println!(
+            "payload      : {}",
+            ffcz::util::human_bytes(stat.payload_bytes as usize)
+        );
+        return Ok(());
+    }
+    let origin = parse_axes(get(flags, "origin")?, "origin")?;
+    let shape = parse_axes(get(flags, "shape")?, "shape")?;
+    let output = PathBuf::from(get(flags, "output")?);
+    let field = client.read_region(name, &origin, &shape)?;
+    io::save(&field, &output)?;
+    diag::info(&format!(
+        "fetched region origin {:?} shape {:?} of '{name}' from {addr} -> {}",
+        origin,
+        shape,
         output.display(),
     ));
     Ok(())

@@ -1,0 +1,151 @@
+//! Blocking TCP client for the archive read server.
+//!
+//! One [`Client`] wraps one connection; requests are strictly
+//! sequential per connection (the protocol has no request IDs —
+//! pipelining means opening more connections, which is exactly what the
+//! server's thread-per-connection model expects). Server-reported
+//! failures surface as [`ServerError`] values inside the `anyhow` chain,
+//! so callers can branch on the wire status via [`status_of`].
+
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Field;
+
+use super::protocol::{
+    self, encode_request, ArchiveStat, FrameRead, Request, Response, DEFAULT_MAX_RESPONSE_FRAME,
+    OP_PING, OP_READ_REGION, OP_SHUTDOWN, OP_STAT,
+};
+
+/// A failure reported by the server, carrying the wire status byte
+/// (`ST_*` in [`super::protocol`]) and the server's message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerError {
+    pub status: u8,
+    pub message: String,
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "server error (status {:#04x}): {}",
+            self.status, self.message
+        )
+    }
+}
+
+impl std::error::Error for ServerError {}
+
+/// The wire status inside an error returned by a [`Client`] call, if
+/// the failure was server-reported (`None` for transport errors).
+pub fn status_of(err: &anyhow::Error) -> Option<u8> {
+    err.chain()
+        .find_map(|c| c.downcast_ref::<ServerError>())
+        .map(|se| se.status)
+}
+
+/// One blocking connection to an archive read server.
+pub struct Client {
+    stream: TcpStream,
+    /// Cap on response bodies this client will accept.
+    max_response_bytes: usize,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `127.0.0.1:7070`).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to archive server at {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Self {
+            stream,
+            max_response_bytes: DEFAULT_MAX_RESPONSE_FRAME,
+        })
+    }
+
+    /// Raise or lower the response-size cap (default 256 MiB).
+    pub fn with_max_response_bytes(mut self, bytes: usize) -> Self {
+        self.max_response_bytes = bytes;
+        self
+    }
+
+    fn round_trip(&mut self, req: &Request, op: u8) -> Result<Response> {
+        protocol::write_frame(&mut self.stream, &encode_request(req))
+            .context("sending request frame")?;
+        let body = loop {
+            match protocol::read_frame(&mut self.stream, self.max_response_bytes)
+                .context("reading response frame")?
+            {
+                FrameRead::Frame(body) => break body,
+                FrameRead::Idle => continue,
+                FrameRead::Eof => bail!("server closed the connection mid-request"),
+            }
+        };
+        match protocol::parse_response(op, &body).context("parsing response frame")? {
+            Response::Error { status, message } => {
+                Err(anyhow::Error::new(ServerError { status, message }))
+            }
+            resp => Ok(resp),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.round_trip(&Request::Ping, OP_PING)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected ping response {other:?}"),
+        }
+    }
+
+    /// Archive metadata: shape, chunk grid, payload size, precision.
+    pub fn stat(&mut self, name: &str) -> Result<ArchiveStat> {
+        let req = Request::Stat {
+            name: name.to_string(),
+        };
+        match self.round_trip(&req, OP_STAT)? {
+            Response::Stat(stat) => Ok(stat),
+            other => bail!("unexpected stat response {other:?}"),
+        }
+    }
+
+    /// Decode a rectangular region of archive `name` into a [`Field`].
+    pub fn read_region(&mut self, name: &str, origin: &[usize], shape: &[usize]) -> Result<Field> {
+        let req = Request::ReadRegion {
+            name: name.to_string(),
+            origin: origin.iter().map(|&v| v as u64).collect(),
+            shape: shape.iter().map(|&v| v as u64).collect(),
+        };
+        match self.round_trip(&req, OP_READ_REGION)? {
+            Response::Region {
+                shape: got_shape,
+                precision,
+                data,
+            } => {
+                let shape_usize: Vec<usize> = got_shape
+                    .iter()
+                    .map(|&v| usize::try_from(v).context("region extent overflows usize"))
+                    .collect::<Result<_>>()?;
+                let n: usize = shape_usize.iter().product();
+                if n != data.len() {
+                    bail!(
+                        "region shape {shape_usize:?} disagrees with {} samples",
+                        data.len()
+                    );
+                }
+                Ok(Field::new(&shape_usize, data, precision))
+            }
+            other => bail!("unexpected read_region response {other:?}"),
+        }
+    }
+
+    /// Ask the server to shut down (honored unless started with
+    /// shutdown disabled).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.round_trip(&Request::Shutdown, OP_SHUTDOWN)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected shutdown response {other:?}"),
+        }
+    }
+}

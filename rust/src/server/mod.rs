@@ -1,0 +1,33 @@
+//! Concurrent archive read server: serve `read_region` requests from
+//! many `.ffcz` archives over a small length-prefixed TCP protocol.
+//!
+//! The store layer ([`crate::store`]) already decodes arbitrary
+//! rectangular windows of a chunked archive through any
+//! [`crate::store::ReadableStorage`] backend; this subsystem puts a
+//! daemon in front of it so many clients share one set of open
+//! archives — and, through them, one decoded-chunk LRU, one resolved
+//! codec-chain table, and one FFT plan cache per archive — instead of
+//! each re-opening and re-decoding on their own.
+//!
+//! * [`protocol`] — the wire format (framing, opcodes, statuses,
+//!   request/response layouts), specified normatively in
+//!   `docs/SERVER.md` and implemented here as pure bytes-in/bytes-out
+//!   helpers shared by both sides;
+//! * [`service`] — [`ArchiveServer`]: accept loop, per-connection
+//!   threads, lazy archive resolution from a root directory (or
+//!   [`ArchiveServer::register`]ed in-memory stores), pooled
+//!   [`crate::correction::CorrectionScratch`] buffers, transient-fault
+//!   retries, and `server.*` telemetry;
+//! * [`client`] — the blocking [`Client`] used by `ffcz get`, the
+//!   stress tests, and the benchmarks.
+//!
+//! The CLI front ends are `ffcz serve` (run a daemon) and `ffcz get`
+//! (ping / stat / fetch a region / request shutdown).
+
+pub mod client;
+pub mod protocol;
+pub mod service;
+
+pub use client::{status_of, Client, ServerError};
+pub use protocol::{ArchiveStat, Request, Response};
+pub use service::{ArchiveServer, ServeOptions};

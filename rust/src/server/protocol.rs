@@ -1,0 +1,515 @@
+//! Wire protocol of the archive read server.
+//!
+//! The protocol is specified normatively in `docs/SERVER.md` at the
+//! repository root; this module is the reference implementation of both
+//! sides (the server parses requests and builds responses, the client
+//! does the reverse). Everything here is pure bytes-in/bytes-out so the
+//! framing and layouts are unit-testable without sockets.
+//!
+//! In one paragraph: every message is a **frame** — a `u32`
+//! little-endian body length followed by that many body bytes. A request
+//! body starts with a one-byte opcode; a response body starts with a
+//! one-byte status. All integers are little-endian, all sample payloads
+//! are IEEE-754 `f64` little-endian in row-major order, and all names
+//! are UTF-8. The layouts below mirror `docs/SERVER.md` table for table;
+//! the doc-derived client in `rust/tests/server.rs` re-parses that
+//! document and round-trips raw frames against this implementation, so
+//! the two cannot drift silently.
+
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Precision;
+use crate::encoding::fixed;
+
+// ------------------------------------------------------------ opcodes --
+
+/// Liveness probe; empty payload, empty `OK` response.
+pub const OP_PING: u8 = 0x01;
+/// Archive metadata: shape, chunk grid, payload size, precision.
+pub const OP_STAT: u8 = 0x02;
+/// Decode and return a rectangular region of an archive.
+pub const OP_READ_REGION: u8 = 0x03;
+/// Ask the server to stop accepting connections and exit its loops.
+pub const OP_SHUTDOWN: u8 = 0x0F;
+
+// ----------------------------------------------------------- statuses --
+
+/// Request succeeded; payload depends on the opcode.
+pub const ST_OK: u8 = 0x00;
+/// Malformed frame: unknown opcode, truncated payload, bad UTF-8.
+pub const ST_BAD_REQUEST: u8 = 0x01;
+/// The named archive is not registered and not found under the root.
+pub const ST_UNKNOWN_ARCHIVE: u8 = 0x02;
+/// Region outside the array, wrong rank, or zero-sized axis.
+pub const ST_BAD_REGION: u8 = 0x03;
+/// Storage-level failure: I/O error or CRC-32 payload mismatch.
+pub const ST_IO: u8 = 0x04;
+/// Decode failure not attributable to storage.
+pub const ST_INTERNAL: u8 = 0x05;
+/// The response would exceed the server's response-size cap.
+pub const ST_TOO_LARGE: u8 = 0x06;
+
+// -------------------------------------------------- precision tags ----
+
+/// Samples decoded from a double-precision archive.
+pub const PREC_F64: u8 = 0;
+/// Samples decoded from a single-precision archive (still shipped as
+/// `f64` on the wire; the tag records the source representation).
+pub const PREC_F32: u8 = 1;
+
+// ------------------------------------------------------------- limits --
+
+/// Hard cap on request frame bodies (1 MiB): requests are tiny (an
+/// opcode, a name, two coordinate vectors), so anything larger is a
+/// framing error, not a big request.
+pub const MAX_REQUEST_FRAME: usize = 1 << 20;
+/// Default cap on response frame bodies (256 MiB ≈ a 32M-sample region).
+pub const DEFAULT_MAX_RESPONSE_FRAME: usize = 256 << 20;
+
+fn precision_tag(p: Precision) -> u8 {
+    match p {
+        Precision::Double => PREC_F64,
+        Precision::Single => PREC_F32,
+    }
+}
+
+fn precision_from_tag(tag: u8) -> Result<Precision> {
+    match tag {
+        PREC_F64 => Ok(Precision::Double),
+        PREC_F32 => Ok(Precision::Single),
+        other => bail!("unknown precision tag {other:#04x}"),
+    }
+}
+
+// ------------------------------------------------------------ framing --
+
+/// Result of pulling one frame off a connection.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete frame body.
+    Frame(Vec<u8>),
+    /// Clean end-of-stream before any byte of a new frame.
+    Eof,
+    /// Read timeout before any byte of a new frame (only with a socket
+    /// read timeout set) — the connection is idle, poll again.
+    Idle,
+}
+
+/// Write one frame: `u32` LE body length, then the body.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one frame of at most `max` body bytes. EOF or a read timeout
+/// *before the first byte* of a frame are reported as [`FrameRead::Eof`]
+/// / [`FrameRead::Idle`]; either mid-frame is an error (the peer died or
+/// stalled with a frame half-sent, and the stream offset is lost).
+pub fn read_frame(r: &mut impl Read, max: usize) -> io::Result<FrameRead> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(FrameRead::Eof),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("connection closed mid-frame ({got} of 4 header bytes)"),
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if got == 0
+                    && matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Ok(FrameRead::Idle)
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > max {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame body of {len} bytes exceeds the {max}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(FrameRead::Frame(body))
+}
+
+// ----------------------------------------------------------- requests --
+
+/// A parsed request body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    Ping,
+    Stat { name: String },
+    ReadRegion {
+        name: String,
+        origin: Vec<u64>,
+        shape: Vec<u64>,
+    },
+    Shutdown,
+}
+
+fn push_name(out: &mut Vec<u8>, name: &str) {
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+}
+
+fn read_name(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = u16::from_le_bytes(fixed::take::<2>(buf, pos, "name length")?) as usize;
+    let Some(bytes) = buf.get(*pos..).and_then(|b| b.get(..len)) else {
+        bail!("truncated archive name ({len} bytes declared)");
+    };
+    *pos += len;
+    String::from_utf8(bytes.to_vec()).context("archive name is not UTF-8")
+}
+
+/// Serialize a request to a frame body (no length prefix).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Ping => out.push(OP_PING),
+        Request::Shutdown => out.push(OP_SHUTDOWN),
+        Request::Stat { name } => {
+            out.push(OP_STAT);
+            push_name(&mut out, name);
+        }
+        Request::ReadRegion {
+            name,
+            origin,
+            shape,
+        } => {
+            out.push(OP_READ_REGION);
+            push_name(&mut out, name);
+            out.push(origin.len() as u8);
+            for &v in origin {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for &v in shape {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Parse a request frame body. Any error here maps to
+/// [`ST_BAD_REQUEST`] on the server side.
+pub fn parse_request(body: &[u8]) -> Result<Request> {
+    let mut pos = 0usize;
+    let op = fixed::take::<1>(body, &mut pos, "opcode")?[0];
+    let req = match op {
+        OP_PING => Request::Ping,
+        OP_SHUTDOWN => Request::Shutdown,
+        OP_STAT => Request::Stat {
+            name: read_name(body, &mut pos)?,
+        },
+        OP_READ_REGION => {
+            let name = read_name(body, &mut pos)?;
+            let ndim = fixed::take::<1>(body, &mut pos, "rank")?[0] as usize;
+            let mut origin = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                origin.push(fixed::read_u64_le(body, &mut pos, "origin component")?);
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(fixed::read_u64_le(body, &mut pos, "shape component")?);
+            }
+            Request::ReadRegion {
+                name,
+                origin,
+                shape,
+            }
+        }
+        other => bail!("unknown opcode {other:#04x}"),
+    };
+    if pos != body.len() {
+        bail!("{} trailing bytes after request payload", body.len() - pos);
+    }
+    Ok(req)
+}
+
+// ---------------------------------------------------------- responses --
+
+/// Archive metadata returned by a `STAT` request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArchiveStat {
+    pub shape: Vec<u64>,
+    pub chunk_shape: Vec<u64>,
+    /// Number of chunks in the grid.
+    pub chunks: u64,
+    /// Total encoded payload bytes across all chunks.
+    pub payload_bytes: u64,
+    pub precision: Precision,
+}
+
+/// A parsed response body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Empty `OK` (ping / shutdown acknowledgements).
+    Ok,
+    Stat(ArchiveStat),
+    Region {
+        shape: Vec<u64>,
+        precision: Precision,
+        data: Vec<f64>,
+    },
+    Error { status: u8, message: String },
+}
+
+/// Empty success body (ping / shutdown acknowledgement).
+pub fn ok_body() -> Vec<u8> {
+    vec![ST_OK]
+}
+
+/// Error body: status, `u16` LE message length, UTF-8 message.
+pub fn error_body(status: u8, message: &str) -> Vec<u8> {
+    let msg = message.as_bytes();
+    let take = msg.len().min(u16::MAX as usize);
+    let mut out = Vec::with_capacity(3 + take);
+    out.push(status);
+    out.extend_from_slice(&(take as u16).to_le_bytes());
+    out.extend_from_slice(&msg[..take]);
+    out
+}
+
+/// `STAT` success body.
+pub fn stat_body(stat: &ArchiveStat) -> Vec<u8> {
+    let mut out = vec![ST_OK, stat.shape.len() as u8];
+    for &v in &stat.shape {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &v in &stat.chunk_shape {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&stat.chunks.to_le_bytes());
+    out.extend_from_slice(&stat.payload_bytes.to_le_bytes());
+    out.push(precision_tag(stat.precision));
+    out
+}
+
+/// `READ_REGION` success body: rank, region shape, precision tag, then
+/// the samples as `f64` LE in row-major order.
+pub fn region_body(shape: &[usize], precision: Precision, data: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + 8 * shape.len() + 1 + 8 * data.len());
+    out.push(ST_OK);
+    out.push(shape.len() as u8);
+    for &v in shape {
+        out.extend_from_slice(&(v as u64).to_le_bytes());
+    }
+    out.push(precision_tag(precision));
+    for &v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn parse_error_tail(status: u8, body: &[u8], pos: &mut usize) -> Result<Response> {
+    let len = u16::from_le_bytes(fixed::take::<2>(body, pos, "error message length")?) as usize;
+    let Some(bytes) = body.get(*pos..).and_then(|b| b.get(..len)) else {
+        bail!("truncated error message ({len} bytes declared)");
+    };
+    *pos += len;
+    Ok(Response::Error {
+        status,
+        message: String::from_utf8_lossy(bytes).into_owned(),
+    })
+}
+
+/// Parse a response frame body. `op` is the opcode of the request this
+/// response answers — `OK` payloads are op-specific.
+pub fn parse_response(op: u8, body: &[u8]) -> Result<Response> {
+    let mut pos = 0usize;
+    let status = fixed::take::<1>(body, &mut pos, "status")?[0];
+    if status != ST_OK {
+        let resp = parse_error_tail(status, body, &mut pos)?;
+        if pos != body.len() {
+            bail!("{} trailing bytes after error response", body.len() - pos);
+        }
+        return Ok(resp);
+    }
+    let resp = match op {
+        OP_PING | OP_SHUTDOWN => Response::Ok,
+        OP_STAT => {
+            let ndim = fixed::take::<1>(body, &mut pos, "rank")?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(fixed::read_u64_le(body, &mut pos, "shape component")?);
+            }
+            let mut chunk_shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                chunk_shape.push(fixed::read_u64_le(body, &mut pos, "chunk-shape component")?);
+            }
+            let chunks = fixed::read_u64_le(body, &mut pos, "chunk count")?;
+            let payload_bytes = fixed::read_u64_le(body, &mut pos, "payload bytes")?;
+            let precision =
+                precision_from_tag(fixed::take::<1>(body, &mut pos, "precision tag")?[0])?;
+            Response::Stat(ArchiveStat {
+                shape,
+                chunk_shape,
+                chunks,
+                payload_bytes,
+                precision,
+            })
+        }
+        OP_READ_REGION => {
+            let ndim = fixed::take::<1>(body, &mut pos, "rank")?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(fixed::read_u64_le(body, &mut pos, "shape component")?);
+            }
+            let precision =
+                precision_from_tag(fixed::take::<1>(body, &mut pos, "precision tag")?[0])?;
+            let n = shape
+                .iter()
+                .try_fold(1u64, |a, &s| a.checked_mul(s))
+                .and_then(|n| usize::try_from(n).ok())
+                .context("region sample count overflows")?;
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(fixed::read_f64_le(body, &mut pos, "sample")?);
+            }
+            Response::Region {
+                shape,
+                precision,
+                data,
+            }
+        }
+        other => bail!("cannot parse a response for unknown opcode {other:#04x}"),
+    };
+    if pos != body.len() {
+        bail!("{} trailing bytes after response payload", body.len() - pos);
+    }
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_round_trip() {
+        let reqs = [
+            Request::Ping,
+            Request::Shutdown,
+            Request::Stat {
+                name: "nyx/baryon.ffcz".to_string(),
+            },
+            Request::ReadRegion {
+                name: "f".to_string(),
+                origin: vec![0, 4, 9],
+                shape: vec![8, 2, 1],
+            },
+        ];
+        for req in &reqs {
+            let body = encode_request(req);
+            assert_eq!(&parse_request(&body).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_requests_error_without_panicking() {
+        // Empty body, unknown opcode, truncated name, trailing garbage,
+        // short coordinate vectors — all must be Err, never a panic.
+        assert!(parse_request(&[]).is_err());
+        assert!(parse_request(&[0x7E]).is_err());
+        assert!(parse_request(&[OP_STAT, 10, 0, b'x']).is_err());
+        let mut ok = encode_request(&Request::Ping);
+        ok.push(0);
+        assert!(parse_request(&ok).is_err());
+        let mut rr = encode_request(&Request::ReadRegion {
+            name: "a".to_string(),
+            origin: vec![1, 2],
+            shape: vec![3, 4],
+        });
+        rr.truncate(rr.len() - 5);
+        assert!(parse_request(&rr).is_err());
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let stat = ArchiveStat {
+            shape: vec![64, 64],
+            chunk_shape: vec![16, 16],
+            chunks: 16,
+            payload_bytes: 12345,
+            precision: Precision::Double,
+        };
+        match parse_response(OP_STAT, &stat_body(&stat)).unwrap() {
+            Response::Stat(s) => assert_eq!(s, stat),
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        let data = vec![1.5, -2.25, f64::MIN_POSITIVE, 0.0];
+        match parse_response(OP_READ_REGION, &region_body(&[2, 2], Precision::Single, &data))
+            .unwrap()
+        {
+            Response::Region {
+                shape,
+                precision,
+                data: got,
+            } => {
+                assert_eq!(shape, vec![2, 2]);
+                assert_eq!(precision, Precision::Single);
+                let bits: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u64> = data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, want);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        match parse_response(OP_PING, &ok_body()).unwrap() {
+            Response::Ok => {}
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        match parse_response(OP_READ_REGION, &error_body(ST_BAD_REGION, "nope")).unwrap() {
+            Response::Error { status, message } => {
+                assert_eq!(status, ST_BAD_REGION);
+                assert_eq!(message, "nope");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frames_round_trip_and_enforce_the_cap() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        match read_frame(&mut r, 64).unwrap() {
+            FrameRead::Frame(b) => assert_eq!(b, b"hello"),
+            other => panic!("wrong read: {other:?}"),
+        }
+        match read_frame(&mut r, 64).unwrap() {
+            FrameRead::Frame(b) => assert!(b.is_empty()),
+            other => panic!("wrong read: {other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r, 64).unwrap(), FrameRead::Eof));
+
+        // Over-cap length prefix is rejected before allocating the body.
+        let huge = (u32::MAX).to_le_bytes().to_vec();
+        let mut r = std::io::Cursor::new(huge);
+        assert!(read_frame(&mut r, 1 << 20).is_err());
+
+        // Truncation mid-header and mid-body are errors, not EOFs.
+        let mut partial = Vec::new();
+        write_frame(&mut partial, b"abcdef").unwrap();
+        let mut r = std::io::Cursor::new(partial[..2].to_vec());
+        assert!(read_frame(&mut r, 64).is_err());
+        let mut r = std::io::Cursor::new(partial[..7].to_vec());
+        assert!(read_frame(&mut r, 64).is_err());
+    }
+}

@@ -1,0 +1,599 @@
+//! The archive read server: a daemon that opens many `.ffcz` archives
+//! and serves concurrent `read_region` requests over the length-prefixed
+//! TCP protocol in [`super::protocol`].
+//!
+//! Architecture: one nonblocking accept loop on its own thread, one
+//! thread per connection. All connections share the server state behind
+//! an `Arc` —
+//!
+//! * an archive table (`name → Arc<Store>`): archives are opened lazily
+//!   from the configured root directory on first reference and kept open
+//!   (the open [`Store`] carries the parsed manifest, the resolved codec
+//!   chains, and the decoded-chunk LRU, so every subsequent request on
+//!   any connection hits the same caches);
+//! * a pool of [`CorrectionScratch`] buffers: each connection checks one
+//!   out for its lifetime and returns it on close, so decode transform
+//!   state (FFT plans, spectrum buffers) warms once per chunk shape per
+//!   connection rather than once per request;
+//! * payload reads run under the server's [`RetryPolicy`] (default:
+//!   transient faults retried with linear backoff), so a flaky storage
+//!   backend degrades to latency instead of request failures.
+//!
+//! Every request is traced (`server.request` span) and counted
+//! (`server.requests.*`, `server.inflight`, `server.request_ns` — see
+//! `docs/TELEMETRY.md`). Failures are mapped to precise wire statuses
+//! ([`super::protocol`]) and never tear down the server; a request for a
+//! chunk whose payload fails CRC-32 verification answers `ST_IO` and the
+//! connection keeps serving.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::correction::CorrectionScratch;
+use crate::store::{RetryPolicy, Store};
+use crate::telemetry::{self, diag};
+use crate::util::sync::{lock, read, write};
+
+use super::protocol::{
+    self, error_body, ok_body, region_body, stat_body, ArchiveStat, FrameRead, Request,
+    DEFAULT_MAX_RESPONSE_FRAME, MAX_REQUEST_FRAME, ST_BAD_REGION, ST_BAD_REQUEST, ST_INTERNAL,
+    ST_IO, ST_OK, ST_TOO_LARGE, ST_UNKNOWN_ARCHIVE,
+};
+
+/// How often idle connection threads and the accept loop re-check the
+/// shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(20);
+
+/// Server configuration. `Default` binds an ephemeral loopback port with
+/// no archive root (only [`ArchiveServer::register`]ed archives are
+/// servable), a 64 MiB decoded-chunk cache per archive, and transient
+/// retries on.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address, e.g. `127.0.0.1:7070` (`:0` picks a free port).
+    pub addr: String,
+    /// Directory archives are resolved in: request name `n` opens
+    /// `root/n`, then `root/n.ffcz`. `None` disables path resolution.
+    pub root: Option<PathBuf>,
+    /// Decoded-chunk LRU budget applied to each archive the server
+    /// opens (bytes of decoded samples; 0 disables caching).
+    pub cache_bytes: usize,
+    /// Cap on response frame bodies; regions that would exceed it are
+    /// refused with `ST_TOO_LARGE` before any decode work.
+    pub max_response_bytes: usize,
+    /// Retry policy applied to payload reads of archives the server
+    /// opens.
+    pub retry: RetryPolicy,
+    /// Whether `SHUTDOWN` requests are honored (tests and the CLI say
+    /// yes; long-running daemons may refuse them with `--no-shutdown`).
+    pub allow_shutdown: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            root: None,
+            cache_bytes: 64 << 20,
+            max_response_bytes: DEFAULT_MAX_RESPONSE_FRAME,
+            retry: RetryPolicy::transient(4, Duration::from_millis(2)),
+            allow_shutdown: true,
+        }
+    }
+}
+
+/// Registered-metric handles for the request path, fetched once.
+struct ServerMetrics {
+    requests: telemetry::Counter,
+    errors: telemetry::Counter,
+    ping: telemetry::Counter,
+    stat: telemetry::Counter,
+    read_region: telemetry::Counter,
+    connections: telemetry::Counter,
+    bytes_out: telemetry::Counter,
+    inflight: telemetry::Gauge,
+    request_ns: telemetry::Histogram,
+}
+
+fn server_metrics() -> &'static ServerMetrics {
+    static METRICS: OnceLock<ServerMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| ServerMetrics {
+        requests: telemetry::counter("server.requests.total"),
+        errors: telemetry::counter("server.requests.errors"),
+        ping: telemetry::counter("server.requests.ping"),
+        stat: telemetry::counter("server.requests.stat"),
+        read_region: telemetry::counter("server.requests.read_region"),
+        connections: telemetry::counter("server.connections"),
+        bytes_out: telemetry::counter("server.bytes_out"),
+        inflight: telemetry::gauge("server.inflight"),
+        request_ns: telemetry::histogram("server.request_ns"),
+    })
+}
+
+struct ServerInner {
+    opts: ServeOptions,
+    stores: RwLock<HashMap<String, Arc<Store>>>,
+    scratch_pool: Mutex<Vec<CorrectionScratch>>,
+    shutdown: AtomicBool,
+    inflight: AtomicU64,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running archive read server. Dropping the handle shuts the server
+/// down and joins its threads.
+///
+/// ```
+/// use ffcz::codec::CodecChainSpec;
+/// use ffcz::data::synth::grf::GrfBuilder;
+/// use ffcz::server::{ArchiveServer, Client, ServeOptions};
+/// use ffcz::store::{encode_store, Store, StoreWriteOptions};
+/// use std::sync::Arc;
+///
+/// let field = GrfBuilder::new(&[16, 16]).lognormal(1.0).seed(5).build();
+/// let opts = StoreWriteOptions::new(&[8, 8]);
+/// let (bytes, _, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
+///
+/// let server = ArchiveServer::start(ServeOptions::default()).unwrap();
+/// server.register("f", Arc::new(Store::from_bytes(bytes).unwrap()));
+///
+/// let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+/// let region = client.read_region("f", &[4, 4], &[8, 8]).unwrap();
+/// assert_eq!(region.shape(), &[8, 8]);
+/// server.shutdown();
+/// ```
+pub struct ArchiveServer {
+    inner: Arc<ServerInner>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ArchiveServer {
+    /// Bind `opts.addr` and start accepting connections.
+    pub fn start(opts: ServeOptions) -> Result<Self> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding archive server to {}", opts.addr))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the server listener nonblocking")?;
+        let addr = listener
+            .local_addr()
+            .context("reading the bound server address")?;
+        let inner = Arc::new(ServerInner {
+            opts,
+            stores: RwLock::new(HashMap::new()),
+            scratch_pool: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept_inner = Arc::clone(&inner);
+        let accept = std::thread::Builder::new()
+            .name("ffcz-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_inner))
+            .context("spawning the server accept thread")?;
+        diag::verbose(&format!("archive server listening on {addr}"));
+        Ok(Self {
+            inner,
+            addr,
+            accept: Some(accept),
+        })
+    }
+
+    /// The address the server is listening on (resolves `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Make an already-open store servable under `name`, bypassing root
+    /// resolution — the way tests serve in-memory or fault-injected
+    /// archives. The store is used as configured by the caller (cache
+    /// budget and retry policy are not overridden).
+    pub fn register(&self, name: &str, store: Arc<Store>) {
+        write(&self.inner.stores).insert(name.to_string(), store);
+    }
+
+    /// Signal shutdown and wait for the accept loop and every
+    /// connection thread to exit. In-flight requests complete.
+    pub fn shutdown(mut self) {
+        self.shutdown_and_join();
+    }
+
+    /// Block until the server shuts down (via a `SHUTDOWN` request).
+    pub fn join(mut self) {
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+
+    fn shutdown_and_join(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ArchiveServer {
+    fn drop(&mut self) {
+        self.shutdown_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
+    while !inner.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                server_metrics().connections.incr();
+                let conn_inner = Arc::clone(&inner);
+                match std::thread::Builder::new()
+                    .name("ffcz-conn".to_string())
+                    .spawn(move || serve_connection(stream, conn_inner))
+                {
+                    Ok(handle) => lock(&inner.conns).push(handle),
+                    Err(e) => diag::warn(&format!("could not spawn connection thread: {e}")),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_INTERVAL);
+            }
+            Err(e) => {
+                diag::warn(&format!("accept failed: {e}"));
+                std::thread::sleep(POLL_INTERVAL);
+            }
+        }
+    }
+    let handles = std::mem::take(&mut *lock(&inner.conns));
+    for handle in handles {
+        let _ = handle.join();
+    }
+}
+
+fn serve_connection(mut stream: TcpStream, inner: Arc<ServerInner>) {
+    // The listener is nonblocking; accepted sockets must not inherit
+    // that. A short read timeout keeps idle connections responsive to
+    // shutdown without busy-waiting.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+    let _ = stream.set_nodelay(true);
+    let metrics = server_metrics();
+    let mut scratch = lock(&inner.scratch_pool)
+        .pop()
+        .unwrap_or_else(CorrectionScratch::new);
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let body = match protocol::read_frame(&mut stream, MAX_REQUEST_FRAME) {
+            Ok(FrameRead::Idle) => continue,
+            Ok(FrameRead::Eof) => break,
+            Ok(FrameRead::Frame(body)) => body,
+            Err(e) => {
+                diag::verbose(&format!("dropping connection: {e}"));
+                break;
+            }
+        };
+        let started = Instant::now();
+        let span = telemetry::span("server.request").arg("bytes_in", body.len() as u64);
+        metrics.requests.incr();
+        metrics
+            .inflight
+            .set(inner.inflight.fetch_add(1, Ordering::SeqCst) + 1);
+        let (reply, stop) = handle_request(&inner, &body, &mut scratch);
+        metrics
+            .inflight
+            .set(inner.inflight.fetch_sub(1, Ordering::SeqCst).saturating_sub(1));
+        metrics.request_ns.record_duration(started.elapsed());
+        drop(span);
+        if reply.first() != Some(&ST_OK) {
+            metrics.errors.incr();
+        }
+        if protocol::write_frame(&mut stream, &reply).is_err() {
+            break;
+        }
+        metrics.bytes_out.add(reply.len() as u64 + 4);
+        if stop {
+            inner.shutdown.store(true, Ordering::SeqCst);
+            break;
+        }
+    }
+    lock(&inner.scratch_pool).push(scratch);
+}
+
+/// Handle one parsed frame; returns the response body and whether the
+/// server should shut down afterwards.
+fn handle_request(
+    inner: &ServerInner,
+    body: &[u8],
+    scratch: &mut CorrectionScratch,
+) -> (Vec<u8>, bool) {
+    let metrics = server_metrics();
+    let req = match protocol::parse_request(body) {
+        Ok(req) => req,
+        Err(e) => return (error_body(ST_BAD_REQUEST, &format!("{e:#}")), false),
+    };
+    match req {
+        Request::Ping => {
+            metrics.ping.incr();
+            (ok_body(), false)
+        }
+        Request::Shutdown => {
+            if inner.opts.allow_shutdown {
+                (ok_body(), true)
+            } else {
+                (
+                    error_body(ST_BAD_REQUEST, "shutdown is disabled on this server"),
+                    false,
+                )
+            }
+        }
+        Request::Stat { name } => {
+            metrics.stat.incr();
+            match lookup_store(inner, &name) {
+                Ok(store) => {
+                    let m = store.manifest();
+                    (
+                        stat_body(&ArchiveStat {
+                            shape: m.shape.iter().map(|&v| v as u64).collect(),
+                            chunk_shape: m.chunk_shape.iter().map(|&v| v as u64).collect(),
+                            chunks: m.chunks.len() as u64,
+                            payload_bytes: m.payload_bytes(),
+                            precision: m.precision,
+                        }),
+                        false,
+                    )
+                }
+                Err((status, msg)) => (error_body(status, &msg), false),
+            }
+        }
+        Request::ReadRegion {
+            name,
+            origin,
+            shape,
+        } => {
+            metrics.read_region.incr();
+            let reply = match lookup_store(inner, &name) {
+                Ok(store) => read_region_reply(inner, &store, &origin, &shape, scratch),
+                Err((status, msg)) => error_body(status, &msg),
+            };
+            (reply, false)
+        }
+    }
+}
+
+/// Resolve an archive name to an open store: the shared table first,
+/// then lazily from the root directory (`name`, then `name.ffcz`).
+fn lookup_store(inner: &ServerInner, name: &str) -> Result<Arc<Store>, (u8, String)> {
+    if let Some(store) = read(&inner.stores).get(name) {
+        return Ok(Arc::clone(store));
+    }
+    if name.is_empty()
+        || name.starts_with(['/', '\\'])
+        || name.contains('\\')
+        || name.split('/').any(|c| c.is_empty() || c == "." || c == "..")
+    {
+        return Err((
+            ST_BAD_REQUEST,
+            format!("invalid archive name '{name}' (relative paths only, no '..')"),
+        ));
+    }
+    let Some(root) = &inner.opts.root else {
+        return Err((
+            ST_UNKNOWN_ARCHIVE,
+            format!("archive '{name}' is not registered and no --root is configured"),
+        ));
+    };
+    let direct = root.join(name);
+    let path = if direct.is_file() {
+        direct
+    } else {
+        let with_ext = root.join(format!("{name}.ffcz"));
+        if with_ext.is_file() {
+            with_ext
+        } else {
+            return Err((
+                ST_UNKNOWN_ARCHIVE,
+                format!("no archive '{name}' under {}", root.display()),
+            ));
+        }
+    };
+    let store = match Store::open(&path) {
+        Ok(store) => store
+            .with_retry_policy(inner.opts.retry)
+            .with_cache_budget(inner.opts.cache_bytes),
+        Err(e) => return Err((ST_IO, format!("{e:#}"))),
+    };
+    let store = Arc::new(store);
+    let mut stores = write(&inner.stores);
+    // Two connections may race to open the same archive; first insert
+    // wins so every request shares one decoded-chunk cache.
+    let entry = stores
+        .entry(name.to_string())
+        .or_insert_with(|| Arc::clone(&store));
+    Ok(Arc::clone(entry))
+}
+
+fn read_region_reply(
+    inner: &ServerInner,
+    store: &Store,
+    origin: &[u64],
+    shape: &[u64],
+    scratch: &mut CorrectionScratch,
+) -> Vec<u8> {
+    let array = store.manifest().shape.clone();
+    if origin.len() != array.len() || shape.len() != array.len() {
+        return error_body(
+            ST_BAD_REGION,
+            &format!(
+                "region rank {} does not match array rank {}",
+                shape.len(),
+                array.len()
+            ),
+        );
+    }
+    let mut o = Vec::with_capacity(array.len());
+    let mut s = Vec::with_capacity(array.len());
+    for d in 0..array.len() {
+        let (Ok(ov), Ok(sv)) = (usize::try_from(origin[d]), usize::try_from(shape[d])) else {
+            return error_body(ST_BAD_REGION, "region coordinates overflow");
+        };
+        if sv == 0 {
+            return error_body(ST_BAD_REGION, &format!("zero-sized region axis {d}"));
+        }
+        match ov.checked_add(sv) {
+            Some(end) if end <= array[d] => {}
+            _ => {
+                return error_body(
+                    ST_BAD_REGION,
+                    &format!(
+                        "axis {d}: origin {ov} + shape {sv} exceeds array extent {}",
+                        array[d]
+                    ),
+                )
+            }
+        }
+        o.push(ov);
+        s.push(sv);
+    }
+    let Some(n) = s.iter().try_fold(1usize, |a, &v| a.checked_mul(v)) else {
+        return error_body(ST_TOO_LARGE, "region sample count overflows");
+    };
+    let resp_bytes = 3 + 8 * s.len() + 8 * n;
+    if resp_bytes > inner.opts.max_response_bytes {
+        return error_body(
+            ST_TOO_LARGE,
+            &format!(
+                "a {n}-sample region needs a {resp_bytes}-byte response (cap {})",
+                inner.opts.max_response_bytes
+            ),
+        );
+    }
+    match store.read_region_with_scratch(&o, &s, scratch) {
+        Ok(field) => region_body(field.shape(), store.manifest().precision, field.data()),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let io_like = e
+                .chain()
+                .any(|c| c.downcast_ref::<std::io::Error>().is_some())
+                || msg.contains("CRC-32");
+            error_body(if io_like { ST_IO } else { ST_INTERNAL }, &msg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::CodecChainSpec;
+    use crate::data::synth::grf::GrfBuilder;
+    use crate::server::Client;
+    use crate::store::{encode_store, StoreWriteOptions};
+
+    fn fixture_bytes(seed: u64) -> Vec<u8> {
+        let field = GrfBuilder::new(&[12, 10]).lognormal(1.0).seed(seed).build();
+        let opts = StoreWriteOptions::new(&[5, 4]).workers(1);
+        let (bytes, _, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
+        bytes
+    }
+
+    #[test]
+    fn serves_registered_in_memory_archives() {
+        let bytes = fixture_bytes(11);
+        let store = Arc::new(Store::from_bytes(bytes.clone()).unwrap());
+        let server = ArchiveServer::start(ServeOptions::default()).unwrap();
+        server.register("mem", Arc::clone(&store));
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        client.ping().unwrap();
+
+        let stat = client.stat("mem").unwrap();
+        assert_eq!(stat.shape, vec![12, 10]);
+        assert_eq!(stat.chunk_shape, vec![5, 4]);
+        assert_eq!(stat.chunks, 9);
+        assert_eq!(stat.precision, crate::data::Precision::Double);
+
+        let truth = Store::from_bytes(bytes).unwrap();
+        let want = truth.read_region(&[3, 2], &[6, 7], 1).unwrap();
+        let got = client.read_region("mem", &[3, 2], &[6, 7]).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(got.data(), want.data());
+        server.shutdown();
+    }
+
+    #[test]
+    fn error_statuses_are_precise_and_nonfatal() {
+        let store = Arc::new(Store::from_bytes(fixture_bytes(12)).unwrap());
+        let server = ArchiveServer::start(ServeOptions::default()).unwrap();
+        server.register("f", store);
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+
+        let unknown = client.stat("missing").unwrap_err();
+        assert_eq!(super::super::client::status_of(&unknown), Some(ST_UNKNOWN_ARCHIVE));
+
+        let bad_rank = client.read_region("f", &[0], &[4]).unwrap_err();
+        assert_eq!(super::super::client::status_of(&bad_rank), Some(ST_BAD_REGION));
+
+        let oob = client.read_region("f", &[10, 0], &[6, 4]).unwrap_err();
+        assert_eq!(super::super::client::status_of(&oob), Some(ST_BAD_REGION));
+
+        let traversal = client.stat("../escape").unwrap_err();
+        assert_eq!(super::super::client::status_of(&traversal), Some(ST_BAD_REQUEST));
+
+        // The connection survived all four errors.
+        client.ping().unwrap();
+        let got = client.read_region("f", &[0, 0], &[12, 10]).unwrap();
+        assert_eq!(got.shape(), &[12, 10]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn response_size_cap_refuses_before_decoding() {
+        let store = Arc::new(Store::from_bytes(fixture_bytes(13)).unwrap());
+        let opts = ServeOptions {
+            max_response_bytes: 128,
+            ..ServeOptions::default()
+        };
+        let server = ArchiveServer::start(opts).unwrap();
+        server.register("f", Arc::clone(&store));
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let err = client.read_region("f", &[0, 0], &[12, 10]).unwrap_err();
+        assert_eq!(super::super::client::status_of(&err), Some(ST_TOO_LARGE));
+        assert_eq!(store.chunks_decoded(), 0, "cap must refuse before decode");
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_request_stops_the_server() {
+        let server = ArchiveServer::start(ServeOptions::default()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client.shutdown_server().unwrap();
+        server.join();
+        // The listener is gone; a fresh connection must fail (possibly
+        // after the OS drains the backlog, so poll briefly).
+        let mut refused = false;
+        for _ in 0..50 {
+            match Client::connect(&addr) {
+                Err(_) => {
+                    refused = true;
+                    break;
+                }
+                Ok(mut c) => {
+                    if c.ping().is_err() {
+                        refused = true;
+                        break;
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(refused, "server kept serving after shutdown");
+    }
+}

@@ -20,6 +20,10 @@
 //! * [`parallel`] — the `std::thread` worker pool that fans per-chunk
 //!   encode/decode work across cores, plus the bounded-window ordered sink
 //!   ([`par_try_map_ordered_sink`]) behind the streaming writer;
+//! * [`storage`] — the reader-side byte-source abstraction
+//!   ([`ReadableStorage`]: ranged `read_at`/`size`), with local-file,
+//!   in-memory, and deterministic fault-injecting backends plus the
+//!   transient-fault [`RetryPolicy`];
 //! * [`writer`] / [`reader`] — container production (streaming by default:
 //!   chunk payloads spill to the output as they complete, holding at most
 //!   `workers + queue_depth` payloads in memory; per-chunk codec overrides
@@ -64,6 +68,7 @@ pub mod grid;
 pub mod manifest;
 pub mod parallel;
 pub mod reader;
+pub mod storage;
 pub mod writer;
 
 pub use crate::codec::{ChunkStats, CodecChain, CodecChainSpec, EncodedChunk};
@@ -73,6 +78,10 @@ pub use parallel::{
     par_try_map, par_try_map_ordered_sink, par_try_map_ordered_sink_with, par_try_map_with,
 };
 pub use reader::Store;
+pub use storage::{
+    read_exact_at, read_exact_at_retry, FaultCounts, FaultHandle, FaultInjector, FaultPlan,
+    FileStorage, MemStorage, ReadableStorage, RetryPolicy,
+};
 pub use writer::{
     encode_store, stream_store_to, write_store, write_store_in_memory, StoreStreamWriter,
     StoreWriteOptions, StoreWriteReport,

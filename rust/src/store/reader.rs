@@ -1,15 +1,19 @@
 //! Store reader: manifest-only open, random-access chunk decode (CRC-32
 //! verified, per-chunk codec chains), and partial `read_region` that
-//! touches only intersecting chunks.
+//! touches only intersecting chunks. All byte I/O goes through the
+//! [`ReadableStorage`] abstraction in [`super::storage`], so a store can
+//! read from a local file, a memory buffer, or any custom backend (the
+//! fault-injecting wrapper in tests, object stores later) — with transient
+//! storage faults retried under a configurable [`RetryPolicy`].
 
 use std::collections::{BTreeMap, HashMap};
-use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
 use crate::codec::CodecChain;
+use crate::correction::CorrectionScratch;
 use crate::data::Field;
 use crate::encoding::{crc32, fixed};
 use crate::telemetry;
@@ -17,14 +21,10 @@ use crate::util::sync::lock;
 
 use super::grid::{extract_subarray, insert_subarray, ChunkGrid};
 use super::manifest::{Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
-use super::parallel::par_try_map;
-
-enum Source {
-    /// Seekable file; chunk payloads are read on demand.
-    File(Mutex<std::fs::File>),
-    /// Whole container held in memory.
-    Mem(Vec<u8>),
-}
+use super::parallel::par_try_map_with;
+use super::storage::{
+    read_exact_at_retry, FileStorage, MemStorage, ReadableStorage, RetryPolicy,
+};
 
 /// The precise error for archives whose streaming write never completed:
 /// valid head magic, missing or displaced trailer.
@@ -64,7 +64,9 @@ fn truncated_store_error() -> anyhow::Error {
 /// assert_eq!(store.decompress_all(1).unwrap().data(), field.data());
 /// ```
 pub struct Store {
-    source: Source,
+    storage: Arc<dyn ReadableStorage>,
+    /// Transient-fault retry policy for payload reads (default: none).
+    retry: RetryPolicy,
     manifest: Manifest,
     grid: ChunkGrid,
     /// One executable chain per manifest chain-table entry.
@@ -76,6 +78,8 @@ pub struct Store {
     /// counts); the process-wide `store.read.*` registry metrics
     /// aggregate the same events across every store.
     chunks_decoded: telemetry::Counter,
+    /// Transient storage-fault retries performed by this handle.
+    retries: telemetry::Counter,
     /// Decoded-chunk LRU (disabled until [`Store::set_cache_budget`]).
     cache: Mutex<ChunkCache>,
     cache_hits: telemetry::Counter,
@@ -88,6 +92,8 @@ struct ReadMetrics {
     lru_misses: telemetry::Counter,
     /// High-water mark of decoded bytes held by any one store's LRU.
     lru_bytes: telemetry::Gauge,
+    /// Transient storage-fault retries across all stores.
+    retries: telemetry::Counter,
 }
 
 fn read_metrics() -> &'static ReadMetrics {
@@ -96,6 +102,7 @@ fn read_metrics() -> &'static ReadMetrics {
         lru_hits: telemetry::counter("store.read.lru_hits"),
         lru_misses: telemetry::counter("store.read.lru_misses"),
         lru_bytes: telemetry::gauge("store.read.lru_bytes"),
+        retries: telemetry::counter("store.read.retries"),
     })
 }
 
@@ -172,58 +179,50 @@ impl ChunkCache {
 impl Store {
     /// Open a store file, reading only footer + manifest.
     pub fn open(path: &Path) -> Result<Self> {
-        let mut file = std::fs::File::open(path)
+        let storage = FileStorage::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
-        let file_len = file
-            .metadata()
-            .with_context(|| format!("stat {}", path.display()))?
-            .len();
-        let (manifest_offset, manifest_len) = Self::parse_footer_source(
-            &mut file,
-            file_len,
-        )?;
-        let mut manifest_buf = vec![0u8; manifest_len as usize];
-        file.seek(SeekFrom::Start(manifest_offset))?;
-        file.read_exact(&mut manifest_buf)
-            .context("reading manifest")?;
-        let manifest = Manifest::from_bytes(&manifest_buf)?;
-        Self::build(Source::File(Mutex::new(file)), manifest, manifest_offset)
+        Self::open_storage(Arc::new(storage))
     }
 
     /// Open a store held fully in memory.
     pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
-        let len = bytes.len() as u64;
-        if bytes.len() < STORE_MAGIC.len() || &bytes[..STORE_MAGIC.len()] != STORE_MAGIC {
-            bail!("not a .ffcz store (bad head magic)");
-        }
-        if bytes.len() < STORE_MAGIC.len() + FOOTER_LEN {
-            bail!(truncated_store_error());
-        }
-        let footer = &bytes[bytes.len() - FOOTER_LEN..];
-        let (manifest_offset, manifest_len) = Self::parse_footer(footer, len)?;
-        let manifest = Manifest::from_bytes(
-            &bytes[manifest_offset as usize..(manifest_offset + manifest_len) as usize],
-        )?;
-        Self::build(Source::Mem(bytes), manifest, manifest_offset)
+        Self::open_storage(Arc::new(MemStorage::new(bytes)))
     }
 
-    fn parse_footer_source(file: &mut std::fs::File, file_len: u64) -> Result<(u64, u64)> {
-        if file_len < STORE_MAGIC.len() as u64 {
+    /// Open a store from any [`ReadableStorage`] backend, reading only
+    /// head magic, footer, and manifest. The open path itself does not
+    /// retry transient faults (openers want failures surfaced
+    /// immediately); set a payload-read policy with
+    /// [`Store::with_retry_policy`] afterwards.
+    pub fn open_storage(storage: Arc<dyn ReadableStorage>) -> Result<Self> {
+        let total_len = storage
+            .size()
+            .with_context(|| format!("stat {}", storage.describe()))?;
+        if total_len < STORE_MAGIC.len() as u64 {
             bail!("not a .ffcz store (file too short)");
         }
         let mut head = [0u8; 8];
-        file.seek(SeekFrom::Start(0))?;
-        file.read_exact(&mut head)?;
+        super::storage::read_exact_at(storage.as_ref(), 0, &mut head)
+            .with_context(|| format!("reading header of {}", storage.describe()))?;
         if &head != STORE_MAGIC {
             bail!("not a .ffcz store (bad head magic)");
         }
-        if file_len < (STORE_MAGIC.len() + FOOTER_LEN) as u64 {
+        if total_len < (STORE_MAGIC.len() + FOOTER_LEN) as u64 {
             bail!(truncated_store_error());
         }
         let mut footer = [0u8; FOOTER_LEN];
-        file.seek(SeekFrom::End(-(FOOTER_LEN as i64)))?;
-        file.read_exact(&mut footer)?;
-        Self::parse_footer(&footer, file_len)
+        super::storage::read_exact_at(
+            storage.as_ref(),
+            total_len - FOOTER_LEN as u64,
+            &mut footer,
+        )
+        .with_context(|| format!("reading trailer of {}", storage.describe()))?;
+        let (manifest_offset, manifest_len) = Self::parse_footer(&footer, total_len)?;
+        let mut manifest_buf = vec![0u8; manifest_len as usize];
+        super::storage::read_exact_at(storage.as_ref(), manifest_offset, &mut manifest_buf)
+            .context("reading manifest")?;
+        let manifest = Manifest::from_bytes(&manifest_buf)?;
+        Self::build(storage, manifest, manifest_offset)
     }
 
     fn parse_footer(footer: &[u8], total_len: u64) -> Result<(u64, u64)> {
@@ -251,7 +250,11 @@ impl Store {
         Ok((manifest_offset, manifest_len))
     }
 
-    fn build(source: Source, manifest: Manifest, manifest_offset: u64) -> Result<Self> {
+    fn build(
+        storage: Arc<dyn ReadableStorage>,
+        manifest: Manifest,
+        manifest_offset: u64,
+    ) -> Result<Self> {
         let grid = manifest.grid()?;
         let codecs = manifest
             .chains
@@ -273,16 +276,36 @@ impl Store {
             }
         }
         Ok(Self {
-            source,
+            storage,
+            retry: RetryPolicy::none(),
             manifest,
             grid,
             codecs,
             manifest_offset,
             chunks_decoded: telemetry::Counter::new(),
+            retries: telemetry::Counter::new(),
             cache: Mutex::new(ChunkCache::disabled()),
             cache_hits: telemetry::Counter::new(),
             cache_misses: telemetry::Counter::new(),
         })
+    }
+
+    /// Retry transient storage faults (interrupted syscalls, timeouts) on
+    /// payload reads under `policy`. Hard faults — CRC mismatches,
+    /// premature EOF, permission errors — are never retried.
+    pub fn with_retry_policy(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
+    }
+
+    /// See [`Store::with_retry_policy`].
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.retry = policy;
+    }
+
+    /// Transient-fault retries performed by this handle so far.
+    pub fn retries(&self) -> u64 {
+        self.retries.get()
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -347,11 +370,23 @@ impl Store {
     /// racing misses on the same chunk decode twice and the second insert
     /// wins.
     pub fn decode_chunk_cached(&self, index: usize) -> Result<Arc<Field>> {
+        self.decode_chunk_cached_with_scratch(index, &mut CorrectionScratch::new())
+    }
+
+    /// [`Store::decode_chunk_cached`] with caller-owned correction scratch
+    /// (cache hits never touch it). Batch readers — `read_region` workers,
+    /// server request handlers — hold one scratch per worker so decode
+    /// transform state warms once per chunk shape.
+    pub fn decode_chunk_cached_with_scratch(
+        &self,
+        index: usize,
+        scratch: &mut CorrectionScratch,
+    ) -> Result<Arc<Field>> {
         {
             let mut cache = lock(&self.cache);
             if cache.budget == 0 {
                 drop(cache);
-                return Ok(Arc::new(self.decode_chunk(index)?));
+                return Ok(Arc::new(self.decode_chunk_with_scratch(index, scratch)?));
             }
             if let Some(field) = cache.touch(index) {
                 drop(cache);
@@ -360,7 +395,7 @@ impl Store {
                 return Ok(field);
             }
         }
-        let field = Arc::new(self.decode_chunk(index)?);
+        let field = Arc::new(self.decode_chunk_with_scratch(index, scratch)?);
         self.cache_misses.incr();
         read_metrics().lru_misses.incr();
         let mut cache = lock(&self.cache);
@@ -392,21 +427,17 @@ impl Store {
         Ok(field)
     }
 
-    /// Raw payload bytes of chunk `index`.
+    /// Raw payload bytes of chunk `index`, fetched through the storage
+    /// backend (transient faults retried under the store's policy).
     fn chunk_bytes(&self, index: usize) -> Result<Vec<u8>> {
         let entry = &self.manifest.chunks[index];
         let mut buf = vec![0u8; entry.length as usize];
-        match &self.source {
-            Source::Mem(bytes) => {
-                let start = entry.offset as usize;
-                buf.copy_from_slice(&bytes[start..start + entry.length as usize]);
-            }
-            Source::File(file) => {
-                let mut file = lock(file);
-                file.seek(SeekFrom::Start(entry.offset))?;
-                file.read_exact(&mut buf)
-                    .with_context(|| format!("reading chunk {}", self.grid.chunk_key(index)))?;
-            }
+        let retries =
+            read_exact_at_retry(self.storage.as_ref(), entry.offset, &mut buf, &self.retry)
+                .with_context(|| format!("reading chunk {}", self.grid.chunk_key(index)))?;
+        if retries > 0 {
+            self.retries.add(retries as u64);
+            read_metrics().retries.add(retries as u64);
         }
         // Verify the payload against the manifest checksum before it
         // reaches any codec: corruption in the payload region surfaces as
@@ -426,6 +457,17 @@ impl Store {
 
     /// Decode chunk `index` (its edge-clipped extent as a standalone field).
     pub fn decode_chunk(&self, index: usize) -> Result<Field> {
+        self.decode_chunk_with_scratch(index, &mut CorrectionScratch::new())
+    }
+
+    /// [`Store::decode_chunk`] with caller-owned correction scratch;
+    /// bit-identical output, but transform plans and workspace buffers
+    /// warm once per chunk shape instead of once per chunk.
+    pub fn decode_chunk_with_scratch(
+        &self,
+        index: usize,
+        scratch: &mut CorrectionScratch,
+    ) -> Result<Field> {
         if index >= self.manifest.chunks.len() {
             bail!(
                 "chunk index {index} out of range ({} chunks)",
@@ -437,7 +479,7 @@ impl Store {
         let bytes = self.chunk_bytes(index)?;
         self.chunks_decoded.incr();
         self.codecs[self.manifest.chunks[index].chain]
-            .decode_chunk(&bytes, &extent, self.manifest.precision)
+            .decode_chunk_with_scratch(&bytes, &extent, self.manifest.precision, scratch)
             .with_context(|| format!("decoding chunk {}", self.grid.chunk_key(index)))
     }
 
@@ -467,32 +509,69 @@ impl Store {
         let read_span_id = read_span.id();
         let n: usize = shape.iter().product();
         let mut out = vec![0.0f64; n];
-        let pieces = par_try_map(ids.len(), workers, |j| {
-            let index = ids[j];
-            let _chunk_span = telemetry::span_with_parent("store.chunk.read", read_span_id)
-                .arg("chunk", index as u64);
-            let chunk = self.decode_chunk_cached(index)?;
-            let coords = self.grid.chunk_coords(index);
-            let c_origin = self.grid.chunk_origin(&coords);
-            let c_extent = self.grid.chunk_extent(&coords);
-            // Intersection of the chunk box with the requested region.
-            let lo: Vec<usize> = (0..shape.len())
-                .map(|d| origin[d].max(c_origin[d]))
-                .collect();
-            let hi: Vec<usize> = (0..shape.len())
-                .map(|d| (origin[d] + shape[d]).min(c_origin[d] + c_extent[d]))
-                .collect();
-            let sub_shape: Vec<usize> = (0..shape.len()).map(|d| hi[d] - lo[d]).collect();
-            let chunk_local: Vec<usize> =
-                (0..shape.len()).map(|d| lo[d] - c_origin[d]).collect();
-            let sub = extract_subarray(chunk.data(), &c_extent, &chunk_local, &sub_shape);
-            let region_local: Vec<usize> = (0..shape.len()).map(|d| lo[d] - origin[d]).collect();
-            Ok((region_local, sub_shape, sub))
+        // One correction scratch per worker: decode transform state (plan
+        // handles, FFT workspace, spectrum buffers) warms once per chunk
+        // shape per worker and is reused across all its chunks.
+        let pieces = par_try_map_with(ids.len(), workers, CorrectionScratch::new, |j, scratch| {
+            self.read_chunk_piece(ids[j], origin, shape, read_span_id, scratch)
         })?;
         for (region_local, sub_shape, sub) in pieces {
             insert_subarray(&mut out, shape, &region_local, &sub, &sub_shape);
         }
         Ok(Field::new(shape, out, self.manifest.precision))
+    }
+
+    /// [`Store::read_region`] decoded sequentially through caller-owned
+    /// scratch — the entry point for request handlers (the archive read
+    /// server) that pool one scratch per connection across many requests.
+    pub fn read_region_with_scratch(
+        &self,
+        origin: &[usize],
+        shape: &[usize],
+        scratch: &mut CorrectionScratch,
+    ) -> Result<Field> {
+        let ids = self.grid.chunks_intersecting(origin, shape)?;
+        let read_span = telemetry::span("store.read_region").arg("chunks", ids.len() as u64);
+        let read_span_id = read_span.id();
+        let n: usize = shape.iter().product();
+        let mut out = vec![0.0f64; n];
+        for &index in &ids {
+            let (region_local, sub_shape, sub) =
+                self.read_chunk_piece(index, origin, shape, read_span_id, scratch)?;
+            insert_subarray(&mut out, shape, &region_local, &sub, &sub_shape);
+        }
+        Ok(Field::new(shape, out, self.manifest.precision))
+    }
+
+    /// Decode one chunk (through the LRU) and extract its intersection
+    /// with the requested region: `(region-local origin, piece shape,
+    /// piece samples)`.
+    fn read_chunk_piece(
+        &self,
+        index: usize,
+        origin: &[usize],
+        shape: &[usize],
+        parent_span: u64,
+        scratch: &mut CorrectionScratch,
+    ) -> Result<(Vec<usize>, Vec<usize>, Vec<f64>)> {
+        let _chunk_span = telemetry::span_with_parent("store.chunk.read", parent_span)
+            .arg("chunk", index as u64);
+        let chunk = self.decode_chunk_cached_with_scratch(index, scratch)?;
+        let coords = self.grid.chunk_coords(index);
+        let c_origin = self.grid.chunk_origin(&coords);
+        let c_extent = self.grid.chunk_extent(&coords);
+        // Intersection of the chunk box with the requested region.
+        let lo: Vec<usize> = (0..shape.len())
+            .map(|d| origin[d].max(c_origin[d]))
+            .collect();
+        let hi: Vec<usize> = (0..shape.len())
+            .map(|d| (origin[d] + shape[d]).min(c_origin[d] + c_extent[d]))
+            .collect();
+        let sub_shape: Vec<usize> = (0..shape.len()).map(|d| hi[d] - lo[d]).collect();
+        let chunk_local: Vec<usize> = (0..shape.len()).map(|d| lo[d] - c_origin[d]).collect();
+        let sub = extract_subarray(chunk.data(), &c_extent, &chunk_local, &sub_shape);
+        let region_local: Vec<usize> = (0..shape.len()).map(|d| lo[d] - origin[d]).collect();
+        Ok((region_local, sub_shape, sub))
     }
 
     /// Decode the whole array (all chunks, in parallel).

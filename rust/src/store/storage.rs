@@ -1,0 +1,559 @@
+//! Storage-backend abstraction for reader I/O.
+//!
+//! [`crate::store::reader::Store`] historically read straight from a local
+//! `File`. Production archives live behind many kinds of byte sources —
+//! local files, memory-resident containers, object stores, test harnesses —
+//! so all reader I/O now goes through [`ReadableStorage`]: a ranged
+//! `read_at`/`size` API (mirroring the `zarrs_storage` readable-storage
+//! split). Three backends ship here:
+//!
+//! * [`FileStorage`] — a local file, positioned reads (`pread` on unix, so
+//!   concurrent readers never serialize on a seek lock);
+//! * [`MemStorage`] — a container held fully in memory;
+//! * [`FaultInjector`] — a deterministic, seeded fault-injecting wrapper
+//!   around any backend (short reads, transient `io::Error`s, hard I/O
+//!   failures, byte corruption, injected latency). This is what makes the
+//!   storage layer's *failure* behavior testable rather than assumed: the
+//!   fault-injection suite in `rust/tests/storage.rs` drives every decode
+//!   path through scheduled faults and asserts precise errors, never
+//!   panics.
+//!
+//! Short reads are part of the contract (`read_at` may return fewer bytes
+//! than requested); callers that need a full range use [`read_exact_at`],
+//! and callers that tolerate *transient* faults (interrupted syscalls,
+//! storage-side timeouts) wrap it with [`read_exact_at_retry`] under a
+//! [`RetryPolicy`].
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::sync::lock;
+use crate::util::XorShift;
+
+/// A byte source supporting ranged reads — the reader-side storage
+/// abstraction behind [`crate::store::Store`].
+///
+/// Implementations must be usable from many threads at once (`Send +
+/// Sync`); `read_at` takes `&self` so concurrent chunk fetches never
+/// serialize in the trait layer.
+pub trait ReadableStorage: Send + Sync {
+    /// Read up to `buf.len()` bytes starting at absolute `offset` into
+    /// `buf`, returning how many bytes were read. A return of `0` with a
+    /// non-empty `buf` means end-of-storage. Short reads are allowed; use
+    /// [`read_exact_at`] to loop a range to completion.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize>;
+
+    /// Total size of the storage in bytes.
+    fn size(&self) -> io::Result<u64>;
+
+    /// Human-readable description for error messages (a path, `<memory>`,
+    /// a wrapped backend).
+    fn describe(&self) -> String;
+}
+
+impl<S: ReadableStorage + ?Sized> ReadableStorage for Arc<S> {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        (**self).read_at(offset, buf)
+    }
+    fn size(&self) -> io::Result<u64> {
+        (**self).size()
+    }
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+}
+
+/// Fill `buf` from `storage` starting at `offset`, looping over short
+/// reads. Premature end-of-storage surfaces as [`io::ErrorKind::UnexpectedEof`];
+/// every other `io::Error` (including transient kinds) is surfaced as-is —
+/// retrying is policy, not mechanism, and lives in [`read_exact_at_retry`].
+pub fn read_exact_at<S: ReadableStorage + ?Sized>(
+    storage: &S,
+    offset: u64,
+    buf: &mut [u8],
+) -> io::Result<()> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let n = storage.read_at(offset + filled as u64, &mut buf[filled..])?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!(
+                    "unexpected end of storage: wanted {} bytes at offset {}, got {} ({})",
+                    buf.len(),
+                    offset,
+                    filled,
+                    storage.describe()
+                ),
+            ));
+        }
+        filled += n;
+    }
+    Ok(())
+}
+
+/// Retry/backoff policy for *transient* storage faults (interrupted
+/// syscalls, would-block, storage-side timeouts). Hard faults — permission
+/// errors, corruption, premature EOF — are never retried.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (1 = no retry).
+    pub max_attempts: u32,
+    /// Sleep before retry `k` is `backoff × k` (linear backoff).
+    pub backoff: Duration,
+}
+
+impl RetryPolicy {
+    /// No retries: every fault surfaces immediately.
+    pub fn none() -> Self {
+        Self {
+            max_attempts: 1,
+            backoff: Duration::ZERO,
+        }
+    }
+
+    /// Retry transient faults up to `max_attempts` total attempts with
+    /// linear `backoff` between them.
+    pub fn transient(max_attempts: u32, backoff: Duration) -> Self {
+        Self {
+            max_attempts: max_attempts.max(1),
+            backoff,
+        }
+    }
+
+    /// Is `kind` a transient fault worth retrying?
+    pub fn is_transient(kind: io::ErrorKind) -> bool {
+        matches!(
+            kind,
+            io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+        )
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// [`read_exact_at`] under a [`RetryPolicy`]: transient faults are retried
+/// (with linear backoff) up to the attempt budget; the whole range is
+/// re-read from `offset` on each attempt. Returns the number of retries
+/// performed (0 on a clean first attempt) so callers can account them.
+pub fn read_exact_at_retry<S: ReadableStorage + ?Sized>(
+    storage: &S,
+    offset: u64,
+    buf: &mut [u8],
+    policy: &RetryPolicy,
+) -> io::Result<u32> {
+    let mut retries = 0u32;
+    loop {
+        match read_exact_at(storage, offset, buf) {
+            Ok(()) => return Ok(retries),
+            Err(e)
+                if RetryPolicy::is_transient(e.kind()) && retries + 1 < policy.max_attempts =>
+            {
+                retries += 1;
+                if !policy.backoff.is_zero() {
+                    std::thread::sleep(policy.backoff * retries);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Local-file backend. On unix the reads are positioned (`pread`), so any
+/// number of threads can fetch chunks concurrently without a seek lock.
+pub struct FileStorage {
+    #[cfg(unix)]
+    file: std::fs::File,
+    #[cfg(not(unix))]
+    file: Mutex<std::fs::File>,
+    len: u64,
+    path: PathBuf,
+}
+
+impl FileStorage {
+    /// Open `path` read-only and stat its length. Archives are immutable
+    /// once written, so the length is cached at open.
+    pub fn open(path: &Path) -> io::Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        Ok(Self {
+            #[cfg(unix)]
+            file,
+            #[cfg(not(unix))]
+            file: Mutex::new(file),
+            len,
+            path: path.to_path_buf(),
+        })
+    }
+}
+
+impl ReadableStorage for FileStorage {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_at(buf, offset)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut file = lock(&self.file);
+            file.seek(SeekFrom::Start(offset))?;
+            file.read(buf)
+        }
+    }
+
+    fn size(&self) -> io::Result<u64> {
+        Ok(self.len)
+    }
+
+    fn describe(&self) -> String {
+        self.path.display().to_string()
+    }
+}
+
+/// In-memory backend: the whole container as a shared byte buffer.
+pub struct MemStorage {
+    bytes: Arc<Vec<u8>>,
+}
+
+impl MemStorage {
+    pub fn new(bytes: Vec<u8>) -> Self {
+        Self {
+            bytes: Arc::new(bytes),
+        }
+    }
+
+    /// Share an existing buffer without copying.
+    pub fn shared(bytes: Arc<Vec<u8>>) -> Self {
+        Self { bytes }
+    }
+}
+
+impl ReadableStorage for MemStorage {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        let len = self.bytes.len() as u64;
+        if offset >= len {
+            return Ok(0);
+        }
+        let start = offset as usize;
+        let n = buf.len().min(self.bytes.len() - start);
+        buf[..n].copy_from_slice(&self.bytes[start..start + n]);
+        Ok(n)
+    }
+
+    fn size(&self) -> io::Result<u64> {
+        Ok(self.bytes.len() as u64)
+    }
+
+    fn describe(&self) -> String {
+        format!("<memory: {} bytes>", self.bytes.len())
+    }
+}
+
+/// Deterministic fault schedule for [`FaultInjector`]. Every decision is a
+/// pure function of the seeded RNG stream and the wrapper's operation
+/// counter, so a single-threaded read sequence replays the exact same
+/// faults on every run. (Under concurrency the *assignment* of op indices
+/// to reads depends on thread interleaving; deterministic tests drive the
+/// injector single-threaded.)
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// RNG seed for short-read split points and corruption positions.
+    pub seed: u64,
+    /// Split reads at a seeded point (at least 1 byte is still returned, so
+    /// fault-free consumers that loop via [`read_exact_at`] stay correct).
+    pub short_reads: bool,
+    /// Every `transient_every`-th operation (1-based op counter) fails with
+    /// [`io::ErrorKind::Interrupted`] *before* touching the inner backend.
+    /// `0` disables. With a value ≥ 2 an immediate retry is the next op
+    /// index and cannot fault again, so retry success is deterministic.
+    pub transient_every: u64,
+    /// Hard (non-transient) I/O failure at exactly these 1-based op
+    /// indices.
+    pub fail_ops: Vec<u64>,
+    /// Flip one byte (at a seeded position) of the data returned by exactly
+    /// these 1-based op indices — downstream CRC-32 checks must catch it.
+    pub corrupt_ops: Vec<u64>,
+    /// Sleep this long before every read (simulated storage latency).
+    pub latency: Duration,
+}
+
+impl FaultPlan {
+    /// A passthrough plan: no faults of any kind. A [`FaultInjector`] with
+    /// this plan must be byte-identical to its inner backend (the property
+    /// test in `rust/tests/storage.rs` asserts exactly that).
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+/// Counters of faults actually injected so far.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub ops: u64,
+    pub short_reads: u64,
+    pub transients: u64,
+    pub failures: u64,
+    pub corruptions: u64,
+}
+
+struct FaultState {
+    plan: FaultPlan,
+    rng: XorShift,
+    counts: FaultCounts,
+}
+
+/// Shared handle onto a [`FaultInjector`]'s mutable fault schedule: tests
+/// flip fault modes mid-run (e.g. enable corruption only *after* a clean
+/// `Store::open`) and read the injection counters.
+#[derive(Clone)]
+pub struct FaultHandle {
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl FaultHandle {
+    /// Replace the active plan (the op counter and RNG stream continue).
+    pub fn set_plan(&self, plan: FaultPlan) {
+        lock(&self.state).plan = plan;
+    }
+
+    /// Faults injected so far.
+    pub fn counts(&self) -> FaultCounts {
+        lock(&self.state).counts
+    }
+}
+
+/// Fault-injecting wrapper around any [`ReadableStorage`] backend,
+/// scheduled deterministically by a [`FaultPlan`].
+pub struct FaultInjector<S> {
+    inner: S,
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl<S: ReadableStorage> FaultInjector<S> {
+    pub fn new(inner: S, plan: FaultPlan) -> Self {
+        let rng = XorShift::new(plan.seed);
+        Self {
+            inner,
+            state: Arc::new(Mutex::new(FaultState {
+                plan,
+                rng,
+                counts: FaultCounts::default(),
+            })),
+        }
+    }
+
+    /// A handle for inspecting/retargeting the fault schedule after the
+    /// injector has been handed to a `Store`.
+    pub fn handle(&self) -> FaultHandle {
+        FaultHandle {
+            state: Arc::clone(&self.state),
+        }
+    }
+}
+
+impl<S: ReadableStorage> ReadableStorage for FaultInjector<S> {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        // Decide this op's fate under the lock (op counter + RNG stream are
+        // the deterministic schedule), then perform the inner read outside
+        // it so injected latency never serializes concurrent readers.
+        let (take, corrupt_at, latency) = {
+            let mut st = lock(&self.state);
+            st.counts.ops += 1;
+            let op = st.counts.ops;
+            if st.plan.transient_every > 0 && op % st.plan.transient_every == 0 {
+                st.counts.transients += 1;
+                return Err(io::Error::new(
+                    io::ErrorKind::Interrupted,
+                    format!("injected transient storage fault (op {op})"),
+                ));
+            }
+            if st.plan.fail_ops.contains(&op) {
+                st.counts.failures += 1;
+                return Err(io::Error::other(format!(
+                    "injected storage failure (op {op})"
+                )));
+            }
+            let mut take = buf.len();
+            if st.plan.short_reads && buf.len() > 1 {
+                take = 1 + st.rng.below(buf.len() - 1);
+                if take < buf.len() {
+                    st.counts.short_reads += 1;
+                }
+            }
+            let corrupt_at = if st.plan.corrupt_ops.contains(&op) && take > 0 {
+                st.counts.corruptions += 1;
+                Some(st.rng.below(take))
+            } else {
+                None
+            };
+            (take, corrupt_at, st.plan.latency)
+        };
+        if !latency.is_zero() {
+            std::thread::sleep(latency);
+        }
+        let n = self.inner.read_at(offset, &mut buf[..take])?;
+        if let Some(pos) = corrupt_at {
+            if n > 0 {
+                buf[pos.min(n - 1)] ^= 0xFF;
+            }
+        }
+        Ok(n)
+    }
+
+    fn size(&self) -> io::Result<u64> {
+        self.inner.size()
+    }
+
+    fn describe(&self) -> String {
+        format!("fault-injected {}", self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem(n: usize) -> MemStorage {
+        MemStorage::new((0..n).map(|i| (i % 251) as u8).collect())
+    }
+
+    #[test]
+    fn mem_storage_ranged_reads_and_eof() {
+        let s = mem(100);
+        assert_eq!(s.size().unwrap(), 100);
+        let mut buf = [0u8; 10];
+        assert_eq!(s.read_at(90, &mut buf).unwrap(), 10);
+        assert_eq!(buf[0], 90);
+        assert_eq!(s.read_at(95, &mut buf).unwrap(), 5);
+        assert_eq!(s.read_at(100, &mut buf).unwrap(), 0);
+        assert_eq!(s.read_at(1000, &mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn file_storage_matches_memory() {
+        let path = std::env::temp_dir().join("ffcz_storage_file_backend_test.bin");
+        let bytes: Vec<u8> = (0..4096u32).map(|i| (i * 7 % 256) as u8).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let f = FileStorage::open(&path).unwrap();
+        assert_eq!(f.size().unwrap(), 4096);
+        let mut a = vec![0u8; 777];
+        let mut b = vec![0u8; 777];
+        read_exact_at(&f, 1234, &mut a).unwrap();
+        read_exact_at(&MemStorage::new(bytes.clone()), 1234, &mut b).unwrap();
+        assert_eq!(a, b);
+        // Premature EOF is precise.
+        let mut big = vec![0u8; 64];
+        let err = read_exact_at(&f, 4090, &mut big).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn short_reads_complete_through_read_exact_at() {
+        let inj = FaultInjector::new(
+            mem(2048),
+            FaultPlan {
+                seed: 7,
+                short_reads: true,
+                ..FaultPlan::none()
+            },
+        );
+        let handle = inj.handle();
+        let mut got = vec![0u8; 1500];
+        read_exact_at(&inj, 100, &mut got).unwrap();
+        let mut want = vec![0u8; 1500];
+        read_exact_at(&mem(2048), 100, &mut want).unwrap();
+        assert_eq!(got, want);
+        assert!(handle.counts().short_reads > 0, "{:?}", handle.counts());
+    }
+
+    #[test]
+    fn transient_faults_retry_deterministically() {
+        let inj = FaultInjector::new(
+            mem(256),
+            FaultPlan {
+                transient_every: 2,
+                ..FaultPlan::none()
+            },
+        );
+        let handle = inj.handle();
+        let mut buf = [0u8; 16];
+        // Op 1 clean, op 2 faults: without retry the second read errors.
+        assert!(read_exact_at(&inj, 0, &mut buf).is_ok());
+        let err = read_exact_at(&inj, 0, &mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        // With retry every read succeeds: a faulted op is followed by a
+        // clean op index, every time.
+        for i in 0..8u64 {
+            let retries =
+                read_exact_at_retry(&inj, i, &mut buf, &RetryPolicy::transient(3, Duration::ZERO))
+                    .unwrap();
+            assert!(retries <= 1);
+        }
+        assert!(handle.counts().transients >= 4);
+    }
+
+    #[test]
+    fn hard_failures_are_not_retried() {
+        let inj = FaultInjector::new(
+            mem(256),
+            FaultPlan {
+                fail_ops: vec![1],
+                ..FaultPlan::none()
+            },
+        );
+        let mut buf = [0u8; 16];
+        let err = read_exact_at_retry(
+            &inj,
+            0,
+            &mut buf,
+            &RetryPolicy::transient(10, Duration::ZERO),
+        )
+        .unwrap_err();
+        assert!(!RetryPolicy::is_transient(err.kind()));
+        assert_eq!(inj.handle().counts().failures, 1);
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_byte() {
+        let inj = FaultInjector::new(
+            mem(256),
+            FaultPlan {
+                seed: 11,
+                corrupt_ops: vec![1],
+                ..FaultPlan::none()
+            },
+        );
+        let mut got = vec![0u8; 64];
+        read_exact_at(&inj, 0, &mut got).unwrap();
+        let mut want = vec![0u8; 64];
+        read_exact_at(&mem(256), 0, &mut want).unwrap();
+        let flipped: Vec<usize> = (0..64).filter(|&i| got[i] != want[i]).collect();
+        assert_eq!(flipped.len(), 1, "{flipped:?}");
+        assert_eq!(got[flipped[0]], want[flipped[0]] ^ 0xFF);
+        assert_eq!(inj.handle().counts().corruptions, 1);
+    }
+
+    #[test]
+    fn plan_can_be_retargeted_through_the_handle() {
+        let inj = FaultInjector::new(mem(256), FaultPlan::none());
+        let handle = inj.handle();
+        let mut buf = [0u8; 8];
+        assert!(read_exact_at(&inj, 0, &mut buf).is_ok());
+        handle.set_plan(FaultPlan {
+            transient_every: 1,
+            ..FaultPlan::none()
+        });
+        assert!(read_exact_at(&inj, 0, &mut buf).is_err());
+        handle.set_plan(FaultPlan::none());
+        assert!(read_exact_at(&inj, 0, &mut buf).is_ok());
+    }
+}

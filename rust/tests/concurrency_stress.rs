@@ -1,6 +1,7 @@
 //! Concurrency stress tests for the crate's shared mutable state: the
 //! process-wide FFT plan caches, the store's decoded-chunk LRU, the
-//! ordered-sink worker pool, and the trace collector's flush-on-thread-exit
+//! ordered-sink worker pool, the archive read server's shared caches and
+//! connection threads, and the trace collector's flush-on-thread-exit
 //! path.
 //!
 //! These tests are the designated workload for the ThreadSanitizer CI job
@@ -212,6 +213,97 @@ fn ordered_sink_stays_ordered_under_forced_reordering() {
         let expect: Vec<(usize, usize)> = (0..N).map(|i| (i, i * 3)).collect();
         assert_eq!(seen, expect, "workers={workers} window={window}");
     }
+}
+
+/// Hammer the archive read server with ≥ 8 concurrent clients requesting
+/// overlapping windows of the same archive while the shared decoded-chunk
+/// LRU is squeezed hard enough to evict constantly. Every response must be
+/// bit-identical to a ground-truth full decompress, the request accounting
+/// must balance, and a clean shutdown must leave no thread behind.
+///
+/// This is the server's entry in the nightly TSan run: the shared state
+/// under attack is the archive map (`RwLock`), the per-archive LRU, the
+/// scratch pool, and the telemetry registry, all crossed by one OS thread
+/// per connection.
+#[test]
+fn server_read_region_consistent_under_concurrent_clients() {
+    use ffcz::server::{ArchiveServer, Client, ServeOptions};
+
+    let _guard = stress_guard();
+    let field = grf_3d(&[12, 10, 8], 4242);
+    let spec = ffcz::codec::CodecChainSpec::ffcz(
+        "sz-like",
+        &ffcz::correction::FfczConfig::relative(1e-3, 1e-3),
+    );
+    let opts = StoreWriteOptions::new(&[5, 4, 3]).workers(3);
+    let (bytes, _, report) = encode_store(&field, &spec, &opts).unwrap();
+    assert!(report.all_chunks_ok);
+    let store = Store::from_bytes(bytes).unwrap();
+    let full = store.decompress_all(2).unwrap();
+    // ~2 of 27 decoded chunks fit: every request churns the shared LRU.
+    store.set_cache_budget(1000);
+
+    let before = telemetry::snapshot();
+    let server = ArchiveServer::start(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    server.register("stress", std::sync::Arc::new(store));
+    let addr = server.local_addr().to_string();
+
+    const CLIENTS: usize = 8;
+    const WINDOWS: usize = 12;
+    let served = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let (addr, field, full, served) = (&addr, &field, &full, &served);
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                client.ping().unwrap();
+                let stat = client.stat("stress").unwrap();
+                assert_eq!(stat.shape, vec![12, 10, 8]);
+                let mut rng = XorShift::new(0x5E7E + t as u64);
+                for _ in 0..WINDOWS {
+                    let mut origin = Vec::new();
+                    let mut shape = Vec::new();
+                    for &d in field.shape() {
+                        let o = (rng.next_f64() * d as f64) as usize % d;
+                        let max_len = d - o;
+                        let s = 1 + (rng.next_f64() * max_len as f64) as usize % max_len.max(1);
+                        origin.push(o);
+                        shape.push(s.min(max_len));
+                    }
+                    let region = client.read_region("stress", &origin, &shape).unwrap();
+                    let expect = extract_subarray(full.data(), full.shape(), &origin, &shape);
+                    let got: Vec<u64> = region.data().iter().map(|v| v.to_bits()).collect();
+                    let want: Vec<u64> = expect.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        got, want,
+                        "window {origin:?}+{shape:?} diverged through the server"
+                    );
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(served.load(Ordering::Relaxed), CLIENTS * WINDOWS);
+
+    // One shutdown request stops the accept loop; `join` returns only
+    // after every connection thread exited.
+    let mut closer = Client::connect(&addr).unwrap();
+    closer.shutdown_server().unwrap();
+    server.join();
+
+    // Request accounting balanced: ping + stat per client, all windows,
+    // plus the shutdown, and zero errors.
+    let after = telemetry::snapshot();
+    let reads = after.counter_delta(&before, "server.requests.read_region");
+    let total = after.counter_delta(&before, "server.requests.total");
+    let errors = after.counter_delta(&before, "server.requests.errors");
+    assert_eq!(reads, (CLIENTS * WINDOWS) as u64);
+    assert_eq!(total, (CLIENTS * (WINDOWS + 2) + 1) as u64);
+    assert_eq!(errors, 0, "no request may have errored under churn");
 }
 
 /// Spans buffered on a worker thread must reach the collector when the

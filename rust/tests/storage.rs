@@ -1,0 +1,353 @@
+//! Storage-backend property and fault-injection tests.
+//!
+//! Two families, matching the two promises the `ReadableStorage`
+//! abstraction makes:
+//!
+//! 1. **Backend equivalence** — `Store::read_region` through the local
+//!    file backend, the in-memory backend, and a fault-free
+//!    `FaultInjector` wrapper is *bit-identical* (and, for lossless
+//!    chains, identical to ground truth extracted from the original
+//!    field). The storage layer may change how bytes arrive, never
+//!    which bytes arrive.
+//! 2. **Fault surfacing** — every injected failure mode (short reads,
+//!    transient I/O errors, hard I/O errors, byte corruption, latency)
+//!    either heals invisibly (short reads; transients under a retry
+//!    policy) or surfaces as a precise `Err` — never a panic, never
+//!    silently wrong data. The schedules are seeded and single-threaded,
+//!    so every assertion is deterministic.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ffcz::codec::CodecChainSpec;
+use ffcz::correction::FfczConfig;
+use ffcz::data::synth::grf::GrfBuilder;
+use ffcz::data::Field;
+use ffcz::store::{
+    encode_store, extract_subarray, FaultHandle, FaultInjector, FaultPlan, FileStorage,
+    MemStorage, RetryPolicy, Store, StoreWriteOptions,
+};
+use ffcz::util::XorShift;
+
+fn grf(shape: &[usize], seed: u64) -> Field {
+    GrfBuilder::new(shape)
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(seed)
+        .build()
+}
+
+fn temp_file(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ffcz_storage_{name}_{}.ffcz", std::process::id()))
+}
+
+/// Encode `field` into a container with the given chain and chunk shape.
+fn container(field: &Field, spec: &CodecChainSpec, chunk: &[usize]) -> Vec<u8> {
+    let opts = StoreWriteOptions::new(chunk).workers(2);
+    let (bytes, manifest, _) = encode_store(field, spec, &opts).unwrap();
+    assert!(manifest.all_chunks_ok());
+    bytes
+}
+
+/// Open the same container through every backend.
+fn all_backends(bytes: &[u8], path: &PathBuf) -> Vec<(&'static str, Store)> {
+    std::fs::write(path, bytes).unwrap();
+    let shared = Arc::new(bytes.to_vec());
+    vec![
+        ("file", Store::open(path).unwrap()),
+        ("from_bytes", Store::from_bytes(bytes.to_vec()).unwrap()),
+        (
+            "mem_storage",
+            Store::open_storage(Arc::new(MemStorage::shared(Arc::clone(&shared)))).unwrap(),
+        ),
+        (
+            "fault_free_injector",
+            Store::open_storage(Arc::new(FaultInjector::new(
+                MemStorage::shared(shared),
+                FaultPlan::none(),
+            )))
+            .unwrap(),
+        ),
+        (
+            "fault_free_injector_over_file",
+            Store::open_storage(Arc::new(FaultInjector::new(
+                FileStorage::open(path).unwrap(),
+                FaultPlan::none(),
+            )))
+            .unwrap(),
+        ),
+    ]
+}
+
+/// Random region inside `shape` (every axis extent ≥ 1).
+fn random_region(rng: &mut XorShift, shape: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    let origin: Vec<usize> = shape.iter().map(|&n| rng.below(n)).collect();
+    let extent: Vec<usize> = shape
+        .iter()
+        .zip(&origin)
+        .map(|(&n, &o)| 1 + rng.below(n - o))
+        .collect();
+    (origin, extent)
+}
+
+/// Property: for random fields, chunk grids, and regions, every backend
+/// returns bit-identical samples — and for lossless chains, exactly the
+/// ground-truth subarray of the original field.
+#[test]
+fn read_region_is_bit_identical_across_backends() {
+    let cases: [(&[usize], &[usize]); 3] =
+        [(&[24, 20], &[7, 6]), (&[16, 12, 10], &[8, 5, 4]), (&[37], &[8])];
+    let path = temp_file("prop");
+    let mut rng = XorShift::new(0xBACC);
+    for (ci, (shape, chunk)) in cases.iter().enumerate() {
+        let field = grf(shape, 40 + ci as u64);
+        for (si, spec) in [
+            CodecChainSpec::lossless(),
+            CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3)),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let bytes = container(&field, spec, chunk);
+            let stores = all_backends(&bytes, &path);
+            for round in 0..6 {
+                let (origin, extent) = random_region(&mut rng, shape);
+                let mut want: Option<Vec<u64>> = None;
+                for (backend, store) in &stores {
+                    let got = store.read_region(&origin, &extent, 2).unwrap();
+                    assert_eq!(got.shape(), &extent[..], "case {ci} {backend}");
+                    let bits: Vec<u64> = got.data().iter().map(|v| v.to_bits()).collect();
+                    match &want {
+                        None => want = Some(bits),
+                        Some(want) => assert_eq!(
+                            &bits, want,
+                            "case {ci} chain {si} round {round}: backend {backend} \
+                             disagrees at origin {origin:?} shape {extent:?}"
+                        ),
+                    }
+                }
+                if si == 0 {
+                    // Lossless chain: the shared answer must equal the
+                    // ground-truth slice of the original field, bitwise.
+                    let truth = extract_subarray(field.data(), shape, &origin, &extent);
+                    let truth_bits: Vec<u64> = truth.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(want.as_deref(), Some(&truth_bits[..]), "case {ci} round {round}");
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Short reads are a legal backend behaviour, not a fault: reads heal
+/// through the `read_exact_at` loop and the decoded bytes are identical.
+#[test]
+fn short_reads_are_invisible_to_the_reader() {
+    let field = grf(&[20, 18], 7);
+    let bytes = container(&field, &CodecChainSpec::lossless(), &[6, 5]);
+    let clean = Store::from_bytes(bytes.clone()).unwrap();
+    let injector = FaultInjector::new(
+        MemStorage::new(bytes),
+        FaultPlan {
+            seed: 99,
+            short_reads: true,
+            ..FaultPlan::none()
+        },
+    );
+    let handle = injector.handle();
+    let store = Store::open_storage(Arc::new(injector)).unwrap();
+    let want = clean.read_region(&[2, 3], &[15, 11], 1).unwrap();
+    let got = store.read_region(&[2, 3], &[15, 11], 1).unwrap();
+    assert_eq!(got.data(), want.data());
+    assert!(
+        handle.counts().short_reads > 0,
+        "the schedule never actually split a read"
+    );
+    assert_eq!(store.retries(), 0, "short reads must not count as retries");
+}
+
+/// A transient fault with no retry policy surfaces as a precise error
+/// naming the chunk — the default store never retries silently.
+#[test]
+fn transient_fault_without_policy_is_a_precise_error() {
+    let field = grf(&[12, 12], 8);
+    let bytes = container(&field, &CodecChainSpec::lossless(), &[6, 6]);
+    let injector = FaultInjector::new(MemStorage::new(bytes), FaultPlan::none());
+    let handle = injector.handle();
+    let store = Store::open_storage(Arc::new(injector)).unwrap();
+    // Arm transients only after the clean open (ops 1-3 are header,
+    // trailer, manifest): with `transient_every: 1` every subsequent op
+    // faults, so the very next payload read must error.
+    handle.set_plan(FaultPlan {
+        transient_every: 1,
+        ..FaultPlan::none()
+    });
+    let err = store.read_region(&[0, 0], &[12, 12], 1).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected transient storage fault"), "{msg}");
+    assert!(msg.contains("reading chunk c/"), "{msg}");
+    assert_eq!(store.retries(), 0);
+}
+
+/// Under `RetryPolicy::transient` a seeded `transient_every ≥ 2`
+/// schedule always heals: the retry is the next op index, which cannot
+/// fault again. The read succeeds bit-identically and the retries are
+/// accounted on the handle and in the registry.
+#[test]
+fn transient_faults_heal_deterministically_under_retry_policy() {
+    let field = grf(&[18, 14], 9);
+    let bytes = container(&field, &CodecChainSpec::lossless(), &[5, 5]);
+    let clean = Store::from_bytes(bytes.clone()).unwrap();
+    let injector = FaultInjector::new(MemStorage::new(bytes), FaultPlan::none());
+    let handle = injector.handle();
+    let mut store = Store::open_storage(Arc::new(injector)).unwrap();
+    store.set_retry_policy(RetryPolicy::transient(3, Duration::ZERO));
+    handle.set_plan(FaultPlan {
+        transient_every: 2,
+        ..FaultPlan::none()
+    });
+    let before = ffcz::telemetry::snapshot();
+    let want = clean.read_region(&[1, 1], &[16, 12], 1).unwrap();
+    let got = store.read_region(&[1, 1], &[16, 12], 1).unwrap();
+    assert_eq!(got.data(), want.data());
+    let transients = handle.counts().transients;
+    assert!(transients > 0, "the schedule never faulted");
+    assert_eq!(store.retries(), transients, "every transient cost one retry");
+    let after = ffcz::telemetry::snapshot();
+    assert!(
+        after.counter_delta(&before, "store.read.retries") >= transients,
+        "registry retries must aggregate the handle's"
+    );
+}
+
+/// Hard I/O failures are never retried, even under a retry policy, and
+/// surface with the chunk key in the error chain.
+#[test]
+fn hard_io_failure_is_not_retried() {
+    let field = grf(&[12, 12], 10);
+    let bytes = container(&field, &CodecChainSpec::lossless(), &[6, 6]);
+    let injector = FaultInjector::new(MemStorage::new(bytes), FaultPlan::none());
+    let handle = injector.handle();
+    let mut store = Store::open_storage(Arc::new(injector)).unwrap();
+    store.set_retry_policy(RetryPolicy::transient(5, Duration::ZERO));
+    handle.set_plan(FaultPlan {
+        fail_ops: (1..100).collect(),
+        ..FaultPlan::none()
+    });
+    let err = store.read_region(&[0, 0], &[12, 12], 1).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected storage failure"), "{msg}");
+    assert!(msg.contains("reading chunk c/"), "{msg}");
+    assert_eq!(store.retries(), 0, "hard faults must not burn retries");
+    assert!(handle.counts().failures >= 1, "the hard fault never fired");
+}
+
+/// A corrupted payload byte is caught by the CRC-32 check with a precise
+/// error — it never reaches a codec and never panics.
+#[test]
+fn corruption_is_caught_by_crc32() {
+    let field = grf(&[16, 16], 11);
+    let bytes = container(&field, &CodecChainSpec::lossless(), &[8, 8]);
+    let injector = FaultInjector::new(MemStorage::new(bytes), FaultPlan::none());
+    let handle = injector.handle();
+    let store = Store::open_storage(Arc::new(injector)).unwrap();
+    // Corrupt every payload read from here on.
+    handle.set_plan(FaultPlan {
+        seed: 5,
+        corrupt_ops: (1..100).collect(),
+        ..FaultPlan::none()
+    });
+    let err = store.read_region(&[0, 0], &[16, 16], 1).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("CRC-32"), "{msg}");
+    assert!(handle.counts().corruptions > 0);
+    // Clearing the plan heals the store: nothing was cached corrupt.
+    handle.set_plan(FaultPlan::none());
+    let clean = store.read_region(&[0, 0], &[16, 16], 1).unwrap();
+    assert_eq!(clean.data().len(), 256);
+}
+
+/// Seeded sweep over random fault plans: every read either succeeds
+/// bit-identically to the clean store or fails with an `Err` — no
+/// panics, no silent corruption escaping the CRC, across many seeds.
+#[test]
+fn random_fault_schedules_never_panic_or_corrupt() {
+    let field = grf(&[20, 16], 12);
+    let bytes = container(
+        &field,
+        &CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3)),
+        &[7, 6],
+    );
+    let clean = Store::from_bytes(bytes.clone()).unwrap();
+    let mut rng = XorShift::new(0xFA17);
+    for seed in 0..24u64 {
+        let injector = FaultInjector::new(MemStorage::new(bytes.clone()), FaultPlan::none());
+        let handle = injector.handle();
+        let mut store = match Store::open_storage(Arc::new(injector)) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        store.set_retry_policy(RetryPolicy::transient(3, Duration::ZERO));
+        let plan = FaultPlan {
+            seed,
+            short_reads: seed % 2 == 0,
+            transient_every: [0, 2, 3, 5][(seed % 4) as usize],
+            fail_ops: if seed % 5 == 0 { vec![2 + seed % 7] } else { vec![] },
+            corrupt_ops: if seed % 3 == 0 { vec![1 + seed % 5] } else { vec![] },
+            latency: Duration::ZERO,
+        };
+        handle.set_plan(plan);
+        let (origin, extent) = random_region(&mut rng, &[20, 16]);
+        match store.read_region(&origin, &extent, 1) {
+            Ok(got) => {
+                let want = clean.read_region(&origin, &extent, 1).unwrap();
+                let got_bits: Vec<u64> = got.data().iter().map(|v| v.to_bits()).collect();
+                let want_bits: Vec<u64> = want.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "seed {seed}: healed read disagrees");
+            }
+            Err(err) => {
+                // Must be attributable: a fault the schedule injected or
+                // the CRC catching its corruption.
+                let msg = format!("{err:#}");
+                let counts = handle.counts();
+                assert!(
+                    counts.failures > 0 || counts.corruptions > 0 || counts.transients > 0,
+                    "seed {seed}: error without any injected fault: {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// The retry schedule is deterministic end to end: two identical runs
+/// of the same plan over the same reads inject identical fault counts
+/// and leave identical retry tallies.
+#[test]
+fn seeded_schedules_replay_identically() {
+    let field = grf(&[14, 14], 13);
+    let bytes = container(&field, &CodecChainSpec::lossless(), &[7, 7]);
+    let run = |_: u64| -> (Vec<u64>, ffcz::store::FaultCounts, u64) {
+        let injector = FaultInjector::new(
+            MemStorage::new(bytes.clone()),
+            FaultPlan::none(),
+        );
+        let handle: FaultHandle = injector.handle();
+        let mut store = Store::open_storage(Arc::new(injector)).unwrap();
+        store.set_retry_policy(RetryPolicy::transient(3, Duration::ZERO));
+        handle.set_plan(FaultPlan {
+            seed: 77,
+            short_reads: true,
+            transient_every: 3,
+            ..FaultPlan::none()
+        });
+        let region = store.read_region(&[0, 0], &[14, 14], 1).unwrap();
+        let bits = region.data().iter().map(|v| v.to_bits()).collect();
+        (bits, handle.counts(), store.retries())
+    };
+    let (bits_a, counts_a, retries_a) = run(0);
+    let (bits_b, counts_b, retries_b) = run(1);
+    assert_eq!(bits_a, bits_b);
+    assert_eq!(counts_a, counts_b);
+    assert_eq!(retries_a, retries_b);
+}
