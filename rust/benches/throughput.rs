@@ -12,7 +12,9 @@ use ffcz::coordinator::{run_pipeline, ExecMode, PipelineConfig};
 use ffcz::correction::{correct_reconstruction, CorrectionScratch, FfczConfig};
 use ffcz::data::synth;
 use ffcz::codec::{CodecChain, CodecChainSpec};
-use ffcz::store::{encode_store, write_store, Store, StoreWriteOptions};
+use ffcz::store::{
+    encode_store, write_store, write_store_faulted, FaultPlan, Store, StoreWriteOptions,
+};
 use ffcz::util::bench::{black_box, Bench};
 
 fn main() {
@@ -259,6 +261,10 @@ fn store_comparison(quick: bool) {
     let encode_chunk_s = reuse_s / gauge_chunks as f64;
     let (telemetry_s, overhead_pct) = telemetry_overhead(encode_chunk_s);
 
+    // Write-path fault-injection plumbing cost: a fault-free injector in
+    // the streamed write path vs the plain path.
+    let (wf_plain_s, wf_injected_s, wf_overhead_pct) = write_fault_overhead(&field, &spec, quick);
+
     // Archive read server under sustained concurrent load.
     let (srv_clients, srv_requests, srv_qps, srv_p50_ms, srv_p99_ms) = server_bench(quick);
 
@@ -282,6 +288,11 @@ fn store_comparison(quick: bool) {
         encode_chunk_s * 1e3
     ));
     json.push_str(&format!(
+        "  \"write_fault_overhead\": {{\"plain_median_s\": {wf_plain_s:.6}, \
+         \"injected_median_s\": {wf_injected_s:.6}, \
+         \"overhead_pct\": {wf_overhead_pct:.4}}},\n"
+    ));
+    json.push_str(&format!(
         "  \"server\": {{\"clients\": {srv_clients}, \"requests\": {srv_requests}, \
          \"server_qps\": {srv_qps:.1}, \"server_p50_ms\": {srv_p50_ms:.4}, \
          \"server_p99_ms\": {srv_p99_ms:.4}}},\n"
@@ -300,6 +311,53 @@ fn store_comparison(quick: bool) {
     } else {
         println!("wrote BENCH_store.json");
     }
+}
+
+/// Cost of routing the streamed write path through a fault-free
+/// `FaultInjector` (the chaos-test configuration) relative to the plain
+/// `write_store` path, both streaming the same field to temp files.
+/// Returns `(plain_median_s, injected_median_s, overhead_pct)` — the
+/// `write_fault_overhead` row of `BENCH_store.json`, whose overhead CI
+/// gates at ≤ 2%.
+fn write_fault_overhead(
+    field: &ffcz::data::Field,
+    spec: &CodecChainSpec,
+    quick: bool,
+) -> (f64, f64, f64) {
+    let chunk_dim = field.shape()[0] / 2;
+    let opts = StoreWriteOptions::new(&[chunk_dim, chunk_dim, chunk_dim]).workers(2);
+    let bytes = field.original_bytes();
+    let samples = if quick { 3 } else { 5 };
+    let plain_path = std::env::temp_dir().join("ffcz_bench_wf_plain.ffcz");
+    let injected_path = std::env::temp_dir().join("ffcz_bench_wf_injected.ffcz");
+
+    let r = Bench::new("store_write_plain".to_string())
+        .bytes(bytes)
+        .samples(samples)
+        .run(|| {
+            let rep = write_store(field, spec, &opts, &plain_path).unwrap();
+            black_box(rep.total_bytes)
+        });
+    println!("{}", r.report());
+    let plain_s = r.median.as_secs_f64();
+
+    let r = Bench::new("store_write_fault_injected".to_string())
+        .bytes(bytes)
+        .samples(samples)
+        .run(|| {
+            let (rep, counts) =
+                write_store_faulted(field, spec, &opts, &injected_path, FaultPlan::none())
+                    .unwrap();
+            assert_eq!(counts.failures, 0, "a fault-free plan injects nothing");
+            black_box(rep.total_bytes)
+        });
+    println!("{}", r.report());
+    let injected_s = r.median.as_secs_f64();
+
+    let _ = std::fs::remove_file(&plain_path);
+    let _ = std::fs::remove_file(&injected_path);
+    let overhead_pct = ((injected_s - plain_s) / plain_s * 100.0).max(0.0);
+    (plain_s, injected_s, overhead_pct)
 }
 
 /// Sustained concurrent load on the archive read server: an in-process

@@ -13,14 +13,17 @@
 //! ffcz experiment <fig1|table2|...|all> [--scale 32] [--out results]
 //! ffcz pipeline   --instances 4 --scale 32 [--sequential] [--store dir]
 //!                 [--in-memory]
-//! ffcz archive    create|extract|inspect|read-region …  (chunked .ffcz store,
-//!                 streamed writes by default with --in-memory escape hatch,
-//!                 per-chunk codec chains via --chunk-codec — grammar in
-//!                 docs/FORMAT.md)
+//! ffcz archive    create|extract|inspect|read-region|verify|repair …
+//!                 (chunked .ffcz store, streamed writes by default with
+//!                 --in-memory escape hatch, per-chunk codec chains via
+//!                 --chunk-codec — grammar in docs/FORMAT.md; verify re-checks
+//!                 every chunk, repair salvages an interrupted create)
 //! ffcz serve      --root archives/ [--addr 127.0.0.1:7070] [--cache-mb 64]
-//!                 [--port-file p.txt] [--no-shutdown]
+//!                 [--port-file p.txt] [--no-shutdown] [--max-conns 64]
+//!                 [--deadline-ms 30000]
 //! ffcz get        --addr 127.0.0.1:7070 --archive f --origin 0,0 --shape 8,8
 //!                 --output w.ffld   (also --ping | --stat | --shutdown;
+//!                 [--retries N] [--backoff-ms N] retry transient faults;
 //!                 wire protocol in docs/SERVER.md)
 //! ffcz info       --archive f.fz
 //! ```
@@ -28,6 +31,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -38,7 +42,10 @@ use ffcz::data::{io, synth};
 use ffcz::experiments::{self, ExpOptions};
 use ffcz::metrics::QualityReport;
 use ffcz::server::{ArchiveServer, Client, ServeOptions};
-use ffcz::store::{write_store, write_store_in_memory, Store, StoreWriteOptions};
+use ffcz::store::{
+    resume_store_write, staging_paths, write_store, write_store_in_memory, RetryPolicy, Store,
+    StoreWriteOptions,
+};
 use ffcz::telemetry::{self, diag};
 
 fn main() -> ExitCode {
@@ -136,16 +143,30 @@ fn print_usage() {
          \x20                         | 'ps=R' | 'iters=N' | 'quant-retries=N'\n\
          \x20                         | 'threads=N' | 'base-only'\n\
          \x20 serve       --root DIR [--addr H:P] [--cache-mb N] [--port-file F]\n\
-         \x20             [--no-shutdown]  archive read server (protocol in\n\
-         \x20             docs/SERVER.md); --addr default 127.0.0.1:7070, port 0\n\
-         \x20             picks a free port (resolved address goes to --port-file)\n\
+         \x20             [--no-shutdown] [--max-conns N] [--deadline-ms N]\n\
+         \x20             archive read server (protocol in docs/SERVER.md);\n\
+         \x20             --addr default 127.0.0.1:7070, port 0 picks a free\n\
+         \x20             port (resolved address goes to --port-file); accepts\n\
+         \x20             beyond --max-conns (default 64, 0 = unlimited) are\n\
+         \x20             turned away with ST_BUSY; connections idle past\n\
+         \x20             --deadline-ms (default 30000, 0 = off) are closed\n\
          \x20 get         --addr H:P (--ping | --shutdown |\n\
          \x20             --archive NAME --stat |\n\
          \x20             --archive NAME --origin A,B,C --shape A,B,C --output F)\n\
+         \x20             [--retries N] [--backoff-ms N]  retry transient\n\
+         \x20             connect/read faults (default 3 attempts; 1 = off)\n\
          \x20 archive     extract --input F --output F [--workers N]\n\
          \x20 archive     inspect --input F [--chunks] [--stats]\n\
          \x20 archive     read-region --input F --origin A,B,C --shape A,B,C\n\
          \x20             --output F [--workers N]\n\
+         \x20 archive     verify --input F [--workers N] [--json]\n\
+         \x20             re-check every chunk (CRC-32, decode, dual-domain\n\
+         \x20             bounds); nonzero exit if any fails, report as JSON\n\
+         \x20 archive     repair --from F --output F [create flags]\n\
+         \x20             finish an interrupted create from its .tmp/.tmp.jrn\n\
+         \x20             staging files: salvage intact chunks, re-encode the\n\
+         \x20             rest from --from, commit atomically (byte-identical\n\
+         \x20             to an uninterrupted write; repeat the create flags)\n\
          \x20 info        --archive F\n\
          \n\
          global flags (any command):\n\
@@ -554,13 +575,15 @@ fn cmd_pipeline(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_archive(positional: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let Some(sub) = positional.first() else {
-        bail!("archive subcommand required: create | extract | inspect | read-region");
+        bail!("archive subcommand required: create | extract | inspect | read-region | verify | repair");
     };
     match sub.as_str() {
         "create" => cmd_archive_create(flags),
         "extract" => cmd_archive_extract(flags),
         "inspect" => cmd_archive_inspect(flags),
         "read-region" => cmd_archive_read_region(flags),
+        "verify" => cmd_archive_verify(flags),
+        "repair" => cmd_archive_repair(flags),
         other => bail!("unknown archive subcommand '{other}'"),
     }
 }
@@ -724,6 +747,88 @@ fn cmd_archive_read_region(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `ffcz archive verify --input F [--workers N] [--json]`: re-check
+/// every chunk of an archive — payload CRC-32, full decode, and the
+/// recorded dual-domain bounds — and exit nonzero if any chunk fails.
+fn cmd_archive_verify(flags: &HashMap<String, String>) -> Result<()> {
+    let input = PathBuf::from(get(flags, "input")?);
+    let store = Store::open(&input)?;
+    let report = store.verify(parse_workers(flags)?)?;
+    if flags.contains_key("json") {
+        // Requested data, not a diagnostic: always printed.
+        println!("{}", report.to_json());
+    } else {
+        diag::info(&format!(
+            "verified {}: {}/{} chunks OK in {}",
+            input.display(),
+            report.chunks.len() - report.failed(),
+            report.chunks.len(),
+            ffcz::util::human_duration(report.elapsed),
+        ));
+        for chunk in report.chunks.iter().filter(|c| !c.ok()) {
+            diag::error(&format!(
+                "chunk {} ({}): {}",
+                chunk.index,
+                chunk.key,
+                chunk.error.as_deref().unwrap_or("failed"),
+            ));
+        }
+    }
+    if !report.ok() {
+        bail!(
+            "{} of {} chunks failed verification",
+            report.failed(),
+            report.chunks.len()
+        );
+    }
+    Ok(())
+}
+
+/// `ffcz archive repair --from F --output F [create flags]`: finish an
+/// interrupted `archive create`. Salvages the CRC-valid chunk prefix
+/// from the staging files `<output>.tmp` / `<output>.tmp.jrn`,
+/// re-encodes only the missing chunks from the source field `--from`,
+/// and commits atomically — byte-identical to an uninterrupted write.
+/// The codec flags must repeat the original invocation's.
+fn cmd_archive_repair(flags: &HashMap<String, String>) -> Result<()> {
+    let from = PathBuf::from(get(flags, "from")?);
+    let output = PathBuf::from(get(flags, "output")?);
+    let (tmp, _jrn) = staging_paths(&output);
+    if output.is_file() && !tmp.exists() {
+        diag::info(&format!(
+            "{} is committed and has no staging leftovers — nothing to repair",
+            output.display()
+        ));
+        return Ok(());
+    }
+    let field = io::load(&from)?;
+    let spec = build_chain_spec(flags)?;
+    let workers = parse_workers(flags)?;
+    let mut opts = match flags.get("chunk") {
+        Some(c) => StoreWriteOptions::new(&parse_axes(c, "chunk")?).workers(workers),
+        None => StoreWriteOptions::default_for(field.shape(), workers)?,
+    };
+    opts.queue_depth = parse_f64(flags, "queue-depth", opts.queue_depth as f64)? as usize;
+    opts.overrides = parse_chunk_codec_overrides(flags)?;
+    let report = resume_store_write(&field, &spec, &opts, &output)?;
+    diag::info(&format!(
+        "repaired {}: {} chunks salvaged, {} re-encoded ({} total, chunks {})",
+        output.display(),
+        report.salvaged_chunks,
+        report.reencoded_chunks,
+        ffcz::util::human_bytes(report.write.total_bytes),
+        if report.write.all_chunks_ok {
+            "OK"
+        } else {
+            "VIOLATED"
+        },
+    ));
+    if !report.write.all_chunks_ok {
+        bail!("dual-domain verification failed for at least one chunk");
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let root = PathBuf::from(get(flags, "root")?);
     if !root.is_dir() {
@@ -737,6 +842,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         root: Some(root.clone()),
         cache_bytes: (parse_f64(flags, "cache-mb", 64.0)?.max(0.0) * (1 << 20) as f64) as usize,
         allow_shutdown: !flags.contains_key("no-shutdown"),
+        max_connections: parse_f64(flags, "max-conns", 64.0)?.max(0.0) as usize,
+        request_deadline: Duration::from_millis(
+            parse_f64(flags, "deadline-ms", 30_000.0)?.max(0.0) as u64,
+        ),
         ..ServeOptions::default()
     };
     let server = ArchiveServer::start(opts)?;
@@ -756,7 +865,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_get(flags: &HashMap<String, String>) -> Result<()> {
     let addr = get(flags, "addr")?;
-    let mut client = Client::connect(addr)?;
+    // Transient connect/read faults (including ST_BUSY from a server at
+    // its connection cap) are retried with linear backoff; --retries 1
+    // turns retrying off. Shutdown requests are never retried.
+    let retries = (parse_f64(flags, "retries", 3.0)?.max(1.0) as u32).max(1);
+    let backoff = Duration::from_millis(parse_f64(flags, "backoff-ms", 25.0)?.max(0.0) as u64);
+    let mut client = Client::connect_with_retry(addr, RetryPolicy::transient(retries, backoff))?;
     if flags.contains_key("ping") {
         client.ping()?;
         println!("ok");

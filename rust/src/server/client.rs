@@ -6,16 +6,34 @@
 //! server's thread-per-connection model expects). Server-reported
 //! failures surface as [`ServerError`] values inside the `anyhow` chain,
 //! so callers can branch on the wire status via [`status_of`].
+//!
+//! ## Retries
+//!
+//! A client carries a [`RetryPolicy`] (default: off). With retries
+//! enabled, the idempotent operations — [`Client::ping`],
+//! [`Client::stat`], [`Client::read_region`] — transparently survive
+//! transient failures: connection-level faults (refused, reset, timed
+//! out, a server that hung up mid-request) and `ST_BUSY` rejections
+//! from a server at its connection cap. Each retry reconnects and
+//! reissues the request on a fresh connection, with the policy's linear
+//! backoff between attempts. When the budget runs out the caller gets
+//! the typed give-up error [`RetriesExhausted`], recoverable from the
+//! `anyhow` chain via [`retries_exhausted_of`].
+//! [`Client::shutdown_server`] is *not* retried: it is not idempotent
+//! from the fleet's point of view, and a lost response is
+//! indistinguishable from a successful shutdown.
 
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::Field;
+use crate::store::RetryPolicy;
 
 use super::protocol::{
     self, encode_request, ArchiveStat, FrameRead, Request, Response, DEFAULT_MAX_RESPONSE_FRAME,
-    OP_PING, OP_READ_REGION, OP_SHUTDOWN, OP_STAT,
+    OP_PING, OP_READ_REGION, OP_SHUTDOWN, OP_STAT, ST_BUSY,
 };
 
 /// A failure reported by the server, carrying the wire status byte
@@ -46,29 +64,185 @@ pub fn status_of(err: &anyhow::Error) -> Option<u8> {
         .map(|se| se.status)
 }
 
+/// The typed give-up error a retrying [`Client`] returns once its
+/// [`RetryPolicy`] budget is spent: every attempt failed with a fault
+/// the client classifies as transient. Non-transient failures (a bad
+/// region, an unknown archive) are returned as-is on the first attempt
+/// and never wrapped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetriesExhausted {
+    /// Total attempts made, the initial try included.
+    pub attempts: u32,
+    /// Rendering of the error the final attempt failed with.
+    pub last_error: String,
+}
+
+impl std::fmt::Display for RetriesExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "gave up after {} attempts; last error: {}",
+            self.attempts, self.last_error
+        )
+    }
+}
+
+impl std::error::Error for RetriesExhausted {}
+
+/// The give-up record inside an error returned by a retrying [`Client`]
+/// call, if the failure was a spent retry budget (`None` otherwise) —
+/// the retry-side analogue of [`status_of`].
+pub fn retries_exhausted_of(err: &anyhow::Error) -> Option<&RetriesExhausted> {
+    err.chain().find_map(|c| c.downcast_ref::<RetriesExhausted>())
+}
+
+/// Whether a failed attempt is worth reissuing on a fresh connection:
+/// `ST_BUSY` from a server at its cap, or any connection-level I/O
+/// fault in the chain. Server verdicts about the request itself
+/// (bad region, unknown archive, too large) are not transient.
+fn is_retryable(err: &anyhow::Error) -> bool {
+    if let Some(server) = err.chain().find_map(|c| c.downcast_ref::<ServerError>()) {
+        return server.status == ST_BUSY;
+    }
+    err.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::Interrupted
+                    | std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::ConnectionRefused
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::NotConnected
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::UnexpectedEof
+            )
+        })
+    })
+}
+
+/// Linear backoff before retry `attempt`, matching the storage layer's
+/// `backoff × k` convention.
+fn sleep_backoff(policy: &RetryPolicy, attempt: u32) {
+    if !policy.backoff.is_zero() {
+        std::thread::sleep(policy.backoff * attempt);
+    }
+}
+
 /// One blocking connection to an archive read server.
 pub struct Client {
+    /// The address reconnects re-dial.
+    addr: String,
     stream: TcpStream,
     /// Cap on response bodies this client will accept.
     max_response_bytes: usize,
+    /// Transient-fault budget for idempotent operations.
+    retry: RetryPolicy,
 }
 
 impl Client {
-    /// Connect to `addr` (e.g. `127.0.0.1:7070`).
+    /// Connect to `addr` (e.g. `127.0.0.1:7070`). Retries are off;
+    /// opt in with [`Client::with_retry_policy`] or
+    /// [`Client::connect_with_retry`].
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to archive server at {addr}"))?;
         let _ = stream.set_nodelay(true);
         Ok(Self {
+            addr: addr.to_string(),
             stream,
             max_response_bytes: DEFAULT_MAX_RESPONSE_FRAME,
+            retry: RetryPolicy::none(),
         })
+    }
+
+    /// Connect to `addr`, retrying refused/reset connects under
+    /// `policy`; the returned client keeps the same policy for its
+    /// requests.
+    pub fn connect_with_retry(addr: &str, policy: RetryPolicy) -> Result<Self> {
+        let budget = policy.max_attempts.max(1);
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            let err = match Self::connect(addr) {
+                Ok(client) => return Ok(client.with_retry_policy(policy)),
+                Err(err) => err,
+            };
+            if !is_retryable(&err) {
+                return Err(err);
+            }
+            if attempts >= budget {
+                if budget == 1 {
+                    return Err(err);
+                }
+                return Err(anyhow::Error::new(RetriesExhausted {
+                    attempts,
+                    last_error: format!("{err:#}"),
+                }));
+            }
+            sleep_backoff(&policy, attempts);
+        }
     }
 
     /// Raise or lower the response-size cap (default 256 MiB).
     pub fn with_max_response_bytes(mut self, bytes: usize) -> Self {
         self.max_response_bytes = bytes;
         self
+    }
+
+    /// Enable transparent reconnect-and-reissue for idempotent
+    /// operations under `policy` (default: [`RetryPolicy::none`]).
+    pub fn with_retry_policy(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
+    }
+
+    /// Drop the (possibly half-dead) connection and dial the server
+    /// again.
+    fn reconnect(&mut self) -> Result<()> {
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("reconnecting to archive server at {}", self.addr))?;
+        let _ = stream.set_nodelay(true);
+        self.stream = stream;
+        Ok(())
+    }
+
+    /// Run an idempotent operation under the retry policy: transient
+    /// failures reconnect (the old connection may be half-dead after a
+    /// deadline close or server restart) and reissue, with linear
+    /// backoff; a spent budget surfaces as [`RetriesExhausted`].
+    fn retrying<T>(&mut self, mut attempt: impl FnMut(&mut Self) -> Result<T>) -> Result<T> {
+        let policy = self.retry;
+        let budget = policy.max_attempts.max(1);
+        let mut attempts = 0u32;
+        let mut reissue = false;
+        loop {
+            attempts += 1;
+            let result = if reissue {
+                self.reconnect().and_then(|()| attempt(self))
+            } else {
+                attempt(self)
+            };
+            let err = match result {
+                Ok(value) => return Ok(value),
+                Err(err) => err,
+            };
+            if !is_retryable(&err) {
+                return Err(err);
+            }
+            if attempts >= budget {
+                if budget == 1 {
+                    return Err(err);
+                }
+                return Err(anyhow::Error::new(RetriesExhausted {
+                    attempts,
+                    last_error: format!("{err:#}"),
+                }));
+            }
+            reissue = true;
+            sleep_backoff(&policy, attempts);
+        }
     }
 
     fn round_trip(&mut self, req: &Request, op: u8) -> Result<Response> {
@@ -80,7 +254,15 @@ impl Client {
             {
                 FrameRead::Frame(body) => break body,
                 FrameRead::Idle => continue,
-                FrameRead::Eof => bail!("server closed the connection mid-request"),
+                // Typed as an I/O error so the retry classifier treats
+                // a mid-request hangup (deadline close, restart) the
+                // same as every other connection-level fault.
+                FrameRead::Eof => {
+                    return Err(anyhow::Error::new(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "server closed the connection mid-request",
+                    )))
+                }
             }
         };
         match protocol::parse_response(op, &body).context("parsing response frame")? {
@@ -91,8 +273,12 @@ impl Client {
         }
     }
 
-    /// Liveness probe.
+    /// Liveness probe. Idempotent: retried under the client's policy.
     pub fn ping(&mut self) -> Result<()> {
+        self.retrying(|c| c.ping_once())
+    }
+
+    fn ping_once(&mut self) -> Result<()> {
         match self.round_trip(&Request::Ping, OP_PING)? {
             Response::Ok => Ok(()),
             other => bail!("unexpected ping response {other:?}"),
@@ -100,7 +286,12 @@ impl Client {
     }
 
     /// Archive metadata: shape, chunk grid, payload size, precision.
+    /// Idempotent: retried under the client's policy.
     pub fn stat(&mut self, name: &str) -> Result<ArchiveStat> {
+        self.retrying(|c| c.stat_once(name))
+    }
+
+    fn stat_once(&mut self, name: &str) -> Result<ArchiveStat> {
         let req = Request::Stat {
             name: name.to_string(),
         };
@@ -111,7 +302,12 @@ impl Client {
     }
 
     /// Decode a rectangular region of archive `name` into a [`Field`].
+    /// Idempotent: retried under the client's policy.
     pub fn read_region(&mut self, name: &str, origin: &[usize], shape: &[usize]) -> Result<Field> {
+        self.retrying(|c| c.read_region_once(name, origin, shape))
+    }
+
+    fn read_region_once(&mut self, name: &str, origin: &[usize], shape: &[usize]) -> Result<Field> {
         let req = Request::ReadRegion {
             name: name.to_string(),
             origin: origin.iter().map(|&v| v as u64).collect(),
@@ -141,11 +337,54 @@ impl Client {
     }
 
     /// Ask the server to shut down (honored unless started with
-    /// shutdown disabled).
+    /// shutdown disabled). Never retried: a lost response is
+    /// indistinguishable from a successful shutdown.
     pub fn shutdown_server(&mut self) -> Result<()> {
         match self.round_trip(&Request::Shutdown, OP_SHUTDOWN)? {
             Response::Ok => Ok(()),
             other => bail!("unexpected shutdown response {other:?}"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spent_retry_budget_surfaces_as_a_typed_error() {
+        // Port 1 has no listener; every connect is refused, which the
+        // classifier treats as transient.
+        let policy = RetryPolicy::transient(3, Duration::ZERO);
+        let err = Client::connect_with_retry("127.0.0.1:1", policy).unwrap_err();
+        let give_up = retries_exhausted_of(&err).expect("typed give-up error in the chain");
+        assert_eq!(give_up.attempts, 3);
+        assert!(give_up.last_error.contains("127.0.0.1:1"));
+        assert!(status_of(&err).is_none());
+
+        // With retries off the raw connect error comes back unwrapped.
+        let raw = Client::connect_with_retry("127.0.0.1:1", RetryPolicy::none()).unwrap_err();
+        assert!(retries_exhausted_of(&raw).is_none());
+    }
+
+    #[test]
+    fn request_verdicts_are_never_classified_as_transient() {
+        let busy = anyhow::Error::new(ServerError {
+            status: ST_BUSY,
+            message: "at cap".to_string(),
+        });
+        assert!(is_retryable(&busy));
+        let bad_region = anyhow::Error::new(ServerError {
+            status: super::super::protocol::ST_BAD_REGION,
+            message: "rank mismatch".to_string(),
+        });
+        assert!(!is_retryable(&bad_region));
+        let hangup = anyhow::Error::new(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "server closed the connection mid-request",
+        ));
+        assert!(is_retryable(&hangup));
+        let not_transient = anyhow::Error::msg("some application error");
+        assert!(!is_retryable(&not_transient));
     }
 }

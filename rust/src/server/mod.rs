@@ -17,9 +17,14 @@
 //!   threads, lazy archive resolution from a root directory (or
 //!   [`ArchiveServer::register`]ed in-memory stores), pooled
 //!   [`crate::correction::CorrectionScratch`] buffers, transient-fault
-//!   retries, and `server.*` telemetry;
+//!   retries, a max-concurrent-connections cap (`ST_BUSY` to excess
+//!   accepts), per-connection request deadlines, and `server.*`
+//!   telemetry;
 //! * [`client`] — the blocking [`Client`] used by `ffcz get`, the
-//!   stress tests, and the benchmarks.
+//!   stress tests, and the benchmarks; with a
+//!   [`crate::store::RetryPolicy`] attached it reconnects and reissues
+//!   idempotent requests across transient faults, giving up with the
+//!   typed [`RetriesExhausted`] error.
 //!
 //! The CLI front ends are `ffcz serve` (run a daemon) and `ffcz get`
 //! (ping / stat / fetch a region / request shutdown).
@@ -28,6 +33,6 @@ pub mod client;
 pub mod protocol;
 pub mod service;
 
-pub use client::{status_of, Client, ServerError};
+pub use client::{retries_exhausted_of, status_of, Client, RetriesExhausted, ServerError};
 pub use protocol::{ArchiveStat, Request, Response};
 pub use service::{ArchiveServer, ServeOptions};

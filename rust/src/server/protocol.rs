@@ -50,6 +50,8 @@ pub const ST_IO: u8 = 0x04;
 pub const ST_INTERNAL: u8 = 0x05;
 /// The response would exceed the server's response-size cap.
 pub const ST_TOO_LARGE: u8 = 0x06;
+/// The server is at its concurrent-connection cap; retry later.
+pub const ST_BUSY: u8 = 0x07;
 
 // -------------------------------------------------- precision tags ----
 

@@ -17,7 +17,13 @@
 //!   connection rather than once per request;
 //! * payload reads run under the server's [`RetryPolicy`] (default:
 //!   transient faults retried with linear backoff), so a flaky storage
-//!   backend degrades to latency instead of request failures.
+//!   backend degrades to latency instead of request failures;
+//! * overload and stall protection: accepts beyond
+//!   [`ServeOptions::max_connections`] are answered with a single
+//!   `ST_BUSY` error frame and closed (counted in
+//!   `server.requests.rejected`), and a connection that completes no
+//!   request within [`ServeOptions::request_deadline`] is closed so
+//!   abandoned peers release their connection slot.
 //!
 //! Every request is traced (`server.request` span) and counted
 //! (`server.requests.*`, `server.inflight`, `server.request_ns` — see
@@ -43,8 +49,8 @@ use crate::util::sync::{lock, read, write};
 
 use super::protocol::{
     self, error_body, ok_body, region_body, stat_body, ArchiveStat, FrameRead, Request,
-    DEFAULT_MAX_RESPONSE_FRAME, MAX_REQUEST_FRAME, ST_BAD_REGION, ST_BAD_REQUEST, ST_INTERNAL,
-    ST_IO, ST_OK, ST_TOO_LARGE, ST_UNKNOWN_ARCHIVE,
+    DEFAULT_MAX_RESPONSE_FRAME, MAX_REQUEST_FRAME, ST_BAD_REGION, ST_BAD_REQUEST, ST_BUSY,
+    ST_INTERNAL, ST_IO, ST_OK, ST_TOO_LARGE, ST_UNKNOWN_ARCHIVE,
 };
 
 /// How often idle connection threads and the accept loop re-check the
@@ -74,6 +80,14 @@ pub struct ServeOptions {
     /// Whether `SHUTDOWN` requests are honored (tests and the CLI say
     /// yes; long-running daemons may refuse them with `--no-shutdown`).
     pub allow_shutdown: bool,
+    /// Per-connection request deadline: a connection that completes no
+    /// request frame for this long is closed, so stalled or abandoned
+    /// peers cannot pin a connection slot forever. Zero disables it.
+    pub request_deadline: Duration,
+    /// Cap on concurrently served connections. Excess accepts are
+    /// answered with a single `ST_BUSY` error frame and closed (counted
+    /// in `server.requests.rejected`). Zero means unlimited.
+    pub max_connections: usize,
 }
 
 impl Default for ServeOptions {
@@ -85,6 +99,8 @@ impl Default for ServeOptions {
             max_response_bytes: DEFAULT_MAX_RESPONSE_FRAME,
             retry: RetryPolicy::transient(4, Duration::from_millis(2)),
             allow_shutdown: true,
+            request_deadline: Duration::from_secs(30),
+            max_connections: 64,
         }
     }
 }
@@ -97,6 +113,7 @@ struct ServerMetrics {
     stat: telemetry::Counter,
     read_region: telemetry::Counter,
     connections: telemetry::Counter,
+    rejected: telemetry::Counter,
     bytes_out: telemetry::Counter,
     inflight: telemetry::Gauge,
     request_ns: telemetry::Histogram,
@@ -111,6 +128,7 @@ fn server_metrics() -> &'static ServerMetrics {
         stat: telemetry::counter("server.requests.stat"),
         read_region: telemetry::counter("server.requests.read_region"),
         connections: telemetry::counter("server.connections"),
+        rejected: telemetry::counter("server.requests.rejected"),
         bytes_out: telemetry::counter("server.bytes_out"),
         inflight: telemetry::gauge("server.inflight"),
         request_ns: telemetry::histogram("server.request_ns"),
@@ -123,6 +141,7 @@ struct ServerInner {
     scratch_pool: Mutex<Vec<CorrectionScratch>>,
     shutdown: AtomicBool,
     inflight: AtomicU64,
+    active: AtomicU64,
     conns: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -171,6 +190,7 @@ impl ArchiveServer {
             scratch_pool: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             inflight: AtomicU64::new(0),
+            active: AtomicU64::new(0),
             conns: Mutex::new(Vec::new()),
         });
         let accept_inner = Arc::clone(&inner);
@@ -230,14 +250,24 @@ fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
     while !inner.shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                let cap = inner.opts.max_connections as u64;
+                if cap > 0 && inner.active.load(Ordering::SeqCst) >= cap {
+                    server_metrics().rejected.incr();
+                    reject_connection(stream, cap);
+                    continue;
+                }
                 server_metrics().connections.incr();
+                inner.active.fetch_add(1, Ordering::SeqCst);
                 let conn_inner = Arc::clone(&inner);
                 match std::thread::Builder::new()
                     .name("ffcz-conn".to_string())
                     .spawn(move || serve_connection(stream, conn_inner))
                 {
                     Ok(handle) => lock(&inner.conns).push(handle),
-                    Err(e) => diag::warn(&format!("could not spawn connection thread: {e}")),
+                    Err(e) => {
+                        inner.active.fetch_sub(1, Ordering::SeqCst);
+                        diag::warn(&format!("could not spawn connection thread: {e}"));
+                    }
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -255,7 +285,30 @@ fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
     }
 }
 
-fn serve_connection(mut stream: TcpStream, inner: Arc<ServerInner>) {
+/// Answer an over-cap accept with a single `ST_BUSY` error frame and
+/// close the socket. Best-effort: a peer that already went away just
+/// misses the courtesy notice, and a client whose request write races
+/// the close sees a connection error — which its retry loop treats the
+/// same way as `ST_BUSY`.
+fn reject_connection(mut stream: TcpStream, cap: u64) {
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_write_timeout(Some(POLL_INTERVAL));
+    let body = error_body(
+        ST_BUSY,
+        &format!("server is at its {cap}-connection cap; retry later"),
+    );
+    let _ = protocol::write_frame(&mut stream, &body);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) {
+    serve_connection_loop(stream, &inner);
+    inner.active.fetch_sub(1, Ordering::SeqCst);
+}
+
+fn serve_connection_loop(mut stream: TcpStream, inner: &Arc<ServerInner>) {
     // The listener is nonblocking; accepted sockets must not inherit
     // that. A short read timeout keeps idle connections responsive to
     // shutdown without busy-waiting.
@@ -265,6 +318,8 @@ fn serve_connection(mut stream: TcpStream, inner: Arc<ServerInner>) {
     let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
     let _ = stream.set_nodelay(true);
     let metrics = server_metrics();
+    let deadline = inner.opts.request_deadline;
+    let mut last_request = Instant::now();
     let mut scratch = lock(&inner.scratch_pool)
         .pop()
         .unwrap_or_else(CorrectionScratch::new);
@@ -273,7 +328,13 @@ fn serve_connection(mut stream: TcpStream, inner: Arc<ServerInner>) {
             break;
         }
         let body = match protocol::read_frame(&mut stream, MAX_REQUEST_FRAME) {
-            Ok(FrameRead::Idle) => continue,
+            Ok(FrameRead::Idle) => {
+                if !deadline.is_zero() && last_request.elapsed() >= deadline {
+                    diag::verbose("closing connection: request deadline exceeded");
+                    break;
+                }
+                continue;
+            }
             Ok(FrameRead::Eof) => break,
             Ok(FrameRead::Frame(body)) => body,
             Err(e) => {
@@ -281,13 +342,14 @@ fn serve_connection(mut stream: TcpStream, inner: Arc<ServerInner>) {
                 break;
             }
         };
+        last_request = Instant::now();
         let started = Instant::now();
         let span = telemetry::span("server.request").arg("bytes_in", body.len() as u64);
         metrics.requests.incr();
         metrics
             .inflight
             .set(inner.inflight.fetch_add(1, Ordering::SeqCst) + 1);
-        let (reply, stop) = handle_request(&inner, &body, &mut scratch);
+        let (reply, stop) = handle_request(inner, &body, &mut scratch);
         metrics
             .inflight
             .set(inner.inflight.fetch_sub(1, Ordering::SeqCst).saturating_sub(1));
@@ -595,5 +657,97 @@ mod tests {
             std::thread::sleep(Duration::from_millis(10));
         }
         assert!(refused, "server kept serving after shutdown");
+    }
+
+    #[test]
+    fn connection_cap_turns_away_excess_accepts() {
+        let store = Arc::new(Store::from_bytes(fixture_bytes(14)).unwrap());
+        let opts = ServeOptions {
+            max_connections: 1,
+            ..ServeOptions::default()
+        };
+        let server = ArchiveServer::start(opts).unwrap();
+        server.register("f", store);
+        let addr = server.local_addr().to_string();
+
+        let mut first = Client::connect(&addr).unwrap();
+        // A served request proves the accept loop has seen (and now
+        // counts) the first connection.
+        first.ping().unwrap();
+
+        let rejected_before = telemetry::counter("server.requests.rejected").get();
+        let mut second = Client::connect(&addr).unwrap();
+        let err = second.ping().unwrap_err();
+        // The courtesy ST_BUSY frame may race the close; a connection
+        // error is the same verdict from the client's point of view.
+        if let Some(status) = super::super::client::status_of(&err) {
+            assert_eq!(status, ST_BUSY);
+        }
+        let mut counted = false;
+        for _ in 0..100 {
+            if telemetry::counter("server.requests.rejected").get() > rejected_before {
+                counted = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(counted, "over-cap accept was not counted as rejected");
+
+        // Closing the served connection frees the slot.
+        drop(first);
+        let mut reconnected = false;
+        for _ in 0..100 {
+            if let Ok(mut c) = Client::connect(&addr) {
+                if c.ping().is_ok() {
+                    reconnected = true;
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(reconnected, "slot was never released after disconnect");
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_connections_are_closed_at_the_request_deadline() {
+        let opts = ServeOptions {
+            request_deadline: Duration::from_millis(100),
+            ..ServeOptions::default()
+        };
+        let server = ArchiveServer::start(opts).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client.ping().unwrap();
+        std::thread::sleep(Duration::from_millis(400));
+        // The server hung up on the stalled connection…
+        assert!(client.ping().is_err(), "idle connection outlived the deadline");
+        // …but fresh connections are still welcome.
+        let mut fresh = Client::connect(&addr).unwrap();
+        fresh.ping().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn retrying_client_survives_a_deadline_close() {
+        let store = Arc::new(Store::from_bytes(fixture_bytes(15)).unwrap());
+        let opts = ServeOptions {
+            request_deadline: Duration::from_millis(100),
+            ..ServeOptions::default()
+        };
+        let server = ArchiveServer::start(opts).unwrap();
+        server.register("f", store);
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr)
+            .unwrap()
+            .with_retry_policy(RetryPolicy::transient(4, Duration::from_millis(1)));
+        let before = client.read_region("f", &[0, 0], &[12, 10]).unwrap();
+        // Let the server close the idle connection, then reissue: the
+        // client reconnects under the hood and the caller never sees
+        // the hangup.
+        std::thread::sleep(Duration::from_millis(400));
+        let after = client.read_region("f", &[0, 0], &[12, 10]).unwrap();
+        assert_eq!(before.data(), after.data());
+        server.shutdown();
     }
 }

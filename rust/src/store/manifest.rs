@@ -67,6 +67,11 @@ use super::grid::ChunkGrid;
 pub const STORE_MAGIC: &[u8; 8] = b"FFCZSTR1";
 /// Trailing magic of the 24-byte footer.
 pub const FOOTER_MAGIC: &[u8; 8] = b"FFCZEND1";
+/// Head magic of the sidecar recovery journal the streaming file writer
+/// keeps next to `<path>.tmp` (see `docs/FORMAT.md` § commit and
+/// recovery semantics). The journal is out-of-band recovery state, never
+/// part of a committed archive.
+pub const JOURNAL_MAGIC: &[u8; 8] = b"FFCZJRN1";
 /// Footer size in bytes.
 pub const FOOTER_LEN: usize = 24;
 /// Manifest version written by this crate.

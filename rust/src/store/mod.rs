@@ -20,15 +20,19 @@
 //! * [`parallel`] — the `std::thread` worker pool that fans per-chunk
 //!   encode/decode work across cores, plus the bounded-window ordered sink
 //!   ([`par_try_map_ordered_sink`]) behind the streaming writer;
-//! * [`storage`] — the reader-side byte-source abstraction
-//!   ([`ReadableStorage`]: ranged `read_at`/`size`), with local-file,
+//! * [`storage`] — the byte-source/sink abstractions
+//!   ([`ReadableStorage`]: ranged `read_at`/`size`; [`WritableStorage`]:
+//!   positioned `write_at`/`flush`/`sync`/`truncate`), with local-file,
 //!   in-memory, and deterministic fault-injecting backends plus the
-//!   transient-fault [`RetryPolicy`];
+//!   transient-fault [`RetryPolicy`] shared by both directions;
 //! * [`writer`] / [`reader`] — container production (streaming by default:
 //!   chunk payloads spill to the output as they complete, holding at most
 //!   `workers + queue_depth` payloads in memory; per-chunk codec overrides
-//!   via [`StoreWriteOptions::overrides`]) and trailer-aware, manifest-only
-//!   open with partial [`Store::read_region`] decode.
+//!   via [`StoreWriteOptions::overrides`]; atomic temp-file + rename
+//!   commits with a sidecar recovery journal, salvageable through
+//!   [`Store::salvage`] / [`resume_store_write`]) and trailer-aware,
+//!   manifest-only open with partial [`Store::read_region`] decode and
+//!   whole-archive [`Store::verify`].
 //!
 //! The on-disk container format is specified normatively, byte by byte, in
 //! `docs/FORMAT.md` at the repository root; [`manifest`] documents the
@@ -77,13 +81,15 @@ pub use manifest::{ChunkEntry, Manifest};
 pub use parallel::{
     par_try_map, par_try_map_ordered_sink, par_try_map_ordered_sink_with, par_try_map_with,
 };
-pub use reader::Store;
+pub use reader::{ChunkVerifyReport, Store, VerifyReport};
 pub use storage::{
-    read_exact_at, read_exact_at_retry, FaultCounts, FaultHandle, FaultInjector, FaultPlan,
-    FileStorage, MemStorage, ReadableStorage, RetryPolicy,
+    read_exact_at, read_exact_at_retry, write_all_at, write_all_at_retry, FaultCounts,
+    FaultHandle, FaultInjector, FaultPlan, FileStorage, MemStorage, ReadableStorage, RetryPolicy,
+    WritableStorage,
 };
 pub use writer::{
-    encode_store, stream_store_to, write_store, write_store_in_memory, StoreStreamWriter,
+    encode_store, resume_store_write, staging_paths, stream_store_to, write_store,
+    write_store_faulted, write_store_in_memory, RepairReport, Salvage, StoreStreamWriter,
     StoreWriteOptions, StoreWriteReport,
 };
 

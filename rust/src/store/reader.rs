@@ -580,6 +580,183 @@ impl Store {
         let shape = self.manifest.shape.clone();
         self.read_region(&origin, &shape, workers)
     }
+
+    /// Integrity verification of every chunk, on up to `workers` threads:
+    /// payload fetch + CRC-32 against the manifest, a full decode through
+    /// the chunk's codec chain, and a re-check that the recorded
+    /// dual-domain verification stats hold and are self-consistent (the
+    /// `spatial_ok`/`frequency_ok` flags agree with the stored worst-case
+    /// ratios, and both bounds are satisfied). Verification never stops
+    /// early — the report covers all chunks, failing ones annotated. The
+    /// operator entry point is `ffcz archive verify`.
+    pub fn verify(&self, workers: usize) -> Result<VerifyReport> {
+        let t0 = std::time::Instant::now();
+        let _span =
+            telemetry::span("store.verify").arg("chunks", self.manifest.chunks.len() as u64);
+        let chunks = par_try_map_with(
+            self.manifest.chunks.len(),
+            workers,
+            CorrectionScratch::new,
+            |index, scratch| Ok(self.verify_chunk(index, scratch)),
+        )?;
+        Ok(VerifyReport {
+            chunks,
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    fn verify_chunk(&self, index: usize, scratch: &mut CorrectionScratch) -> ChunkVerifyReport {
+        let entry = &self.manifest.chunks[index];
+        let mut report = ChunkVerifyReport {
+            index,
+            key: self.grid.chunk_key(index),
+            crc_ok: false,
+            decode_ok: false,
+            bounds_ok: false,
+            error: None,
+        };
+        // Payload fetch + CRC (chunk_bytes checks the manifest checksum
+        // before handing bytes onward).
+        let bytes = match self.chunk_bytes(index) {
+            Ok(bytes) => bytes,
+            Err(e) => {
+                report.error = Some(format!("{e:#}"));
+                return report;
+            }
+        };
+        report.crc_ok = true;
+        let coords = self.grid.chunk_coords(index);
+        let extent = self.grid.chunk_extent(&coords);
+        match self.codecs[entry.chain].decode_chunk_with_scratch(
+            &bytes,
+            &extent,
+            self.manifest.precision,
+            scratch,
+        ) {
+            Ok(_) => report.decode_ok = true,
+            Err(e) => {
+                report.error = Some(format!("{e:#}"));
+                return report;
+            }
+        }
+        // Dual-domain bound re-check against the manifest record: both
+        // flags set, and each flag consistent with its stored worst-case
+        // ratio (≤ 1 is in-bound).
+        let stats = &entry.stats;
+        report.bounds_ok = stats.spatial_ok
+            && stats.frequency_ok
+            && stats.max_spatial_ratio <= 1.0
+            && stats.max_frequency_ratio <= 1.0;
+        if !report.bounds_ok {
+            report.error = Some(format!(
+                "dual-domain bounds not satisfied: spatial_ok={} (max ratio {:.6}), \
+                 frequency_ok={} (max ratio {:.6})",
+                stats.spatial_ok,
+                stats.max_spatial_ratio,
+                stats.frequency_ok,
+                stats.max_frequency_ratio
+            ));
+        }
+        report
+    }
+}
+
+/// Per-chunk outcome of [`Store::verify`].
+#[derive(Debug, Clone)]
+pub struct ChunkVerifyReport {
+    /// Row-major chunk index.
+    pub index: usize,
+    /// Zarr-style chunk key (`"c/1/0"`).
+    pub key: String,
+    /// Payload read back and matched the manifest CRC-32.
+    pub crc_ok: bool,
+    /// Payload decoded cleanly through its codec chain.
+    pub decode_ok: bool,
+    /// Recorded dual-domain verification stats hold and are
+    /// self-consistent.
+    pub bounds_ok: bool,
+    /// Detail for the first failing check, if any.
+    pub error: Option<String>,
+}
+
+impl ChunkVerifyReport {
+    /// True iff every check passed for this chunk.
+    pub fn ok(&self) -> bool {
+        self.crc_ok && self.decode_ok && self.bounds_ok
+    }
+}
+
+/// Outcome of [`Store::verify`] over every chunk.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    /// One entry per chunk, in index order.
+    pub chunks: Vec<ChunkVerifyReport>,
+    pub elapsed: std::time::Duration,
+}
+
+impl VerifyReport {
+    /// True iff every chunk passed every check.
+    pub fn ok(&self) -> bool {
+        self.chunks.iter().all(ChunkVerifyReport::ok)
+    }
+
+    /// Number of failing chunks.
+    pub fn failed(&self) -> usize {
+        self.chunks.iter().filter(|c| !c.ok()).count()
+    }
+
+    /// Stable JSON rendering for `ffcz archive verify`: the summary plus
+    /// one row per failing chunk.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"chunks\": {},\n", self.chunks.len()));
+        out.push_str(&format!("  \"failed\": {},\n", self.failed()));
+        out.push_str(&format!("  \"ok\": {},\n", self.ok()));
+        out.push_str(&format!(
+            "  \"elapsed_s\": {:.6},\n",
+            self.elapsed.as_secs_f64()
+        ));
+        out.push_str("  \"failures\": [");
+        let mut first = true;
+        for c in self.chunks.iter().filter(|c| !c.ok()) {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n    {{\"chunk\": \"{}\", \"crc_ok\": {}, \"decode_ok\": {}, \
+                 \"bounds_ok\": {}, \"error\": \"{}\"}}",
+                json_escape(&c.key),
+                c.crc_ok,
+                c.decode_ok,
+                c.bounds_ok,
+                json_escape(c.error.as_deref().unwrap_or(""))
+            ));
+        }
+        if !first {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}");
+        out
+    }
+}
+
+/// Minimal JSON string escaping for the verify report.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -731,6 +908,35 @@ mod tests {
         // Disable: everything dropped, index emptied with it.
         store.set_cache_budget(0);
         assert_eq!(store.cache_bytes(), 0);
+    }
+
+    #[test]
+    fn verify_walks_every_chunk_and_flags_corruption() {
+        let (_, bytes) = store_bytes();
+        let store = Store::from_bytes(bytes.clone()).unwrap();
+        let report = store.verify(2).unwrap();
+        assert!(report.ok());
+        assert_eq!(report.chunks.len(), store.grid().chunk_count());
+        assert_eq!(report.failed(), 0);
+        for (i, c) in report.chunks.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert!(c.crc_ok && c.decode_ok && c.bounds_ok);
+            assert!(c.error.is_none());
+        }
+        assert!(report.to_json().contains("\"failed\": 0"));
+
+        // Corrupt one payload byte: exactly that chunk fails, at the CRC
+        // check, and the JSON report names it.
+        let mut bad = bytes;
+        bad[10] ^= 0xFF;
+        let store = Store::from_bytes(bad).unwrap();
+        let report = store.verify(1).unwrap();
+        assert!(!report.ok());
+        assert_eq!(report.failed(), 1);
+        assert!(!report.chunks[0].crc_ok);
+        assert!(report.chunks[1..].iter().all(ChunkVerifyReport::ok));
+        let json = report.to_json();
+        assert!(json.contains("c/0/0") && json.contains("CRC-32"), "{json}");
     }
 
     #[test]

@@ -23,6 +23,16 @@
 //! and callers that tolerate *transient* faults (interrupted syscalls,
 //! storage-side timeouts) wrap it with [`read_exact_at_retry`] under a
 //! [`RetryPolicy`].
+//!
+//! The **write side** mirrors the same design: [`WritableStorage`] is a
+//! positioned `write_at`/`flush`/`sync`/`truncate` API implemented by
+//! [`FileStorage`] (via [`FileStorage::create`] / [`FileStorage::open_rw`]),
+//! [`MemStorage`], plain `Vec<u8>`, and the same [`FaultInjector`] wrapper
+//! (short writes, transient errors, hard failures at an exact op count —
+//! ENOSPC/preemption simulation — and latency, sharing one deterministic
+//! op counter and RNG stream with the read side). Full-range writes go
+//! through [`write_all_at`], and transient write faults heal under
+//! [`write_all_at_retry`].
 
 use std::io;
 use std::path::{Path, PathBuf};
@@ -165,6 +175,151 @@ pub fn read_exact_at_retry<S: ReadableStorage + ?Sized>(
     }
 }
 
+/// A byte sink supporting positioned writes — the writer-side storage
+/// abstraction behind [`crate::store::StoreStreamWriter`].
+///
+/// Writers are exclusive (`&mut self`): the store write path is a single
+/// sink thread, so unlike [`ReadableStorage`] there is no concurrent-access
+/// requirement. Short writes are part of the contract (`write_at` may
+/// accept fewer bytes than offered); callers that need the full span use
+/// [`write_all_at`], and callers that tolerate transient faults wrap it
+/// with [`write_all_at_retry`] under a [`RetryPolicy`].
+pub trait WritableStorage: Send {
+    /// Write up to `buf.len()` bytes at absolute `offset`, returning how
+    /// many bytes were accepted (≥ 1 for a non-empty `buf` unless the
+    /// backend errors). Writing past the current end extends the storage;
+    /// any gap reads back as zeros (sparse-file semantics).
+    fn write_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<usize>;
+
+    /// Push buffered bytes toward the backend (no-op for unbuffered
+    /// backends). Does **not** imply durability — that is [`Self::sync`].
+    fn flush(&mut self) -> io::Result<()>;
+
+    /// Durably persist everything written so far (`fsync` on files).
+    fn sync(&mut self) -> io::Result<()>;
+
+    /// Cut the storage to exactly `len` bytes (used by crash recovery to
+    /// drop a torn tail before resuming).
+    fn truncate(&mut self, len: u64) -> io::Result<()>;
+
+    /// Human-readable description for error messages.
+    fn describe(&self) -> String;
+}
+
+impl<W: WritableStorage + ?Sized> WritableStorage for &mut W {
+    fn write_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<usize> {
+        (**self).write_at(offset, buf)
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        (**self).flush()
+    }
+    fn sync(&mut self) -> io::Result<()> {
+        (**self).sync()
+    }
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        (**self).truncate(len)
+    }
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+}
+
+/// Write all of `buf` to `storage` at `offset`, looping over short writes.
+/// A backend that accepts 0 bytes for a non-empty `buf` surfaces as
+/// [`io::ErrorKind::WriteZero`]; every other error is surfaced as-is
+/// (retrying is policy, not mechanism — see [`write_all_at_retry`]).
+pub fn write_all_at<W: WritableStorage + ?Sized>(
+    storage: &mut W,
+    offset: u64,
+    buf: &[u8],
+) -> io::Result<()> {
+    let mut done = 0usize;
+    while done < buf.len() {
+        let n = storage.write_at(offset + done as u64, &buf[done..])?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::WriteZero,
+                format!(
+                    "storage accepted 0 of {} bytes at offset {} ({})",
+                    buf.len() - done,
+                    offset + done as u64,
+                    storage.describe()
+                ),
+            ));
+        }
+        done += n;
+    }
+    Ok(())
+}
+
+/// [`write_all_at`] under a [`RetryPolicy`]: transient faults are retried
+/// (with linear backoff) up to the attempt budget; the whole span is
+/// rewritten from `offset` on each attempt (positioned writes are
+/// idempotent, so a partial first attempt is simply overwritten). Returns
+/// the number of retries performed so callers can account them.
+pub fn write_all_at_retry<W: WritableStorage + ?Sized>(
+    storage: &mut W,
+    offset: u64,
+    buf: &[u8],
+    policy: &RetryPolicy,
+) -> io::Result<u32> {
+    let mut retries = 0u32;
+    loop {
+        match write_all_at(storage, offset, buf) {
+            Ok(()) => return Ok(retries),
+            Err(e)
+                if RetryPolicy::is_transient(e.kind()) && retries + 1 < policy.max_attempts =>
+            {
+                retries += 1;
+                if !policy.backoff.is_zero() {
+                    std::thread::sleep(policy.backoff * retries);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+impl WritableStorage for Vec<u8> {
+    fn write_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<usize> {
+        write_into_vec(self, offset, buf)
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+    fn sync(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::other(format!("truncate length {len} overflows usize")))?;
+        if len <= self.len() {
+            Vec::truncate(self, len);
+        } else {
+            self.resize(len, 0);
+        }
+        Ok(())
+    }
+    fn describe(&self) -> String {
+        format!("<vec: {} bytes>", self.len())
+    }
+}
+
+/// Positioned write into a growable byte vector with sparse-file
+/// semantics: a gap between the current end and `offset` zero-fills.
+fn write_into_vec(bytes: &mut Vec<u8>, offset: u64, buf: &[u8]) -> io::Result<usize> {
+    let offset = usize::try_from(offset)
+        .map_err(|_| io::Error::other(format!("write offset {offset} overflows usize")))?;
+    let end = offset
+        .checked_add(buf.len())
+        .ok_or_else(|| io::Error::other("write range overflows usize"))?;
+    if end > bytes.len() {
+        bytes.resize(end, 0);
+    }
+    bytes[offset..end].copy_from_slice(buf);
+    Ok(buf.len())
+}
+
 /// Local-file backend. On unix the reads are positioned (`pread`), so any
 /// number of threads can fetch chunks concurrently without a seek lock.
 pub struct FileStorage {
@@ -181,6 +336,42 @@ impl FileStorage {
     /// once written, so the length is cached at open.
     pub fn open(path: &Path) -> io::Result<Self> {
         let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        Ok(Self {
+            #[cfg(unix)]
+            file,
+            #[cfg(not(unix))]
+            file: Mutex::new(file),
+            len,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Create (or truncate) `path` read-write — the writer-side
+    /// constructor used by the streaming store writer for `<path>.tmp`
+    /// staging files.
+    pub fn create(path: &Path) -> io::Result<Self> {
+        let file = std::fs::File::options()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(Self {
+            #[cfg(unix)]
+            file,
+            #[cfg(not(unix))]
+            file: Mutex::new(file),
+            len: 0,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Open an existing `path` read-write without truncating — the crash
+    /// recovery path (`resume_store_write`) reopens an interrupted staging
+    /// file this way.
+    pub fn open_rw(path: &Path) -> io::Result<Self> {
+        let file = std::fs::File::options().read(true).write(true).open(path)?;
         let len = file.metadata()?.len();
         Ok(Self {
             #[cfg(unix)]
@@ -218,6 +409,55 @@ impl ReadableStorage for FileStorage {
     }
 }
 
+impl WritableStorage for FileStorage {
+    fn write_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<usize> {
+        let n;
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            n = self.file.write_at(buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let mut file = lock(&self.file);
+            file.seek(SeekFrom::Start(offset))?;
+            n = file.write(buf)?;
+        }
+        self.len = self.len.max(offset + n as u64);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        // `File` writes are unbuffered in userspace; nothing to push.
+        Ok(())
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        #[cfg(unix)]
+        {
+            self.file.sync_all()
+        }
+        #[cfg(not(unix))]
+        {
+            lock(&self.file).sync_all()
+        }
+    }
+
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        #[cfg(unix)]
+        self.file.set_len(len)?;
+        #[cfg(not(unix))]
+        lock(&self.file).set_len(len)?;
+        self.len = len;
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        self.path.display().to_string()
+    }
+}
+
 /// In-memory backend: the whole container as a shared byte buffer.
 pub struct MemStorage {
     bytes: Arc<Vec<u8>>,
@@ -233,6 +473,36 @@ impl MemStorage {
     /// Share an existing buffer without copying.
     pub fn shared(bytes: Arc<Vec<u8>>) -> Self {
         Self { bytes }
+    }
+
+    /// The current contents (the crash-sweep tests write through a
+    /// [`FaultInjector<MemStorage>`] and then salvage from this view).
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+impl WritableStorage for MemStorage {
+    fn write_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<usize> {
+        // Clone-on-write: writers that shared the buffer out keep their
+        // snapshot, this handle gets its own copy to mutate.
+        write_into_vec(Arc::make_mut(&mut self.bytes), offset, buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        WritableStorage::truncate(Arc::make_mut(&mut self.bytes), len)
+    }
+
+    fn describe(&self) -> String {
+        format!("<memory: {} bytes>", self.bytes.len())
     }
 }
 
@@ -270,6 +540,10 @@ pub struct FaultPlan {
     /// Split reads at a seeded point (at least 1 byte is still returned, so
     /// fault-free consumers that loop via [`read_exact_at`] stay correct).
     pub short_reads: bool,
+    /// Split writes at a seeded point (at least 1 byte is still accepted,
+    /// so fault-free producers that loop via [`write_all_at`] stay
+    /// correct).
+    pub short_writes: bool,
     /// Every `transient_every`-th operation (1-based op counter) fails with
     /// [`io::ErrorKind::Interrupted`] *before* touching the inner backend.
     /// `0` disables. With a value ≥ 2 an immediate retry is the next op
@@ -299,6 +573,7 @@ impl FaultPlan {
 pub struct FaultCounts {
     pub ops: u64,
     pub short_reads: u64,
+    pub short_writes: u64,
     pub transients: u64,
     pub failures: u64,
     pub corruptions: u64,
@@ -330,14 +605,16 @@ impl FaultHandle {
     }
 }
 
-/// Fault-injecting wrapper around any [`ReadableStorage`] backend,
-/// scheduled deterministically by a [`FaultPlan`].
+/// Fault-injecting wrapper around any [`ReadableStorage`] and/or
+/// [`WritableStorage`] backend, scheduled deterministically by a
+/// [`FaultPlan`]. Reads and writes share one op counter and RNG stream,
+/// so a mixed sequence replays the same fault schedule on every run.
 pub struct FaultInjector<S> {
     inner: S,
     state: Arc<Mutex<FaultState>>,
 }
 
-impl<S: ReadableStorage> FaultInjector<S> {
+impl<S> FaultInjector<S> {
     pub fn new(inner: S, plan: FaultPlan) -> Self {
         let rng = XorShift::new(plan.seed);
         Self {
@@ -356,6 +633,17 @@ impl<S: ReadableStorage> FaultInjector<S> {
         FaultHandle {
             state: Arc::clone(&self.state),
         }
+    }
+
+    /// Borrow the wrapped backend (e.g. to read back what a faulted write
+    /// sequence actually persisted).
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// Unwrap the injector, returning the inner backend.
+    pub fn into_inner(self) -> S {
+        self.inner
     }
 }
 
@@ -417,6 +705,64 @@ impl<S: ReadableStorage> ReadableStorage for FaultInjector<S> {
     }
 }
 
+impl<S: WritableStorage> WritableStorage for FaultInjector<S> {
+    fn write_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<usize> {
+        // Same schedule discipline as reads: fate is decided under the
+        // lock from the shared op counter and RNG stream. `corrupt_ops`
+        // applies only to reads — a corrupted *write* would be persisted
+        // and is the read sweep's job to detect, not the write path's.
+        let (take, latency) = {
+            let mut st = lock(&self.state);
+            st.counts.ops += 1;
+            let op = st.counts.ops;
+            if st.plan.transient_every > 0 && op % st.plan.transient_every == 0 {
+                st.counts.transients += 1;
+                return Err(io::Error::new(
+                    io::ErrorKind::Interrupted,
+                    format!("injected transient storage fault (op {op})"),
+                ));
+            }
+            if st.plan.fail_ops.contains(&op) {
+                st.counts.failures += 1;
+                return Err(io::Error::other(format!(
+                    "injected storage failure (op {op})"
+                )));
+            }
+            let mut take = buf.len();
+            if st.plan.short_writes && buf.len() > 1 {
+                take = 1 + st.rng.below(buf.len() - 1);
+                if take < buf.len() {
+                    st.counts.short_writes += 1;
+                }
+            }
+            (take, st.plan.latency)
+        };
+        if !latency.is_zero() {
+            std::thread::sleep(latency);
+        }
+        self.inner.write_at(offset, &buf[..take])
+    }
+
+    // Control operations pass through unfaulted: `fail_ops` indices stay
+    // pinned to data ops, so a crash point k always means "the k-th
+    // read/write", independent of how many flush/sync calls surround it.
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.inner.sync()
+    }
+
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        self.inner.truncate(len)
+    }
+
+    fn describe(&self) -> String {
+        format!("fault-injected {}", self.inner.describe())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -441,7 +787,7 @@ mod tests {
     fn file_storage_matches_memory() {
         let path = std::env::temp_dir().join("ffcz_storage_file_backend_test.bin");
         let bytes: Vec<u8> = (0..4096u32).map(|i| (i * 7 % 256) as u8).collect();
-        std::fs::write(&path, &bytes).unwrap();
+        std::fs::write(&path, &bytes).expect("writing the file-backend fixture");
         let f = FileStorage::open(&path).unwrap();
         assert_eq!(f.size().unwrap(), 4096);
         let mut a = vec![0u8; 777];
@@ -540,6 +886,164 @@ mod tests {
         assert_eq!(flipped.len(), 1, "{flipped:?}");
         assert_eq!(got[flipped[0]], want[flipped[0]] ^ 0xFF);
         assert_eq!(inj.handle().counts().corruptions, 1);
+    }
+
+    #[test]
+    fn vec_and_mem_writes_match_and_zero_fill_gaps() {
+        let mut v: Vec<u8> = Vec::new();
+        write_all_at(&mut v, 0, b"hello").unwrap();
+        write_all_at(&mut v, 8, b"world").unwrap();
+        assert_eq!(&v[..5], b"hello");
+        assert_eq!(&v[5..8], &[0, 0, 0], "gap must zero-fill");
+        assert_eq!(&v[8..], b"world");
+        WritableStorage::truncate(&mut v, 4).unwrap();
+        assert_eq!(v, b"hell");
+
+        let mut m = MemStorage::new(Vec::new());
+        write_all_at(&mut m, 0, b"hello").unwrap();
+        write_all_at(&mut m, 8, b"world").unwrap();
+        let mut got = vec![0u8; 13];
+        read_exact_at(&m, 0, &mut got).unwrap();
+        assert_eq!(got, v_expect());
+        WritableStorage::truncate(&mut m, 4).unwrap();
+        assert_eq!(m.bytes(), b"hell");
+    }
+
+    fn v_expect() -> Vec<u8> {
+        let mut e = b"hello".to_vec();
+        e.extend_from_slice(&[0, 0, 0]);
+        e.extend_from_slice(b"world");
+        e
+    }
+
+    #[test]
+    fn file_storage_write_read_roundtrip() {
+        let path = std::env::temp_dir().join("ffcz_storage_file_write_test.bin");
+        let mut f = FileStorage::create(&path).expect("creating the write fixture");
+        write_all_at(&mut f, 0, b"abcdef").unwrap();
+        write_all_at(&mut f, 3, b"XYZ").unwrap();
+        WritableStorage::flush(&mut f).unwrap();
+        f.sync().unwrap();
+        assert_eq!(f.size().unwrap(), 6);
+        let mut got = [0u8; 6];
+        read_exact_at(&f, 0, &mut got).unwrap();
+        assert_eq!(&got, b"abcXYZ");
+        // Reopen read-write without truncating; extend past the end.
+        drop(f);
+        let mut f = FileStorage::open_rw(&path).expect("reopening the write fixture");
+        assert_eq!(f.size().unwrap(), 6);
+        write_all_at(&mut f, 6, b"tail").unwrap();
+        f.truncate(8).unwrap();
+        assert_eq!(f.size().unwrap(), 8);
+        let mut got = [0u8; 8];
+        read_exact_at(&f, 0, &mut got).unwrap();
+        assert_eq!(&got, b"abcXYZta");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn short_writes_complete_through_write_all_at() {
+        let mut inj = FaultInjector::new(
+            Vec::<u8>::new(),
+            FaultPlan {
+                seed: 5,
+                short_writes: true,
+                ..FaultPlan::none()
+            },
+        );
+        let handle = inj.handle();
+        let payload: Vec<u8> = (0..1500).map(|i| (i % 241) as u8).collect();
+        write_all_at(&mut inj, 0, &payload).unwrap();
+        assert_eq!(inj.get_ref(), &payload);
+        assert!(handle.counts().short_writes > 0, "{:?}", handle.counts());
+    }
+
+    #[test]
+    fn transient_write_faults_heal_under_retry() {
+        let mut inj = FaultInjector::new(
+            Vec::<u8>::new(),
+            FaultPlan {
+                transient_every: 2,
+                ..FaultPlan::none()
+            },
+        );
+        let handle = inj.handle();
+        // Op 1 clean, op 2 faults: without retry the second write errors.
+        assert!(write_all_at(&mut inj, 0, b"aa").is_ok());
+        let err = write_all_at(&mut inj, 2, b"bb").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        // With retry every write lands: a faulted op is followed by a
+        // clean op index, every time.
+        for i in 0..8u64 {
+            let retries = write_all_at_retry(
+                &mut inj,
+                2 + 2 * i,
+                b"cc",
+                &RetryPolicy::transient(3, Duration::ZERO),
+            )
+            .unwrap();
+            assert!(retries <= 1);
+        }
+        assert_eq!(inj.get_ref().len(), 20);
+        assert!(handle.counts().transients >= 4);
+    }
+
+    #[test]
+    fn hard_write_failure_at_exact_op_is_not_retried() {
+        let mut inj = FaultInjector::new(
+            Vec::<u8>::new(),
+            FaultPlan {
+                fail_ops: vec![2],
+                ..FaultPlan::none()
+            },
+        );
+        assert!(write_all_at(&mut inj, 0, b"first").is_ok());
+        let err = write_all_at_retry(
+            &mut inj,
+            5,
+            b"second",
+            &RetryPolicy::transient(10, Duration::ZERO),
+        )
+        .unwrap_err();
+        assert!(!RetryPolicy::is_transient(err.kind()));
+        assert_eq!(inj.handle().counts().failures, 1);
+        // The failed op persisted nothing; the backend still holds only
+        // the first write.
+        assert_eq!(inj.into_inner(), b"first");
+    }
+
+    #[test]
+    fn write_fault_schedule_replays_deterministically() {
+        let run = || {
+            let mut inj = FaultInjector::new(
+                Vec::<u8>::new(),
+                FaultPlan {
+                    seed: 42,
+                    short_writes: true,
+                    transient_every: 5,
+                    ..FaultPlan::none()
+                },
+            );
+            let handle = inj.handle();
+            let mut offset = 0u64;
+            for i in 0..20u8 {
+                let chunk = vec![i; 37];
+                write_all_at_retry(
+                    &mut inj,
+                    offset,
+                    &chunk,
+                    &RetryPolicy::transient(4, Duration::ZERO),
+                )
+                .unwrap();
+                offset += 37;
+            }
+            (inj.into_inner(), handle.counts())
+        };
+        let (bytes_a, counts_a) = run();
+        let (bytes_b, counts_b) = run();
+        assert_eq!(bytes_a, bytes_b);
+        assert_eq!(counts_a, counts_b);
+        assert!(counts_a.short_writes > 0 && counts_a.transients > 0);
     }
 
     #[test]

@@ -19,24 +19,47 @@
 //!
 //! Because the streaming sink consumes chunks in index order, both paths
 //! produce **byte-identical** archives for any worker count.
+//!
+//! ## Crash consistency and recovery
+//!
+//! All streaming output goes through the [`WritableStorage`] abstraction
+//! (file, in-memory, fault-injected backends; transient write faults heal
+//! under the store's [`RetryPolicy`]). File writes **commit atomically**:
+//! [`write_store`] streams into a `<path>.tmp` sibling, syncs, and renames
+//! over `path` only after the trailer — the container's commit record — is
+//! durable, so `path` either holds a complete archive or is untouched.
+//! While streaming, the writer keeps a sidecar **recovery journal**
+//! (`<path>.tmp.jrn`): one CRC-framed record per completed chunk payload.
+//! After an interrupted write, [`Store::salvage`] cross-checks the journal
+//! against the partial container to recover the contiguous prefix of
+//! CRC-valid chunk payloads, and [`resume_store_write`] re-encodes only
+//! the missing chunks — producing an archive **bit-identical** to an
+//! uninterrupted write (per-chunk encoding is deterministic). The layout
+//! and the normative commit/recovery rules live in `docs/FORMAT.md`.
 
 use std::collections::HashMap;
-use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::codec::{CodecChain, CodecChainSpec, EncodedChunk};
+use crate::codec::{ChunkStats, CodecChain, CodecChainSpec, EncodedChunk};
 use crate::correction::CorrectionScratch;
 use crate::data::{Field, Precision};
-use crate::encoding::crc32;
+use crate::encoding::{crc32, fixed, varint};
 use crate::telemetry;
 
 use super::grid::{extract_subarray, ChunkGrid};
-use super::manifest::{ChunkEntry, Manifest, FOOTER_LEN, FOOTER_MAGIC, STORE_MAGIC};
+use super::manifest::{
+    ChunkEntry, Manifest, FOOTER_LEN, FOOTER_MAGIC, JOURNAL_MAGIC, STORE_MAGIC,
+};
 use super::parallel::{par_try_map_ordered_sink_with, par_try_map_with};
+use super::reader::Store;
+use super::storage::{
+    read_exact_at, write_all_at, write_all_at_retry, FaultCounts, FaultInjector, FaultPlan,
+    FileStorage, ReadableStorage, RetryPolicy, WritableStorage,
+};
 
 /// Options for store creation.
 #[derive(Debug, Clone)]
@@ -54,6 +77,12 @@ pub struct StoreWriteOptions {
     /// (e.g. a lossless chain for boundary chunks, FFCz elsewhere).
     /// Unknown keys are rejected at encode time.
     pub overrides: Vec<(String, CodecChainSpec)>,
+    /// Retry policy for transient storage faults on the write path
+    /// (positioned writes are idempotent, so a retried span is simply
+    /// rewritten). Healed retries are tallied in
+    /// [`StoreWriteReport::write_retries`] and the `store.write.retries`
+    /// counter. Default: no retries.
+    pub retry: RetryPolicy,
 }
 
 impl StoreWriteOptions {
@@ -63,7 +92,15 @@ impl StoreWriteOptions {
             workers: 1,
             queue_depth: 2,
             overrides: Vec::new(),
+            retry: RetryPolicy::none(),
         }
+    }
+
+    /// Heal transient write faults (interrupted/would-block/timed-out) by
+    /// rewriting the affected span under `policy`.
+    pub fn retry_policy(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
     }
 
     pub fn workers(mut self, workers: usize) -> Self {
@@ -96,6 +133,7 @@ impl StoreWriteOptions {
             workers: workers.max(1),
             queue_depth: 2,
             overrides: Vec::new(),
+            retry: RetryPolicy::none(),
         })
     }
 
@@ -122,6 +160,10 @@ pub struct StoreWriteReport {
     pub peak_payload_bytes: usize,
     /// True for the streaming write path, false for in-memory assembly.
     pub streamed: bool,
+    /// Transient write faults healed under [`StoreWriteOptions::retry`]
+    /// (always 0 on the in-memory path, which performs no storage writes).
+    /// Mirrored by the `store.write.retries` counter.
+    pub write_retries: u64,
     /// Correction-scratch allocation events summed over all workers (plan
     /// first contacts, spectrum/workspace buffer growth — see
     /// [`CorrectionScratch::allocation_events`]). Each worker warms once
@@ -242,6 +284,12 @@ fn chunk_report(grid: &ChunkGrid, i: usize, chain: usize, enc: &EncodedChunk) ->
 struct WriteMetrics {
     scratch_alloc_events: telemetry::Counter,
     peak_payload_bytes: telemetry::Gauge,
+    /// Transient write faults healed by rewriting the affected span.
+    retries: telemetry::Counter,
+    /// Archives atomically committed (staged write renamed into place).
+    commits: telemetry::Counter,
+    /// Chunks recovered from interrupted writes instead of re-encoded.
+    salvaged_chunks: telemetry::Counter,
 }
 
 fn write_metrics() -> &'static WriteMetrics {
@@ -249,6 +297,9 @@ fn write_metrics() -> &'static WriteMetrics {
     METRICS.get_or_init(|| WriteMetrics {
         scratch_alloc_events: telemetry::counter("store.encode.scratch_alloc_events"),
         peak_payload_bytes: telemetry::gauge("store.write.peak_payload_bytes"),
+        retries: telemetry::counter("store.write.retries"),
+        commits: telemetry::counter("store.write.commits"),
+        salvaged_chunks: telemetry::counter("store.write.salvaged_chunks"),
     })
 }
 
@@ -434,11 +485,40 @@ pub fn encode_store(
         // Every payload is held until assembly: the in-memory scale wall.
         peak_payload_bytes: manifest.payload_bytes() as usize,
         streamed: false,
+        write_retries: 0,
         scratch_alloc_events,
         elapsed: t0.elapsed(),
         chunk_reports,
     };
     Ok((out, manifest, report))
+}
+
+/// Sidecar recovery-journal sink: one CRC-framed record per completed
+/// chunk payload, written next to the staged container (head magic
+/// [`JOURNAL_MAGIC`]; record layout in `docs/FORMAT.md`). Best-effort
+/// durable — the journal is never fsynced per record, so a torn tail only
+/// costs re-encoding the chunks past it on resume.
+struct JournalSink {
+    out: Box<dyn WritableStorage>,
+    /// Next journal byte offset.
+    offset: u64,
+}
+
+impl JournalSink {
+    /// Start a fresh journal: writes the head magic.
+    fn create(mut out: Box<dyn WritableStorage>) -> Result<Self> {
+        write_all_at(out.as_mut(), 0, JOURNAL_MAGIC).context("writing recovery-journal header")?;
+        Ok(Self {
+            out,
+            offset: JOURNAL_MAGIC.len() as u64,
+        })
+    }
+
+    /// Continue an existing journal at `offset` (a record boundary; the
+    /// caller has already truncated any torn tail past it).
+    fn resume(out: Box<dyn WritableStorage>, offset: u64) -> Self {
+        Self { out, offset }
+    }
 }
 
 /// Incremental `.ffcz` container writer: the `StoreSink`-style streaming
@@ -447,12 +527,20 @@ pub fn encode_store(
 /// The container is written strictly front-to-back — head magic at
 /// construction, one payload per [`StoreStreamWriter::append_chunk`] call
 /// (in chunk index order), manifest and 24-byte trailer at
-/// [`StoreStreamWriter::finish`] — so `W` only needs [`Write`], never
-/// `Seek`, and a crash before `finish` leaves a file without the trailer,
-/// which readers reject with a precise "truncated or partially-written"
-/// error instead of decoding garbage.
-pub struct StoreStreamWriter<W: Write> {
+/// [`StoreStreamWriter::finish`] — through positioned [`WritableStorage`]
+/// writes at a tracked offset, never a seek. A crash before `finish`
+/// leaves a file without the trailer (the commit record), which readers
+/// reject with a precise "truncated or partially-written" error instead
+/// of decoding garbage; [`Store::salvage`] can then recover the completed
+/// chunk prefix through the recovery journal.
+pub struct StoreStreamWriter<W: WritableStorage> {
     out: W,
+    /// Transient-write-fault healing policy (see [`RetryPolicy`]).
+    retry: RetryPolicy,
+    /// Transient write faults healed so far under `retry`.
+    retries: u64,
+    /// Optional sidecar recovery journal, appended after each payload.
+    journal: Option<JournalSink>,
     shape: Vec<usize>,
     precision: Precision,
     chunk_shape: Vec<usize>,
@@ -463,7 +551,7 @@ pub struct StoreStreamWriter<W: Write> {
     offset: u64,
 }
 
-impl<W: Write> StoreStreamWriter<W> {
+impl<W: WritableStorage> StoreStreamWriter<W> {
     /// Start a container: validates the grid, writes the head magic.
     pub fn new(
         mut out: W,
@@ -476,9 +564,12 @@ impl<W: Write> StoreStreamWriter<W> {
             bail!("store needs at least one codec chain (chain 0 is the default)");
         }
         let grid = ChunkGrid::new(shape, chunk_shape)?;
-        out.write_all(STORE_MAGIC).context("writing store header")?;
+        write_all_at(&mut out, 0, STORE_MAGIC).context("writing store header")?;
         Ok(Self {
             out,
+            retry: RetryPolicy::none(),
+            retries: 0,
+            journal: None,
             shape: shape.to_vec(),
             precision,
             chunk_shape: chunk_shape.to_vec(),
@@ -489,9 +580,64 @@ impl<W: Write> StoreStreamWriter<W> {
         })
     }
 
+    /// Continue an interrupted container: `entries` is the salvaged chunk
+    /// prefix already present in `out` (payloads tiling
+    /// `[8, payload_end)`); no head magic is rewritten.
+    fn resume(
+        out: W,
+        shape: &[usize],
+        precision: Precision,
+        chunk_shape: &[usize],
+        chains: Vec<CodecChainSpec>,
+        entries: Vec<ChunkEntry>,
+    ) -> Result<Self> {
+        if chains.is_empty() {
+            bail!("store needs at least one codec chain (chain 0 is the default)");
+        }
+        let grid = ChunkGrid::new(shape, chunk_shape)?;
+        if entries.len() > grid.chunk_count() {
+            bail!(
+                "salvaged {} chunks, but the {:?} grid has only {}",
+                entries.len(),
+                grid.grid_shape(),
+                grid.chunk_count()
+            );
+        }
+        let offset = entries
+            .last()
+            .map_or(STORE_MAGIC.len() as u64, |e| e.offset + e.length);
+        Ok(Self {
+            out,
+            retry: RetryPolicy::none(),
+            retries: 0,
+            journal: None,
+            shape: shape.to_vec(),
+            precision,
+            chunk_shape: chunk_shape.to_vec(),
+            chains,
+            chunk_count: grid.chunk_count(),
+            entries,
+            offset,
+        })
+    }
+
+    /// Heal transient storage faults on subsequent writes under `policy`
+    /// (positioned writes are idempotent: the span is simply rewritten).
+    pub fn with_retry_policy(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
+    }
+
     /// Number of chunks appended so far (the next expected chunk index).
     pub fn chunks_written(&self) -> usize {
         self.entries.len()
+    }
+
+    fn note_retries(&mut self, retries: u32) {
+        if retries > 0 {
+            self.retries += u64::from(retries);
+            write_metrics().retries.add(u64::from(retries));
+        }
     }
 
     /// Spill the payload of the next chunk (in row-major grid order) to
@@ -511,52 +657,87 @@ impl<W: Write> StoreStreamWriter<W> {
                 self.chains.len()
             );
         }
-        self.out
-            .write_all(&enc.bytes)
+        let healed = write_all_at_retry(&mut self.out, self.offset, &enc.bytes, &self.retry)
             .with_context(|| format!("writing payload of chunk {}", self.entries.len()))?;
-        self.entries.push(ChunkEntry {
+        self.note_retries(healed);
+        let entry = ChunkEntry {
             offset: self.offset,
             length: enc.bytes.len() as u64,
             chain,
             crc32: Some(crc32(&enc.bytes)),
             stats: enc.stats,
-        });
+        };
         self.offset += enc.bytes.len() as u64;
+        // Journal the entry only after its payload landed: a record must
+        // never describe bytes the container does not hold yet.
+        if let Some(journal) = self.journal.as_mut() {
+            let record = journal_record(self.entries.len(), &entry);
+            write_all_at(journal.out.as_mut(), journal.offset, &record)
+                .context("appending to the recovery journal")?;
+            journal.offset += record.len() as u64;
+        }
+        self.entries.push(entry);
         Ok(())
     }
 
-    /// Write the manifest and trailer, flush, and return the manifest plus
-    /// the total container size. Fails if any chunk is missing — a partial
-    /// container must never gain a valid trailer.
-    pub fn finish(mut self) -> Result<(Manifest, u64)> {
-        if self.entries.len() != self.chunk_count {
+    /// Write the manifest and the 24-byte trailer — the commit record —
+    /// then flush and sync, and return the manifest, the total container
+    /// size, and the transient write faults healed along the way. Fails if
+    /// any chunk is missing — a partial container must never gain a valid
+    /// trailer.
+    pub fn finish(self) -> Result<(Manifest, u64, u64)> {
+        let Self {
+            mut out,
+            retry,
+            mut retries,
+            journal: _,
+            shape,
+            precision,
+            chunk_shape,
+            chains,
+            chunk_count,
+            entries,
+            offset,
+        } = self;
+        if entries.len() != chunk_count {
             bail!(
                 "store finish with {} of {} chunks written",
-                self.entries.len(),
-                self.chunk_count
+                entries.len(),
+                chunk_count
             );
         }
         let manifest = Manifest {
-            shape: self.shape,
-            precision: self.precision,
-            chunk_shape: self.chunk_shape,
-            chains: self.chains,
-            chunks: self.entries,
+            shape,
+            precision,
+            chunk_shape,
+            chains,
+            chunks: entries,
         };
         let manifest_bytes = manifest.to_bytes();
-        self.out
-            .write_all(&manifest_bytes)
+        let healed = write_all_at_retry(&mut out, offset, &manifest_bytes, &retry)
             .context("writing manifest")?;
-        self.out
-            .write_all(&self.offset.to_le_bytes())
+        if healed > 0 {
+            retries += u64::from(healed);
+            write_metrics().retries.add(u64::from(healed));
+        }
+        // One positioned write for the whole trailer, strictly after the
+        // manifest: until these 24 bytes land, the container stays
+        // uncommitted and readers reject it as partial.
+        let mut trailer = [0u8; FOOTER_LEN];
+        trailer[..8].copy_from_slice(&offset.to_le_bytes());
+        trailer[8..16].copy_from_slice(&(manifest_bytes.len() as u64).to_le_bytes());
+        trailer[16..].copy_from_slice(FOOTER_MAGIC);
+        let trailer_offset = offset + manifest_bytes.len() as u64;
+        let healed = write_all_at_retry(&mut out, trailer_offset, &trailer, &retry)
             .context("writing trailer")?;
-        self.out
-            .write_all(&(manifest_bytes.len() as u64).to_le_bytes())
-            .context("writing trailer")?;
-        self.out.write_all(FOOTER_MAGIC).context("writing trailer")?;
-        self.out.flush().context("flushing store")?;
-        let total = self.offset + manifest_bytes.len() as u64 + FOOTER_LEN as u64;
-        Ok((manifest, total))
+        if healed > 0 {
+            retries += u64::from(healed);
+            write_metrics().retries.add(u64::from(healed));
+        }
+        out.flush().context("flushing store")?;
+        out.sync().context("syncing store")?;
+        let total = trailer_offset + FOOTER_LEN as u64;
+        Ok((manifest, total, retries))
     }
 }
 
@@ -565,31 +746,73 @@ impl<W: Write> StoreStreamWriter<W> {
 /// soon as it (and every earlier chunk) is done, holding at most
 /// `opts.window()` payloads in memory. Produces bytes identical to
 /// [`encode_store`] for any worker count.
-pub fn stream_store_to<W: Write>(
+pub fn stream_store_to<W: WritableStorage>(
     field: &Field,
     chain: &CodecChainSpec,
     opts: &StoreWriteOptions,
     out: W,
+) -> Result<(Manifest, StoreWriteReport)> {
+    stream_store_core(field, chain, opts, out, None, Vec::new())
+}
+
+/// Shared streaming core under [`stream_store_to`], [`write_store`], and
+/// [`resume_store_write`]: encodes chunks `salvaged.len()..chunk_count`
+/// and appends them after the (possibly empty) salvaged prefix already
+/// present in `out`, journaling each payload to `journal` when given.
+fn stream_store_core<W: WritableStorage>(
+    field: &Field,
+    chain: &CodecChainSpec,
+    opts: &StoreWriteOptions,
+    out: W,
+    journal: Option<JournalSink>,
+    salvaged: Vec<ChunkEntry>,
 ) -> Result<(Manifest, StoreWriteReport)> {
     let t0 = Instant::now();
     let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
     let write_span = telemetry::span("store.write").arg("chunks", grid.chunk_count() as u64);
     let write_span_id = write_span.id();
     let (mut chains, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
+    let start = salvaged.len();
+    // A salvaged prefix can only be extended byte-identically if this
+    // invocation assigns those chunks the same chains the interrupted
+    // write did (callers trim mismatches; this is the backstop).
+    for (i, entry) in salvaged.iter().enumerate() {
+        if assign.get(i) != Some(&entry.chain) {
+            bail!(
+                "salvaged chunk {i} was encoded through chain {}, but the requested \
+                 options assign a different chain; cannot resume byte-identically",
+                entry.chain
+            );
+        }
+    }
+    let remaining = grid.chunk_count() - start.min(grid.chunk_count());
     // Budget against the number of workers that will actually run (the
-    // pool clamps itself to the chunk count).
-    resolve_auto_threads(&mut chains, opts.workers.clamp(1, grid.chunk_count().max(1)));
+    // pool clamps itself to the remaining chunk count).
+    resolve_auto_threads(&mut chains, opts.workers.clamp(1, remaining.max(1)));
     let built: Vec<CodecChain> = chains
         .iter()
         .map(CodecChain::from_spec)
         .collect::<Result<_>>()?;
-    let mut writer = StoreStreamWriter::new(
-        out,
-        field.shape(),
-        field.precision(),
-        &opts.chunk_shape,
-        chains,
-    )?;
+    let mut writer = if start == 0 {
+        StoreStreamWriter::new(
+            out,
+            field.shape(),
+            field.precision(),
+            &opts.chunk_shape,
+            chains,
+        )?
+    } else {
+        StoreStreamWriter::resume(
+            out,
+            field.shape(),
+            field.precision(),
+            &opts.chunk_shape,
+            chains,
+            salvaged,
+        )?
+    }
+    .with_retry_policy(opts.retry);
+    writer.journal = journal;
 
     // Payload-bytes-in-flight gauge (encoded, not yet written): the
     // peak-RSS proxy asserted by tests and reported by the bench.
@@ -598,13 +821,14 @@ pub fn stream_store_to<W: Write>(
     // Per-worker correction scratch, reused across every chunk a worker
     // encodes (audited by the allocation-event counter).
     let scratch_events = AtomicUsize::new(0);
-    let mut chunk_reports: Vec<ChunkEncodeReport> = Vec::with_capacity(grid.chunk_count());
+    let mut chunk_reports: Vec<ChunkEncodeReport> = Vec::with_capacity(remaining);
     par_try_map_ordered_sink_with(
-        grid.chunk_count(),
+        remaining,
         opts.workers,
         opts.window(),
         CorrectionScratch::new,
-        |i, scratch| {
+        |j, scratch| {
+            let i = start + j;
             let _chunk_span = telemetry::span_with_parent("store.chunk.encode", write_span_id)
                 .arg("chunk", i as u64);
             let coords = grid.chunk_coords(i);
@@ -627,7 +851,8 @@ pub fn stream_store_to<W: Write>(
             peak.fetch_max(now, Ordering::SeqCst);
             Ok(enc)
         },
-        |i, enc| {
+        |j, enc| {
+            let i = start + j;
             let _sink_span = telemetry::span_with_parent("store.chunk.sink", write_span_id)
                 .arg("chunk", i as u64)
                 .arg("bytes", enc.bytes.len() as u64);
@@ -637,7 +862,7 @@ pub fn stream_store_to<W: Write>(
             Ok(())
         },
     )?;
-    let (manifest, total_bytes) = writer.finish()?;
+    let (manifest, total_bytes, write_retries) = writer.finish()?;
 
     let manifest_bytes = total_bytes as usize
         - manifest.payload_bytes() as usize
@@ -656,6 +881,7 @@ pub fn stream_store_to<W: Write>(
         all_chunks_ok: manifest.all_chunks_ok(),
         peak_payload_bytes,
         streamed: true,
+        write_retries,
         scratch_alloc_events,
         elapsed: t0.elapsed(),
         chunk_reports,
@@ -663,41 +889,414 @@ pub fn stream_store_to<W: Write>(
     Ok((manifest, report))
 }
 
+/// Staging siblings of a final archive path: the temporary container the
+/// streaming writer fills (atomically renamed over `path` on commit) and
+/// its sidecar recovery journal.
+pub fn staging_paths(path: &Path) -> (PathBuf, PathBuf) {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let mut jrn = path.as_os_str().to_os_string();
+    jrn.push(".tmp.jrn");
+    (PathBuf::from(tmp), PathBuf::from(jrn))
+}
+
+/// Commit a fully-written staged container: rename it over `path`, drop
+/// the now-obsolete recovery journal, and count the commit.
+fn commit_staged(tmp: &Path, jrn: &Path, path: &Path) -> Result<()> {
+    std::fs::rename(tmp, path)
+        .with_context(|| format!("renaming {} to {}", tmp.display(), path.display()))?;
+    // The journal only describes the staged write; once the rename
+    // commits, it must not outlive the archive it described.
+    let _ = std::fs::remove_file(jrn);
+    write_metrics().commits.incr();
+    Ok(())
+}
+
+/// Staged write shared by [`write_store`] and [`write_store_faulted`]:
+/// stream into `tmp` (journaling to `jrn`), optionally through a
+/// [`FaultInjector`], and commit on success. Leaves `tmp`/`jrn` in place
+/// on failure — the *callers* decide whether a failure is a clean error
+/// (remove the staging pair) or a simulated crash (keep it salvageable).
+fn write_store_staged(
+    field: &Field,
+    chain: &CodecChainSpec,
+    opts: &StoreWriteOptions,
+    path: &Path,
+    tmp: &Path,
+    jrn: &Path,
+    plan: Option<FaultPlan>,
+) -> Result<(StoreWriteReport, FaultCounts)> {
+    let journal = JournalSink::create(Box::new(
+        FileStorage::create(jrn).with_context(|| format!("creating {}", jrn.display()))?,
+    ))?;
+    let out = FileStorage::create(tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    let (report, counts) = match plan {
+        Some(plan) => {
+            let injector = FaultInjector::new(out, plan);
+            let handle = injector.handle();
+            let (_, report) =
+                stream_store_core(field, chain, opts, injector, Some(journal), Vec::new())
+                    .with_context(|| format!("writing {}", tmp.display()))?;
+            (report, handle.counts())
+        }
+        None => {
+            let (_, report) = stream_store_core(field, chain, opts, out, Some(journal), Vec::new())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            (report, FaultCounts::default())
+        }
+    };
+    commit_staged(tmp, jrn, path)?;
+    Ok((report, counts))
+}
+
 /// Encode `field` and write the store to `path`, **streaming** chunk
 /// payloads to the file as they complete (see [`stream_store_to`]); peak
 /// payload memory is bounded by `opts.window()` chunks. Use
 /// [`write_store_in_memory`] to assemble the container in memory first.
 ///
-/// The stream goes to a `<path>.tmp` sibling that is renamed over `path`
-/// only after the trailer is flushed, so a failed or interrupted write
-/// never clobbers an existing archive at `path` and never leaves a
-/// trailer-less file under the final name.
+/// The write **commits atomically**: the stream goes to a `<path>.tmp`
+/// sibling (with a `<path>.tmp.jrn` recovery journal) that is fsynced and
+/// renamed over `path` only after the trailer — the commit record — is
+/// written, so a failed or interrupted write never clobbers an existing
+/// archive at `path` and never leaves a trailer-less file under the final
+/// name. On a clean error both staging files are removed; after a *crash*
+/// (process death mid-write) they remain, and [`resume_store_write`]
+/// salvages them.
 pub fn write_store(
     field: &Field,
     chain: &CodecChainSpec,
     opts: &StoreWriteOptions,
     path: &Path,
 ) -> Result<StoreWriteReport> {
-    let mut tmp = path.as_os_str().to_os_string();
-    tmp.push(".tmp");
-    let tmp = std::path::PathBuf::from(tmp);
-    let file = std::fs::File::create(&tmp)
-        .with_context(|| format!("creating {}", tmp.display()))?;
-    let mut out = std::io::BufWriter::new(file);
-    let result = stream_store_to(field, chain, opts, &mut out)
-        .with_context(|| format!("writing {}", tmp.display()));
-    drop(out);
-    match result {
-        Ok((_, report)) => {
-            std::fs::rename(&tmp, path).with_context(|| {
-                format!("renaming {} to {}", tmp.display(), path.display())
-            })?;
-            Ok(report)
-        }
+    let (tmp, jrn) = staging_paths(path);
+    match write_store_staged(field, chain, opts, path, &tmp, &jrn, None) {
+        Ok((report, _)) => Ok(report),
         Err(e) => {
+            // A clean failure must leave no partial state behind.
             let _ = std::fs::remove_file(&tmp);
+            let _ = std::fs::remove_file(&jrn);
             Err(e)
         }
+    }
+}
+
+/// Chaos variant of [`write_store`]: the staged `<path>.tmp` file is
+/// wrapped in a [`FaultInjector`] driven by `plan`. On success it commits
+/// exactly like [`write_store`] and returns the fault tally alongside the
+/// report; on failure it **keeps** `<path>.tmp` and `<path>.tmp.jrn` —
+/// simulating a crash at the injected failure point — so tests and
+/// `ffcz archive repair` can salvage and resume. The final `path` is
+/// never touched by a failed write either way.
+pub fn write_store_faulted(
+    field: &Field,
+    chain: &CodecChainSpec,
+    opts: &StoreWriteOptions,
+    path: &Path,
+    plan: FaultPlan,
+) -> Result<(StoreWriteReport, FaultCounts)> {
+    let (tmp, jrn) = staging_paths(path);
+    write_store_staged(field, chain, opts, path, &tmp, &jrn, Some(plan))
+}
+
+/// Outcome of [`resume_store_write`].
+#[derive(Debug, Clone)]
+pub struct RepairReport {
+    /// Chunks recovered from the interrupted write (not re-encoded).
+    pub salvaged_chunks: usize,
+    /// Chunks (re-)encoded to complete the archive.
+    pub reencoded_chunks: usize,
+    /// Write report of the completing pass; its `chunk_reports` cover
+    /// only the re-encoded chunks.
+    pub write: StoreWriteReport,
+}
+
+/// Complete an interrupted [`write_store`] at `path`: salvage the valid
+/// chunk prefix from `<path>.tmp` + `<path>.tmp.jrn` (see
+/// [`Store::salvage`]), re-encode only the missing chunks from `field`,
+/// and commit. Because per-chunk encoding is deterministic, the committed
+/// archive is **bit-identical** to an uninterrupted write — provided
+/// `field`, `chain`, and `opts` match the interrupted invocation (a
+/// mismatched prefix is detected through chain assignment where possible
+/// and otherwise discarded by re-encoding from scratch; `archive verify`
+/// checks the result either way). When no staging files exist, this is a
+/// plain [`write_store`].
+pub fn resume_store_write(
+    field: &Field,
+    chain: &CodecChainSpec,
+    opts: &StoreWriteOptions,
+    path: &Path,
+) -> Result<RepairReport> {
+    let (tmp, jrn) = staging_paths(path);
+    let fresh = |write: StoreWriteReport| RepairReport {
+        salvaged_chunks: 0,
+        reencoded_chunks: write.chunk_count,
+        write,
+    };
+    if !tmp.exists() {
+        return Ok(fresh(write_store(field, chain, opts, path)?));
+    }
+    let journal_bytes = std::fs::read(&jrn).unwrap_or_default();
+    let salvage = {
+        let partial =
+            FileStorage::open(&tmp).with_context(|| format!("opening {}", tmp.display()))?;
+        Store::salvage(&partial, &journal_bytes)?
+    };
+
+    // Keep only the prefix whose chain assignment matches what this
+    // invocation would produce — anything past a mismatch (different
+    // options than the interrupted write) cannot be extended
+    // byte-identically.
+    let grid = ChunkGrid::new(field.shape(), &opts.chunk_shape)?;
+    let (_, assign) = resolve_chains(&grid, chain, &opts.overrides)?;
+    let keep = salvage
+        .entries
+        .iter()
+        .zip(assign.iter())
+        .take_while(|(entry, &chain_index)| entry.chain == chain_index)
+        .count();
+    if keep == 0 {
+        let _ = std::fs::remove_file(&tmp);
+        let _ = std::fs::remove_file(&jrn);
+        return Ok(fresh(write_store(field, chain, opts, path)?));
+    }
+    let entries: Vec<ChunkEntry> = salvage.entries[..keep].to_vec();
+    let payload_end = entries
+        .last()
+        .map_or(STORE_MAGIC.len() as u64, |e| e.offset + e.length);
+    let journal_end = salvage.journal_end(keep);
+    write_metrics().salvaged_chunks.add(keep as u64);
+
+    // Drop any torn bytes past the salvageable prefix, then extend. On
+    // failure the (truncated) staging pair stays: the resume itself is
+    // retryable.
+    let mut out =
+        FileStorage::open_rw(&tmp).with_context(|| format!("reopening {}", tmp.display()))?;
+    out.truncate(payload_end)
+        .context("truncating the partial archive to its salvageable prefix")?;
+    let mut journal_store =
+        FileStorage::open_rw(&jrn).with_context(|| format!("reopening {}", jrn.display()))?;
+    journal_store
+        .truncate(journal_end)
+        .context("truncating the recovery journal to its salvageable prefix")?;
+    let journal = JournalSink::resume(Box::new(journal_store), journal_end);
+
+    let (_, write) = stream_store_core(field, chain, opts, out, Some(journal), entries)
+        .with_context(|| format!("resuming {}", tmp.display()))?;
+    commit_staged(&tmp, &jrn, path)?;
+    Ok(RepairReport {
+        salvaged_chunks: keep,
+        reencoded_chunks: grid.chunk_count() - keep,
+        write,
+    })
+}
+
+/// Serialize one recovery-journal record: varint body length, body,
+/// CRC-32 of the body (u32 LE). The body mirrors a [`ChunkEntry`]: chunk
+/// index, chain, payload offset, payload length (varints), payload CRC-32
+/// (u32 LE), then the verification stats — a flags byte (bit 0
+/// `spatial_ok`, bit 1 `frequency_ok`), two f64 LE ratios, and a varint
+/// POCS iteration count. The framing CRC makes torn tails detectable; the
+/// f64 round trip is bit-exact, so a resumed manifest matches an
+/// uninterrupted one byte for byte.
+fn journal_record(index: usize, entry: &ChunkEntry) -> Vec<u8> {
+    let mut body = Vec::with_capacity(48);
+    varint::write(&mut body, index as u64);
+    varint::write(&mut body, entry.chain as u64);
+    varint::write(&mut body, entry.offset);
+    varint::write(&mut body, entry.length);
+    body.extend_from_slice(&entry.crc32.unwrap_or_default().to_le_bytes());
+    let flags = u8::from(entry.stats.spatial_ok) | (u8::from(entry.stats.frequency_ok) << 1);
+    body.push(flags);
+    body.extend_from_slice(&entry.stats.max_spatial_ratio.to_le_bytes());
+    body.extend_from_slice(&entry.stats.max_frequency_ratio.to_le_bytes());
+    varint::write(&mut body, u64::from(entry.stats.pocs_iterations));
+    let mut record = Vec::with_capacity(body.len() + 8);
+    varint::write(&mut record, body.len() as u64);
+    record.extend_from_slice(&body);
+    record.extend_from_slice(&crc32(&body).to_le_bytes());
+    record
+}
+
+/// One parsed recovery-journal record.
+struct JournalRecord {
+    /// Chunk index the record claims to describe.
+    index: u64,
+    entry: ChunkEntry,
+    /// Journal byte offset just past this record.
+    end: u64,
+}
+
+/// Parse the valid prefix of a recovery journal. Tolerant of torn tails:
+/// scanning stops at the first truncated, CRC-mismatched, or malformed
+/// record (a crash mid-journal-append costs only the chunks past it), and
+/// a missing or wrong head magic yields an empty prefix. Never panics on
+/// any input.
+fn parse_journal(bytes: &[u8]) -> Vec<JournalRecord> {
+    let mut records = Vec::new();
+    if bytes.len() < JOURNAL_MAGIC.len() || &bytes[..JOURNAL_MAGIC.len()] != JOURNAL_MAGIC {
+        return records;
+    }
+    let mut cursor = JOURNAL_MAGIC.len();
+    loop {
+        let mut pos = cursor;
+        let Ok(body_len) = varint::read(bytes, &mut pos) else {
+            break;
+        };
+        let Ok(body_len) = usize::try_from(body_len) else {
+            break;
+        };
+        if body_len > bytes.len().saturating_sub(pos).saturating_sub(4) {
+            break; // torn tail: the body or its framing CRC is cut off
+        }
+        let body = &bytes[pos..pos + body_len];
+        let mut crc_pos = pos + body_len;
+        let Ok(expect) = fixed::read_u32_le(bytes, &mut crc_pos, "journal record CRC") else {
+            break;
+        };
+        if crc32(body) != expect {
+            break;
+        }
+        let Some((index, entry)) = parse_journal_body(body) else {
+            break;
+        };
+        records.push(JournalRecord {
+            index,
+            entry,
+            end: crc_pos as u64,
+        });
+        cursor = crc_pos;
+    }
+    records
+}
+
+/// Decode one journal record body (already CRC-verified framing); `None`
+/// on any truncation or overflow.
+fn parse_journal_body(body: &[u8]) -> Option<(u64, ChunkEntry)> {
+    let mut pos = 0usize;
+    let index = varint::read(body, &mut pos).ok()?;
+    let chain = usize::try_from(varint::read(body, &mut pos).ok()?).ok()?;
+    let offset = varint::read(body, &mut pos).ok()?;
+    let length = varint::read(body, &mut pos).ok()?;
+    let payload_crc = fixed::read_u32_le(body, &mut pos, "journal payload CRC").ok()?;
+    let flags = *body.get(pos)?;
+    pos += 1;
+    let max_spatial_ratio = fixed::read_f64_le(body, &mut pos, "journal spatial ratio").ok()?;
+    let max_frequency_ratio = fixed::read_f64_le(body, &mut pos, "journal frequency ratio").ok()?;
+    let pocs_iterations = u32::try_from(varint::read(body, &mut pos).ok()?).ok()?;
+    Some((
+        index,
+        ChunkEntry {
+            offset,
+            length,
+            chain,
+            crc32: Some(payload_crc),
+            stats: ChunkStats {
+                spatial_ok: flags & 1 != 0,
+                frequency_ok: flags & 2 != 0,
+                max_spatial_ratio,
+                max_frequency_ratio,
+                pocs_iterations,
+            },
+        },
+    ))
+}
+
+/// The recoverable prefix of an interrupted store write, produced by
+/// [`Store::salvage`].
+#[derive(Debug, Clone)]
+pub struct Salvage {
+    /// Manifest entries for the contiguous prefix of CRC-valid chunk
+    /// payloads (chunk indices `0..entries.len()`, in order).
+    pub entries: Vec<ChunkEntry>,
+    /// Container byte offset just past the last salvageable payload —
+    /// where a resumed write continues (8, the head magic length, when
+    /// nothing is salvageable).
+    pub payload_end: u64,
+    /// Per-entry journal end offsets (record boundaries), so callers can
+    /// truncate the journal after trimming the prefix further.
+    journal_ends: Vec<u64>,
+}
+
+impl Salvage {
+    /// Number of salvageable chunks.
+    pub fn chunks(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Journal byte length covering exactly the first `keep` entries
+    /// (just the head magic when `keep` is 0).
+    fn journal_end(&self, keep: usize) -> u64 {
+        match keep.checked_sub(1).and_then(|i| self.journal_ends.get(i)) {
+            Some(&end) => end,
+            None => JOURNAL_MAGIC.len() as u64,
+        }
+    }
+}
+
+impl Store {
+    /// Scan an interrupted archive write for its recoverable prefix.
+    ///
+    /// `storage` is the partial container (`<path>.tmp`); `journal` is the
+    /// raw sidecar recovery journal (`<path>.tmp.jrn`). A chunk is
+    /// salvageable iff its journal record is intact (framing CRC), its
+    /// index and payload offset continue the contiguous prefix from the
+    /// head magic, its payload lies fully within the partial container,
+    /// and the payload bytes match the journal's CRC-32. Scanning stops at
+    /// the first violation: everything before it is exactly what an
+    /// uninterrupted write would have produced; everything after it is
+    /// re-encoded by [`resume_store_write`]. Structural damage — torn
+    /// files, bad magics, corrupt records — shortens the prefix rather
+    /// than erroring; only real storage I/O failures are errors.
+    pub fn salvage(storage: &dyn ReadableStorage, journal: &[u8]) -> Result<Salvage> {
+        let _span = telemetry::span("store.salvage");
+        let size = storage
+            .size()
+            .with_context(|| format!("stat {}", storage.describe()))?;
+        let mut out = Salvage {
+            entries: Vec::new(),
+            payload_end: STORE_MAGIC.len() as u64,
+            journal_ends: Vec::new(),
+        };
+        // Without an intact head magic the container never got started.
+        if size < STORE_MAGIC.len() as u64 {
+            return Ok(out);
+        }
+        let mut head = [0u8; 8];
+        read_exact_at(storage, 0, &mut head)
+            .with_context(|| format!("reading store header of {}", storage.describe()))?;
+        if head != *STORE_MAGIC {
+            return Ok(out);
+        }
+        let mut buf = Vec::new();
+        for record in parse_journal(journal) {
+            if record.index != out.entries.len() as u64 || record.entry.offset != out.payload_end {
+                break; // record does not continue the contiguous prefix
+            }
+            let Some(end) = record.entry.offset.checked_add(record.entry.length) else {
+                break;
+            };
+            if end > size {
+                break; // payload torn off by the crash
+            }
+            let Ok(len) = usize::try_from(record.entry.length) else {
+                break;
+            };
+            buf.resize(len, 0);
+            read_exact_at(storage, record.entry.offset, &mut buf).with_context(|| {
+                format!(
+                    "reading salvage candidate chunk {} of {}",
+                    record.index,
+                    storage.describe()
+                )
+            })?;
+            if record.entry.crc32 != Some(crc32(&buf)) {
+                break; // torn or corrupt payload
+            }
+            out.payload_end = end;
+            out.journal_ends.push(record.end);
+            out.entries.push(record.entry);
+        }
+        Ok(out)
     }
 }
 
@@ -920,5 +1519,151 @@ mod tests {
         w.append_chunk(0, &enc).unwrap();
         w.append_chunk(0, &enc).unwrap();
         assert!(w.append_chunk(0, &enc).is_err(), "third chunk on a 2-chunk grid");
+    }
+
+    fn entry_for(offset: u64, payload: &[u8], chain: usize, iters: u32) -> ChunkEntry {
+        ChunkEntry {
+            offset,
+            length: payload.len() as u64,
+            chain,
+            crc32: Some(crc32(payload)),
+            stats: ChunkStats {
+                spatial_ok: true,
+                frequency_ok: iters % 2 == 0,
+                max_spatial_ratio: 0.25 + iters as f64,
+                max_frequency_ratio: 0.75,
+                pocs_iterations: iters,
+            },
+        }
+    }
+
+    #[test]
+    fn journal_records_roundtrip_and_tolerate_torn_tails() {
+        let payloads: Vec<Vec<u8>> = vec![vec![0xAA; 50], vec![0xBB; 30], vec![0xCC; 17]];
+        let mut offset = STORE_MAGIC.len() as u64;
+        let mut entries = Vec::new();
+        let mut journal = JOURNAL_MAGIC.to_vec();
+        for (i, p) in payloads.iter().enumerate() {
+            let e = entry_for(offset, p, i % 2, i as u32);
+            offset += e.length;
+            journal.extend_from_slice(&journal_record(i, &e));
+            entries.push(e);
+        }
+
+        // The full journal parses back to exactly the entries written,
+        // stats and all (f64 ratios are bit-exact through the round trip).
+        let records = parse_journal(&journal);
+        assert_eq!(records.len(), 3);
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(r.index, i as u64);
+            assert_eq!(r.entry, entries[i]);
+        }
+        assert_eq!(records[2].end, journal.len() as u64);
+
+        // Every byte-level truncation parses to only the records it fully
+        // contains — in order, never partial, never a panic.
+        let mut seen_partial = false;
+        for cut in 0..journal.len() {
+            let prefix = parse_journal(&journal[..cut]);
+            assert!(prefix.len() <= 3, "cut={cut}");
+            seen_partial |= !prefix.is_empty() && prefix.len() < 3;
+            for (i, r) in prefix.iter().enumerate() {
+                assert_eq!(r.index, i as u64, "cut={cut}");
+                assert_eq!(r.entry, entries[i], "cut={cut}");
+            }
+        }
+        assert!(seen_partial, "some truncation must yield a proper prefix");
+
+        // A flipped byte inside the middle record kills it and everything
+        // after it (the framing CRC catches the damage).
+        let first_len = journal_record(0, &entries[0]).len();
+        let mut corrupt = journal.clone();
+        corrupt[JOURNAL_MAGIC.len() + first_len + 3] ^= 0x40;
+        assert_eq!(parse_journal(&corrupt).len(), 1);
+
+        // Wrong head magic yields nothing, as does an empty journal.
+        let mut bad = journal.clone();
+        bad[0] ^= 0xFF;
+        assert!(parse_journal(&bad).is_empty());
+        assert!(parse_journal(&[]).is_empty());
+    }
+
+    #[test]
+    fn salvage_recovers_exactly_the_crc_valid_prefix() {
+        use super::super::storage::MemStorage;
+        let p0 = vec![0x11u8; 40];
+        let p1 = vec![0x22u8; 25];
+        let mut container = STORE_MAGIC.to_vec();
+        container.extend_from_slice(&p0);
+        container.extend_from_slice(&p1);
+        let e0 = entry_for(8, &p0, 0, 2);
+        let e1 = entry_for(48, &p1, 0, 4);
+        let mut journal = JOURNAL_MAGIC.to_vec();
+        journal.extend_from_slice(&journal_record(0, &e0));
+        journal.extend_from_slice(&journal_record(1, &e1));
+
+        // Intact container + journal: both chunks salvage, and the resume
+        // point sits just past the last payload.
+        let s = Store::salvage(&MemStorage::new(container.clone()), &journal).unwrap();
+        assert_eq!(s.chunks(), 2);
+        assert_eq!(s.entries, vec![e0.clone(), e1.clone()]);
+        assert_eq!(s.payload_end, 73);
+        assert_eq!(s.journal_end(2), journal.len() as u64);
+        assert_eq!(s.journal_end(0), JOURNAL_MAGIC.len() as u64);
+
+        // Container torn mid-payload-1: only chunk 0 salvages.
+        let s = Store::salvage(&MemStorage::new(container[..60].to_vec()), &journal).unwrap();
+        assert_eq!(s.chunks(), 1);
+        assert_eq!(s.payload_end, 48);
+
+        // A corrupt byte in payload 1 stops the scan at the CRC check.
+        let mut corrupt = container.clone();
+        corrupt[50] ^= 1;
+        let s = Store::salvage(&MemStorage::new(corrupt), &journal).unwrap();
+        assert_eq!(s.chunks(), 1);
+
+        // Missing head magic: nothing salvageable, resume restarts at 8.
+        let s = Store::salvage(&MemStorage::new(b"not a store".to_vec()), &journal).unwrap();
+        assert_eq!(s.chunks(), 0);
+        assert_eq!(s.payload_end, 8);
+        let s = Store::salvage(&MemStorage::new(Vec::new()), &journal).unwrap();
+        assert_eq!(s.chunks(), 0);
+
+        // A journal record that skips an index does not extend the prefix.
+        let mut skipped = JOURNAL_MAGIC.to_vec();
+        skipped.extend_from_slice(&journal_record(0, &e0));
+        skipped.extend_from_slice(&journal_record(2, &e1));
+        let s = Store::salvage(&MemStorage::new(container), &skipped).unwrap();
+        assert_eq!(s.chunks(), 1);
+    }
+
+    #[test]
+    fn stream_writer_reports_healed_write_retries() {
+        use super::super::storage::{FaultInjector, FaultPlan};
+        let field = GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(11).build();
+        let spec = CodecChainSpec::lossless();
+        let opts = StoreWriteOptions::new(&[4, 4]).workers(1);
+        let (clean, _, _) = encode_store(&field, &spec, &opts).unwrap();
+
+        // Fault every 2nd op with a transient error; the retry policy
+        // rewrites each faulted span and the bytes come out identical to
+        // an unfaulted write.
+        let plan = FaultPlan {
+            transient_every: 2,
+            ..FaultPlan::none()
+        };
+        let mut injector = FaultInjector::new(Vec::new(), plan.clone());
+        let handle = injector.handle();
+        let retrying = opts
+            .clone()
+            .retry_policy(RetryPolicy::transient(4, Duration::from_millis(0)));
+        let (_, report) = stream_store_to(&field, &spec, &retrying, &mut injector).unwrap();
+        assert!(report.write_retries > 0, "transient faults must be healed");
+        assert_eq!(report.write_retries, handle.counts().transients);
+        assert_eq!(injector.get_ref(), &clean, "healed write must be byte-identical");
+
+        // Same write without a retry policy fails on the first transient.
+        let injector = FaultInjector::new(Vec::new(), plan);
+        assert!(stream_store_to(&field, &spec, &opts, injector).is_err());
     }
 }

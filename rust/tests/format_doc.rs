@@ -10,7 +10,10 @@
 //!    implemented **from the document's tables only** (its own varint,
 //!    CRC-32, and bit-flag readers — nothing from `store::manifest`);
 //! 3. a manifest-v1 container is **written** following the document alone
-//!    and must open and decode bit-exactly through the real reader.
+//!    and must open and decode bit-exactly through the real reader;
+//! 4. the recovery-journal sidecar left behind by an interrupted write is
+//!    walked record by record following § 8.1 and cross-checked against
+//!    the manifest of the committed archive.
 
 use std::collections::HashMap;
 
@@ -19,7 +22,10 @@ use ffcz::correction::FfczConfig;
 use ffcz::data::synth::grf::GrfBuilder;
 use ffcz::data::Precision;
 use ffcz::encoding::lossless_compress;
-use ffcz::store::{encode_store, extract_subarray, Store, StoreWriteOptions};
+use ffcz::store::{
+    encode_store, extract_subarray, resume_store_write, staging_paths, write_store_faulted,
+    FaultPlan, Store, StoreWriteOptions,
+};
 
 fn format_doc() -> String {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/FORMAT.md");
@@ -114,6 +120,10 @@ fn doc_constants_match_the_implementation() {
     assert_eq!(
         c["CHAIN_SPEC_VERSION"].parse::<u8>().unwrap(),
         ffcz::codec::CHAIN_SPEC_VERSION
+    );
+    assert_eq!(
+        c.get("JOURNAL_MAGIC").map(String::as_bytes),
+        Some(&ffcz::store::manifest::JOURNAL_MAGIC[..])
     );
     // The documented CRC-32 parameters produce the documented check value
     // — and both agree with the implementation.
@@ -319,4 +329,99 @@ fn v1_archive_written_from_the_doc_alone_is_readable() {
         field.data(),
         "doc-built v1 archive decodes bit-exactly"
     );
+}
+
+/// Walk the recovery-journal sidecar of an interrupted write following
+/// § 8.1 of the doc — its own varint and CRC-32 readers only — and
+/// cross-check every record against the manifest the committed archive
+/// ends up with.
+#[test]
+fn recovery_journal_walks_by_the_documented_layout() {
+    let field = GrfBuilder::new(&[8, 8]).lognormal(1.0).seed(17).build();
+    let chain = CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3));
+    let opts = StoreWriteOptions::new(&[4, 4])
+        .workers(1)
+        .override_chunk("c/0/0", CodecChainSpec::lossless());
+    let (want, manifest, _) = encode_store(&field, &chain, &opts).unwrap();
+
+    let path = std::env::temp_dir().join(format!("ffcz_fmt_jrn_{}.ffcz", std::process::id()));
+    let (tmp, jrn) = staging_paths(&path);
+    for p in [&path, &tmp, &jrn] {
+        let _ = std::fs::remove_file(p);
+    }
+
+    // Probe run: a fault-free plan through the injector learns the op
+    // count of this exact write sequence (the schedule is deterministic).
+    let (_, counts) = write_store_faulted(&field, &chain, &opts, &path, FaultPlan::none())
+        .expect("fault-free probe write commits");
+    std::fs::remove_file(&path).expect("removing the probe archive");
+
+    // Interrupt at the manifest write: every payload is staged and every
+    // journal record is durable, but no commit record exists.
+    let plan = FaultPlan {
+        fail_ops: vec![counts.ops - 1],
+        ..FaultPlan::none()
+    };
+    write_store_faulted(&field, &chain, &opts, &path, plan)
+        .expect_err("the injected manifest-write failure surfaces");
+    assert!(!path.exists(), "no partial archive under the final name");
+
+    // § 8.1: head magic, then one framed record per staged payload.
+    let jrn_bytes = std::fs::read(&jrn).expect("the journal sidecar survives the crash");
+    let tmp_bytes = std::fs::read(&tmp).expect("the staging file survives the crash");
+    assert_eq!(&jrn_bytes[..8], b"FFCZJRN1", "JOURNAL_MAGIC per § 1.2");
+    let mut pos = 8usize;
+    let mut index = 0usize;
+    while pos < jrn_bytes.len() {
+        let body_len = doc_varint(&jrn_bytes, &mut pos) as usize;
+        let body = &jrn_bytes[pos..pos + body_len];
+        let crc =
+            u32::from_le_bytes(jrn_bytes[pos + body_len..pos + body_len + 4].try_into().unwrap());
+        assert_eq!(crc, doc_crc32(body), "record {index} framing CRC per § 1.1");
+        pos += body_len + 4;
+
+        let mut b = 0usize;
+        assert_eq!(doc_varint(body, &mut b) as usize, index, "contiguous chunk indices");
+        let chunk_chain = doc_varint(body, &mut b) as usize;
+        let offset = doc_varint(body, &mut b);
+        let length = doc_varint(body, &mut b);
+        let payload_crc = u32::from_le_bytes(body[b..b + 4].try_into().unwrap());
+        b += 4;
+        let flags = body[b];
+        b += 1;
+        assert_eq!(flags & !0b11, 0, "only bits 0 and 1 are defined");
+        let spatial_ratio = doc_read_f64(body, &mut b);
+        let frequency_ratio = doc_read_f64(body, &mut b);
+        let pocs_iterations = doc_varint(body, &mut b);
+        assert_eq!(b, body.len(), "record body consumed exactly its length prefix");
+
+        // A trusted record's payload range lies in the staging file and
+        // checksums to the recorded payload CRC-32.
+        let payload = &tmp_bytes[offset as usize..(offset + length) as usize];
+        assert_eq!(payload_crc, doc_crc32(payload), "chunk {index} payload CRC-32");
+
+        // Cross-check: the journal record carries exactly what the
+        // committed manifest's chunk-table row will say.
+        let entry = &manifest.chunks[index];
+        assert_eq!(chunk_chain, entry.chain);
+        assert_eq!(offset, entry.offset);
+        assert_eq!(length, entry.length);
+        assert_eq!(Some(payload_crc), entry.crc32);
+        assert_eq!(flags & 1 != 0, entry.stats.spatial_ok);
+        assert_eq!(flags & 2 != 0, entry.stats.frequency_ok);
+        assert_eq!(spatial_ratio.to_bits(), entry.stats.max_spatial_ratio.to_bits());
+        assert_eq!(frequency_ratio.to_bits(), entry.stats.max_frequency_ratio.to_bits());
+        assert_eq!(pocs_iterations, u64::from(entry.stats.pocs_iterations));
+        index += 1;
+    }
+    assert_eq!(index, manifest.chunks.len(), "one journal record per chunk");
+
+    // Resuming from this crash point salvages everything and commits an
+    // archive byte-identical to an uninterrupted write.
+    let report = resume_store_write(&field, &chain, &opts, &path).expect("resume commits");
+    assert_eq!(report.salvaged_chunks, manifest.chunks.len());
+    assert_eq!(report.reencoded_chunks, 0);
+    assert_eq!(std::fs::read(&path).unwrap(), want, "byte-identical per § 8.1");
+    assert!(!tmp.exists() && !jrn.exists(), "commit removes the staging pair");
+    std::fs::remove_file(&path).expect("removing the test archive");
 }

@@ -52,7 +52,7 @@ fn container(field: &Field, spec: &CodecChainSpec, chunk: &[usize]) -> Vec<u8> {
 
 /// Open the same container through every backend.
 fn all_backends(bytes: &[u8], path: &PathBuf) -> Vec<(&'static str, Store)> {
-    std::fs::write(path, bytes).unwrap();
+    std::fs::write(path, bytes).expect("writing the backend-equivalence fixture container");
     let shared = Arc::new(bytes.to_vec());
     vec![
         ("file", Store::open(path).unwrap()),

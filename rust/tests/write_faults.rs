@@ -1,0 +1,366 @@
+//! Write-path fault injection and crash-consistency tests.
+//!
+//! The central proof obligation of the crash-consistent write path: an
+//! archive write killed at *any* operation boundary must leave the
+//! final path untouched, and `resume_store_write` must salvage the
+//! staging files and complete the archive **bit-identically** to an
+//! uninterrupted write — with zero panics anywhere on the way.
+//!
+//! Three families:
+//!
+//! 1. **Crash-point sweep** — kill the staged write at every injectable
+//!    operation (head magic, each chunk payload, manifest, trailer),
+//!    then salvage + resume and byte-compare against the clean archive.
+//!    A second sweep arms `short_writes` so failures also land at
+//!    *intra-payload* byte boundaries.
+//! 2. **Replay determinism** — the same seeded write-fault plan over
+//!    the same encode produces identical fault tallies, identical
+//!    healed-retry counts, and identical committed bytes on every run.
+//! 3. **Atomic-commit properties** — a failure mid-manifest (the
+//!    simulated ENOSPC) never leaves a file under the final name, a
+//!    *clean* error removes the staging pair entirely, and transient
+//!    write faults heal invisibly under `RetryPolicy`.
+//!
+//! Set `FFCZ_CRASH_SWEEP=quick` to sample every third crash point (the
+//! CI chaos step does); the default sweeps all of them.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ffcz::codec::CodecChainSpec;
+use ffcz::correction::FfczConfig;
+use ffcz::data::synth::grf::GrfBuilder;
+use ffcz::data::Field;
+use ffcz::store::{
+    resume_store_write, staging_paths, write_store, write_store_faulted, FaultPlan, RetryPolicy,
+    Store, StoreWriteOptions,
+};
+
+fn grf(shape: &[usize], seed: u64) -> Field {
+    GrfBuilder::new(shape)
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(seed)
+        .build()
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ffcz_wfault_{name}_{}.ffcz", std::process::id()))
+}
+
+fn remove_with_staging(path: &PathBuf) {
+    let (tmp, jrn) = staging_paths(path);
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(tmp);
+    let _ = std::fs::remove_file(jrn);
+}
+
+/// A mixed-chain fixture: lossless default with one FFCz-corrected
+/// override chunk, so salvage also has to preserve per-chunk chain
+/// assignment to stay byte-identical.
+fn fixture() -> (Field, CodecChainSpec, StoreWriteOptions) {
+    let field = grf(&[16, 14], 77);
+    let chain = CodecChainSpec::lossless();
+    let opts = StoreWriteOptions::new(&[5, 6]).workers(1).override_chunk(
+        "c/1/1",
+        CodecChainSpec::ffcz("sz-like", &FfczConfig::relative(1e-3, 1e-3)),
+    );
+    (field, chain, opts)
+}
+
+fn sweep_step() -> u64 {
+    match std::env::var("FFCZ_CRASH_SWEEP") {
+        Ok(v) if v == "quick" => 3,
+        _ => 1,
+    }
+}
+
+/// Run one crash/salvage/resume cycle: kill the write with `plan`,
+/// assert the final path stayed untouched, resume, and byte-compare.
+/// Returns (salvaged, reencoded).
+fn crash_and_recover(
+    field: &Field,
+    chain: &CodecChainSpec,
+    opts: &StoreWriteOptions,
+    path: &PathBuf,
+    plan: FaultPlan,
+    want: &[u8],
+    label: &str,
+) -> (usize, usize) {
+    remove_with_staging(path);
+    let err = write_store_faulted(field, chain, opts, path, plan).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected storage failure"), "{label}: {msg}");
+    assert!(
+        !path.exists(),
+        "{label}: a failed write left a file under the final name"
+    );
+    let (tmp, jrn) = staging_paths(path);
+    assert!(tmp.exists(), "{label}: simulated crash kept no staging file");
+
+    let report = resume_store_write(field, chain, opts, path).expect(label);
+    let got = std::fs::read(path).expect(label);
+    assert_eq!(
+        got, want,
+        "{label}: resumed archive differs from the uninterrupted write"
+    );
+    assert!(
+        !tmp.exists() && !jrn.exists(),
+        "{label}: commit left staging files behind"
+    );
+    assert_eq!(
+        report.salvaged_chunks + report.reencoded_chunks,
+        report.write.chunk_count,
+        "{label}: salvage accounting does not cover the archive"
+    );
+    // The recovered archive must verify end to end, not just byte-match.
+    let verify = Store::open(path).expect(label).verify(1).expect(label);
+    assert!(verify.ok(), "{label}: {}", verify.to_json());
+    remove_with_staging(path);
+    (report.salvaged_chunks, report.reencoded_chunks)
+}
+
+/// Proof obligation: kill the write at every operation boundary — head
+/// magic, every payload, manifest, trailer — and salvage + resume to a
+/// bit-identical archive. Zero panics.
+#[test]
+fn crash_point_sweep_resumes_bit_identically() {
+    let (field, chain, opts) = fixture();
+    let path = temp_path("sweep");
+
+    // The uninterrupted reference bytes.
+    let clean_path = temp_path("sweep_ref");
+    remove_with_staging(&clean_path);
+    let clean_report = write_store(&field, &chain, &opts, &clean_path).unwrap();
+    assert!(clean_report.all_chunks_ok);
+    let want = std::fs::read(&clean_path).unwrap();
+
+    // A fault-free probe run through the injector learns the op count
+    // (and proves the injector itself is transparent).
+    remove_with_staging(&path);
+    let (_, probe) = write_store_faulted(&field, &chain, &opts, &path, FaultPlan::none()).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), want, "probe diverged");
+    assert!(probe.ops >= clean_report.chunk_count as u64 + 3);
+
+    let mut salvaged_total = 0usize;
+    let mut k = 1u64;
+    while k <= probe.ops {
+        let plan = FaultPlan {
+            fail_ops: vec![k],
+            ..FaultPlan::none()
+        };
+        let (salvaged, _) = crash_and_recover(
+            &field,
+            &chain,
+            &opts,
+            &path,
+            plan,
+            &want,
+            &format!("fail at op {k}/{}", probe.ops),
+        );
+        salvaged_total += salvaged;
+        k += sweep_step();
+    }
+    // Failing the last ops (manifest/trailer) must salvage every chunk;
+    // failing the first must salvage none. In between, monotone growth
+    // means the sweep genuinely exercised partial prefixes.
+    assert!(
+        salvaged_total > 0,
+        "no crash point ever salvaged a chunk — the sweep is vacuous"
+    );
+    remove_with_staging(&clean_path);
+    remove_with_staging(&path);
+}
+
+/// Same sweep with `short_writes` armed: payload writes split at seeded
+/// byte boundaries, so the kill lands *inside* chunk payloads and the
+/// salvage has to discard torn partial chunks via the CRC.
+#[test]
+fn crash_point_sweep_with_short_writes_resumes_bit_identically() {
+    let (field, chain, opts) = fixture();
+    let path = temp_path("short_sweep");
+
+    let clean_path = temp_path("short_sweep_ref");
+    remove_with_staging(&clean_path);
+    write_store(&field, &chain, &opts, &clean_path).unwrap();
+    let want = std::fs::read(&clean_path).unwrap();
+
+    let short_plan = |fail: Vec<u64>| FaultPlan {
+        seed: 1234,
+        short_writes: true,
+        fail_ops: fail,
+        ..FaultPlan::none()
+    };
+    remove_with_staging(&path);
+    let (_, probe) = write_store_faulted(&field, &chain, &opts, &path, short_plan(vec![])).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), want, "short-write probe diverged");
+    assert!(
+        probe.short_writes > 0,
+        "the seeded schedule never split a write"
+    );
+
+    // Short writes multiply the op count; sample at twice the base step
+    // to keep the sweep brisk while still landing mid-payload.
+    let mut k = 1u64;
+    while k <= probe.ops {
+        crash_and_recover(
+            &field,
+            &chain,
+            &opts,
+            &path,
+            short_plan(vec![k]),
+            &want,
+            &format!("short-write fail at op {k}/{}", probe.ops),
+        );
+        k += sweep_step() * 2;
+    }
+    remove_with_staging(&clean_path);
+    remove_with_staging(&path);
+}
+
+/// Seeded write-fault replay determinism: the same plan over the same
+/// encode yields identical fault tallies, identical healed-retry
+/// counts, and identical committed bytes, run after run.
+#[test]
+fn seeded_write_fault_schedules_replay_identically() {
+    let (field, chain, base_opts) = fixture();
+    let opts = base_opts.retry_policy(RetryPolicy::transient(3, Duration::ZERO));
+    let path = temp_path("replay");
+    let run = || {
+        remove_with_staging(&path);
+        let plan = FaultPlan {
+            seed: 42,
+            short_writes: true,
+            transient_every: 3,
+            ..FaultPlan::none()
+        };
+        let (report, counts) = write_store_faulted(&field, &chain, &opts, &path, plan).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        (bytes, counts, report.write_retries)
+    };
+    let (bytes_a, counts_a, retries_a) = run();
+    let (bytes_b, counts_b, retries_b) = run();
+    assert_eq!(bytes_a, bytes_b, "committed bytes diverged across replays");
+    assert_eq!(counts_a, counts_b, "fault tallies diverged across replays");
+    assert_eq!(retries_a, retries_b);
+    assert!(counts_a.transients > 0, "the schedule never faulted");
+    assert_eq!(
+        retries_a, counts_a.transients,
+        "every transient write fault must cost exactly one healed retry"
+    );
+
+    // And the healed archive is the clean archive, byte for byte.
+    let clean_path = temp_path("replay_ref");
+    remove_with_staging(&clean_path);
+    write_store(&field, &chain, &opts, &clean_path).unwrap();
+    assert_eq!(bytes_a, std::fs::read(&clean_path).unwrap());
+    remove_with_staging(&clean_path);
+    remove_with_staging(&path);
+}
+
+/// The simulated ENOSPC mid-manifest: the staged write fails *after*
+/// every payload but before the commit record. Nothing may appear under
+/// the final name, every chunk must salvage, and the resume re-encodes
+/// nothing yet still commits bit-identically.
+#[test]
+fn enospc_mid_manifest_never_leaves_a_partial_archive() {
+    let (field, chain, opts) = fixture();
+    let path = temp_path("enospc");
+
+    let clean_path = temp_path("enospc_ref");
+    remove_with_staging(&clean_path);
+    let clean_report = write_store(&field, &chain, &opts, &clean_path).unwrap();
+    let want = std::fs::read(&clean_path).unwrap();
+
+    remove_with_staging(&path);
+    let (_, probe) = write_store_faulted(&field, &chain, &opts, &path, FaultPlan::none()).unwrap();
+    // Ops: head magic, one per chunk payload, manifest, trailer — the
+    // manifest write is op `ops - 1`.
+    let manifest_op = probe.ops - 1;
+    let (salvaged, reencoded) = crash_and_recover(
+        &field,
+        &chain,
+        &opts,
+        &path,
+        FaultPlan {
+            fail_ops: vec![manifest_op],
+            ..FaultPlan::none()
+        },
+        &want,
+        "ENOSPC mid-manifest",
+    );
+    assert_eq!(
+        salvaged, clean_report.chunk_count,
+        "every payload was durable before the manifest failed"
+    );
+    assert_eq!(reencoded, 0, "nothing should be re-encoded after the payloads");
+    remove_with_staging(&clean_path);
+}
+
+/// A *clean* error (not a crash) on the atomic-commit path removes the
+/// staging pair: misconfiguration never strands `.tmp`/`.tmp.jrn` files.
+#[test]
+fn clean_write_errors_remove_the_staging_pair() {
+    let (field, chain, _) = fixture();
+    let path = temp_path("clean_err");
+    remove_with_staging(&path);
+    // An override naming a chunk outside the grid fails after the
+    // staging files are created.
+    let bad = StoreWriteOptions::new(&[5, 6])
+        .workers(1)
+        .override_chunk("c/9/9", CodecChainSpec::lossless());
+    let err = write_store(&field, &chain, &bad, &path).unwrap_err();
+    assert!(format!("{err:#}").contains("c/9/9"));
+    let (tmp, jrn) = staging_paths(&path);
+    assert!(!path.exists() && !tmp.exists() && !jrn.exists());
+}
+
+/// Transient write faults heal invisibly under the writer's
+/// `RetryPolicy` and are reported per write; without a policy the same
+/// schedule is a hard, clean error.
+#[test]
+fn transient_write_faults_heal_under_retry_policy() {
+    let (field, chain, base_opts) = fixture();
+    let path = temp_path("transient");
+
+    let clean_path = temp_path("transient_ref");
+    remove_with_staging(&clean_path);
+    write_store(&field, &chain, &base_opts, &clean_path).unwrap();
+    let want = std::fs::read(&clean_path).unwrap();
+
+    let plan = FaultPlan {
+        transient_every: 2,
+        ..FaultPlan::none()
+    };
+    let before = ffcz::telemetry::snapshot();
+
+    // With a policy: heals, commits, bit-identical, retries surfaced in
+    // the report and the `store.write.retries` counter.
+    remove_with_staging(&path);
+    let opts = base_opts.clone().retry_policy(RetryPolicy::transient(3, Duration::ZERO));
+    let (report, counts) = write_store_faulted(&field, &chain, &opts, &path, plan.clone()).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), want);
+    assert!(counts.transients > 0);
+    assert_eq!(report.write_retries, counts.transients);
+    let after = ffcz::telemetry::snapshot();
+    assert!(
+        after.counter_delta(&before, "store.write.retries") >= counts.transients,
+        "registry must aggregate healed write retries"
+    );
+    assert!(
+        after.counter_delta(&before, "store.write.commits") >= 1,
+        "a committed write must count a commit"
+    );
+
+    // Without a policy the first transient is a hard error; the final
+    // name stays untouched (the chaos variant keeps the staging pair
+    // for salvage, unlike `write_store`'s clean-error cleanup).
+    let fresh = temp_path("transient_nopolicy");
+    remove_with_staging(&fresh);
+    let err = write_store_faulted(&field, &chain, &base_opts, &fresh, plan).unwrap_err();
+    assert!(format!("{err:#}").contains("injected transient storage fault"));
+    assert!(!fresh.exists());
+    remove_with_staging(&fresh);
+    remove_with_staging(&clean_path);
+    remove_with_staging(&path);
+}
