@@ -115,9 +115,11 @@ fn encode_scratch_gauge(quick: bool) -> (Vec<usize>, usize, f64, f64, f64, f64, 
 /// scratch gauge and the archive read server under sustained concurrent
 /// load. Emits `BENCH_store.json` (median seconds + GB/s + peak payload
 /// bytes in flight — the peak-RSS proxy — per configuration, the
-/// `encode_path` object with the allocations-per-chunk gauge, and the
-/// `server` object with sustained QPS and latency percentiles) for the
-/// perf trajectory. Quick mode shrinks the field and skips the LRU sweep.
+/// `encode_path` object with the allocations-per-chunk gauge, the
+/// `remote_read_overhead` object comparing resilient HTTP-range reads
+/// against the local file path, and the `server` object with sustained
+/// QPS and latency percentiles) for the perf trajectory. Quick mode
+/// shrinks the field and skips the LRU sweep.
 fn store_comparison(quick: bool) {
     let dim = if quick { 16 } else { 32 };
     let chunk_dim = dim / 2;
@@ -265,6 +267,10 @@ fn store_comparison(quick: bool) {
     // the streamed write path vs the plain path.
     let (wf_plain_s, wf_injected_s, wf_overhead_pct) = write_fault_overhead(&field, &spec, quick);
 
+    // Remote read stack cost: resilient HTTP-range reads off a fault-free
+    // loopback endpoint vs the same archive from a local file.
+    let (rr_local_s, rr_remote_s, rr_overhead_pct) = remote_read_overhead(&field, &spec, quick);
+
     // Archive read server under sustained concurrent load.
     let (srv_clients, srv_requests, srv_qps, srv_p50_ms, srv_p99_ms) = server_bench(quick);
 
@@ -291,6 +297,11 @@ fn store_comparison(quick: bool) {
         "  \"write_fault_overhead\": {{\"plain_median_s\": {wf_plain_s:.6}, \
          \"injected_median_s\": {wf_injected_s:.6}, \
          \"overhead_pct\": {wf_overhead_pct:.4}}},\n"
+    ));
+    json.push_str(&format!(
+        "  \"remote_read_overhead\": {{\"local_median_s\": {rr_local_s:.6}, \
+         \"remote_median_s\": {rr_remote_s:.6}, \
+         \"overhead_pct\": {rr_overhead_pct:.4}}},\n"
     ));
     json.push_str(&format!(
         "  \"server\": {{\"clients\": {srv_clients}, \"requests\": {srv_requests}, \
@@ -358,6 +369,59 @@ fn write_fault_overhead(
     let _ = std::fs::remove_file(&injected_path);
     let overhead_pct = ((injected_s - plain_s) / plain_s * 100.0).max(0.0);
     (plain_s, injected_s, overhead_pct)
+}
+
+/// Cost of the full remote read stack — `ResilientStorage<HttpStorage>`
+/// against a fault-free in-process HTTP range endpoint — relative to a
+/// plain `FileStorage` open of the same archive, measured over
+/// full-field `read_region` calls. The decoded-chunk cache is off by
+/// default, so every sample pays the storage path: one range request
+/// per chunk payload on pooled keep-alive connections, through the
+/// retry/deadline/breaker bookkeeping (decode work is identical on both
+/// sides). Returns `(local_median_s, remote_median_s, overhead_pct)` —
+/// the `remote_read_overhead` row of `BENCH_store.json`, whose overhead
+/// CI gates at ≤ 10%.
+fn remote_read_overhead(
+    field: &ffcz::data::Field,
+    spec: &CodecChainSpec,
+    quick: bool,
+) -> (f64, f64, f64) {
+    use ffcz::store::{HttpRangeServer, HttpStorage, ResilienceOptions, ResilientStorage};
+    use std::sync::Arc;
+
+    let chunk_dim = field.shape()[0] / 2;
+    let opts = StoreWriteOptions::new(&[chunk_dim, chunk_dim, chunk_dim]).workers(2);
+    let path = std::env::temp_dir().join("ffcz_bench_remote.ffcz");
+    write_store(field, spec, &opts, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let samples = if quick { 3 } else { 5 };
+    let origin = [0usize, 0, 0];
+    let region: Vec<usize> = field.shape().to_vec();
+
+    let local = Store::open(&path).unwrap();
+    let r = Bench::new("read_region_local_file".to_string())
+        .bytes(field.original_bytes())
+        .samples(samples)
+        .run(|| black_box(local.read_region(&origin, &region, 2).unwrap().len()));
+    println!("{}", r.report());
+    let local_s = r.median.as_secs_f64();
+
+    let (endpoint, url) = HttpRangeServer::single(bytes).unwrap();
+    let http = HttpStorage::open(&url).unwrap();
+    let resilient = ResilientStorage::new(Arc::new(http), ResilienceOptions::default());
+    let remote = Store::open_storage(Arc::new(resilient)).unwrap();
+    let r = Bench::new("read_region_remote_http".to_string())
+        .bytes(field.original_bytes())
+        .samples(samples)
+        .run(|| black_box(remote.read_region(&origin, &region, 2).unwrap().len()));
+    println!("{}", r.report());
+    let remote_s = r.median.as_secs_f64();
+    endpoint.shutdown();
+    let _ = std::fs::remove_file(&path);
+
+    let overhead_pct = ((remote_s - local_s) / local_s * 100.0).max(0.0);
+    println!("  -> remote read stack overhead {overhead_pct:.2}% over the local file path");
+    (local_s, remote_s, overhead_pct)
 }
 
 /// Sustained concurrent load on the archive read server: an in-process

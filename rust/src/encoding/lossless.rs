@@ -1,11 +1,28 @@
 //! The lossless back end: ZSTD (the same library the paper uses), with a
 //! tiny self-describing frame so empty inputs and future codecs are handled
 //! uniformly.
+//!
+//! The frame is one codec byte followed by the codec's body. The codec
+//! bytes are normative format constants (`docs/FORMAT.md` § 1.2): builds
+//! bundling the vendored offline zstd shim write [`LOSSLESS_CODEC_ZSTD`]
+//! frames in the shim's own `ZSHM` coding, while
+//! [`LOSSLESS_CODEC_LIBZSTD`] is reserved for frames a build linked
+//! against the real C libzstd would write. Keeping the two bytes
+//! distinct means a shim build rejects real-zstd archives with an
+//! actionable error instead of failing deep inside the wrong decoder.
 
 use anyhow::{bail, Context, Result};
 
-const CODEC_ZSTD: u8 = 1;
-const CODEC_RAW: u8 = 0;
+/// Raw passthrough frame: the body is the uncompressed payload
+/// (emitted whenever compression would expand the data).
+pub const LOSSLESS_CODEC_RAW: u8 = 0;
+/// The zstd backend this build links — currently the vendored offline
+/// shim (`ZSHM` frames), not the zstd wire format.
+pub const LOSSLESS_CODEC_ZSTD: u8 = 1;
+/// Reserved for frames produced by a build linked against the real C
+/// libzstd. Never written by shim builds; [`lossless_decompress`]
+/// rejects it with a "rebuild with real zstd" error.
+pub const LOSSLESS_CODEC_LIBZSTD: u8 = 2;
 
 /// Compress a byte buffer with ZSTD level 3 (the zstd CLI default). Falls
 /// back to a raw frame if compression would expand the data.
@@ -13,10 +30,10 @@ pub fn lossless_compress(data: &[u8]) -> Vec<u8> {
     let compressed = zstd::encode_all(data, 3).expect("in-memory zstd cannot fail");
     let mut out = Vec::with_capacity(compressed.len() + 1);
     if compressed.len() < data.len() {
-        out.push(CODEC_ZSTD);
+        out.push(LOSSLESS_CODEC_ZSTD);
         out.extend_from_slice(&compressed);
     } else {
-        out.push(CODEC_RAW);
+        out.push(LOSSLESS_CODEC_RAW);
         out.extend_from_slice(data);
     }
     out
@@ -28,8 +45,13 @@ pub fn lossless_decompress(frame: &[u8]) -> Result<Vec<u8>> {
         bail!("empty lossless frame");
     };
     match codec {
-        CODEC_RAW => Ok(body.to_vec()),
-        CODEC_ZSTD => zstd::decode_all(body).context("zstd decode"),
+        LOSSLESS_CODEC_RAW => Ok(body.to_vec()),
+        LOSSLESS_CODEC_ZSTD => zstd::decode_all(body).context("zstd decode"),
+        LOSSLESS_CODEC_LIBZSTD => bail!(
+            "lossless frame uses codec byte {LOSSLESS_CODEC_LIBZSTD} (real libzstd); \
+             this build bundles the vendored zstd shim and cannot decode it — \
+             rebuild with real zstd to read this archive"
+        ),
         x => bail!("unknown lossless codec {x}"),
     }
 }
@@ -66,6 +88,19 @@ mod tests {
     fn garbage_errors() {
         assert!(lossless_decompress(&[]).is_err());
         assert!(lossless_decompress(&[9, 1, 2, 3]).is_err());
-        assert!(lossless_decompress(&[CODEC_ZSTD, 0xFF, 0xFF]).is_err());
+        assert!(lossless_decompress(&[LOSSLESS_CODEC_ZSTD, 0xFF, 0xFF]).is_err());
+    }
+
+    /// The reserved real-libzstd codec byte must be rejected with an
+    /// actionable message, not fed to the shim decoder.
+    #[test]
+    fn libzstd_frames_are_rejected_with_a_rebuild_hint() {
+        let err = lossless_decompress(&[LOSSLESS_CODEC_LIBZSTD, 0x28, 0xB5, 0x2F, 0xFD])
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("rebuild with real zstd"),
+            "error must tell the user how to recover: {err}"
+        );
     }
 }

@@ -15,4 +15,7 @@ pub use bitio::{BitReader, BitWriter};
 pub use crc32::{crc32, CRC32_CHECK};
 pub use flags::{pack_flags, unpack_flags};
 pub use huffman::{huffman_decode, huffman_encode};
-pub use lossless::{lossless_compress, lossless_decompress};
+pub use lossless::{
+    lossless_compress, lossless_decompress, LOSSLESS_CODEC_LIBZSTD, LOSSLESS_CODEC_RAW,
+    LOSSLESS_CODEC_ZSTD,
+};

@@ -30,8 +30,12 @@
 //!   of instance *i+1* with FFCz editing of instance *i* (paper Fig. 7d),
 //!   with an optional chunked-store sink for streamed instances;
 //! * [`store`] — a zarrs-style chunked archive (`.ffcz` container): regular
-//!   chunk grid, per-chunk FFCz codec pipeline, parallel encode/decode, and
-//!   partial `read_region` decode;
+//!   chunk grid, per-chunk FFCz codec pipeline, parallel encode/decode,
+//!   partial `read_region` decode, and pluggable storage backends — local
+//!   file, in-memory, seeded fault injector, and a remote HTTP-range
+//!   backend behind a resilience layer (retries, deadlines, per-endpoint
+//!   circuit breaker, hedged reads; `docs/STORAGE.md` is the normative
+//!   contract);
 //! * [`server`] — a concurrent archive read server: a daemon that opens
 //!   many `.ffcz` stores and serves `read_region` / `stat` requests over
 //!   a length-prefixed TCP protocol (`docs/SERVER.md`), sharing each

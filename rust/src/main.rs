@@ -18,9 +18,12 @@
 //!                 --in-memory escape hatch, per-chunk codec chains via
 //!                 --chunk-codec — grammar in docs/FORMAT.md; verify re-checks
 //!                 every chunk, repair salvages an interrupted create)
-//! ffcz serve      --root archives/ [--addr 127.0.0.1:7070] [--cache-mb 64]
+//! ffcz serve      --root archives/ and/or --remote-root http://host/prefix
+//!                 [--addr 127.0.0.1:7070] [--cache-mb 64]
 //!                 [--port-file p.txt] [--no-shutdown] [--max-conns 64]
-//!                 [--deadline-ms 30000]
+//!                 [--deadline-ms 30000] [--degraded]
+//!                 (remote archives are read over resilient HTTP ranges —
+//!                 retries, deadlines, circuit breaker; see docs/STORAGE.md)
 //! ffcz get        --addr 127.0.0.1:7070 --archive f --origin 0,0 --shape 8,8
 //!                 --output w.ffld   (also --ping | --stat | --shutdown;
 //!                 [--retries N] [--backoff-ms N] retry transient faults;
@@ -142,21 +145,31 @@ fn print_usage() {
          \x20               opt       = 'eb=R' | 'abs-eb=A' | 'db=R' | 'abs-db=A'\n\
          \x20                         | 'ps=R' | 'iters=N' | 'quant-retries=N'\n\
          \x20                         | 'threads=N' | 'base-only'\n\
-         \x20 serve       --root DIR [--addr H:P] [--cache-mb N] [--port-file F]\n\
-         \x20             [--no-shutdown] [--max-conns N] [--deadline-ms N]\n\
+         \x20 serve       --root DIR and/or --remote-root URL [--addr H:P]\n\
+         \x20             [--cache-mb N] [--port-file F] [--no-shutdown]\n\
+         \x20             [--max-conns N] [--deadline-ms N] [--degraded]\n\
          \x20             archive read server (protocol in docs/SERVER.md);\n\
          \x20             --addr default 127.0.0.1:7070, port 0 picks a free\n\
          \x20             port (resolved address goes to --port-file); accepts\n\
          \x20             beyond --max-conns (default 64, 0 = unlimited) are\n\
          \x20             turned away with ST_BUSY; connections idle past\n\
-         \x20             --deadline-ms (default 30000, 0 = off) are closed\n\
+         \x20             --deadline-ms (default 30000, 0 = off) are closed;\n\
+         \x20             --remote-root http://host/prefix resolves archives\n\
+         \x20             over resilient HTTP ranges (docs/STORAGE.md) and\n\
+         \x20             turns on degraded serving: when the endpoint is\n\
+         \x20             down, cached regions answer normally and uncached\n\
+         \x20             ones answer ST_DEGRADED (--degraded forces this\n\
+         \x20             mode for local roots too)\n\
          \x20 get         --addr H:P (--ping | --shutdown |\n\
          \x20             --archive NAME --stat |\n\
          \x20             --archive NAME --origin A,B,C --shape A,B,C --output F)\n\
          \x20             [--retries N] [--backoff-ms N]  retry transient\n\
          \x20             connect/read faults (default 3 attempts; 1 = off)\n\
          \x20 archive     extract --input F --output F [--workers N]\n\
-         \x20 archive     inspect --input F [--chunks] [--stats]\n\
+         \x20 archive     inspect --input F-or-URL [--chunks] [--stats]\n\
+         \x20             (extract/inspect/read-region/verify also accept\n\
+         \x20             --input http://host/file.ffcz: remote HTTP-range\n\
+         \x20             reads through the resilience layer)\n\
          \x20 archive     read-region --input F --origin A,B,C --shape A,B,C\n\
          \x20             --output F [--workers N]\n\
          \x20 archive     verify --input F [--workers N] [--json]\n\
@@ -645,15 +658,31 @@ fn cmd_archive_create(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Open `--input` as a local archive path or, when it starts with
+/// `http://`, as a remote archive read over resilient HTTP range
+/// requests (retries, deadlines, circuit breaker — see docs/STORAGE.md).
+fn open_store_flag(input: &str) -> Result<Store> {
+    if input.starts_with("http://") {
+        let http = ffcz::store::HttpStorage::open(input)
+            .with_context(|| format!("opening remote archive {input}"))?;
+        let resilient = ffcz::store::ResilientStorage::new(
+            std::sync::Arc::new(http),
+            ffcz::store::ResilienceOptions::default(),
+        );
+        Store::open_storage(std::sync::Arc::new(resilient))
+    } else {
+        Store::open(&PathBuf::from(input))
+    }
+}
+
 fn cmd_archive_extract(flags: &HashMap<String, String>) -> Result<()> {
-    let input = PathBuf::from(get(flags, "input")?);
+    let input = get(flags, "input")?;
     let output = PathBuf::from(get(flags, "output")?);
-    let store = Store::open(&input)?;
+    let store = open_store_flag(input)?;
     let field = store.decompress_all(parse_workers(flags)?)?;
     io::save(&field, &output)?;
     diag::info(&format!(
-        "extracted {} -> {} (shape {:?}, {} chunks decoded)",
-        input.display(),
+        "extracted {input} -> {} (shape {:?}, {} chunks decoded)",
         output.display(),
         field.shape(),
         store.chunks_decoded(),
@@ -662,8 +691,8 @@ fn cmd_archive_extract(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_archive_inspect(flags: &HashMap<String, String>) -> Result<()> {
-    let input = PathBuf::from(get(flags, "input")?);
-    let store = Store::open(&input)?;
+    let input = get(flags, "input")?;
+    let store = open_store_flag(input)?;
     let m = store.manifest();
     println!("array shape  : {:?} ({})", m.shape, m.precision.name());
     println!(
@@ -728,18 +757,17 @@ fn cmd_archive_inspect(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_archive_read_region(flags: &HashMap<String, String>) -> Result<()> {
-    let input = PathBuf::from(get(flags, "input")?);
+    let input = get(flags, "input")?;
     let output = PathBuf::from(get(flags, "output")?);
     let origin = parse_axes(get(flags, "origin")?, "origin")?;
     let shape = parse_axes(get(flags, "shape")?, "shape")?;
-    let store = Store::open(&input)?;
+    let store = open_store_flag(input)?;
     let region = store.read_region(&origin, &shape, parse_workers(flags)?)?;
     io::save(&region, &output)?;
     diag::info(&format!(
-        "read region origin {:?} shape {:?} from {} ({} of {} chunks decoded) -> {}",
+        "read region origin {:?} shape {:?} from {input} ({} of {} chunks decoded) -> {}",
         origin,
         shape,
-        input.display(),
         store.chunks_decoded(),
         store.grid().chunk_count(),
         output.display(),
@@ -751,16 +779,15 @@ fn cmd_archive_read_region(flags: &HashMap<String, String>) -> Result<()> {
 /// every chunk of an archive — payload CRC-32, full decode, and the
 /// recorded dual-domain bounds — and exit nonzero if any chunk fails.
 fn cmd_archive_verify(flags: &HashMap<String, String>) -> Result<()> {
-    let input = PathBuf::from(get(flags, "input")?);
-    let store = Store::open(&input)?;
+    let input = get(flags, "input")?;
+    let store = open_store_flag(input)?;
     let report = store.verify(parse_workers(flags)?)?;
     if flags.contains_key("json") {
         // Requested data, not a diagnostic: always printed.
         println!("{}", report.to_json());
     } else {
         diag::info(&format!(
-            "verified {}: {}/{} chunks OK in {}",
-            input.display(),
+            "verified {input}: {}/{} chunks OK in {}",
             report.chunks.len() - report.failed(),
             report.chunks.len(),
             ffcz::util::human_duration(report.elapsed),
@@ -830,16 +857,41 @@ fn cmd_archive_repair(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let root = PathBuf::from(get(flags, "root")?);
-    if !root.is_dir() {
-        bail!("--root {} is not a directory", root.display());
+    let root = flags.get("root").map(PathBuf::from);
+    if let Some(root) = &root {
+        if !root.is_dir() {
+            bail!("--root {} is not a directory", root.display());
+        }
     }
+    let remote_root = flags.get("remote-root").cloned();
+    if let Some(url) = &remote_root {
+        if !url.starts_with("http://") {
+            bail!("--remote-root expects an http:// base URL, got '{url}'");
+        }
+    }
+    if root.is_none() && remote_root.is_none() {
+        bail!("serve needs --root DIR and/or --remote-root URL");
+    }
+    // Remote endpoints can die mid-stream; degraded serving (cached
+    // regions answer normally, uncached ones ST_DEGRADED) is on whenever
+    // a remote root is configured, and opt-in via --degraded otherwise.
+    let degraded = flags.contains_key("degraded") || remote_root.is_some();
+    let sources = [
+        root.as_ref().map(|r| r.display().to_string()),
+        remote_root.clone(),
+    ]
+    .into_iter()
+    .flatten()
+    .collect::<Vec<_>>()
+    .join(" and ");
     let opts = ServeOptions {
         addr: flags
             .get("addr")
             .cloned()
             .unwrap_or_else(|| "127.0.0.1:7070".to_string()),
-        root: Some(root.clone()),
+        root,
+        remote_root,
+        degraded,
         cache_bytes: (parse_f64(flags, "cache-mb", 64.0)?.max(0.0) * (1 << 20) as f64) as usize,
         allow_shutdown: !flags.contains_key("no-shutdown"),
         max_connections: parse_f64(flags, "max-conns", 64.0)?.max(0.0) as usize,
@@ -855,8 +907,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             .with_context(|| format!("writing --port-file {port_file}"))?;
     }
     diag::info(&format!(
-        "serving archives from {} on {addr} (stop with `ffcz get --addr {addr} --shutdown`)",
-        root.display()
+        "serving archives from {sources} on {addr} (stop with `ffcz get --addr {addr} --shutdown`)"
     ));
     server.join();
     diag::info("server stopped");

@@ -15,10 +15,12 @@
 //! transient failures: connection-level faults (refused, reset, timed
 //! out, a server that hung up mid-request) and `ST_BUSY` rejections
 //! from a server at its connection cap. Each retry reconnects and
-//! reissues the request on a fresh connection, with the policy's linear
-//! backoff between attempts. When the budget runs out the caller gets
-//! the typed give-up error [`RetriesExhausted`], recoverable from the
-//! `anyhow` chain via [`retries_exhausted_of`].
+//! reissues the request on a fresh connection, pacing attempts with the
+//! policy's [`RetrySchedule`] — linear by default, exponential backoff
+//! and seeded jitter when the policy opts in, and an optional total
+//! deadline bounding the whole loop. When the budget (or deadline) runs
+//! out the caller gets the typed give-up error [`RetriesExhausted`],
+//! recoverable from the `anyhow` chain via [`retries_exhausted_of`].
 //! [`Client::shutdown_server`] is *not* retried: it is not idempotent
 //! from the fleet's point of view, and a lost response is
 //! indistinguishable from a successful shutdown.
@@ -29,7 +31,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::data::Field;
-use crate::store::RetryPolicy;
+use crate::store::{RetryPolicy, RetrySchedule};
 
 use super::protocol::{
     self, encode_request, ArchiveStat, FrameRead, Request, Response, DEFAULT_MAX_RESPONSE_FRAME,
@@ -122,12 +124,21 @@ fn is_retryable(err: &anyhow::Error) -> bool {
     })
 }
 
-/// Linear backoff before retry `attempt`, matching the storage layer's
-/// `backoff × k` convention.
-fn sleep_backoff(policy: &RetryPolicy, attempt: u32) {
-    if !policy.backoff.is_zero() {
-        std::thread::sleep(policy.backoff * attempt);
+/// Pace the next reissue through the policy's [`RetrySchedule`] (linear
+/// or exponential, jittered or not). Returns `false` when the policy's
+/// total deadline leaves no room for another attempt — the caller must
+/// give up instead of sleeping.
+fn sleep_before_retry(schedule: &mut RetrySchedule, policy: &RetryPolicy) -> bool {
+    let delay = schedule.next_delay();
+    if let Some(budget) = policy.deadline {
+        if schedule.elapsed() + delay >= budget {
+            return false;
+        }
     }
+    if !delay.is_zero() {
+        std::thread::sleep(delay);
+    }
+    true
 }
 
 /// One blocking connection to an archive read server.
@@ -162,6 +173,7 @@ impl Client {
     /// requests.
     pub fn connect_with_retry(addr: &str, policy: RetryPolicy) -> Result<Self> {
         let budget = policy.max_attempts.max(1);
+        let mut schedule = RetrySchedule::new(policy);
         let mut attempts = 0u32;
         loop {
             attempts += 1;
@@ -181,7 +193,12 @@ impl Client {
                     last_error: format!("{err:#}"),
                 }));
             }
-            sleep_backoff(&policy, attempts);
+            if !sleep_before_retry(&mut schedule, &policy) {
+                return Err(anyhow::Error::new(RetriesExhausted {
+                    attempts,
+                    last_error: format!("{err:#}"),
+                }));
+            }
         }
     }
 
@@ -210,11 +227,13 @@ impl Client {
 
     /// Run an idempotent operation under the retry policy: transient
     /// failures reconnect (the old connection may be half-dead after a
-    /// deadline close or server restart) and reissue, with linear
-    /// backoff; a spent budget surfaces as [`RetriesExhausted`].
+    /// deadline close or server restart) and reissue, pacing attempts
+    /// through the policy's [`RetrySchedule`]; a spent budget or
+    /// deadline surfaces as [`RetriesExhausted`].
     fn retrying<T>(&mut self, mut attempt: impl FnMut(&mut Self) -> Result<T>) -> Result<T> {
         let policy = self.retry;
         let budget = policy.max_attempts.max(1);
+        let mut schedule = RetrySchedule::new(policy);
         let mut attempts = 0u32;
         let mut reissue = false;
         loop {
@@ -241,7 +260,12 @@ impl Client {
                 }));
             }
             reissue = true;
-            sleep_backoff(&policy, attempts);
+            if !sleep_before_retry(&mut schedule, &policy) {
+                return Err(anyhow::Error::new(RetriesExhausted {
+                    attempts,
+                    last_error: format!("{err:#}"),
+                }));
+            }
         }
     }
 
@@ -365,6 +389,23 @@ mod tests {
         // With retries off the raw connect error comes back unwrapped.
         let raw = Client::connect_with_retry("127.0.0.1:1", RetryPolicy::none()).unwrap_err();
         assert!(retries_exhausted_of(&raw).is_none());
+    }
+
+    #[test]
+    fn retry_deadline_bounds_reconnect_attempts() {
+        // Refused connects are near-instant; with a 100-attempt budget
+        // but a 30 ms deadline and 20 ms backoff, the schedule must give
+        // up on the deadline long before the attempt budget.
+        let policy = RetryPolicy::transient(100, Duration::from_millis(20))
+            .with_deadline(Duration::from_millis(30));
+        let started = std::time::Instant::now();
+        let err = Client::connect_with_retry("127.0.0.1:1", policy).unwrap_err();
+        let give_up = retries_exhausted_of(&err).expect("typed give-up error in the chain");
+        assert!(give_up.attempts < 100, "deadline never fired");
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "deadline did not bound the loop"
+        );
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub const ST_INTERNAL: u8 = 0x05;
 pub const ST_TOO_LARGE: u8 = 0x06;
 /// The server is at its concurrent-connection cap; retry later.
 pub const ST_BUSY: u8 = 0x07;
+/// Degraded mode: the archive's remote backend is unreachable and at
+/// least one requested chunk is not in the decoded-chunk cache, so the
+/// region cannot be served bit-exact. Cached-only regions still answer
+/// `ST_OK`. Not retryable at the protocol level — the backend must
+/// recover first (the server's circuit breaker re-probes on its own).
+pub const ST_DEGRADED: u8 = 0x08;
 
 // -------------------------------------------------- precision tags ----
 

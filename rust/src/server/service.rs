@@ -18,6 +18,17 @@
 //! * payload reads run under the server's [`RetryPolicy`] (default:
 //!   transient faults retried with linear backoff), so a flaky storage
 //!   backend degrades to latency instead of request failures;
+//! * remote archives: with [`ServeOptions::remote_root`] set, names that
+//!   miss the local root resolve against an HTTP endpoint —
+//!   [`crate::store::HttpStorage`] wrapped in
+//!   [`crate::store::ResilientStorage`] (retries, deadlines, hedging,
+//!   and a circuit breaker shared per endpoint so every archive on one
+//!   host trips and recovers together);
+//! * degraded mode ([`ServeOptions::degraded`]): when the backend is
+//!   unreachable, regions wholly in the decoded-chunk cache still answer
+//!   `ST_OK` bit-exact, and regions needing unfetchable chunks answer
+//!   `ST_DEGRADED` (counted in `server.requests.degraded`) instead of
+//!   `ST_IO` — the contract is documented in `docs/STORAGE.md`;
 //! * overload and stall protection: accepts beyond
 //!   [`ServeOptions::max_connections`] are answered with a single
 //!   `ST_BUSY` error frame and closed (counted in
@@ -43,14 +54,16 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::correction::CorrectionScratch;
-use crate::store::{RetryPolicy, Store};
+use crate::store::{
+    Breaker, HttpStorage, ResilienceOptions, ResilientStorage, RetryPolicy, Store,
+};
 use crate::telemetry::{self, diag};
 use crate::util::sync::{lock, read, write};
 
 use super::protocol::{
     self, error_body, ok_body, region_body, stat_body, ArchiveStat, FrameRead, Request,
     DEFAULT_MAX_RESPONSE_FRAME, MAX_REQUEST_FRAME, ST_BAD_REGION, ST_BAD_REQUEST, ST_BUSY,
-    ST_INTERNAL, ST_IO, ST_OK, ST_TOO_LARGE, ST_UNKNOWN_ARCHIVE,
+    ST_DEGRADED, ST_INTERNAL, ST_IO, ST_OK, ST_TOO_LARGE, ST_UNKNOWN_ARCHIVE,
 };
 
 /// How often idle connection threads and the accept loop re-check the
@@ -68,6 +81,20 @@ pub struct ServeOptions {
     /// Directory archives are resolved in: request name `n` opens
     /// `root/n`, then `root/n.ffcz`. `None` disables path resolution.
     pub root: Option<PathBuf>,
+    /// HTTP base URL archives are resolved against when the local root
+    /// misses: request name `n` opens `remote_root/n`, then
+    /// `remote_root/n.ffcz`, each as an [`HttpStorage`] wrapped in
+    /// [`ResilientStorage`] (per-endpoint breaker shared server-wide;
+    /// the resilience layer owns retries, so the store-level policy is
+    /// [`RetryPolicy::none`]). `None` disables remote resolution.
+    pub remote_root: Option<String>,
+    /// Resilience configuration applied to remote archives.
+    pub resilience: ResilienceOptions,
+    /// Serve degraded reads: when a region's backend fetch fails,
+    /// answer `ST_OK` bit-exact if every needed chunk is cached, and
+    /// `ST_DEGRADED` instead of `ST_IO` otherwise. Data-integrity
+    /// failures (CRC, decode) still answer `ST_IO`/`ST_INTERNAL`.
+    pub degraded: bool,
     /// Decoded-chunk LRU budget applied to each archive the server
     /// opens (bytes of decoded samples; 0 disables caching).
     pub cache_bytes: usize,
@@ -95,6 +122,9 @@ impl Default for ServeOptions {
         Self {
             addr: "127.0.0.1:0".to_string(),
             root: None,
+            remote_root: None,
+            resilience: ResilienceOptions::default(),
+            degraded: false,
             cache_bytes: 64 << 20,
             max_response_bytes: DEFAULT_MAX_RESPONSE_FRAME,
             retry: RetryPolicy::transient(4, Duration::from_millis(2)),
@@ -115,6 +145,8 @@ struct ServerMetrics {
     connections: telemetry::Counter,
     rejected: telemetry::Counter,
     bytes_out: telemetry::Counter,
+    /// `READ_REGION` requests answered `ST_DEGRADED`.
+    degraded: telemetry::Counter,
     inflight: telemetry::Gauge,
     request_ns: telemetry::Histogram,
 }
@@ -130,6 +162,7 @@ fn server_metrics() -> &'static ServerMetrics {
         connections: telemetry::counter("server.connections"),
         rejected: telemetry::counter("server.requests.rejected"),
         bytes_out: telemetry::counter("server.bytes_out"),
+        degraded: telemetry::counter("server.requests.degraded"),
         inflight: telemetry::gauge("server.inflight"),
         request_ns: telemetry::histogram("server.request_ns"),
     })
@@ -138,6 +171,9 @@ fn server_metrics() -> &'static ServerMetrics {
 struct ServerInner {
     opts: ServeOptions,
     stores: RwLock<HashMap<String, Arc<Store>>>,
+    /// One circuit breaker per remote endpoint (authority), shared by
+    /// every resilient store the server opens against it.
+    breakers: Mutex<HashMap<String, Arc<Breaker>>>,
     scratch_pool: Mutex<Vec<CorrectionScratch>>,
     shutdown: AtomicBool,
     inflight: AtomicU64,
@@ -187,6 +223,7 @@ impl ArchiveServer {
         let inner = Arc::new(ServerInner {
             opts,
             stores: RwLock::new(HashMap::new()),
+            breakers: Mutex::new(HashMap::new()),
             scratch_pool: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             inflight: AtomicU64::new(0),
@@ -432,7 +469,8 @@ fn handle_request(
 }
 
 /// Resolve an archive name to an open store: the shared table first,
-/// then lazily from the root directory (`name`, then `name.ffcz`).
+/// then lazily from the root directory (`name`, then `name.ffcz`), then
+/// the remote root (same two candidates against the HTTP endpoint).
 fn lookup_store(inner: &ServerInner, name: &str) -> Result<Arc<Store>, (u8, String)> {
     if let Some(store) = read(&inner.stores).get(name) {
         return Ok(Arc::clone(store));
@@ -447,32 +485,7 @@ fn lookup_store(inner: &ServerInner, name: &str) -> Result<Arc<Store>, (u8, Stri
             format!("invalid archive name '{name}' (relative paths only, no '..')"),
         ));
     }
-    let Some(root) = &inner.opts.root else {
-        return Err((
-            ST_UNKNOWN_ARCHIVE,
-            format!("archive '{name}' is not registered and no --root is configured"),
-        ));
-    };
-    let direct = root.join(name);
-    let path = if direct.is_file() {
-        direct
-    } else {
-        let with_ext = root.join(format!("{name}.ffcz"));
-        if with_ext.is_file() {
-            with_ext
-        } else {
-            return Err((
-                ST_UNKNOWN_ARCHIVE,
-                format!("no archive '{name}' under {}", root.display()),
-            ));
-        }
-    };
-    let store = match Store::open(&path) {
-        Ok(store) => store
-            .with_retry_policy(inner.opts.retry)
-            .with_cache_budget(inner.opts.cache_bytes),
-        Err(e) => return Err((ST_IO, format!("{e:#}"))),
-    };
+    let store = open_by_name(inner, name)?;
     let store = Arc::new(store);
     let mut stores = write(&inner.stores);
     // Two connections may race to open the same archive; first insert
@@ -481,6 +494,89 @@ fn lookup_store(inner: &ServerInner, name: &str) -> Result<Arc<Store>, (u8, Stri
         .entry(name.to_string())
         .or_insert_with(|| Arc::clone(&store));
     Ok(Arc::clone(entry))
+}
+
+/// Open archive `name` from the local root if it resolves there, the
+/// remote root otherwise.
+fn open_by_name(inner: &ServerInner, name: &str) -> Result<Store, (u8, String)> {
+    if let Some(root) = &inner.opts.root {
+        let direct = root.join(name);
+        let with_ext = root.join(format!("{name}.ffcz"));
+        let path = if direct.is_file() {
+            Some(direct)
+        } else if with_ext.is_file() {
+            Some(with_ext)
+        } else {
+            None
+        };
+        if let Some(path) = path {
+            return match Store::open(&path) {
+                Ok(store) => Ok(store
+                    .with_retry_policy(inner.opts.retry)
+                    .with_cache_budget(inner.opts.cache_bytes)),
+                Err(e) => Err((ST_IO, format!("{e:#}"))),
+            };
+        }
+        if inner.opts.remote_root.is_none() {
+            return Err((
+                ST_UNKNOWN_ARCHIVE,
+                format!("no archive '{name}' under {}", root.display()),
+            ));
+        }
+    }
+    let Some(remote_root) = &inner.opts.remote_root else {
+        return Err((
+            ST_UNKNOWN_ARCHIVE,
+            format!("archive '{name}' is not registered and no --root or --remote-root is configured"),
+        ));
+    };
+    open_remote(inner, name, remote_root)
+}
+
+/// Open archive `name` against the remote root: `base/name`, then
+/// `base/name.ffcz`, each as a resilient HTTP-range store. The
+/// store-level retry policy is `none` — the resilience layer owns
+/// retries, so faults are never retried twice over.
+fn open_remote(inner: &ServerInner, name: &str, remote_root: &str) -> Result<Store, (u8, String)> {
+    let base = remote_root.trim_end_matches('/');
+    let mut last: Option<String> = None;
+    for url in [format!("{base}/{name}"), format!("{base}/{name}.ffcz")] {
+        let http = match HttpStorage::open(&url) {
+            Ok(http) => http,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                last = Some(format!("{url}: {e}"));
+                continue;
+            }
+            Err(e) => return Err((ST_IO, format!("opening {url}: {e}"))),
+        };
+        let breaker = breaker_for(inner, http.endpoint());
+        let resilient =
+            ResilientStorage::with_breaker(Arc::new(http), inner.opts.resilience, breaker);
+        return match Store::open_storage(Arc::new(resilient)) {
+            Ok(store) => Ok(store
+                .with_retry_policy(RetryPolicy::none())
+                .with_cache_budget(inner.opts.cache_bytes)),
+            Err(e) => Err((ST_IO, format!("opening {url}: {e:#}"))),
+        };
+    }
+    Err((
+        ST_UNKNOWN_ARCHIVE,
+        format!(
+            "no archive '{name}' under {base} ({})",
+            last.unwrap_or_else(|| "no candidates tried".to_string())
+        ),
+    ))
+}
+
+/// The server-wide circuit breaker for `endpoint`, created on first use.
+fn breaker_for(inner: &ServerInner, endpoint: &str) -> Arc<Breaker> {
+    let mut breakers = lock(&inner.breakers);
+    if let Some(b) = breakers.get(endpoint) {
+        return Arc::clone(b);
+    }
+    let b = Arc::new(Breaker::new(endpoint, inner.opts.resilience.breaker));
+    breakers.insert(endpoint.to_string(), Arc::clone(&b));
+    b
 }
 
 fn read_region_reply(
@@ -538,17 +634,48 @@ fn read_region_reply(
             ),
         );
     }
+    if inner.opts.degraded {
+        // Degraded serving: chunks the backend cannot produce fall back
+        // to the decoded-chunk cache. A fully-served region answers
+        // `ST_OK` bit-exact; a region needing unfetchable chunks
+        // answers `ST_DEGRADED` (no partial data on the wire).
+        // Data-integrity failures still propagate to the mapping below.
+        return match store.read_region_degraded(&o, &s, scratch) {
+            Ok(region) if region.is_complete() => region_body(
+                region.field.shape(),
+                store.manifest().precision,
+                region.field.data(),
+            ),
+            Ok(region) => {
+                server_metrics().degraded.incr();
+                error_body(
+                    ST_DEGRADED,
+                    &format!(
+                        "degraded: {} requested chunk(s) unavailable from the storage \
+                         backend and not cached; retry after the backend recovers",
+                        region.missing.len()
+                    ),
+                )
+            }
+            Err(e) => region_error_body(&e),
+        };
+    }
     match store.read_region_with_scratch(&o, &s, scratch) {
         Ok(field) => region_body(field.shape(), store.manifest().precision, field.data()),
-        Err(e) => {
-            let msg = format!("{e:#}");
-            let io_like = e
-                .chain()
-                .any(|c| c.downcast_ref::<std::io::Error>().is_some())
-                || msg.contains("CRC-32");
-            error_body(if io_like { ST_IO } else { ST_INTERNAL }, &msg)
-        }
+        Err(e) => region_error_body(&e),
     }
+}
+
+/// Map a failed region read to a wire status: storage-level failures
+/// (I/O errors anywhere in the chain, CRC-32 mismatches) answer `ST_IO`,
+/// everything else `ST_INTERNAL`.
+fn region_error_body(e: &anyhow::Error) -> Vec<u8> {
+    let msg = format!("{e:#}");
+    let io_like = e
+        .chain()
+        .any(|c| c.downcast_ref::<std::io::Error>().is_some())
+        || msg.contains("CRC-32");
+    error_body(if io_like { ST_IO } else { ST_INTERNAL }, &msg)
 }
 
 #[cfg(test)]
@@ -725,6 +852,58 @@ mod tests {
         // …but fresh connections are still welcome.
         let mut fresh = Client::connect(&addr).unwrap();
         fresh.ping().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn degraded_mode_serves_cached_regions_and_answers_st_degraded() {
+        use crate::store::{FaultInjector, FaultPlan, MemStorage};
+
+        let bytes = fixture_bytes(16);
+        let truth = Store::from_bytes(bytes.clone()).unwrap();
+        let injector = Arc::new(FaultInjector::new(MemStorage::new(bytes), FaultPlan::none()));
+        let faults = injector.handle();
+        let store = Arc::new(
+            Store::open_storage(injector)
+                .unwrap()
+                .with_cache_budget(64 << 20),
+        );
+        let opts = ServeOptions {
+            degraded: true,
+            ..ServeOptions::default()
+        };
+        let server = ArchiveServer::start(opts).unwrap();
+        server.register("f", Arc::clone(&store));
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+
+        // Warm the cache with the top-left chunk, then kill the backend.
+        let warm = client.read_region("f", &[0, 0], &[5, 4]).unwrap();
+        faults.set_plan(FaultPlan {
+            transient_every: 1,
+            ..FaultPlan::none()
+        });
+
+        // Cached region: still ST_OK, bit-exact.
+        let cached = client.read_region("f", &[0, 0], &[5, 4]).unwrap();
+        assert_eq!(cached.data(), warm.data());
+        assert_eq!(
+            cached.data(),
+            truth.read_region(&[0, 0], &[5, 4], 1).unwrap().data()
+        );
+
+        // Region needing unfetchable chunks: typed ST_DEGRADED, and the
+        // connection keeps serving.
+        let err = client.read_region("f", &[0, 0], &[12, 10]).unwrap_err();
+        assert_eq!(super::super::client::status_of(&err), Some(ST_DEGRADED));
+        client.ping().unwrap();
+
+        // Backend recovers: full region served again.
+        faults.set_plan(FaultPlan::none());
+        let full = client.read_region("f", &[0, 0], &[12, 10]).unwrap();
+        assert_eq!(
+            full.data(),
+            truth.read_region(&[0, 0], &[12, 10], 1).unwrap().data()
+        );
         server.shutdown();
     }
 

@@ -24,7 +24,15 @@
 //!   ([`ReadableStorage`]: ranged `read_at`/`size`; [`WritableStorage`]:
 //!   positioned `write_at`/`flush`/`sync`/`truncate`), with local-file,
 //!   in-memory, and deterministic fault-injecting backends plus the
-//!   transient-fault [`RetryPolicy`] shared by both directions;
+//!   transient-fault [`RetryPolicy`] (linear or exponential backoff with
+//!   seeded deterministic jitter) shared by both directions;
+//! * [`remote`] — a dependency-free HTTP/1.1 `Range` client backend
+//!   ([`HttpStorage`]) with connection reuse, plus the in-process
+//!   [`HttpRangeServer`] loopback fixture tests and benches build on;
+//! * [`resilience`] — [`ResilientStorage`], wrapping any backend with
+//!   per-read deadlines, retries, a per-endpoint circuit breaker
+//!   ([`Breaker`], typed [`BreakerOpen`] fail-fast), and hedged reads —
+//!   the normative contract lives in `docs/STORAGE.md`;
 //! * [`writer`] / [`reader`] — container production (streaming by default:
 //!   chunk payloads spill to the output as they complete, holding at most
 //!   `workers + queue_depth` payloads in memory; per-chunk codec overrides
@@ -72,6 +80,8 @@ pub mod grid;
 pub mod manifest;
 pub mod parallel;
 pub mod reader;
+pub mod remote;
+pub mod resilience;
 pub mod storage;
 pub mod writer;
 
@@ -81,11 +91,17 @@ pub use manifest::{ChunkEntry, Manifest};
 pub use parallel::{
     par_try_map, par_try_map_ordered_sink, par_try_map_ordered_sink_with, par_try_map_with,
 };
-pub use reader::{ChunkVerifyReport, Store, VerifyReport};
+pub use reader::{ChunkVerifyReport, RegionRead, Store, VerifyReport};
+pub use remote::{HttpRangeServer, HttpStorage};
+pub use resilience::{
+    breaker_open_in_chain, breaker_open_of, deadline_exceeded_in_chain, deadline_exceeded_of,
+    Breaker, BreakerConfig, BreakerOpen, DeadlineExceeded, HedgeConfig, ResilienceOptions,
+    ResilientStorage,
+};
 pub use storage::{
     read_exact_at, read_exact_at_retry, write_all_at, write_all_at_retry, FaultCounts,
     FaultHandle, FaultInjector, FaultPlan, FileStorage, MemStorage, ReadableStorage, RetryPolicy,
-    WritableStorage,
+    RetrySchedule, WritableStorage,
 };
 pub use writer::{
     encode_store, resume_store_write, staging_paths, stream_store_to, write_store,

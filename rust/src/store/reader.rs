@@ -94,6 +94,9 @@ struct ReadMetrics {
     lru_bytes: telemetry::Gauge,
     /// Transient storage-fault retries across all stores.
     retries: telemetry::Counter,
+    /// Chunks a degraded-mode read could not serve (backend down, chunk
+    /// not in the LRU).
+    degraded: telemetry::Counter,
 }
 
 fn read_metrics() -> &'static ReadMetrics {
@@ -103,6 +106,7 @@ fn read_metrics() -> &'static ReadMetrics {
         lru_misses: telemetry::counter("store.read.lru_misses"),
         lru_bytes: telemetry::gauge("store.read.lru_bytes"),
         retries: telemetry::counter("store.read.retries"),
+        degraded: telemetry::counter("store.read.degraded"),
     })
 }
 
@@ -543,6 +547,75 @@ impl Store {
         Ok(Field::new(shape, out, self.manifest.precision))
     }
 
+    /// [`Store::read_region`] that survives a dead or flapping storage
+    /// backend: chunks still present in the decoded-chunk LRU (or
+    /// fetchable) are served normally, while chunks whose *payload
+    /// fetch* fails — connection refused, deadline exceeded, breaker
+    /// open — are NaN-filled in the output and reported in
+    /// [`RegionRead::missing`] instead of erroring the whole region.
+    /// Data-integrity failures (CRC mismatch, codec decode errors) are
+    /// never masked: those still propagate, because they mean the bytes
+    /// arrived and are wrong. The archive server's degraded mode and its
+    /// `ST_DEGRADED` answers build on this; the contract is documented
+    /// in `docs/STORAGE.md`.
+    pub fn read_region_degraded(
+        &self,
+        origin: &[usize],
+        shape: &[usize],
+        scratch: &mut CorrectionScratch,
+    ) -> Result<RegionRead> {
+        let ids = self.grid.chunks_intersecting(origin, shape)?;
+        let read_span = telemetry::span("store.read_region").arg("chunks", ids.len() as u64);
+        let read_span_id = read_span.id();
+        let n: usize = shape.iter().product();
+        let mut out = vec![0.0f64; n];
+        let mut missing = Vec::new();
+        for &index in &ids {
+            match self.read_chunk_piece(index, origin, shape, read_span_id, scratch) {
+                Ok((region_local, sub_shape, sub)) => {
+                    insert_subarray(&mut out, shape, &region_local, &sub, &sub_shape);
+                }
+                Err(e) if is_storage_error(&e) => {
+                    let (region_local, sub_shape) = self.piece_geometry(index, origin, shape);
+                    let nans = vec![f64::NAN; sub_shape.iter().product()];
+                    insert_subarray(&mut out, shape, &region_local, &nans, &sub_shape);
+                    missing.push(index);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if !missing.is_empty() {
+            read_metrics().degraded.add(missing.len() as u64);
+        }
+        Ok(RegionRead {
+            field: Field::new(shape, out, self.manifest.precision),
+            missing,
+        })
+    }
+
+    /// Intersection of chunk `index` with the requested region:
+    /// `(region-local origin, piece shape)` — the geometry half of
+    /// [`Store::read_chunk_piece`], used to NaN-fill unservable chunks.
+    fn piece_geometry(
+        &self,
+        index: usize,
+        origin: &[usize],
+        shape: &[usize],
+    ) -> (Vec<usize>, Vec<usize>) {
+        let coords = self.grid.chunk_coords(index);
+        let c_origin = self.grid.chunk_origin(&coords);
+        let c_extent = self.grid.chunk_extent(&coords);
+        let lo: Vec<usize> = (0..shape.len())
+            .map(|d| origin[d].max(c_origin[d]))
+            .collect();
+        let hi: Vec<usize> = (0..shape.len())
+            .map(|d| (origin[d] + shape[d]).min(c_origin[d] + c_extent[d]))
+            .collect();
+        let sub_shape: Vec<usize> = (0..shape.len()).map(|d| hi[d] - lo[d]).collect();
+        let region_local: Vec<usize> = (0..shape.len()).map(|d| lo[d] - origin[d]).collect();
+        (region_local, sub_shape)
+    }
+
     /// Decode one chunk (through the LRU) and extract its intersection
     /// with the requested region: `(region-local origin, piece shape,
     /// piece samples)`.
@@ -658,6 +731,34 @@ impl Store {
             ));
         }
         report
+    }
+}
+
+/// True when `err` carries an [`std::io::Error`] anywhere in its chain —
+/// the payload fetch failed (backend down, deadline, breaker), as
+/// opposed to a data-integrity failure (CRC mismatch, decode error)
+/// whose bytes arrived and are wrong.
+fn is_storage_error(err: &anyhow::Error) -> bool {
+    err.chain()
+        .any(|c| c.downcast_ref::<std::io::Error>().is_some())
+}
+
+/// Outcome of [`Store::read_region_degraded`]: the decoded window plus
+/// the chunks it could not serve.
+#[derive(Debug, Clone)]
+pub struct RegionRead {
+    /// The requested window; regions of chunks listed in `missing` are
+    /// NaN-filled.
+    pub field: Field,
+    /// Row-major indices of chunks whose payload fetch failed, in
+    /// ascending order. Empty means the read is complete and bit-exact.
+    pub missing: Vec<usize>,
+}
+
+impl RegionRead {
+    /// True iff every intersecting chunk was served.
+    pub fn is_complete(&self) -> bool {
+        self.missing.is_empty()
     }
 }
 
@@ -937,6 +1038,66 @@ mod tests {
         assert!(report.chunks[1..].iter().all(ChunkVerifyReport::ok));
         let json = report.to_json();
         assert!(json.contains("c/0/0") && json.contains("CRC-32"), "{json}");
+    }
+
+    #[test]
+    fn degraded_read_serves_cached_chunks_and_nan_fills_the_rest() {
+        use crate::store::storage::{FaultInjector, FaultPlan, MemStorage};
+
+        let (field, bytes) = store_bytes();
+        let injector = Arc::new(FaultInjector::new(MemStorage::new(bytes), FaultPlan::none()));
+        let faults = injector.handle();
+        let store = Store::open_storage(injector).unwrap();
+        store.set_cache_budget(field.len() * 8);
+
+        // Warm the cache for the top-left window only.
+        let warm = store.read_region(&[0, 0], &[5, 4], 1).unwrap();
+        assert_eq!(store.chunks_decoded(), 1);
+
+        // Kill the backend: every subsequent payload read faults (retry
+        // policy is none, so the fault surfaces immediately).
+        faults.set_plan(FaultPlan {
+            transient_every: 1,
+            ..FaultPlan::none()
+        });
+
+        // The cached chunk is still served bit-exact.
+        let mut scratch = CorrectionScratch::new();
+        let cached = store
+            .read_region_degraded(&[0, 0], &[5, 4], &mut scratch)
+            .unwrap();
+        assert!(cached.is_complete());
+        assert_eq!(cached.field.data(), warm.data());
+
+        // A window spanning cached + uncached chunks: the cached piece is
+        // exact, the unservable chunks are reported and NaN-filled.
+        let got = store
+            .read_region_degraded(&[0, 0], &[12, 10], &mut scratch)
+            .unwrap();
+        assert!(!got.is_complete());
+        assert_eq!(
+            got.missing.len(),
+            store.grid().chunk_count() - 1,
+            "only the warmed chunk should be servable"
+        );
+        assert!(!got.missing.contains(&0));
+        let expect = extract_subarray(field.data(), field.shape(), &[0, 0], &[5, 4]);
+        let head = extract_subarray(got.field.data(), &[12, 10], &[0, 0], &[5, 4]);
+        assert_eq!(head, expect);
+        assert!(got.field.data().iter().any(|v| v.is_nan()));
+
+        // Data-integrity failures are never masked: with the backend
+        // healthy again but a payload byte corrupted, the CRC error
+        // propagates instead of degrading.
+        faults.set_plan(FaultPlan::none());
+        let (_, bytes2) = store_bytes();
+        let mut bad = bytes2;
+        bad[10] ^= 0xFF;
+        let store2 = Store::from_bytes(bad).unwrap();
+        let err = store2
+            .read_region_degraded(&[0, 0], &[5, 4], &mut scratch)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("CRC-32"), "{err:#}");
     }
 
     #[test]

@@ -1,0 +1,793 @@
+//! Remote HTTP-range storage backend.
+//!
+//! [`HttpStorage`] implements [`ReadableStorage`] over plain HTTP/1.1
+//! `GET` requests with `Range: bytes=…` headers on `std::net::TcpStream`
+//! — dependency-free like the rest of the crate (the build is offline;
+//! there is no `reqwest`/`hyper` here, and no TLS). The exact client
+//! profile it speaks — and the minimal server behavior it requires — is
+//! documented normatively in `docs/STORAGE.md`; any HTTP server that
+//! honors single-range requests (object-store gateways, `nginx`, the
+//! in-process [`HttpRangeServer`] below) is a valid endpoint.
+//!
+//! Transport failures map onto `io::ErrorKind`s the storage retry layer
+//! already understands: conditions a retry can heal (stale keep-alive
+//! connections, resets, truncated bodies, wrong-length ranges,
+//! `429`/`5xx` responses, socket timeouts) surface as **transient**
+//! kinds (`Interrupted`/`TimedOut`), permanent protocol problems (no
+//! range support, malformed or unexpected responses) as hard errors.
+//! The backend itself never retries and never sleeps — retries,
+//! deadlines, hedging, and circuit breaking are the
+//! [`super::resilience::ResilientStorage`] wrapper's job.
+//!
+//! Connections are reused: successful exchanges return their socket to a
+//! small keep-alive pool, so hedged reads and parallel `read_region`
+//! workers do not pay a TCP handshake per chunk; any error drops the
+//! connection on the floor and the next request dials fresh.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::sync::lock;
+
+use super::storage::ReadableStorage;
+
+/// Cap on response status line + header bytes (a well-formed range
+/// response needs far less; anything bigger is a protocol violation).
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Idle keep-alive connections retained per backend.
+const POOL_CAP: usize = 4;
+
+/// Default socket read/write timeout (a stalled endpoint surfaces as a
+/// transient `TimedOut`, which retry policies and the resilience layer's
+/// deadline know how to handle).
+const DEFAULT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A transient (retryable) transport error.
+fn transient(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::Interrupted, msg)
+}
+
+/// `ReadableStorage` over HTTP/1.1 range requests.
+///
+/// ```no_run
+/// use ffcz::store::{HttpStorage, Store};
+/// let storage = HttpStorage::open("http://archive-host:8080/nyx/baryon.ffcz").unwrap();
+/// let store = Store::open_storage(storage).unwrap();
+/// let region = store.read_region(&[0, 0, 0], &[64, 64, 64], 4).unwrap();
+/// ```
+pub struct HttpStorage {
+    /// `host[:port]` exactly as written in the URL (the `Host` header).
+    authority: String,
+    /// `host:port` as dialed (port 80 made explicit).
+    addr: String,
+    /// Absolute request path (`/` if the URL had none).
+    path: String,
+    len: u64,
+    timeout: Duration,
+    pool: Mutex<Vec<TcpStream>>,
+}
+
+impl HttpStorage {
+    /// Open `url` (`http://host[:port]/path`) and discover the remote
+    /// object's size with a 1-byte probe request. `https://` URLs are
+    /// refused — the dependency-free client speaks plain HTTP only.
+    pub fn open(url: &str) -> io::Result<Self> {
+        Self::open_with_timeout(url, DEFAULT_TIMEOUT)
+    }
+
+    /// [`Self::open`] with an explicit socket read/write timeout
+    /// (`Duration::ZERO` disables timeouts — tests only).
+    pub fn open_with_timeout(url: &str, timeout: Duration) -> io::Result<Self> {
+        let (authority, addr, path) = split_url(url)?;
+        let mut storage = Self {
+            authority,
+            addr,
+            path,
+            len: 0,
+            timeout,
+            pool: Mutex::new(Vec::new()),
+        };
+        storage.len = storage.discover_len()?;
+        Ok(storage)
+    }
+
+    /// The endpoint this backend talks to (`host[:port]`) — the circuit
+    /// breaker's sharing key.
+    pub fn endpoint(&self) -> &str {
+        &self.authority
+    }
+
+    /// The full URL this backend reads.
+    pub fn url(&self) -> String {
+        format!("http://{}{}", self.authority, self.path)
+    }
+
+    fn checkout(&self) -> io::Result<TcpStream> {
+        if let Some(conn) = lock(&self.pool).pop() {
+            return Ok(conn);
+        }
+        let conn = TcpStream::connect(&self.addr)?;
+        let _ = conn.set_nodelay(true);
+        if !self.timeout.is_zero() {
+            conn.set_read_timeout(Some(self.timeout))?;
+            conn.set_write_timeout(Some(self.timeout))?;
+        }
+        Ok(conn)
+    }
+
+    fn checkin(&self, conn: TcpStream) {
+        let mut pool = lock(&self.pool);
+        if pool.len() < POOL_CAP {
+            pool.push(conn);
+        }
+    }
+
+    /// One request/response exchange for `bytes=offset..=last`; on
+    /// success the body lands in `buf` and the connection goes back to
+    /// the pool. Any error drops the connection.
+    fn fetch(&self, offset: u64, want: usize, buf: &mut [u8]) -> io::Result<usize> {
+        let mut conn = self.checkout()?;
+        match self.exchange(&mut conn, offset, want, buf) {
+            Ok((n, reusable)) => {
+                if reusable {
+                    self.checkin(conn);
+                }
+                Ok(n)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn exchange(
+        &self,
+        conn: &mut TcpStream,
+        offset: u64,
+        want: usize,
+        buf: &mut [u8],
+    ) -> io::Result<(usize, bool)> {
+        let last = offset + (want as u64 - 1);
+        write_request(conn, &self.authority, &self.path, offset, last)
+            .map_err(|e| transient(format!("writing range request: {e}")))?;
+        let head = ResponseHead::read_from(conn)?;
+        match head.code {
+            206 => {
+                let Some(cl) = head.content_length else {
+                    return Err(transient(
+                        "206 response without Content-Length (chunked bodies are unsupported)"
+                            .to_string(),
+                    ));
+                };
+                if let Some((start, _end)) = head.range_span {
+                    if start != offset {
+                        return Err(transient(format!(
+                            "Content-Range starts at {start}, requested {offset}"
+                        )));
+                    }
+                }
+                if cl > want as u64 {
+                    return Err(transient(format!(
+                        "wrong-length range: {cl} body bytes for a {want}-byte request"
+                    )));
+                }
+                let n = cl as usize;
+                read_body(conn, &mut buf[..n])?;
+                Ok((n, head.keep_alive))
+            }
+            200 => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                format!(
+                    "{} ignored the Range header (status 200) — not a range-capable endpoint",
+                    self.url()
+                ),
+            )),
+            // Requested range past the end: end-of-storage, nothing to
+            // reuse (the error body is unread).
+            416 => Ok((0, false)),
+            429 | 500..=599 => Err(transient(format!(
+                "endpoint {} answered HTTP {} (retryable)",
+                self.authority, head.code
+            ))),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected HTTP status {other} from {}", self.url()),
+            )),
+        }
+    }
+
+    /// Probe the object size: a `bytes=0-0` request whose `Content-Range`
+    /// total is the answer (a `416` with `bytes */N` means a zero-length
+    /// object and still carries the total).
+    fn discover_len(&self) -> io::Result<u64> {
+        let mut conn = self.checkout()?;
+        write_request(&mut conn, &self.authority, &self.path, 0, 0)
+            .map_err(|e| transient(format!("writing size probe: {e}")))?;
+        let head = ResponseHead::read_from(&mut conn)?;
+        match head.code {
+            206 => {
+                let Some(total) = head.range_total else {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("{} did not report a Content-Range total", self.url()),
+                    ));
+                };
+                // Drain the 1-byte probe body so the connection is
+                // reusable.
+                let mut probe = [0u8; 1];
+                let cl = head.content_length.unwrap_or(0);
+                if cl == 1 && read_body(&mut conn, &mut probe).is_ok() {
+                    self.checkin(conn);
+                }
+                Ok(total)
+            }
+            416 => head.range_total.map_or_else(
+                || {
+                    Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("{} did not report a Content-Range total", self.url()),
+                    ))
+                },
+                Ok,
+            ),
+            200 => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                format!(
+                    "{} ignored the Range header (status 200) — not a range-capable endpoint",
+                    self.url()
+                ),
+            )),
+            404 => Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("{} answered HTTP 404", self.url()),
+            )),
+            429 | 500..=599 => Err(transient(format!(
+                "endpoint {} answered HTTP {} (retryable)",
+                self.authority, head.code
+            ))),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected HTTP status {other} from {}", self.url()),
+            )),
+        }
+    }
+}
+
+impl ReadableStorage for HttpStorage {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() || offset >= self.len {
+            return Ok(0);
+        }
+        let tail = usize::try_from(self.len - offset).unwrap_or(usize::MAX);
+        let want = buf.len().min(tail);
+        self.fetch(offset, want, buf)
+    }
+
+    fn size(&self) -> io::Result<u64> {
+        Ok(self.len)
+    }
+
+    fn describe(&self) -> String {
+        self.url()
+    }
+}
+
+/// `http://host[:port]/path` → (authority, dial address, path).
+fn split_url(url: &str) -> io::Result<(String, String, String)> {
+    if url.starts_with("https://") {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            format!("https is not supported by the dependency-free client: {url}"),
+        ));
+    }
+    let Some(rest) = url.strip_prefix("http://") else {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("not an http:// URL: {url}"),
+        ));
+    };
+    let (authority, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    if authority.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("empty host in URL: {url}"),
+        ));
+    }
+    let addr = if authority.contains(':') {
+        authority.to_string()
+    } else {
+        format!("{authority}:80")
+    };
+    Ok((authority.to_string(), addr, path.to_string()))
+}
+
+fn write_request(
+    conn: &mut TcpStream,
+    authority: &str,
+    path: &str,
+    first: u64,
+    last: u64,
+) -> io::Result<()> {
+    let req = format!(
+        "GET {path} HTTP/1.1\r\nHost: {authority}\r\nRange: bytes={first}-{last}\r\nConnection: keep-alive\r\nUser-Agent: ffcz\r\n\r\n"
+    );
+    conn.write_all(req.as_bytes())?;
+    conn.flush()
+}
+
+/// Fill `buf` from the response body, mapping premature EOF and socket
+/// errors to transient kinds (the connection died mid-body; a retry
+/// reissues the whole range).
+fn read_body(conn: &mut TcpStream, buf: &mut [u8]) -> io::Result<()> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match conn.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(transient(format!(
+                    "truncated response body: got {filled} of {} bytes",
+                    buf.len()
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if super::storage::RetryPolicy::is_transient(e.kind()) => return Err(e),
+            Err(e) => return Err(transient(format!("reading response body: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Parsed status line + the few headers the range profile cares about.
+struct ResponseHead {
+    code: u16,
+    content_length: Option<u64>,
+    /// `Content-Range: bytes S-E/…` span, if present.
+    range_span: Option<(u64, u64)>,
+    /// `Content-Range: bytes …/T` total, if not `*`.
+    range_total: Option<u64>,
+    keep_alive: bool,
+}
+
+impl ResponseHead {
+    /// Read status line + headers (through the blank line). Connection
+    /// death or timeout before the head completes is transient — the
+    /// request can be reissued on a fresh connection.
+    fn read_from(conn: &mut TcpStream) -> io::Result<Self> {
+        let mut head = Vec::with_capacity(256);
+        let mut byte = [0u8; 1];
+        while !head.ends_with(b"\r\n\r\n") {
+            if head.len() >= MAX_HEADER_BYTES {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("response headers exceed {MAX_HEADER_BYTES} bytes"),
+                ));
+            }
+            match conn.read(&mut byte) {
+                Ok(0) => {
+                    return Err(transient(format!(
+                        "connection closed after {} header bytes",
+                        head.len()
+                    )))
+                }
+                Ok(_) => head.push(byte[0]),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if super::storage::RetryPolicy::is_transient(e.kind()) => return Err(e),
+                Err(e) => return Err(transient(format!("reading response headers: {e}"))),
+            }
+        }
+        Self::parse(&head)
+    }
+
+    fn parse(head: &[u8]) -> io::Result<Self> {
+        let text = std::str::from_utf8(head).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidData, "response headers are not UTF-8")
+        })?;
+        let mut lines = text.split("\r\n");
+        let status = lines.next().unwrap_or("");
+        // "HTTP/1.1 206 Partial Content" → 206.
+        let code = status
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse::<u16>().ok())
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("malformed HTTP status line: {status:?}"),
+                )
+            })?;
+        let mut parsed = Self {
+            code,
+            content_length: None,
+            range_span: None,
+            range_total: None,
+            keep_alive: true,
+        };
+        for line in lines {
+            let Some((name, value)) = line.split_once(':') else {
+                continue;
+            };
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                parsed.content_length = value.parse().ok();
+            } else if name.eq_ignore_ascii_case("content-range") {
+                if let Some((span, total)) = parse_content_range(value) {
+                    parsed.range_span = span;
+                    parsed.range_total = total;
+                }
+            } else if name.eq_ignore_ascii_case("connection")
+                && value.eq_ignore_ascii_case("close")
+            {
+                parsed.keep_alive = false;
+            }
+        }
+        Ok(parsed)
+    }
+}
+
+/// `bytes S-E/T` → `(Some((S, E)) | None for "*", Some(T) | None for "*")`.
+fn parse_content_range(value: &str) -> Option<(Option<(u64, u64)>, Option<u64>)> {
+    let rest = value.strip_prefix("bytes ")?;
+    let (range, total) = rest.split_once('/')?;
+    let total = if total.trim() == "*" {
+        None
+    } else {
+        Some(total.trim().parse().ok()?)
+    };
+    let span = if range.trim() == "*" {
+        None
+    } else {
+        let (s, e) = range.split_once('-')?;
+        Some((s.trim().parse().ok()?, e.trim().parse().ok()?))
+    };
+    Some((span, total))
+}
+
+// ------------------------------------------------------------ fixture --
+
+/// How often the accept loop and idle connection handlers of a
+/// [`HttpRangeServer`] re-check the stop flag.
+const SERVER_POLL: Duration = Duration::from_millis(20);
+
+/// A minimal in-process HTTP/1.1 range server over in-memory byte
+/// buffers — the loopback endpoint behind the remote-backend benches,
+/// doc examples, and integration tests. It implements exactly the server
+/// side of the client profile in `docs/STORAGE.md`: single-range `GET`s
+/// answer `206 Partial Content` with `Content-Range` and
+/// `Content-Length`; rangeless `GET`s answer `200` with the whole body;
+/// a range starting past the end answers `416` with the object total;
+/// unknown paths answer `404`.
+pub struct HttpRangeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpRangeServer {
+    /// Serve `files` (name → bytes, reachable at `/name`) on an
+    /// ephemeral loopback port.
+    pub fn start(files: Vec<(String, Vec<u8>)>) -> io::Result<Self> {
+        Self::start_on("127.0.0.1:0", files)
+    }
+
+    /// [`Self::start`] on an explicit address. Tests use this to restart
+    /// a fixture on the port a killed instance occupied — the endpoint
+    /// "coming back" that circuit-breaker recovery needs to observe.
+    pub fn start_on(addr: &str, files: Vec<(String, Vec<u8>)>) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let table: Arc<HashMap<String, Arc<Vec<u8>>>> = Arc::new(
+            files
+                .into_iter()
+                .map(|(name, bytes)| (format!("/{name}"), Arc::new(bytes)))
+                .collect(),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("ffcz-http-fixture".to_string())
+            .spawn(move || range_server_loop(listener, table, accept_stop))?;
+        Ok(Self {
+            addr,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// Serve one buffer as `/data`; returns the server and its full URL.
+    pub fn single(bytes: Vec<u8>) -> io::Result<(Self, String)> {
+        let server = Self::start(vec![("data".to_string(), bytes)])?;
+        let url = server.url_for("data");
+        Ok((server, url))
+    }
+
+    /// `http://127.0.0.1:port` — the `--remote-root` form.
+    pub fn root_url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Full URL of a served file.
+    pub fn url_for(&self, name: &str) -> String {
+        format!("http://{}/{name}", self.addr)
+    }
+
+    /// Stop accepting and join every connection handler.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for HttpRangeServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn range_server_loop(
+    listener: TcpListener,
+    table: Arc<HashMap<String, Arc<Vec<u8>>>>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((conn, _peer)) => {
+                let conn_table = Arc::clone(&table);
+                let conn_stop = Arc::clone(&stop);
+                if let Ok(handle) = std::thread::Builder::new()
+                    .name("ffcz-http-fixture-conn".to_string())
+                    .spawn(move || serve_range_connection(conn, &conn_table, &conn_stop))
+                {
+                    handlers.push(handle);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(SERVER_POLL),
+            Err(_) => std::thread::sleep(SERVER_POLL),
+        }
+    }
+    for handle in handlers {
+        let _ = handle.join();
+    }
+}
+
+fn serve_range_connection(
+    mut conn: TcpStream,
+    table: &HashMap<String, Arc<Vec<u8>>>,
+    stop: &AtomicBool,
+) {
+    if conn.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = conn.set_read_timeout(Some(SERVER_POLL));
+    let _ = conn.set_nodelay(true);
+    while !stop.load(Ordering::SeqCst) {
+        let head = match read_request_head(&mut conn) {
+            Ok(Some(head)) => head,
+            Ok(None) => continue, // idle; poll the stop flag again
+            Err(_) => return,     // peer went away or spoke garbage
+        };
+        let Some((path, range)) = parse_request_head(&head) else {
+            let _ = conn.write_all(b"HTTP/1.1 400 Bad Request\r\nContent-Length: 0\r\n\r\n");
+            return;
+        };
+        let Some(bytes) = table.get(&path) else {
+            if conn
+                .write_all(b"HTTP/1.1 404 Not Found\r\nContent-Length: 0\r\n\r\n")
+                .is_err()
+            {
+                return;
+            }
+            continue;
+        };
+        if write_range_reply(&mut conn, bytes, range).is_err() {
+            return;
+        }
+    }
+}
+
+/// Read one request's status line + headers. `Ok(None)` means a read
+/// timeout before any byte (idle connection); EOF before any byte ends
+/// the connection via `Err`.
+fn read_request_head(conn: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() >= MAX_HEADER_BYTES {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "request headers too large",
+            ));
+        }
+        match conn.read(&mut byte) {
+            Ok(0) => return Err(io::Error::from(io::ErrorKind::UnexpectedEof)),
+            Ok(_) => head.push(byte[0]),
+            Err(e)
+                if head.is_empty()
+                    && matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Ok(None)
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            // A mid-request stall (timeout with a partial head) drops the
+            // connection rather than pinning the handler thread.
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(head))
+}
+
+/// Extract the request path and the first-range span from a `GET`.
+fn parse_request_head(head: &[u8]) -> Option<(String, Option<(u64, Option<u64>)>)> {
+    let text = std::str::from_utf8(head).ok()?;
+    let mut lines = text.split("\r\n");
+    let request = lines.next()?;
+    let mut parts = request.split_whitespace();
+    if parts.next()? != "GET" {
+        return None;
+    }
+    let path = parts.next()?.to_string();
+    let mut range = None;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        if name.eq_ignore_ascii_case("range") {
+            let spec = value.trim().strip_prefix("bytes=")?;
+            let (first, last) = spec.split_once('-')?;
+            let first: u64 = first.trim().parse().ok()?;
+            let last: Option<u64> = if last.trim().is_empty() {
+                None
+            } else {
+                Some(last.trim().parse().ok()?)
+            };
+            range = Some((first, last));
+        }
+    }
+    Some((path, range))
+}
+
+fn write_range_reply(
+    conn: &mut TcpStream,
+    bytes: &[u8],
+    range: Option<(u64, Option<u64>)>,
+) -> io::Result<()> {
+    let total = bytes.len() as u64;
+    let Some((first, last)) = range else {
+        // Rangeless GET: the whole object with a 200.
+        let head = format!("HTTP/1.1 200 OK\r\nContent-Length: {total}\r\n\r\n");
+        conn.write_all(head.as_bytes())?;
+        return conn.write_all(bytes);
+    };
+    if first >= total {
+        let head = format!(
+            "HTTP/1.1 416 Range Not Satisfiable\r\nContent-Range: bytes */{total}\r\nContent-Length: 0\r\n\r\n"
+        );
+        return conn.write_all(head.as_bytes());
+    }
+    let last = last.unwrap_or(total - 1).min(total - 1);
+    let body = &bytes[first as usize..=last as usize];
+    let head = format!(
+        "HTTP/1.1 206 Partial Content\r\nContent-Range: bytes {first}-{last}/{total}\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    conn.write_all(head.as_bytes())?;
+    conn.write_all(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::storage::read_exact_at;
+
+    fn fixture_bytes(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i * 31 % 251) as u8).collect()
+    }
+
+    #[test]
+    fn url_parsing_is_strict() {
+        assert!(split_url("http://h/p").is_ok());
+        assert_eq!(
+            split_url("http://h:8080/a/b.ffcz").unwrap(),
+            (
+                "h:8080".to_string(),
+                "h:8080".to_string(),
+                "/a/b.ffcz".to_string()
+            )
+        );
+        assert_eq!(
+            split_url("http://h").unwrap(),
+            ("h".to_string(), "h:80".to_string(), "/".to_string())
+        );
+        assert!(split_url("https://h/p").is_err());
+        assert!(split_url("ftp://h/p").is_err());
+        assert!(split_url("http:///p").is_err());
+    }
+
+    #[test]
+    fn content_range_parses_all_documented_forms() {
+        assert_eq!(
+            parse_content_range("bytes 0-0/1234"),
+            Some((Some((0, 0)), Some(1234)))
+        );
+        assert_eq!(
+            parse_content_range("bytes 5-9/*"),
+            Some((Some((5, 9)), None))
+        );
+        assert_eq!(parse_content_range("bytes */77"), Some((None, Some(77))));
+        assert_eq!(parse_content_range("lines 0-0/5"), None);
+        assert_eq!(parse_content_range("bytes garbage"), None);
+    }
+
+    #[test]
+    fn http_storage_reads_match_memory_ground_truth() {
+        let bytes = fixture_bytes(10_000);
+        let (server, url) = HttpRangeServer::single(bytes.clone()).unwrap();
+        let storage = HttpStorage::open(&url).unwrap();
+        assert_eq!(storage.size().unwrap(), 10_000);
+
+        let mut got = vec![0u8; 3000];
+        read_exact_at(&storage, 4321, &mut got).unwrap();
+        assert_eq!(&got[..], &bytes[4321..7321]);
+
+        // Reads clipped at end-of-object and past it.
+        let mut tail = vec![0u8; 64];
+        assert_eq!(storage.read_at(9_990, &mut tail).unwrap(), 10);
+        assert_eq!(&tail[..10], &bytes[9_990..]);
+        assert_eq!(storage.read_at(10_000, &mut tail).unwrap(), 0);
+        assert_eq!(storage.read_at(99_999, &mut tail).unwrap(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn connections_are_reused_across_requests() {
+        let bytes = fixture_bytes(4096);
+        let (server, url) = HttpRangeServer::single(bytes.clone()).unwrap();
+        let storage = HttpStorage::open(&url).unwrap();
+        let mut buf = vec![0u8; 128];
+        for i in 0..16u64 {
+            read_exact_at(&storage, i * 100, &mut buf).unwrap();
+            assert_eq!(&buf[..], &bytes[(i * 100) as usize..][..128]);
+        }
+        assert_eq!(
+            lock(&storage.pool).len(),
+            1,
+            "sequential requests must reuse one pooled connection"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn missing_object_is_a_not_found_error() {
+        let server = HttpRangeServer::start(vec![("a".to_string(), vec![1, 2, 3])]).unwrap();
+        let err = HttpStorage::open(&server.url_for("missing")).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::NotFound);
+        server.shutdown();
+    }
+
+    #[test]
+    fn empty_object_has_zero_size() {
+        let (server, url) = HttpRangeServer::single(Vec::new()).unwrap();
+        let storage = HttpStorage::open(&url).unwrap();
+        assert_eq!(storage.size().unwrap(), 0);
+        let mut buf = [0u8; 8];
+        assert_eq!(storage.read_at(0, &mut buf).unwrap(), 0);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,798 @@
+//! Resilience layer for remote (or any) read backends.
+//!
+//! [`ResilientStorage`] wraps a [`ReadableStorage`] and makes its
+//! `read_at` production-worthy against the failure modes a network can
+//! produce. Four mechanisms, all specified normatively in
+//! `docs/STORAGE.md` and all observable through the `store.remote.*`
+//! metrics glossed in `docs/TELEMETRY.md`:
+//!
+//! * **Retries** — transient faults retried under a [`RetryPolicy`]
+//!   through the shared [`RetrySchedule`] (exponential backoff and
+//!   seeded deterministic jitter compose here); counted in
+//!   `store.remote.retries`.
+//! * **Deadlines** — an absolute per-`read_at` budget across *all*
+//!   attempts and sleeps. Exceeding it surfaces a typed
+//!   [`DeadlineExceeded`] (see [`deadline_exceeded_of`]) and counts in
+//!   `store.remote.deadline_exceeded`.
+//! * **Circuit breaker** — a per-endpoint closed → open → half-open
+//!   state machine ([`Breaker`], shareable across wrappers via `Arc` so
+//!   every store talking to one endpoint trips together). While open,
+//!   reads fail fast with a typed [`BreakerOpen`] (see
+//!   [`breaker_open_of`]) instead of burning the retry budget against a
+//!   dead endpoint; transitions and rejections count in
+//!   `store.remote.breaker.{opens,half_opens,closes,rejections}`.
+//! * **Hedged reads** — when an attempt is slower than a latency
+//!   percentile of recent reads (or a fixed trigger), a second identical
+//!   request fires and the first success wins; the loser's result is
+//!   discarded when it lands. Counted in `store.remote.hedges` /
+//!   `store.remote.hedge_wins`.
+//!
+//! Degraded-mode reads — serving what the decoded-chunk LRU still holds
+//! when the backend is gone — live one layer up, in
+//! [`crate::store::Store::read_region_degraded`] and the archive
+//! server's `ST_DEGRADED` answers.
+
+use std::io;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::telemetry;
+use crate::util::sync::lock;
+
+use super::storage::{ReadableStorage, RetryPolicy, RetrySchedule};
+
+/// Registered-metric handles for the resilience layer, fetched once.
+struct RemoteMetrics {
+    requests: telemetry::Counter,
+    retries: telemetry::Counter,
+    hedges: telemetry::Counter,
+    hedge_wins: telemetry::Counter,
+    deadline_exceeded: telemetry::Counter,
+    breaker_opens: telemetry::Counter,
+    breaker_half_opens: telemetry::Counter,
+    breaker_closes: telemetry::Counter,
+    breaker_rejections: telemetry::Counter,
+}
+
+fn remote_metrics() -> &'static RemoteMetrics {
+    static METRICS: OnceLock<RemoteMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| RemoteMetrics {
+        requests: telemetry::counter("store.remote.requests"),
+        retries: telemetry::counter("store.remote.retries"),
+        hedges: telemetry::counter("store.remote.hedges"),
+        hedge_wins: telemetry::counter("store.remote.hedge_wins"),
+        deadline_exceeded: telemetry::counter("store.remote.deadline_exceeded"),
+        breaker_opens: telemetry::counter("store.remote.breaker.opens"),
+        breaker_half_opens: telemetry::counter("store.remote.breaker.half_opens"),
+        breaker_closes: telemetry::counter("store.remote.breaker.closes"),
+        breaker_rejections: telemetry::counter("store.remote.breaker.rejections"),
+    })
+}
+
+// ------------------------------------------------------- typed errors --
+
+/// The circuit breaker refused the read without touching the endpoint.
+/// Rides inside an [`io::Error`]; recover it with [`breaker_open_of`].
+#[derive(Debug, Clone)]
+pub struct BreakerOpen {
+    /// The endpoint whose breaker is open.
+    pub endpoint: String,
+    /// Time until the breaker half-opens and probes again.
+    pub retry_in: Duration,
+}
+
+impl std::fmt::Display for BreakerOpen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "circuit breaker for {} is open (half-opens in {:.0?})",
+            self.endpoint, self.retry_in
+        )
+    }
+}
+
+impl std::error::Error for BreakerOpen {}
+
+/// The absolute per-read deadline was exceeded across attempts. Rides
+/// inside an [`io::Error`]; recover it with [`deadline_exceeded_of`].
+#[derive(Debug, Clone)]
+pub struct DeadlineExceeded {
+    /// The configured budget.
+    pub budget: Duration,
+    /// Time actually spent when the read gave up.
+    pub elapsed: Duration,
+}
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "read deadline exceeded: {:.0?} spent of a {:.0?} budget",
+            self.elapsed, self.budget
+        )
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+/// Downcast an [`io::Error`] to the [`BreakerOpen`] it carries, if any.
+pub fn breaker_open_of(e: &io::Error) -> Option<&BreakerOpen> {
+    e.get_ref()?.downcast_ref()
+}
+
+/// Downcast an [`io::Error`] to the [`DeadlineExceeded`] it carries.
+pub fn deadline_exceeded_of(e: &io::Error) -> Option<&DeadlineExceeded> {
+    e.get_ref()?.downcast_ref()
+}
+
+/// Find a [`BreakerOpen`] anywhere in an `anyhow` error chain (store
+/// read errors arrive context-wrapped).
+pub fn breaker_open_in_chain(err: &anyhow::Error) -> Option<&BreakerOpen> {
+    err.chain()
+        .find_map(|c| c.downcast_ref::<io::Error>().and_then(breaker_open_of))
+}
+
+/// Find a [`DeadlineExceeded`] anywhere in an `anyhow` error chain.
+pub fn deadline_exceeded_in_chain(err: &anyhow::Error) -> Option<&DeadlineExceeded> {
+    err.chain()
+        .find_map(|c| c.downcast_ref::<io::Error>().and_then(deadline_exceeded_of))
+}
+
+// ----------------------------------------------------- circuit breaker --
+
+/// Circuit-breaker tuning. `failure_threshold` consecutive failures
+/// open the breaker; after `cooldown` it half-opens and admits probes —
+/// one success closes it, one failure re-opens it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip the breaker; 0 disables it.
+    pub failure_threshold: u32,
+    /// How long the breaker stays open before half-opening.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            failure_threshold: 5,
+            cooldown: Duration::from_millis(500),
+        }
+    }
+}
+
+enum BreakerState {
+    Closed { failures: u32 },
+    Open { until: Instant },
+    HalfOpen,
+}
+
+/// A per-endpoint circuit breaker. Share one `Arc<Breaker>` across every
+/// [`ResilientStorage`] that talks to the same endpoint so they trip —
+/// and recover — together.
+pub struct Breaker {
+    endpoint: String,
+    cfg: BreakerConfig,
+    state: Mutex<BreakerState>,
+}
+
+impl Breaker {
+    pub fn new(endpoint: &str, cfg: BreakerConfig) -> Self {
+        Self {
+            endpoint: endpoint.to_string(),
+            cfg,
+            state: Mutex::new(BreakerState::Closed { failures: 0 }),
+        }
+    }
+
+    /// The endpoint this breaker guards.
+    pub fn endpoint(&self) -> &str {
+        &self.endpoint
+    }
+
+    /// Current state as a diagnostic label.
+    pub fn state_name(&self) -> &'static str {
+        match *lock(&self.state) {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::Open { until } if Instant::now() < until => "open",
+            // Cooldown elapsed: the next admit() will half-open.
+            BreakerState::Open { .. } | BreakerState::HalfOpen => "half-open",
+        }
+    }
+
+    /// Gate one attempt: `Ok` admits it (possibly as a half-open probe),
+    /// `Err` is a typed [`BreakerOpen`] fail-fast.
+    fn admit(&self) -> io::Result<()> {
+        if self.cfg.failure_threshold == 0 {
+            return Ok(());
+        }
+        let mut state = lock(&self.state);
+        match *state {
+            BreakerState::Closed { .. } | BreakerState::HalfOpen => Ok(()),
+            BreakerState::Open { until } => {
+                let now = Instant::now();
+                if now >= until {
+                    *state = BreakerState::HalfOpen;
+                    remote_metrics().breaker_half_opens.incr();
+                    Ok(())
+                } else {
+                    remote_metrics().breaker_rejections.incr();
+                    Err(io::Error::other(BreakerOpen {
+                        endpoint: self.endpoint.clone(),
+                        retry_in: until - now,
+                    }))
+                }
+            }
+        }
+    }
+
+    fn on_success(&self) {
+        if self.cfg.failure_threshold == 0 {
+            return;
+        }
+        let mut state = lock(&self.state);
+        match *state {
+            BreakerState::Closed { failures: 0 } => {}
+            BreakerState::HalfOpen => {
+                remote_metrics().breaker_closes.incr();
+                *state = BreakerState::Closed { failures: 0 };
+            }
+            _ => *state = BreakerState::Closed { failures: 0 },
+        }
+    }
+
+    fn on_failure(&self) {
+        if self.cfg.failure_threshold == 0 {
+            return;
+        }
+        let mut state = lock(&self.state);
+        match *state {
+            BreakerState::Closed { failures } => {
+                let failures = failures + 1;
+                if failures >= self.cfg.failure_threshold {
+                    remote_metrics().breaker_opens.incr();
+                    *state = BreakerState::Open {
+                        until: Instant::now() + self.cfg.cooldown,
+                    };
+                } else {
+                    *state = BreakerState::Closed { failures };
+                }
+            }
+            // A failed half-open probe re-opens for another cooldown.
+            BreakerState::HalfOpen => {
+                remote_metrics().breaker_opens.incr();
+                *state = BreakerState::Open {
+                    until: Instant::now() + self.cfg.cooldown,
+                };
+            }
+            BreakerState::Open { .. } => {}
+        }
+    }
+}
+
+// -------------------------------------------------------- hedged reads --
+
+/// Hedged-read tuning. Disabled by default: hedging spawns a worker
+/// thread per read, which is the right trade only when the backend's
+/// tail latency dwarfs a thread spawn (networks, not local files).
+#[derive(Debug, Clone, Copy)]
+pub struct HedgeConfig {
+    /// Master switch.
+    pub enabled: bool,
+    /// Fixed hedge trigger, overriding the percentile estimate
+    /// (deterministic tests pin this).
+    pub after: Option<Duration>,
+    /// Latency quantile (0–1) of recent successful reads beyond which
+    /// the hedge fires.
+    pub percentile: f64,
+    /// Successful reads observed before the percentile is trusted;
+    /// until then (and with no fixed trigger) reads never hedge.
+    pub min_samples: usize,
+    /// Lower bound on the percentile-derived trigger, so a burst of
+    /// fast reads cannot arm hair-trigger hedging.
+    pub floor: Duration,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            after: None,
+            percentile: 0.95,
+            min_samples: 16,
+            floor: Duration::from_millis(10),
+        }
+    }
+}
+
+/// Sliding window of recent successful read latencies.
+const LATENCY_WINDOW: usize = 64;
+
+struct LatencyRing {
+    samples: Vec<Duration>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn new() -> Self {
+        Self {
+            samples: Vec::with_capacity(LATENCY_WINDOW),
+            next: 0,
+        }
+    }
+
+    fn record(&mut self, d: Duration) {
+        if self.samples.len() < LATENCY_WINDOW {
+            self.samples.push(d);
+        } else {
+            self.samples[self.next] = d;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+    }
+
+    fn percentile(&self, p: f64, min_samples: usize) -> Option<Duration> {
+        if self.samples.len() < min_samples.max(1) {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort();
+        let idx = ((sorted.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
+        sorted.get(idx).copied()
+    }
+}
+
+// ---------------------------------------------------------- the wrapper --
+
+/// Everything [`ResilientStorage`] is allowed to do around one read.
+#[derive(Debug, Clone, Copy)]
+pub struct ResilienceOptions {
+    /// Transient-fault retry policy (exponential backoff + seeded
+    /// jitter by default; see [`RetryPolicy`]).
+    pub retry: RetryPolicy,
+    /// Absolute per-`read_at` budget across all attempts and sleeps;
+    /// `None` disables. (A `retry.deadline` is honored too; this field
+    /// takes precedence when both are set.)
+    pub deadline: Option<Duration>,
+    pub breaker: BreakerConfig,
+    pub hedge: HedgeConfig,
+}
+
+impl Default for ResilienceOptions {
+    fn default() -> Self {
+        Self {
+            retry: RetryPolicy::transient(4, Duration::from_millis(5))
+                .exponential()
+                .with_jitter(0x5EED),
+            deadline: None,
+            breaker: BreakerConfig::default(),
+            hedge: HedgeConfig::default(),
+        }
+    }
+}
+
+/// [`ReadableStorage`] wrapper adding retries, deadlines, a circuit
+/// breaker, and hedged reads around any backend. See the module docs
+/// for the semantics and `docs/STORAGE.md` for the normative contract.
+pub struct ResilientStorage {
+    inner: Arc<dyn ReadableStorage>,
+    opts: ResilienceOptions,
+    breaker: Arc<Breaker>,
+    latencies: Mutex<LatencyRing>,
+}
+
+impl ResilientStorage {
+    /// Wrap `inner` with a private breaker keyed by its description.
+    pub fn new(inner: Arc<dyn ReadableStorage>, opts: ResilienceOptions) -> Self {
+        let endpoint = inner.describe();
+        let breaker = Arc::new(Breaker::new(&endpoint, opts.breaker));
+        Self::with_breaker(inner, opts, breaker)
+    }
+
+    /// Wrap `inner` sharing an existing per-endpoint `breaker` (every
+    /// store on one endpoint trips and recovers together).
+    pub fn with_breaker(
+        inner: Arc<dyn ReadableStorage>,
+        opts: ResilienceOptions,
+        breaker: Arc<Breaker>,
+    ) -> Self {
+        Self {
+            inner,
+            opts,
+            breaker,
+            latencies: Mutex::new(LatencyRing::new()),
+        }
+    }
+
+    /// The shared circuit breaker.
+    pub fn breaker(&self) -> &Arc<Breaker> {
+        &self.breaker
+    }
+
+    fn hedge_trigger(&self) -> Option<Duration> {
+        let cfg = self.opts.hedge;
+        if !cfg.enabled {
+            return None;
+        }
+        if let Some(after) = cfg.after {
+            return Some(after);
+        }
+        lock(&self.latencies)
+            .percentile(cfg.percentile, cfg.min_samples)
+            .map(|d| d.max(cfg.floor))
+    }
+
+    /// One (possibly hedged) attempt. First success wins; the loser's
+    /// result is discarded when it lands (its worker finds the channel
+    /// closed) and only counted.
+    fn attempt(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        let Some(trigger) = self.hedge_trigger() else {
+            return self.inner.read_at(offset, buf);
+        };
+        let metrics = remote_metrics();
+        let (tx, rx) = mpsc::channel::<(u8, io::Result<Vec<u8>>)>();
+        if !spawn_read(&self.inner, offset, buf.len(), 0, tx.clone()) {
+            drop(tx);
+            return self.inner.read_at(offset, buf);
+        }
+        let winner = match rx.recv_timeout(trigger) {
+            Ok(first) => {
+                drop(tx);
+                first
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                metrics.hedges.incr();
+                let hedged = spawn_read(&self.inner, offset, buf.len(), 1, tx.clone());
+                drop(tx);
+                let first = rx
+                    .recv()
+                    .map_err(|_| io::Error::other("hedged read workers disappeared"))?;
+                match (hedged, first) {
+                    // The first finisher failed but the race is still
+                    // on: the straggler may yet succeed.
+                    (true, (id, Err(e))) => match rx.recv() {
+                        Ok((id2, Ok(bytes))) => (id2, Ok(bytes)),
+                        _ => (id, Err(e)),
+                    },
+                    (_, first) => first,
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(io::Error::other("hedged read worker disappeared"))
+            }
+        };
+        match winner {
+            (id, Ok(bytes)) => {
+                if id == 1 {
+                    metrics.hedge_wins.incr();
+                }
+                let n = bytes.len().min(buf.len());
+                buf[..n].copy_from_slice(&bytes[..n]);
+                Ok(n)
+            }
+            (_, Err(e)) => Err(e),
+        }
+    }
+}
+
+/// Spawn one hedge worker reading into its own buffer; returns whether
+/// the spawn succeeded (callers fall back to inline reads when it
+/// doesn't).
+fn spawn_read(
+    inner: &Arc<dyn ReadableStorage>,
+    offset: u64,
+    len: usize,
+    id: u8,
+    tx: mpsc::Sender<(u8, io::Result<Vec<u8>>)>,
+) -> bool {
+    let inner = Arc::clone(inner);
+    std::thread::Builder::new()
+        .name("ffcz-hedge".to_string())
+        .spawn(move || {
+            let mut local = vec![0u8; len];
+            let res = inner.read_at(offset, &mut local).map(|n| {
+                local.truncate(n);
+                local
+            });
+            let _ = tx.send((id, res));
+        })
+        .is_ok()
+}
+
+impl ReadableStorage for ResilientStorage {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        let metrics = remote_metrics();
+        metrics.requests.incr();
+        let started = Instant::now();
+        let deadline = self.opts.deadline.or(self.opts.retry.deadline);
+        // The schedule handles attempts and backoff; the deadline is
+        // enforced here so it can surface as a typed error.
+        let mut policy = self.opts.retry;
+        policy.deadline = None;
+        let mut schedule = RetrySchedule::new(policy);
+        loop {
+            self.breaker.admit()?;
+            if let Some(budget) = deadline {
+                if started.elapsed() >= budget {
+                    metrics.deadline_exceeded.incr();
+                    return Err(io::Error::other(DeadlineExceeded {
+                        budget,
+                        elapsed: started.elapsed(),
+                    }));
+                }
+            }
+            let attempt_started = Instant::now();
+            match self.attempt(offset, buf) {
+                Ok(n) => {
+                    self.breaker.on_success();
+                    lock(&self.latencies).record(attempt_started.elapsed());
+                    return Ok(n);
+                }
+                Err(e) => {
+                    self.breaker.on_failure();
+                    match schedule.backoff_for(e.kind()) {
+                        Some(delay) => {
+                            if let Some(budget) = deadline {
+                                if started.elapsed() + delay >= budget {
+                                    metrics.deadline_exceeded.incr();
+                                    return Err(io::Error::other(DeadlineExceeded {
+                                        budget,
+                                        elapsed: started.elapsed(),
+                                    }));
+                                }
+                            }
+                            metrics.retries.incr();
+                            if !delay.is_zero() {
+                                std::thread::sleep(delay);
+                            }
+                        }
+                        None => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+
+    fn size(&self) -> io::Result<u64> {
+        self.inner.size()
+    }
+
+    fn describe(&self) -> String {
+        format!("resilient {}", self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::storage::{read_exact_at, FaultInjector, FaultPlan, MemStorage};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn mem(n: usize) -> MemStorage {
+        MemStorage::new((0..n).map(|i| (i % 251) as u8).collect())
+    }
+
+    /// Test double: fails every read while `broken`, optionally sleeping
+    /// per call according to a schedule.
+    struct Flaky {
+        inner: MemStorage,
+        broken: std::sync::atomic::AtomicBool,
+        calls: AtomicU64,
+        /// Sleep applied to calls whose 1-based index is in this list.
+        slow_calls: Vec<u64>,
+        slow_by: Duration,
+    }
+
+    impl Flaky {
+        fn new(n: usize) -> Self {
+            Self {
+                inner: mem(n),
+                broken: std::sync::atomic::AtomicBool::new(false),
+                calls: AtomicU64::new(0),
+                slow_calls: Vec::new(),
+                slow_by: Duration::ZERO,
+            }
+        }
+    }
+
+    impl ReadableStorage for Flaky {
+        fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+            let call = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+            if self.broken.load(Ordering::SeqCst) {
+                return Err(io::Error::new(
+                    io::ErrorKind::ConnectionRefused,
+                    "endpoint is down",
+                ));
+            }
+            if self.slow_calls.contains(&call) {
+                std::thread::sleep(self.slow_by);
+            }
+            self.inner.read_at(offset, buf)
+        }
+        fn size(&self) -> io::Result<u64> {
+            self.inner.size()
+        }
+        fn describe(&self) -> String {
+            "flaky://test".to_string()
+        }
+    }
+
+    fn no_hedge_opts() -> ResilienceOptions {
+        ResilienceOptions {
+            retry: RetryPolicy::transient(3, Duration::ZERO),
+            deadline: None,
+            breaker: BreakerConfig {
+                failure_threshold: 3,
+                cooldown: Duration::from_millis(40),
+            },
+            hedge: HedgeConfig::default(),
+        }
+    }
+
+    #[test]
+    fn passthrough_matches_inner_backend() {
+        let resilient = ResilientStorage::new(Arc::new(mem(4096)), ResilienceOptions::default());
+        let mut got = vec![0u8; 777];
+        read_exact_at(&resilient, 123, &mut got).unwrap();
+        let mut want = vec![0u8; 777];
+        read_exact_at(&mem(4096), 123, &mut want).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(resilient.size().unwrap(), 4096);
+    }
+
+    #[test]
+    fn transient_faults_heal_under_the_schedule() {
+        let inj = FaultInjector::new(
+            mem(1024),
+            FaultPlan {
+                transient_every: 2,
+                ..FaultPlan::none()
+            },
+        );
+        let resilient = ResilientStorage::new(
+            Arc::new(inj),
+            ResilienceOptions {
+                retry: RetryPolicy::transient(3, Duration::ZERO),
+                ..ResilienceOptions::default()
+            },
+        );
+        let mut buf = [0u8; 32];
+        for i in 0..10u64 {
+            read_exact_at(&resilient, i * 16, &mut buf).unwrap();
+        }
+    }
+
+    #[test]
+    fn breaker_opens_fails_fast_half_opens_and_recovers() {
+        let flaky = Arc::new(Flaky::new(512));
+        let resilient = ResilientStorage::new(
+            Arc::clone(&flaky) as Arc<dyn ReadableStorage>,
+            no_hedge_opts(),
+        );
+        assert_eq!(resilient.breaker().state_name(), "closed");
+
+        let mut buf = [0u8; 16];
+        flaky.broken.store(true, Ordering::SeqCst);
+        // Hard (non-transient) failures: no retries, each counts once.
+        for _ in 0..3 {
+            let err = resilient.read_at(0, &mut buf).unwrap_err();
+            assert!(breaker_open_of(&err).is_none());
+        }
+        assert_eq!(resilient.breaker().state_name(), "open");
+        let calls_when_open = flaky.calls.load(Ordering::SeqCst);
+
+        // While open: typed fail-fast, endpoint untouched.
+        let err = resilient.read_at(0, &mut buf).unwrap_err();
+        let open = breaker_open_of(&err).expect("expected a typed BreakerOpen");
+        assert_eq!(open.endpoint, "flaky://test");
+        assert_eq!(flaky.calls.load(Ordering::SeqCst), calls_when_open);
+
+        // Cooldown elapses; the endpoint recovers; a half-open probe
+        // succeeds and closes the breaker.
+        std::thread::sleep(Duration::from_millis(60));
+        flaky.broken.store(false, Ordering::SeqCst);
+        read_exact_at(&resilient, 0, &mut buf).unwrap();
+        assert_eq!(resilient.breaker().state_name(), "closed");
+    }
+
+    #[test]
+    fn failed_half_open_probe_reopens() {
+        let flaky = Arc::new(Flaky::new(512));
+        let resilient = ResilientStorage::new(
+            Arc::clone(&flaky) as Arc<dyn ReadableStorage>,
+            no_hedge_opts(),
+        );
+        let mut buf = [0u8; 16];
+        flaky.broken.store(true, Ordering::SeqCst);
+        for _ in 0..3 {
+            let _ = resilient.read_at(0, &mut buf);
+        }
+        assert_eq!(resilient.breaker().state_name(), "open");
+        std::thread::sleep(Duration::from_millis(60));
+        // Probe admitted, still failing: back to open.
+        let err = resilient.read_at(0, &mut buf).unwrap_err();
+        assert!(breaker_open_of(&err).is_none(), "probe must reach the endpoint");
+        assert_eq!(resilient.breaker().state_name(), "open");
+    }
+
+    #[test]
+    fn deadline_surfaces_as_a_typed_error() {
+        let inj = FaultInjector::new(
+            mem(512),
+            FaultPlan {
+                transient_every: 1, // every attempt faults
+                ..FaultPlan::none()
+            },
+        );
+        let resilient = ResilientStorage::new(
+            Arc::new(inj),
+            ResilienceOptions {
+                retry: RetryPolicy::transient(100, Duration::from_millis(20)),
+                deadline: Some(Duration::from_millis(50)),
+                breaker: BreakerConfig {
+                    failure_threshold: 0,
+                    cooldown: Duration::ZERO,
+                },
+                hedge: HedgeConfig::default(),
+            },
+        );
+        let mut buf = [0u8; 16];
+        let started = Instant::now();
+        let err = resilient.read_at(0, &mut buf).unwrap_err();
+        let deadline = deadline_exceeded_of(&err).expect("expected a typed DeadlineExceeded");
+        assert_eq!(deadline.budget, Duration::from_millis(50));
+        assert!(started.elapsed() < Duration::from_secs(2), "budget not enforced");
+    }
+
+    #[test]
+    fn hedge_fires_on_a_slow_primary_and_the_fast_hedge_wins() {
+        let flaky = Arc::new(Flaky {
+            inner: mem(1024),
+            broken: std::sync::atomic::AtomicBool::new(false),
+            calls: AtomicU64::new(0),
+            slow_calls: vec![1], // only the primary's first call stalls
+            slow_by: Duration::from_millis(300),
+        });
+        let resilient = ResilientStorage::new(
+            Arc::clone(&flaky) as Arc<dyn ReadableStorage>,
+            ResilienceOptions {
+                retry: RetryPolicy::none(),
+                deadline: None,
+                breaker: BreakerConfig {
+                    failure_threshold: 0,
+                    cooldown: Duration::ZERO,
+                },
+                hedge: HedgeConfig {
+                    enabled: true,
+                    after: Some(Duration::from_millis(25)),
+                    ..HedgeConfig::default()
+                },
+            },
+        );
+        let mut got = vec![0u8; 256];
+        let started = Instant::now();
+        read_exact_at(&resilient, 100, &mut got).unwrap();
+        assert!(
+            started.elapsed() < Duration::from_millis(250),
+            "hedge did not rescue the slow primary ({:?})",
+            started.elapsed()
+        );
+        let mut want = vec![0u8; 256];
+        read_exact_at(&mem(1024), 100, &mut want).unwrap();
+        assert_eq!(got, want);
+        assert!(flaky.calls.load(Ordering::SeqCst) >= 2, "no hedge was fired");
+    }
+
+    #[test]
+    fn disabled_hedging_never_spawns_a_second_read() {
+        let flaky = Arc::new(Flaky::new(1024));
+        let resilient = ResilientStorage::new(
+            Arc::clone(&flaky) as Arc<dyn ReadableStorage>,
+            ResilienceOptions::default(),
+        );
+        let mut buf = vec![0u8; 64];
+        for i in 0..8u64 {
+            resilient.read_at(i * 64, &mut buf).map(|_| ()).unwrap();
+        }
+        assert_eq!(flaky.calls.load(Ordering::SeqCst), 8);
+    }
+}

@@ -107,12 +107,39 @@ pub fn read_exact_at<S: ReadableStorage + ?Sized>(
 /// Retry/backoff policy for *transient* storage faults (interrupted
 /// syscalls, would-block, storage-side timeouts). Hard faults — permission
 /// errors, corruption, premature EOF — are never retried.
+///
+/// The default shape is **linear** backoff (sleep before retry `k` is
+/// `backoff × k`), which every existing caller keeps. Remote backends
+/// layer on three opt-ins:
+///
+/// * [`RetryPolicy::exponential`] — sleep before retry `k` becomes
+///   `backoff × 2^(k−1)` (capped, so the schedule cannot overflow);
+/// * [`RetryPolicy::with_jitter`] — "equal jitter" drawn from a seeded
+///   [`XorShift`] stream: half of each base delay is guaranteed, the
+///   other half is a deterministic draw, so a fixed seed replays the
+///   exact same sleep schedule on every run (the property the remote
+///   chaos tests pin);
+/// * [`RetryPolicy::with_deadline`] — an **absolute budget across all
+///   attempts** (not per attempt): once sleeping again would cross the
+///   budget, the last error surfaces instead.
+///
+/// The schedule itself is computed by [`RetrySchedule`], which every
+/// retry loop in the crate shares.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RetryPolicy {
     /// Total attempts (1 = no retry).
     pub max_attempts: u32,
-    /// Sleep before retry `k` is `backoff × k` (linear backoff).
+    /// Base delay: sleep before retry `k` is `backoff × k` (linear,
+    /// default) or `backoff × 2^(k−1)` (exponential).
     pub backoff: Duration,
+    /// Exponential instead of linear backoff growth.
+    pub exponential: bool,
+    /// Seed for deterministic "equal jitter" on each delay; `None`
+    /// (default) applies the base delay exactly.
+    pub jitter_seed: Option<u64>,
+    /// Total time budget across *all* attempts and sleeps. `None`
+    /// (default) means only `max_attempts` bounds the loop.
+    pub deadline: Option<Duration>,
 }
 
 impl RetryPolicy {
@@ -121,6 +148,9 @@ impl RetryPolicy {
         Self {
             max_attempts: 1,
             backoff: Duration::ZERO,
+            exponential: false,
+            jitter_seed: None,
+            deadline: None,
         }
     }
 
@@ -130,7 +160,31 @@ impl RetryPolicy {
         Self {
             max_attempts: max_attempts.max(1),
             backoff,
+            exponential: false,
+            jitter_seed: None,
+            deadline: None,
         }
+    }
+
+    /// Switch to exponential backoff growth (`backoff × 2^(k−1)`,
+    /// capped at `backoff × 2^16`).
+    pub fn exponential(mut self) -> Self {
+        self.exponential = true;
+        self
+    }
+
+    /// Apply deterministic "equal jitter" to every delay, drawn from a
+    /// [`XorShift`] stream seeded with `seed`.
+    pub fn with_jitter(mut self, seed: u64) -> Self {
+        self.jitter_seed = Some(seed);
+        self
+    }
+
+    /// Bound the total time spent across all attempts (an absolute
+    /// budget, not a per-attempt timeout).
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(budget);
+        self
     }
 
     /// Is `kind` a transient fault worth retrying?
@@ -148,29 +202,120 @@ impl Default for RetryPolicy {
     }
 }
 
+/// Cap on the exponential-backoff doubling exponent (delays stop growing
+/// at `backoff × 2^16`).
+const MAX_BACKOFF_SHIFT: u32 = 16;
+
+/// One retry loop's live schedule under a [`RetryPolicy`]: tracks the
+/// retry count, the seeded jitter stream, and the absolute deadline.
+/// Every retry loop in the crate ([`read_exact_at_retry`],
+/// [`write_all_at_retry`], the server client's reconnect path, the
+/// remote resilience layer) routes its sleeps through one of these, so
+/// backoff semantics cannot drift between call sites.
+pub struct RetrySchedule {
+    policy: RetryPolicy,
+    rng: XorShift,
+    started: std::time::Instant,
+    retries: u32,
+}
+
+impl RetrySchedule {
+    pub fn new(policy: RetryPolicy) -> Self {
+        Self {
+            rng: XorShift::new(policy.jitter_seed.unwrap_or(0)),
+            started: std::time::Instant::now(),
+            retries: 0,
+            policy,
+        }
+    }
+
+    /// Retries taken so far (0 until the first [`Self::backoff_for`]
+    /// grants one).
+    pub fn retries(&self) -> u32 {
+        self.retries
+    }
+
+    /// Time elapsed since the schedule was created (the deadline clock).
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Has the absolute deadline already passed?
+    pub fn deadline_exceeded(&self) -> bool {
+        self.policy
+            .deadline
+            .is_some_and(|budget| self.started.elapsed() >= budget)
+    }
+
+    /// The sleep before the next retry, advancing the retry count and
+    /// the jitter stream. Pure in everything but the rng state — a fixed
+    /// policy and seed produce the exact same sequence every run.
+    pub fn next_delay(&mut self) -> Duration {
+        self.retries += 1;
+        let k = self.retries;
+        let base = if self.policy.exponential {
+            let mult = 1u32 << (k - 1).min(MAX_BACKOFF_SHIFT);
+            self.policy.backoff.checked_mul(mult).unwrap_or(Duration::MAX)
+        } else {
+            self.policy.backoff.checked_mul(k).unwrap_or(Duration::MAX)
+        };
+        if self.policy.jitter_seed.is_none() || base.is_zero() {
+            return base;
+        }
+        // Equal jitter: half the base delay is guaranteed, the other
+        // half is a seeded deterministic draw.
+        let nanos = u64::try_from(base.as_nanos()).unwrap_or(u64::MAX);
+        let half = nanos / 2;
+        let span = nanos - half;
+        Duration::from_nanos(half + self.rng.next_u64() % (span + 1))
+    }
+
+    /// Decide the response to a fault of `kind`: `Some(sleep)` grants a
+    /// retry after sleeping (attempt budget and absolute deadline
+    /// permitting), `None` means the error must surface.
+    pub fn backoff_for(&mut self, kind: io::ErrorKind) -> Option<Duration> {
+        if !RetryPolicy::is_transient(kind) {
+            return None;
+        }
+        if self.retries + 1 >= self.policy.max_attempts {
+            return None;
+        }
+        let delay = self.next_delay();
+        if let Some(budget) = self.policy.deadline {
+            if self.started.elapsed() + delay >= budget {
+                // The grant is withdrawn: sleeping would cross the
+                // budget, so this does not count as a retry.
+                self.retries -= 1;
+                return None;
+            }
+        }
+        Some(delay)
+    }
+}
+
 /// [`read_exact_at`] under a [`RetryPolicy`]: transient faults are retried
-/// (with linear backoff) up to the attempt budget; the whole range is
-/// re-read from `offset` on each attempt. Returns the number of retries
-/// performed (0 on a clean first attempt) so callers can account them.
+/// (with the policy's backoff schedule) up to the attempt budget and
+/// absolute deadline; the whole range is re-read from `offset` on each
+/// attempt. Returns the number of retries performed (0 on a clean first
+/// attempt) so callers can account them.
 pub fn read_exact_at_retry<S: ReadableStorage + ?Sized>(
     storage: &S,
     offset: u64,
     buf: &mut [u8],
     policy: &RetryPolicy,
 ) -> io::Result<u32> {
-    let mut retries = 0u32;
+    let mut schedule = RetrySchedule::new(*policy);
     loop {
         match read_exact_at(storage, offset, buf) {
-            Ok(()) => return Ok(retries),
-            Err(e)
-                if RetryPolicy::is_transient(e.kind()) && retries + 1 < policy.max_attempts =>
-            {
-                retries += 1;
-                if !policy.backoff.is_zero() {
-                    std::thread::sleep(policy.backoff * retries);
+            Ok(()) => return Ok(schedule.retries()),
+            Err(e) => match schedule.backoff_for(e.kind()) {
+                Some(delay) => {
+                    if !delay.is_zero() {
+                        std::thread::sleep(delay);
+                    }
                 }
-            }
-            Err(e) => return Err(e),
+                None => return Err(e),
+            },
         }
     }
 }
@@ -253,29 +398,29 @@ pub fn write_all_at<W: WritableStorage + ?Sized>(
 }
 
 /// [`write_all_at`] under a [`RetryPolicy`]: transient faults are retried
-/// (with linear backoff) up to the attempt budget; the whole span is
-/// rewritten from `offset` on each attempt (positioned writes are
-/// idempotent, so a partial first attempt is simply overwritten). Returns
-/// the number of retries performed so callers can account them.
+/// (with the policy's backoff schedule) up to the attempt budget and
+/// absolute deadline; the whole span is rewritten from `offset` on each
+/// attempt (positioned writes are idempotent, so a partial first attempt
+/// is simply overwritten). Returns the number of retries performed so
+/// callers can account them.
 pub fn write_all_at_retry<W: WritableStorage + ?Sized>(
     storage: &mut W,
     offset: u64,
     buf: &[u8],
     policy: &RetryPolicy,
 ) -> io::Result<u32> {
-    let mut retries = 0u32;
+    let mut schedule = RetrySchedule::new(*policy);
     loop {
         match write_all_at(storage, offset, buf) {
-            Ok(()) => return Ok(retries),
-            Err(e)
-                if RetryPolicy::is_transient(e.kind()) && retries + 1 < policy.max_attempts =>
-            {
-                retries += 1;
-                if !policy.backoff.is_zero() {
-                    std::thread::sleep(policy.backoff * retries);
+            Ok(()) => return Ok(schedule.retries()),
+            Err(e) => match schedule.backoff_for(e.kind()) {
+                Some(delay) => {
+                    if !delay.is_zero() {
+                        std::thread::sleep(delay);
+                    }
                 }
-            }
-            Err(e) => return Err(e),
+                None => return Err(e),
+            },
         }
     }
 }
@@ -1044,6 +1189,94 @@ mod tests {
         assert_eq!(bytes_a, bytes_b);
         assert_eq!(counts_a, counts_b);
         assert!(counts_a.short_writes > 0 && counts_a.transients > 0);
+    }
+
+    #[test]
+    fn exponential_jitter_schedule_is_pinned_for_a_fixed_seed() {
+        // The exact sleep schedule is stable API for deterministic chaos
+        // replay: 10ms base, exponential growth, equal jitter, seed 42.
+        let policy = RetryPolicy::transient(8, Duration::from_millis(10))
+            .exponential()
+            .with_jitter(42);
+        let mut schedule = RetrySchedule::new(policy);
+        let got: Vec<u64> = (0..4).map(|_| schedule.next_delay().as_nanos() as u64).collect();
+        assert_eq!(got, vec![6_126_959, 14_307_125, 37_461_424, 78_917_564]);
+        // Equal jitter keeps every delay within [base/2, base].
+        for (k, &d) in got.iter().enumerate() {
+            let base = 10_000_000u64 << k;
+            assert!(d >= base / 2 && d <= base, "retry {}: {d} outside [{}, {base}]", k + 1, base / 2);
+        }
+    }
+
+    #[test]
+    fn linear_jitter_schedule_is_pinned_for_a_fixed_seed() {
+        let policy = RetryPolicy::transient(8, Duration::from_millis(4)).with_jitter(7);
+        let mut schedule = RetrySchedule::new(policy);
+        let got: Vec<u64> = (0..3).map(|_| schedule.next_delay().as_nanos() as u64).collect();
+        assert_eq!(got, vec![2_491_041, 7_209_889, 9_251_495]);
+    }
+
+    #[test]
+    fn unjittered_schedules_are_exact_and_grow_as_documented() {
+        let linear = RetryPolicy::transient(8, Duration::from_millis(3));
+        let mut schedule = RetrySchedule::new(linear);
+        for k in 1u32..=4 {
+            assert_eq!(schedule.next_delay(), Duration::from_millis(3) * k);
+        }
+        let expo = RetryPolicy::transient(8, Duration::from_millis(3)).exponential();
+        let mut schedule = RetrySchedule::new(expo);
+        for k in 1u32..=4 {
+            assert_eq!(schedule.next_delay(), Duration::from_millis(3) * (1 << (k - 1)));
+        }
+    }
+
+    #[test]
+    fn backoff_for_enforces_attempts_transience_and_deadline() {
+        // Attempt budget: 3 attempts = 2 retries.
+        let policy = RetryPolicy::transient(3, Duration::ZERO);
+        let mut schedule = RetrySchedule::new(policy);
+        assert!(schedule.backoff_for(io::ErrorKind::Interrupted).is_some());
+        assert!(schedule.backoff_for(io::ErrorKind::TimedOut).is_some());
+        assert!(schedule.backoff_for(io::ErrorKind::Interrupted).is_none());
+        assert_eq!(schedule.retries(), 2);
+
+        // Hard faults are never granted a retry.
+        let mut schedule = RetrySchedule::new(policy);
+        assert!(schedule.backoff_for(io::ErrorKind::PermissionDenied).is_none());
+        assert!(schedule.backoff_for(io::ErrorKind::UnexpectedEof).is_none());
+        assert_eq!(schedule.retries(), 0);
+
+        // A deadline of zero refuses the very first retry (sleeping
+        // would cross the budget), and the refusal is not counted.
+        let strict = RetryPolicy::transient(10, Duration::from_millis(5)).with_deadline(Duration::ZERO);
+        let mut schedule = RetrySchedule::new(strict);
+        assert!(schedule.deadline_exceeded());
+        assert!(schedule.backoff_for(io::ErrorKind::Interrupted).is_none());
+        assert_eq!(schedule.retries(), 0);
+    }
+
+    #[test]
+    fn retry_deadline_bounds_the_whole_loop() {
+        // Every op faults transiently; without the deadline the loop
+        // would take ~10 attempts. The absolute budget cuts it short and
+        // surfaces the transient error.
+        let inj = FaultInjector::new(
+            mem(256),
+            FaultPlan {
+                transient_every: 1,
+                ..FaultPlan::none()
+            },
+        );
+        let mut buf = [0u8; 16];
+        let policy = RetryPolicy::transient(10, Duration::from_millis(20))
+            .with_deadline(Duration::from_millis(30));
+        let started = std::time::Instant::now();
+        let err = read_exact_at_retry(&inj, 0, &mut buf, &policy).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "deadline did not bound the retry loop"
+        );
     }
 
     #[test]

@@ -26,7 +26,8 @@ use ffcz::fourier::{
     ndrplan_for, plan_for, rplan_for, set_plan_cache_budget, DEFAULT_PLAN_CACHE_BUDGET,
 };
 use ffcz::store::{
-    encode_store, extract_subarray, par_try_map_ordered_sink, Store, StoreWriteOptions,
+    encode_store, extract_subarray, par_try_map_ordered_sink, read_exact_at, FaultInjector,
+    FaultPlan, MemStorage, Store, StoreWriteOptions,
 };
 use ffcz::telemetry;
 use ffcz::util::XorShift;
@@ -304,6 +305,56 @@ fn server_read_region_consistent_under_concurrent_clients() {
     assert_eq!(reads, (CLIENTS * WINDOWS) as u64);
     assert_eq!(total, (CLIENTS * (WINDOWS + 2) + 1) as u64);
     assert_eq!(errors, 0, "no request may have errored under churn");
+}
+
+/// Injected latency must sleep *outside* the [`FaultInjector`]'s plan
+/// lock: concurrent readers each pay their own simulated storage delay,
+/// they do not queue behind one another's sleeps. With 6 readers and a
+/// 100 ms per-op latency, a sleep held under the lock would serialize to
+/// ≥ 600 ms of wall clock; overlapping sleeps finish in ~100 ms. The
+/// bound asserted here (450 ms) stays generous enough for the TSan run
+/// this suite feeds while being impossible to meet serialized — and the
+/// shared op counter/RNG stream must still account every op exactly.
+#[test]
+fn fault_injector_latency_overlaps_across_concurrent_readers() {
+    let _guard = stress_guard();
+    const READERS: usize = 6;
+    const LATENCY: Duration = Duration::from_millis(100);
+    let bytes: Vec<u8> = (0..4096).map(|i| (i % 251) as u8).collect();
+    let injector = FaultInjector::new(
+        MemStorage::new(bytes.clone()),
+        FaultPlan {
+            latency: LATENCY,
+            ..FaultPlan::none()
+        },
+    );
+    let handle = injector.handle();
+
+    let started = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..READERS {
+            let (injector, bytes) = (&injector, &bytes);
+            scope.spawn(move || {
+                let offset = t * 512;
+                let mut buf = vec![0u8; 512];
+                read_exact_at(injector, offset as u64, &mut buf).unwrap();
+                assert_eq!(&buf[..], &bytes[offset..offset + 512]);
+            });
+        }
+    });
+    let elapsed = started.elapsed();
+
+    assert!(
+        elapsed >= LATENCY,
+        "every reader must pay the injected latency (finished in {elapsed:?})"
+    );
+    assert!(
+        elapsed < LATENCY * 9 / 2,
+        "injected latency serialized readers: {READERS} concurrent reads \
+         of a {LATENCY:?} backend took {elapsed:?}"
+    );
+    // The shared op counter under the (briefly held) lock lost nothing.
+    assert_eq!(handle.counts().ops, READERS as u64);
 }
 
 /// Spans buffered on a worker thread must reach the collector when the

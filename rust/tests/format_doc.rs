@@ -125,6 +125,36 @@ fn doc_constants_match_the_implementation() {
         c.get("JOURNAL_MAGIC").map(String::as_bytes),
         Some(&ffcz::store::manifest::JOURNAL_MAGIC[..])
     );
+    // Lossless-frame codec bytes: documented, implemented, and the
+    // reserved real-libzstd byte is refused with the documented
+    // "rebuild with real zstd" direction (never decoded).
+    assert_eq!(
+        c["LOSSLESS_CODEC_RAW"].parse::<u8>().unwrap(),
+        ffcz::encoding::LOSSLESS_CODEC_RAW
+    );
+    assert_eq!(
+        c["LOSSLESS_CODEC_ZSTD"].parse::<u8>().unwrap(),
+        ffcz::encoding::LOSSLESS_CODEC_ZSTD
+    );
+    assert_eq!(
+        c["LOSSLESS_CODEC_LIBZSTD"].parse::<u8>().unwrap(),
+        ffcz::encoding::LOSSLESS_CODEC_LIBZSTD
+    );
+    let payload = b"spectrum-preserving".repeat(64);
+    let frame = ffcz::encoding::lossless_compress(&payload);
+    assert!(
+        frame[0] == ffcz::encoding::LOSSLESS_CODEC_RAW
+            || frame[0] == ffcz::encoding::LOSSLESS_CODEC_ZSTD,
+        "writers emit only the documented raw/zstd codec bytes"
+    );
+    assert_eq!(ffcz::encoding::lossless_decompress(&frame).unwrap(), payload);
+    let mut libzstd_frame = frame.clone();
+    libzstd_frame[0] = ffcz::encoding::LOSSLESS_CODEC_LIBZSTD;
+    let err = ffcz::encoding::lossless_decompress(&libzstd_frame)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("rebuild with real zstd"), "got: {err}");
+
     // The documented CRC-32 parameters produce the documented check value
     // — and both agree with the implementation.
     let check = u32::from_str_radix(c["CRC32_CHECK"].trim_start_matches("0x"), 16).unwrap();

@@ -1,0 +1,676 @@
+//! Chaos tests for the remote HTTP-range backend and its resilience
+//! layer, plus the degraded-mode archive server.
+//!
+//! The fixture here is a deliberately hostile HTTP range server: on a
+//! deterministic, request-counter-driven schedule it injects slow
+//! headers, truncated bodies, `429`/`503` bursts, connection resets, and
+//! wrong-length ranges. Because the schedule is a pure function of the
+//! global request index and every test drives reads sequentially, each
+//! run is exactly replayable — the tests assert bit-identical bytes
+//! against in-memory ground truth *and* exact deltas on the
+//! `store.remote.*` counters (reruns of the same schedule must produce
+//! the same deltas).
+//!
+//! Global telemetry counters are process-wide, so every test in this
+//! binary serializes through [`guard`].
+//!
+//! `FFCZ_REMOTE_SWEEP=quick` shrinks the sweep for CI smoke runs.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use ffcz::codec::CodecChainSpec;
+use ffcz::data::synth::grf::GrfBuilder;
+use ffcz::server::{protocol, status_of, ArchiveServer, Client, ServeOptions};
+use ffcz::store::{
+    breaker_open_of, encode_store, extract_subarray, read_exact_at, BreakerConfig, HedgeConfig,
+    HttpRangeServer, HttpStorage, ResilienceOptions, ResilientStorage, RetryPolicy,
+    StoreWriteOptions,
+};
+use ffcz::telemetry;
+
+/// Serialize tests that assert on process-global telemetry counters.
+fn guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn counter(name: &str) -> u64 {
+    telemetry::counter(name).get()
+}
+
+/// Number of sweep reads; `FFCZ_REMOTE_SWEEP=quick` is the CI smoke
+/// setting.
+fn sweep_reads() -> usize {
+    match std::env::var("FFCZ_REMOTE_SWEEP").as_deref() {
+        Ok("quick") => 36,
+        _ => 180,
+    }
+}
+
+fn fixture_bytes(n: usize) -> Vec<u8> {
+    (0..n).map(|i| ((i * 131 + 17) % 251) as u8).collect()
+}
+
+// ---------------------------------------------------- hostile fixture --
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    /// Serve correctly.
+    None,
+    /// Serve correctly, but only after a long pause before the headers.
+    SlowHeaders,
+    /// Correct headers, half the body, then close the connection.
+    Truncate,
+    /// Close the connection before writing anything.
+    Reset,
+    Http429,
+    Http503,
+    /// `Content-Length` seven bytes longer than the requested range.
+    WrongLength,
+}
+
+impl Fault {
+    /// Whether the client experiences this as a failed request (slow
+    /// headers succeed — they just hurt).
+    fn is_failure(self) -> bool {
+        !matches!(self, Fault::None | Fault::SlowHeaders)
+    }
+}
+
+/// Deterministic fault schedule: every `period`-th request (1-based
+/// global request index) faults, cycling through `kinds` in order.
+/// `period >= 2` guarantees faults are never adjacent, so a retry
+/// budget of one always heals.
+#[derive(Clone)]
+struct FaultSchedule {
+    period: u64,
+    kinds: Vec<Fault>,
+}
+
+impl FaultSchedule {
+    fn fault_for(&self, req: u64) -> Fault {
+        if self.period == 0 || req % self.period != 0 {
+            return Fault::None;
+        }
+        self.kinds[((req / self.period - 1) as usize) % self.kinds.len()]
+    }
+}
+
+/// Pause injected by [`Fault::SlowHeaders`].
+const SLOW_HEADERS: Duration = Duration::from_millis(300);
+
+/// An HTTP/1.1 range server that misbehaves on a deterministic
+/// schedule. Protocol-correct otherwise: single-range `GET`s answer
+/// `206` with `Content-Range`/`Content-Length`.
+struct FlakyServer {
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    /// Global request counter — the schedule's clock.
+    requests: Arc<AtomicU64>,
+}
+
+impl FlakyServer {
+    fn start(bytes: Vec<u8>, schedule: FaultSchedule) -> (Self, String) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+        let bytes = Arc::new(bytes);
+        let (loop_stop, loop_reqs) = (Arc::clone(&stop), Arc::clone(&requests));
+        let accept = std::thread::spawn(move || {
+            let mut handlers = Vec::new();
+            while !loop_stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((conn, _)) => {
+                        let (b, s, st, rq) = (
+                            Arc::clone(&bytes),
+                            schedule.clone(),
+                            Arc::clone(&loop_stop),
+                            Arc::clone(&loop_reqs),
+                        );
+                        handlers.push(std::thread::spawn(move || {
+                            serve_flaky_connection(conn, &b, &s, &st, &rq)
+                        }));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            }
+            for h in handlers {
+                let _ = h.join();
+            }
+        });
+        let url = format!("http://{addr}/data");
+        (
+            Self {
+                stop,
+                accept: Some(accept),
+                requests,
+            },
+            url,
+        )
+    }
+
+    fn request_count(&self) -> u64 {
+        self.requests.load(Ordering::SeqCst)
+    }
+
+    fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FlakyServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Read one request head; `Ok(None)` = idle timeout, `Err` = peer gone.
+fn read_request_head(conn: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        match conn.read(&mut byte) {
+            Ok(0) => return Err(std::io::ErrorKind::UnexpectedEof.into()),
+            Ok(_) => head.push(byte[0]),
+            Err(e)
+                if head.is_empty()
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Ok(None)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(head))
+}
+
+/// Extract `Range: bytes=F-L` from a request head.
+fn parse_range(head: &[u8]) -> Option<(u64, u64)> {
+    let text = std::str::from_utf8(head).ok()?;
+    for line in text.split("\r\n") {
+        let (name, value) = match line.split_once(':') {
+            Some(pair) => pair,
+            None => continue,
+        };
+        if name.eq_ignore_ascii_case("range") {
+            let spec = value.trim().strip_prefix("bytes=")?;
+            let (first, last) = spec.split_once('-')?;
+            return Some((first.trim().parse().ok()?, last.trim().parse().ok()?));
+        }
+    }
+    None
+}
+
+fn serve_flaky_connection(
+    mut conn: TcpStream,
+    bytes: &[u8],
+    schedule: &FaultSchedule,
+    stop: &AtomicBool,
+    requests: &AtomicU64,
+) {
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(20)));
+    let _ = conn.set_nodelay(true);
+    let total = bytes.len() as u64;
+    while !stop.load(Ordering::SeqCst) {
+        let head = match read_request_head(&mut conn) {
+            Ok(Some(head)) => head,
+            Ok(None) => continue,
+            Err(_) => return,
+        };
+        let Some((first, last)) = parse_range(&head) else {
+            return;
+        };
+        let req = requests.fetch_add(1, Ordering::SeqCst) + 1;
+        let fault = schedule.fault_for(req);
+        if fault == Fault::Reset {
+            return;
+        }
+        if fault == Fault::SlowHeaders {
+            std::thread::sleep(SLOW_HEADERS);
+        }
+        let status_only = |conn: &mut TcpStream, line: &str| {
+            conn.write_all(format!("HTTP/1.1 {line}\r\nContent-Length: 0\r\n\r\n").as_bytes())
+        };
+        match fault {
+            Fault::Http429 => {
+                if status_only(&mut conn, "429 Too Many Requests").is_err() {
+                    return;
+                }
+                continue;
+            }
+            Fault::Http503 => {
+                if status_only(&mut conn, "503 Service Unavailable").is_err() {
+                    return;
+                }
+                continue;
+            }
+            _ => {}
+        }
+        if first >= total {
+            let head = format!(
+                "HTTP/1.1 416 Range Not Satisfiable\r\nContent-Range: bytes */{total}\r\nContent-Length: 0\r\n\r\n"
+            );
+            if conn.write_all(head.as_bytes()).is_err() {
+                return;
+            }
+            continue;
+        }
+        let last = last.min(total - 1);
+        let body = &bytes[first as usize..=last as usize];
+        let announced = match fault {
+            Fault::WrongLength => body.len() as u64 + 7,
+            _ => body.len() as u64,
+        };
+        let head = format!(
+            "HTTP/1.1 206 Partial Content\r\nContent-Range: bytes {first}-{last}/{total}\r\nContent-Length: {announced}\r\n\r\n"
+        );
+        if conn.write_all(head.as_bytes()).is_err() {
+            return;
+        }
+        match fault {
+            Fault::WrongLength => continue, // client bails on the header
+            Fault::Truncate => {
+                let _ = conn.write_all(&body[..body.len() / 2]);
+                return; // close mid-body
+            }
+            _ => {
+                if conn.write_all(body).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- sweeps --
+
+fn xorshift(mut x: u64) -> u64 {
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    x
+}
+
+/// Deterministic (offset, length) list for the sweep.
+fn sweep_plan(object_len: usize, reads: usize, seed: u64) -> Vec<(u64, usize)> {
+    let mut state = seed;
+    (0..reads)
+        .map(|_| {
+            state = xorshift(state);
+            let len = 1 + (state % 1500) as usize;
+            state = xorshift(state);
+            let offset = state % (object_len - len) as u64;
+            (offset, len)
+        })
+        .collect()
+}
+
+/// Requests the client will issue for `plan` under `schedule`, starting
+/// after `consumed` requests: (failed requests == expected retries,
+/// final request counter). Mirrors the client exactly: each failed
+/// request is retried once more until a request succeeds; faults are
+/// never adjacent (period >= 2), so one retry always heals.
+fn simulate(schedule: &FaultSchedule, consumed: u64, reads: usize) -> (u64, u64) {
+    let mut req = consumed;
+    let mut failures = 0u64;
+    for _ in 0..reads {
+        loop {
+            req += 1;
+            if schedule.fault_for(req).is_failure() {
+                failures += 1;
+            } else {
+                break;
+            }
+        }
+    }
+    (failures, req)
+}
+
+/// One full sweep against a fresh hostile server: returns every read's
+/// bytes, the `store.remote.{requests,retries,hedges}` deltas, and the
+/// server-observed request count.
+fn run_sweep(
+    bytes: &[u8],
+    schedule: &FaultSchedule,
+    plan: &[(u64, usize)],
+) -> (Vec<Vec<u8>>, [u64; 3], u64) {
+    let (server, url) = FlakyServer::start(bytes.to_vec(), schedule.clone());
+    let http = HttpStorage::open_with_timeout(&url, Duration::from_secs(10)).unwrap();
+    let resilient = ResilientStorage::new(
+        Arc::new(http),
+        ResilienceOptions {
+            retry: RetryPolicy::transient(4, Duration::from_micros(200)),
+            deadline: None,
+            breaker: BreakerConfig {
+                failure_threshold: 0, // breaker exercised by its own test
+                cooldown: Duration::ZERO,
+            },
+            hedge: HedgeConfig::default(),
+        },
+    );
+    let before = [
+        counter("store.remote.requests"),
+        counter("store.remote.retries"),
+        counter("store.remote.hedges"),
+    ];
+    let mut outputs = Vec::with_capacity(plan.len());
+    for &(offset, len) in plan {
+        let mut buf = vec![0u8; len];
+        read_exact_at(&resilient, offset, &mut buf).unwrap();
+        outputs.push(buf);
+    }
+    let deltas = [
+        counter("store.remote.requests") - before[0],
+        counter("store.remote.retries") - before[1],
+        counter("store.remote.hedges") - before[2],
+    ];
+    let served = server.request_count();
+    server.shutdown();
+    (outputs, deltas, served)
+}
+
+/// The tentpole chaos sweep: every injected fault class on a
+/// deterministic schedule; every read must come back bit-identical to
+/// ground truth; the retry counter delta must match the schedule
+/// *exactly*; and a replay of the same schedule must reproduce both.
+#[test]
+fn chaos_sweep_is_bit_exact_with_exact_and_replayable_counter_deltas() {
+    let _guard = guard();
+    let bytes = fixture_bytes(32 * 1024);
+    let schedule = FaultSchedule {
+        period: 3,
+        kinds: vec![
+            Fault::Http503,
+            Fault::Truncate,
+            Fault::Reset,
+            Fault::WrongLength,
+            Fault::Http429,
+            Fault::SlowHeaders,
+        ],
+    };
+    let plan = sweep_plan(bytes.len(), sweep_reads(), 0x00C0FFEE);
+    // Request #1 is the size probe `HttpStorage::open` issues (the
+    // schedule leaves it clean; `open` does not retry).
+    let (expected_retries, expected_requests) = simulate(&schedule, 1, plan.len());
+
+    let (outputs, deltas, served) = run_sweep(&bytes, &schedule, &plan);
+    for (i, &(offset, len)) in plan.iter().enumerate() {
+        assert_eq!(
+            outputs[i],
+            &bytes[offset as usize..offset as usize + len],
+            "read #{i} (offset {offset}, len {len}) diverged from ground truth"
+        );
+    }
+    assert_eq!(
+        deltas[0],
+        plan.len() as u64,
+        "store.remote.requests must count one per read_at"
+    );
+    assert_eq!(
+        deltas[1], expected_retries,
+        "store.remote.retries must match the fault schedule exactly"
+    );
+    assert_eq!(deltas[2], 0, "hedging is disabled in this sweep");
+    assert_eq!(
+        served, expected_requests,
+        "server-observed request count must match the simulation"
+    );
+
+    // Deterministic replay: a fresh server, the same schedule and plan.
+    let (outputs2, deltas2, served2) = run_sweep(&bytes, &schedule, &plan);
+    assert_eq!(outputs, outputs2, "replay produced different bytes");
+    assert_eq!(deltas, deltas2, "replay produced different counter deltas");
+    assert_eq!(served, served2, "replay produced different request counts");
+}
+
+/// Endpoint outage: the breaker trips after exactly `failure_threshold`
+/// consecutive failures, fails fast with a typed [`BreakerOpen`] while
+/// open, then half-opens and recovers once the endpoint is back on the
+/// same address — with exact transition counter deltas.
+#[test]
+fn breaker_trips_fails_fast_and_recovers_when_the_endpoint_returns() {
+    let _guard = guard();
+    let bytes = fixture_bytes(8 * 1024);
+    let (server, url) = HttpRangeServer::single(bytes.clone()).unwrap();
+    let addr = url
+        .strip_prefix("http://")
+        .and_then(|rest| rest.split('/').next())
+        .unwrap()
+        .to_string();
+    let http = HttpStorage::open_with_timeout(&url, Duration::from_secs(10)).unwrap();
+    let resilient = ResilientStorage::new(
+        Arc::new(http),
+        ResilienceOptions {
+            retry: RetryPolicy::none(),
+            deadline: None,
+            breaker: BreakerConfig {
+                failure_threshold: 2,
+                cooldown: Duration::from_millis(100),
+            },
+            hedge: HedgeConfig::default(),
+        },
+    );
+    let mut buf = vec![0u8; 256];
+    read_exact_at(&resilient, 100, &mut buf).unwrap();
+    assert_eq!(&buf[..], &bytes[100..356]);
+
+    let before = [
+        counter("store.remote.breaker.opens"),
+        counter("store.remote.breaker.half_opens"),
+        counter("store.remote.breaker.closes"),
+        counter("store.remote.breaker.rejections"),
+        counter("store.remote.retries"),
+    ];
+    server.shutdown();
+    // Two consecutive failures (a stale pooled connection, then a
+    // refused dial) trip the threshold-2 breaker.
+    for _ in 0..2 {
+        let err = resilient.read_at(100, &mut buf).unwrap_err();
+        assert!(
+            breaker_open_of(&err).is_none(),
+            "pre-trip failures must come from the endpoint, not the breaker"
+        );
+    }
+    assert_eq!(resilient.breaker().state_name(), "open");
+
+    // While open: typed fail-fast, nothing on the wire.
+    let err = resilient.read_at(100, &mut buf).unwrap_err();
+    let open = breaker_open_of(&err).expect("expected a typed BreakerOpen");
+    assert_eq!(open.endpoint, format!("http://{addr}/data"));
+
+    // The endpoint comes back on the same address; after the cooldown a
+    // half-open probe succeeds, closes the breaker, and the read is
+    // bit-exact again.
+    let revived = HttpRangeServer::start_on(&addr, vec![("data".to_string(), bytes.clone())])
+        .expect("rebinding the endpoint's address");
+    std::thread::sleep(Duration::from_millis(150));
+    read_exact_at(&resilient, 100, &mut buf).unwrap();
+    assert_eq!(&buf[..], &bytes[100..356]);
+    assert_eq!(resilient.breaker().state_name(), "closed");
+
+    let deltas = [
+        counter("store.remote.breaker.opens") - before[0],
+        counter("store.remote.breaker.half_opens") - before[1],
+        counter("store.remote.breaker.closes") - before[2],
+        counter("store.remote.breaker.rejections") - before[3],
+        counter("store.remote.retries") - before[4],
+    ];
+    assert_eq!(
+        deltas,
+        [1, 1, 1, 1, 0],
+        "breaker transition counters [opens, half_opens, closes, rejections, retries]"
+    );
+    revived.shutdown();
+}
+
+/// A hedged read rescues a read whose primary request hits the
+/// slow-headers fault: the hedge fires after the fixed trigger, wins,
+/// and the counters record exactly one hedge and one hedge win.
+#[test]
+fn hedged_read_rescues_a_slow_primary_with_exact_counter_deltas() {
+    let _guard = guard();
+    let bytes = fixture_bytes(8 * 1024);
+    // Requests 2, 4, 6, … stall before their headers; request 1 is the
+    // clean size probe. The single sweep read's primary is request 2
+    // (slow) and its hedge is request 3 (fast).
+    let schedule = FaultSchedule {
+        period: 2,
+        kinds: vec![Fault::SlowHeaders],
+    };
+    let (server, url) = FlakyServer::start(bytes.clone(), schedule);
+    let http = HttpStorage::open_with_timeout(&url, Duration::from_secs(10)).unwrap();
+    let resilient = ResilientStorage::new(
+        Arc::new(http),
+        ResilienceOptions {
+            retry: RetryPolicy::none(),
+            deadline: None,
+            breaker: BreakerConfig {
+                failure_threshold: 0,
+                cooldown: Duration::ZERO,
+            },
+            hedge: HedgeConfig {
+                enabled: true,
+                after: Some(Duration::from_millis(30)),
+                ..HedgeConfig::default()
+            },
+        },
+    );
+    let before = [
+        counter("store.remote.hedges"),
+        counter("store.remote.hedge_wins"),
+        counter("store.remote.retries"),
+    ];
+    let mut buf = vec![0u8; 512];
+    let started = Instant::now();
+    read_exact_at(&resilient, 1000, &mut buf).unwrap();
+    assert!(
+        started.elapsed() < SLOW_HEADERS,
+        "hedge did not rescue the slow primary ({:?})",
+        started.elapsed()
+    );
+    assert_eq!(&buf[..], &bytes[1000..1512]);
+    let deltas = [
+        counter("store.remote.hedges") - before[0],
+        counter("store.remote.hedge_wins") - before[1],
+        counter("store.remote.retries") - before[2],
+    ];
+    assert_eq!(deltas, [1, 1, 0], "[hedges, hedge_wins, retries]");
+    server.shutdown();
+}
+
+// ----------------------------------------------- degraded-mode server --
+
+/// The acceptance scenario: `ffcz serve` on a remote root survives its
+/// endpoint dying mid-stream. Cached regions keep answering `ST_OK`
+/// bit-exact, uncached regions answer `ST_DEGRADED`, the connection and
+/// ping stay alive, and once the endpoint returns the shared breaker
+/// half-opens, recovers, and full reads are bit-exact again.
+#[test]
+fn serve_survives_a_remote_endpoint_kill_and_recovers() {
+    let _guard = guard();
+    let field = GrfBuilder::new(&[12, 10])
+        .spectral_index(1.8)
+        .lognormal(1.2)
+        .seed(31)
+        .build();
+    let opts = StoreWriteOptions::new(&[5, 4]).workers(1);
+    let (archive, _, _) = encode_store(&field, &CodecChainSpec::lossless(), &opts).unwrap();
+
+    let endpoint = HttpRangeServer::start(vec![("field.ffcz".to_string(), archive.clone())]).unwrap();
+    let endpoint_addr = endpoint
+        .root_url()
+        .strip_prefix("http://")
+        .unwrap()
+        .to_string();
+    let server = ArchiveServer::start(ServeOptions {
+        remote_root: Some(endpoint.root_url()),
+        degraded: true,
+        resilience: ResilienceOptions {
+            retry: RetryPolicy::none(),
+            deadline: None,
+            breaker: BreakerConfig {
+                failure_threshold: 2,
+                cooldown: Duration::from_millis(150),
+            },
+            hedge: HedgeConfig::default(),
+        },
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Warm the cache: the window covering exactly chunk (0, 0).
+    let warm = client.read_region("field", &[0, 0], &[5, 4]).unwrap();
+    let want_warm = extract_subarray(field.data(), field.shape(), &[0, 0], &[5, 4]);
+    assert_eq!(warm.data(), &want_warm[..]);
+
+    let before = [
+        counter("store.remote.breaker.opens"),
+        counter("store.remote.breaker.half_opens"),
+        counter("store.remote.breaker.closes"),
+        counter("server.requests.degraded"),
+    ];
+
+    // Kill the endpoint mid-stream.
+    endpoint.shutdown();
+
+    // Fully cached region: still ST_OK, still bit-exact.
+    let cached = client.read_region("field", &[0, 0], &[5, 4]).unwrap();
+    assert_eq!(cached.data(), &want_warm[..]);
+
+    // A region needing uncached chunks: a typed ST_DEGRADED error frame.
+    let err = client
+        .read_region("field", &[0, 0], &[12, 10])
+        .expect_err("uncached region must degrade while the endpoint is down");
+    assert_eq!(
+        status_of(&err),
+        Some(protocol::ST_DEGRADED),
+        "expected ST_DEGRADED, got: {err:#}"
+    );
+
+    // The server itself stays healthy.
+    client.ping().unwrap();
+
+    // Endpoint returns on the same address; after the breaker cooldown
+    // the half-open probe succeeds and full reads are bit-exact again.
+    let revived =
+        HttpRangeServer::start_on(&endpoint_addr, vec![("field.ffcz".to_string(), archive)])
+            .expect("rebinding the endpoint's address");
+    std::thread::sleep(Duration::from_millis(300));
+    let full = client.read_region("field", &[0, 0], &[12, 10]).unwrap();
+    assert_eq!(full.data(), field.data(), "post-recovery read diverged");
+
+    let deltas = [
+        counter("store.remote.breaker.opens") - before[0],
+        counter("store.remote.breaker.half_opens") - before[1],
+        counter("store.remote.breaker.closes") - before[2],
+        counter("server.requests.degraded") - before[3],
+    ];
+    assert_eq!(
+        deltas,
+        [1, 1, 1, 1],
+        "[breaker.opens, breaker.half_opens, breaker.closes, server degraded answers]"
+    );
+
+    client.shutdown_server().unwrap();
+    server.join();
+    revived.shutdown();
+}

@@ -57,7 +57,7 @@ fn doc_constants() -> HashMap<String, u64> {
 #[test]
 fn documented_constants_match_the_implementation() {
     let doc = doc_constants();
-    let code: [(&str, u64); 16] = [
+    let code: [(&str, u64); 17] = [
         ("OP_PING", protocol::OP_PING as u64),
         ("OP_STAT", protocol::OP_STAT as u64),
         ("OP_READ_REGION", protocol::OP_READ_REGION as u64),
@@ -70,6 +70,7 @@ fn documented_constants_match_the_implementation() {
         ("ST_INTERNAL", protocol::ST_INTERNAL as u64),
         ("ST_TOO_LARGE", protocol::ST_TOO_LARGE as u64),
         ("ST_BUSY", protocol::ST_BUSY as u64),
+        ("ST_DEGRADED", protocol::ST_DEGRADED as u64),
         ("PREC_F64", protocol::PREC_F64 as u64),
         ("PREC_F32", protocol::PREC_F32 as u64),
         ("MAX_REQUEST_FRAME", protocol::MAX_REQUEST_FRAME as u64),

@@ -24,6 +24,7 @@
 //! Set `FFCZ_CRASH_SWEEP=quick` to sample every third crash point (the
 //! CI chaos step does); the default sweeps all of them.
 
+use std::collections::BTreeSet;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -31,9 +32,11 @@ use ffcz::codec::CodecChainSpec;
 use ffcz::correction::FfczConfig;
 use ffcz::data::synth::grf::GrfBuilder;
 use ffcz::data::Field;
+use ffcz::encoding::varint;
+use ffcz::store::manifest::JOURNAL_MAGIC;
 use ffcz::store::{
-    resume_store_write, staging_paths, write_store, write_store_faulted, FaultPlan, RetryPolicy,
-    Store, StoreWriteOptions,
+    resume_store_write, staging_paths, write_store, write_store_faulted, FaultPlan, MemStorage,
+    RetryPolicy, Store, StoreWriteOptions,
 };
 
 fn grf(shape: &[usize], seed: u64) -> Field {
@@ -362,5 +365,227 @@ fn transient_write_faults_heal_under_retry_policy() {
     assert!(!fresh.exists());
     remove_with_staging(&fresh);
     remove_with_staging(&clean_path);
+    remove_with_staging(&path);
+}
+
+/// Stage an interrupted write that completed every chunk payload (the
+/// simulated ENOSPC lands on the manifest write), leaving `<path>.tmp` +
+/// `<path>.tmp.jrn` with one journal record per chunk. Returns the
+/// uninterrupted reference bytes.
+fn stage_full_payload_crash(
+    field: &Field,
+    chain: &CodecChainSpec,
+    opts: &StoreWriteOptions,
+    path: &PathBuf,
+    clean_path: &PathBuf,
+) -> Vec<u8> {
+    remove_with_staging(clean_path);
+    write_store(field, chain, opts, clean_path).unwrap();
+    let want = std::fs::read(clean_path).unwrap();
+
+    remove_with_staging(path);
+    let (_, probe) = write_store_faulted(field, chain, opts, path, FaultPlan::none()).unwrap();
+    remove_with_staging(path);
+    // Ops: head magic, one per chunk payload, manifest, trailer.
+    let plan = FaultPlan {
+        fail_ops: vec![probe.ops - 1],
+        ..FaultPlan::none()
+    };
+    write_store_faulted(field, chain, opts, path, plan).unwrap_err();
+    want
+}
+
+/// Byte spans of the journal's records (past the head magic), walked
+/// through the documented framing: LEB128 body length, body, CRC-32.
+fn journal_record_spans(journal: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut pos = JOURNAL_MAGIC.len();
+    while pos < journal.len() {
+        let start = pos;
+        let body_len = varint::read(journal, &mut pos).expect("record length varint") as usize;
+        pos += body_len + 4;
+        assert!(pos <= journal.len(), "journal record overruns the file");
+        spans.push((start, pos));
+    }
+    spans
+}
+
+/// An *interior* corrupted journal record — damage past the prefix, with
+/// intact records after it — must stop the salvaged prefix exactly at the
+/// damaged record. Salvage never resynchronises on later records: the
+/// contiguous-prefix rule is what keeps a resumed write bit-identical.
+#[test]
+fn salvage_stops_at_an_interior_corrupted_journal_record() {
+    let (field, chain, opts) = fixture();
+    let path = temp_path("interior");
+    let clean_path = temp_path("interior_ref");
+    let want = stage_full_payload_crash(&field, &chain, &opts, &path, &clean_path);
+
+    let (tmp, jrn) = staging_paths(&path);
+    let container = std::fs::read(&tmp).unwrap();
+    let journal = std::fs::read(&jrn).unwrap();
+    let spans = journal_record_spans(&journal);
+    assert!(spans.len() >= 4, "fixture must journal several chunks");
+
+    // Control: the intact journal salvages every chunk.
+    let s = Store::salvage(&MemStorage::new(container.clone()), &journal).unwrap();
+    assert_eq!(s.chunks(), spans.len());
+
+    // Flip one byte in the middle of record 2. Records 0 and 1 survive;
+    // records 3.. are intact but unreachable past the damage.
+    let mut corrupt = journal.clone();
+    let (start, end) = spans[2];
+    corrupt[(start + end) / 2] ^= 0x01;
+    let s = Store::salvage(&MemStorage::new(container), &corrupt).unwrap();
+    assert_eq!(
+        s.chunks(),
+        2,
+        "salvage must stop at the damaged interior record, not resync"
+    );
+
+    // End to end: resume over the damaged journal re-encodes everything
+    // past the prefix and still commits bit-identically.
+    std::fs::write(&jrn, &corrupt).unwrap();
+    let report = resume_store_write(&field, &chain, &opts, &path).unwrap();
+    assert_eq!(report.salvaged_chunks, 2);
+    assert_eq!(report.reencoded_chunks, spans.len() - 2);
+    assert_eq!(std::fs::read(&path).unwrap(), want);
+    remove_with_staging(&clean_path);
+    remove_with_staging(&path);
+}
+
+/// A duplicated chunk record — byte-identical, framing CRC valid — must
+/// break the prefix at the duplicate: its index does not continue the
+/// contiguous run, and accepting it would double-count a payload.
+#[test]
+fn salvage_rejects_duplicate_chunk_records() {
+    let (field, chain, opts) = fixture();
+    let path = temp_path("duprec");
+    let clean_path = temp_path("duprec_ref");
+    let want = stage_full_payload_crash(&field, &chain, &opts, &path, &clean_path);
+
+    let (tmp, jrn) = staging_paths(&path);
+    let container = std::fs::read(&tmp).unwrap();
+    let journal = std::fs::read(&jrn).unwrap();
+    let spans = journal_record_spans(&journal);
+    assert!(spans.len() >= 3, "fixture must journal several chunks");
+
+    // Replay record 1 between records 1 and 2 — the shape a re-appended
+    // or doubly-flushed journal tail would take.
+    let (r1_start, r1_end) = spans[1];
+    let mut duped = journal[..r1_end].to_vec();
+    duped.extend_from_slice(&journal[r1_start..r1_end]);
+    duped.extend_from_slice(&journal[r1_end..]);
+
+    let s = Store::salvage(&MemStorage::new(container), &duped).unwrap();
+    assert_eq!(
+        s.chunks(),
+        2,
+        "a duplicate record must end the salvageable prefix"
+    );
+
+    // Resume truncates the journal at the end of the kept prefix (the
+    // duplicate goes with it) and still commits bit-identically.
+    std::fs::write(&jrn, &duped).unwrap();
+    let report = resume_store_write(&field, &chain, &opts, &path).unwrap();
+    assert_eq!(report.salvaged_chunks, 2);
+    assert_eq!(report.reencoded_chunks, spans.len() - 2);
+    assert_eq!(std::fs::read(&path).unwrap(), want);
+    remove_with_staging(&clean_path);
+    remove_with_staging(&path);
+}
+
+/// Collect the JSON object keys `ffcz archive verify --json` emits:
+/// top-level keys (object depth 1) and per-failure row keys (depth 3,
+/// inside the `failures` array). A tiny scanner, not a JSON parser —
+/// enough to pin the schema without trusting the producer's formatting.
+fn json_keys(json: &str) -> (BTreeSet<String>, BTreeSet<String>) {
+    let chars: Vec<char> = json.chars().collect();
+    let (mut top, mut row) = (BTreeSet::new(), BTreeSet::new());
+    let mut depth = 0usize;
+    let mut i = 0;
+    while i < chars.len() {
+        match chars[i] {
+            '{' | '[' => depth += 1,
+            '}' | ']' => depth -= 1,
+            '"' => {
+                let start = i + 1;
+                let mut j = start;
+                while chars[j] != '"' {
+                    j += if chars[j] == '\\' { 2 } else { 1 };
+                }
+                let mut k = j + 1;
+                while k < chars.len() && chars[k].is_whitespace() {
+                    k += 1;
+                }
+                if k < chars.len() && chars[k] == ':' {
+                    let key: String = chars[start..j].iter().collect();
+                    match depth {
+                        1 => {
+                            top.insert(key);
+                        }
+                        3 => {
+                            row.insert(key);
+                        }
+                        _ => {}
+                    }
+                }
+                i = j;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    (top, row)
+}
+
+/// The `archive verify --json` schema is normative in `docs/STORAGE.md`:
+/// the emitted keys must match the documented table exactly, in both
+/// directions — a key added to the code without a doc row (or vice
+/// versa) fails here.
+#[test]
+fn verify_json_schema_matches_docs_storage_md() {
+    let doc_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/STORAGE.md");
+    let doc = std::fs::read_to_string(doc_path).expect("docs/STORAGE.md is part of the repository");
+    let (mut doc_top, mut doc_row) = (BTreeSet::new(), BTreeSet::new());
+    // Only the schema section's table rows count — the document has other
+    // tables (backend matrix, metric glossary) with backticked cells.
+    let section = doc
+        .lines()
+        .skip_while(|l| !(l.starts_with('#') && l.contains("verify --json")))
+        .skip(1)
+        .take_while(|l| !l.starts_with('#'));
+    for line in section {
+        let Some(rest) = line.trim().strip_prefix("| `") else {
+            continue;
+        };
+        let Some((key, _)) = rest.split_once('`') else {
+            continue;
+        };
+        if let Some(field) = key.strip_prefix("failures[].") {
+            doc_row.insert(field.to_string());
+        } else {
+            doc_top.insert(key.to_string());
+        }
+    }
+    assert!(
+        !doc_top.is_empty() && !doc_row.is_empty(),
+        "docs/STORAGE.md must document the verify --json schema"
+    );
+
+    // An archive with one corrupted payload: the report carries both the
+    // summary keys and at least one failure row.
+    let (field, chain, opts) = fixture();
+    let path = temp_path("json_schema");
+    remove_with_staging(&path);
+    write_store(&field, &chain, &opts, &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[8] ^= 0xFF; // first payload byte, past the head magic
+    let report = Store::from_bytes(bytes).unwrap().verify(1).unwrap();
+    assert!(report.failed() >= 1, "the corrupted chunk must fail verify");
+
+    let (top, row) = json_keys(&report.to_json());
+    assert_eq!(top, doc_top, "top-level verify --json keys drifted from docs");
+    assert_eq!(row, doc_row, "failure-row verify --json keys drifted from docs");
     remove_with_staging(&path);
 }
